@@ -1,0 +1,60 @@
+//! Curriculum ablation (the Table 13 / Fig. 14 scenario): sweep the
+//! curriculum fraction κ from 0 (pure WRE/disparity-min) to 1 (pure
+//! SGE/graph-cut) and show the interior optimum the paper finds at κ=1/6.
+//!
+//! Run: `cargo run --release --example curriculum_ablation [-- --epochs 40]`
+
+use milo::prelude::*;
+use milo::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let epochs = args.get_usize("epochs", 40)?;
+    let fraction = args.get_f64("fraction", 0.05)?;
+    let seed = args.get_u64("seed", 1)?;
+
+    let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
+    let ds = DatasetId::Cifar10Like.generate(seed);
+
+    // one pre-processing pass serves every kappa
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions { fraction, seed, ..Default::default() },
+    );
+    let meta = pre.run(&ds)?;
+    println!("pre-processing: {:.2}s", meta.preprocess_secs);
+
+    let mut table = Table::new(
+        format!(
+            "Curriculum sweep on {} @ {:.0}% ({} epochs)",
+            ds.name(),
+            fraction * 100.0,
+            epochs
+        ),
+        &["kappa", "phase_split", "test_acc_%"],
+    );
+    for kappa in [0.0, 1.0 / 12.0, 1.0 / 8.0, 1.0 / 6.0, 0.25, 0.5, 1.0] {
+        let mut strategy = meta.milo_strategy(kappa);
+        let switch = strategy.switch_epoch(epochs);
+        let cfg = TrainConfig {
+            epochs,
+            fraction,
+            eval_every: 0,
+            seed,
+            ..TrainConfig::recipe_for(&ds, epochs)
+        };
+        let out = Trainer::new(&rt, &ds, cfg)?.run(&mut strategy)?;
+        table.push(vec![
+            format!("{kappa:.4}"),
+            format!("SGE {} / WRE {}", switch, epochs - switch),
+            format!("{:.2}", 100.0 * out.test_accuracy),
+        ]);
+        println!(
+            "kappa {kappa:.3}: switch at epoch {switch}, test acc {:.2}%",
+            100.0 * out.test_accuracy
+        );
+    }
+    println!("{}", table.to_markdown());
+    table.save("results", "example_curriculum_ablation")?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Kernel-free MILO: the conclusion's future-work path, end to end.
+//!
+//! The paper's stated limitation is the m×m similarity kernel ("the
+//! requirement for a large amount of memory to construct similarity
+//! kernels, even with class-wise partitioning"); its proposed fix is
+//! feature-based submodular functions. This example runs both paths on
+//! the same dataset and reports accuracy, pre-processing time, and the
+//! working-memory footprint of each:
+//!
+//! 1. kernel path — class-wise cosine kernels + graph-cut/disparity-min;
+//! 2. feature path — [`FeatureCoverage`] over non-negative coverage
+//!    features (O(n·2E) memory, no kernel ever materialized).
+//!
+//! Run: `cargo run --release --example kernel_free`
+
+use milo::prelude::*;
+use milo::submod::FeatureCoverage;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let ds = DatasetId::Trec6Like.generate(1);
+    let fraction = 0.1;
+    let epochs = 40;
+    println!(
+        "dataset {}: {} train samples, {} classes, {:.0}% subsets\n",
+        ds.name(),
+        ds.n_train(),
+        ds.classes(),
+        100.0 * fraction
+    );
+
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions { fraction, ..Default::default() },
+    );
+
+    // ---- kernel path -----------------------------------------------------
+    let emb = pre.encode(&ds, Split::Train)?;
+    let kernels = pre.kernels(&ds, &emb)?;
+    let kernel_bytes = kernels.total_elements() * std::mem::size_of::<f32>();
+    let meta_kernel = pre.run(&ds)?;
+
+    // ---- feature path ------------------------------------------------------
+    let feature_bytes = FeatureCoverage::memory_bytes(ds.n_train(), 2 * emb.cols);
+    let meta_feature = pre.run_featurebased(&ds)?;
+
+    let cfg = TrainConfig {
+        epochs,
+        fraction,
+        eval_every: 0,
+        ..TrainConfig::recipe_for(&ds, epochs)
+    };
+
+    for (name, meta, bytes) in [
+        ("kernel (class-wise cosine)", &meta_kernel, kernel_bytes),
+        ("feature-based (kernel-free)", &meta_feature, feature_bytes),
+    ] {
+        let mut strategy = meta.milo_strategy(1.0 / 6.0);
+        let out = Trainer::new(&rt, &ds, cfg.clone())?.run(&mut strategy)?;
+        println!(
+            "{name:28}  acc {:>6.2}%  prep {:>6.3}s  selection memory {:>9} B",
+            100.0 * out.test_accuracy,
+            meta.preprocess_secs,
+            bytes
+        );
+    }
+
+    println!(
+        "\nnote: with c={} classes the class-wise kernel is Σ n_c² floats; the \
+         feature path is n·2E floats regardless of c — it wins when classes \
+         are few or imbalanced, which is exactly the regime the paper's \
+         conclusion worries about.",
+        ds.classes()
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Quickstart: the whole MILO workflow in ~40 lines.
+//!
+//! 1. open the AOT artifact runtime (`make artifacts` first);
+//! 2. generate a dataset;
+//! 3. pre-process once (SGE subsets + WRE distribution — the paper's
+//!    model-agnostic step);
+//! 4. train a downstream model on the MILO curriculum;
+//! 5. compare with full-data training.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use milo::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let ds = DatasetId::Cifar10Like.generate(1);
+    println!(
+        "dataset {}: {} train / {} val / {} test, {} classes",
+        ds.name(),
+        ds.n_train(),
+        ds.val_y.len(),
+        ds.test_y.len(),
+        ds.classes()
+    );
+
+    // Pre-process once: this is MILO's entire selection cost, paid before
+    // any model exists.
+    let fraction = 0.1;
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions { fraction, ..Default::default() },
+    );
+    let meta = pre.run(&ds)?;
+    println!(
+        "pre-processing: {:.2}s ({} SGE subsets of {}, WRE over {} classes)",
+        meta.preprocess_secs,
+        meta.sge_subsets.len(),
+        meta.sge_subsets[0].len(),
+        meta.wre_classes.len()
+    );
+
+    // Train with the easy-to-hard curriculum (kappa = 1/6).
+    let epochs = 40;
+    let cfg = TrainConfig {
+        epochs,
+        fraction,
+        eval_every: 10,
+        ..TrainConfig::recipe_for(&ds, epochs)
+    };
+    let mut strategy = meta.milo_strategy(1.0 / 6.0);
+    let milo_run = Trainer::new(&rt, &ds, cfg.clone())?.run(&mut strategy)?;
+
+    // Reference: full-data training.
+    let full_cfg = TrainConfig { fraction: 1.0, ..cfg };
+    let full_run = Trainer::new(&rt, &ds, full_cfg)?.run(&mut FullStrategy)?;
+
+    println!(
+        "MILO  (10%): test acc {:.2}%  train {:.2}s",
+        100.0 * milo_run.test_accuracy,
+        milo_run.train_secs
+    );
+    println!(
+        "FULL (100%): test acc {:.2}%  train {:.2}s",
+        100.0 * full_run.test_accuracy,
+        full_run.train_secs
+    );
+    println!(
+        "=> speedup {:.2}x at {:.2}% accuracy degradation",
+        milo_run.speedup_vs(full_run.train_secs),
+        100.0 * (full_run.test_accuracy - milo_run.test_accuracy)
+    );
+    Ok(())
+}

@@ -1,0 +1,279 @@
+"""AOT compiler: lower every L1/L2 graph to HLO *text* artifacts.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged); the Rust
+coordinator is self-contained afterwards — Python never runs on the
+training path.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+  * ``<name>.hlo.txt``   — one per compiled graph (see DESIGN.md §4);
+  * ``params/<ds>_h<h>_s<seed>.bin`` — He-init downstream-model parameters,
+    all six arrays concatenated row-major f32 LE in W1,b1,W2,b2,W3,b3
+    order (shapes derivable from the spec in the manifest);
+  * ``manifest.json``    — datasets, shapes, artifact index, digest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import gains as G
+from compile.kernels import similarity as S
+
+# ---------------------------------------------------------------------------
+# Global shape configuration (mirrored into manifest.json for Rust)
+# ---------------------------------------------------------------------------
+
+BATCH = 128  # training/eval/meta mini-batch size (padded + masked)
+EMBED_DIM = 32  # encoder output dimensionality
+SIM_TILE = 256  # Pallas similarity/gain tile edge
+PARAM_SEEDS = [1, 2, 3, 4, 5]  # per-trial init seeds (paper: 5 runs)
+
+# Synthetic dataset registry. ``input_dim``/``classes`` fix artifact shapes;
+# the generators themselves live in rust/src/data (they only need to agree
+# on these dims). Hidden lists define the downstream-model capacity tiers
+# compiled for each dataset (incl. the HPO hidden-size search space).
+DATASETS = {
+    # vision-like (Gaussian-mixture manifolds standing in for CIFAR et al.)
+    "cifar10": {"input_dim": 64, "classes": 10, "hidden": [64, 128, 256]},
+    "cifar100": {"input_dim": 64, "classes": 100, "hidden": [128]},
+    "tinyimagenet": {"input_dim": 64, "classes": 200, "hidden": [128]},
+    # specialized-domain (App. H.1/H.2 stand-ins: OrganCMNIST / DermaMNIST)
+    "organa": {"input_dim": 64, "classes": 11, "hidden": [128]},
+    "derma": {"input_dim": 64, "classes": 7, "hidden": [128]},
+    # text-like (topic mixtures standing in for TREC6/IMDB/Rotten Tomatoes)
+    "trec6": {"input_dim": 48, "classes": 6, "hidden": [64, 128, 256]},
+    "imdb": {"input_dim": 48, "classes": 2, "hidden": [128]},
+    "rotten": {"input_dim": 48, "classes": 2, "hidden": [128]},
+    # real small end-to-end workload: procedurally rendered 16x16 glyphs
+    "glyphs": {"input_dim": 256, "classes": 10, "hidden": [128]},
+}
+
+# Datasets that additionally get a proxy-feature artifact (App. H.2 path).
+PROXY_DATASETS = ["cifar100", "organa"]
+
+# Datasets that additionally get Fig-11 encoder-variant artifacts.
+ENCODER_ABLATION_DATASETS = ["cifar100", "trec6"]
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, I32)
+
+
+def scalar():
+    return f32(())
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so Rust
+    always unpacks one tuple literal, regardless of output arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the frozen encoder weights are baked into
+    # the graph as constants; the default printer elides them as
+    # `constant({...})`, which the text parser silently reads back as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+class Builder:
+    def __init__(self, out_dir: str, verbose: bool = True):
+        self.out_dir = out_dir
+        self.verbose = verbose
+        self.artifacts = []  # manifest entries
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "params"), exist_ok=True)
+
+    def emit(self, name: str, fn, in_specs, kind: str, meta: dict):
+        path = f"{name}.hlo.txt"
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": path,
+            "kind": kind,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+                for s in in_specs
+            ],
+            **meta,
+        }
+        self.artifacts.append(entry)
+        if self.verbose:
+            print(f"  [aot] {name}: {len(text)} chars, {len(in_specs)} inputs")
+        return entry
+
+
+def emit_kernels(b: Builder, embed_dims):
+    """L1 Pallas artifacts: similarity (per embed dim) + gain reductions."""
+    t = SIM_TILE
+    for e in embed_dims:
+        b.emit(
+            f"sim_cosine_e{e}",
+            lambda a, bb: (S.cosine_similarity(a, bb, tile=t),),
+            [f32((t, e)), f32((t, e))],
+            "similarity",
+            {"metric": "cosine", "embed_dim": e, "tile": t},
+        )
+    e = EMBED_DIM
+    b.emit(
+        f"sim_dot_e{e}",
+        lambda a, bb: (S.dot_similarity(a, bb, tile=t),),
+        [f32((t, e)), f32((t, e))],
+        "similarity",
+        {"metric": "dot", "embed_dim": e, "tile": t},
+    )
+    b.emit(
+        f"sim_rbf_e{e}",
+        lambda a, bb, g: (S.rbf_similarity(a, bb, g, tile=t),),
+        [f32((t, e)), f32((t, e)), f32((1,))],
+        "similarity",
+        {"metric": "rbf", "embed_dim": e, "tile": t},
+    )
+    b.emit(
+        f"fl_gain_t{t}",
+        lambda s, mx: (G.facility_location_gains(s, mx, ti=t, tj=t),),
+        [f32((t, t)), f32((t,))],
+        "fl_gain",
+        {"tile": t},
+    )
+    b.emit(
+        f"colsum_t{t}",
+        lambda s: (G.column_sums(s, ti=t, tj=t),),
+        [f32((t, t))],
+        "colsum",
+        {"tile": t},
+    )
+    b.emit(
+        f"colmax_t{t}",
+        lambda s: (G.column_maxes(s, ti=t, tj=t),),
+        [f32((t, t))],
+        "colmax",
+        {"tile": t},
+    )
+
+
+def emit_dataset(b: Builder, ds: str, cfg: dict):
+    d, c = cfg["input_dim"], cfg["classes"]
+    # frozen zero-shot encoder (weights baked in as constants)
+    b.emit(
+        f"encoder_{ds}",
+        M.make_encoder(d, EMBED_DIM),
+        [f32((BATCH, d))],
+        "encoder",
+        {"dataset": ds, "embed_dim": EMBED_DIM},
+    )
+    if ds in ENCODER_ABLATION_DATASETS:
+        for variant, (e, _, _, _) in M.ENCODER_VARIANTS.items():
+            if variant == "cls32":
+                continue  # identical to the default encoder_{ds}
+            b.emit(
+                f"encoder_{ds}__{variant}",
+                M.make_encoder_variant(d, variant),
+                [f32((BATCH, d))],
+                "encoder",
+                {"dataset": ds, "embed_dim": e, "variant": variant},
+            )
+    for h in cfg["hidden"]:
+        spec = M.MlpSpec(d, h, c)
+        pshapes = [f32(s) for s in spec.param_shapes]
+        batch = [f32((BATCH, d)), i32((BATCH,)), f32((BATCH,))]
+        hp = [scalar(), scalar(), scalar(), scalar()]
+        tag = f"{ds}_h{h}"
+        meta = {"dataset": ds, "hidden": h, "classes": c, "input_dim": d}
+        b.emit(
+            f"train_step_{tag}",
+            M.make_train_step(spec),
+            pshapes + pshapes + batch + hp,
+            "train_step",
+            meta,
+        )
+        b.emit(f"eval_{tag}", M.make_eval_batch(spec), pshapes + batch, "eval", meta)
+        b.emit(f"meta_{tag}", M.make_meta_batch(spec), pshapes + batch, "meta", meta)
+        if ds in PROXY_DATASETS and h == 128:
+            b.emit(
+                f"proxy_{tag}",
+                M.make_proxy_features(spec),
+                pshapes[:4] + [f32((BATCH, d))],
+                "proxy",
+                meta,
+            )
+        # He-init parameter sets, one file per seed
+        for seed in PARAM_SEEDS:
+            params = M.init_params(spec, seed)
+            blob = b"".join(np.ascontiguousarray(p).tobytes() for p in params)
+            fname = f"params/{tag}_s{seed}.bin"
+            with open(os.path.join(b.out_dir, fname), "wb") as f:
+                f.write(blob)
+
+
+def input_digest() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` no-op."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    b = Builder(args.out, verbose=not args.quiet)
+    print(f"[aot] lowering artifacts into {os.path.abspath(args.out)}")
+    emit_kernels(b, embed_dims=[EMBED_DIM, 128])
+    for ds, cfg in DATASETS.items():
+        emit_dataset(b, ds, cfg)
+
+    manifest = {
+        "version": 1,
+        "batch": BATCH,
+        "embed_dim": EMBED_DIM,
+        "sim_tile": SIM_TILE,
+        "param_seeds": PARAM_SEEDS,
+        "param_order": M.PARAM_NAMES,
+        "encoder_hidden": M.ENCODER_HIDDEN,
+        "datasets": DATASETS,
+        "proxy_datasets": PROXY_DATASETS,
+        "artifacts": b.artifacts,
+        "digest": input_digest(),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(b.artifacts)} artifacts + manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

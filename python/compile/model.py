@@ -1,0 +1,317 @@
+"""L2: JAX compute graphs compiled AOT for the Rust coordinator.
+
+Five graph families, all lowered to HLO text by ``aot.py``:
+
+  * ``encoder(x)``          — the "pre-trained zero-shot feature encoder"
+    (paper: DINO-ViTB16 / all-distilroberta-v1). Here: a frozen 2-layer
+    random-feature map whose weights are sampled once at AOT time with a
+    fixed seed and baked into the HLO as constants — the moral equivalent
+    of downloading frozen pretrained weights. L2-normalized output so the
+    cosine kernel is a pure matmul downstream.
+  * ``train_step(params, mom, x, y, wt, hp)`` — one mini-batch SGD step of
+    the downstream MLP classifier (the paper's downstream model is a black
+    box to MILO; capacity tiers stand in for ResNet18/50/101). Masked
+    softmax cross-entropy, weight decay, classical/Nesterov momentum
+    selected by a runtime flag, learning rate as a runtime scalar so LR
+    schedules live in Rust.
+  * ``eval_batch(params, x, y, wt)`` — summed loss + correct count.
+  * ``meta_batch(params, x, y, wt)`` — per-sample losses, EL2N scores
+    (Paul et al., used for Tables 1-2) and last-layer gradient embeddings
+    ``softmax(logits) - onehot(y)`` (the per-batch "PB" gradient
+    approximation CraigPB / GradMatchPB / Glister use in CORDS).
+  * ``proxy_features(params, x)`` — penultimate-layer activations, the
+    App. H.2 proxy-encoder path.
+
+The similarity kernels that consume encoder outputs are Pallas kernels
+(``kernels/similarity.py``); they are lowered as separate artifacts because
+the Rust coordinator streams class partitions through them tile by tile.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Frozen encoder
+# ---------------------------------------------------------------------------
+
+ENCODER_SEED = 0x5EEDC0DE % (2**31)
+ENCODER_HIDDEN = 128
+
+
+def make_encoder_weights(input_dim: int, embed_dim: int, seed: int = ENCODER_SEED):
+    """Sample the frozen encoder weights (numpy, fixed seed -> deterministic
+    artifacts). Two-layer tanh random-feature map: this is the standard
+    random-features approximation of a smooth kernel, which is all the
+    downstream submodular machinery needs from "a pretrained encoder"
+    (DESIGN.md, substitutions table)."""
+    rng = np.random.default_rng(seed + 1000003 * input_dim + embed_dim)
+    w1 = rng.normal(0.0, 1.0 / np.sqrt(input_dim), (input_dim, ENCODER_HIDDEN))
+    b1 = rng.uniform(-0.1, 0.1, (ENCODER_HIDDEN,))
+    w2 = rng.normal(0.0, 1.0 / np.sqrt(ENCODER_HIDDEN), (ENCODER_HIDDEN, embed_dim))
+    return (
+        w1.astype(np.float32),
+        b1.astype(np.float32),
+        w2.astype(np.float32),
+    )
+
+
+def encoder_fn(x, w1, b1, w2):
+    """x[B, D] -> z[B, E], L2-normalized."""
+    h = jnp.tanh(x @ w1 + b1)
+    z = h @ w2
+    n = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True) + 1e-12)
+    return z / n
+
+
+def make_encoder(input_dim: int, embed_dim: int, seed: int = ENCODER_SEED):
+    """Return ``f(x) -> (z,)`` with the frozen weights closed over (they
+    lower to HLO constants — the artifact is self-contained)."""
+    w1, b1, w2 = make_encoder_weights(input_dim, embed_dim, seed)
+    w1 = jnp.asarray(w1)
+    b1 = jnp.asarray(b1)
+    w2 = jnp.asarray(w2)
+
+    def encode(x):
+        return (encoder_fn(x, w1, b1, w2),)
+
+    return encode
+
+
+# ---------------------------------------------------------------------------
+# Encoder variants (Fig 11 ablation)
+# ---------------------------------------------------------------------------
+#
+# The paper compares pre-trained encoders (DINO CLS/mean, ViT, CLIP for
+# vision; distilroberta vs mpnet for text). Our analog: variants of the
+# frozen random-feature encoder that differ in pooling, depth, width and
+# initialisation stream — each yields a *different* fixed feature geometry,
+# which is exactly the degree of freedom the paper's Fig 11 sweeps.
+
+ENCODER_VARIANTS = {
+    # name     (embed_dim, depth, pooling, seed offset)
+    "cls32": (32, 2, "cls", 0),  # default — DINO (CLS) analog
+    "mean32": (32, 1, "mean", 0),  # shallow mean-pool — DINO (mean) analog
+    "alt32": (32, 2, "cls", 7919),  # different init stream — ViT analog
+    "wide64": (64, 2, "cls", 0),  # wider embedding — CLIP-L analog
+    "narrow16": (16, 2, "cls", 0),  # bottlenecked — low-capacity control
+}
+
+
+def make_encoder_variant(input_dim: int, variant: str):
+    """Return ``f(x) -> (z,)`` for a named Fig-11 encoder variant.
+
+    * depth 1: single tanh projection straight to the embedding;
+    * depth 2: the default two-layer map (``make_encoder``);
+    * pooling "mean": average two half-width feature banks before the
+      output projection (the mean-of-token-embeddings analog).
+    """
+    embed_dim, depth, pooling, seed_off = ENCODER_VARIANTS[variant]
+    seed = ENCODER_SEED + seed_off
+    if depth == 1:
+        rng = np.random.default_rng(seed + 1000003 * input_dim + embed_dim + 13)
+        w = jnp.asarray(
+            rng.normal(0.0, 1.0 / np.sqrt(input_dim), (input_dim, embed_dim)).astype(
+                np.float32
+            )
+        )
+        b = jnp.asarray(
+            rng.uniform(-0.1, 0.1, (embed_dim,)).astype(np.float32)
+        )
+
+        def encode1(x):
+            z = jnp.tanh(x @ w + b)
+            n = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True) + 1e-12)
+            return (z / n,)
+
+        return encode1
+    if pooling == "mean":
+        # two half-width banks, mean-pooled, then projected
+        half = ENCODER_HIDDEN // 2
+        rng = np.random.default_rng(seed + 1000003 * input_dim + embed_dim + 29)
+        wa = jnp.asarray(
+            rng.normal(0.0, 1.0 / np.sqrt(input_dim), (input_dim, half)).astype(
+                np.float32
+            )
+        )
+        wb = jnp.asarray(
+            rng.normal(0.0, 1.0 / np.sqrt(input_dim), (input_dim, half)).astype(
+                np.float32
+            )
+        )
+        wo = jnp.asarray(
+            rng.normal(0.0, 1.0 / np.sqrt(half), (half, embed_dim)).astype(np.float32)
+        )
+
+        def encode_mean(x):
+            h = 0.5 * (jnp.tanh(x @ wa) + jnp.tanh(x @ wb))
+            z = h @ wo
+            n = jnp.sqrt(jnp.sum(z * z, axis=1, keepdims=True) + 1e-12)
+            return (z / n,)
+
+        return encode_mean
+    return make_encoder(input_dim, embed_dim, seed)
+
+
+# ---------------------------------------------------------------------------
+# Downstream MLP classifier
+# ---------------------------------------------------------------------------
+
+
+class MlpSpec(NamedTuple):
+    input_dim: int
+    hidden: int
+    classes: int
+
+    @property
+    def param_shapes(self):
+        d, h, c = self.input_dim, self.hidden, self.classes
+        return [(d, h), (h,), (h, h), (h,), (h, c), (c,)]
+
+    @property
+    def n_params(self):
+        return sum(int(np.prod(s)) for s in self.param_shapes)
+
+
+PARAM_NAMES = ["w1", "b1", "w2", "b2", "w3", "b3"]
+
+
+def init_params(spec: MlpSpec, seed: int):
+    """He-initialised parameters (numpy). aot.py serialises these once per
+    (spec, seed) so the Rust side never re-implements the initialiser."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for shape in spec.param_shapes:
+        if len(shape) == 2:
+            fan_in = shape[0]
+            out.append(
+                rng.normal(0.0, np.sqrt(2.0 / fan_in), shape).astype(np.float32)
+            )
+        else:
+            out.append(np.zeros(shape, np.float32))
+    return out
+
+
+def mlp_logits(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(x @ w1 + b1)
+    h2 = jax.nn.relu(h1 @ w2 + b2)
+    return h2 @ w3 + b3
+
+
+def mlp_penultimate(params, x):
+    w1, b1, w2, b2, _, _ = params
+    h1 = jax.nn.relu(x @ w1 + b1)
+    return jax.nn.relu(h1 @ w2 + b2)
+
+
+def masked_ce_loss(params, x, y, wt, classes):
+    """Weighted-mean softmax cross entropy. ``wt`` zeroes padded rows."""
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, classes, dtype=logits.dtype)
+    per = -jnp.sum(onehot * logp, axis=-1)
+    denom = jnp.maximum(jnp.sum(wt), 1.0)
+    return jnp.sum(per * wt) / denom, logits
+
+
+def make_train_step(spec: MlpSpec):
+    """One SGD(+momentum/Nesterov, +weight-decay) step.
+
+    Signature (flat, 6 params + 6 momenta + batch + 4 hyper-scalars):
+        (w1,b1,w2,b2,w3,b3, m1..m6, x[B,D], y[B]i32, wt[B],
+         lr, momentum, weight_decay, nesterov_flag)
+      -> (w1',...,b3', m1',...,m6', loss, correct)
+
+    ``nesterov_flag`` in {0.0, 1.0}: step = nesterov*(g + mu*v') +
+    (1-nesterov)*v' with v' = mu*v + g, matching PyTorch SGD semantics
+    (the paper's recipe: Nesterov SGD, momentum 0.9, wd 5e-4).
+    """
+
+    def train_step(*args):
+        params = list(args[0:6])
+        mom = list(args[6:12])
+        x, y, wt, lr, mu, wd, nesterov = args[12:]
+
+        def loss_fn(ps):
+            loss, logits = masked_ce_loss(ps, x, y, wt, spec.classes)
+            return loss, logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.float32) * wt)
+
+        new_params = []
+        new_mom = []
+        for p, v, g in zip(params, mom, grads):
+            g = g + wd * p  # L2 coupled to the gradient, as torch SGD does
+            v_new = mu * v + g
+            step = nesterov * (g + mu * v_new) + (1.0 - nesterov) * v_new
+            new_params.append(p - lr * step)
+            new_mom.append(v_new)
+        return tuple(new_params) + tuple(new_mom) + (loss, correct)
+
+    return train_step
+
+
+def make_eval_batch(spec: MlpSpec):
+    """(params..., x, y, wt) -> (loss_sum, correct) — sums, not means, so
+    Rust can aggregate exactly across padded batches."""
+
+    def eval_batch(*args):
+        params = list(args[0:6])
+        x, y, wt = args[6:]
+        logits = mlp_logits(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, spec.classes, dtype=logits.dtype)
+        per = -jnp.sum(onehot * logp, axis=-1)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.float32) * wt)
+        return (jnp.sum(per * wt), correct)
+
+    return eval_batch
+
+
+def make_meta_batch(spec: MlpSpec):
+    """(params..., x, y, wt) -> (losses[B], el2n[B], gemb[B, C]).
+
+    * losses: per-sample CE (padded rows zeroed);
+    * el2n:  ||softmax(logits) - onehot||_2 (Paul et al. 2021);
+    * gemb:  last-layer gradient embedding softmax - onehot — the "PB"
+      (per-batch, last-layer) gradient approximation of CRAIG/GradMatch.
+    """
+
+    def meta_batch(*args):
+        params = list(args[0:6])
+        x, y, wt = args[6:]
+        logits = mlp_logits(params, x)
+        p = jax.nn.softmax(logits, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(y, spec.classes, dtype=logits.dtype)
+        losses = -jnp.sum(onehot * logp, axis=-1) * wt
+        err = p - onehot
+        el2n = jnp.sqrt(jnp.sum(err * err, axis=-1) + 1e-20) * wt
+        gemb = err * wt[:, None]
+        return (losses, el2n, gemb)
+
+    return meta_batch
+
+
+def make_proxy_features(spec: MlpSpec):
+    """(w1, b1, w2, b2, x) -> (h[B, H],) penultimate features,
+    L2-normalized — used when a trained proxy model replaces the zero-shot
+    encoder. Takes only the four parameters it reads: the last layer
+    (w3, b3) never feeds the penultimate activations, and XLA prunes
+    unused entry-computation parameters when lowering, so declaring them
+    would desynchronise the manifest arity from the compiled program."""
+
+    def proxy_features(w1, b1, w2, b2, x):
+        h = mlp_penultimate([w1, b1, w2, b2, None, None], x)
+        n = jnp.sqrt(jnp.sum(h * h, axis=1, keepdims=True) + 1e-12)
+        return (h / n,)
+
+    return proxy_features

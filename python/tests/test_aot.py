@@ -1,0 +1,112 @@
+"""AOT path tests: lowering to HLO text must succeed and be loadable.
+
+These exercise the exact `to_hlo_text` pipeline aot.py uses (stablehlo ->
+XlaComputation -> HLO text) for one representative of every artifact kind,
+and sanity-check the manifest/param-blob layout contract the Rust side
+parses.
+"""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import similarity as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def lower_text(fn, in_specs):
+    lowered = jax.jit(fn).lower(*in_specs)
+    return aot.to_hlo_text(lowered)
+
+
+def test_to_hlo_text_simple():
+    txt = lower_text(lambda x: (x + 1.0,), [aot.f32((2, 2))])
+    assert "HloModule" in txt
+    assert "ENTRY" in txt
+
+
+def test_encoder_lowers_with_baked_constants():
+    txt = lower_text(M.make_encoder(16, 8, seed=0), [aot.f32((4, 16))])
+    assert "HloModule" in txt
+    # frozen weights become constants: the entry layout takes only x
+    layout = txt.splitlines()[0]
+    assert "entry_computation_layout={(f32[4,16]{1,0})->" in layout
+
+
+def test_train_step_lowers():
+    spec = M.MlpSpec(8, 4, 3)
+    pshapes = [aot.f32(s) for s in spec.param_shapes]
+    ins = (
+        pshapes
+        + pshapes
+        + [aot.f32((4, 8)), aot.i32((4,)), aot.f32((4,))]
+        + [aot.scalar()] * 4
+    )
+    txt = lower_text(M.make_train_step(spec), ins)
+    assert "HloModule" in txt
+
+
+def test_pallas_sim_lowers_to_plain_hlo():
+    """interpret=True must produce HLO with no custom-calls (CPU-executable)."""
+    txt = lower_text(
+        lambda a, b: (S.cosine_similarity(a, b, tile=64),),
+        [aot.f32((64, 8)), aot.f32((64, 8))],
+    )
+    assert "HloModule" in txt
+    assert "custom-call" not in txt.lower() or "mosaic" not in txt.lower()
+
+
+def test_param_blob_roundtrip(tmp_path):
+    """The .bin layout contract: concatenated row-major f32 LE arrays in
+    PARAM_NAMES order — Rust slices them back out by the spec shapes."""
+    spec = M.MlpSpec(6, 5, 3)
+    params = M.init_params(spec, 42)
+    blob = b"".join(np.ascontiguousarray(p).tobytes() for p in params)
+    assert len(blob) == 4 * spec.n_params
+    # decode back
+    off = 0
+    for p, shape in zip(params, spec.param_shapes):
+        n = int(np.prod(shape))
+        vals = struct.unpack(f"<{n}f", blob[off : off + 4 * n])
+        np.testing.assert_allclose(np.asarray(vals).reshape(shape), p, rtol=1e-6)
+        off += 4 * n
+
+
+def test_manifest_dataset_registry_consistent():
+    for ds, cfg in aot.DATASETS.items():
+        assert cfg["input_dim"] > 0 and cfg["classes"] >= 2
+        assert 128 in cfg["hidden"], f"{ds} must compile the default tier"
+    for ds in aot.PROXY_DATASETS:
+        assert ds in aot.DATASETS
+
+
+def test_input_digest_stable():
+    assert aot.input_digest() == aot.input_digest()
+    assert len(aot.input_digest()) == 16
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built yet (run `make artifacts`)",
+)
+def test_built_manifest_matches_registry():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["batch"] == aot.BATCH
+    assert man["embed_dim"] == aot.EMBED_DIM
+    names = {a["name"] for a in man["artifacts"]}
+    for ds in aot.DATASETS:
+        assert f"encoder_{ds}" in names
+        assert f"train_step_{ds}_h128" in names
+    # every artifact file referenced must exist
+    base = os.path.dirname(path)
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(base, a["file"])), a["file"]

@@ -1,0 +1,101 @@
+"""Fig-11 encoder variants: every variant must satisfy the encoder
+contract (deterministic, unit-norm rows, frozen weights baked in) while
+producing *distinct* feature geometries — that distinctness is what the
+Fig-11 ablation sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+VARIANTS = list(M.ENCODER_VARIANTS)
+
+
+def encode(variant, x):
+    fn = M.make_encoder_variant(x.shape[1], variant)
+    (z,) = jax.jit(fn)(jnp.asarray(x))
+    return np.asarray(z)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_rows_are_unit_norm(variant):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(32, 64)).astype(np.float32)
+    z = encode(variant, x)
+    e = M.ENCODER_VARIANTS[variant][0]
+    assert z.shape == (32, e)
+    np.testing.assert_allclose(np.linalg.norm(z, axis=1), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_is_deterministic(variant):
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(8, 48)).astype(np.float32)
+    np.testing.assert_array_equal(encode(variant, x), encode(variant, x))
+
+
+def test_variants_differ_from_default():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(16, 64)).astype(np.float32)
+    base = encode("cls32", x)
+    for variant in VARIANTS:
+        if variant == "cls32":
+            continue
+        z = encode(variant, x)
+        if z.shape == base.shape:
+            assert not np.allclose(z, base, atol=1e-5), variant
+
+
+def test_cls32_matches_default_encoder():
+    # the cls32 variant IS the default encoder — same weights, same output
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    (want,) = jax.jit(M.make_encoder(64, 32))(jnp.asarray(x))
+    got = encode("cls32", x)
+    np.testing.assert_allclose(got, np.asarray(want), atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d=st.sampled_from([16, 48, 64, 256]),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    variant=st.sampled_from(VARIANTS),
+)
+def test_variant_shape_sweep(d, n, seed, variant):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    z = encode(variant, x)
+    e = M.ENCODER_VARIANTS[variant][0]
+    assert z.shape == (n, e)
+    assert np.isfinite(z).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), variant=st.sampled_from(VARIANTS))
+def test_variant_preserves_neighborhoods(seed, variant):
+    # two nearby inputs must stay closer in embedding space than a far one
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(64,)).astype(np.float32)
+    near = a + 0.01 * rng.normal(size=(64,)).astype(np.float32)
+    far = rng.normal(size=(64,)).astype(np.float32)
+    z = encode(variant, np.stack([a, near, far]))
+    sim_near = float(z[0] @ z[1])
+    sim_far = float(z[0] @ z[2])
+    assert sim_near > sim_far, f"{variant}: {sim_near} <= {sim_far}"
+
+
+def test_variant_lowering_to_hlo_text():
+    # each variant must lower through the same AOT path as the default
+    from compile.aot import to_hlo_text
+
+    for variant in VARIANTS:
+        fn = M.make_encoder_variant(64, variant)
+        lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((8, 64), jnp.float32))
+        text = to_hlo_text(lowered)
+        assert "ENTRY" in text and len(text) > 100, variant

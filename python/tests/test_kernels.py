@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (tile-multiples and embed dims) and value ranges;
+every kernel must match its ref.py oracle to float32 tolerance. This is the
+core correctness signal for layer 1 — the Rust side consumes exactly these
+lowered graphs.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gains as G
+from compile.kernels import ref as R
+from compile.kernels import similarity as S
+
+jax.config.update("jax_platform_name", "cpu")
+
+TILE = 64  # small tile for the sweeps; the AOT tile (256) is covered too
+
+
+def rand(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# cosine similarity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nt=st.integers(1, 3),
+    mt=st.integers(1, 3),
+    e=st.sampled_from([4, 8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 100.0]),
+)
+def test_cosine_matches_ref(nt, mt, e, seed, scale):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (nt * TILE, e), scale)
+    b = rand(rng, (mt * TILE, e), scale)
+    got = S.cosine_similarity(jnp.asarray(a), jnp.asarray(b), tile=TILE)
+    want = R.cosine_similarity_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_cosine_range_and_diagonal():
+    rng = np.random.default_rng(0)
+    a = rand(rng, (TILE, 16))
+    s = np.asarray(S.cosine_similarity(jnp.asarray(a), jnp.asarray(a), tile=TILE))
+    assert s.min() >= -1e-6 and s.max() <= 1.0 + 1e-6
+    np.testing.assert_allclose(np.diag(s), 1.0, atol=1e-5)
+
+
+def test_cosine_symmetry():
+    rng = np.random.default_rng(7)
+    a = rand(rng, (TILE, 32))
+    s = np.asarray(S.cosine_similarity(jnp.asarray(a), jnp.asarray(a), tile=TILE))
+    np.testing.assert_allclose(s, s.T, atol=1e-6)
+
+
+def test_cosine_default_tile_256():
+    rng = np.random.default_rng(3)
+    a = rand(rng, (256, 32))
+    b = rand(rng, (512, 32))
+    got = S.cosine_similarity(jnp.asarray(a), jnp.asarray(b))
+    want = R.cosine_similarity_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_cosine_rejects_nonmultiple():
+    a = jnp.zeros((100, 8), jnp.float32)
+    with pytest.raises(ValueError):
+        S.cosine_similarity(a, a, tile=64)
+
+
+def test_cosine_zero_rows_safe():
+    """A zero feature row must not produce NaNs (eps floor in the norm)."""
+    a = np.zeros((TILE, 8), np.float32)
+    a[1:] = np.random.default_rng(1).standard_normal((TILE - 1, 8))
+    s = np.asarray(S.cosine_similarity(jnp.asarray(a), jnp.asarray(a), tile=TILE))
+    assert np.isfinite(s).all()
+
+
+# ---------------------------------------------------------------------------
+# dot / rbf similarity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nt=st.integers(1, 2),
+    e=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dot_matches_ref(nt, e, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (nt * TILE, e))
+    b = rand(rng, (TILE, e))
+    got = S.dot_similarity(jnp.asarray(a), jnp.asarray(b), tile=TILE)
+    want = R.dot_similarity_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    gamma=st.sampled_from([0.01, 0.1, 1.0, 10.0]),
+)
+def test_rbf_matches_ref(seed, gamma):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (TILE, 16))
+    b = rand(rng, (TILE, 16))
+    got = S.rbf_similarity(
+        jnp.asarray(a), jnp.asarray(b), jnp.asarray([gamma], jnp.float32), tile=TILE
+    )
+    want = R.rbf_similarity_ref(jnp.asarray(a), jnp.asarray(b), gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_rbf_identity_diagonal():
+    rng = np.random.default_rng(5)
+    a = rand(rng, (TILE, 8))
+    s = np.asarray(
+        S.rbf_similarity(
+            jnp.asarray(a), jnp.asarray(a), jnp.asarray([0.5], jnp.float32), tile=TILE
+        )
+    )
+    np.testing.assert_allclose(np.diag(s), 1.0, atol=1e-5)
+    assert (s <= 1.0 + 1e-6).all() and (s >= 0.0).all()
+
+
+# ---------------------------------------------------------------------------
+# gain kernels (tiled accumulating reductions)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ri=st.integers(1, 3),
+    cj=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fl_gains_match_ref(ri, cj, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(0, 1, (ri * TILE, cj * TILE)).astype(np.float32)
+    mx = rng.uniform(0, 1, (ri * TILE,)).astype(np.float32)
+    got = G.facility_location_gains(jnp.asarray(s), jnp.asarray(mx), ti=TILE, tj=TILE)
+    want = R.facility_location_gains_ref(jnp.asarray(s), jnp.asarray(mx))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_fl_gains_zero_when_covered():
+    """If mx already dominates every similarity, all gains are zero."""
+    s = np.full((TILE, TILE), 0.3, np.float32)
+    mx = np.full((TILE,), 0.9, np.float32)
+    got = np.asarray(
+        G.facility_location_gains(jnp.asarray(s), jnp.asarray(mx), ti=TILE, tj=TILE)
+    )
+    np.testing.assert_allclose(got, 0.0)
+
+
+def test_fl_gains_empty_subset_is_colsum():
+    """With mx = 0 (empty subset, sims in [0,1]) gains reduce to colsums."""
+    rng = np.random.default_rng(11)
+    s = rng.uniform(0, 1, (2 * TILE, TILE)).astype(np.float32)
+    mx = np.zeros((2 * TILE,), np.float32)
+    got = np.asarray(
+        G.facility_location_gains(jnp.asarray(s), jnp.asarray(mx), ti=TILE, tj=TILE)
+    )
+    np.testing.assert_allclose(got, s.sum(axis=0), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ri=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_colsum_matches_ref(ri, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(-2, 2, (ri * TILE, TILE)).astype(np.float32)
+    got = G.column_sums(jnp.asarray(s), ti=TILE, tj=TILE)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(R.column_sums_ref(jnp.asarray(s))), rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ri=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_colmax_matches_ref(ri, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.uniform(-2, 2, (ri * TILE, TILE)).astype(np.float32)
+    got = G.column_maxes(jnp.asarray(s), ti=TILE, tj=TILE)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(R.column_maxes_ref(jnp.asarray(s)))
+    )
+
+
+def test_gain_kernels_reject_nonmultiple():
+    s = jnp.zeros((100, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        G.column_sums(s, ti=64, tj=64)
+    with pytest.raises(ValueError):
+        G.facility_location_gains(s, jnp.zeros((100,), jnp.float32), ti=64, tj=64)

@@ -1,0 +1,268 @@
+"""L2 correctness: model graphs — shapes, gradients, optimizer semantics.
+
+These are the exact callables aot.py lowers; testing them in Python (where
+we have autodiff and an eager interpreter) certifies the HLO the Rust side
+executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPEC = M.MlpSpec(input_dim=16, hidden=8, classes=4)
+B = 8
+
+
+def batch(rng, spec=SPEC, b=B):
+    x = rng.standard_normal((b, spec.input_dim)).astype(np.float32)
+    y = rng.integers(0, spec.classes, (b,)).astype(np.int32)
+    wt = np.ones((b,), np.float32)
+    return jnp.asarray(x), jnp.asarray(y), jnp.asarray(wt)
+
+
+def zeros_like_params(spec):
+    return [jnp.zeros(s, jnp.float32) for s in spec.param_shapes]
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+
+def test_encoder_output_normalized():
+    enc = M.make_encoder(16, 32, seed=1)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16)), jnp.float32)
+    (z,) = enc(x)
+    assert z.shape == (4, 32)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(z), axis=1), 1.0, atol=1e-5)
+
+
+def test_encoder_deterministic_per_seed():
+    x = jnp.ones((2, 16), jnp.float32)
+    (z1,) = M.make_encoder(16, 32, seed=5)(x)
+    (z2,) = M.make_encoder(16, 32, seed=5)(x)
+    (z3,) = M.make_encoder(16, 32, seed=6)(x)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))
+    assert not np.allclose(np.asarray(z1), np.asarray(z3))
+
+
+def test_encoder_weights_dims():
+    w1, b1, w2 = M.make_encoder_weights(24, 32)
+    assert w1.shape == (24, M.ENCODER_HIDDEN)
+    assert b1.shape == (M.ENCODER_HIDDEN,)
+    assert w2.shape == (M.ENCODER_HIDDEN, 32)
+
+
+# ---------------------------------------------------------------------------
+# init + forward
+# ---------------------------------------------------------------------------
+
+
+def test_init_params_shapes_and_determinism():
+    p1 = M.init_params(SPEC, 3)
+    p2 = M.init_params(SPEC, 3)
+    p3 = M.init_params(SPEC, 4)
+    for a, b, shape in zip(p1, p2, SPEC.param_shapes):
+        assert a.shape == shape
+        np.testing.assert_array_equal(a, b)
+    assert any(not np.allclose(a, c) for a, c in zip(p1, p3))
+
+
+def test_param_count_property():
+    d, h, c = SPEC
+    assert SPEC.n_params == d * h + h + h * h + h + h * c + c
+
+
+def test_logits_shape():
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 0)]
+    x, _, _ = batch(np.random.default_rng(0))
+    assert M.mlp_logits(params, x).shape == (B, SPEC.classes)
+    assert M.mlp_penultimate(params, x).shape == (B, SPEC.hidden)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def run_step(params, mom, x, y, wt, lr=0.1, mu=0.9, wd=0.0, nesterov=0.0):
+    step = M.make_train_step(SPEC)
+    hp = [jnp.float32(lr), jnp.float32(mu), jnp.float32(wd), jnp.float32(nesterov)]
+    out = step(*params, *mom, x, y, wt, *hp)
+    return list(out[:6]), list(out[6:12]), out[12], out[13]
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(0)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 1)]
+    mom = zeros_like_params(SPEC)
+    x, y, wt = batch(rng)
+    losses = []
+    for _ in range(30):
+        params, mom, loss, _ = run_step(params, mom, x, y, wt, lr=0.05)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses
+
+
+def test_train_step_zero_lr_is_identity():
+    rng = np.random.default_rng(1)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 1)]
+    mom = zeros_like_params(SPEC)
+    x, y, wt = batch(rng)
+    new_p, _, _, _ = run_step(params, mom, x, y, wt, lr=0.0)
+    for a, b in zip(params, new_p):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_train_step_matches_manual_sgd():
+    """nesterov=0, mu=0, wd=0 -> plain SGD: w' = w - lr * grad."""
+    rng = np.random.default_rng(2)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 2)]
+    mom = zeros_like_params(SPEC)
+    x, y, wt = batch(rng)
+
+    def loss_fn(ps):
+        return M.masked_ce_loss(ps, x, y, wt, SPEC.classes)[0]
+
+    grads = jax.grad(loss_fn)(params)
+    new_p, _, _, _ = run_step(params, mom, x, y, wt, lr=0.2, mu=0.0)
+    for p, g, np_ in zip(params, grads, new_p):
+        np.testing.assert_allclose(
+            np.asarray(np_), np.asarray(p) - 0.2 * np.asarray(g), atol=1e-6
+        )
+
+
+def test_train_step_nesterov_differs_from_classical():
+    rng = np.random.default_rng(3)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 3)]
+    x, y, wt = batch(rng)
+    mom = [jnp.ones(s, jnp.float32) * 0.1 for s in SPEC.param_shapes]
+    p_classical, _, _, _ = run_step(params, mom, x, y, wt, nesterov=0.0)
+    p_nesterov, _, _, _ = run_step(params, mom, x, y, wt, nesterov=1.0)
+    assert any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(p_classical, p_nesterov)
+    )
+
+
+def test_train_step_weight_decay_shrinks_weights():
+    params = [jnp.ones(s, jnp.float32) for s in SPEC.param_shapes]
+    mom = zeros_like_params(SPEC)
+    x = jnp.zeros((B, SPEC.input_dim), jnp.float32)  # no gradient signal thru x=0
+    y = jnp.zeros((B,), jnp.int32)
+    wt = jnp.zeros((B,), jnp.float32)  # masked out: grads are exactly 0
+    new_p, _, _, _ = run_step(params, mom, x, y, wt, lr=0.1, mu=0.0, wd=0.5)
+    # w' = w - lr*wd*w = 0.95 * w
+    np.testing.assert_allclose(np.asarray(new_p[0]), 0.95, atol=1e-6)
+
+
+def test_train_step_mask_ignores_padded_rows():
+    rng = np.random.default_rng(4)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 4)]
+    mom = zeros_like_params(SPEC)
+    x, y, wt = batch(rng)
+    # Same batch with 4 extra garbage rows, masked out.
+    x2 = jnp.concatenate([x, 100.0 * jnp.ones((4, SPEC.input_dim))])
+    y2 = jnp.concatenate([y, jnp.zeros((4,), jnp.int32)])
+    wt2 = jnp.concatenate([wt, jnp.zeros((4,))])
+    p_a, _, la, ca = run_step(params, mom, x, y, wt)
+    p_b, _, lb, cb = run_step(params, mom, x2, y2, wt2)
+    np.testing.assert_allclose(float(la), float(lb), atol=1e-6)
+    np.testing.assert_allclose(float(ca), float(cb), atol=1e-6)
+    for a, b in zip(p_a, p_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), lr=st.sampled_from([0.01, 0.1, 0.5]))
+def test_train_step_outputs_finite(seed, lr):
+    rng = np.random.default_rng(seed)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, seed % 100)]
+    mom = zeros_like_params(SPEC)
+    x, y, wt = batch(rng)
+    new_p, new_m, loss, correct = run_step(params, mom, x, y, wt, lr=lr)
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(correct) <= B
+    for t in new_p + new_m:
+        assert np.isfinite(np.asarray(t)).all()
+
+
+# ---------------------------------------------------------------------------
+# eval / meta
+# ---------------------------------------------------------------------------
+
+
+def test_eval_batch_counts():
+    rng = np.random.default_rng(5)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 5)]
+    x, y, wt = batch(rng)
+    loss_sum, correct = M.make_eval_batch(SPEC)(*params, x, y, wt)
+    assert float(loss_sum) > 0.0
+    assert 0 <= float(correct) <= B
+    # masked batch -> zero contributions
+    loss0, corr0 = M.make_eval_batch(SPEC)(*params, x, y, jnp.zeros_like(wt))
+    assert float(loss0) == 0.0 and float(corr0) == 0.0
+
+
+def test_meta_el2n_bounds_and_losses():
+    rng = np.random.default_rng(6)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 6)]
+    x, y, wt = batch(rng)
+    losses, el2n, gemb = M.make_meta_batch(SPEC)(*params, x, y, wt)
+    assert losses.shape == (B,) and el2n.shape == (B,)
+    assert gemb.shape == (B, SPEC.classes)
+    # EL2N = ||p - onehot||_2 is in [0, sqrt(2)]
+    assert (np.asarray(el2n) >= 0).all()
+    assert (np.asarray(el2n) <= np.sqrt(2.0) + 1e-5).all()
+    assert (np.asarray(losses) >= 0).all()
+
+
+def test_meta_gemb_rows_sum_to_zero():
+    """softmax - onehot always sums to 0 across classes."""
+    rng = np.random.default_rng(7)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 7)]
+    x, y, wt = batch(rng)
+    _, _, gemb = M.make_meta_batch(SPEC)(*params, x, y, wt)
+    np.testing.assert_allclose(np.asarray(gemb).sum(axis=1), 0.0, atol=1e-5)
+
+
+def test_meta_perfect_prediction_low_el2n():
+    """A sample the model nails confidently has ~zero EL2N and loss."""
+    spec = M.MlpSpec(4, 8, 2)
+    # Build params that map x -> very confident class-0 logits for x = e0.
+    params = M.init_params(spec, 0)
+    x = jnp.asarray(np.eye(4, dtype=np.float32)[:2][None].repeat(1, 0)[0])[:2]
+    # Instead of engineering weights, train a few steps to confidence.
+    step = M.make_train_step(spec)
+    ps = [jnp.asarray(p) for p in params]
+    ms = [jnp.zeros(s, jnp.float32) for s in spec.param_shapes]
+    y = jnp.asarray([0, 1], jnp.int32)
+    wt = jnp.ones((2,), jnp.float32)
+    for _ in range(200):
+        out = step(
+            *ps, *ms, x, y, wt,
+            jnp.float32(0.5), jnp.float32(0.9), jnp.float32(0.0), jnp.float32(1.0),
+        )
+        ps, ms = list(out[:6]), list(out[6:12])
+    losses, el2n, _ = M.make_meta_batch(spec)(*ps, x, y, wt)
+    assert float(jnp.max(el2n)) < 0.1
+    assert float(jnp.max(losses)) < 0.1
+
+
+def test_proxy_features_normalized():
+    rng = np.random.default_rng(8)
+    params = [jnp.asarray(p) for p in M.init_params(SPEC, 8)]
+    x, _, _ = batch(rng)
+    # proxy takes only the four parameters it reads (w1, b1, w2, b2)
+    (h,) = M.make_proxy_features(SPEC)(*params[:4], x)
+    assert h.shape == (B, SPEC.hidden)
+    norms = np.linalg.norm(np.asarray(h), axis=1)
+    # relu can zero a row; non-zero rows must be unit-norm
+    nz = norms > 1e-6
+    np.testing.assert_allclose(norms[nz], 1.0, atol=1e-4)

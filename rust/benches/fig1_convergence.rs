@@ -1,0 +1,31 @@
+//! Bench: regenerate paper Fig. 1 (convergence per epoch and per
+//! wall-clock for AdaptiveRandom / CraigPB / GradMatchPB at 10%, R=1)
+//! at a reduced epoch budget, and time the per-selection cost gap that
+//! drives the figure.
+//!
+//! Run: `cargo bench --bench fig1_convergence`
+
+use milo::coordinator::repro::{fig1_convergence, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 16,
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let tables = fig1_convergence(&rt, &opts).expect("fig1");
+    for t in &tables {
+        println!("{}", t.to_markdown());
+    }
+    println!("fig1 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

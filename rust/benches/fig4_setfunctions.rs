@@ -1,0 +1,29 @@
+//! Bench: regenerate paper Fig. 4 (fixed-subset accuracy per set function
+//! on CIFAR100-like at 10% and 30%).
+//!
+//! Run: `cargo bench --bench fig4_setfunctions`
+
+use milo::coordinator::repro::{fig4_setfunctions, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 20,
+        fractions: vec![0.1, 0.3],
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for t in fig4_setfunctions(&rt, &opts).expect("fig4") {
+        println!("{}", t.to_markdown());
+    }
+    println!("fig4 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

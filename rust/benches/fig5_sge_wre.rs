@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Fig. 5 (a: SGE vs WRE vs Fixed across sizes;
+//! b: early-convergence of SGE(GC) vs WRE(DM) vs SGE(FL) vs WRE(GC)).
+//!
+//! Run: `cargo bench --bench fig5_sge_wre`
+
+use milo::coordinator::repro::{fig5a_sge_wre, fig5b_early_convergence, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 16,
+        fractions: vec![0.05, 0.3],
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for t in fig5a_sge_wre(&rt, &opts).expect("fig5a") {
+        println!("{}", t.to_markdown());
+    }
+    for t in fig5b_early_convergence(&rt, &opts).expect("fig5b") {
+        println!("{}", t.to_markdown());
+    }
+    println!("fig5 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate paper Fig. 6 / Tables 5–8 (the main speedup vs
+//! accuracy-degradation grid) on two datasets at a reduced budget.
+//!
+//! Run: `cargo bench --bench fig6_tradeoff`
+//! Full-scale version: `milo repro fig6 --epochs 40 --seeds 1,2,3,4,5`
+
+use milo::coordinator::repro::{fig6_tradeoff, ReproOptions};
+use milo::data::DatasetId;
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 14,
+        fractions: vec![0.05, 0.3],
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let tables = fig6_tradeoff(
+        &rt,
+        &opts,
+        &[DatasetId::RottenLike, DatasetId::Cifar10Like],
+    )
+    .expect("fig6");
+    for t in &tables {
+        println!("{}", t.to_markdown());
+    }
+    println!("fig6 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate paper Fig. 7 / Table 10 (HPO speedup-accuracy
+//! tradeoff, Random+HB and TPE+HB) at a reduced budget.
+//!
+//! Run: `cargo bench --bench fig7_hpo`
+
+use milo::coordinator::repro::{fig7_hpo, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 9, // hyperband max resource
+        fractions: vec![0.05, 0.3],
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for t in fig7_hpo(&rt, &opts).expect("fig7") {
+        println!("{}", t.to_markdown());
+    }
+    println!("fig7 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

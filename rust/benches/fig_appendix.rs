@@ -1,0 +1,41 @@
+//! Bench: regenerate the appendix figures added on top of the main grid —
+//!   Fig 9 / App H.1 (specialized-domain datasets),
+//!   Fig 11 (encoder-variant ablation),
+//!   Ext A (Gibbs exchange chain, paper §3.1 Eq. 2 future work),
+//!   Ext B (kernel-free feature-based MILO, conclusion future work).
+//!
+//! Run: `cargo bench --bench fig_appendix`
+
+use milo::coordinator::repro::{
+    ext_featurebased, ext_gibbs, fig11_encoders, fig9_specialized, ReproOptions,
+};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 16,
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for (name, tables) in [
+        ("fig 9 / app h.1", fig9_specialized(&rt, &opts).expect("fig9")),
+        ("fig 11", fig11_encoders(&rt, &opts).expect("fig11")),
+        ("ext A: gibbs", ext_gibbs(&rt, &opts).expect("gibbs")),
+        ("ext B: feature-based", ext_featurebased(&rt, &opts).expect("featspace")),
+    ] {
+        println!("==== {name} ====");
+        for t in tables {
+            println!("{}", t.to_markdown());
+        }
+    }
+    println!("appendix figures regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,80 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf targets):
+//!   * similarity-kernel construction (native vs PJRT/Pallas),
+//!   * greedy maximization (naive vs lazy vs stochastic),
+//!   * GreedySampleImportance (the WRE sweep),
+//!   * weighted sampling (the per-epoch WRE select),
+//!   * the PJRT train-step call itself.
+//!
+//! Run: `cargo bench --bench micro_selection`
+
+use milo::kernel::{native_similarity, pjrt_similarity, SimMetric};
+use milo::runtime::Runtime;
+use milo::submod::{
+    greedy_maximize, sample_importance, weighted_sample_without_replacement,
+    FacilityLocation, GreedyMode, SetFunctionKind,
+};
+use milo::testkit::{bench, random_embeddings, random_kernel};
+use milo::util::rng::Rng;
+
+fn main() {
+    let n = 512;
+    let k = 64;
+    let kernel = random_kernel(n, 1);
+    let emb = random_embeddings(n, 32, 2);
+
+    bench("native_similarity_512x32", 1, 10, || {
+        native_similarity(&emb, SimMetric::Cosine)
+    });
+
+    if let Ok(rt) = Runtime::open("artifacts") {
+        bench("pjrt_pallas_similarity_512x32", 1, 10, || {
+            pjrt_similarity(&rt, &emb, SimMetric::Cosine).unwrap()
+        });
+        // train-step latency (the trainer's inner loop)
+        let ds = milo::data::DatasetId::Cifar10Like.generate(1);
+        let mut model =
+            milo::train::model::MlpModel::load(&rt, "cifar10", 128, 1).unwrap();
+        let idx: Vec<usize> = (0..128).collect();
+        let hp = milo::train::StepHparams {
+            lr: 0.05,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            nesterov: true,
+        };
+        bench("pjrt_train_step_b128_h128", 3, 50, || {
+            model.train_step(&rt, &ds, &idx, hp).unwrap()
+        });
+        let idx1: Vec<usize> = (0..1).collect();
+        bench("pjrt_train_step_b128_pad1", 3, 50, || {
+            model.train_step(&rt, &ds, &idx1, hp).unwrap()
+        });
+    } else {
+        eprintln!("artifacts missing: PJRT benches skipped");
+    }
+
+    let mut rng = Rng::new(3);
+    bench("greedy_naive_fl_512_k64", 1, 5, || {
+        let mut f = FacilityLocation::new(&kernel);
+        greedy_maximize(&mut f, k, GreedyMode::Naive, true, &mut rng)
+    });
+    bench("greedy_lazy_fl_512_k64", 1, 5, || {
+        let mut f = FacilityLocation::new(&kernel);
+        greedy_maximize(&mut f, k, GreedyMode::Lazy, true, &mut rng)
+    });
+    bench("greedy_stochastic_fl_512_k64", 1, 5, || {
+        let mut f = FacilityLocation::new(&kernel);
+        greedy_maximize(&mut f, k, GreedyMode::Stochastic { epsilon: 0.01 }, true, &mut rng)
+    });
+    bench("sample_importance_dm_512", 1, 5, || {
+        let mut f = SetFunctionKind::DisparityMin.build(&kernel);
+        sample_importance(f.as_mut(), true)
+    });
+    bench("sample_importance_gc_512", 1, 5, || {
+        let mut f = SetFunctionKind::GRAPH_CUT_DEFAULT.build(&kernel);
+        sample_importance(f.as_mut(), true)
+    });
+    let weights: Vec<f64> = (0..5000).map(|i| 1.0 + (i % 17) as f64).collect();
+    bench("weighted_sample_5000_k500", 2, 20, || {
+        weighted_sample_without_replacement(&weights, 500, &mut rng)
+    });
+}

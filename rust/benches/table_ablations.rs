@@ -1,0 +1,44 @@
+//! Bench: regenerate the remaining ablation tables —
+//!   Tables 11–12 (similarity metric), Table 13 (κ sweep),
+//!   Table 14 (R sweep), Tables 15–16 (WRE vs SGE-variant),
+//!   Table 17 (self-supervised pruning), App. H.3 (pre-processing time).
+//!
+//! Run: `cargo bench --bench table_ablations`
+
+use milo::coordinator::repro::{
+    preprocess_time, table_kappa, table_r, table_simmetric, table_ssl_prune,
+    table_wre_variant, ReproOptions,
+};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 12,
+        fractions: vec![0.05, 0.3],
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for (name, tables) in [
+        ("tables 11-12", table_simmetric(&rt, &opts).expect("simmetric")),
+        ("table 13", table_kappa(&rt, &opts).expect("kappa")),
+        ("table 14", table_r(&rt, &opts).expect("r")),
+        ("tables 15-16", table_wre_variant(&rt, &opts).expect("wre")),
+        ("table 17", table_ssl_prune(&rt, &opts).expect("ssl")),
+        ("app h3", preprocess_time(&rt, &opts).expect("preptime")),
+    ] {
+        println!("==== {name} ====");
+        for t in tables {
+            println!("{}", t.to_markdown());
+        }
+    }
+    println!("ablations regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

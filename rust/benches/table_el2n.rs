@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Tables 1–2 (mean/median EL2N of subsets chosen
+//! by each set function), plus the generator-hardness cross-check column.
+//!
+//! Run: `cargo bench --bench table_el2n`
+
+use milo::coordinator::repro::{table_el2n, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for t in table_el2n(&rt, &opts).expect("el2n") {
+        println!("{}", t.to_markdown());
+    }
+    println!("tables 1-2 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

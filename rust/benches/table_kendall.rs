@@ -1,0 +1,29 @@
+//! Bench: regenerate paper Table 9 (Kendall-τ hyper-parameter ordering
+//! retention vs FULL tuning) with a reduced config grid.
+//!
+//! Run: `cargo bench --bench table_kendall`
+//! Full-scale: `milo repro kendall --configs 108 --epochs 12`
+
+use milo::coordinator::repro::{table_kendall, ReproOptions};
+use milo::runtime::Runtime;
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts missing ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let opts = ReproOptions {
+        epochs: 6,
+        out_dir: "results/bench".into(),
+        verbose: false,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for t in table_kendall(&rt, &opts, 36).expect("kendall") {
+        println!("{}", t.to_markdown());
+    }
+    println!("table 9 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,377 @@
+//! Experiment runner: the (dataset × strategy × fraction × seed) grid that
+//! regenerates the paper's tables/figures, plus the strategy factory.
+
+use anyhow::Result;
+
+use super::{Metadata, PreprocessOptions, Preprocessor};
+use crate::data::Dataset;
+use crate::kernel::SimilarityBackend;
+use crate::runtime::Runtime;
+use crate::selection::{
+    AdaptiveRandomStrategy, CraigPbStrategy, El2nPruneStrategy, FullStrategy,
+    GlisterStrategy, GradMatchPbStrategy, RandomStrategy, SgeVariantStrategy,
+    SslPruneStrategy, Strategy,
+};
+use crate::train::{LrSchedule, TrainConfig, TrainOutcome, Trainer};
+
+/// All strategies the evaluation grid can instantiate. Paper §4's baseline
+/// list plus the ablation variants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StrategyKind {
+    Milo { kappa: f64 },
+    MiloFixed,
+    Random,
+    AdaptiveRandom,
+    Full,
+    /// FULL with the wall-clock budget of a reference run (set via
+    /// `TrainConfig::time_budget_secs` by the runner).
+    FullEarlyStop,
+    CraigPb,
+    GradMatchPb,
+    Glister,
+    El2nPrune,
+    SslPrune,
+    SgeVariant,
+}
+
+impl StrategyKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Milo { .. } => "milo",
+            StrategyKind::MiloFixed => "milo_fixed",
+            StrategyKind::Random => "random",
+            StrategyKind::AdaptiveRandom => "adaptive_random",
+            StrategyKind::Full => "full",
+            StrategyKind::FullEarlyStop => "full_earlystop",
+            StrategyKind::CraigPb => "craigpb",
+            StrategyKind::GradMatchPb => "gradmatchpb",
+            StrategyKind::Glister => "glister",
+            StrategyKind::El2nPrune => "el2n_prune",
+            StrategyKind::SslPrune => "ssl_prune",
+            StrategyKind::SgeVariant => "sge_variant",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<StrategyKind> {
+        Some(match name {
+            "milo" => StrategyKind::Milo { kappa: crate::selection::milo::DEFAULT_KAPPA },
+            "milo_fixed" => StrategyKind::MiloFixed,
+            "random" => StrategyKind::Random,
+            "adaptive_random" => StrategyKind::AdaptiveRandom,
+            "full" => StrategyKind::Full,
+            "full_earlystop" => StrategyKind::FullEarlyStop,
+            "craigpb" => StrategyKind::CraigPb,
+            "gradmatchpb" => StrategyKind::GradMatchPb,
+            "glister" => StrategyKind::Glister,
+            "el2n_prune" => StrategyKind::El2nPrune,
+            "ssl_prune" => StrategyKind::SslPrune,
+            "sge_variant" => StrategyKind::SgeVariant,
+            _ => return None,
+        })
+    }
+
+    /// Does this strategy need MILO pre-processing metadata?
+    pub fn needs_metadata(&self) -> bool {
+        matches!(
+            self,
+            StrategyKind::Milo { .. } | StrategyKind::MiloFixed | StrategyKind::SgeVariant
+        )
+    }
+
+    /// Instantiate. `metadata` must be `Some` when [`needs_metadata`] and
+    /// `embeddings` when the strategy is SslPrune.
+    pub fn build(
+        &self,
+        metadata: Option<&Metadata>,
+        embeddings: Option<&crate::tensor::Matrix>,
+    ) -> Result<Box<dyn Strategy>> {
+        Ok(match self {
+            StrategyKind::Milo { kappa } => {
+                let m = metadata.ok_or_else(|| anyhow::anyhow!("milo needs metadata"))?;
+                Box::new(m.milo_strategy(*kappa))
+            }
+            StrategyKind::MiloFixed => {
+                let m = metadata.ok_or_else(|| anyhow::anyhow!("milo_fixed needs metadata"))?;
+                Box::new(m.milo_fixed_strategy())
+            }
+            StrategyKind::SgeVariant => {
+                let m = metadata.ok_or_else(|| anyhow::anyhow!("sge_variant needs metadata"))?;
+                Box::new(SgeVariantStrategy::new(m.sge_subsets.clone()))
+            }
+            StrategyKind::Random => Box::new(RandomStrategy::new()),
+            StrategyKind::AdaptiveRandom => Box::new(AdaptiveRandomStrategy),
+            StrategyKind::Full | StrategyKind::FullEarlyStop => Box::new(FullStrategy),
+            StrategyKind::CraigPb => Box::new(CraigPbStrategy),
+            StrategyKind::GradMatchPb => Box::new(GradMatchPbStrategy),
+            StrategyKind::Glister => Box::new(GlisterStrategy),
+            StrategyKind::El2nPrune => Box::new(El2nPruneStrategy::new(3)),
+            StrategyKind::SslPrune => {
+                let e = embeddings
+                    .ok_or_else(|| anyhow::anyhow!("ssl_prune needs embeddings"))?;
+                Box::new(SslPruneStrategy::new(e.clone()))
+            }
+        })
+    }
+}
+
+/// One grid cell's outcome, flattened for report tables.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub dataset: String,
+    pub strategy: String,
+    pub fraction: f64,
+    pub seed: u64,
+    pub outcome: TrainOutcome,
+    /// FULL training time for the same (dataset, seed), for speedup.
+    pub full_secs: f64,
+    /// FULL test accuracy, for degradation.
+    pub full_acc: f64,
+    pub preprocess_secs: f64,
+}
+
+impl TrialRecord {
+    pub fn speedup(&self) -> f64 {
+        self.outcome.speedup_vs(self.full_secs)
+    }
+
+    pub fn degradation_pct(&self) -> f64 {
+        (self.full_acc - self.outcome.test_accuracy) * 100.0
+    }
+}
+
+/// Drives the evaluation grid for one dataset. The R-interval convention
+/// follows the paper: MILO and Adaptive-Random use R=1; the gradient-based
+/// baselines use the efficiency R (10 vision / 3 text).
+pub struct ExperimentRunner<'a> {
+    pub rt: &'a Runtime,
+    pub ds: &'a Dataset,
+    pub epochs: usize,
+    /// R for the gradient-based baselines.
+    pub r_expensive: usize,
+    /// SGE/WRE pre-processing backend.
+    pub backend: SimilarityBackend,
+    /// Metadata cache dir (None disables caching).
+    pub cache_dir: Option<std::path::PathBuf>,
+    /// Verbose progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl<'a> ExperimentRunner<'a> {
+    pub fn new(rt: &'a Runtime, ds: &'a Dataset, epochs: usize) -> Self {
+        let text = matches!(
+            ds.id,
+            crate::data::DatasetId::Trec6Like
+                | crate::data::DatasetId::ImdbLike
+                | crate::data::DatasetId::RottenLike
+        );
+        ExperimentRunner {
+            rt,
+            ds,
+            epochs,
+            r_expensive: if text { 3 } else { 10 },
+            backend: SimilarityBackend::Native,
+            cache_dir: None,
+            verbose: false,
+        }
+    }
+
+    fn log(&self, msg: &str) {
+        if self.verbose {
+            eprintln!("[runner] {msg}");
+        }
+    }
+
+    /// Pre-process metadata for a fraction (cached when a dir is set).
+    pub fn preprocess(&self, fraction: f64, seed: u64) -> Result<Metadata> {
+        let pre = Preprocessor::with_options(
+            self.rt,
+            PreprocessOptions {
+                fraction,
+                backend: self.backend,
+                seed,
+                ..Default::default()
+            },
+        );
+        match &self.cache_dir {
+            Some(dir) => pre.run_cached(self.ds, dir.clone()),
+            None => pre.run(self.ds),
+        }
+    }
+
+    fn config(&self, kind: StrategyKind, fraction: f64, seed: u64) -> TrainConfig {
+        let base = TrainConfig::recipe_for(self.ds, self.epochs);
+        let r = match kind {
+            StrategyKind::CraigPb | StrategyKind::GradMatchPb | StrategyKind::Glister => {
+                self.r_expensive
+            }
+            _ => 1,
+        };
+        TrainConfig {
+            fraction: if matches!(kind, StrategyKind::Full | StrategyKind::FullEarlyStop) {
+                1.0
+            } else {
+                fraction
+            },
+            r,
+            seed,
+            schedule: LrSchedule::Cosine { total: self.epochs },
+            ..base
+        }
+    }
+
+    /// Train FULL once for reference numbers.
+    pub fn run_full(&self, seed: u64) -> Result<TrainOutcome> {
+        let cfg = self.config(StrategyKind::Full, 1.0, seed);
+        Trainer::new(self.rt, self.ds, cfg)?.run(&mut FullStrategy)
+    }
+
+    /// Run one (strategy, fraction, seed) cell, given the FULL reference.
+    pub fn run_cell(
+        &self,
+        kind: StrategyKind,
+        fraction: f64,
+        seed: u64,
+        full: &TrainOutcome,
+    ) -> Result<TrialRecord> {
+        self.log(&format!(
+            "{} {} f={fraction} seed={seed}",
+            self.ds.name(),
+            kind.name()
+        ));
+        let mut preprocess_secs = 0.0;
+        let metadata = if kind.needs_metadata() {
+            let m = self.preprocess(fraction, seed)?;
+            preprocess_secs = m.preprocess_secs;
+            Some(m)
+        } else {
+            None
+        };
+        let embeddings = if matches!(kind, StrategyKind::SslPrune) {
+            let pre = Preprocessor::with_options(
+                self.rt,
+                PreprocessOptions { backend: self.backend, ..Default::default() },
+            );
+            Some(pre.encode(self.ds, crate::data::Split::Train)?)
+        } else {
+            None
+        };
+        let mut strategy = kind.build(metadata.as_ref(), embeddings.as_ref())?;
+        let mut cfg = self.config(kind, fraction, seed);
+        if matches!(kind, StrategyKind::FullEarlyStop) {
+            // budget-match against a fraction-sized run: the paper stops FULL
+            // when it has consumed the subset run's time; approximate with
+            // fraction × full time.
+            cfg.time_budget_secs = Some(full.train_secs * fraction);
+        }
+        let outcome = Trainer::new(self.rt, self.ds, cfg)?.run(strategy.as_mut())?;
+        Ok(TrialRecord {
+            dataset: self.ds.name().to_string(),
+            strategy: kind.name().to_string(),
+            fraction,
+            seed,
+            outcome,
+            full_secs: full.train_secs,
+            full_acc: full.test_accuracy,
+            preprocess_secs,
+        })
+    }
+
+    /// The full grid for Fig. 6-style comparisons.
+    pub fn run_grid(
+        &self,
+        kinds: &[StrategyKind],
+        fractions: &[f64],
+        seeds: &[u64],
+    ) -> Result<Vec<TrialRecord>> {
+        let mut out = Vec::new();
+        for &seed in seeds {
+            let full = self.run_full(seed)?;
+            self.log(&format!(
+                "{} full: acc {:.4} time {:.2}s",
+                self.ds.name(),
+                full.test_accuracy,
+                full.train_secs
+            ));
+            for &fraction in fractions {
+                for &kind in kinds {
+                    out.push(self.run_cell(kind, fraction, seed, &full)?);
+                }
+            }
+            // record FULL itself as a row (fraction 1.0)
+            out.push(TrialRecord {
+                dataset: self.ds.name().to_string(),
+                strategy: "full".into(),
+                fraction: 1.0,
+                seed,
+                full_secs: full.train_secs,
+                full_acc: full.test_accuracy,
+                outcome: full,
+                preprocess_secs: 0.0,
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn strategy_kind_roundtrip() {
+        for kind in [
+            StrategyKind::MiloFixed,
+            StrategyKind::Random,
+            StrategyKind::AdaptiveRandom,
+            StrategyKind::Full,
+            StrategyKind::CraigPb,
+            StrategyKind::GradMatchPb,
+            StrategyKind::Glister,
+            StrategyKind::El2nPrune,
+            StrategyKind::SslPrune,
+            StrategyKind::SgeVariant,
+        ] {
+            assert_eq!(StrategyKind::from_name(kind.name()), Some(kind));
+        }
+        assert!(matches!(
+            StrategyKind::from_name("milo"),
+            Some(StrategyKind::Milo { .. })
+        ));
+        assert!(StrategyKind::from_name("bogus").is_none());
+    }
+
+    #[test]
+    fn build_fails_without_required_inputs() {
+        assert!(StrategyKind::Milo { kappa: 0.2 }.build(None, None).is_err());
+        assert!(StrategyKind::SslPrune.build(None, None).is_err());
+        assert!(StrategyKind::Random.build(None, None).is_ok());
+    }
+
+    #[test]
+    fn small_grid_cell_runs_end_to_end() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::RottenLike.generate(1);
+        let runner = ExperimentRunner::new(&rt, &ds, 4);
+        let full = runner.run_full(1).unwrap();
+        let rec = runner
+            .run_cell(
+                StrategyKind::Milo { kappa: 1.0 / 6.0 },
+                0.1,
+                1,
+                &full,
+            )
+            .unwrap();
+        assert!(rec.speedup() > 1.0, "speedup {}", rec.speedup());
+        assert!(rec.outcome.test_accuracy > 0.4); // 2-class task
+        assert!(rec.preprocess_secs > 0.0);
+    }
+}

@@ -1,0 +1,623 @@
+//! The MILO coordinator: the pre-processing pipeline (paper Fig. 3, left
+//! box) and the experiment runner that drives the paper's evaluation grid.
+//!
+//! Pre-processing is the paper's central move — all model-independent work
+//! happens **once per dataset**, before any training:
+//!
+//! 1. encode the train split with the frozen zero-shot encoder artifact;
+//! 2. build class-wise similarity kernels (Pallas artifact or native);
+//! 3. SGE: `n` stochastic-greedy subsets under graph-cut (easy phase);
+//! 4. WRE: full-sweep `GreedySampleImportance` under disparity-min →
+//!    Taylor-softmax importance distribution per class (hard phase);
+//! 5. store everything as dataset metadata (JSON on disk), so training any
+//!    number of downstream models costs no further selection work.
+
+pub mod experiment;
+pub mod repro;
+pub mod stream;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+pub use experiment::{ExperimentRunner, StrategyKind, TrialRecord};
+
+use crate::data::{Dataset, Split};
+use crate::kernel::{
+    build_class_kernels, ClassKernels, SimMetric, SimilarityBackend,
+};
+use crate::runtime::{Arg, Runtime};
+use crate::selection::milo::ClassProbs;
+use crate::selection::proportional_allocation;
+use crate::submod::{
+    greedy_maximize, sample_importance, GreedyMode, SetFunctionKind,
+};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use crate::util::math::taylor_softmax;
+use crate::util::rng::Rng;
+
+/// Pre-processing options (defaults = the paper's recipe).
+#[derive(Clone, Debug)]
+pub struct PreprocessOptions {
+    /// Subset fraction the SGE subsets / fixed subsets are sized for.
+    pub fraction: f64,
+    /// Number of SGE subsets (paper Algorithm 1 stores subsets for epochs
+    /// 0, R, …, κT−R; we default to 3 and cycle).
+    pub n_sge_subsets: usize,
+    /// Set function for the SGE (easy) phase.
+    pub sge_function: SetFunctionKind,
+    /// Set function for the WRE importance sweep (hard phase).
+    pub wre_function: SetFunctionKind,
+    pub metric: SimMetric,
+    pub backend: SimilarityBackend,
+    /// Stochastic-greedy ε (paper: 0.01).
+    pub epsilon: f64,
+    /// Seed for the stochastic parts of pre-processing.
+    pub seed: u64,
+    /// Optional Fig-11 encoder variant (artifact `encoder_{ds}__{variant}`);
+    /// `None` = the default zero-shot encoder.
+    pub encoder_variant: Option<String>,
+}
+
+impl Default for PreprocessOptions {
+    fn default() -> Self {
+        PreprocessOptions {
+            fraction: 0.1,
+            n_sge_subsets: 3,
+            sge_function: SetFunctionKind::GRAPH_CUT_DEFAULT,
+            wre_function: SetFunctionKind::DisparityMin,
+            metric: SimMetric::Cosine,
+            backend: SimilarityBackend::Pjrt,
+            epsilon: 0.01,
+            seed: 1,
+            encoder_variant: None,
+        }
+    }
+}
+
+/// The per-(dataset, fraction) metadata MILO stores (paper: "pre-selecting
+/// subsets and storing them as metadata with each dataset").
+#[derive(Clone, Debug)]
+pub struct Metadata {
+    pub dataset: String,
+    pub fraction: f64,
+    /// SGE subsets (global train indices), one per exploration round.
+    pub sge_subsets: Vec<Vec<usize>>,
+    /// WRE per-class importance distributions.
+    pub wre_classes: Vec<ClassProbs>,
+    /// Fixed disparity-min subset (the MILO(Fixed) baseline).
+    pub fixed_dm: Vec<usize>,
+    /// Wall-clock cost of pre-processing (App. H.3).
+    pub preprocess_secs: f64,
+}
+
+/// Pre-processing pipeline bound to a runtime.
+pub struct Preprocessor<'a> {
+    rt: &'a Runtime,
+    pub opts: PreprocessOptions,
+}
+
+impl<'a> Preprocessor<'a> {
+    pub fn new(rt: &'a Runtime) -> Preprocessor<'a> {
+        Preprocessor { rt, opts: PreprocessOptions::default() }
+    }
+
+    pub fn with_options(rt: &'a Runtime, opts: PreprocessOptions) -> Preprocessor<'a> {
+        Preprocessor { rt, opts }
+    }
+
+    /// Encode a split with the frozen zero-shot encoder artifact (or a
+    /// named Fig-11 variant when `opts.encoder_variant` is set).
+    pub fn encode(&self, ds: &Dataset, split: Split) -> Result<Matrix> {
+        let man = self.rt.manifest();
+        let b = man.batch;
+        let d = ds.id.input_dim();
+        let artifact = match &self.opts.encoder_variant {
+            Some(v) => format!("encoder_{}__{}", ds.name(), v),
+            None => format!("encoder_{}", ds.name()),
+        };
+        // variants may have non-default embedding widths
+        let e = man
+            .artifacts
+            .get(&artifact)
+            .and_then(|a| a.embed_dim)
+            .unwrap_or(man.embed_dim);
+        let x = ds.x(split);
+        let n = x.rows;
+        let mut out = Matrix::zeros(n, e);
+        let mut xbuf = vec![0.0f32; b * d];
+        let mut at = 0usize;
+        while at < n {
+            let take = (n - at).min(b);
+            for r in 0..take {
+                xbuf[r * d..(r + 1) * d].copy_from_slice(x.row(at + r));
+            }
+            for r in take..b {
+                xbuf[r * d..(r + 1) * d].iter_mut().for_each(|v| *v = 0.0);
+            }
+            let res = self.rt.execute(&artifact, &[Arg::F32(&xbuf)])?;
+            for r in 0..take {
+                out.row_mut(at + r).copy_from_slice(&res[0][r * e..(r + 1) * e]);
+            }
+            at += take;
+        }
+        Ok(out)
+    }
+
+    /// Build the class-wise kernels from provided embeddings.
+    pub fn kernels(&self, ds: &Dataset, embeddings: &Matrix) -> Result<ClassKernels> {
+        build_class_kernels(
+            Some(self.rt),
+            embeddings,
+            &ds.class_partition(),
+            self.opts.metric,
+            self.opts.backend,
+        )
+    }
+
+    /// SGE: `n_subsets` stochastic-greedy subsets of size `k`, assembled
+    /// class-wise under `kind`.
+    pub fn sge_subsets(
+        &self,
+        ds: &Dataset,
+        kernels: &ClassKernels,
+        kind: SetFunctionKind,
+        k: usize,
+        n_subsets: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
+        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
+        (0..n_subsets)
+            .map(|_| {
+                let mut subset = Vec::with_capacity(k);
+                for (ck, &kc) in kernels.per_class.iter().zip(&alloc) {
+                    if kc == 0 {
+                        continue;
+                    }
+                    let mut f = kind.build(&ck.sim);
+                    let trace = greedy_maximize(
+                        f.as_mut(),
+                        kc,
+                        GreedyMode::Stochastic { epsilon: self.opts.epsilon },
+                        kind.lazy_safe(),
+                        rng,
+                    );
+                    subset.extend(trace.selected.iter().map(|&l| ck.indices[l]));
+                }
+                subset.sort_unstable();
+                subset
+            })
+            .collect()
+    }
+
+    /// Fixed subset by full (lazy) greedy under `kind` — Fig. 4's fixed
+    /// subsets and the MILO(Fixed) baseline.
+    pub fn fixed_subset(
+        &self,
+        ds: &Dataset,
+        kernels: &ClassKernels,
+        kind: SetFunctionKind,
+        k: usize,
+    ) -> Vec<usize> {
+        let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
+        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
+        let mut subset = Vec::with_capacity(k);
+        let mut rng = Rng::new(self.opts.seed);
+        for (ck, &kc) in kernels.per_class.iter().zip(&alloc) {
+            if kc == 0 {
+                continue;
+            }
+            let mut f = kind.build(&ck.sim);
+            let trace =
+                greedy_maximize(f.as_mut(), kc, GreedyMode::Lazy, kind.lazy_safe(), &mut rng);
+            subset.extend(trace.selected.iter().map(|&l| ck.indices[l]));
+        }
+        subset.sort_unstable();
+        subset
+    }
+
+    /// WRE: per-class GreedySampleImportance sweep under `kind`, Taylor-
+    /// softmax normalized (paper Eq. 4–5).
+    pub fn wre_distribution(
+        &self,
+        kernels: &ClassKernels,
+        kind: SetFunctionKind,
+    ) -> Vec<ClassProbs> {
+        kernels
+            .per_class
+            .iter()
+            .map(|ck| {
+                let mut f = kind.build(&ck.sim);
+                let gains = sample_importance(f.as_mut(), kind.lazy_safe());
+                let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
+                ClassProbs {
+                    indices: ck.indices.clone(),
+                    probs: taylor_softmax(&g64),
+                }
+            })
+            .collect()
+    }
+
+    /// Exchange-chain subsets from `P(S) ∝ exp(β·f(S))` (§3.1 Eq. 2, the
+    /// paper's "ideal formulation" — our future-work extension). Returns
+    /// the class-stitched subsets and the chain diagnostics used by the
+    /// `gibbs` ablation (evaluations vs SGE's, acceptance rate).
+    pub fn gibbs_subsets(
+        &self,
+        ds: &Dataset,
+        kernels: &ClassKernels,
+        kind: SetFunctionKind,
+        k: usize,
+        beta: f32,
+        n_subsets: usize,
+        rng: &mut Rng,
+    ) -> (Vec<Vec<usize>>, crate::submod::GibbsStats) {
+        let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
+        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
+        let refs: Vec<(&Matrix, &[usize])> = kernels
+            .per_class
+            .iter()
+            .map(|ck| (&ck.sim, ck.indices.as_slice()))
+            .collect();
+        // burn-in/thinning scaled to the per-class budget: the chain needs
+        // ~k accepted swaps to decorrelate a size-k state.
+        let kc_max = alloc.iter().copied().max().unwrap_or(1).max(1);
+        crate::submod::gibbs_class_subsets(
+            &refs,
+            &alloc,
+            kind,
+            beta,
+            8 * kc_max,
+            2 * kc_max,
+            n_subsets,
+            rng,
+        )
+    }
+
+    /// Kernel-free feature-based pre-processing (conclusion future work):
+    /// the same SGE-subsets + WRE-distribution outputs, driven by
+    /// [`crate::submod::FeatureCoverage`] over non-negative coverage
+    /// features — memory O(n·2E) instead of the O(Σ n_c²) class kernels.
+    pub fn run_featurebased(&self, ds: &Dataset) -> Result<Metadata> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(self.opts.seed ^ 0xFEA7).derive_str(ds.name());
+        let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
+        let embeddings = self.encode(ds, Split::Train)?;
+        let parts = ds.class_partition();
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
+        // per-class coverage features
+        let phis: Vec<(Matrix, &Vec<usize>)> = parts
+            .iter()
+            .map(|idx| {
+                let z = embeddings.gather_rows(idx);
+                (crate::submod::coverage_features(&z), idx)
+            })
+            .collect();
+        // SGE-analog: stochastic-greedy over the coverage function
+        let sge_subsets: Vec<Vec<usize>> = (0..self.opts.n_sge_subsets)
+            .map(|_| {
+                let mut subset = Vec::with_capacity(k);
+                for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
+                    if kc == 0 {
+                        continue;
+                    }
+                    let mut f = crate::submod::FeatureCoverage::new(phi);
+                    let trace = greedy_maximize(
+                        &mut f,
+                        kc,
+                        GreedyMode::Stochastic { epsilon: self.opts.epsilon },
+                        true,
+                        &mut rng,
+                    );
+                    subset.extend(trace.selected.iter().map(|&l| idx[l]));
+                }
+                subset.sort_unstable();
+                subset
+            })
+            .collect();
+        // WRE-analog: importance sweep of the coverage gains
+        let wre_classes: Vec<ClassProbs> = phis
+            .iter()
+            .map(|(phi, idx)| {
+                let mut f = crate::submod::FeatureCoverage::new(phi);
+                let gains = sample_importance(&mut f, true);
+                let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
+                ClassProbs { indices: (*idx).clone(), probs: taylor_softmax(&g64) }
+            })
+            .collect();
+        // fixed subset: full lazy greedy
+        let mut fixed = Vec::with_capacity(k);
+        for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
+            if kc == 0 {
+                continue;
+            }
+            let mut f = crate::submod::FeatureCoverage::new(phi);
+            let trace = greedy_maximize(&mut f, kc, GreedyMode::Lazy, true, &mut rng);
+            fixed.extend(trace.selected.iter().map(|&l| idx[l]));
+        }
+        fixed.sort_unstable();
+        Ok(Metadata {
+            dataset: ds.name().to_string(),
+            fraction: self.opts.fraction,
+            sge_subsets,
+            wre_classes,
+            fixed_dm: fixed,
+            preprocess_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// The full MILO pre-processing pass (paper Algorithm 1, pre-processing
+    /// branch): returns the metadata used by `MiloStrategy` and
+    /// `MILO(Fixed)`.
+    pub fn run(&self, ds: &Dataset) -> Result<Metadata> {
+        let t0 = Instant::now();
+        let mut rng = Rng::new(self.opts.seed ^ 0x9E1E_C7).derive_str(ds.name());
+        let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
+        let embeddings = self.encode(ds, Split::Train)?;
+        let kernels = self.kernels(ds, &embeddings)?;
+        let sge_subsets = self.sge_subsets(
+            ds,
+            &kernels,
+            self.opts.sge_function,
+            k,
+            self.opts.n_sge_subsets,
+            &mut rng,
+        );
+        let wre_classes = self.wre_distribution(&kernels, self.opts.wre_function);
+        let fixed_dm = self.fixed_subset(ds, &kernels, self.opts.wre_function, k);
+        Ok(Metadata {
+            dataset: ds.name().to_string(),
+            fraction: self.opts.fraction,
+            sge_subsets,
+            wre_classes,
+            fixed_dm,
+            preprocess_secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run with a disk cache: `results/metadata/{ds}_f{frac}_s{seed}.json`.
+    /// Mirrors the paper's "pre-processing only needs to be done once per
+    /// dataset (and subset size)".
+    pub fn run_cached(&self, ds: &Dataset, dir: impl Into<PathBuf>) -> Result<Metadata> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!(
+            "{}_f{}_s{}_{}.json",
+            ds.name(),
+            self.opts.fraction,
+            self.opts.seed,
+            self.opts.metric.name(),
+        ));
+        if path.exists() {
+            if let Ok(meta) = load_metadata(&path) {
+                return Ok(meta);
+            }
+        }
+        let meta = self.run(ds)?;
+        save_metadata(&meta, &path)?;
+        Ok(meta)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metadata (de)serialization
+// ---------------------------------------------------------------------------
+
+pub fn save_metadata(meta: &Metadata, path: &std::path::Path) -> Result<()> {
+    let sge = Json::arr(
+        meta.sge_subsets
+            .iter()
+            .map(|s| Json::arr(s.iter().map(|&i| Json::num(i as f64)).collect()))
+            .collect(),
+    );
+    let wre = Json::arr(
+        meta.wre_classes
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    (
+                        "indices",
+                        Json::arr(c.indices.iter().map(|&i| Json::num(i as f64)).collect()),
+                    ),
+                    ("probs", Json::arr(c.probs.iter().map(|&p| Json::num(p)).collect())),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("dataset", Json::str(meta.dataset.clone())),
+        ("fraction", Json::num(meta.fraction)),
+        ("sge_subsets", sge),
+        ("wre_classes", wre),
+        (
+            "fixed_dm",
+            Json::arr(meta.fixed_dm.iter().map(|&i| Json::num(i as f64)).collect()),
+        ),
+        ("preprocess_secs", Json::num(meta.preprocess_secs)),
+    ]);
+    std::fs::write(path, doc.to_string())?;
+    Ok(())
+}
+
+pub fn load_metadata(path: &std::path::Path) -> Result<Metadata> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = Json::parse(&text)?;
+    let usizes = |j: &Json| -> Result<Vec<usize>> {
+        j.as_arr()?.iter().map(|x| x.as_usize()).collect()
+    };
+    let sge_subsets = v
+        .get("sge_subsets")?
+        .as_arr()?
+        .iter()
+        .map(usizes)
+        .collect::<Result<Vec<_>>>()?;
+    let wre_classes = v
+        .get("wre_classes")?
+        .as_arr()?
+        .iter()
+        .map(|c| -> Result<ClassProbs> {
+            Ok(ClassProbs {
+                indices: usizes(c.get("indices")?)?,
+                probs: c
+                    .get("probs")?
+                    .as_arr()?
+                    .iter()
+                    .map(|x| x.as_f64())
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Metadata {
+        dataset: v.get("dataset")?.as_str()?.to_string(),
+        fraction: v.get("fraction")?.as_f64()?,
+        sge_subsets,
+        wre_classes,
+        fixed_dm: usizes(v.get("fixed_dm")?)?,
+        preprocess_secs: v.get("preprocess_secs")?.as_f64()?,
+    })
+}
+
+impl Metadata {
+    /// Instantiate the full MILO strategy from this metadata.
+    pub fn milo_strategy(&self, kappa: f64) -> crate::selection::MiloStrategy {
+        crate::selection::MiloStrategy::new(
+            self.sge_subsets.clone(),
+            self.wre_classes.clone(),
+            kappa,
+        )
+    }
+
+    /// The MILO(Fixed) baseline.
+    pub fn milo_fixed_strategy(&self) -> crate::selection::FixedStrategy {
+        crate::selection::FixedStrategy::new("milo_fixed", self.fixed_dm.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn preprocess_produces_consistent_metadata() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(1);
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.1,
+                backend: SimilarityBackend::Native,
+                ..Default::default()
+            },
+        );
+        let meta = pre.run(&ds).unwrap();
+        let k = (0.1 * ds.n_train() as f64).round() as usize;
+        assert_eq!(meta.sge_subsets.len(), 3);
+        for s in &meta.sge_subsets {
+            assert_eq!(s.len(), k);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), k, "duplicates in SGE subset");
+        }
+        assert_eq!(meta.fixed_dm.len(), k);
+        assert_eq!(meta.wre_classes.len(), ds.classes());
+        let total: usize = meta.wre_classes.iter().map(|c| c.indices.len()).sum();
+        assert_eq!(total, ds.n_train());
+        for c in &meta.wre_classes {
+            let s: f64 = c.probs.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "class probs sum {s}");
+        }
+        assert!(meta.preprocess_secs > 0.0);
+    }
+
+    #[test]
+    fn sge_subsets_are_distinct_draws() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Cifar10Like.generate(2);
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.05,
+                backend: SimilarityBackend::Native,
+                n_sge_subsets: 4,
+                ..Default::default()
+            },
+        );
+        let meta = pre.run(&ds).unwrap();
+        let unique: std::collections::HashSet<&Vec<usize>> = meta.sge_subsets.iter().collect();
+        assert!(unique.len() >= 2, "stochastic greedy must vary draws");
+    }
+
+    #[test]
+    fn metadata_roundtrips_via_json() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::RottenLike.generate(3);
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.1,
+                backend: SimilarityBackend::Native,
+                ..Default::default()
+            },
+        );
+        let meta = pre.run(&ds).unwrap();
+        let dir = std::env::temp_dir().join("milo_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.json");
+        save_metadata(&meta, &path).unwrap();
+        let back = load_metadata(&path).unwrap();
+        assert_eq!(back.sge_subsets, meta.sge_subsets);
+        assert_eq!(back.fixed_dm, meta.fixed_dm);
+        assert_eq!(back.wre_classes.len(), meta.wre_classes.len());
+        for (a, b) in back.wre_classes.iter().zip(&meta.wre_classes) {
+            assert_eq!(a.indices, b.indices);
+            for (x, y) in a.probs.iter().zip(&b.probs) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn representation_subsets_are_easier_than_diversity() {
+        // The Fig. 4 / Tables 1-2 mechanism at metadata level: graph-cut
+        // fixed subsets should have lower generator hardness than
+        // disparity-min fixed subsets.
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Cifar100Like.generate(4);
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.1,
+                backend: SimilarityBackend::Native,
+                ..Default::default()
+            },
+        );
+        let emb = pre.encode(&ds, Split::Train).unwrap();
+        let kernels = pre.kernels(&ds, &emb).unwrap();
+        let k = (0.1 * ds.n_train() as f64) as usize;
+        let gc = pre.fixed_subset(&ds, &kernels, SetFunctionKind::GRAPH_CUT_DEFAULT, k);
+        let dm = pre.fixed_subset(&ds, &kernels, SetFunctionKind::DisparityMin, k);
+        let mean_h = |idx: &[usize]| -> f64 {
+            idx.iter().map(|&i| ds.hardness[i] as f64).sum::<f64>() / idx.len() as f64
+        };
+        assert!(
+            mean_h(&gc) < mean_h(&dm),
+            "graph-cut hardness {} !< disparity-min {}",
+            mean_h(&gc),
+            mean_h(&dm)
+        );
+    }
+}

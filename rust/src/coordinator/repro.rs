@@ -1,0 +1,1315 @@
+//! Experiment regenerators: one function per paper table/figure.
+//!
+//! Each produces [`Table`]s whose rows mirror what the paper reports
+//! (strategy, subset size, accuracy, time, speedup, degradation, …) and
+//! saves CSV + markdown under the results directory. The `milo repro`
+//! CLI and the benches are thin wrappers over these.
+//!
+//! Scaling: `ReproOptions::epochs`/`seeds`/`fractions` control cost; the
+//! defaults regenerate every figure on a laptop-class CPU in minutes. The
+//! shapes (orderings, crossovers), not absolute GPU numbers, are the
+//! reproduction target — see EXPERIMENTS.md.
+
+use anyhow::Result;
+
+use super::experiment::{ExperimentRunner, StrategyKind};
+use super::{PreprocessOptions, Preprocessor};
+use crate::data::{Dataset, DatasetId, Split};
+use crate::hpo::{HpoConfig, SearchAlgo, Tuner};
+use crate::kernel::{SimMetric, SimilarityBackend};
+use crate::report::{f, pct, Table};
+use crate::runtime::Runtime;
+use crate::selection::milo::DEFAULT_KAPPA;
+use crate::selection::{SgeStrategy, Strategy, WreStrategy};
+use crate::submod::SetFunctionKind;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::math::{kendall_tau, mean, median, stddev};
+use crate::util::rng::Rng;
+
+/// Shared knobs for all regenerators.
+#[derive(Clone, Debug)]
+pub struct ReproOptions {
+    pub epochs: usize,
+    pub seeds: Vec<u64>,
+    pub fractions: Vec<f64>,
+    pub out_dir: std::path::PathBuf,
+    pub backend: SimilarityBackend,
+    pub verbose: bool,
+}
+
+impl Default for ReproOptions {
+    fn default() -> Self {
+        ReproOptions {
+            epochs: 40,
+            seeds: vec![1],
+            fractions: vec![0.01, 0.05, 0.1, 0.3],
+            out_dir: "results".into(),
+            backend: SimilarityBackend::Native,
+            verbose: true,
+        }
+    }
+}
+
+impl ReproOptions {
+    fn runner<'a>(&self, rt: &'a Runtime, ds: &'a Dataset) -> ExperimentRunner<'a> {
+        let mut r = ExperimentRunner::new(rt, ds, self.epochs);
+        r.backend = self.backend;
+        r.verbose = self.verbose;
+        r
+    }
+}
+
+fn outcome_row(
+    t: &mut Table,
+    ds: &str,
+    strategy: &str,
+    fraction: f64,
+    acc: f64,
+    acc_sd: f64,
+    secs: f64,
+    full_acc: f64,
+    full_secs: f64,
+) {
+    t.push(vec![
+        ds.to_string(),
+        strategy.to_string(),
+        f(fraction, 2),
+        pct(acc),
+        f(acc_sd * 100.0, 2),
+        f(secs, 2),
+        f(full_secs / secs.max(1e-9), 2),
+        f((full_acc - acc) * 100.0, 2),
+    ]);
+}
+
+const GRID_HEADERS: [&str; 8] = [
+    "dataset", "strategy", "fraction", "test_acc_%", "std_%", "train_secs", "speedup",
+    "degradation_%",
+];
+
+/// Aggregate per-(strategy, fraction) means over seeds.
+fn aggregate(
+    records: &[super::experiment::TrialRecord],
+) -> Vec<(String, f64, f64, f64, f64, f64, f64)> {
+    use std::collections::BTreeMap;
+    let mut groups: BTreeMap<(String, String), Vec<&super::experiment::TrialRecord>> =
+        BTreeMap::new();
+    for r in records {
+        groups
+            .entry((r.strategy.clone(), format!("{:.4}", r.fraction)))
+            .or_default()
+            .push(r);
+    }
+    groups
+        .into_iter()
+        .map(|((strategy, _), rs)| {
+            let accs: Vec<f32> = rs.iter().map(|r| r.outcome.test_accuracy as f32).collect();
+            let secs: Vec<f32> = rs.iter().map(|r| r.outcome.train_secs as f32).collect();
+            let full_acc = rs.iter().map(|r| r.full_acc).sum::<f64>() / rs.len() as f64;
+            let full_secs = rs.iter().map(|r| r.full_secs).sum::<f64>() / rs.len() as f64;
+            (
+                strategy,
+                rs[0].fraction,
+                mean(&accs),
+                stddev(&accs),
+                mean(&secs),
+                full_acc,
+                full_secs,
+            )
+        })
+        .collect()
+}
+
+// ===========================================================================
+// Fig. 1 — convergence (epochs & wallclock) of AdaptiveRandom vs CraigPB vs
+// GradMatchPB at 10%, R=1 (selection every epoch)
+// ===========================================================================
+
+pub fn fig1_convergence(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let mut epoch_t = Table::new(
+        "Fig 1a: val accuracy vs epoch (10% CIFAR100-like, R=1)",
+        &["strategy", "epoch", "val_acc_%"],
+    );
+    let mut time_t = Table::new(
+        "Fig 1b: val accuracy vs train wallclock (10% CIFAR100-like, R=1)",
+        &["strategy", "train_secs", "val_acc_%"],
+    );
+    for kind in [
+        StrategyKind::AdaptiveRandom,
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+    ] {
+        let mut strategy = kind.build(None, None)?;
+        let cfg = TrainConfig {
+            epochs: opts.epochs,
+            fraction: 0.1,
+            r: 1, // paper Fig 1: NEW SUBSET EVERY EPOCH for everyone
+            eval_every: 2,
+            seed: opts.seeds[0],
+            ..TrainConfig::recipe_for(&ds, opts.epochs)
+        };
+        let out = Trainer::new(rt, &ds, cfg)?.run(strategy.as_mut())?;
+        for p in &out.trace {
+            epoch_t.push(vec![
+                kind.name().into(),
+                p.epoch.to_string(),
+                pct(p.val_accuracy),
+            ]);
+            time_t.push(vec![
+                kind.name().into(),
+                f(p.train_secs, 3),
+                pct(p.val_accuracy),
+            ]);
+        }
+    }
+    epoch_t.save(&opts.out_dir, "fig1a_convergence_epochs")?;
+    time_t.save(&opts.out_dir, "fig1b_convergence_time")?;
+    Ok(vec![epoch_t, time_t])
+}
+
+// ===========================================================================
+// Fig. 4 — fixed subsets selected by different set functions
+// ===========================================================================
+
+pub fn fig4_setfunctions(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let mut t = Table::new(
+        "Fig 4: fixed-subset accuracy by set function (CIFAR100-like)",
+        &["set_function", "fraction", "test_acc_%"],
+    );
+    let pre = Preprocessor::with_options(
+        rt,
+        PreprocessOptions { backend: opts.backend, ..Default::default() },
+    );
+    let emb = pre.encode(&ds, Split::Train)?;
+    let kernels = pre.kernels(&ds, &emb)?;
+    for &fraction in &opts.fractions {
+        let k = (fraction * ds.n_train() as f64).round() as usize;
+        for kind in [
+            SetFunctionKind::FacilityLocation,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            SetFunctionKind::DisparitySum,
+            SetFunctionKind::DisparityMin,
+        ] {
+            let subset = pre.fixed_subset(&ds, &kernels, kind, k);
+            let mut strat =
+                crate::selection::FixedStrategy::new(kind.name(), subset);
+            let cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction,
+                eval_every: 0,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+            t.push(vec![
+                kind.name().into(),
+                f(fraction, 2),
+                pct(out.test_accuracy),
+            ]);
+            if opts.verbose {
+                eprintln!(
+                    "[fig4] {} f={fraction}: {:.2}%",
+                    kind.name(),
+                    100.0 * out.test_accuracy
+                );
+            }
+        }
+    }
+    t.save(&opts.out_dir, "fig4_setfunctions")?;
+    Ok(vec![t])
+}
+
+// ===========================================================================
+// Fig. 5a — SGE vs WRE vs Fixed across sizes and functions
+// Fig. 5b / 12 / 13 / 14 — early-convergence comparisons
+// ===========================================================================
+
+/// Build an SGE or WRE strategy for an arbitrary set function (ablations).
+pub fn exploration_strategy(
+    rt: &Runtime,
+    ds: &Dataset,
+    kind: SetFunctionKind,
+    explore: &str, // "sge" | "wre" | "fixed"
+    fraction: f64,
+    backend: SimilarityBackend,
+    seed: u64,
+) -> Result<Box<dyn Strategy>> {
+    let pre = Preprocessor::with_options(
+        rt,
+        PreprocessOptions { fraction, backend, seed, ..Default::default() },
+    );
+    let emb = pre.encode(ds, Split::Train)?;
+    let kernels = pre.kernels(ds, &emb)?;
+    let k = (fraction * ds.n_train() as f64).round() as usize;
+    Ok(match explore {
+        "sge" => {
+            let mut rng = Rng::new(seed ^ 0x56E);
+            let subsets = pre.sge_subsets(ds, &kernels, kind, k, 3, &mut rng);
+            Box::new(SgeStrategy::new(format!("sge_{}", kind.name()), subsets))
+        }
+        "wre" => {
+            let classes = pre.wre_distribution(&kernels, kind);
+            Box::new(WreStrategy::new(format!("wre_{}", kind.name()), classes))
+        }
+        "fixed" => {
+            let subset = pre.fixed_subset(ds, &kernels, kind, k);
+            Box::new(crate::selection::FixedStrategy::new(
+                format!("fixed_{}", kind.name()),
+                subset,
+            ))
+        }
+        other => anyhow::bail!("unknown exploration {other}"),
+    })
+}
+
+pub fn fig5a_sge_wre(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let mut t = Table::new(
+        "Fig 5a: SGE vs WRE vs Fixed across subset sizes (CIFAR100-like)",
+        &["exploration", "set_function", "fraction", "test_acc_%"],
+    );
+    for &fraction in &opts.fractions {
+        for kind in [SetFunctionKind::GRAPH_CUT_DEFAULT, SetFunctionKind::DisparityMin] {
+            for explore in ["fixed", "sge", "wre"] {
+                let mut strat = exploration_strategy(
+                    rt, &ds, kind, explore, fraction, opts.backend, opts.seeds[0],
+                )?;
+                let cfg = TrainConfig {
+                    epochs: opts.epochs,
+                    fraction,
+                    eval_every: 0,
+                    seed: opts.seeds[0],
+                    ..TrainConfig::recipe_for(&ds, opts.epochs)
+                };
+                let out = Trainer::new(rt, &ds, cfg)?.run(strat.as_mut())?;
+                t.push(vec![
+                    explore.into(),
+                    kind.name().into(),
+                    f(fraction, 2),
+                    pct(out.test_accuracy),
+                ]);
+                if opts.verbose {
+                    eprintln!(
+                        "[fig5a] {explore} {} f={fraction}: {:.2}%",
+                        kind.name(),
+                        100.0 * out.test_accuracy
+                    );
+                }
+            }
+        }
+    }
+    t.save(&opts.out_dir, "fig5a_sge_wre")?;
+    Ok(vec![t])
+}
+
+/// Generic early-convergence comparison over (exploration, function) arms.
+/// Covers Fig 5b (ds=cifar100, arms below), Fig 12 (SGE/GC vs SGE/FL) and
+/// Fig 13 (SGE/GC vs WRE/GC).
+pub fn convergence_compare(
+    rt: &Runtime,
+    opts: &ReproOptions,
+    ds_id: DatasetId,
+    fraction: f64,
+    arms: &[(&str, SetFunctionKind)],
+    stem: &str,
+    title: &str,
+) -> Result<Vec<Table>> {
+    let ds = ds_id.generate(opts.seeds[0]);
+    let mut t = Table::new(title, &["arm", "epoch", "val_acc_%"]);
+    for &(explore, kind) in arms {
+        let mut strat = exploration_strategy(
+            rt, &ds, kind, explore, fraction, opts.backend, opts.seeds[0],
+        )?;
+        let cfg = TrainConfig {
+            epochs: opts.epochs,
+            fraction,
+            eval_every: 1,
+            seed: opts.seeds[0],
+            ..TrainConfig::recipe_for(&ds, opts.epochs)
+        };
+        let out = Trainer::new(rt, &ds, cfg)?.run(strat.as_mut())?;
+        let arm = format!("{}_{}", explore, kind.name());
+        for p in &out.trace {
+            t.push(vec![arm.clone(), p.epoch.to_string(), pct(p.val_accuracy)]);
+        }
+    }
+    t.save(&opts.out_dir, stem)?;
+    Ok(vec![t])
+}
+
+pub fn fig5b_early_convergence(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    convergence_compare(
+        rt,
+        opts,
+        DatasetId::Cifar100Like,
+        0.05,
+        &[
+            ("sge", SetFunctionKind::GRAPH_CUT_DEFAULT),
+            ("wre", SetFunctionKind::DisparityMin),
+            ("sge", SetFunctionKind::FacilityLocation),
+            ("wre", SetFunctionKind::GRAPH_CUT_DEFAULT),
+        ],
+        "fig5b_early_convergence",
+        "Fig 5b: early convergence, 5% CIFAR100-like",
+    )
+}
+
+pub fn fig12_sge_gc_vs_fl(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+    for (ds, frac) in [
+        (DatasetId::Cifar10Like, 0.05),
+        (DatasetId::Cifar100Like, 0.1),
+        (DatasetId::Trec6Like, 0.1),
+    ] {
+        out.extend(convergence_compare(
+            rt,
+            opts,
+            ds,
+            frac,
+            &[
+                ("sge", SetFunctionKind::GRAPH_CUT_DEFAULT),
+                ("sge", SetFunctionKind::FacilityLocation),
+            ],
+            &format!("fig12_{}_{frac}", ds.name()),
+            &format!("Fig 12: SGE(GC) vs SGE(FL), {} {}%", ds.name(), frac * 100.0),
+        )?);
+    }
+    Ok(out)
+}
+
+pub fn fig13_sge_vs_wre_gc(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+    for (ds, frac) in [
+        (DatasetId::Cifar10Like, 0.05),
+        (DatasetId::Cifar100Like, 0.1),
+        (DatasetId::Trec6Like, 0.1),
+    ] {
+        out.extend(convergence_compare(
+            rt,
+            opts,
+            ds,
+            frac,
+            &[
+                ("sge", SetFunctionKind::GRAPH_CUT_DEFAULT),
+                ("wre", SetFunctionKind::GRAPH_CUT_DEFAULT),
+            ],
+            &format!("fig13_{}_{frac}", ds.name()),
+            &format!("Fig 13: SGE(GC) vs WRE(GC), {} {}%", ds.name(), frac * 100.0),
+        )?);
+    }
+    Ok(out)
+}
+
+/// Fig 14: curriculum (MILO) vs pure SGE(GC) vs pure WRE(DM) convergence.
+pub fn fig14_curriculum_convergence(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar10Like, DatasetId::TinyImagenetLike] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let fraction = 0.05;
+        let mut t = Table::new(
+            format!("Fig 14: curriculum vs pure exploration, 5% {}", ds.name()),
+            &["arm", "epoch", "val_acc_%"],
+        );
+        let runner = opts.runner(rt, &ds);
+        let meta = runner.preprocess(fraction, opts.seeds[0])?;
+        let arms: Vec<(&str, Box<dyn Strategy>)> = vec![
+            ("milo_curriculum", Box::new(meta.milo_strategy(DEFAULT_KAPPA))),
+            ("sge_graph_cut", Box::new(meta.milo_strategy(1.0))),
+            ("wre_disparity_min", Box::new(meta.milo_strategy(0.0))),
+        ];
+        for (name, mut strat) in arms {
+            let cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction,
+                eval_every: 1,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            let out = Trainer::new(rt, &ds, cfg)?.run(strat.as_mut())?;
+            for p in &out.trace {
+                t.push(vec![name.into(), p.epoch.to_string(), pct(p.val_accuracy)]);
+            }
+        }
+        t.save(&opts.out_dir, &format!("fig14_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Fig. 6 (+Tables 5-8) — the main training tradeoff grid
+// ===========================================================================
+
+pub fn fig6_tradeoff(
+    rt: &Runtime,
+    opts: &ReproOptions,
+    datasets: &[DatasetId],
+) -> Result<Vec<Table>> {
+    let kinds = [
+        StrategyKind::Random,
+        StrategyKind::AdaptiveRandom,
+        StrategyKind::Glister,
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+        StrategyKind::MiloFixed,
+        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+    ];
+    let mut tables = Vec::new();
+    for &ds_id in datasets {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let records = runner.run_grid(&kinds, &opts.fractions, &opts.seeds)?;
+        let mut t = Table::new(
+            format!(
+                "Fig 6 / Tables 5-8: speedup vs accuracy tradeoff, {}",
+                ds.name()
+            ),
+            &GRID_HEADERS,
+        );
+        for (strategy, fraction, acc, sd, secs, full_acc, full_secs) in aggregate(&records) {
+            outcome_row(
+                &mut t, ds.name(), &strategy, fraction, acc, sd, secs, full_acc, full_secs,
+            );
+        }
+        t.save(&opts.out_dir, &format!("fig6_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+/// Fig 6 g/h: convergence-with-time at 30%.
+pub fn fig6gh_convergence(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Trec6Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let mut t = Table::new(
+            format!("Fig 6g/h: convergence with time, 30% {}", ds.name()),
+            &["strategy", "train_secs", "val_acc_%"],
+        );
+        for kind in [
+            StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+            StrategyKind::AdaptiveRandom,
+            StrategyKind::GradMatchPb,
+            StrategyKind::CraigPb,
+            StrategyKind::Full,
+        ] {
+            let metadata = if kind.needs_metadata() {
+                Some(runner.preprocess(0.3, opts.seeds[0])?)
+            } else {
+                None
+            };
+            let mut strategy = kind.build(metadata.as_ref(), None)?;
+            let mut cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction: if matches!(kind, StrategyKind::Full) { 1.0 } else { 0.3 },
+                eval_every: 2,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            if matches!(kind, StrategyKind::CraigPb | StrategyKind::GradMatchPb) {
+                cfg.r = runner.r_expensive;
+            }
+            let out = Trainer::new(rt, &ds, cfg)?.run(strategy.as_mut())?;
+            for p in &out.trace {
+                t.push(vec![
+                    kind.name().into(),
+                    f(p.train_secs, 3),
+                    pct(p.val_accuracy),
+                ]);
+            }
+        }
+        t.save(&opts.out_dir, &format!("fig6gh_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Fig. 7 (+Table 10) — hyper-parameter tuning tradeoff
+// ===========================================================================
+
+pub fn fig7_hpo(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Trec6Like, DatasetId::Cifar10Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let mut t = Table::new(
+            format!("Fig 7 / Table 10: HPO tradeoff, {}", ds.name()),
+            &[
+                "search", "strategy", "fraction", "best_test_acc_%", "tuning_secs",
+                "speedup",
+            ],
+        );
+        for algo in [SearchAlgo::Random, SearchAlgo::Tpe] {
+            // FULL reference tuning
+            let full_cfg = HpoConfig {
+                algo,
+                strategy: StrategyKind::Full,
+                fraction: 1.0,
+                max_epochs: opts.epochs.min(27).max(4),
+                eta: 3,
+                seed: opts.seeds[0],
+            };
+            let full = Tuner::new(rt, &ds, full_cfg.clone()).run()?;
+            t.push(vec![
+                algo.name().into(),
+                "full".into(),
+                "1.00".into(),
+                pct(full.best_test_accuracy),
+                f(full.tuning_secs, 2),
+                "1.00".into(),
+            ]);
+            for &fraction in &opts.fractions {
+                for kind in [
+                    StrategyKind::Random,
+                    StrategyKind::AdaptiveRandom,
+                    StrategyKind::CraigPb,
+                    StrategyKind::MiloFixed,
+                    StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+                ] {
+                    let cfg = HpoConfig {
+                        algo,
+                        strategy: kind,
+                        fraction,
+                        ..full_cfg.clone()
+                    };
+                    let out = Tuner::new(rt, &ds, cfg).run()?;
+                    t.push(vec![
+                        algo.name().into(),
+                        kind.name().into(),
+                        f(fraction, 2),
+                        pct(out.best_test_accuracy),
+                        f(out.tuning_secs, 2),
+                        f(full.tuning_secs / out.tuning_secs.max(1e-9), 2),
+                    ]);
+                    if opts.verbose {
+                        eprintln!(
+                            "[fig7] {} {} {} f={fraction}: acc {:.2}% {:.1}s",
+                            ds.name(),
+                            algo.name(),
+                            kind.name(),
+                            100.0 * out.best_test_accuracy,
+                            out.tuning_secs
+                        );
+                    }
+                }
+            }
+        }
+        t.save(&opts.out_dir, &format!("fig7_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Tables 1-2 — EL2N scores of subsets per set function
+// ===========================================================================
+
+pub fn table_el2n(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Cifar10Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let mut t = Table::new(
+            format!("Tables 1-2: EL2N of selected subsets, {}", ds.name()),
+            &[
+                "fraction", "set_function", "el2n_mean", "el2n_median",
+                "gen_hardness_mean",
+            ],
+        );
+        // EL2N scores from a briefly trained model (Paul et al. protocol)
+        let mut rng = Rng::new(opts.seeds[0]);
+        let scores = crate::selection::pruning::El2nPruneStrategy::scores(
+            rt, &ds, 128, 3, &mut rng,
+        )?;
+        let pre = Preprocessor::with_options(
+            rt,
+            PreprocessOptions { backend: opts.backend, ..Default::default() },
+        );
+        let emb = pre.encode(&ds, Split::Train)?;
+        let kernels = pre.kernels(&ds, &emb)?;
+        for &fraction in &opts.fractions {
+            let k = (fraction * ds.n_train() as f64).round() as usize;
+            for kind in [
+                SetFunctionKind::GRAPH_CUT_DEFAULT,
+                SetFunctionKind::FacilityLocation,
+                SetFunctionKind::DisparityMin,
+                SetFunctionKind::DisparitySum,
+            ] {
+                let subset = pre.fixed_subset(&ds, &kernels, kind, k);
+                let sel_scores: Vec<f32> = subset.iter().map(|&i| scores[i]).collect();
+                let sel_hard: Vec<f32> = subset.iter().map(|&i| ds.hardness[i]).collect();
+                t.push(vec![
+                    f(fraction, 2),
+                    kind.name().into(),
+                    f(mean(&sel_scores), 4),
+                    f(median(&sel_scores), 4),
+                    f(mean(&sel_hard), 4),
+                ]);
+            }
+        }
+        t.save(&opts.out_dir, &format!("table_el2n_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Table 9 — hyper-parameter ordering retention (Kendall tau)
+// ===========================================================================
+
+pub fn table_kendall(rt: &Runtime, opts: &ReproOptions, n_configs: usize) -> Result<Vec<Table>> {
+    let ds = DatasetId::Trec6Like.generate(opts.seeds[0]);
+    let space = crate::hpo::HpoSpace::default_for(&ds);
+    let grid = space.grid(n_configs);
+    let epochs = opts.epochs.min(12).max(3);
+
+    // evaluate the grid under one strategy; returns val accuracies
+    let eval_grid = |kind: StrategyKind, fraction: f64| -> Result<Vec<f64>> {
+        let cfg = HpoConfig {
+            algo: SearchAlgo::Random,
+            strategy: kind,
+            fraction,
+            max_epochs: epochs,
+            eta: 3,
+            seed: opts.seeds[0],
+        };
+        let mut tuner = Tuner::new(rt, &ds, cfg);
+        if kind.needs_metadata() {
+            let pre = Preprocessor::with_options(
+                rt,
+                PreprocessOptions {
+                    fraction,
+                    backend: opts.backend,
+                    seed: opts.seeds[0],
+                    ..Default::default()
+                },
+            );
+            tuner.metadata = Some(pre.run(&ds)?);
+        }
+        let mut sw = crate::util::timer::Stopwatch::new();
+        grid.iter()
+            .map(|c| Ok(tuner.evaluate(c, epochs, &mut sw)?.val_accuracy))
+            .collect()
+    };
+
+    let full_order = eval_grid(StrategyKind::Full, 1.0)?;
+    let mut t = Table::new(
+        format!(
+            "Table 9: Kendall-tau ordering retention vs FULL ({} configs, TREC6-like)",
+            grid.len()
+        ),
+        &["fraction", "strategy", "kendall_tau"],
+    );
+    for &fraction in &[0.01, 0.05, 0.1] {
+        for kind in [
+            StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+            StrategyKind::Random,
+            StrategyKind::AdaptiveRandom,
+            StrategyKind::CraigPb,
+        ] {
+            let order = eval_grid(kind, fraction)?;
+            let tau = kendall_tau(&order, &full_order);
+            t.push(vec![f(fraction, 2), kind.name().into(), f(tau, 4)]);
+            if opts.verbose {
+                eprintln!("[kendall] {} f={fraction}: tau {:.4}", kind.name(), tau);
+            }
+        }
+    }
+    t.save(&opts.out_dir, "table9_kendall")?;
+    Ok(vec![t])
+}
+
+// ===========================================================================
+// Tables 11-12 — similarity metric ablation
+// ===========================================================================
+
+pub fn table_simmetric(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Trec6Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let mut t = Table::new(
+            format!(
+                "Tables 11-12: similarity-metric ablation (5% FL fixed subsets, {})",
+                ds.name()
+            ),
+            &["metric", "test_acc_%"],
+        );
+        let metrics = [
+            SimMetric::Cosine,
+            SimMetric::Dot,
+            SimMetric::Rbf { kw: 0.01 },
+            SimMetric::Rbf { kw: 0.05 },
+            SimMetric::Rbf { kw: 0.1 },
+            SimMetric::Rbf { kw: 0.5 },
+            SimMetric::Rbf { kw: 1.0 },
+        ];
+        for metric in metrics {
+            let pre = Preprocessor::with_options(
+                rt,
+                PreprocessOptions { metric, backend: opts.backend, ..Default::default() },
+            );
+            let emb = pre.encode(&ds, Split::Train)?;
+            let kernels = pre.kernels(&ds, &emb)?;
+            let k = (0.05 * ds.n_train() as f64).round() as usize;
+            let subset =
+                pre.fixed_subset(&ds, &kernels, SetFunctionKind::FacilityLocation, k);
+            let mut strat = crate::selection::FixedStrategy::new(metric.name(), subset);
+            let cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction: 0.05,
+                eval_every: 0,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+            t.push(vec![metric.name(), pct(out.test_accuracy)]);
+        }
+        t.save(&opts.out_dir, &format!("table_simmetric_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Table 13 + Fig 14 — kappa curriculum sweep
+// ===========================================================================
+
+pub fn table_kappa(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let kappas = [0.0, 1.0 / 12.0, 1.0 / 10.0, 1.0 / 8.0, 1.0 / 6.0, 0.25, 0.5, 1.0];
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Cifar10Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let mut t = Table::new(
+            format!("Table 13: kappa sweep, {}", ds.name()),
+            &["fraction", "kappa", "test_acc_%"],
+        );
+        for &fraction in &opts.fractions {
+            let meta = runner.preprocess(fraction, opts.seeds[0])?;
+            for &kappa in &kappas {
+                let mut strat = meta.milo_strategy(kappa);
+                let cfg = TrainConfig {
+                    epochs: opts.epochs,
+                    fraction,
+                    eval_every: 0,
+                    seed: opts.seeds[0],
+                    ..TrainConfig::recipe_for(&ds, opts.epochs)
+                };
+                let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+                t.push(vec![f(fraction, 2), f(kappa, 4), pct(out.test_accuracy)]);
+                if opts.verbose {
+                    eprintln!(
+                        "[kappa] {} f={fraction} k={kappa:.3}: {:.2}%",
+                        ds.name(),
+                        100.0 * out.test_accuracy
+                    );
+                }
+            }
+        }
+        t.save(&opts.out_dir, &format!("table13_kappa_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Table 14 — R sweep
+// ===========================================================================
+
+pub fn table_r(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let runner = opts.runner(rt, &ds);
+    let mut t = Table::new(
+        "Table 14: selection-interval R sweep (MILO, CIFAR100-like)",
+        &["fraction", "R", "test_acc_%"],
+    );
+    for &fraction in &[0.1, 0.3] {
+        let meta = runner.preprocess(fraction, opts.seeds[0])?;
+        for r in [1usize, 2, 5, 10] {
+            let mut strat = meta.milo_strategy(DEFAULT_KAPPA);
+            let cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction,
+                r,
+                eval_every: 0,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+            t.push(vec![f(fraction, 2), r.to_string(), pct(out.test_accuracy)]);
+        }
+    }
+    t.save(&opts.out_dir, "table14_r_sweep")?;
+    Ok(vec![t])
+}
+
+// ===========================================================================
+// Tables 15-16 — WRE vs the exploration-heavy SGE variant
+// ===========================================================================
+
+pub fn table_wre_variant(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Cifar10Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let mut t = Table::new(
+            format!("Tables 15-16: MILO vs SGE-variant (more exploration), {}", ds.name()),
+            &["fraction", "strategy", "test_acc_%"],
+        );
+        for &fraction in &[0.05, 0.1] {
+            let meta = runner.preprocess(fraction, opts.seeds[0])?;
+            for (name, mut strat) in [
+                (
+                    "milo",
+                    Box::new(meta.milo_strategy(DEFAULT_KAPPA)) as Box<dyn Strategy>,
+                ),
+                (
+                    "sge_variant",
+                    Box::new(crate::selection::SgeVariantStrategy::new(
+                        meta.sge_subsets.clone(),
+                    )),
+                ),
+            ] {
+                let cfg = TrainConfig {
+                    epochs: opts.epochs,
+                    fraction,
+                    eval_every: 0,
+                    seed: opts.seeds[0],
+                    ..TrainConfig::recipe_for(&ds, opts.epochs)
+                };
+                let out = Trainer::new(rt, &ds, cfg)?.run(strat.as_mut())?;
+                t.push(vec![f(fraction, 2), name.into(), pct(out.test_accuracy)]);
+            }
+        }
+        t.save(&opts.out_dir, &format!("table15_16_wre_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Table 17 — MILO vs self-supervised pruning
+// ===========================================================================
+
+pub fn table_ssl_prune(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let runner = opts.runner(rt, &ds);
+    let full = runner.run_full(opts.seeds[0])?;
+    let mut t = Table::new(
+        "Table 17: MILO vs self-supervised pruning metric (CIFAR100-like)",
+        &["fraction", "strategy", "test_acc_%", "speedup"],
+    );
+    // MILO at 30%
+    let rec = runner.run_cell(
+        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+        0.3,
+        opts.seeds[0],
+        &full,
+    )?;
+    t.push(vec![
+        "0.30".into(),
+        "milo".into(),
+        pct(rec.outcome.test_accuracy),
+        f(rec.speedup(), 2),
+    ]);
+    // SSL pruning at 30% and 70%
+    for fraction in [0.3, 0.7] {
+        let rec = runner.run_cell(StrategyKind::SslPrune, fraction, opts.seeds[0], &full)?;
+        t.push(vec![
+            f(fraction, 2),
+            "ssl_prune".into(),
+            pct(rec.outcome.test_accuracy),
+            f(rec.speedup(), 2),
+        ]);
+    }
+    t.save(&opts.out_dir, "table17_ssl_prune")?;
+    Ok(vec![t])
+}
+
+// ===========================================================================
+// App H.2 — proxy-model encoder; App H.3 — pre-processing time share
+// ===========================================================================
+
+pub fn proxy_encoder(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let mut t = Table::new(
+        "App H.2: zero-shot encoder vs trained proxy encoder (CIFAR100-like, 10%)",
+        &["encoder", "test_acc_%", "preprocess_secs"],
+    );
+    let fraction = 0.1;
+    // (a) zero-shot encoder path
+    let runner = opts.runner(rt, &ds);
+    let full = runner.run_full(opts.seeds[0])?;
+    let rec = runner.run_cell(
+        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+        fraction,
+        opts.seeds[0],
+        &full,
+    )?;
+    t.push(vec![
+        "zero_shot".into(),
+        pct(rec.outcome.test_accuracy),
+        f(rec.preprocess_secs, 2),
+    ]);
+    // (b) proxy path: train a proxy model briefly, then use its penultimate
+    // features as the embedding space for the same pipeline.
+    let t0 = std::time::Instant::now();
+    let proxy_cfg = TrainConfig {
+        epochs: (opts.epochs / 4).max(2),
+        fraction: 1.0,
+        eval_every: 0,
+        seed: opts.seeds[0],
+        ..TrainConfig::recipe_for(&ds, (opts.epochs / 4).max(2))
+    };
+    let mut trainer = Trainer::new(rt, &ds, proxy_cfg)?;
+    trainer.run(&mut crate::selection::FullStrategy)?;
+    let mut proxy = trainer.into_model();
+    let all: Vec<usize> = (0..ds.n_train()).collect();
+    let emb = proxy.proxy_features(rt, &ds, &all)?;
+    // same preprocessing, but over proxy embeddings (native backend: the
+    // 128-dim sim artifact also exists, but native keeps the ablation fast)
+    let pre = Preprocessor::with_options(
+        rt,
+        PreprocessOptions {
+            fraction,
+            backend: SimilarityBackend::Native,
+            seed: opts.seeds[0],
+            ..Default::default()
+        },
+    );
+    let kernels = pre.kernels(&ds, &emb)?;
+    let k = (fraction * ds.n_train() as f64).round() as usize;
+    let mut rng = Rng::new(opts.seeds[0] ^ 0x9807_1e);
+    let sge = pre.sge_subsets(&ds, &kernels, SetFunctionKind::GRAPH_CUT_DEFAULT, k, 3, &mut rng);
+    let wre = pre.wre_distribution(&kernels, SetFunctionKind::DisparityMin);
+    let prep_secs = t0.elapsed().as_secs_f64();
+    let mut strat = crate::selection::MiloStrategy::new(sge, wre, DEFAULT_KAPPA);
+    let cfg = TrainConfig {
+        epochs: opts.epochs,
+        fraction,
+        eval_every: 0,
+        seed: opts.seeds[0],
+        ..TrainConfig::recipe_for(&ds, opts.epochs)
+    };
+    let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+    t.push(vec![
+        "proxy_mlp".into(),
+        pct(out.test_accuracy),
+        f(prep_secs, 2),
+    ]);
+    t.save(&opts.out_dir, "h2_proxy_encoder")?;
+    Ok(vec![t])
+}
+
+pub fn preprocess_time(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "App H.3: pre-processing time vs full training time",
+        &["dataset", "preprocess_secs", "full_train_secs", "share_%", "backend"],
+    );
+    for ds_id in [DatasetId::Cifar10Like, DatasetId::Cifar100Like, DatasetId::Glyphs] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let meta = runner.preprocess(0.1, opts.seeds[0])?;
+        let full = runner.run_full(opts.seeds[0])?;
+        t.push(vec![
+            ds.name().into(),
+            f(meta.preprocess_secs, 3),
+            f(full.train_secs, 3),
+            f(100.0 * meta.preprocess_secs / full.train_secs.max(1e-9), 1),
+            format!("{:?}", opts.backend),
+        ]);
+    }
+    t.save(&opts.out_dir, "h3_preprocess_time")?;
+    Ok(vec![t])
+}
+
+// ===========================================================================
+// Fig 9 / App H.1 — specialized-domain datasets with the general encoder
+// ===========================================================================
+
+/// App H.1: MILO vs baselines on the specialized-domain stand-ins
+/// (OrganCMNIST-like, DermaMNIST-like) at 5% and 10%, using the *general*
+/// zero-shot encoder — the paper's claim is that a generic pre-trained
+/// encoder generalizes to unseen domains for subset selection.
+pub fn fig9_specialized(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let kinds = [
+        StrategyKind::Random,
+        StrategyKind::AdaptiveRandom,
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+        StrategyKind::MiloFixed,
+        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+    ];
+    let fractions = [0.05, 0.1];
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::OrganaLike, DatasetId::DermaLike] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let records = runner.run_grid(&kinds, &fractions, &opts.seeds)?;
+        let mut t = Table::new(
+            format!("Fig 9 / App H.1: specialized domain, {}", ds.name()),
+            &GRID_HEADERS,
+        );
+        for (strategy, fraction, acc, sd, secs, full_acc, full_secs) in aggregate(&records) {
+            outcome_row(
+                &mut t, ds.name(), &strategy, fraction, acc, sd, secs, full_acc, full_secs,
+            );
+        }
+        t.save(&opts.out_dir, &format!("fig9_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Fig 11 — encoder-variant ablation
+// ===========================================================================
+
+/// Fig 11: performance of a fixed 5% facility-location subset under each
+/// frozen encoder variant (paper: DINO CLS/mean, ViT, CLIP for vision;
+/// distilroberta vs mpnet for text). Variants are separate AOT artifacts
+/// `encoder_{ds}__{variant}` differing in pooling/depth/width/init.
+pub fn fig11_encoders(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let variants: [Option<&str>; 5] =
+        [None, Some("mean32"), Some("alt32"), Some("wide64"), Some("narrow16")];
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Trec6Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let mut t = Table::new(
+            format!("Fig 11: encoder-variant ablation (5% FL fixed subset, {})", ds.name()),
+            &["encoder", "embed_dim", "test_acc_%"],
+        );
+        for variant in variants {
+            let pre = Preprocessor::with_options(
+                rt,
+                PreprocessOptions {
+                    backend: opts.backend,
+                    encoder_variant: variant.map(str::to_string),
+                    ..Default::default()
+                },
+            );
+            let emb = pre.encode(&ds, Split::Train)?;
+            let e = emb.cols;
+            let kernels = pre.kernels(&ds, &emb)?;
+            let k = (0.05 * ds.n_train() as f64).round() as usize;
+            let subset =
+                pre.fixed_subset(&ds, &kernels, SetFunctionKind::FacilityLocation, k);
+            let name = variant.unwrap_or("cls32");
+            let mut strat = crate::selection::FixedStrategy::new(name, subset);
+            let cfg = TrainConfig {
+                epochs: opts.epochs,
+                fraction: 0.05,
+                eval_every: 0,
+                seed: opts.seeds[0],
+                ..TrainConfig::recipe_for(&ds, opts.epochs)
+            };
+            let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+            t.push(vec![name.into(), e.to_string(), pct(out.test_accuracy)]);
+            if opts.verbose {
+                eprintln!(
+                    "[fig11] {} {name} (e={e}): {:.2}%",
+                    ds.name(),
+                    100.0 * out.test_accuracy
+                );
+            }
+        }
+        t.save(&opts.out_dir, &format!("fig11_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Extensions (paper future work): Gibbs exploration & kernel-free MILO
+// ===========================================================================
+
+/// Extension A (paper §3.1 Eq. 2): exchange-chain sampling from
+/// `P(S) ∝ exp(β·f(S))` vs SGE/WRE — quality (test acc) against
+/// set-function-evaluation cost. Demonstrates the mixing-time wall the
+/// paper cites as its reason to prefer SGE/WRE.
+pub fn ext_gibbs(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let ds = DatasetId::Cifar100Like.generate(opts.seeds[0]);
+    let fraction = 0.05;
+    let k = (fraction * ds.n_train() as f64).round() as usize;
+    let pre = Preprocessor::with_options(
+        rt,
+        PreprocessOptions { fraction, backend: opts.backend, ..Default::default() },
+    );
+    let emb = pre.encode(&ds, Split::Train)?;
+    let kernels = pre.kernels(&ds, &emb)?;
+    let mut t = Table::new(
+        "Ext A: Gibbs exchange chain vs SGE/WRE (5% CIFAR100-like, graph-cut)",
+        &["arm", "beta", "test_acc_%", "evaluations", "acceptance_%"],
+    );
+    // Gibbs arms across temperatures
+    for beta in [0.5f32, 2.0, 8.0] {
+        let mut rng = Rng::new(opts.seeds[0] ^ 0x61BB5);
+        let (subsets, stats) = pre.gibbs_subsets(
+            &ds,
+            &kernels,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            k,
+            beta,
+            3,
+            &mut rng,
+        );
+        let mut strat = SgeStrategy::new(format!("gibbs_b{beta}"), subsets);
+        let cfg = TrainConfig {
+            epochs: opts.epochs,
+            fraction,
+            eval_every: 0,
+            seed: opts.seeds[0],
+            ..TrainConfig::recipe_for(&ds, opts.epochs)
+        };
+        let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+        t.push(vec![
+            "gibbs".into(),
+            f(beta as f64, 1),
+            pct(out.test_accuracy),
+            stats.evaluations.to_string(),
+            f(100.0 * stats.acceptance_rate(), 1),
+        ]);
+        if opts.verbose {
+            eprintln!(
+                "[gibbs] beta={beta}: {:.2}% acc, {} evals, {:.1}% accepted",
+                100.0 * out.test_accuracy,
+                stats.evaluations,
+                100.0 * stats.acceptance_rate()
+            );
+        }
+    }
+    // SGE / WRE reference arms (evaluation cost of stochastic greedy is
+    // n/k·ln(1/ε) gains per pick ⇒ ≈ n·ln(1/ε) per subset)
+    for explore in ["sge", "wre"] {
+        let mut strat = exploration_strategy(
+            rt,
+            &ds,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            explore,
+            fraction,
+            opts.backend,
+            opts.seeds[0],
+        )?;
+        let cfg = TrainConfig {
+            epochs: opts.epochs,
+            fraction,
+            eval_every: 0,
+            seed: opts.seeds[0],
+            ..TrainConfig::recipe_for(&ds, opts.epochs)
+        };
+        let out = Trainer::new(rt, &ds, cfg)?.run(strat.as_mut())?;
+        let evals = (ds.n_train() as f64 * (1.0f64 / 0.01).ln()).round() as u64;
+        t.push(vec![
+            explore.into(),
+            "-".into(),
+            pct(out.test_accuracy),
+            (if explore == "sge" { 3 * evals } else { evals * 2 }).to_string(),
+            "-".into(),
+        ]);
+    }
+    t.save(&opts.out_dir, "ext_gibbs")?;
+    Ok(vec![t])
+}
+
+/// Extension B (conclusion future work): kernel-free feature-based MILO vs
+/// kernel MILO — accuracy and pre-processing memory/time.
+pub fn ext_featurebased(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    let mut tables = Vec::new();
+    for ds_id in [DatasetId::Cifar100Like, DatasetId::Trec6Like] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let mut t = Table::new(
+            format!("Ext B: kernel MILO vs kernel-free feature-based MILO, {}", ds.name()),
+            &["arm", "fraction", "test_acc_%", "prep_secs", "prep_mem_bytes"],
+        );
+        for &fraction in &[0.05, 0.1] {
+            let pre = Preprocessor::with_options(
+                rt,
+                PreprocessOptions {
+                    fraction,
+                    backend: opts.backend,
+                    seed: opts.seeds[0],
+                    ..Default::default()
+                },
+            );
+            // kernel path (memory = Σ_c n_c² floats)
+            let emb = pre.encode(&ds, Split::Train)?;
+            let kernels = pre.kernels(&ds, &emb)?;
+            let kern_mem = kernels.total_elements() * std::mem::size_of::<f32>();
+            let meta_k = pre.run(&ds)?;
+            let feat_mem = crate::submod::FeatureCoverage::memory_bytes(
+                ds.n_train(),
+                2 * emb.cols,
+            );
+            let meta_f = pre.run_featurebased(&ds)?;
+            for (arm, meta, mem) in [
+                ("kernel", &meta_k, kern_mem),
+                ("feature_based", &meta_f, feat_mem),
+            ] {
+                let mut strat = meta.milo_strategy(DEFAULT_KAPPA);
+                let cfg = TrainConfig {
+                    epochs: opts.epochs,
+                    fraction,
+                    eval_every: 0,
+                    seed: opts.seeds[0],
+                    ..TrainConfig::recipe_for(&ds, opts.epochs)
+                };
+                let out = Trainer::new(rt, &ds, cfg)?.run(&mut strat)?;
+                t.push(vec![
+                    arm.into(),
+                    f(fraction, 2),
+                    pct(out.test_accuracy),
+                    f(meta.preprocess_secs, 3),
+                    mem.to_string(),
+                ]);
+                if opts.verbose {
+                    eprintln!(
+                        "[featspace] {} {arm} f={fraction}: {:.2}%, {:.3}s, {} B",
+                        ds.name(),
+                        100.0 * out.test_accuracy,
+                        meta.preprocess_secs,
+                        mem
+                    );
+                }
+            }
+        }
+        t.save(&opts.out_dir, &format!("ext_featurebased_{}", ds.name()))?;
+        tables.push(t);
+    }
+    Ok(tables)
+}
+
+// ===========================================================================
+// Fig 2 — headline summary (aggregates fig6+fig7 outputs)
+// ===========================================================================
+
+pub fn fig2_summary(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
+    // Training side: MILO vs FULL at 10% and 30% on three datasets.
+    let mut t = Table::new(
+        "Fig 2: MILO headline speedup vs accuracy drop",
+        &["task", "dataset", "fraction", "speedup", "acc_drop_%"],
+    );
+    for ds_id in [DatasetId::Cifar10Like, DatasetId::Trec6Like, DatasetId::Glyphs] {
+        let ds = ds_id.generate(opts.seeds[0]);
+        let runner = opts.runner(rt, &ds);
+        let full = runner.run_full(opts.seeds[0])?;
+        for fraction in [0.1, 0.3] {
+            let rec = runner.run_cell(
+                StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+                fraction,
+                opts.seeds[0],
+                &full,
+            )?;
+            t.push(vec![
+                "training".into(),
+                ds.name().into(),
+                f(fraction, 2),
+                f(rec.speedup(), 2),
+                f(rec.degradation_pct(), 2),
+            ]);
+        }
+    }
+    t.save(&opts.out_dir, "fig2_summary")?;
+    Ok(vec![t])
+}

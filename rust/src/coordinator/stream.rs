@@ -1,0 +1,405 @@
+//! Streaming pre-processor: bounded-memory MILO pre-processing with
+//! backpressure.
+//!
+//! The batch [`super::Preprocessor::run`] materializes the full n×E
+//! embedding matrix and *every* class kernel simultaneously — the memory
+//! profile the paper's conclusion flags as MILO's main limitation. This
+//! pipeline instead streams **one class at a time** through three stages:
+//!
+//! ```text
+//!  producer (main thread, owns PJRT)      workers (pure Rust)
+//!  ┌───────────────────────────────┐      ┌──────────────────────────┐
+//!  │ encode class c rows (PJRT)    │ ──▶  │ kernel → SGE picks → WRE │
+//!  │ blocks when `max_inflight`    │ sync │ sweep → fixed picks      │
+//!  │ class payloads are queued     │ chan │ (per-class, independent) │
+//!  └───────────────────────────────┘      └──────────────────────────┘
+//! ```
+//!
+//! Backpressure: the handoff is a `sync_channel(max_inflight)` — when the
+//! workers fall behind, the producer blocks *before* encoding the next
+//! class, so peak memory is O(largest-class embeddings+kernel ×
+//! (max_inflight + workers)) instead of O(n·E + Σ n_c²). Every per-class
+//! output of MILO pre-processing (SGE picks, WRE distribution, fixed
+//! picks) is class-decomposable, so the streamed metadata is structurally
+//! identical to the batch path's.
+//!
+//! Determinism: per-class RNG streams are derived as `seed ⊕ class`, so
+//! results are independent of worker scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::kernel::native_similarity;
+use crate::runtime::Arg;
+use crate::selection::milo::ClassProbs;
+use crate::selection::proportional_allocation;
+use crate::submod::{greedy_maximize, sample_importance, GreedyMode};
+use crate::tensor::Matrix;
+use crate::util::math::taylor_softmax;
+use crate::util::rng::Rng;
+
+use super::{Metadata, Preprocessor};
+
+/// Streaming knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    /// Class payloads allowed in the producer→worker queue at once.
+    pub max_inflight: usize,
+    /// Worker threads building kernels / running greedy.
+    pub workers: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions {
+            max_inflight: 2,
+            workers: crate::util::threads::max_threads().clamp(1, 4),
+        }
+    }
+}
+
+/// Peak-memory accounting for the ablation (`ext` experiments) and tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    /// Max class payloads simultaneously alive (queued + in-processing).
+    pub peak_inflight: usize,
+    /// Peak bytes of embeddings + kernels alive at once.
+    pub peak_bytes: usize,
+    /// Bytes the batch path would have held at its peak (full embedding
+    /// matrix + all class kernels).
+    pub batch_bytes: usize,
+}
+
+/// One class flowing through the pipeline.
+struct ClassPayload {
+    class: usize,
+    indices: Vec<usize>,
+    emb: Matrix,
+    kc: usize,
+    n_sge: usize,
+    seed: u64,
+    sge_fn: crate::submod::SetFunctionKind,
+    wre_fn: crate::submod::SetFunctionKind,
+    epsilon: f64,
+}
+
+/// Per-class results folded back into [`Metadata`].
+struct ClassResult {
+    class: usize,
+    indices: Vec<usize>,
+    sge_picks: Vec<Vec<usize>>, // local indices, one per SGE subset
+    probs: Vec<f64>,
+    fixed_picks: Vec<usize>,
+}
+
+fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> ClassResult {
+    let kern = native_similarity(&p.emb, crate::kernel::SimMetric::Cosine);
+    let mut rng = Rng::new(p.seed);
+    let sge_picks: Vec<Vec<usize>> = (0..p.n_sge)
+        .map(|_| {
+            if p.kc == 0 {
+                return Vec::new();
+            }
+            let mut f = p.sge_fn.build(&kern);
+            greedy_maximize(
+                f.as_mut(),
+                p.kc,
+                GreedyMode::Stochastic { epsilon: p.epsilon },
+                p.sge_fn.lazy_safe(),
+                &mut rng,
+            )
+            .selected
+        })
+        .collect();
+    let probs = {
+        let mut f = p.wre_fn.build(&kern);
+        let gains = sample_importance(f.as_mut(), p.wre_fn.lazy_safe());
+        let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
+        taylor_softmax(&g64)
+    };
+    let fixed_picks = if p.kc == 0 {
+        Vec::new()
+    } else {
+        let mut f = p.wre_fn.build(&kern);
+        greedy_maximize(f.as_mut(), p.kc, GreedyMode::Lazy, p.wre_fn.lazy_safe(), &mut rng)
+            .selected
+    };
+    // account this class's working set against the peak
+    let bytes =
+        (p.emb.rows * p.emb.cols + kern.rows * kern.cols) * std::mem::size_of::<f32>();
+    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+    peak.fetch_max(now, Ordering::SeqCst);
+    live.fetch_sub(bytes, Ordering::SeqCst);
+    ClassResult {
+        class: p.class,
+        indices: p.indices,
+        sge_picks,
+        probs,
+        fixed_picks,
+    }
+}
+
+impl<'a> Preprocessor<'a> {
+    /// Bounded-memory streaming pre-processing. Returns the same
+    /// [`Metadata`] shape as [`Preprocessor::run`] plus pipeline stats.
+    ///
+    /// Peak memory is bounded by `(max_inflight + workers)` class working
+    /// sets instead of the whole dataset — the streaming answer to the
+    /// paper's kernel-memory limitation (its §3.2 class-wise trick bounds
+    /// *each* kernel; this bounds how many are alive at once).
+    pub fn run_streaming(
+        &self,
+        ds: &Dataset,
+        stream: StreamOptions,
+    ) -> Result<(Metadata, StreamStats)> {
+        let t0 = std::time::Instant::now();
+        let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
+        let parts = ds.class_partition();
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
+        let n_sge = self.opts.n_sge_subsets;
+        let c = parts.len();
+
+        let man = self.rt.manifest();
+        let b = man.batch;
+        let d = ds.id.input_dim();
+        let artifact = format!("encoder_{}", ds.name());
+        let e = man
+            .artifacts
+            .get(&artifact)
+            .and_then(|a| a.embed_dim)
+            .unwrap_or(man.embed_dim);
+
+        let inflight = AtomicUsize::new(0);
+        let peak_inflight = AtomicUsize::new(0);
+        let live_bytes = AtomicUsize::new(0);
+        let peak_bytes = AtomicUsize::new(0);
+
+        let (tx, rx) = sync_channel::<ClassPayload>(stream.max_inflight.max(1));
+        let rx = std::sync::Mutex::new(rx);
+        let results = std::sync::Mutex::new(Vec::<ClassResult>::with_capacity(c));
+
+        let mut encode_err: Option<anyhow::Error> = None;
+        std::thread::scope(|scope| {
+            // workers: pure-Rust per-class kernel + greedy
+            for _ in 0..stream.workers.max(1) {
+                scope.spawn(|| loop {
+                    let payload = { rx.lock().unwrap().recv() };
+                    match payload {
+                        Ok(p) => {
+                            let r = process_class(p, &live_bytes, &peak_bytes);
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            results.lock().unwrap().push(r);
+                        }
+                        Err(_) => break, // channel closed: done
+                    }
+                });
+            }
+            // producer (this thread): PJRT-encode one class at a time
+            let mut xbuf = vec![0.0f32; b * d];
+            'outer: for (class, idx) in parts.iter().enumerate() {
+                let x = ds.x(crate::data::Split::Train);
+                let mut emb = Matrix::zeros(idx.len(), e);
+                let mut at = 0usize;
+                while at < idx.len() {
+                    let take = (idx.len() - at).min(b);
+                    for r in 0..take {
+                        xbuf[r * d..(r + 1) * d].copy_from_slice(x.row(idx[at + r]));
+                    }
+                    for r in take..b {
+                        xbuf[r * d..(r + 1) * d].iter_mut().for_each(|v| *v = 0.0);
+                    }
+                    let res = match self.rt.execute(&artifact, &[Arg::F32(&xbuf)]) {
+                        Ok(r) => r,
+                        Err(err) => {
+                            encode_err = Some(err);
+                            break 'outer;
+                        }
+                    };
+                    for r in 0..take {
+                        emb.row_mut(at + r)
+                            .copy_from_slice(&res[0][r * e..(r + 1) * e]);
+                    }
+                    at += take;
+                }
+                let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                peak_inflight.fetch_max(now, Ordering::SeqCst);
+                // send blocks when max_inflight payloads are queued —
+                // the backpressure edge
+                let payload = ClassPayload {
+                    class,
+                    indices: idx.clone(),
+                    emb,
+                    kc: alloc[class],
+                    n_sge,
+                    seed: self.opts.seed ^ 0x57AE ^ (class as u64).wrapping_mul(0x9E37),
+                    sge_fn: self.opts.sge_function,
+                    wre_fn: self.opts.wre_function,
+                    epsilon: self.opts.epsilon,
+                };
+                if tx.send(payload).is_err() {
+                    break;
+                }
+            }
+            drop(tx); // close the channel so workers drain and exit
+        });
+        if let Some(err) = encode_err {
+            return Err(err);
+        }
+
+        // fold per-class results (sorted by class for determinism)
+        let mut results = results.into_inner().unwrap();
+        results.sort_by_key(|r| r.class);
+        let mut sge_subsets = vec![Vec::new(); n_sge];
+        let mut wre_classes = Vec::with_capacity(c);
+        let mut fixed = Vec::new();
+        for r in results {
+            for (si, picks) in r.sge_picks.iter().enumerate() {
+                sge_subsets[si].extend(picks.iter().map(|&l| r.indices[l]));
+            }
+            fixed.extend(r.fixed_picks.iter().map(|&l| r.indices[l]));
+            wre_classes.push(ClassProbs { indices: r.indices, probs: r.probs });
+        }
+        for s in &mut sge_subsets {
+            s.sort_unstable();
+        }
+        fixed.sort_unstable();
+
+        let batch_bytes = (ds.n_train() * e
+            + sizes.iter().map(|&n| n * n).sum::<usize>())
+            * std::mem::size_of::<f32>();
+        let stats = StreamStats {
+            peak_inflight: peak_inflight.load(Ordering::SeqCst),
+            peak_bytes: peak_bytes.load(Ordering::SeqCst),
+            batch_bytes,
+        };
+        Ok((
+            Metadata {
+                dataset: ds.name().to_string(),
+                fraction: self.opts.fraction,
+                sge_subsets,
+                wre_classes,
+                fixed_dm: fixed,
+                preprocess_secs: t0.elapsed().as_secs_f64(),
+            },
+            stats,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PreprocessOptions;
+    use crate::data::DatasetId;
+    use crate::runtime::Runtime;
+
+    fn runtime() -> Option<Runtime> {
+        Runtime::open("artifacts").ok()
+    }
+
+    fn pre<'a>(rt: &'a Runtime, fraction: f64, seed: u64) -> Preprocessor<'a> {
+        Preprocessor::with_options(
+            rt,
+            PreprocessOptions {
+                fraction,
+                seed,
+                backend: crate::kernel::SimilarityBackend::Native,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn streaming_output_is_structurally_identical_to_batch() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(1);
+        let p = pre(&rt, 0.1, 1);
+        let batch = p.run(&ds).unwrap();
+        let (streamed, _) = p.run_streaming(&ds, StreamOptions::default()).unwrap();
+        assert_eq!(streamed.sge_subsets.len(), batch.sge_subsets.len());
+        for (a, b) in streamed.sge_subsets.iter().zip(&batch.sge_subsets) {
+            assert_eq!(a.len(), b.len());
+        }
+        assert_eq!(streamed.fixed_dm.len(), batch.fixed_dm.len());
+        assert_eq!(streamed.wre_classes.len(), batch.wre_classes.len());
+        for (a, b) in streamed.wre_classes.iter().zip(&batch.wre_classes) {
+            assert_eq!(a.indices, b.indices);
+            let sum: f64 = a.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+        // the WRE distributions are deterministic (no rng) → must agree
+        // exactly with the batch path
+        for (a, b) in streamed.wre_classes.iter().zip(&batch.wre_classes) {
+            for (x, y) in a.probs.iter().zip(&b.probs) {
+                assert!((x - y).abs() < 1e-9, "WRE probs diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(2);
+        let p = pre(&rt, 0.05, 2);
+        // different worker counts must not change the output
+        let (a, _) = p
+            .run_streaming(&ds, StreamOptions { max_inflight: 1, workers: 1 })
+            .unwrap();
+        let (b, _) = p
+            .run_streaming(&ds, StreamOptions { max_inflight: 3, workers: 4 })
+            .unwrap();
+        assert_eq!(a.sge_subsets, b.sge_subsets);
+        assert_eq!(a.fixed_dm, b.fixed_dm);
+        for (x, y) in a.wre_classes.iter().zip(&b.wre_classes) {
+            assert_eq!(x.indices, y.indices);
+            assert_eq!(x.probs, y.probs);
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_inflight_payloads() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Cifar10Like.generate(3);
+        let p = pre(&rt, 0.1, 3);
+        let opts = StreamOptions { max_inflight: 2, workers: 2 };
+        let (_, stats) = p.run_streaming(&ds, opts).unwrap();
+        // alive payloads = queued (≤ max_inflight) + claimed by workers
+        // (≤ workers) + the one the producer holds while blocked on send
+        let bound = opts.max_inflight + opts.workers + 1;
+        assert!(
+            stats.peak_inflight <= bound,
+            "peak inflight {} exceeds bound {bound}",
+            stats.peak_inflight,
+        );
+        assert!(stats.peak_bytes > 0);
+        assert!(
+            stats.peak_bytes < stats.batch_bytes,
+            "streaming peak {} should undercut batch {}",
+            stats.peak_bytes,
+            stats.batch_bytes
+        );
+    }
+
+    #[test]
+    fn streamed_metadata_trains_a_model() {
+        let Some(rt) = runtime() else { return };
+        use crate::train::{TrainConfig, Trainer};
+        let ds = DatasetId::Trec6Like.generate(4);
+        let p = pre(&rt, 0.1, 4);
+        let (meta, _) = p.run_streaming(&ds, StreamOptions::default()).unwrap();
+        let mut strat = meta.milo_strategy(1.0 / 6.0);
+        let cfg = TrainConfig {
+            epochs: 6,
+            fraction: 0.1,
+            eval_every: 0,
+            seed: 4,
+            ..TrainConfig::recipe_for(&ds, 6)
+        };
+        let out = Trainer::new(&rt, &ds, cfg).unwrap().run(&mut strat).unwrap();
+        assert!(out.test_accuracy > 1.5 / ds.classes() as f64, "should beat chance");
+    }
+}

@@ -1,0 +1,180 @@
+//! Multi-modal Gaussian class-manifold generator (vision-like stand-in).
+//!
+//! Each class is a mixture of one **dense core mode** (most of the mass,
+//! small covariance — the "easy" samples representation functions pick) and
+//! a few **sparse tail modes** (little mass, wide covariance, placed toward
+//! other classes — the "hard" samples diversity functions pick). A small
+//! label-noise fraction adds genuinely mislabelled points, the hardest of
+//! all. Ground-truth hardness is the sample's Mahalanobis-ish distance from
+//! its class core rescaled to [0, 1], with mislabelled points pinned at 1.
+
+use super::{split_pool, Dataset, DatasetId};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Fraction of each class drawn from the dense core mode.
+const CORE_MASS: f64 = 0.65;
+/// Number of sparse tail modes per class.
+const TAIL_MODES: usize = 3;
+/// Fraction of labels flipped to a random other class.
+const LABEL_NOISE: f64 = 0.02;
+/// Core / tail standard deviations.
+const CORE_STD: f32 = 0.55;
+const TAIL_STD: f32 = 1.25;
+
+pub fn generate(id: DatasetId, rng: Rng, class_sep: f32) -> Dataset {
+    let d = id.input_dim();
+    let c = id.classes();
+    let (tr, va, te) = id.sizes();
+    let total = tr + va + te;
+
+    // Class core centres: random directions scaled to `class_sep`.
+    let mut centres = Matrix::zeros(c, d);
+    {
+        let mut crng = rng.derive(1);
+        for k in 0..c {
+            let row = centres.row_mut(k);
+            let mut norm = 0.0f32;
+            for v in row.iter_mut() {
+                *v = crng.normal_f32(0.0, 1.0);
+                norm += *v * *v;
+            }
+            let norm = norm.sqrt().max(1e-6);
+            for v in row.iter_mut() {
+                *v *= class_sep / norm;
+            }
+        }
+    }
+
+    // Tail-mode centres: interpolations from the class core toward another
+    // class's core (so tails live in the contested regions between
+    // manifolds — the geometrically hard samples).
+    let mut tails = vec![Vec::with_capacity(TAIL_MODES); c];
+    {
+        let mut trng = rng.derive(2);
+        for k in 0..c {
+            for _ in 0..TAIL_MODES {
+                let other = {
+                    let o = trng.below(c.max(2) - 1);
+                    if o >= k {
+                        o + 1
+                    } else {
+                        o
+                    }
+                };
+                let alpha = 0.35 + 0.3 * trng.f32(); // 35–65% toward the rival
+                let mut centre = vec![0.0f32; d];
+                for (j, v) in centre.iter_mut().enumerate() {
+                    *v = centres.at(k, j) * (1.0 - alpha) + centres.at(other, j) * alpha;
+                }
+                tails[k].push(centre);
+            }
+        }
+    }
+
+    let mut x = Matrix::zeros(total, d);
+    let mut y = Vec::with_capacity(total);
+    let mut hardness = Vec::with_capacity(total);
+    let mut srng = rng.derive(3);
+    let mut nrng = rng.derive(4);
+    for i in 0..total {
+        let class = i % c; // balanced
+        let core = srng.chance(CORE_MASS);
+        let (centre, std): (&[f32], f32) = if core {
+            (centres.row(class), CORE_STD)
+        } else {
+            let m = srng.below(TAIL_MODES);
+            (&tails[class][m], TAIL_STD)
+        };
+        let row = x.row_mut(i);
+        let mut dist2 = 0.0f32;
+        for (j, v) in row.iter_mut().enumerate() {
+            let noise = srng.normal_f32(0.0, std);
+            *v = centre[j] + noise;
+            let dc = *v - centres.at(class, j);
+            dist2 += dc * dc;
+        }
+        // label noise: flip to a uniformly random different class
+        let (label, mislabelled) = if nrng.chance(LABEL_NOISE) {
+            let o = nrng.below(c.max(2) - 1);
+            (if o >= class { o + 1 } else { o }, true)
+        } else {
+            (class, false)
+        };
+        y.push(label as u32);
+        // Hardness: distance from own-core, squashed to [0,1]; mislabelled
+        // points are maximally hard.
+        let h = if mislabelled {
+            1.0
+        } else {
+            let scale = CORE_STD * (d as f32).sqrt();
+            (dist2.sqrt() / (3.0 * scale)).min(0.999)
+        };
+        hardness.push(h);
+    }
+
+    let mut prng = rng.derive(5);
+    split_pool(id, x, y, hardness, &mut prng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn centroid_distance(ds: &Dataset, a: u32, b: u32) -> f32 {
+        let d = ds.id.input_dim();
+        let mut ca = vec![0.0f32; d];
+        let mut cb = vec![0.0f32; d];
+        let (mut na, mut nb) = (0usize, 0usize);
+        for (i, &yy) in ds.train_y.iter().enumerate() {
+            if yy == a {
+                for (j, v) in ds.train_x.row(i).iter().enumerate() {
+                    ca[j] += v;
+                }
+                na += 1;
+            } else if yy == b {
+                for (j, v) in ds.train_x.row(i).iter().enumerate() {
+                    cb[j] += v;
+                }
+                nb += 1;
+            }
+        }
+        let mut dist = 0.0f32;
+        for j in 0..d {
+            let diff = ca[j] / na as f32 - cb[j] / nb as f32;
+            dist += diff * diff;
+        }
+        dist.sqrt()
+    }
+
+    #[test]
+    fn classes_are_separated() {
+        let ds = DatasetId::Cifar10Like.generate(7);
+        // any two class centroids should be farther apart than a within-core std
+        let d01 = centroid_distance(&ds, 0, 1);
+        assert!(d01 > 1.0, "centroid distance {d01}");
+    }
+
+    #[test]
+    fn hardness_correlates_with_distance_from_core() {
+        let ds = DatasetId::Cifar10Like.generate(8);
+        // mean hardness of the farthest quartile must exceed the nearest
+        let mut hs: Vec<f32> = ds.hardness.clone();
+        hs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = hs[hs.len() / 4];
+        let q3 = hs[3 * hs.len() / 4];
+        assert!(q3 > q1 + 0.05, "hardness has no spread: q1={q1} q3={q3}");
+    }
+
+    #[test]
+    fn harder_dataset_has_closer_classes() {
+        let easy = DatasetId::Cifar10Like.generate(9);
+        let hard = DatasetId::TinyImagenetLike.generate(9);
+        let de = centroid_distance(&easy, 0, 1);
+        let dh = centroid_distance(&hard, 0, 1);
+        assert!(
+            dh < de * 1.2,
+            "tinyimagenet ({dh}) should not be much more separated than cifar10 ({de})"
+        );
+    }
+}

@@ -1,0 +1,346 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on CIFAR10/100, TinyImageNet, TREC6, IMDB, Rotten
+//! Tomatoes (+ MedMNIST variants in the appendix). Those corpora are not
+//! available in this offline environment, so per the substitution rule in
+//! DESIGN.md §2 we build generators that reproduce the *geometry* MILO's
+//! mechanisms depend on:
+//!
+//! * [`gaussmix`] — multi-modal Gaussian class manifolds with dense "easy"
+//!   cores and sparse "hard" tails (vision-like stand-ins). The density
+//!   gradient is exactly what representation vs diversity set functions
+//!   trade off over (paper Fig. 4, Tables 1-2).
+//! * [`text`] — topic-mixture bag-of-features documents with controlled
+//!   class overlap (text-like stand-ins).
+//! * [`glyphs`] — procedurally *rendered* 16×16 digit images (strokes +
+//!   affine jitter + noise): a real pixel-space workload for the
+//!   end-to-end example, learnable but non-Gaussian.
+//!
+//! Every dataset carries train/val/test splits (the paper's 90/10 split
+//! protocol) and a per-sample ground-truth hardness score from the
+//! generator, used to validate the EL2N analysis of Tables 1-2.
+
+pub mod gaussmix;
+pub mod glyphs;
+pub mod text;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Which split of a dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+    Test,
+}
+
+/// The synthetic dataset registry. Names must match `aot.py::DATASETS`
+/// (the artifact shapes are keyed by them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DatasetId {
+    Cifar10Like,
+    Cifar100Like,
+    TinyImagenetLike,
+    OrganaLike,
+    DermaLike,
+    Trec6Like,
+    ImdbLike,
+    RottenLike,
+    Glyphs,
+}
+
+impl DatasetId {
+    pub const ALL: [DatasetId; 9] = [
+        DatasetId::Cifar10Like,
+        DatasetId::Cifar100Like,
+        DatasetId::TinyImagenetLike,
+        DatasetId::OrganaLike,
+        DatasetId::DermaLike,
+        DatasetId::Trec6Like,
+        DatasetId::ImdbLike,
+        DatasetId::RottenLike,
+        DatasetId::Glyphs,
+    ];
+
+    /// Manifest key (artifact name component).
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetId::Cifar10Like => "cifar10",
+            DatasetId::Cifar100Like => "cifar100",
+            DatasetId::TinyImagenetLike => "tinyimagenet",
+            DatasetId::OrganaLike => "organa",
+            DatasetId::DermaLike => "derma",
+            DatasetId::Trec6Like => "trec6",
+            DatasetId::ImdbLike => "imdb",
+            DatasetId::RottenLike => "rotten",
+            DatasetId::Glyphs => "glyphs",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<DatasetId> {
+        for id in DatasetId::ALL {
+            if id.name() == name {
+                return Ok(id);
+            }
+        }
+        bail!("unknown dataset {name:?}")
+    }
+
+    pub fn input_dim(self) -> usize {
+        match self {
+            DatasetId::Trec6Like | DatasetId::ImdbLike | DatasetId::RottenLike => 48,
+            DatasetId::Glyphs => 256,
+            _ => 64,
+        }
+    }
+
+    pub fn classes(self) -> usize {
+        match self {
+            DatasetId::Cifar10Like | DatasetId::Glyphs => 10,
+            DatasetId::Cifar100Like => 100,
+            DatasetId::TinyImagenetLike => 200,
+            DatasetId::OrganaLike => 11,
+            DatasetId::DermaLike => 7,
+            DatasetId::Trec6Like => 6,
+            DatasetId::ImdbLike | DatasetId::RottenLike => 2,
+        }
+    }
+
+    /// (train, val, test) sizes — scaled-down analogues of the paper's
+    /// datasets, sized so the full experiment grid is tractable on CPU
+    /// while keeping the train set ≫ subset sizes of interest.
+    pub fn sizes(self) -> (usize, usize, usize) {
+        match self {
+            DatasetId::Cifar10Like => (5000, 500, 1000),
+            DatasetId::Cifar100Like => (6000, 600, 1000),
+            DatasetId::TinyImagenetLike => (8000, 800, 1000),
+            DatasetId::OrganaLike => (3300, 330, 660),
+            DatasetId::DermaLike => (2100, 210, 420),
+            DatasetId::Trec6Like => (2400, 300, 600),
+            DatasetId::ImdbLike => (4000, 400, 1000),
+            DatasetId::RottenLike => (2000, 250, 500),
+            DatasetId::Glyphs => (4000, 400, 1000),
+        }
+    }
+
+    /// Generate the dataset deterministically from `seed`.
+    pub fn generate(self, seed: u64) -> Dataset {
+        let rng = Rng::new(seed ^ 0xDA7A_0000).derive_str(self.name());
+        match self {
+            DatasetId::Glyphs => glyphs::generate(self, rng),
+            DatasetId::Trec6Like | DatasetId::ImdbLike | DatasetId::RottenLike => {
+                let overlap = match self {
+                    DatasetId::Trec6Like => 0.35,
+                    DatasetId::ImdbLike => 0.55,
+                    DatasetId::RottenLike => 0.65,
+                    _ => unreachable!(),
+                };
+                text::generate(self, rng, overlap)
+            }
+            _ => {
+                // Vision-like: harder datasets = more classes, tighter
+                // packing (class separation shrinks as class count grows,
+                // mirroring CIFAR100/TinyImageNet being harder than
+                // CIFAR10).
+                let sep = match self {
+                    DatasetId::Cifar10Like => 3.4,
+                    DatasetId::OrganaLike => 3.0,
+                    // DermaMNIST-like: few classes but heavy class
+                    // imbalance-like overlap (skin-lesion classes are
+                    // visually close) — tighter packing than Organ.
+                    DatasetId::DermaLike => 2.6,
+                    DatasetId::Cifar100Like => 2.4,
+                    DatasetId::TinyImagenetLike => 2.1,
+                    _ => 3.0,
+                };
+                gaussmix::generate(self, rng, sep)
+            }
+        }
+    }
+}
+
+/// An in-memory dataset with splits and generator ground truth.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub id: DatasetId,
+    pub train_x: Matrix,
+    pub train_y: Vec<u32>,
+    pub val_x: Matrix,
+    pub val_y: Vec<u32>,
+    pub test_x: Matrix,
+    pub test_y: Vec<u32>,
+    /// Generator ground-truth hardness in [0, 1] per train sample (distance
+    /// from the class core / overlap measure); used to validate the EL2N
+    /// analysis, not visible to any selection strategy.
+    pub hardness: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &'static str {
+        self.id.name()
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn classes(&self) -> usize {
+        self.id.classes()
+    }
+
+    pub fn x(&self, split: Split) -> &Matrix {
+        match split {
+            Split::Train => &self.train_x,
+            Split::Val => &self.val_x,
+            Split::Test => &self.test_x,
+        }
+    }
+
+    pub fn y(&self, split: Split) -> &[u32] {
+        match split {
+            Split::Train => &self.train_y,
+            Split::Val => &self.val_y,
+            Split::Test => &self.test_y,
+        }
+    }
+
+    /// Class-wise partition of the train split: `partition[c]` lists the
+    /// train indices with label `c` (paper §3.2's class-wise trick — the
+    /// kernel memory drops by `c²` and selection parallelizes per class).
+    pub fn class_partition(&self) -> Vec<Vec<usize>> {
+        let mut parts = vec![Vec::new(); self.classes()];
+        for (i, &y) in self.train_y.iter().enumerate() {
+            parts[y as usize].push(i);
+        }
+        parts
+    }
+
+    /// Basic integrity validation (used by generator tests).
+    pub fn validate(&self) -> Result<()> {
+        let d = self.id.input_dim();
+        let (tr, va, te) = self.id.sizes();
+        if self.train_x.rows != tr || self.train_x.cols != d {
+            bail!("train_x shape {}x{}", self.train_x.rows, self.train_x.cols);
+        }
+        if self.train_y.len() != tr || self.val_y.len() != va || self.test_y.len() != te {
+            bail!("split sizes mismatch");
+        }
+        if self.hardness.len() != tr {
+            bail!("hardness length mismatch");
+        }
+        let c = self.classes() as u32;
+        for &y in self.train_y.iter().chain(&self.val_y).chain(&self.test_y) {
+            if y >= c {
+                bail!("label {y} out of range");
+            }
+        }
+        for &h in &self.hardness {
+            if !(0.0..=1.0).contains(&h) {
+                bail!("hardness {h} out of [0,1]");
+            }
+        }
+        if self.train_x.data().iter().any(|v| !v.is_finite()) {
+            bail!("non-finite features");
+        }
+        Ok(())
+    }
+}
+
+/// Helper shared by generators: split a generated pool into train/val/test
+/// by shuffling indices.
+pub(crate) fn split_pool(
+    id: DatasetId,
+    x: Matrix,
+    y: Vec<u32>,
+    hardness: Vec<f32>,
+    rng: &mut Rng,
+) -> Dataset {
+    let (tr, va, te) = id.sizes();
+    assert_eq!(x.rows, tr + va + te, "pool size mismatch");
+    let mut idx: Vec<usize> = (0..x.rows).collect();
+    rng.shuffle(&mut idx);
+    let take = |range: std::ops::Range<usize>| -> (Matrix, Vec<u32>, Vec<f32>) {
+        let ids = &idx[range];
+        let xs = x.gather_rows(ids);
+        let ys = ids.iter().map(|&i| y[i]).collect();
+        let hs = ids.iter().map(|&i| hardness[i]).collect();
+        (xs, ys, hs)
+    };
+    let (train_x, train_y, h) = take(0..tr);
+    let (val_x, val_y, _) = take(tr..tr + va);
+    let (test_x, test_y, _) = take(tr + va..tr + va + te);
+    Dataset {
+        id,
+        train_x,
+        train_y,
+        val_x,
+        val_y,
+        test_x,
+        test_y,
+        hardness: h,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_generators_validate() {
+        for id in DatasetId::ALL {
+            let ds = id.generate(1);
+            ds.validate().unwrap_or_else(|e| panic!("{}: {e}", id.name()));
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = DatasetId::Cifar10Like.generate(5);
+        let b = DatasetId::Cifar10Like.generate(5);
+        let c = DatasetId::Cifar10Like.generate(6);
+        assert_eq!(a.train_x.data(), b.train_x.data());
+        assert_eq!(a.train_y, b.train_y);
+        assert_ne!(a.train_x.data(), c.train_x.data());
+    }
+
+    #[test]
+    fn class_partition_covers_everything() {
+        let ds = DatasetId::Trec6Like.generate(2);
+        let parts = ds.class_partition();
+        assert_eq!(parts.len(), 6);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, ds.n_train());
+        for (c, part) in parts.iter().enumerate() {
+            assert!(!part.is_empty(), "class {c} empty");
+            for &i in part {
+                assert_eq!(ds.train_y[i] as usize, c);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_names() {
+        for id in DatasetId::ALL {
+            assert_eq!(DatasetId::from_name(id.name()).unwrap(), id);
+        }
+        assert!(DatasetId::from_name("nope").is_err());
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let ds = DatasetId::Cifar10Like.generate(3);
+        let parts = ds.class_partition();
+        let expect = ds.n_train() / ds.classes();
+        for p in parts {
+            assert!(
+                p.len() > expect / 2 && p.len() < expect * 2,
+                "class size {} vs expected {}",
+                p.len(),
+                expect
+            );
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Topic-mixture "document" generator (text-like stand-in).
+//!
+//! Each class is a topic: a sparse distribution over `D` vocabulary
+//! dimensions. A document mixes its class topic with a shared background
+//! topic and (with probability given by `overlap`) a rival class's topic —
+//! the knob that makes RottenTomatoes-like sets (high lexical overlap
+//! between sentiments) harder than TREC-like sets (distinct question
+//! types). Features are sqrt-tf normalized counts, the standard
+//! bag-of-words geometry.
+
+use super::{split_pool, Dataset, DatasetId};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Tokens drawn per document.
+const DOC_LEN: usize = 60;
+/// Weight of the shared background topic in every document.
+const BACKGROUND: f64 = 0.35;
+
+pub fn generate(id: DatasetId, rng: Rng, overlap: f64) -> Dataset {
+    let d = id.input_dim();
+    let c = id.classes();
+    let (tr, va, te) = id.sizes();
+    let total = tr + va + te;
+
+    // Topic distributions: class topics concentrate on a random subset of
+    // dims; background is broad.
+    let mut trng = rng.derive(1);
+    let topic_support = d / 3;
+    let mut topics: Vec<Vec<f64>> = Vec::with_capacity(c + 1);
+    for _ in 0..=c {
+        let mut w = vec![0.0f64; d];
+        // background (last entry) covers everything lightly
+        for v in w.iter_mut() {
+            *v = 0.05 + trng.f64() * 0.1;
+        }
+        let dims = trng.sample_indices(d, topic_support);
+        for &j in &dims {
+            w[j] += 0.5 + trng.f64();
+        }
+        let s: f64 = w.iter().sum();
+        for v in w.iter_mut() {
+            *v /= s;
+        }
+        topics.push(w);
+    }
+    let background = topics.pop().unwrap();
+
+    let mut x = Matrix::zeros(total, d);
+    let mut y = Vec::with_capacity(total);
+    let mut hardness = Vec::with_capacity(total);
+    let mut srng = rng.derive(2);
+    for i in 0..total {
+        let class = i % c;
+        // contamination: blend in a rival topic for `overlap`-share of docs
+        let contaminated = srng.chance(overlap);
+        let rival = if contaminated {
+            let o = srng.below(c.max(2) - 1);
+            Some(if o >= class { o + 1 } else { o })
+        } else {
+            None
+        };
+        let mix = srng.range_f64(0.25, 0.55); // rival share when contaminated
+        // token multinomial draw
+        let row = x.row_mut(i);
+        for _ in 0..DOC_LEN {
+            let u = srng.f64();
+            let topic: &[f64] = if u < BACKGROUND {
+                &background
+            } else if let Some(r) = rival {
+                if u < BACKGROUND + (1.0 - BACKGROUND) * mix {
+                    &topics[r]
+                } else {
+                    &topics[class]
+                }
+            } else {
+                &topics[class]
+            };
+            let j = srng.weighted_index(topic);
+            row[j] += 1.0;
+        }
+        // sqrt-tf then L2 normalize
+        let mut norm = 0.0f32;
+        for v in row.iter_mut() {
+            *v = v.sqrt();
+            norm += *v * *v;
+        }
+        let norm = norm.sqrt().max(1e-6);
+        for v in row.iter_mut() {
+            *v /= norm;
+        }
+        y.push(class as u32);
+        hardness.push(if contaminated {
+            (0.5 + mix as f32).min(0.999)
+        } else {
+            0.2 * srng.f32()
+        });
+    }
+
+    let mut prng = rng.derive(3);
+    split_pool(id, x, y, hardness, &mut prng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn docs_are_unit_norm() {
+        let ds = DatasetId::Trec6Like.generate(11);
+        for r in 0..20 {
+            let n: f32 = ds.train_x.row(r).iter().map(|v| v * v).sum();
+            assert!((n - 1.0).abs() < 1e-4, "row {r}: {n}");
+        }
+    }
+
+    #[test]
+    fn class_topics_distinguishable() {
+        // mean within-class cosine > mean across-class cosine
+        let ds = DatasetId::Trec6Like.generate(12);
+        let cos = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum()
+        };
+        let (mut win, mut acr) = (0.0, 0.0);
+        let (mut nw, mut na) = (0usize, 0usize);
+        for i in 0..80 {
+            for j in (i + 1)..80 {
+                let c = cos(ds.train_x.row(i), ds.train_x.row(j));
+                if ds.train_y[i] == ds.train_y[j] {
+                    win += c;
+                    nw += 1;
+                } else {
+                    acr += c;
+                    na += 1;
+                }
+            }
+        }
+        assert!(win / nw as f64 > acr / na as f64 + 0.01);
+    }
+
+    #[test]
+    fn higher_overlap_means_harder() {
+        // rotten (overlap .65) should have more contaminated docs than trec6
+        let trec = DatasetId::Trec6Like.generate(13);
+        let rotten = DatasetId::RottenLike.generate(13);
+        let frac_hard = |ds: &Dataset| {
+            ds.hardness.iter().filter(|&&h| h > 0.5).count() as f64
+                / ds.hardness.len() as f64
+        };
+        assert!(frac_hard(&rotten) > frac_hard(&trec));
+    }
+}

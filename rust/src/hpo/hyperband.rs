@@ -1,0 +1,92 @@
+//! The Hyperband scheduler (Li et al., JMLR 2017): brackets of successive
+//! halving with different exploration/exploitation trade-offs.
+
+/// One rung of successive halving: run every surviving config for
+/// `epochs`, keep the best `keep`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rung {
+    pub epochs: usize,
+    pub keep: usize,
+}
+
+/// One Hyperband bracket.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bracket {
+    pub s: usize,
+    pub n_configs: usize,
+    pub rungs: Vec<Rung>,
+}
+
+/// Standard Hyperband bracket construction for max resource `r_max`
+/// (epochs) and reduction factor `eta`.
+pub fn hyperband_brackets(r_max: usize, eta: usize) -> Vec<Bracket> {
+    assert!(eta >= 2, "eta must be >= 2");
+    assert!(r_max >= 1);
+    let s_max = (r_max as f64).log(eta as f64).floor() as usize;
+    let b = (s_max + 1) as f64;
+    let mut out = Vec::new();
+    for s in (0..=s_max).rev() {
+        let n = ((b / (s as f64 + 1.0)) * (eta as f64).powi(s as i32)).ceil() as usize;
+        let r0 = r_max as f64 * (eta as f64).powi(-(s as i32));
+        let mut rungs = Vec::new();
+        let mut n_i = n;
+        for i in 0..=s {
+            let epochs = (r0 * (eta as f64).powi(i as i32)).round().max(1.0) as usize;
+            let keep = (n_i / eta).max(if i == s { 1 } else { 1 });
+            rungs.push(Rung { epochs: epochs.min(r_max), keep });
+            n_i = keep;
+        }
+        // final rung keeps 1 (the bracket winner)
+        if let Some(last) = rungs.last_mut() {
+            last.keep = 1;
+        }
+        out.push(Bracket { s, n_configs: n, rungs });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_r27_eta3() {
+        let brackets = hyperband_brackets(27, 3);
+        // s_max = 3: four brackets
+        assert_eq!(brackets.len(), 4);
+        // the most exploratory bracket: 27 configs at 1 epoch first rung
+        assert_eq!(brackets[0].s, 3);
+        assert_eq!(brackets[0].n_configs, 27);
+        assert_eq!(brackets[0].rungs[0].epochs, 1);
+        assert_eq!(brackets[0].rungs.last().unwrap().epochs, 27);
+        // the most exploitative bracket: few configs straight at 27 epochs
+        let last = brackets.last().unwrap();
+        assert_eq!(last.s, 0);
+        assert_eq!(last.rungs.len(), 1);
+        assert_eq!(last.rungs[0].epochs, 27);
+    }
+
+    #[test]
+    fn rung_epochs_increase_and_keep_decreases() {
+        for b in hyperband_brackets(81, 3) {
+            for w in b.rungs.windows(2) {
+                assert!(w[1].epochs > w[0].epochs);
+                assert!(w[1].keep <= w[0].keep.max(1));
+            }
+            assert_eq!(b.rungs.last().unwrap().keep, 1);
+        }
+    }
+
+    #[test]
+    fn small_budgets_still_valid() {
+        let b = hyperband_brackets(4, 2);
+        assert!(!b.is_empty());
+        for br in &b {
+            assert!(br.n_configs >= 1);
+            assert!(!br.rungs.is_empty());
+            for r in &br.rungs {
+                assert!(r.epochs >= 1 && r.epochs <= 4);
+            }
+        }
+    }
+}

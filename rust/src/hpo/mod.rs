@@ -1,0 +1,322 @@
+//! Hyper-parameter tuning: search spaces, Random Search, TPE, the
+//! Hyperband scheduler, and the tuner loop that evaluates configurations
+//! with subset-based training (the AUTOMATA protocol the paper adopts,
+//! with MILO replacing the subset selector).
+
+pub mod hyperband;
+pub mod space;
+pub mod tpe;
+
+use anyhow::Result;
+
+pub use hyperband::{hyperband_brackets, Bracket};
+pub use space::{HpoSpace, TrialConfig};
+pub use tpe::TpeSampler;
+
+use crate::coordinator::{Metadata, StrategyKind};
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::train::{LrSchedule, TrainConfig, Trainer};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Search algorithm choice (paper Fig. 7: Random+HB and TPE+HB).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchAlgo {
+    Random,
+    Tpe,
+}
+
+impl SearchAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SearchAlgo::Random => "random_search",
+            SearchAlgo::Tpe => "tpe",
+        }
+    }
+}
+
+/// Tuning-run configuration.
+#[derive(Clone, Debug)]
+pub struct HpoConfig {
+    pub algo: SearchAlgo,
+    /// Subset strategy used inside every configuration evaluation.
+    pub strategy: StrategyKind,
+    pub fraction: f64,
+    /// Hyperband maximum resource (epochs per configuration at full rung).
+    pub max_epochs: usize,
+    /// Hyperband reduction factor η.
+    pub eta: usize,
+    /// Number of configurations sampled per bracket start.
+    pub seed: u64,
+}
+
+impl Default for HpoConfig {
+    fn default() -> Self {
+        HpoConfig {
+            algo: SearchAlgo::Random,
+            strategy: StrategyKind::Milo { kappa: crate::selection::milo::DEFAULT_KAPPA },
+            fraction: 0.1,
+            max_epochs: 27,
+            eta: 3,
+            seed: 1,
+        }
+    }
+}
+
+/// One evaluated trial.
+#[derive(Clone, Debug)]
+pub struct TrialResult {
+    pub config: TrialConfig,
+    pub epochs: usize,
+    pub val_accuracy: f64,
+    pub train_secs: f64,
+}
+
+/// Outcome of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub best: TrialResult,
+    /// Test accuracy of the best configuration retrained at full rung on
+    /// the same subset strategy.
+    pub best_test_accuracy: f64,
+    pub tuning_secs: f64,
+    pub trials: Vec<TrialResult>,
+}
+
+/// The tuner: Hyperband over configurations supplied by the search
+/// algorithm, each evaluated by subset training.
+pub struct Tuner<'a> {
+    pub rt: &'a Runtime,
+    pub ds: &'a Dataset,
+    pub cfg: HpoConfig,
+    pub space: HpoSpace,
+    /// Pre-processing metadata, shared by every configuration evaluation —
+    /// the amortization that makes MILO tuning fast.
+    pub metadata: Option<Metadata>,
+    pub verbose: bool,
+}
+
+impl<'a> Tuner<'a> {
+    pub fn new(rt: &'a Runtime, ds: &'a Dataset, cfg: HpoConfig) -> Tuner<'a> {
+        Tuner {
+            rt,
+            ds,
+            space: HpoSpace::default_for(ds),
+            metadata: None,
+            verbose: false,
+            cfg,
+        }
+    }
+
+    /// Evaluate one configuration for `epochs`; returns val accuracy.
+    pub fn evaluate(
+        &self,
+        config: &TrialConfig,
+        epochs: usize,
+        sw: &mut Stopwatch,
+    ) -> Result<TrialResult> {
+        let schedule = match config.scheduler {
+            space::SchedulerChoice::Cosine => LrSchedule::Cosine { total: epochs },
+            space::SchedulerChoice::StepDecay => LrSchedule::StepDecay {
+                gamma: config.gamma,
+                every: (epochs / 3).max(1),
+            },
+        };
+        let tc = TrainConfig {
+            epochs,
+            fraction: if matches!(self.cfg.strategy, StrategyKind::Full) {
+                1.0
+            } else {
+                self.cfg.fraction
+            },
+            r: 1,
+            hidden: config.hidden,
+            seed: 1, // same init for every trial (paper: same seed across methods)
+            lr: config.lr,
+            momentum: config.momentum,
+            weight_decay: 5e-4,
+            nesterov: config.nesterov,
+            schedule,
+            eval_every: 0,
+            time_budget_secs: None,
+        };
+        let mut strategy = self
+            .cfg
+            .strategy
+            .build(self.metadata.as_ref(), None)?;
+        let mut trainer = Trainer::new(self.rt, self.ds, tc)?;
+        let out = sw.time("trials", || trainer.run(strategy.as_mut()))?;
+        let val = trainer
+            .into_model()
+            .evaluate(self.rt, self.ds, crate::data::Split::Val)?;
+        Ok(TrialResult {
+            config: config.clone(),
+            epochs,
+            val_accuracy: val.accuracy,
+            train_secs: out.train_secs,
+        })
+    }
+
+    /// Run the tuning loop: Hyperband brackets over configs from the
+    /// search algorithm.
+    pub fn run(&mut self) -> Result<TuneOutcome> {
+        let mut sw = Stopwatch::new();
+        let mut rng = Rng::new(self.cfg.seed ^ 0x49_50_4F).derive_str(self.cfg.strategy.name());
+
+        // Pre-processing (once; shared by all trials)
+        if self.cfg.strategy.needs_metadata() && self.metadata.is_none() {
+            let pre = crate::coordinator::Preprocessor::with_options(
+                self.rt,
+                crate::coordinator::PreprocessOptions {
+                    fraction: self.cfg.fraction,
+                    backend: crate::kernel::SimilarityBackend::Native,
+                    seed: self.cfg.seed,
+                    ..Default::default()
+                },
+            );
+            self.metadata = Some(sw.time("preprocess", || pre.run(self.ds))?);
+        }
+
+        let mut tpe = TpeSampler::new(self.space.clone(), 0.25);
+        let mut all: Vec<TrialResult> = Vec::new();
+        for bracket in hyperband_brackets(self.cfg.max_epochs, self.cfg.eta) {
+            // sample bracket.n_configs configurations
+            let mut configs: Vec<TrialConfig> = (0..bracket.n_configs)
+                .map(|_| match self.cfg.algo {
+                    SearchAlgo::Random => self.space.sample(&mut rng),
+                    SearchAlgo::Tpe => tpe.sample(&all, &mut rng),
+                })
+                .collect();
+            // successive halving
+            for rung in &bracket.rungs {
+                let mut results: Vec<TrialResult> = Vec::with_capacity(configs.len());
+                for cfg in &configs {
+                    let r = self.evaluate(cfg, rung.epochs, &mut sw)?;
+                    if self.verbose {
+                        eprintln!(
+                            "[tuner] {} e={} val={:.4} {:?}",
+                            self.cfg.strategy.name(),
+                            rung.epochs,
+                            r.val_accuracy,
+                            cfg
+                        );
+                    }
+                    results.push(r);
+                }
+                results.sort_by(|a, b| b.val_accuracy.partial_cmp(&a.val_accuracy).unwrap());
+                all.extend(results.iter().cloned());
+                configs = results
+                    .iter()
+                    .take(rung.keep)
+                    .map(|r| r.config.clone())
+                    .collect();
+                if configs.is_empty() {
+                    break;
+                }
+            }
+        }
+
+        let best = all
+            .iter()
+            .max_by(|a, b| {
+                (a.val_accuracy, a.epochs)
+                    .partial_cmp(&(b.val_accuracy, b.epochs))
+                    .unwrap()
+            })
+            .expect("no trials ran")
+            .clone();
+
+        // final: retrain best config at max rung, report test accuracy
+        let final_trial = self.evaluate(&best.config, self.cfg.max_epochs, &mut sw)?;
+        let tc_best = final_trial.config.clone();
+        let schedule = match tc_best.scheduler {
+            space::SchedulerChoice::Cosine => LrSchedule::Cosine { total: self.cfg.max_epochs },
+            space::SchedulerChoice::StepDecay => LrSchedule::StepDecay {
+                gamma: tc_best.gamma,
+                every: (self.cfg.max_epochs / 3).max(1),
+            },
+        };
+        let mut strategy = self.cfg.strategy.build(self.metadata.as_ref(), None)?;
+        let tc = TrainConfig {
+            epochs: self.cfg.max_epochs,
+            fraction: if matches!(self.cfg.strategy, StrategyKind::Full) {
+                1.0
+            } else {
+                self.cfg.fraction
+            },
+            hidden: tc_best.hidden,
+            lr: tc_best.lr,
+            momentum: tc_best.momentum,
+            nesterov: tc_best.nesterov,
+            schedule,
+            eval_every: 0,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(self.rt, self.ds, tc)?;
+        sw.time("trials", || trainer.run(strategy.as_mut()))?;
+        let test = trainer
+            .into_model()
+            .evaluate(self.rt, self.ds, crate::data::Split::Test)?;
+
+        Ok(TuneOutcome {
+            best,
+            best_test_accuracy: test.accuracy,
+            tuning_secs: sw.secs("preprocess") + sw.secs("trials"),
+            trials: all,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn tiny_tuning_run_completes() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::RottenLike.generate(1);
+        let cfg = HpoConfig {
+            algo: SearchAlgo::Random,
+            strategy: StrategyKind::AdaptiveRandom,
+            fraction: 0.1,
+            max_epochs: 4,
+            eta: 2,
+            seed: 1,
+        };
+        let mut tuner = Tuner::new(&rt, &ds, cfg);
+        let out = tuner.run().unwrap();
+        assert!(!out.trials.is_empty());
+        assert!(out.best.val_accuracy >= 0.3);
+        assert!(out.best_test_accuracy > 0.3);
+        assert!(out.tuning_secs > 0.0);
+    }
+
+    #[test]
+    fn milo_tuning_amortizes_preprocessing() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::RottenLike.generate(2);
+        let cfg = HpoConfig {
+            algo: SearchAlgo::Tpe,
+            strategy: StrategyKind::Milo { kappa: 1.0 / 6.0 },
+            fraction: 0.1,
+            max_epochs: 4,
+            eta: 2,
+            seed: 2,
+        };
+        let mut tuner = Tuner::new(&rt, &ds, cfg);
+        let out = tuner.run().unwrap();
+        // metadata computed exactly once despite many trials
+        assert!(tuner.metadata.is_some());
+        assert!(out.trials.len() >= 2);
+    }
+}

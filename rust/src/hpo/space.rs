@@ -1,0 +1,140 @@
+//! Hyper-parameter search spaces (the paper's Appendix G spaces, adapted
+//! to the single-LR MLP artifact: our train-step exposes lr / momentum /
+//! nesterov / scheduler+γ as runtime scalars and hidden size as compiled
+//! tiers, so the space covers the same axes — optimizer variant, LR,
+//! schedule, capacity — with one LR group instead of four).
+
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Scheduler choice inside the search space (cosine vs step-decay, as in
+/// Appendix G's image space).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedulerChoice {
+    Cosine,
+    StepDecay,
+}
+
+/// One sampled configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrialConfig {
+    pub lr: f64,
+    pub momentum: f64,
+    pub nesterov: bool,
+    pub scheduler: SchedulerChoice,
+    /// Step-decay γ (ignored by cosine).
+    pub gamma: f64,
+    pub hidden: usize,
+}
+
+/// The search space: continuous LR (log-uniform), momentum, γ, and
+/// categorical nesterov / scheduler / hidden.
+#[derive(Clone, Debug)]
+pub struct HpoSpace {
+    pub lr_range: (f64, f64),
+    pub momentum_range: (f64, f64),
+    pub gamma_range: (f64, f64),
+    pub hidden_choices: Vec<usize>,
+}
+
+impl HpoSpace {
+    /// Default space for a dataset: hidden tiers come from the manifest's
+    /// compiled variants for that dataset (falling back to {128}).
+    pub fn default_for(ds: &Dataset) -> HpoSpace {
+        let hidden_choices = match ds.id {
+            crate::data::DatasetId::Cifar10Like | crate::data::DatasetId::Trec6Like => {
+                vec![64, 128, 256]
+            }
+            _ => vec![128],
+        };
+        HpoSpace {
+            lr_range: (1e-3, 0.3),
+            momentum_range: (0.5, 0.99),
+            gamma_range: (0.05, 0.5),
+            hidden_choices,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> TrialConfig {
+        TrialConfig {
+            lr: rng.log_uniform(self.lr_range.0, self.lr_range.1),
+            momentum: rng.range_f64(self.momentum_range.0, self.momentum_range.1),
+            nesterov: rng.chance(0.5),
+            scheduler: if rng.chance(0.5) {
+                SchedulerChoice::Cosine
+            } else {
+                SchedulerChoice::StepDecay
+            },
+            gamma: rng.range_f64(self.gamma_range.0, self.gamma_range.1),
+            hidden: self.hidden_choices[rng.below(self.hidden_choices.len())],
+        }
+    }
+
+    /// A deterministic grid of `approx` configurations (used by the
+    /// Kendall-τ ordering-retention analysis, which needs the *same* config
+    /// list evaluated under every subset strategy — Table 9's 108-config
+    /// protocol).
+    pub fn grid(&self, approx: usize) -> Vec<TrialConfig> {
+        // factor approx into lr × gamma resolution; categoricals fixed
+        let cat = self.hidden_choices.len() * 2 * 2; // hidden × nesterov × sched
+        let cont = (approx as f64 / cat as f64).ceil().max(1.0) as usize;
+        let lr_steps = cont.clamp(1, 9);
+        let mut out = Vec::new();
+        for li in 0..lr_steps {
+            let t = if lr_steps == 1 { 0.5 } else { li as f64 / (lr_steps - 1) as f64 };
+            let lr = (self.lr_range.0.ln()
+                + t * (self.lr_range.1.ln() - self.lr_range.0.ln()))
+            .exp();
+            for &hidden in &self.hidden_choices {
+                for nesterov in [false, true] {
+                    for scheduler in [SchedulerChoice::Cosine, SchedulerChoice::StepDecay] {
+                        out.push(TrialConfig {
+                            lr,
+                            momentum: 0.9,
+                            nesterov,
+                            scheduler,
+                            gamma: 0.1,
+                            hidden,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    #[test]
+    fn samples_within_bounds() {
+        let ds = DatasetId::Cifar10Like.generate(1);
+        let space = HpoSpace::default_for(&ds);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let c = space.sample(&mut rng);
+            assert!((space.lr_range.0..space.lr_range.1).contains(&c.lr));
+            assert!((space.momentum_range.0..space.momentum_range.1).contains(&c.momentum));
+            assert!(space.hidden_choices.contains(&c.hidden));
+        }
+    }
+
+    #[test]
+    fn grid_has_expected_structure() {
+        let ds = DatasetId::Trec6Like.generate(1);
+        let space = HpoSpace::default_for(&ds);
+        let grid = space.grid(108);
+        // 3 hidden × 2 nesterov × 2 sched = 12 per lr step
+        assert_eq!(grid.len() % 12, 0);
+        assert!(grid.len() >= 100, "grid size {}", grid.len());
+        // deterministic
+        assert_eq!(space.grid(108), grid);
+        // all lr values within the space
+        for c in &grid {
+            assert!(c.lr >= space.lr_range.0 * 0.999 && c.lr <= space.lr_range.1 * 1.001);
+        }
+    }
+}

@@ -1,0 +1,385 @@
+//! Similarity-kernel construction.
+//!
+//! MILO's main memory/compute cost is the `m × m` similarity kernel over
+//! encoder features. We reproduce the paper's **class-wise partitioning
+//! trick** (§3.2): the kernel is built per class (`c` independent
+//! `(m/c)²` blocks, a `c²` memory saving) and each block feeds the
+//! submodular machinery independently.
+//!
+//! Two backends compute each block:
+//!
+//! * [`SimilarityBackend::Pjrt`] — streams `sim_tile × sim_tile` blocks
+//!   through the AOT-compiled **Pallas** similarity artifact (L1). This is
+//!   the architecture path: the same kernel that would run on a TPU's MXU.
+//! * [`SimilarityBackend::Native`] — a cache-blocked Rust implementation,
+//!   used as a cross-check (tests assert both agree) and as the fast path
+//!   for ablation sweeps where PJRT call overhead on tiny classes
+//!   dominates.
+//!
+//! Metrics: rescaled cosine (default), dot-product, and RBF with the
+//! paper's `kw` parameterization (ablation I.2, Tables 11–12).
+
+use anyhow::Result;
+
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::Matrix;
+use crate::util::math::round_up;
+use crate::util::threads::par_map;
+
+/// Similarity metric (paper ablation I.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimMetric {
+    /// `0.5 + 0.5·cos` (paper Eq. 10) — the default everywhere.
+    Cosine,
+    /// Raw dot product, additively shifted to be non-negative.
+    Dot,
+    /// `exp(-‖a−b‖² / (kw · mean_dist))` (paper Eq. 11).
+    Rbf { kw: f64 },
+}
+
+impl SimMetric {
+    pub fn name(&self) -> String {
+        match self {
+            SimMetric::Cosine => "cosine".into(),
+            SimMetric::Dot => "dot".into(),
+            SimMetric::Rbf { kw } => format!("rbf_kw{kw}"),
+        }
+    }
+}
+
+/// Which engine computes the similarity blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimilarityBackend {
+    /// Pallas artifact via PJRT (the L1 path).
+    Pjrt,
+    /// Cache-blocked Rust (cross-check / tiny-class fast path).
+    Native,
+}
+
+/// One class's kernel block.
+#[derive(Clone, Debug)]
+pub struct ClassKernel {
+    /// Train-set indices of this class's samples (row/col order of `sim`).
+    pub indices: Vec<usize>,
+    /// `n_c × n_c` similarity block, values in [0, 1] for cosine/RBF.
+    pub sim: Matrix,
+}
+
+/// The class-partitioned similarity structure MILO stores as metadata.
+#[derive(Clone, Debug)]
+pub struct ClassKernels {
+    pub per_class: Vec<ClassKernel>,
+    pub metric: SimMetric,
+}
+
+impl ClassKernels {
+    /// Total kernel memory in floats (for the §3.2 memory-saving report).
+    pub fn total_elements(&self) -> usize {
+        self.per_class.iter().map(|k| k.sim.rows * k.sim.rows).sum()
+    }
+}
+
+/// Build per-class kernels from embeddings.
+///
+/// `embeddings` is the full train-split embedding matrix (row = sample);
+/// `partition[c]` lists the train indices of class `c` (from
+/// [`crate::data::Dataset::class_partition`]).
+pub fn build_class_kernels(
+    runtime: Option<&Runtime>,
+    embeddings: &Matrix,
+    partition: &[Vec<usize>],
+    metric: SimMetric,
+    backend: SimilarityBackend,
+) -> Result<ClassKernels> {
+    let per_class = match backend {
+        SimilarityBackend::Native => {
+            // pure Rust: parallel over classes
+            let jobs: Vec<(Vec<usize>, Matrix)> = partition
+                .iter()
+                .map(|idx| (idx.clone(), embeddings.gather_rows(idx)))
+                .collect();
+            par_map(jobs, |(indices, z)| ClassKernel {
+                sim: native_similarity(&z, metric),
+                indices,
+            })
+        }
+        SimilarityBackend::Pjrt => {
+            let rt = runtime.ok_or_else(|| {
+                anyhow::anyhow!("Pjrt backend requires a Runtime")
+            })?;
+            let mut out = Vec::with_capacity(partition.len());
+            for idx in partition {
+                let z = embeddings.gather_rows(idx);
+                out.push(ClassKernel {
+                    sim: pjrt_similarity(rt, &z, metric)?,
+                    indices: idx.clone(),
+                });
+            }
+            out
+        }
+    };
+    Ok(ClassKernels { per_class, metric })
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Compute the full pairwise similarity of `z` (n×e) under `metric`.
+pub fn native_similarity(z: &Matrix, metric: SimMetric) -> Matrix {
+    match metric {
+        SimMetric::Cosine => {
+            let mut zn = z.clone();
+            zn.l2_normalize_rows();
+            let mut s = zn.matmul_nt(&zn);
+            for v in s.data_mut().iter_mut() {
+                *v = 0.5 + 0.5 * *v;
+            }
+            s
+        }
+        SimMetric::Dot => {
+            let mut s = z.matmul_nt(z);
+            // additive shift to non-negativity (paper I.2)
+            let min = s.data().iter().cloned().fold(f32::MAX, f32::min);
+            if min < 0.0 {
+                for v in s.data_mut().iter_mut() {
+                    *v -= min;
+                }
+            }
+            s
+        }
+        SimMetric::Rbf { kw } => {
+            let d2 = pairwise_sq_dists(z);
+            let mean = d2.mean().max(1e-12);
+            let gamma = (1.0 / (kw * mean)) as f32;
+            let mut s = d2;
+            for v in s.data_mut().iter_mut() {
+                *v = (-gamma * *v).exp();
+            }
+            s
+        }
+    }
+}
+
+fn pairwise_sq_dists(z: &Matrix) -> Matrix {
+    let n = z.rows;
+    let mut sq = vec![0.0f32; n];
+    for i in 0..n {
+        sq[i] = z.row(i).iter().map(|v| v * v).sum();
+    }
+    let mut d2 = z.matmul_nt(z);
+    for i in 0..n {
+        for j in 0..n {
+            let v = (sq[i] + sq[j] - 2.0 * d2.at(i, j)).max(0.0);
+            d2.set(i, j, v);
+        }
+    }
+    d2
+}
+
+// ---------------------------------------------------------------------------
+// PJRT (Pallas) backend
+// ---------------------------------------------------------------------------
+
+/// Compute the full pairwise similarity by streaming `tile × tile` blocks
+/// through the Pallas artifact; `z` is padded with zero rows to a tile
+/// multiple and the result cropped back. Zero-row padding is safe: cosine
+/// handles zero rows via its norm eps, and padded rows/cols are cropped
+/// before any consumer sees them.
+pub fn pjrt_similarity(rt: &Runtime, z: &Matrix, metric: SimMetric) -> Result<Matrix> {
+    let tile = rt.manifest().sim_tile;
+    let e = z.cols;
+    let n = z.rows;
+    let np = round_up(n.max(1), tile);
+    let mut zp = Matrix::zeros(np, e);
+    zp.write_rows(0, z);
+
+    // RBF gamma must match the native parameterization: mean pairwise
+    // squared distance over the (unpadded) block.
+    let artifact;
+    let mut gamma = 0.0f32;
+    match metric {
+        SimMetric::Cosine => artifact = format!("sim_cosine_e{e}"),
+        SimMetric::Dot => artifact = format!("sim_dot_e{e}"),
+        SimMetric::Rbf { kw } => {
+            artifact = format!("sim_rbf_e{e}");
+            let d2 = pairwise_sq_dists(z);
+            gamma = (1.0 / (kw * d2.mean().max(1e-12))) as f32;
+        }
+    }
+
+    let mut out = Matrix::zeros(np, np);
+    let tiles = np / tile;
+    for bi in 0..tiles {
+        let a = Matrix::from_vec(
+            tile,
+            e,
+            zp.data()[bi * tile * e..(bi + 1) * tile * e].to_vec(),
+        )?;
+        for bj in 0..tiles {
+            let b = Matrix::from_vec(
+                tile,
+                e,
+                zp.data()[bj * tile * e..(bj + 1) * tile * e].to_vec(),
+            )?;
+            let res = match metric {
+                SimMetric::Rbf { .. } => rt.execute(
+                    &artifact,
+                    &[Arg::F32(a.data()), Arg::F32(b.data()), Arg::F32(&[gamma])],
+                )?,
+                _ => rt.execute(&artifact, &[Arg::F32(a.data()), Arg::F32(b.data())])?,
+            };
+            let block = &res[0];
+            for r in 0..tile {
+                let dst_row = bi * tile + r;
+                let dst0 = dst_row * np + bj * tile;
+                out.data_mut()[dst0..dst0 + tile]
+                    .copy_from_slice(&block[r * tile..(r + 1) * tile]);
+            }
+        }
+    }
+    // crop to n×n
+    let mut cropped = Matrix::zeros(n, n);
+    for r in 0..n {
+        cropped.row_mut(r).copy_from_slice(&out.row(r)[..n]);
+    }
+    // dot metric: shift AFTER cropping so padding zeros don't skew the min
+    if matches!(metric, SimMetric::Dot) {
+        let min = cropped.data().iter().cloned().fold(f32::MAX, f32::min);
+        if min < 0.0 {
+            for v in cropped.data_mut().iter_mut() {
+                *v -= min;
+            }
+        }
+    }
+    Ok(cropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_embed(n: usize, e: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, e);
+        for v in m.data_mut().iter_mut() {
+            *v = rng.normal_f32(0.0, 1.0);
+        }
+        m
+    }
+
+    #[test]
+    fn native_cosine_properties() {
+        let z = rand_embed(20, 8, 1);
+        let s = native_similarity(&z, SimMetric::Cosine);
+        for i in 0..20 {
+            assert!((s.at(i, i) - 1.0).abs() < 1e-5);
+            for j in 0..20 {
+                assert!((s.at(i, j) - s.at(j, i)).abs() < 1e-5);
+                assert!((-1e-5..=1.0 + 1e-5).contains(&s.at(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn native_dot_nonnegative() {
+        let z = rand_embed(15, 6, 2);
+        let s = native_similarity(&z, SimMetric::Dot);
+        assert!(s.data().iter().all(|&v| v >= -1e-6));
+    }
+
+    #[test]
+    fn native_rbf_kw_controls_decay() {
+        let z = rand_embed(15, 6, 3);
+        let sharp = native_similarity(&z, SimMetric::Rbf { kw: 0.01 });
+        let smooth = native_similarity(&z, SimMetric::Rbf { kw: 1.0 });
+        // off-diagonal similarities decay faster with small kw
+        let off = |s: &Matrix| {
+            let mut t = 0.0;
+            for i in 0..15 {
+                for j in 0..15 {
+                    if i != j {
+                        t += s.at(i, j) as f64;
+                    }
+                }
+            }
+            t
+        };
+        assert!(off(&sharp) < off(&smooth));
+        for i in 0..15 {
+            assert!((sharp.at(i, i) - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn class_kernels_native_structure() {
+        let z = rand_embed(30, 8, 4);
+        let partition = vec![
+            (0..10).collect::<Vec<_>>(),
+            (10..25).collect(),
+            (25..30).collect(),
+        ];
+        let ck = build_class_kernels(
+            None,
+            &z,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+        )
+        .unwrap();
+        assert_eq!(ck.per_class.len(), 3);
+        assert_eq!(ck.per_class[0].sim.rows, 10);
+        assert_eq!(ck.per_class[1].sim.rows, 15);
+        assert_eq!(ck.per_class[2].sim.rows, 5);
+        // memory saving vs full kernel: 10²+15²+5² ≪ 30²
+        assert!(ck.total_elements() < 30 * 30);
+    }
+
+    #[test]
+    fn pjrt_matches_native_cosine() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::open(dir).unwrap();
+        let e = rt.manifest().embed_dim;
+        let z = rand_embed(70, e, 5); // non-multiple of tile: exercises padding
+        let native = native_similarity(&z, SimMetric::Cosine);
+        let pjrt = pjrt_similarity(&rt, &z, SimMetric::Cosine).unwrap();
+        assert_eq!(pjrt.rows, 70);
+        for i in 0..70 {
+            for j in 0..70 {
+                assert!(
+                    (native.at(i, j) - pjrt.at(i, j)).abs() < 1e-4,
+                    "({i},{j}): native {} pjrt {}",
+                    native.at(i, j),
+                    pjrt.at(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_matches_native_rbf() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::open(dir).unwrap();
+        let e = rt.manifest().embed_dim;
+        let z = rand_embed(40, e, 6);
+        let native = native_similarity(&z, SimMetric::Rbf { kw: 0.1 });
+        let pjrt = pjrt_similarity(&rt, &z, SimMetric::Rbf { kw: 0.1 }).unwrap();
+        for i in 0..40 {
+            for j in 0..40 {
+                assert!(
+                    (native.at(i, j) - pjrt.at(i, j)).abs() < 2e-3,
+                    "({i},{j}): {} vs {}",
+                    native.at(i, j),
+                    pjrt.at(i, j)
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! # milo — model-agnostic subset selection for efficient training & tuning
+//!
+//! A Rust + JAX + Pallas reproduction of *MILO: Model-Agnostic Subset
+//! Selection Framework for Efficient Model Training and Tuning*
+//! (Killamsetty et al., 2023).
+//!
+//! Three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: dataset pipeline, submodular
+//!   maximization (SGE / WRE), the easy-to-hard curriculum, baselines
+//!   (Random, AdaptiveRandom, CraigPB, GradMatchPB, Glister, pruning),
+//!   the trainer, and the hyper-parameter tuner (Random/TPE × Hyperband).
+//! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
+//!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
+//!   text artifacts executed here via PJRT.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the similarity
+//!   kernel and submodular gain reductions, lowered into the same HLO.
+//!
+//! Python never runs on the training path: `make artifacts` once, then
+//! everything in `examples/`, `rust/benches/` and the `milo` CLI is
+//! self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use milo::prelude::*;
+//!
+//! let rt = Runtime::open("artifacts")?;
+//! let ds = DatasetId::Cifar10Like.generate(1);
+//! let meta = Preprocessor::new(&rt).run(&ds)?;         // SGE + WRE metadata
+//! let cfg = TrainConfig { epochs: 40, fraction: 0.1, ..Default::default() };
+//! let mut strategy = meta.milo_strategy(1.0 / 6.0);    // easy-to-hard curriculum
+//! let out = Trainer::new(&rt, &ds, cfg)?.run(&mut strategy)?;
+//! println!("test acc {:.2}%", 100.0 * out.test_accuracy);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod hpo;
+pub mod kernel;
+pub mod report;
+pub mod runtime;
+pub mod selection;
+pub mod submod;
+pub mod tensor;
+pub mod testkit;
+pub mod train;
+pub mod util;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::coordinator::{
+        ExperimentRunner, Metadata, PreprocessOptions, Preprocessor, StrategyKind,
+        TrialRecord,
+    };
+    pub use crate::data::{Dataset, DatasetId, Split};
+    pub use crate::hpo::{HpoConfig, SearchAlgo, Tuner};
+    pub use crate::kernel::{ClassKernels, SimMetric, SimilarityBackend};
+    pub use crate::report::Table;
+    pub use crate::runtime::Runtime;
+    pub use crate::selection::{
+        AdaptiveRandomStrategy, FixedStrategy, FullStrategy, MiloStrategy,
+        RandomStrategy, Strategy,
+    };
+    pub use crate::submod::{GreedyMode, SetFunctionKind};
+    pub use crate::tensor::Matrix;
+    pub use crate::train::{LrSchedule, TrainConfig, TrainOutcome, Trainer};
+    pub use crate::util::rng::Rng;
+}

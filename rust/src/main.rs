@@ -1,0 +1,321 @@
+//! `milo` — the coordinator CLI.
+//!
+//! Subcommands:
+//!   * `preprocess` — run MILO pre-processing for a dataset/fraction and
+//!     store the metadata (subsets + WRE distribution) on disk;
+//!   * `train`      — train a downstream model with any strategy;
+//!   * `tune`       — hyper-parameter tuning (Random/TPE × Hyperband);
+//!   * `repro`      — regenerate a paper table/figure (see DESIGN.md §5);
+//!   * `list`       — datasets / strategies / experiments.
+//!
+//! All randomness flows from `--seed`; artifacts must exist
+//! (`make artifacts`).
+
+use anyhow::{bail, Result};
+
+use milo::coordinator::repro::{self, ReproOptions};
+use milo::coordinator::{PreprocessOptions, Preprocessor, StrategyKind};
+use milo::data::DatasetId;
+use milo::hpo::{HpoConfig, SearchAlgo, Tuner};
+use milo::kernel::SimilarityBackend;
+use milo::runtime::Runtime;
+use milo::util::args::Args;
+
+const USAGE: &str = "\
+milo — model-agnostic subset selection (MILO reproduction)
+
+USAGE:
+  milo preprocess --dataset <name> [--fraction 0.1] [--backend pjrt|native]
+                  [--streaming]    (bounded-memory pipeline w/ backpressure)
+  milo train --dataset <name> --strategy <name> [--fraction 0.1]
+             [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
+  milo tune --dataset <name> --strategy <name> [--algo random|tpe]
+            [--fraction 0.1] [--max-epochs 27]
+  milo repro <experiment>... [--epochs 40] [--seeds 1,2]
+             [--fractions 0.01,0.05,0.1,0.3] [--out results]
+  milo list
+
+EXPERIMENTS (milo repro):
+  fig1 fig2 fig4 fig5a fig5b fig6 fig6gh fig7 fig9 fig11 fig12 fig13 fig14
+  el2n kendall simmetric kappa rsweep wrevariant sslprune proxy preptime
+  gibbs featspace   (extensions: paper future work)
+  quick (= fig4+fig5b+el2n with small budgets)   all
+";
+
+fn main() {
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["verbose", "quiet", "help", "streaming"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+    match args.positional[0].as_str() {
+        "list" => {
+            println!("datasets:");
+            for id in DatasetId::ALL {
+                let (tr, va, te) = id.sizes();
+                println!(
+                    "  {:14} D={:3} C={:3} splits {}/{}/{}",
+                    id.name(),
+                    id.input_dim(),
+                    id.classes(),
+                    tr,
+                    va,
+                    te
+                );
+            }
+            println!(
+                "\nstrategies: milo milo_fixed random adaptive_random full \
+                 full_earlystop craigpb gradmatchpb glister el2n_prune \
+                 ssl_prune sge_variant"
+            );
+            Ok(())
+        }
+        "preprocess" => cmd_preprocess(&args, &artifacts),
+        "train" => cmd_train(&args, &artifacts),
+        "tune" => cmd_tune(&args, &artifacts),
+        "repro" => cmd_repro(&args, &artifacts),
+        other => bail!("unknown subcommand {other:?}\n{USAGE}"),
+    }
+}
+
+fn backend_of(args: &Args) -> Result<SimilarityBackend> {
+    Ok(match args.get_or("backend", "native") {
+        "pjrt" => SimilarityBackend::Pjrt,
+        "native" => SimilarityBackend::Native,
+        other => bail!("unknown backend {other:?}"),
+    })
+}
+
+fn dataset_of(args: &Args) -> Result<(DatasetId, u64)> {
+    let name = args
+        .get("dataset")
+        .ok_or_else(|| anyhow::anyhow!("--dataset is required"))?;
+    let seed = args.get_u64("seed", 1)?;
+    Ok((DatasetId::from_name(name)?, seed))
+}
+
+fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let (id, seed) = dataset_of(args)?;
+    let ds = id.generate(seed);
+    let fraction = args.get_f64("fraction", 0.1)?;
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            fraction,
+            backend: backend_of(args)?,
+            seed,
+            ..Default::default()
+        },
+    );
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results/metadata"));
+    if args.flag("streaming") {
+        // bounded-memory pipeline (see coordinator::stream)
+        let (meta, stats) = pre.run_streaming(
+            &ds,
+            milo::coordinator::stream::StreamOptions::default(),
+        )?;
+        println!(
+            "streamed {} f={fraction}: {} SGE subsets of {}, peak {} B \
+             (batch path would hold {} B), {:.2}s",
+            ds.name(),
+            meta.sge_subsets.len(),
+            meta.sge_subsets.first().map(|s| s.len()).unwrap_or(0),
+            stats.peak_bytes,
+            stats.batch_bytes,
+            meta.preprocess_secs,
+        );
+        std::fs::create_dir_all(&out_dir)?;
+        milo::coordinator::save_metadata(
+            &meta,
+            &out_dir.join(format!("{}_f{}_s{}_stream.json", ds.name(), fraction, seed)),
+        )?;
+        return Ok(());
+    }
+    let meta = pre.run_cached(&ds, out_dir.clone())?;
+    println!(
+        "preprocessed {} f={fraction}: {} SGE subsets of {}, WRE over {} classes, \
+         fixed-DM {}, {:.2}s -> {}",
+        ds.name(),
+        meta.sge_subsets.len(),
+        meta.sge_subsets.first().map(|s| s.len()).unwrap_or(0),
+        meta.wre_classes.len(),
+        meta.fixed_dm.len(),
+        meta.preprocess_secs,
+        out_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let (id, seed) = dataset_of(args)?;
+    let ds = id.generate(seed);
+    let kind = match args.get_or("strategy", "milo") {
+        "milo" => StrategyKind::Milo { kappa: args.get_f64("kappa", 1.0 / 6.0)? },
+        other => StrategyKind::from_name(other)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {other:?}"))?,
+    };
+    let fraction = args.get_f64("fraction", 0.1)?;
+    let epochs = args.get_usize("epochs", 40)?;
+    let mut runner = milo::coordinator::ExperimentRunner::new(&rt, &ds, epochs);
+    runner.backend = backend_of(args)?;
+    runner.verbose = args.flag("verbose");
+    runner.r_expensive = args.get_usize("r", runner.r_expensive)?;
+    let full = runner.run_full(seed)?;
+    let rec = runner.run_cell(kind, fraction, seed, &full)?;
+    println!(
+        "{} {} f={fraction} seed={seed}: test acc {:.2}% (full {:.2}%), \
+         time {:.2}s (full {:.2}s) -> speedup {:.2}x, degradation {:.2}%",
+        ds.name(),
+        kind.name(),
+        100.0 * rec.outcome.test_accuracy,
+        100.0 * rec.full_acc,
+        rec.outcome.train_secs,
+        rec.full_secs,
+        rec.speedup(),
+        rec.degradation_pct(),
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let (id, seed) = dataset_of(args)?;
+    let ds = id.generate(seed);
+    let algo = match args.get_or("algo", "random") {
+        "random" => SearchAlgo::Random,
+        "tpe" => SearchAlgo::Tpe,
+        other => bail!("unknown search algo {other:?}"),
+    };
+    let kind = match args.get_or("strategy", "milo") {
+        "milo" => StrategyKind::Milo { kappa: args.get_f64("kappa", 1.0 / 6.0)? },
+        other => StrategyKind::from_name(other)
+            .ok_or_else(|| anyhow::anyhow!("unknown strategy {other:?}"))?,
+    };
+    let cfg = HpoConfig {
+        algo,
+        strategy: kind,
+        fraction: args.get_f64("fraction", 0.1)?,
+        max_epochs: args.get_usize("max-epochs", 27)?,
+        eta: args.get_usize("eta", 3)?,
+        seed,
+    };
+    let mut tuner = Tuner::new(&rt, &ds, cfg);
+    tuner.verbose = args.flag("verbose");
+    let out = tuner.run()?;
+    println!(
+        "tuned {} with {}/{}: best val {:.2}%, test {:.2}%, {} trials, {:.2}s",
+        ds.name(),
+        algo.name(),
+        kind.name(),
+        100.0 * out.best.val_accuracy,
+        100.0 * out.best_test_accuracy,
+        out.trials.len(),
+        out.tuning_secs,
+    );
+    println!("best config: {:?}", out.best.config);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args, artifacts: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    let mut opts = ReproOptions {
+        epochs: args.get_usize("epochs", 40)?,
+        seeds: args
+            .get_list_f64("seeds", &[1.0])?
+            .into_iter()
+            .map(|s| s as u64)
+            .collect(),
+        fractions: args.get_list_f64("fractions", &[0.01, 0.05, 0.1, 0.3])?,
+        out_dir: args.get_or("out", "results").into(),
+        backend: backend_of(args)?,
+        verbose: !args.flag("quiet"),
+    };
+    let mut experiments: Vec<String> = args.positional[1..].to_vec();
+    if experiments.is_empty() {
+        bail!("repro needs at least one experiment\n{USAGE}");
+    }
+    if experiments.iter().any(|e| e == "all") {
+        experiments = [
+            "fig1", "fig2", "fig4", "fig5a", "fig5b", "fig6", "fig6gh", "fig7",
+            "fig9", "fig11", "fig12", "fig13", "fig14", "el2n", "kendall",
+            "simmetric", "kappa", "rsweep", "wrevariant", "sslprune", "proxy",
+            "preptime",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    }
+    for exp in &experiments {
+        eprintln!(
+            "=== repro {exp} (epochs={}, seeds={:?}) ===",
+            opts.epochs, opts.seeds
+        );
+        let t0 = std::time::Instant::now();
+        let tables = match exp.as_str() {
+            "fig1" => repro::fig1_convergence(&rt, &opts)?,
+            "fig2" => repro::fig2_summary(&rt, &opts)?,
+            "fig4" => repro::fig4_setfunctions(&rt, &opts)?,
+            "fig5a" => repro::fig5a_sge_wre(&rt, &opts)?,
+            "fig5b" => repro::fig5b_early_convergence(&rt, &opts)?,
+            "fig6" => {
+                let datasets = args
+                    .get_list_str(
+                        "datasets",
+                        &["cifar10", "cifar100", "trec6", "rotten", "glyphs"],
+                    )
+                    .iter()
+                    .map(|n| DatasetId::from_name(n))
+                    .collect::<Result<Vec<_>>>()?;
+                repro::fig6_tradeoff(&rt, &opts, &datasets)?
+            }
+            "fig6gh" => repro::fig6gh_convergence(&rt, &opts)?,
+            "fig7" => repro::fig7_hpo(&rt, &opts)?,
+            "fig9" => repro::fig9_specialized(&rt, &opts)?,
+            "fig11" => repro::fig11_encoders(&rt, &opts)?,
+            "fig12" => repro::fig12_sge_gc_vs_fl(&rt, &opts)?,
+            "fig13" => repro::fig13_sge_vs_wre_gc(&rt, &opts)?,
+            "fig14" => repro::fig14_curriculum_convergence(&rt, &opts)?,
+            "el2n" => repro::table_el2n(&rt, &opts)?,
+            "kendall" => {
+                repro::table_kendall(&rt, &opts, args.get_usize("configs", 108)?)?
+            }
+            "simmetric" => repro::table_simmetric(&rt, &opts)?,
+            "kappa" => repro::table_kappa(&rt, &opts)?,
+            "rsweep" => repro::table_r(&rt, &opts)?,
+            "wrevariant" => repro::table_wre_variant(&rt, &opts)?,
+            "sslprune" => repro::table_ssl_prune(&rt, &opts)?,
+            "proxy" => repro::proxy_encoder(&rt, &opts)?,
+            "preptime" => repro::preprocess_time(&rt, &opts)?,
+            "gibbs" => repro::ext_gibbs(&rt, &opts)?,
+            "featspace" => repro::ext_featurebased(&rt, &opts)?,
+            "quick" => {
+                opts.epochs = opts.epochs.min(10);
+                opts.fractions = vec![0.05, 0.3];
+                let mut all = repro::fig4_setfunctions(&rt, &opts)?;
+                all.extend(repro::fig5b_early_convergence(&rt, &opts)?);
+                all.extend(repro::table_el2n(&rt, &opts)?);
+                all
+            }
+            other => bail!("unknown experiment {other:?}\n{USAGE}"),
+        };
+        for t in &tables {
+            println!("{}", t.to_markdown());
+        }
+        eprintln!("=== {exp} done in {:.1}s ===", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Result tables: CSV + markdown writers used by `milo repro`, the benches
+//! and EXPERIMENTS.md generation.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple column-oriented results table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// Push with automatic Display formatting.
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|v| v.to_string()).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&csv_row(&self.headers));
+        for row in &self.rows {
+            out.push_str(&csv_row(row));
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        out
+    }
+
+    /// Write both `{stem}.csv` and `{stem}.md` under `dir`.
+    pub fn save(&self, dir: impl AsRef<Path>, stem: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        Ok(())
+    }
+}
+
+fn csv_row(cells: &[String]) -> String {
+    let escaped: Vec<String> = cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect();
+    format!("{}\n", escaped.join(","))
+}
+
+/// Format a float with fixed precision (helper for table rows).
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Format an accuracy as percent.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}", 100.0 * v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.push(vec!["1".into(), "x,y".into()]);
+        t.push(vec!["2".into(), "q\"z".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.lines().count() >= 5);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("milo_report_test");
+        let mut t = Table::new("t", &["x"]);
+        t.push(vec!["1".into()]);
+        t.save(&dir, "demo").unwrap();
+        assert!(dir.join("demo.csv").exists());
+        assert!(dir.join("demo.md").exists());
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(pct(0.9312), "93.12");
+    }
+}

@@ -1,0 +1,237 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py` (L2
+//! build time) and the Rust coordinator (L3 run time).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Declared input of an artifact (shape + dtype).
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl InputSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub inputs: Vec<InputSpec>,
+    /// kind-specific metadata (dataset, hidden, tile, metric, …)
+    pub dataset: Option<String>,
+    pub hidden: Option<usize>,
+    pub classes: Option<usize>,
+    pub input_dim: Option<usize>,
+    pub metric: Option<String>,
+    pub embed_dim: Option<usize>,
+    pub tile: Option<usize>,
+}
+
+/// Per-dataset shape configuration (must match rust/src/data generators).
+#[derive(Clone, Debug)]
+pub struct DatasetCfg {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub hidden: Vec<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub base_dir: PathBuf,
+    pub batch: usize,
+    pub embed_dim: usize,
+    pub sim_tile: usize,
+    pub param_seeds: Vec<u64>,
+    pub datasets: BTreeMap<String, DatasetCfg>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub digest: String,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, cfg) in v.get("datasets")?.as_obj()? {
+            datasets.insert(
+                name.clone(),
+                DatasetCfg {
+                    input_dim: cfg.get("input_dim")?.as_usize()?,
+                    classes: cfg.get("classes")?.as_usize()?,
+                    hidden: cfg
+                        .get("hidden")?
+                        .as_arr()?
+                        .iter()
+                        .map(|h| h.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let file = dir.join(a.get("file")?.as_str()?);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| -> Result<InputSpec> {
+                    let shape = i
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?;
+                    let dtype = match i.get("dtype")?.as_str()? {
+                        "float32" => DType::F32,
+                        "int32" => DType::I32,
+                        other => bail!("unsupported dtype {other}"),
+                    };
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let get_usize = |k: &str| a.opt(k).and_then(|x| x.as_usize().ok());
+            let get_str = |k: &str| a.opt(k).and_then(|x| x.as_str().ok().map(String::from));
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file,
+                    kind: a.get("kind")?.as_str()?.to_string(),
+                    inputs,
+                    dataset: get_str("dataset"),
+                    hidden: get_usize("hidden"),
+                    classes: get_usize("classes"),
+                    input_dim: get_usize("input_dim"),
+                    metric: get_str("metric"),
+                    embed_dim: get_usize("embed_dim"),
+                    tile: get_usize("tile"),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            base_dir: dir,
+            batch: v.get("batch")?.as_usize()?,
+            embed_dim: v.get("embed_dim")?.as_usize()?,
+            sim_tile: v.get("sim_tile")?.as_usize()?,
+            param_seeds: v
+                .get("param_seeds")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize().map(|x| x as u64))
+                .collect::<Result<Vec<_>>>()?,
+            datasets,
+            artifacts,
+            digest: v.get("digest")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetCfg> {
+        self.datasets
+            .get(name)
+            .ok_or_else(|| anyhow!("dataset {name:?} not in manifest"))
+    }
+
+    /// Path of a serialized He-init parameter blob.
+    pub fn params_path(&self, dataset: &str, hidden: usize, seed: u64) -> PathBuf {
+        self.base_dir
+            .join("params")
+            .join(format!("{dataset}_h{hidden}_s{seed}.bin"))
+    }
+
+    /// MLP parameter shapes for (dataset, hidden): mirrors MlpSpec.param_shapes.
+    pub fn param_shapes(&self, dataset: &str, hidden: usize) -> Result<Vec<Vec<usize>>> {
+        let cfg = self.dataset(dataset)?;
+        if !cfg.hidden.contains(&hidden) {
+            bail!("hidden={hidden} not compiled for {dataset} (have {:?})", cfg.hidden);
+        }
+        let (d, h, c) = (cfg.input_dim, hidden, cfg.classes);
+        Ok(vec![
+            vec![d, h],
+            vec![h],
+            vec![h, h],
+            vec![h],
+            vec![h, c],
+            vec![c],
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests run against the real built artifacts when present.
+    fn manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_built_manifest() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.batch, 128);
+        assert!(m.datasets.contains_key("cifar10"));
+        assert!(m.artifacts.contains_key("encoder_cifar10"));
+        assert!(m.artifacts.contains_key("train_step_cifar10_h128"));
+        assert_eq!(m.param_seeds, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn param_shapes_consistent() {
+        let Some(m) = manifest() else { return };
+        let shapes = m.param_shapes("cifar10", 128).unwrap();
+        assert_eq!(shapes[0], vec![64, 128]);
+        assert_eq!(shapes[5], vec![10]);
+        assert!(m.param_shapes("cifar10", 999).is_err());
+        // blob size matches the declared shapes
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        let blob = std::fs::read(m.params_path("cifar10", 128, 1)).unwrap();
+        assert_eq!(blob.len(), total * 4);
+    }
+
+    #[test]
+    fn train_step_input_arity() {
+        let Some(m) = manifest() else { return };
+        let a = m.artifact("train_step_cifar10_h128").unwrap();
+        // 6 params + 6 momenta + x + y + wt + 4 scalars = 19
+        assert_eq!(a.inputs.len(), 19);
+        assert_eq!(a.inputs[12].shape, vec![128, 64]);
+        assert_eq!(a.inputs[13].dtype, DType::I32);
+    }
+}

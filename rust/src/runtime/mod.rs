@@ -1,0 +1,260 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them.
+//!
+//! One [`Runtime`] per process: a CPU `PjRtClient`, the parsed
+//! [`Manifest`], and a lazy cache of compiled executables keyed by
+//! artifact name. Compilation happens at most once per artifact; execution
+//! is a thin wrapper that packs `f32`/`i32` host slices into literals,
+//! runs, and unpacks the single result tuple (all artifacts are lowered
+//! with `return_tuple=True`).
+//!
+//! The xla crate's handles are raw C pointers (`!Send`), so a `Runtime`
+//! must stay on the thread that created it; the coordinator keeps all PJRT
+//! work on the main thread and fans out only pure-Rust work.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactEntry, DType, DatasetCfg, InputSpec, Manifest};
+
+/// Host-side argument for an artifact execution.
+pub enum Arg<'a> {
+    /// f32 tensor data (row-major, must match the declared input shape).
+    F32(&'a [f32]),
+    /// i32 tensor data.
+    I32(&'a [i32]),
+    /// f32 scalar.
+    Scalar(f32),
+}
+
+/// Execution statistics (for EXPERIMENTS.md §Perf and the perf benches).
+#[derive(Default, Debug, Clone, Copy)]
+pub struct RuntimeStats {
+    pub compilations: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+/// PJRT client + compiled-executable cache over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (usually `"artifacts"`) and create the
+    /// CPU PJRT client.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    /// Ensure an artifact is compiled (warm the cache).
+    pub fn prepare(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let entry = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compilations += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with host arguments; returns the unpacked
+    /// output tuple as f32 vectors (all artifact outputs are f32).
+    pub fn execute(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(name)?;
+        let entry = self.manifest.artifact(name)?;
+        if args.len() != entry.inputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} args, got {}",
+                entry.inputs.len(),
+                args.len()
+            );
+        }
+        // Pack literals according to the declared specs.
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, spec)) in args.iter().zip(&entry.inputs).enumerate() {
+            literals.push(pack_literal(arg, spec).with_context(|| {
+                format!("{name}: packing arg {i} (shape {:?})", spec.shape)
+            })?);
+        }
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("prepared above");
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling {name} result: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Number of artifacts compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+fn pack_literal(arg: &Arg<'_>, spec: &InputSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    match (arg, spec.dtype) {
+        (Arg::Scalar(v), DType::F32) => {
+            if !spec.shape.is_empty() && spec.elements() != 1 {
+                anyhow::bail!("scalar arg for non-scalar input {:?}", spec.shape);
+            }
+            if spec.shape.is_empty() {
+                Ok(xla::Literal::scalar(*v))
+            } else {
+                Ok(xla::Literal::vec1(&[*v])
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?)
+            }
+        }
+        (Arg::F32(data), DType::F32) => {
+            if data.len() != spec.elements() {
+                anyhow::bail!(
+                    "f32 arg has {} elems, input wants {:?}",
+                    data.len(),
+                    spec.shape
+                );
+            }
+            Ok(xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?)
+        }
+        (Arg::I32(data), DType::I32) => {
+            if data.len() != spec.elements() {
+                anyhow::bail!(
+                    "i32 arg has {} elems, input wants {:?}",
+                    data.len(),
+                    spec.shape
+                );
+            }
+            Ok(xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?)
+        }
+        (_, want) => anyhow::bail!("dtype mismatch: input wants {want:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::open(dir).expect("runtime"))
+    }
+
+    #[test]
+    fn encoder_executes_and_normalizes() {
+        let Some(rt) = runtime() else { return };
+        let b = rt.manifest().batch;
+        let d = rt.manifest().dataset("cifar10").unwrap().input_dim;
+        let x: Vec<f32> = (0..b * d).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+        let out = rt.execute("encoder_cifar10", &[Arg::F32(&x)]).unwrap();
+        assert_eq!(out.len(), 1);
+        let e = rt.manifest().embed_dim;
+        assert_eq!(out[0].len(), b * e);
+        // rows are unit-norm
+        for r in 0..b {
+            let n: f32 = out[0][r * e..(r + 1) * e].iter().map(|v| v * v).sum();
+            assert!((n - 1.0).abs() < 1e-4, "row {r} norm^2 {n}");
+        }
+    }
+
+    #[test]
+    fn execute_validates_arity_and_shape() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.execute("encoder_cifar10", &[]).is_err());
+        let bad = vec![0.0f32; 7];
+        assert!(rt.execute("encoder_cifar10", &[Arg::F32(&bad)]).is_err());
+        assert!(rt.execute("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        let Some(rt) = runtime() else { return };
+        let b = rt.manifest().batch;
+        let d = rt.manifest().dataset("trec6").unwrap().input_dim;
+        let x = vec![0.5f32; b * d];
+        rt.execute("encoder_trec6", &[Arg::F32(&x)]).unwrap();
+        let c1 = rt.stats().compilations;
+        rt.execute("encoder_trec6", &[Arg::F32(&x)]).unwrap();
+        assert_eq!(rt.stats().compilations, c1, "second call must hit cache");
+        assert!(rt.stats().executions >= 2);
+    }
+
+    #[test]
+    fn sim_cosine_artifact_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let t = rt.manifest().sim_tile;
+        let e = rt.manifest().embed_dim;
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a: Vec<f32> = (0..t * e).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let out = rt
+            .execute(&format!("sim_cosine_e{e}"), &[Arg::F32(&a), Arg::F32(&a)])
+            .unwrap();
+        let s = &out[0];
+        assert_eq!(s.len(), t * t);
+        // diagonal ~1, range [0,1]
+        for i in 0..t {
+            assert!((s[i * t + i] - 1.0).abs() < 1e-4);
+        }
+        assert!(s.iter().all(|&v| (-1e-4..=1.0 + 1e-4).contains(&v)));
+    }
+}

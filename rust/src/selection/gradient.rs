@@ -1,0 +1,233 @@
+//! Model-dependent gradient-based baselines: CraigPB, GradMatchPB (OMP)
+//! and Glister, in their CORDS per-batch/last-layer form.
+//!
+//! All three re-derive a subset every R epochs from the *current* model's
+//! last-layer gradient embeddings `g_i = softmax(logits_i) − onehot(y_i)`
+//! (the standard per-batch approximation: Killamsetty et al. 2021). The
+//! expensive part — a full forward pass over the train split via the
+//! `meta` artifact — is exactly the cost MILO's pre-processing avoids, and
+//! is what the Fig. 1 wall-clock comparison measures.
+//!
+//! Simplifications vs CORDS, documented in DESIGN.md: GradMatchPB's OMP
+//! weights are used for ranking but the trainer consumes unweighted
+//! subsets; Glister uses the one-step Taylor approximation (no inner
+//! re-evaluation loop). Both preserve the baselines' cost structure and
+//! selection bias, which is what the reproduction compares.
+
+use anyhow::Result;
+
+use super::{proportional_allocation, SelectCtx, Strategy};
+use crate::data::Split;
+use crate::submod::{greedy_maximize, FacilityLocation, GreedyMode};
+use crate::tensor::Matrix;
+use crate::train::model::MetaOutputs;
+
+/// Gather per-class gradient-embedding matrices from a meta pass.
+fn class_gembs(
+    meta: &MetaOutputs,
+    partition: &[Vec<usize>],
+) -> Vec<(Vec<usize>, Matrix)> {
+    let c = meta.classes;
+    partition
+        .iter()
+        .map(|idx| {
+            let mut m = Matrix::zeros(idx.len(), c);
+            for (r, &i) in idx.iter().enumerate() {
+                m.row_mut(r).copy_from_slice(&meta.gemb[i * c..(i + 1) * c]);
+            }
+            (idx.clone(), m)
+        })
+        .collect()
+}
+
+/// CRAIGPB: per class, facility-location maximization over the gradient
+/// similarity kernel — picks medoids whose gradients represent the class's
+/// gradient distribution (Mirzasoleiman et al., per-batch form).
+pub struct CraigPbStrategy;
+
+impl Strategy for CraigPbStrategy {
+    fn name(&self) -> String {
+        "craigpb".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
+        let partition = ctx.ds.class_partition();
+        let sizes: Vec<usize> = partition.iter().map(|p| p.len()).collect();
+        let alloc = proportional_allocation(&sizes, ctx.k);
+        let mut out = Vec::with_capacity(ctx.k);
+        for ((indices, gm), &kc) in class_gembs(&meta, &partition).iter().zip(&alloc) {
+            if kc == 0 {
+                continue;
+            }
+            // gradient similarity kernel (rescaled cosine over gembs)
+            let sim = crate::kernel::native_similarity(gm, crate::kernel::SimMetric::Cosine);
+            let mut f = FacilityLocation::new(&sim);
+            let trace = greedy_maximize(&mut f, kc, GreedyMode::Lazy, true, ctx.rng);
+            out.extend(trace.selected.iter().map(|&local| indices[local]));
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+/// GRAD-MATCHPB: orthogonal-matching-pursuit over per-sample gradient
+/// embeddings, matching the mean full-data gradient per class.
+pub struct GradMatchPbStrategy;
+
+impl GradMatchPbStrategy {
+    /// Non-negative OMP: greedily add the sample whose gradient has the
+    /// largest positive inner product with the residual, then shrink the
+    /// residual by its (clamped-positive) projection.
+    fn omp(gm: &Matrix, k: usize) -> Vec<usize> {
+        let n = gm.rows;
+        let d = gm.cols;
+        let k = k.min(n);
+        // target: mean gradient
+        let mut residual = vec![0.0f32; d];
+        for r in 0..n {
+            for (j, v) in gm.row(r).iter().enumerate() {
+                residual[j] += v / n as f32;
+            }
+        }
+        let mut picked = Vec::with_capacity(k);
+        let mut in_set = vec![false; n];
+        for _ in 0..k {
+            let mut best = usize::MAX;
+            let mut best_score = f32::MIN;
+            for r in 0..n {
+                if in_set[r] {
+                    continue;
+                }
+                let dot: f32 = gm.row(r).iter().zip(&residual).map(|(a, b)| a * b).sum();
+                if dot > best_score {
+                    best_score = dot;
+                    best = r;
+                }
+            }
+            if best == usize::MAX {
+                break;
+            }
+            in_set[best] = true;
+            picked.push(best);
+            // shrink residual by the positive projection onto the pick
+            let g = gm.row(best);
+            let gg: f32 = g.iter().map(|v| v * v).sum();
+            if gg > 1e-12 {
+                let coef = (best_score / gg).max(0.0);
+                for (rv, gv) in residual.iter_mut().zip(g) {
+                    *rv -= coef * gv;
+                }
+            }
+        }
+        picked
+    }
+}
+
+impl Strategy for GradMatchPbStrategy {
+    fn name(&self) -> String {
+        "gradmatchpb".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
+        let partition = ctx.ds.class_partition();
+        let sizes: Vec<usize> = partition.iter().map(|p| p.len()).collect();
+        let alloc = proportional_allocation(&sizes, ctx.k);
+        let mut out = Vec::with_capacity(ctx.k);
+        for ((indices, gm), &kc) in class_gembs(&meta, &partition).iter().zip(&alloc) {
+            for local in Self::omp(gm, kc) {
+                out.push(indices[local]);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+/// GLISTER: one-step generalization-based selection — rank train samples by
+/// the alignment of their gradient with the *validation* gradient (the
+/// first-order Taylor expansion of the bi-level objective), greedily
+/// per class.
+pub struct GlisterStrategy;
+
+impl Strategy for GlisterStrategy {
+    fn name(&self) -> String {
+        "glister".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
+        let val_meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Val, None)?;
+        let c = meta.classes;
+        // mean validation gradient embedding (the descent direction whose
+        // alignment we reward; sign: train gradients that point along the
+        // val gradient reduce val loss when stepped against)
+        let n_val = val_meta.losses.len();
+        let mut vg = vec![0.0f32; c];
+        for r in 0..n_val {
+            for (j, v) in val_meta.gemb[r * c..(r + 1) * c].iter().enumerate() {
+                vg[j] += v / n_val as f32;
+            }
+        }
+        let partition = ctx.ds.class_partition();
+        let sizes: Vec<usize> = partition.iter().map(|p| p.len()).collect();
+        let alloc = proportional_allocation(&sizes, ctx.k);
+        let mut out = Vec::with_capacity(ctx.k);
+        for (idx, &kc) in partition.iter().zip(&alloc) {
+            if kc == 0 {
+                continue;
+            }
+            let mut scored: Vec<(f32, usize)> = idx
+                .iter()
+                .map(|&i| {
+                    let g = &meta.gemb[i * c..(i + 1) * c];
+                    let score: f32 = g.iter().zip(&vg).map(|(a, b)| a * b).sum();
+                    (score, i)
+                })
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            out.extend(scored.into_iter().take(kc).map(|(_, i)| i));
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn omp_selects_gradient_representatives() {
+        // two clusters of gradients; mean points between them, OMP must take
+        // one from the dominant direction first
+        let mut gm = Matrix::zeros(6, 2);
+        for r in 0..4 {
+            gm.row_mut(r).copy_from_slice(&[1.0, 0.0]);
+        }
+        for r in 4..6 {
+            gm.row_mut(r).copy_from_slice(&[0.0, 1.0]);
+        }
+        let picks = GradMatchPbStrategy::omp(&gm, 2);
+        assert_eq!(picks.len(), 2);
+        // first pick from the dominant (4-member) direction
+        assert!(picks[0] < 4, "{picks:?}");
+        // second pick covers the other direction (residual now points there)
+        assert!(picks[1] >= 4, "{picks:?}");
+    }
+
+    #[test]
+    fn omp_handles_k_ge_n() {
+        let gm = Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]).unwrap();
+        let picks = GradMatchPbStrategy::omp(&gm, 10);
+        assert_eq!(picks.len(), 3);
+    }
+
+    #[test]
+    fn omp_zero_gradients_terminate() {
+        let gm = Matrix::zeros(4, 3);
+        let picks = GradMatchPbStrategy::omp(&gm, 2);
+        assert_eq!(picks.len(), 2); // ties resolve, no infinite loop
+    }
+}

@@ -1,0 +1,299 @@
+//! MILO's exploration strategies: SGE, WRE, the easy-to-hard curriculum,
+//! and the "SGE variant with decaying greedy fraction" ablation (I.7).
+//!
+//! These strategies are *thin samplers over pre-processed metadata*: all
+//! submodular work happened once in [`crate::coordinator::Preprocessor`]
+//! (the whole point of the paper), so `select` here costs the same as
+//! random sampling.
+
+use anyhow::{ensure, Result};
+
+use super::{proportional_allocation, SelectCtx, Strategy};
+use crate::submod::weighted_sample_without_replacement;
+
+/// Per-class WRE sampling state: class member indices (into the train set)
+/// and their Taylor-softmax importance probabilities.
+#[derive(Clone, Debug)]
+pub struct ClassProbs {
+    pub indices: Vec<usize>,
+    pub probs: Vec<f64>,
+}
+
+impl ClassProbs {
+    /// Draw `k` members of this class without replacement, weighted.
+    pub fn sample(&self, k: usize, rng: &mut crate::util::rng::Rng) -> Vec<usize> {
+        weighted_sample_without_replacement(&self.probs, k, rng)
+            .into_iter()
+            .map(|local| self.indices[local])
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SGE: cycle through n pre-selected stochastic-greedy subsets
+// ---------------------------------------------------------------------------
+
+/// Stochastic-Greedy Exploration (paper §3.1.1): the preprocessor selected
+/// `n` near-optimal subsets (stochastic greedy, Algorithm 2); training
+/// cycles through them, switching every R epochs.
+pub struct SgeStrategy {
+    label: String,
+    subsets: Vec<Vec<usize>>,
+    cursor: usize,
+}
+
+impl SgeStrategy {
+    pub fn new(label: impl Into<String>, subsets: Vec<Vec<usize>>) -> Self {
+        assert!(!subsets.is_empty(), "SGE needs at least one subset");
+        SgeStrategy { label: label.into(), subsets, cursor: 0 }
+    }
+}
+
+impl Strategy for SgeStrategy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn select(&mut self, _ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        let s = self.subsets[self.cursor % self.subsets.len()].clone();
+        self.cursor += 1;
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WRE: weighted random exploration from the importance distribution
+// ---------------------------------------------------------------------------
+
+/// Weighted Random Exploration (paper §3.1.2): sample a fresh subset from
+/// the Taylor-softmax importance distribution every R epochs, class-wise
+/// without replacement.
+pub struct WreStrategy {
+    label: String,
+    classes: Vec<ClassProbs>,
+}
+
+impl WreStrategy {
+    pub fn new(label: impl Into<String>, classes: Vec<ClassProbs>) -> Self {
+        WreStrategy { label: label.into(), classes }
+    }
+
+    pub fn sample_k(&self, k: usize, rng: &mut crate::util::rng::Rng) -> Vec<usize> {
+        let sizes: Vec<usize> = self.classes.iter().map(|c| c.len()).collect();
+        let alloc = proportional_allocation(&sizes, k);
+        let mut out = Vec::with_capacity(k);
+        for (cls, &kc) in self.classes.iter().zip(&alloc) {
+            out.extend(cls.sample(kc, rng));
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+impl Strategy for WreStrategy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        Ok(self.sample_k(ctx.k, ctx.rng))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MILO: the easy-to-hard curriculum (SGE/graph-cut -> WRE/disparity-min)
+// ---------------------------------------------------------------------------
+
+/// The full MILO strategy (paper Algorithm 1): train the first `κ·T`
+/// epochs on SGE subsets selected with graph-cut (easy/representative),
+/// then switch to WRE sampling from the disparity-min importance
+/// distribution (hard/diverse) for the rest.
+pub struct MiloStrategy {
+    /// Pre-selected SGE (graph-cut) subsets.
+    sge: SgeStrategy,
+    /// WRE (disparity-min) class distributions.
+    wre: WreStrategy,
+    /// Fraction of epochs on the easy phase; the paper tunes κ = 1/6.
+    pub kappa: f64,
+}
+
+pub const DEFAULT_KAPPA: f64 = 1.0 / 6.0;
+
+impl MiloStrategy {
+    pub fn new(sge_subsets: Vec<Vec<usize>>, wre_classes: Vec<ClassProbs>, kappa: f64) -> Self {
+        MiloStrategy {
+            sge: SgeStrategy::new("milo_sge_phase", sge_subsets),
+            wre: WreStrategy::new("milo_wre_phase", wre_classes),
+            kappa,
+        }
+    }
+
+    /// Epoch at which the curriculum flips from SGE to WRE.
+    pub fn switch_epoch(&self, total_epochs: usize) -> usize {
+        (self.kappa * total_epochs as f64).round() as usize
+    }
+
+    pub fn in_sge_phase(&self, epoch: usize, total_epochs: usize) -> bool {
+        epoch < self.switch_epoch(total_epochs)
+    }
+}
+
+impl Strategy for MiloStrategy {
+    fn name(&self) -> String {
+        "milo".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        ensure!(ctx.total_epochs > 0, "total_epochs must be set");
+        if self.in_sge_phase(ctx.epoch, ctx.total_epochs) {
+            self.sge.select(ctx)
+        } else {
+            self.wre.select(ctx)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SGE-variant ablation (paper I.7)
+// ---------------------------------------------------------------------------
+
+/// The "more exploration" SGE variant of ablation I.7: a fraction of the
+/// subset comes from an SGE pick, the rest uniformly at random, with the
+/// SGE share decaying from 1 to 0 over training on a cosine schedule.
+pub struct SgeVariantStrategy {
+    sge: SgeStrategy,
+}
+
+impl SgeVariantStrategy {
+    pub fn new(sge_subsets: Vec<Vec<usize>>) -> Self {
+        SgeVariantStrategy { sge: SgeStrategy::new("sge_variant_inner", sge_subsets) }
+    }
+}
+
+impl Strategy for SgeVariantStrategy {
+    fn name(&self) -> String {
+        "sge_variant".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        let t = ctx.epoch as f64 / ctx.total_epochs.max(1) as f64;
+        // cosine decay of the greedy share from 1 to 0
+        let share = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+        let k_greedy = ((ctx.k as f64) * share).round() as usize;
+        let base = self.sge.select(ctx)?;
+        let mut out: Vec<usize> = base.into_iter().take(k_greedy).collect();
+        // fill the remainder with uniform random picks not already present
+        let mut in_set = vec![false; ctx.ds.n_train()];
+        for &i in &out {
+            in_set[i] = true;
+        }
+        while out.len() < ctx.k {
+            let j = ctx.rng.below(ctx.ds.n_train());
+            if !in_set[j] {
+                in_set[j] = true;
+                out.push(j);
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mk_classes(n_per: usize, classes: usize) -> Vec<ClassProbs> {
+        (0..classes)
+            .map(|c| {
+                let indices: Vec<usize> = (0..n_per).map(|i| c * n_per + i).collect();
+                // heavier weight on the first element of every class
+                let mut probs = vec![1.0; n_per];
+                probs[0] = 50.0;
+                ClassProbs { indices, probs }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn wre_sample_is_class_proportional() {
+        let wre = WreStrategy::new("t", mk_classes(100, 4));
+        let mut rng = Rng::new(1);
+        let s = wre.sample_k(40, &mut rng);
+        assert_eq!(s.len(), 40);
+        // 10 per class
+        for c in 0..4 {
+            let count = s.iter().filter(|&&i| i / 100 == c).count();
+            assert_eq!(count, 10, "class {c}");
+        }
+        // no duplicates
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d.len(), 40);
+    }
+
+    #[test]
+    fn wre_prefers_heavy_items() {
+        let wre = WreStrategy::new("t", mk_classes(50, 2));
+        let mut rng = Rng::new(2);
+        let mut hits = 0;
+        for _ in 0..200 {
+            let s = wre.sample_k(10, &mut rng);
+            if s.contains(&0) {
+                hits += 1;
+            }
+        }
+        // uniform would hit item 0 in ~5/50 = 10% of draws
+        assert!(hits > 100, "heavy item picked {hits}/200");
+    }
+
+    #[test]
+    fn sge_cycles_subsets() {
+        let subsets = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
+        let mut s = SgeStrategy::new("t", subsets.clone());
+        // dummy ctx pieces are unused by SgeStrategy::select
+        let ds = crate::data::DatasetId::Trec6Like.generate(1);
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = crate::runtime::Runtime::open(dir).unwrap();
+        let mut model = crate::train::model::MlpModel::load(&rt, "trec6", 128, 1).unwrap();
+        let mut rng = Rng::new(0);
+        for i in 0..6 {
+            let mut ctx = SelectCtx {
+                rt: &rt,
+                ds: &ds,
+                model: &mut model,
+                epoch: i,
+                total_epochs: 6,
+                k: 2,
+                rng: &mut rng,
+            };
+            let got = s.select(&mut ctx).unwrap();
+            assert_eq!(got, subsets[i % 3]);
+        }
+    }
+
+    #[test]
+    fn milo_phase_switch() {
+        let m = MiloStrategy::new(vec![vec![0]], mk_classes(10, 2), 1.0 / 6.0);
+        assert_eq!(m.switch_epoch(60), 10);
+        assert!(m.in_sge_phase(9, 60));
+        assert!(!m.in_sge_phase(10, 60));
+        // kappa = 0 -> pure WRE; kappa = 1 -> pure SGE
+        let pure_wre = MiloStrategy::new(vec![vec![0]], mk_classes(10, 2), 0.0);
+        assert!(!pure_wre.in_sge_phase(0, 60));
+        let pure_sge = MiloStrategy::new(vec![vec![0]], mk_classes(10, 2), 1.0);
+        assert!(pure_sge.in_sge_phase(59, 60));
+    }
+}

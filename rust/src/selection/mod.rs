@@ -1,0 +1,234 @@
+//! Subset-selection strategies: MILO and every baseline the paper
+//! compares against (§4 "Subset Selection Baselines").
+//!
+//! A [`Strategy`] is asked for a fresh subset every `R` epochs by the
+//! [`crate::train::Trainer`]; the time it spends inside [`Strategy::select`]
+//! is accounted separately as *selection time* — the axis on which MILO's
+//! model-agnostic pre-processing beats the model-dependent baselines
+//! (paper Fig. 1).
+//!
+//! | strategy           | module          | model-dependent? |
+//! |--------------------|-----------------|------------------|
+//! | MILO / MILO(Fixed) | [`milo`]        | no (pre-processed metadata) |
+//! | Random / Adaptive  | here            | no               |
+//! | Full / Early-stop  | here            | no               |
+//! | CraigPB            | [`gradient`]    | yes (per-R gradient pass) |
+//! | GradMatchPB (OMP)  | [`gradient`]    | yes              |
+//! | Glister            | [`gradient`]    | yes (+ val gradients) |
+//! | EL2N / SSL pruning | [`pruning`]     | EL2N: yes; SSL: no |
+
+pub mod gradient;
+pub mod milo;
+pub mod pruning;
+
+use anyhow::Result;
+
+pub use gradient::{CraigPbStrategy, GlisterStrategy, GradMatchPbStrategy};
+pub use milo::{MiloStrategy, SgeStrategy, SgeVariantStrategy, WreStrategy};
+pub use pruning::{El2nPruneStrategy, SslPruneStrategy};
+
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::train::model::MlpModel;
+use crate::util::rng::Rng;
+
+/// Everything a strategy may consult when (re)selecting a subset. The
+/// model reference is what makes the gradient-based baselines
+/// *model-dependent*; MILO never touches it.
+pub struct SelectCtx<'a> {
+    pub rt: &'a Runtime,
+    pub ds: &'a Dataset,
+    pub model: &'a mut MlpModel,
+    /// Current epoch (0-based).
+    pub epoch: usize,
+    /// Total epochs of this run (curricula need the horizon).
+    pub total_epochs: usize,
+    /// Requested subset size.
+    pub k: usize,
+    pub rng: &'a mut Rng,
+}
+
+/// A subset-selection strategy.
+pub trait Strategy {
+    /// Short name for reports (matches the paper's tables).
+    fn name(&self) -> String;
+
+    /// Produce the train-set indices to use from this epoch on.
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>>;
+
+    /// Whether a new subset should be requested every R epochs (false for
+    /// fixed-subset strategies, which are selected once).
+    fn is_adaptive(&self) -> bool {
+        true
+    }
+}
+
+/// Allocate `k` slots across classes proportionally to class sizes
+/// (largest-remainder rounding; every non-empty class keeps ≥ 0 and the
+/// total is exactly `min(k, n)`).
+pub fn proportional_allocation(class_sizes: &[usize], k: usize) -> Vec<usize> {
+    let n: usize = class_sizes.iter().sum();
+    let k = k.min(n);
+    if n == 0 || k == 0 {
+        return vec![0; class_sizes.len()];
+    }
+    let mut alloc: Vec<usize> = Vec::with_capacity(class_sizes.len());
+    let mut remainders: Vec<(f64, usize)> = Vec::with_capacity(class_sizes.len());
+    let mut used = 0usize;
+    for (c, &sz) in class_sizes.iter().enumerate() {
+        let exact = k as f64 * sz as f64 / n as f64;
+        let base = (exact.floor() as usize).min(sz);
+        alloc.push(base);
+        used += base;
+        remainders.push((exact - base as f64, c));
+    }
+    // distribute the remainder to the largest fractional parts with capacity
+    remainders.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut left = k - used;
+    let mut i = 0;
+    while left > 0 {
+        let (_, c) = remainders[i % remainders.len()];
+        if alloc[c] < class_sizes[c] {
+            alloc[c] += 1;
+            left -= 1;
+        }
+        i += 1;
+        // safety: if all classes full we would loop forever, but k ≤ n
+        if i > remainders.len() * (k + 1) {
+            break;
+        }
+    }
+    alloc
+}
+
+// ---------------------------------------------------------------------------
+// Model-agnostic baselines
+// ---------------------------------------------------------------------------
+
+/// RANDOM: one random subset, fixed for the whole run.
+pub struct RandomStrategy {
+    cached: Option<Vec<usize>>,
+}
+
+impl RandomStrategy {
+    pub fn new() -> Self {
+        RandomStrategy { cached: None }
+    }
+}
+
+impl Default for RandomStrategy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Strategy for RandomStrategy {
+    fn name(&self) -> String {
+        "random".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        if self.cached.is_none() {
+            self.cached = Some(ctx.rng.sample_indices(ctx.ds.n_train(), ctx.k));
+        }
+        Ok(self.cached.clone().unwrap())
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+/// ADAPTIVE-RANDOM: a fresh random subset every R epochs — the strong
+/// simple baseline the paper keeps emphasizing.
+pub struct AdaptiveRandomStrategy;
+
+impl Strategy for AdaptiveRandomStrategy {
+    fn name(&self) -> String {
+        "adaptive_random".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        Ok(ctx.rng.sample_indices(ctx.ds.n_train(), ctx.k))
+    }
+}
+
+/// FULL: the entire training set (the accuracy skyline).
+pub struct FullStrategy;
+
+impl Strategy for FullStrategy {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        Ok((0..ctx.ds.n_train()).collect())
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+/// A fixed, externally chosen subset (MILO(Fixed), EL2N-pruned sets, the
+/// self-supervised-pruning baseline, …).
+pub struct FixedStrategy {
+    label: String,
+    indices: Vec<usize>,
+}
+
+impl FixedStrategy {
+    pub fn new(label: impl Into<String>, indices: Vec<usize>) -> Self {
+        FixedStrategy { label: label.into(), indices }
+    }
+}
+
+impl Strategy for FixedStrategy {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn select(&mut self, _ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        Ok(self.indices.clone())
+    }
+
+    fn is_adaptive(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn proportional_allocation_exact_total() {
+        let sizes = [50, 30, 20];
+        for k in [0, 1, 7, 10, 33, 100] {
+            let a = proportional_allocation(&sizes, k);
+            assert_eq!(a.iter().sum::<usize>(), k.min(100), "k={k} -> {a:?}");
+            for (i, &x) in a.iter().enumerate() {
+                assert!(x <= sizes[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn proportional_allocation_proportional() {
+        let a = proportional_allocation(&[500, 300, 200], 100);
+        assert_eq!(a, vec![50, 30, 20]);
+    }
+
+    #[test]
+    fn proportional_allocation_handles_tiny_classes() {
+        let a = proportional_allocation(&[1, 1, 998], 500);
+        assert_eq!(a.iter().sum::<usize>(), 500);
+        assert!(a[2] >= 498);
+    }
+
+    #[test]
+    fn proportional_allocation_empty() {
+        assert_eq!(proportional_allocation(&[], 10), Vec::<usize>::new());
+        assert_eq!(proportional_allocation(&[0, 0], 10), vec![0, 0]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Feature-based submodular functions — no similarity kernel required.
+//!
+//! The paper's conclusion names its main open challenge ("the requirement
+//! for a large amount of memory to construct similarity kernels, even with
+//! class-wise partitioning") and proposes "feature-based submodular
+//! functions" as future work. We implement that extension:
+//!
+//! ```text
+//! f(S) = Σ_d w_d · g( Σ_{i∈S} φ_{id} )
+//! ```
+//!
+//! with `g` concave (√· here) and `φ ≥ 0` per-sample feature activations —
+//! the classic *feature-based coverage* family (Kirchhoff & Bilmes 2014,
+//! the paper's ref [32] for data selection in MT). The function is
+//! monotone submodular for any concave `g`, so the same greedy machinery
+//! (and the 1−1/e guarantee) applies — but the memory footprint is
+//! O(n·E) for the feature matrix instead of O(n²) for the kernel, and a
+//! greedy sweep is O(n·E) per pick with incremental column sums.
+//!
+//! Non-negative features come from the frozen encoder via a fixed random
+//! rotation followed by a split into positive/negative parts (`[z⁺; z⁻]`),
+//! which preserves cosine geometry (⟨φ_i, φ_j⟩ recovers a shifted cosine)
+//! while making every activation a coverage weight.
+
+use crate::tensor::Matrix;
+
+use super::functions::SetFunction;
+
+/// Turn (possibly signed, L2-normalized) embeddings into non-negative
+/// coverage features by splitting into positive and negative parts:
+/// `z[n,E] → φ[n,2E]`, `φ = [max(z,0), max(−z,0)]`.
+pub fn coverage_features(z: &Matrix) -> Matrix {
+    let (n, e) = (z.rows, z.cols);
+    let mut phi = Matrix::zeros(n, 2 * e);
+    for i in 0..n {
+        let src = z.row(i);
+        let dst = phi.row_mut(i);
+        for d in 0..e {
+            let v = src[d];
+            if v >= 0.0 {
+                dst[d] = v;
+            } else {
+                dst[e + d] = -v;
+            }
+        }
+    }
+    phi
+}
+
+/// Feature-based coverage function with `g = sqrt` and uniform weights.
+///
+/// Implements [`SetFunction`], so [`super::greedy_maximize`] and
+/// [`super::sample_importance`] work unchanged — this is what lets the
+/// whole MILO pipeline (SGE subsets, WRE distributions, fixed subsets)
+/// run kernel-free.
+pub struct FeatureCoverage<'a> {
+    phi: &'a Matrix,
+    /// Incremental column sums `c_d = Σ_{i∈S} φ_{id}`.
+    cols: Vec<f32>,
+    /// Cached `g(c_d)` so gains are a single pass of `√(c+φ) − √c`.
+    gcols: Vec<f32>,
+    picked: Vec<usize>,
+    value: f32,
+}
+
+impl<'a> FeatureCoverage<'a> {
+    pub fn new(phi: &'a Matrix) -> Self {
+        FeatureCoverage {
+            phi,
+            cols: vec![0.0; phi.cols],
+            gcols: vec![0.0; phi.cols],
+            picked: Vec::new(),
+            value: 0.0,
+        }
+    }
+
+    /// Bytes of working state (the memory-comparison axis of the
+    /// `featspace` experiment): features + two column accumulators.
+    pub fn memory_bytes(n: usize, e2: usize) -> usize {
+        (n * e2 + 2 * e2) * std::mem::size_of::<f32>()
+    }
+}
+
+impl<'a> SetFunction for FeatureCoverage<'a> {
+    fn n(&self) -> usize {
+        self.phi.rows
+    }
+
+    fn gain(&self, j: usize) -> f32 {
+        let row = self.phi.row(j);
+        let mut g = 0.0f32;
+        for d in 0..row.len() {
+            g += (self.cols[d] + row[d]).sqrt() - self.gcols[d];
+        }
+        g
+    }
+
+    fn add(&mut self, j: usize) {
+        let row = self.phi.row(j);
+        let mut delta = 0.0f32;
+        for d in 0..row.len() {
+            self.cols[d] += row[d];
+            let g = self.cols[d].sqrt();
+            delta += g - self.gcols[d];
+            self.gcols[d] = g;
+        }
+        self.value += delta;
+        self.picked.push(j);
+    }
+
+    fn value(&self) -> f32 {
+        self.value
+    }
+
+    fn reset(&mut self) {
+        self.cols.iter_mut().for_each(|c| *c = 0.0);
+        self.gcols.iter_mut().for_each(|c| *c = 0.0);
+        self.picked.clear();
+        self.value = 0.0;
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.picked
+    }
+}
+
+/// Brute-force `f(S)` for tests.
+pub fn brute_force_coverage(phi: &Matrix, subset: &[usize]) -> f32 {
+    let mut total = 0.0f32;
+    for d in 0..phi.cols {
+        let mut c = 0.0f32;
+        for &i in subset {
+            c += phi.at(i, d);
+        }
+        total += c.sqrt();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submod::{greedy_maximize, GreedyMode};
+    use crate::util::rng::Rng;
+
+    fn toy_features(n: usize, e: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut z = Matrix::zeros(n, e);
+        for i in 0..n {
+            for d in 0..e {
+                z.set(i, d, rng.normal() as f32);
+            }
+        }
+        z.l2_normalize_rows();
+        z
+    }
+
+    #[test]
+    fn coverage_features_are_nonnegative_and_preserve_norm() {
+        let z = toy_features(40, 8, 1);
+        let phi = coverage_features(&z);
+        assert_eq!(phi.cols, 16);
+        for i in 0..40 {
+            let mut n2 = 0.0f32;
+            for d in 0..16 {
+                assert!(phi.at(i, d) >= 0.0);
+                n2 += phi.at(i, d) * phi.at(i, d);
+            }
+            // ‖[z⁺; z⁻]‖² = ‖z‖² = 1
+            assert!((n2 - 1.0).abs() < 1e-4, "row {i} norm² {n2}");
+        }
+    }
+
+    #[test]
+    fn incremental_value_matches_brute_force() {
+        let z = toy_features(30, 6, 2);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let mut rng = Rng::new(3);
+        let picks = rng.sample_indices(30, 10);
+        for &j in &picks {
+            f.add(j);
+        }
+        let expect = brute_force_coverage(&phi, &picks);
+        assert!((f.value() - expect).abs() < 1e-3, "{} vs {expect}", f.value());
+    }
+
+    #[test]
+    fn gains_are_diminishing() {
+        // submodularity: the gain of a fixed element never increases as S
+        // grows
+        let z = toy_features(25, 5, 4);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let probe = 7usize;
+        let mut last = f.gain(probe);
+        for j in [0usize, 3, 11, 19, 22] {
+            f.add(j);
+            let g = f.gain(probe);
+            assert!(g <= last + 1e-5, "gain grew: {last} -> {g}");
+            last = g;
+        }
+    }
+
+    #[test]
+    fn gains_are_nonnegative_monotone() {
+        let z = toy_features(20, 4, 5);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        for j in 0..20 {
+            assert!(f.gain(j) >= 0.0);
+        }
+        f.add(2);
+        for j in 0..20 {
+            assert!(f.gain(j) >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn greedy_runs_kernel_free() {
+        let z = toy_features(50, 8, 6);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let mut rng = Rng::new(7);
+        let trace = greedy_maximize(&mut f, 10, GreedyMode::Naive, true, &mut rng);
+        assert_eq!(trace.selected.len(), 10);
+        // distinct picks
+        let mut s = trace.selected.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        // gains recorded in non-increasing order (lazy-safe ⇒ greedy order)
+        for w in trace.gains.windows(2) {
+            assert!(w[1] <= w[0] + 1e-4, "gains not diminishing: {w:?}");
+        }
+    }
+
+    #[test]
+    fn reset_restores_empty_state() {
+        let z = toy_features(15, 4, 8);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let g0: Vec<f32> = (0..15).map(|j| f.gain(j)).collect();
+        f.add(1);
+        f.add(5);
+        f.reset();
+        assert_eq!(f.value(), 0.0);
+        assert!(f.selected().is_empty());
+        for (j, &g) in g0.iter().enumerate() {
+            assert!((f.gain(j) - g).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn memory_is_linear_not_quadratic() {
+        let n = 4096;
+        let e2 = 64;
+        let feat = FeatureCoverage::memory_bytes(n, e2);
+        let kernel = n * n * std::mem::size_of::<f32>();
+        assert!(feat * 10 < kernel, "feature {feat}B vs kernel {kernel}B");
+    }
+}

@@ -1,0 +1,565 @@
+//! The four set functions from the paper's Appendix D, with incremental
+//! marginal-gain oracles over a symmetric similarity kernel in [0, 1].
+//!
+//! Incremental state invariants (checked by property tests in
+//! `rust/tests/submod_props.rs`):
+//!   * FL:  `mx[i] = max_{k∈S} s[i,k]` (0 when S empty; valid since s ≥ 0)
+//!   * GC:  `covered[j] = Σ_{k∈S} s[j,k]`, `colsum[j] = Σ_i s[i,j]`
+//!   * DS:  `covered[j]` as above
+//!   * DM:  `mindist[j] = min_{k∈S} (1 - s[j,k])` (∞-like 2.0 when empty)
+
+use crate::tensor::Matrix;
+
+/// Which set function (with parameters) — the paper's experiment axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SetFunctionKind {
+    FacilityLocation,
+    /// λ trades representation for diversity; the paper fixes λ = 0.4
+    /// ("making the graph-cut function model representation more and
+    /// making it monotone-submodular").
+    GraphCut { lambda: f32 },
+    DisparitySum,
+    DisparityMin,
+}
+
+impl SetFunctionKind {
+    pub const GRAPH_CUT_DEFAULT: SetFunctionKind = SetFunctionKind::GraphCut { lambda: 0.4 };
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SetFunctionKind::FacilityLocation => "facility_location",
+            SetFunctionKind::GraphCut { .. } => "graph_cut",
+            SetFunctionKind::DisparitySum => "disparity_sum",
+            SetFunctionKind::DisparityMin => "disparity_min",
+        }
+    }
+
+    /// Representation functions pick easy/dense samples; diversity
+    /// functions pick hard/sparse ones (paper §3, validated by Tables 1-2).
+    pub fn is_representation(&self) -> bool {
+        matches!(
+            self,
+            SetFunctionKind::FacilityLocation | SetFunctionKind::GraphCut { .. }
+        )
+    }
+
+    /// Lazy greedy requires every cached gain to stay an *upper bound* as
+    /// |S| grows. That fails for disparity-sum (gains grow with |S|) and
+    /// for disparity-min (the empty-set seed gain is an average distance,
+    /// not a bound on the later min-distance gains), so both use naive
+    /// greedy — which their 1/2- and 1/4-approximations (Appendix D) are
+    /// stated for anyway. Gains are O(1) against incremental state, so
+    /// naive full sweeps stay O(n²) per class.
+    pub fn lazy_safe(&self) -> bool {
+        matches!(
+            self,
+            SetFunctionKind::FacilityLocation | SetFunctionKind::GraphCut { .. }
+        )
+    }
+
+    /// Instantiate an oracle over a kernel.
+    pub fn build<'a>(&self, kernel: &'a Matrix) -> Box<dyn SetFunction + 'a> {
+        match *self {
+            SetFunctionKind::FacilityLocation => Box::new(FacilityLocation::new(kernel)),
+            SetFunctionKind::GraphCut { lambda } => Box::new(GraphCut::new(kernel, lambda)),
+            SetFunctionKind::DisparitySum => Box::new(DisparitySum::new(kernel)),
+            SetFunctionKind::DisparityMin => Box::new(DisparityMin::new(kernel)),
+        }
+    }
+}
+
+/// Incremental marginal-gain oracle.
+pub trait SetFunction {
+    /// Ground-set size.
+    fn n(&self) -> usize;
+    /// Marginal gain `f(S ∪ {j}) − f(S)` against the current state.
+    fn gain(&self, j: usize) -> f32;
+    /// Commit `j` into S and update state. O(n).
+    fn add(&mut self, j: usize);
+    /// Current `f(S)`.
+    fn value(&self) -> f32;
+    /// Clear back to the empty set.
+    fn reset(&mut self);
+    /// Selected elements so far, in insertion order.
+    fn selected(&self) -> &[usize];
+}
+
+// ---------------------------------------------------------------------------
+// Facility location: f(S) = Σ_i max_{j∈S} s_ij
+// ---------------------------------------------------------------------------
+
+pub struct FacilityLocation<'a> {
+    s: &'a Matrix,
+    mx: Vec<f32>,
+    picked: Vec<usize>,
+    value: f32,
+}
+
+impl<'a> FacilityLocation<'a> {
+    pub fn new(s: &'a Matrix) -> Self {
+        assert_eq!(s.rows, s.cols, "kernel must be square");
+        FacilityLocation { s, mx: vec![0.0; s.rows], picked: Vec::new(), value: 0.0 }
+    }
+}
+
+impl SetFunction for FacilityLocation<'_> {
+    fn n(&self) -> usize {
+        self.s.rows
+    }
+
+    #[inline]
+    fn gain(&self, j: usize) -> f32 {
+        // Σ_i max(0, s[i,j] − mx[i]); kernel symmetry lets us walk row j.
+        // Branchless `max` keeps the loop auto-vectorizable (≈4× over the
+        // branchy form, see EXPERIMENTS.md §Perf).
+        let row = self.s.row(j);
+        let mut acc = 0.0f32;
+        for (sij, mxi) in row.iter().zip(&self.mx) {
+            acc += (sij - mxi).max(0.0);
+        }
+        acc
+    }
+
+    fn add(&mut self, j: usize) {
+        self.value += self.gain(j);
+        let row = self.s.row(j);
+        for (mxi, sij) in self.mx.iter_mut().zip(row) {
+            if *sij > *mxi {
+                *mxi = *sij;
+            }
+        }
+        self.picked.push(j);
+    }
+
+    fn value(&self) -> f32 {
+        self.value
+    }
+
+    fn reset(&mut self) {
+        self.mx.iter_mut().for_each(|v| *v = 0.0);
+        self.picked.clear();
+        self.value = 0.0;
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.picked
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph cut: f(S) = Σ_{i∈D} Σ_{j∈S} s_ij − λ Σ_{i∈S} Σ_{j∈S} s_ij
+// ---------------------------------------------------------------------------
+
+pub struct GraphCut<'a> {
+    s: &'a Matrix,
+    lambda: f32,
+    colsum: Vec<f32>,
+    covered: Vec<f32>, // Σ_{k∈S} s[j,k]
+    picked: Vec<usize>,
+    value: f32,
+}
+
+impl<'a> GraphCut<'a> {
+    pub fn new(s: &'a Matrix, lambda: f32) -> Self {
+        assert_eq!(s.rows, s.cols);
+        let n = s.rows;
+        let mut colsum = vec![0.0f32; n];
+        for i in 0..n {
+            for (j, v) in s.row(i).iter().enumerate() {
+                colsum[j] += v;
+            }
+        }
+        GraphCut {
+            s,
+            lambda,
+            colsum,
+            covered: vec![0.0; n],
+            picked: Vec::new(),
+            value: 0.0,
+        }
+    }
+}
+
+impl SetFunction for GraphCut<'_> {
+    fn n(&self) -> usize {
+        self.s.rows
+    }
+
+    #[inline]
+    fn gain(&self, j: usize) -> f32 {
+        // Δ = colsum[j] − λ (2 Σ_{k∈S} s_jk + s_jj)
+        self.colsum[j] - self.lambda * (2.0 * self.covered[j] + self.s.at(j, j))
+    }
+
+    fn add(&mut self, j: usize) {
+        self.value += self.gain(j);
+        let row = self.s.row(j);
+        for (cov, sjk) in self.covered.iter_mut().zip(row) {
+            *cov += *sjk;
+        }
+        self.picked.push(j);
+    }
+
+    fn value(&self) -> f32 {
+        self.value
+    }
+
+    fn reset(&mut self) {
+        self.covered.iter_mut().for_each(|v| *v = 0.0);
+        self.picked.clear();
+        self.value = 0.0;
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.picked
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disparity-sum: f(S) = Σ_{i∈S} Σ_{j∈S} (1 − s_ij)
+// ---------------------------------------------------------------------------
+
+pub struct DisparitySum<'a> {
+    s: &'a Matrix,
+    covered: Vec<f32>, // Σ_{k∈S} s[j,k]
+    picked: Vec<usize>,
+    value: f32,
+}
+
+impl<'a> DisparitySum<'a> {
+    pub fn new(s: &'a Matrix) -> Self {
+        assert_eq!(s.rows, s.cols);
+        DisparitySum { s, covered: vec![0.0; s.rows], picked: Vec::new(), value: 0.0 }
+    }
+}
+
+impl SetFunction for DisparitySum<'_> {
+    fn n(&self) -> usize {
+        self.s.rows
+    }
+
+    #[inline]
+    fn gain(&self, j: usize) -> f32 {
+        // Adding j contributes (1 − s_jk) + (1 − s_kj) for each k∈S plus the
+        // self term (1 − s_jj): with symmetry, 2(|S| − covered[j]) + (1 − s_jj).
+        let k = self.picked.len() as f32;
+        2.0 * (k - self.covered[j]) + (1.0 - self.s.at(j, j))
+    }
+
+    fn add(&mut self, j: usize) {
+        self.value += self.gain(j);
+        let row = self.s.row(j);
+        for (cov, sjk) in self.covered.iter_mut().zip(row) {
+            *cov += *sjk;
+        }
+        self.picked.push(j);
+    }
+
+    fn value(&self) -> f32 {
+        self.value
+    }
+
+    fn reset(&mut self) {
+        self.covered.iter_mut().for_each(|v| *v = 0.0);
+        self.picked.clear();
+        self.value = 0.0;
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.picked
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Disparity-min: f(S) = min_{i≠j∈S} (1 − s_ij)
+// ---------------------------------------------------------------------------
+
+/// Greedy for disparity-min is the classic farthest-point (Gonzalez)
+/// sweep: the "gain" of candidate j is its distance to the nearest already
+/// selected point (`mindist[j]`), which the greedy maximizes — the
+/// 1/4-approximation construction of Dasgupta et al. cited in Appendix D.
+/// For the empty set the gain is the candidate's average distance to the
+/// ground set, which makes the first pick the most outlying point.
+pub struct DisparityMin<'a> {
+    s: &'a Matrix,
+    mindist: Vec<f32>,
+    avgdist: Vec<f32>,
+    picked: Vec<usize>,
+}
+
+const EMPTY_DIST: f32 = 2.0; // > any 1 − s with s ∈ [0, 1]
+
+impl<'a> DisparityMin<'a> {
+    pub fn new(s: &'a Matrix) -> Self {
+        assert_eq!(s.rows, s.cols);
+        let n = s.rows;
+        let mut avgdist = vec![0.0f32; n];
+        for j in 0..n {
+            let row = s.row(j);
+            let total: f32 = row.iter().map(|v| 1.0 - v).sum();
+            avgdist[j] = total / n as f32;
+        }
+        DisparityMin { s, mindist: vec![EMPTY_DIST; n], avgdist, picked: Vec::new() }
+    }
+}
+
+impl SetFunction for DisparityMin<'_> {
+    fn n(&self) -> usize {
+        self.s.rows
+    }
+
+    #[inline]
+    fn gain(&self, j: usize) -> f32 {
+        if self.picked.is_empty() {
+            // seed pick: most outlying point (max average distance)
+            self.avgdist[j]
+        } else if self.picked.contains(&j) {
+            // re-adding a selected point would zero the min distance
+            f32::MIN
+        } else {
+            self.mindist[j]
+        }
+    }
+
+    fn add(&mut self, j: usize) {
+        let row = self.s.row(j);
+        for (md, sjk) in self.mindist.iter_mut().zip(row) {
+            let d = 1.0 - *sjk;
+            if d < *md {
+                *md = d;
+            }
+        }
+        self.picked.push(j);
+    }
+
+    fn value(&self) -> f32 {
+        // f(S) = min pairwise distance among selected
+        if self.picked.len() < 2 {
+            return 0.0;
+        }
+        let mut best = f32::MAX;
+        for (a, &i) in self.picked.iter().enumerate() {
+            for &j in &self.picked[a + 1..] {
+                let d = 1.0 - self.s.at(i, j);
+                if d < best {
+                    best = d;
+                }
+            }
+        }
+        best
+    }
+
+    fn reset(&mut self) {
+        self.mindist.iter_mut().for_each(|v| *v = EMPTY_DIST);
+        self.picked.clear();
+    }
+
+    fn selected(&self) -> &[usize] {
+        &self.picked
+    }
+}
+
+/// Brute-force f(S) evaluation (test oracle).
+pub fn brute_force_value(kind: SetFunctionKind, s: &Matrix, subset: &[usize]) -> f32 {
+    let n = s.rows;
+    match kind {
+        SetFunctionKind::FacilityLocation => {
+            let mut total = 0.0;
+            for i in 0..n {
+                let mut best = 0.0f32;
+                for &j in subset {
+                    best = best.max(s.at(i, j));
+                }
+                total += best;
+            }
+            total
+        }
+        SetFunctionKind::GraphCut { lambda } => {
+            let mut cross = 0.0;
+            for i in 0..n {
+                for &j in subset {
+                    cross += s.at(i, j);
+                }
+            }
+            let mut within = 0.0;
+            for &i in subset {
+                for &j in subset {
+                    within += s.at(i, j);
+                }
+            }
+            cross - lambda * within
+        }
+        SetFunctionKind::DisparitySum => {
+            let mut total = 0.0;
+            for &i in subset {
+                for &j in subset {
+                    total += 1.0 - s.at(i, j);
+                }
+            }
+            total
+        }
+        SetFunctionKind::DisparityMin => {
+            if subset.len() < 2 {
+                return 0.0;
+            }
+            let mut best = f32::MAX;
+            for (a, &i) in subset.iter().enumerate() {
+                for &j in &subset[a + 1..] {
+                    best = best.min(1.0 - s.at(i, j));
+                }
+            }
+            best
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn random_kernel(n: usize, seed: u64) -> Matrix {
+        // symmetric kernel in [0,1] with unit diagonal (like rescaled cosine)
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+            for j in (i + 1)..n {
+                let v = rng.f32();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    fn check_incremental_matches_brute(kind: SetFunctionKind, seed: u64) {
+        let s = random_kernel(12, seed);
+        let mut f = kind.build(&s);
+        let mut subset = Vec::new();
+        let mut rng = Rng::new(seed ^ 99);
+        for _ in 0..6 {
+            let j = loop {
+                let j = rng.below(12);
+                if !subset.contains(&j) {
+                    break j;
+                }
+            };
+            let before = brute_force_value(kind, &s, &subset);
+            let gain = f.gain(j);
+            subset.push(j);
+            let after = brute_force_value(kind, &s, &subset);
+            if !matches!(kind, SetFunctionKind::DisparityMin) {
+                assert!(
+                    (gain - (after - before)).abs() < 1e-4,
+                    "{kind:?}: incremental gain {gain} vs brute {}",
+                    after - before
+                );
+            }
+            f.add(j);
+            if !matches!(kind, SetFunctionKind::DisparityMin) {
+                assert!(
+                    (f.value() - after).abs() < 1e-3,
+                    "{kind:?}: value {} vs brute {after}",
+                    f.value()
+                );
+            } else {
+                assert!((f.value() - after).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_gains_match_brute_force() {
+        for seed in 0..5 {
+            check_incremental_matches_brute(SetFunctionKind::FacilityLocation, seed);
+            check_incremental_matches_brute(SetFunctionKind::GraphCut { lambda: 0.4 }, seed);
+            check_incremental_matches_brute(SetFunctionKind::DisparitySum, seed);
+            check_incremental_matches_brute(SetFunctionKind::DisparityMin, seed);
+        }
+    }
+
+    #[test]
+    fn fl_gains_diminish() {
+        // submodularity: gain of a fixed j never increases as S grows
+        let s = random_kernel(20, 3);
+        let mut f = FacilityLocation::new(&s);
+        let g0 = f.gain(7);
+        f.add(1);
+        let g1 = f.gain(7);
+        f.add(2);
+        let g2 = f.gain(7);
+        assert!(g0 >= g1 - 1e-6 && g1 >= g2 - 1e-6, "{g0} {g1} {g2}");
+    }
+
+    #[test]
+    fn gc_gains_diminish() {
+        let s = random_kernel(20, 4);
+        let mut f = GraphCut::new(&s, 0.4);
+        let g0 = f.gain(5);
+        f.add(0);
+        let g1 = f.gain(5);
+        f.add(9);
+        let g2 = f.gain(5);
+        assert!(g0 >= g1 - 1e-6 && g1 >= g2 - 1e-6);
+    }
+
+    #[test]
+    fn disparity_min_prefers_far_points() {
+        // 3 clusters on a line: picking greedily must hit different clusters
+        let mut s = Matrix::filled(6, 6, 0.1);
+        // pairs (0,1), (2,3), (4,5) are near-duplicates
+        for &(a, b) in &[(0usize, 1usize), (2, 3), (4, 5)] {
+            s.set(a, b, 0.95);
+            s.set(b, a, 0.95);
+        }
+        for i in 0..6 {
+            s.set(i, i, 1.0);
+        }
+        let mut f = DisparityMin::new(&s);
+        for _ in 0..3 {
+            let j = (0..6)
+                .max_by(|&a, &b| f.gain(a).partial_cmp(&f.gain(b)).unwrap())
+                .unwrap();
+            f.add(j);
+        }
+        let sel = f.selected();
+        let clusters: std::collections::HashSet<usize> =
+            sel.iter().map(|&j| j / 2).collect();
+        assert_eq!(clusters.len(), 3, "one pick per cluster, got {sel:?}");
+    }
+
+    #[test]
+    fn reset_restores_empty_state() {
+        let s = random_kernel(10, 5);
+        for kind in [
+            SetFunctionKind::FacilityLocation,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            SetFunctionKind::DisparitySum,
+            SetFunctionKind::DisparityMin,
+        ] {
+            let mut f = kind.build(&s);
+            let g_before: Vec<f32> = (0..10).map(|j| f.gain(j)).collect();
+            f.add(3);
+            f.add(7);
+            f.reset();
+            assert!(f.selected().is_empty());
+            for j in 0..10 {
+                assert!(
+                    (f.gain(j) - g_before[j]).abs() < 1e-6,
+                    "{kind:?} gain {j} after reset"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn representation_vs_diversity_classification() {
+        assert!(SetFunctionKind::FacilityLocation.is_representation());
+        assert!(SetFunctionKind::GRAPH_CUT_DEFAULT.is_representation());
+        assert!(!SetFunctionKind::DisparityMin.is_representation());
+        assert!(!SetFunctionKind::DisparitySum.is_representation());
+        assert!(!SetFunctionKind::DisparitySum.lazy_safe());
+        assert!(SetFunctionKind::FacilityLocation.lazy_safe());
+    }
+}

@@ -1,0 +1,420 @@
+//! Gibbs / Metropolis swap sampler for `P(S) ∝ exp(β·f(S))`, `|S| = k`.
+//!
+//! The paper's §3.1 names this the *ideal* formulation of informative data
+//! exploration (its Eq. 2) and cites Gotovos et al. [14] for marginal
+//! inference over probabilistic submodular models, but leaves the
+//! fixed-cardinality extension to future work because the naive sampler
+//! needs a combinatorial number of set-function evaluations and the
+//! swap-chain mixes slowly near-optimal. We implement that extension here:
+//!
+//! * state: a subset `S` with `|S| = k` exactly;
+//! * proposal: swap a uniformly random `i ∈ S` with a uniformly random
+//!   `j ∉ S` (the standard fixed-cardinality exchange chain — symmetric,
+//!   so the Metropolis ratio is just `exp(β·(f(S') − f(S)))`);
+//! * acceptance tracked so callers can diagnose the mixing-time wall the
+//!   paper predicts (acceptance → 0 as `f(S)` approaches the optimum with
+//!   large β).
+//!
+//! `f(S')` is evaluated incrementally where the function allows it
+//! (graph-cut has an O(k)-exact swap delta) and by oracle rebuild
+//! otherwise (O(k·n) per proposal) — fine at class-partition scale, and
+//! measuring exactly this cost is the point of the `gibbs` ablation
+//! (EXPERIMENTS.md §Extensions): SGE/WRE get within noise of the exchange
+//! chain at a small fraction of its evaluations, which is the empirical
+//! justification for MILO's §3.1 design choice.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+use super::functions::SetFunctionKind;
+
+/// Fixed-cardinality Metropolis exchange sampler over one class kernel.
+pub struct GibbsSampler<'a> {
+    kernel: &'a Matrix,
+    kind: SetFunctionKind,
+    beta: f32,
+    /// Current subset (sorted not required; membership mirrored in `in_s`).
+    state: Vec<usize>,
+    in_s: Vec<bool>,
+    /// Cached `f(state)`.
+    value: f32,
+    /// Proposals / acceptances since construction (mixing diagnostics).
+    pub proposals: u64,
+    pub acceptances: u64,
+    /// Set-function evaluation count (the cost axis of the ablation).
+    pub evaluations: u64,
+}
+
+impl<'a> GibbsSampler<'a> {
+    /// Start the chain from a uniformly random size-`k` subset.
+    pub fn new(
+        kernel: &'a Matrix,
+        kind: SetFunctionKind,
+        beta: f32,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = kernel.rows;
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let state: Vec<usize> = idx[..k].to_vec();
+        let mut in_s = vec![false; n];
+        for &i in &state {
+            in_s[i] = true;
+        }
+        let value = super::functions::brute_force_value(kind, kernel, &state);
+        GibbsSampler {
+            kernel,
+            kind,
+            beta,
+            state,
+            in_s,
+            value,
+            proposals: 0,
+            acceptances: 0,
+            evaluations: 1,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn value(&self) -> f32 {
+        self.value
+    }
+
+    pub fn state(&self) -> &[usize] {
+        &self.state
+    }
+
+    /// Observed acceptance rate (1.0 before any proposal).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            1.0
+        } else {
+            self.acceptances as f64 / self.proposals as f64
+        }
+    }
+
+    /// `f(state with state[pos] replaced by j)`.
+    ///
+    /// Graph-cut decomposes over pairs, so the swap delta is exact in
+    /// O(k + n); every other function rebuilds the oracle value (O(k·n)
+    /// via the brute-force evaluator — DM/DS are O(k²), FL O(k·n)).
+    fn swapped_value(&mut self, pos: usize, j: usize) -> f32 {
+        let out = self.state[pos];
+        if let SetFunctionKind::GraphCut { lambda } = self.kind {
+            // f = Σ_i Σ_{t∈S} s_it − λ Σ_{t,u∈S} s_tu
+            let s = self.kernel;
+            let n = s.rows;
+            let mut cross_delta = 0.0f32;
+            for i in 0..n {
+                cross_delta += s.at(i, j) - s.at(i, out);
+            }
+            // within-S pair terms that change: pairs touching `out` or `j`
+            let mut within_delta = 0.0f32;
+            for &t in &self.state {
+                if t == out {
+                    continue;
+                }
+                within_delta += 2.0 * (s.at(t, j) - s.at(t, out));
+            }
+            within_delta += s.at(j, j) - s.at(out, out);
+            self.evaluations += 1;
+            return self.value + cross_delta - lambda * within_delta;
+        }
+        let mut probe = self.state.clone();
+        probe[pos] = j;
+        self.evaluations += 1;
+        super::functions::brute_force_value(self.kind, self.kernel, &probe)
+    }
+
+    /// One Metropolis exchange step. Returns whether the swap was accepted.
+    pub fn step(&mut self, rng: &mut Rng) -> bool {
+        let n = self.kernel.rows;
+        let k = self.state.len();
+        if k == 0 || k == n {
+            return false; // nothing to exchange
+        }
+        self.proposals += 1;
+        let pos = rng.below(k);
+        // rejection-sample a j ∉ S (k < n so this terminates fast)
+        let j = loop {
+            let cand = rng.below(n);
+            if !self.in_s[cand] {
+                break cand;
+            }
+        };
+        let proposed = self.swapped_value(pos, j);
+        let log_ratio = self.beta * (proposed - self.value);
+        let accept = log_ratio >= 0.0 || (rng.f64() as f32) < log_ratio.exp();
+        if accept {
+            let out = self.state[pos];
+            self.in_s[out] = false;
+            self.in_s[j] = true;
+            self.state[pos] = j;
+            self.value = proposed;
+            self.acceptances += 1;
+        }
+        accept
+    }
+
+    /// Run `burn_in` steps, then collect `n_samples` subsets `thin` steps
+    /// apart. Each sample is a sorted copy of the state.
+    pub fn sample(
+        &mut self,
+        burn_in: usize,
+        thin: usize,
+        n_samples: usize,
+        rng: &mut Rng,
+    ) -> Vec<Vec<usize>> {
+        for _ in 0..burn_in {
+            self.step(rng);
+        }
+        let mut out = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            for _ in 0..thin.max(1) {
+                self.step(rng);
+            }
+            let mut s = self.state.clone();
+            s.sort_unstable();
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Sample `n_subsets` class-stitched subsets from `P(S) ∝ exp(β·f(S))`
+/// over per-class kernels (the same class-wise partitioning trick MILO
+/// uses for SGE/WRE; `alloc[c]` is the per-class budget).
+pub fn gibbs_class_subsets(
+    kernels: &[(&Matrix, &[usize])], // (class kernel, global indices)
+    alloc: &[usize],
+    kind: SetFunctionKind,
+    beta: f32,
+    burn_in: usize,
+    thin: usize,
+    n_subsets: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<usize>>, GibbsStats) {
+    let mut per_class: Vec<Vec<Vec<usize>>> = Vec::with_capacity(kernels.len());
+    let mut stats = GibbsStats::default();
+    for ((kernel, _), &kc) in kernels.iter().zip(alloc) {
+        if kc == 0 {
+            per_class.push(vec![Vec::new(); n_subsets]);
+            continue;
+        }
+        let mut chain = GibbsSampler::new(kernel, kind, beta, kc, rng);
+        let samples = chain.sample(burn_in, thin, n_subsets, rng);
+        stats.proposals += chain.proposals;
+        stats.acceptances += chain.acceptances;
+        stats.evaluations += chain.evaluations;
+        per_class.push(samples);
+    }
+    let subsets = (0..n_subsets)
+        .map(|si| {
+            let mut subset = Vec::new();
+            for (ci, (_, indices)) in kernels.iter().enumerate() {
+                subset.extend(per_class[ci][si].iter().map(|&l| indices[l]));
+            }
+            subset.sort_unstable();
+            subset
+        })
+        .collect();
+    (subsets, stats)
+}
+
+/// Aggregate chain diagnostics across classes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GibbsStats {
+    pub proposals: u64,
+    pub acceptances: u64,
+    pub evaluations: u64,
+}
+
+impl GibbsStats {
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposals == 0 {
+            1.0
+        } else {
+            self.acceptances as f64 / self.proposals as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::submod::functions::brute_force_value;
+
+    fn toy_kernel(n: usize, seed: u64) -> Matrix {
+        // random symmetric kernel in [0, 1] with unit diagonal
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = if i == j { 1.0 } else { rng.f64() as f32 };
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn cardinality_is_invariant() {
+        let kern = toy_kernel(20, 1);
+        let mut rng = Rng::new(2);
+        let mut chain =
+            GibbsSampler::new(&kern, SetFunctionKind::FacilityLocation, 4.0, 6, &mut rng);
+        for _ in 0..200 {
+            chain.step(&mut rng);
+            assert_eq!(chain.k(), 6);
+            // membership array consistent with state
+            let marked = chain.in_s.iter().filter(|&&b| b).count();
+            assert_eq!(marked, 6);
+            for &i in chain.state() {
+                assert!(chain.in_s[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn cached_value_tracks_brute_force() {
+        for kind in [
+            SetFunctionKind::FacilityLocation,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            SetFunctionKind::DisparityMin,
+            SetFunctionKind::DisparitySum,
+        ] {
+            let kern = toy_kernel(16, 3);
+            let mut rng = Rng::new(4);
+            let mut chain = GibbsSampler::new(&kern, kind, 2.0, 5, &mut rng);
+            for _ in 0..100 {
+                chain.step(&mut rng);
+            }
+            let expect = brute_force_value(kind, &kern, chain.state());
+            assert!(
+                (chain.value() - expect).abs() < 1e-3 * (1.0 + expect.abs()),
+                "{}: cached {} vs brute {}",
+                kind.name(),
+                chain.value(),
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn high_beta_climbs_in_value() {
+        let kern = toy_kernel(30, 5);
+        let mut rng = Rng::new(6);
+        let mut chain =
+            GibbsSampler::new(&kern, SetFunctionKind::FacilityLocation, 50.0, 5, &mut rng);
+        let start = chain.value();
+        for _ in 0..400 {
+            chain.step(&mut rng);
+        }
+        assert!(
+            chain.value() >= start,
+            "high-beta chain went downhill: {} -> {}",
+            start,
+            chain.value()
+        );
+    }
+
+    #[test]
+    fn beta_zero_is_uniform_ergodic() {
+        // with β = 0 every proposal is accepted and the chain must visit
+        // many distinct subsets
+        let kern = toy_kernel(12, 7);
+        let mut rng = Rng::new(8);
+        let mut chain =
+            GibbsSampler::new(&kern, SetFunctionKind::FacilityLocation, 0.0, 3, &mut rng);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..300 {
+            chain.step(&mut rng);
+            let mut s = chain.state().to_vec();
+            s.sort_unstable();
+            seen.insert(s);
+        }
+        assert_eq!(chain.acceptance_rate(), 1.0);
+        assert!(seen.len() > 50, "only {} distinct states", seen.len());
+    }
+
+    #[test]
+    fn acceptance_falls_with_beta() {
+        let kern = toy_kernel(25, 9);
+        let mut lo_rate = 0.0;
+        let mut hi_rate = 0.0;
+        for (beta, rate) in [(1.0, &mut lo_rate), (100.0, &mut hi_rate)] {
+            let mut rng = Rng::new(10);
+            let mut chain =
+                GibbsSampler::new(&kern, SetFunctionKind::FacilityLocation, beta, 6, &mut rng);
+            for _ in 0..500 {
+                chain.step(&mut rng);
+            }
+            *rate = chain.acceptance_rate();
+        }
+        assert!(
+            hi_rate < lo_rate,
+            "acceptance should fall with beta: lo {lo_rate} hi {hi_rate}"
+        );
+    }
+
+    #[test]
+    fn graph_cut_swap_delta_is_exact() {
+        let kern = toy_kernel(18, 11);
+        let kind = SetFunctionKind::GraphCut { lambda: 0.4 };
+        let mut rng = Rng::new(12);
+        let mut chain = GibbsSampler::new(&kern, kind, 3.0, 6, &mut rng);
+        for _ in 0..60 {
+            chain.step(&mut rng);
+            let expect = brute_force_value(kind, &kern, chain.state());
+            assert!(
+                (chain.value() - expect).abs() < 1e-2,
+                "cached {} vs brute {}",
+                chain.value(),
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn class_stitching_respects_alloc() {
+        let k1 = toy_kernel(10, 13);
+        let k2 = toy_kernel(14, 14);
+        let idx1: Vec<usize> = (0..10).collect();
+        let idx2: Vec<usize> = (10..24).collect();
+        let mut rng = Rng::new(15);
+        let (subsets, stats) = gibbs_class_subsets(
+            &[(&k1, &idx1), (&k2, &idx2)],
+            &[3, 4],
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            4.0,
+            50,
+            5,
+            4,
+            &mut rng,
+        );
+        assert_eq!(subsets.len(), 4);
+        for s in &subsets {
+            assert_eq!(s.len(), 7);
+            assert_eq!(s.iter().filter(|&&i| i < 10).count(), 3);
+            assert_eq!(s.iter().filter(|&&i| i >= 10).count(), 4);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        }
+        assert!(stats.proposals > 0 && stats.evaluations > 0);
+    }
+
+    #[test]
+    fn empty_and_full_sets_are_noops() {
+        let kern = toy_kernel(5, 16);
+        let mut rng = Rng::new(17);
+        let mut full =
+            GibbsSampler::new(&kern, SetFunctionKind::FacilityLocation, 1.0, 5, &mut rng);
+        assert!(!full.step(&mut rng));
+        assert_eq!(full.proposals, 0);
+    }
+}

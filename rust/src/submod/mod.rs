@@ -1,0 +1,42 @@
+//! Submodular set functions and greedy maximizers (the SUBMODLIB
+//! substrate, re-implemented from the paper's Appendix D).
+//!
+//! All functions operate over a per-class similarity kernel `S ∈ [0,1]ⁿˣⁿ`
+//! (built by [`crate::kernel`]) and expose an *incremental oracle*: `gain(j)`
+//! in O(1) against cached state, `add(j)` in O(n). That makes full greedy
+//! O(n²) per class — the complexity SUBMODLIB achieves with memoization —
+//! and is what keeps MILO's pre-processing "minimal" relative to training.
+//!
+//! | function          | type            | paper role                        |
+//! |-------------------|-----------------|-----------------------------------|
+//! | facility location | representation  | Fig. 4 / SGE ablation (easy)      |
+//! | graph cut (λ)     | representation  | curriculum phase 1 (easy)         |
+//! | disparity-sum     | diversity       | Fig. 4 ablation (hard)            |
+//! | disparity-min     | diversity       | curriculum phase 2 / WRE (hard)   |
+//!
+//! Maximizers: naive greedy, lazy greedy (max-heap of stale upper bounds —
+//! valid whenever gains are non-increasing in |S|, i.e. all functions here
+//! except disparity-sum), and stochastic greedy (Mirzasoleiman et al.,
+//! the paper's SGE engine, Algorithm 2).
+
+//! Extensions beyond the paper (its stated future work, built here):
+//!
+//! * [`gibbs`] — the fixed-cardinality exchange sampler for
+//!   `P(S) ∝ exp(β·f(S))` (paper §3.1 Eq. 2 / Gotovos et al. [14]);
+//! * [`featurebased`] — kernel-free feature-based coverage functions
+//!   (the conclusion's "feature-based submodular functions" plan).
+
+pub mod featurebased;
+pub mod functions;
+pub mod gibbs;
+pub mod greedy;
+pub mod sampling;
+
+pub use featurebased::{coverage_features, FeatureCoverage};
+pub use functions::{
+    DisparityMin, DisparitySum, FacilityLocation, GraphCut, SetFunction,
+    SetFunctionKind,
+};
+pub use gibbs::{gibbs_class_subsets, GibbsSampler, GibbsStats};
+pub use greedy::{greedy_maximize, sample_importance, GreedyMode, GreedyTrace};
+pub use sampling::weighted_sample_without_replacement;

@@ -1,0 +1,210 @@
+//! Row-major f32 matrix used throughout the coordinator — feature tables,
+//! similarity kernels, gradient embeddings. Deliberately minimal: the heavy
+//! math happens either in the PJRT artifacts (L1/L2) or in cache-friendly
+//! flat-slice loops in `submod`.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major `rows x cols` f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            bail!("Matrix::from_vec: {}x{} != {}", rows, cols, data.len());
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Gather a sub-matrix of the given rows.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (oi, &r) in idx.iter().enumerate() {
+            out.row_mut(oi).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Copy `src` into rows starting at `at`.
+    pub fn write_rows(&mut self, at: usize, src: &Matrix) {
+        assert_eq!(self.cols, src.cols);
+        assert!(at + src.rows <= self.rows);
+        let start = at * self.cols;
+        self.data[start..start + src.rows * self.cols]
+            .copy_from_slice(&src.data);
+    }
+
+    /// L2-normalize every row in place (zero rows left untouched).
+    pub fn l2_normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let n: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if n > 1e-12 {
+                for x in row.iter_mut() {
+                    *x /= n;
+                }
+            }
+        }
+    }
+
+    /// `self @ other^T` (naive blocked loop — used only by the native
+    /// similarity fallback and tests; the hot path goes through PJRT).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut out = Matrix::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            let orow = out.row_mut(i);
+            for (j, o) in orow.iter_mut().enumerate() {
+                // 4 independent accumulators so LLVM vectorizes the
+                // reduction (a single serial accumulator defeats SIMD
+                // because f32 addition is not associative) — §Perf L3.
+                let b = other.row(j);
+                let mut acc = [0.0f32; 4];
+                let mut ac = a.chunks_exact(4);
+                let mut bc = b.chunks_exact(4);
+                for (ca, cb) in (&mut ac).zip(&mut bc) {
+                    acc[0] += ca[0] * cb[0];
+                    acc[1] += ca[1] * cb[1];
+                    acc[2] += ca[2] * cb[2];
+                    acc[3] += ca[3] * cb[3];
+                }
+                let mut tail = 0.0f32;
+                for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+                    tail += x * y;
+                }
+                *o = acc[0] + acc[1] + acc[2] + acc[3] + tail;
+            }
+        }
+        out
+    }
+
+    /// Mean of all entries.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64
+    }
+}
+
+/// Read a little-endian f32 blob (the artifact `params/*.bin` layout).
+pub fn read_f32_blob(path: &std::path::Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut m = Matrix::zeros(3, 4);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(m.at(1, 0), 3.0);
+    }
+
+    #[test]
+    fn gather_and_write_rows() {
+        let m = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data(), &[5., 6., 1., 2.]);
+        let mut dst = Matrix::zeros(4, 2);
+        dst.write_rows(1, &g);
+        assert_eq!(dst.row(1), &[5., 6.]);
+        assert_eq!(dst.row(2), &[1., 2.]);
+        assert_eq!(dst.row(0), &[0., 0.]);
+    }
+
+    #[test]
+    fn normalize_rows() {
+        let mut m = Matrix::from_vec(2, 2, vec![3., 4., 0., 0.]).unwrap();
+        m.l2_normalize_rows();
+        assert!((m.at(0, 0) - 0.6).abs() < 1e-6);
+        assert!((m.at(0, 1) - 0.8).abs() < 1e-6);
+        assert_eq!(m.row(1), &[0., 0.]); // zero row untouched
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = Matrix::from_vec(2, 3, vec![1., 0., 0., 0., 1., 0.]).unwrap();
+        let c = a.matmul_nt(&b);
+        assert_eq!(c.rows, 2);
+        assert_eq!(c.cols, 2);
+        assert_eq!(c.data(), &[1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let dir = std::env::temp_dir().join("milo_test_blob");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_blob(&p).unwrap(), vals);
+    }
+}

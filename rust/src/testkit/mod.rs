@@ -1,0 +1,149 @@
+//! Property-testing helpers (proptest is unavailable offline): seeded
+//! case generators with shrinking-free "many seeds" sweeps, used by the
+//! integration tests in `rust/tests/` to exercise invariants across random
+//! instances.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// Run `f` for `n_cases` derived seeds; panics carry the failing seed so a
+/// failure is reproducible with `case(seed)`.
+pub fn check_cases(base_seed: u64, n_cases: usize, f: impl Fn(u64)) {
+    for i in 0..n_cases {
+        let seed = Rng::new(base_seed).derive(i as u64).next_u64();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(e) = result {
+            eprintln!("testkit: failing case seed = {seed} (case #{i})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random symmetric similarity kernel with unit diagonal in [0, 1] — the
+/// shape every submodular component consumes.
+pub fn random_kernel(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        m.set(i, i, 1.0);
+        for j in (i + 1)..n {
+            let v = rng.f32();
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    m
+}
+
+/// Clustered kernel: `clusters` groups with high in-group similarity —
+/// lets tests assert representation-vs-diversity behaviour with known
+/// ground truth. Returns (kernel, cluster assignment).
+pub fn clustered_kernel(
+    n: usize,
+    clusters: usize,
+    in_sim: f32,
+    out_sim: f32,
+    seed: u64,
+) -> (Matrix, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let assign: Vec<usize> = (0..n).map(|i| i % clusters).collect();
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let base = if i == j {
+                1.0
+            } else if assign[i] == assign[j] {
+                in_sim
+            } else {
+                out_sim
+            };
+            let v = (base + rng.normal_f32(0.0, 0.02)).clamp(0.0, 1.0);
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    (m, assign)
+}
+
+/// Random unit-norm embedding matrix.
+pub fn random_embeddings(n: usize, e: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(n, e);
+    for v in m.data_mut().iter_mut() {
+        *v = rng.normal_f32(0.0, 1.0);
+    }
+    m.l2_normalize_rows();
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_kernel_is_valid() {
+        let k = random_kernel(10, 1);
+        for i in 0..10 {
+            assert_eq!(k.at(i, i), 1.0);
+            for j in 0..10 {
+                assert_eq!(k.at(i, j), k.at(j, i));
+                assert!((0.0..=1.0).contains(&k.at(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_kernel_separates() {
+        let (k, assign) = clustered_kernel(12, 3, 0.9, 0.2, 2);
+        let mut in_s = 0.0f64;
+        let mut out_s = 0.0f64;
+        let (mut ni, mut no) = (0, 0);
+        for i in 0..12 {
+            for j in 0..12 {
+                if i == j {
+                    continue;
+                }
+                if assign[i] == assign[j] {
+                    in_s += k.at(i, j) as f64;
+                    ni += 1;
+                } else {
+                    out_s += k.at(i, j) as f64;
+                    no += 1;
+                }
+            }
+        }
+        assert!(in_s / ni as f64 > out_s / no as f64 + 0.3);
+    }
+
+    #[test]
+    fn check_cases_reports_seed() {
+        // all passing
+        check_cases(1, 5, |seed| assert!(seed != 0 || seed == 0));
+    }
+}
+
+/// Minimal bench harness (criterion is unavailable offline): time a
+/// closure over warmup + measured iterations and print a stable one-line
+/// summary (used by `rust/benches/*`).
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> R) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    println!(
+        "bench {name:40} mean {:>10.3}ms  p50 {:>10.3}ms  min {:>10.3}ms  (n={})",
+        mean * 1e3,
+        p50 * 1e3,
+        min * 1e3,
+        samples.len()
+    );
+}

@@ -1,0 +1,358 @@
+//! Downstream-model handle: host-side parameter state + the AOT train /
+//! eval / meta artifacts that operate on it.
+//!
+//! The model is a black box to MILO (that is the paper's thesis); this
+//! struct is the only place the coordinator touches its parameters, and
+//! everything it does goes through the three compiled graphs:
+//! `train_step_{ds}_h{h}`, `eval_{ds}_h{h}`, `meta_{ds}_h{h}`.
+
+use anyhow::{Context, Result};
+
+use crate::data::{Dataset, Split};
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::read_f32_blob;
+
+/// Hyper-parameters fed to the train-step artifact at every call (runtime
+/// scalars — LR schedules stay in Rust).
+#[derive(Clone, Copy, Debug)]
+pub struct StepHparams {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub nesterov: bool,
+}
+
+/// Result of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    pub loss: f32,
+    pub correct: f32,
+    pub examples: f32,
+}
+
+/// Aggregate eval result.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOutcome {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub examples: usize,
+}
+
+/// Per-sample metadata from the meta artifact (model-dependent metrics the
+/// gradient-based baselines consume).
+#[derive(Clone, Debug)]
+pub struct MetaOutputs {
+    /// per-sample cross-entropy
+    pub losses: Vec<f32>,
+    /// per-sample EL2N = ‖softmax − onehot‖₂
+    pub el2n: Vec<f32>,
+    /// last-layer gradient embeddings, row-major `n × classes`
+    pub gemb: Vec<f32>,
+    pub classes: usize,
+}
+
+/// Host-side MLP state bound to a (dataset, hidden) artifact family.
+pub struct MlpModel {
+    pub dataset: String,
+    pub hidden: usize,
+    pub classes: usize,
+    pub input_dim: usize,
+    pub batch: usize,
+    params: Vec<Vec<f32>>,
+    momentum: Vec<Vec<f32>>,
+    train_artifact: String,
+    eval_artifact: String,
+    meta_artifact: String,
+    // scratch buffers reused across steps (perf: no per-step allocation)
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+    wbuf: Vec<f32>,
+}
+
+impl MlpModel {
+    /// Load the He-init parameters for `seed` from the artifact store.
+    pub fn load(rt: &Runtime, dataset: &str, hidden: usize, seed: u64) -> Result<MlpModel> {
+        let man = rt.manifest();
+        let cfg = man.dataset(dataset)?;
+        let shapes = man.param_shapes(dataset, hidden)?;
+        let blob = read_f32_blob(&man.params_path(dataset, hidden, seed))
+            .with_context(|| format!("params for {dataset} h{hidden} seed {seed}"))?;
+        let mut params = Vec::with_capacity(shapes.len());
+        let mut off = 0usize;
+        for shape in &shapes {
+            let n: usize = shape.iter().product();
+            params.push(blob[off..off + n].to_vec());
+            off += n;
+        }
+        anyhow::ensure!(off == blob.len(), "param blob size mismatch");
+        let momentum = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+        let batch = man.batch;
+        Ok(MlpModel {
+            dataset: dataset.to_string(),
+            hidden,
+            classes: cfg.classes,
+            input_dim: cfg.input_dim,
+            batch,
+            params,
+            momentum,
+            train_artifact: format!("train_step_{dataset}_h{hidden}"),
+            eval_artifact: format!("eval_{dataset}_h{hidden}"),
+            meta_artifact: format!("meta_{dataset}_h{hidden}"),
+            xbuf: vec![0.0; batch * cfg.input_dim],
+            ybuf: vec![0; batch],
+            wbuf: vec![0.0; batch],
+        })
+    }
+
+    /// Total parameter count (for reporting).
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Raw parameter access (proxy-encoder path and tests).
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    /// Reset momentum (used when a tuner reuses a model across trials).
+    pub fn reset_momentum(&mut self) {
+        for m in self.momentum.iter_mut() {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    fn fill_batch(&mut self, ds: &Dataset, split: Split, idx: &[usize]) {
+        debug_assert!(idx.len() <= self.batch);
+        let x = ds.x(split);
+        let y = ds.y(split);
+        let d = self.input_dim;
+        for (bi, &i) in idx.iter().enumerate() {
+            self.xbuf[bi * d..(bi + 1) * d].copy_from_slice(x.row(i));
+            self.ybuf[bi] = y[i] as i32;
+            self.wbuf[bi] = 1.0;
+        }
+        // zero-pad the tail
+        for bi in idx.len()..self.batch {
+            self.xbuf[bi * d..(bi + 1) * d].iter_mut().for_each(|v| *v = 0.0);
+            self.ybuf[bi] = 0;
+            self.wbuf[bi] = 0.0;
+        }
+    }
+
+    /// Run one train step on `idx` (≤ batch) train samples.
+    pub fn train_step(
+        &mut self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idx: &[usize],
+        hp: StepHparams,
+    ) -> Result<StepOutcome> {
+        self.fill_batch(ds, Split::Train, idx);
+        let mut args: Vec<Arg<'_>> = Vec::with_capacity(19);
+        for p in &self.params {
+            args.push(Arg::F32(p));
+        }
+        for m in &self.momentum {
+            args.push(Arg::F32(m));
+        }
+        args.push(Arg::F32(&self.xbuf));
+        args.push(Arg::I32(&self.ybuf));
+        args.push(Arg::F32(&self.wbuf));
+        args.push(Arg::Scalar(hp.lr));
+        args.push(Arg::Scalar(hp.momentum));
+        args.push(Arg::Scalar(hp.weight_decay));
+        args.push(Arg::Scalar(if hp.nesterov { 1.0 } else { 0.0 }));
+        let mut out = rt.execute(&self.train_artifact, &args)?;
+        anyhow::ensure!(out.len() == 14, "train_step returned {}", out.len());
+        let correct = out.pop().unwrap()[0];
+        let loss = out.pop().unwrap()[0];
+        // outputs 0..6 new params, 6..12 new momentum
+        for (m, v) in self.momentum.iter_mut().rev().zip(out.drain(6..).rev()) {
+            *m = v;
+        }
+        for (p, v) in self.params.iter_mut().zip(out) {
+            *p = v;
+        }
+        Ok(StepOutcome { loss, correct, examples: idx.len() as f32 })
+    }
+
+    /// Evaluate loss/accuracy over a whole split.
+    pub fn evaluate(&mut self, rt: &Runtime, ds: &Dataset, split: Split) -> Result<EvalOutcome> {
+        let n = ds.y(split).len();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let all: Vec<usize> = (0..n).collect();
+        for chunk in all.chunks(self.batch) {
+            self.fill_batch(ds, split, chunk);
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(9);
+            for p in &self.params {
+                args.push(Arg::F32(p));
+            }
+            args.push(Arg::F32(&self.xbuf));
+            args.push(Arg::I32(&self.ybuf));
+            args.push(Arg::F32(&self.wbuf));
+            let out = rt.execute(&self.eval_artifact, &args)?;
+            loss_sum += out[0][0] as f64;
+            correct += out[1][0] as f64;
+        }
+        Ok(EvalOutcome {
+            loss: loss_sum / n as f64,
+            accuracy: correct / n as f64,
+            examples: n,
+        })
+    }
+
+    /// Compute per-sample metadata for the given indices of `split` (or the
+    /// whole split when `idx` is `None`). This is the expensive
+    /// model-dependent pass the gradient-based baselines pay every R epochs
+    /// (Glister additionally runs it on the validation split).
+    pub fn meta(
+        &mut self,
+        rt: &Runtime,
+        ds: &Dataset,
+        split: Split,
+        idx: Option<&[usize]>,
+    ) -> Result<MetaOutputs> {
+        let all: Vec<usize>;
+        let indices: &[usize] = match idx {
+            Some(v) => v,
+            None => {
+                all = (0..ds.y(split).len()).collect();
+                &all
+            }
+        };
+        let c = self.classes;
+        let mut losses = Vec::with_capacity(indices.len());
+        let mut el2n = Vec::with_capacity(indices.len());
+        let mut gemb = Vec::with_capacity(indices.len() * c);
+        for chunk in indices.chunks(self.batch) {
+            self.fill_batch(ds, split, chunk);
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(9);
+            for p in &self.params {
+                args.push(Arg::F32(p));
+            }
+            args.push(Arg::F32(&self.xbuf));
+            args.push(Arg::I32(&self.ybuf));
+            args.push(Arg::F32(&self.wbuf));
+            let out = rt.execute(&self.meta_artifact, &args)?;
+            losses.extend_from_slice(&out[0][..chunk.len()]);
+            el2n.extend_from_slice(&out[1][..chunk.len()]);
+            gemb.extend_from_slice(&out[2][..chunk.len() * c]);
+        }
+        Ok(MetaOutputs { losses, el2n, gemb, classes: c })
+    }
+
+    /// Proxy features (App. H.2): penultimate activations for arbitrary
+    /// train rows, via the `proxy_{ds}_h{h}` artifact (only compiled for
+    /// the proxy datasets).
+    pub fn proxy_features(
+        &mut self,
+        rt: &Runtime,
+        ds: &Dataset,
+        indices: &[usize],
+    ) -> Result<crate::tensor::Matrix> {
+        let name = format!("proxy_{}_h{}", self.dataset, self.hidden);
+        let h = self.hidden;
+        let mut out = crate::tensor::Matrix::zeros(indices.len(), h);
+        let mut at = 0usize;
+        for chunk in indices.chunks(self.batch) {
+            self.fill_batch(ds, Split::Train, chunk);
+            // the proxy artifact takes only the four parameters it reads
+            // (w1, b1, w2, b2) — see model.py::make_proxy_features
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(5);
+            for p in &self.params[..4] {
+                args.push(Arg::F32(p));
+            }
+            args.push(Arg::F32(&self.xbuf));
+            let res = rt.execute(&name, &args)?;
+            for r in 0..chunk.len() {
+                out.row_mut(at + r).copy_from_slice(&res[0][r * h..(r + 1) * h]);
+            }
+            at += chunk.len();
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::open(dir).unwrap())
+    }
+
+    #[test]
+    fn load_and_count_params() {
+        let Some(rt) = runtime() else { return };
+        let m = MlpModel::load(&rt, "cifar10", 128, 1).unwrap();
+        // 64*128 + 128 + 128*128 + 128 + 128*10 + 10
+        assert_eq!(m.n_params(), 64 * 128 + 128 + 128 * 128 + 128 + 128 * 10 + 10);
+        assert!(MlpModel::load(&rt, "cifar10", 999, 1).is_err());
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(1);
+        let mut m = MlpModel::load(&rt, "trec6", 128, 1).unwrap();
+        let idx: Vec<usize> = (0..64).collect();
+        let hp = StepHparams { lr: 0.1, momentum: 0.9, weight_decay: 0.0, nesterov: true };
+        let first = m.train_step(&rt, &ds, &idx, hp).unwrap();
+        let mut last = first;
+        for _ in 0..25 {
+            last = m.train_step(&rt, &ds, &idx, hp).unwrap();
+        }
+        assert!(
+            last.loss < first.loss * 0.7,
+            "loss did not drop: {} -> {}",
+            first.loss,
+            last.loss
+        );
+        assert!(last.correct >= first.correct);
+    }
+
+    #[test]
+    fn evaluate_counts_whole_split() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(2);
+        let mut m = MlpModel::load(&rt, "trec6", 128, 2).unwrap();
+        let out = m.evaluate(&rt, &ds, Split::Test).unwrap();
+        assert_eq!(out.examples, ds.test_y.len());
+        assert!(out.loss > 0.0);
+        assert!((0.0..=1.0).contains(&out.accuracy));
+    }
+
+    #[test]
+    fn meta_shapes_and_bounds() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(3);
+        let mut m = MlpModel::load(&rt, "trec6", 128, 3).unwrap();
+        let idx: Vec<usize> = (0..200).collect();
+        let meta = m.meta(&rt, &ds, Split::Train, Some(&idx)).unwrap();
+        assert_eq!(meta.losses.len(), 200);
+        assert_eq!(meta.el2n.len(), 200);
+        assert_eq!(meta.gemb.len(), 200 * 6);
+        for &e in &meta.el2n {
+            assert!((0.0..=1.5).contains(&e), "el2n {e}");
+        }
+        // gradient-embedding rows sum to ~0 (softmax - onehot)
+        for r in 0..200 {
+            let s: f32 = meta.gemb[r * 6..(r + 1) * 6].iter().sum();
+            assert!(s.abs() < 1e-4, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_params() {
+        let Some(rt) = runtime() else { return };
+        let a = MlpModel::load(&rt, "cifar10", 128, 1).unwrap();
+        let b = MlpModel::load(&rt, "cifar10", 128, 2).unwrap();
+        assert_ne!(a.params()[0], b.params()[0]);
+    }
+}

@@ -1,0 +1,91 @@
+//! Learning-rate schedules (the paper's recipes: cosine annealing for most
+//! runs, cyclic for ImageNet, linear step-decay in the HPO search space).
+
+/// LR schedule evaluated per epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Cosine annealing from base LR to ~0 over `total` epochs (SGDR-style,
+    /// single phase, as the paper uses).
+    Cosine { total: usize },
+    /// Multiply by `gamma` every `every` epochs (the HPO space's
+    /// "linear decay by γ after every 20 epochs").
+    StepDecay { gamma: f64, every: usize },
+    /// Triangular cyclic LR between `base·min_ratio` and `base` with the
+    /// given period (the ImageNet recipe's cyclic scheduler).
+    Cyclic { period: usize, min_ratio: f64 },
+}
+
+impl LrSchedule {
+    /// LR multiplier at `epoch` (multiplies the base LR).
+    pub fn factor(&self, epoch: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant => 1.0,
+            LrSchedule::Cosine { total } => {
+                let t = (epoch as f64 / total.max(1) as f64).min(1.0);
+                0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            LrSchedule::StepDecay { gamma, every } => {
+                gamma.powi((epoch / every.max(1)) as i32)
+            }
+            LrSchedule::Cyclic { period, min_ratio } => {
+                let p = period.max(2);
+                let phase = epoch % p;
+                let half = p as f64 / 2.0;
+                let tri = if (phase as f64) < half {
+                    phase as f64 / half
+                } else {
+                    2.0 - phase as f64 / half
+                };
+                min_ratio + (1.0 - min_ratio) * tri
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LrSchedule::Constant => "constant",
+            LrSchedule::Cosine { .. } => "cosine",
+            LrSchedule::StepDecay { .. } => "step_decay",
+            LrSchedule::Cyclic { .. } => "cyclic",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = LrSchedule::Cosine { total: 100 };
+        assert!((s.factor(0) - 1.0).abs() < 1e-12);
+        assert!(s.factor(100) < 1e-9);
+        assert!((s.factor(50) - 0.5).abs() < 1e-9);
+        // monotone decreasing
+        for e in 1..100 {
+            assert!(s.factor(e) <= s.factor(e - 1) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn step_decay() {
+        let s = LrSchedule::StepDecay { gamma: 0.1, every: 20 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(19), 1.0);
+        assert!((s.factor(20) - 0.1).abs() < 1e-12);
+        assert!((s.factor(45) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cyclic_bounds_and_period() {
+        let s = LrSchedule::Cyclic { period: 10, min_ratio: 0.1 };
+        for e in 0..40 {
+            let f = s.factor(e);
+            assert!((0.1 - 1e-9..=1.0 + 1e-9).contains(&f), "epoch {e}: {f}");
+        }
+        assert!((s.factor(0) - 0.1).abs() < 1e-9);
+        assert!((s.factor(5) - 1.0).abs() < 1e-9);
+        assert!((s.factor(10) - s.factor(0)).abs() < 1e-9);
+    }
+}

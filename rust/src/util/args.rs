@@ -1,0 +1,160 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports the surface the `milo` binary and the examples need:
+//! `--flag`, `--key value`, `--key=value`, positional arguments, and typed
+//! accessors with defaults.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed command line: positionals + `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — flags listed in
+    /// `bool_flags` consume no value.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        tokens: I,
+        bool_flags: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` separator: everything after is positional
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    args.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{rest} expects a value"))?;
+                    args.options.insert(rest.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args> {
+        Self::parse_from(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v} not an integer")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v} not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key}={v} not a number")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--fractions 0.01,0.05,0.1`.
+    pub fn get_list_f64(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .with_context(|| format!("--{key}: bad item {s:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_list_str(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse_from(
+            toks("train --dataset cifar10 --fraction=0.1 --verbose x"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "x"]);
+        assert_eq!(a.get("dataset"), Some("cifar10"));
+        assert_eq!(a.get_f64("fraction", 0.0).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse_from(toks("--dataset"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = Args::parse_from(toks("--fractions 0.01,0.3"), &[]).unwrap();
+        assert_eq!(a.get_list_f64("fractions", &[]).unwrap(), vec![0.01, 0.3]);
+        assert_eq!(a.get_list_f64("other", &[1.0]).unwrap(), vec![1.0]);
+        assert_eq!(a.get_usize("epochs", 17).unwrap(), 17);
+        assert_eq!(a.get_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = Args::parse_from(toks("a -- --not-an-option"), &[]).unwrap();
+        assert_eq!(a.positional, vec!["a", "--not-an-option"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse_from(toks("--epochs abc"), &[]).unwrap();
+        assert!(a.get_usize("epochs", 1).is_err());
+    }
+}

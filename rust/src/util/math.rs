@@ -1,0 +1,154 @@
+//! Small numeric helpers shared across the pipeline.
+
+/// Taylor-Softmax (paper Eq. 5): `p_i ∝ 1 + g_i + 0.5 g_i²`.
+///
+/// Unlike exponential softmax this is numerically benign for any finite
+/// input and, per de Brébisson & Vincent (2016), yields a heavier-tailed,
+/// better-exploring distribution over importance scores — exactly why the
+/// paper uses it for WRE.
+pub fn taylor_softmax(g: &[f64]) -> Vec<f64> {
+    let terms: Vec<f64> = g.iter().map(|&x| 1.0 + x + 0.5 * x * x).collect();
+    let total: f64 = terms.iter().sum();
+    assert!(total > 0.0, "taylor_softmax: degenerate total {total}");
+    terms.into_iter().map(|t| t / total).collect()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.sqrt()
+}
+
+/// Median (copies + sorts; fine for metric-sized slices).
+pub fn median(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2] as f64
+    } else {
+        0.5 * (v[n / 2 - 1] as f64 + v[n / 2] as f64)
+    }
+}
+
+/// argmax over f32 slice; ties resolve to the lowest index.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Kendall rank correlation coefficient (tau-a) between two score vectors
+/// interpreted as rankings of the same items. Used for the Table 9
+/// hyper-parameter ordering-retention analysis.
+pub fn kendall_tau(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let mut concordant = 0i64;
+    let mut discordant = 0i64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let da = a[i] - a[j];
+            let db = b[i] - b[j];
+            let s = da * db;
+            if s > 0.0 {
+                concordant += 1;
+            } else if s < 0.0 {
+                discordant += 1;
+            }
+            // ties contribute zero (tau-a)
+        }
+    }
+    let pairs = (n * (n - 1) / 2) as f64;
+    (concordant - discordant) as f64 / pairs
+}
+
+/// Round-up integer division.
+pub const fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Round `n` up to the next multiple of `m`.
+pub const fn round_up(n: usize, m: usize) -> usize {
+    div_ceil(n, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taylor_softmax_is_distribution() {
+        let p = taylor_softmax(&[0.0, 1.0, 2.0, -0.5]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|&x| x > 0.0));
+        // monotone in g for g >= 0
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn taylor_softmax_matches_formula() {
+        let g = [1.0, 3.0];
+        let p = taylor_softmax(&g);
+        let t1 = 1.0 + 1.0 + 0.5;
+        let t2 = 1.0 + 3.0 + 4.5;
+        assert!((p[0] - t1 / (t1 + t2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_basics() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((median(&xs) - 2.5).abs() < 1e-9);
+        assert!((median(&[1.0f32, 2.0, 9.0]) - 2.0).abs() < 1e-9);
+        assert!((stddev(&xs) - 1.118033988).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kendall_perfect_and_reversed() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((kendall_tau(&a, &b) - 1.0).abs() < 1e-12);
+        assert!((kendall_tau(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kendall_partial() {
+        // one swapped adjacent pair out of 6 pairs: tau = (5-1)/6
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [2.0, 1.0, 3.0, 4.0];
+        assert!((kendall_tau(&a, &b) - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounding_helpers() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(round_up(10, 4), 12);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+    }
+}

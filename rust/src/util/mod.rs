@@ -1,0 +1,9 @@
+//! Dependency-free building blocks: RNG, JSON, math helpers, timing,
+//! a tiny thread-pool `par_map`, and CLI argument parsing.
+
+pub mod args;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod threads;
+pub mod timer;

@@ -1,0 +1,86 @@
+//! Scoped-thread fan-out (`par_map`) — the offline stand-in for rayon.
+//!
+//! Used by the kernel builder (per-class similarity blocks) and the
+//! experiment runner (independent trials). Work is chunked over at most
+//! `available_parallelism()` OS threads via `std::thread::scope`, so no
+//! runtime or unsafe code is needed.
+
+/// Map `f` over `items` in parallel, preserving order.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = max_threads().min(items.len().max(1));
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    // Hand out (index, item) pairs through a mutex-guarded iterator so load
+    // imbalance (class sizes vary a lot) self-levels.
+    let queue = std::sync::Mutex::new(items.into_iter().enumerate());
+    let out = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let next = { queue.lock().unwrap().next() };
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        out.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker died")).collect()
+}
+
+/// Number of worker threads to use (respects `MILO_THREADS`).
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("MILO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let xs: Vec<usize> = (0..257).collect();
+        let ys = par_map(xs.clone(), |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(Vec::<usize>::new(), |x| x), Vec::<usize>::new());
+        assert_eq!(par_map(vec![7], |x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn uneven_work_self_levels() {
+        // items with wildly different costs still come back ordered
+        let xs: Vec<usize> = (0..64).collect();
+        let ys = par_map(xs, |x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i as u64);
+            }
+            (x, acc)
+        });
+        for (i, (x, _)) in ys.iter().enumerate() {
+            assert_eq!(i, *x);
+        }
+    }
+}

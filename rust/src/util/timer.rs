@@ -1,0 +1,101 @@
+//! Wall-clock timing + a simple scoped-section profiler.
+//!
+//! Every experiment reports both model-quality metrics and elapsed time
+//! (the paper's headline axis is *speedup*), so timing is first-class: the
+//! [`Stopwatch`] accumulates named sections and the trainer tags
+//! selection-time vs step-time vs eval-time separately, which is how we
+//! reproduce Figure 1's "fast per-epoch but slow per-wallclock" effect for
+//! the gradient-based baselines.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall-clock time per named section.
+#[derive(Default, Debug, Clone)]
+pub struct Stopwatch {
+    totals: BTreeMap<&'static str, Duration>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<R>(&mut self, name: &'static str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.add(name, t0.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.totals.entry(name).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.totals.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn total(&self) -> Duration {
+        self.totals.values().sum()
+    }
+
+    pub fn secs(&self, name: &str) -> f64 {
+        self.get(name).as_secs_f64()
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn merge(&mut self, other: &Stopwatch) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, d) in &self.totals {
+            out.push_str(&format!("{name:>16}: {:.3}s\n", d.as_secs_f64()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_sections() {
+        let mut sw = Stopwatch::new();
+        sw.add("a", Duration::from_millis(10));
+        sw.add("a", Duration::from_millis(5));
+        sw.add("b", Duration::from_millis(1));
+        assert_eq!(sw.get("a"), Duration::from_millis(15));
+        assert_eq!(sw.total(), Duration::from_millis(16));
+        assert_eq!(sw.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut sw = Stopwatch::new();
+        let v = sw.time("x", || 42);
+        assert_eq!(v, 42);
+        assert!(sw.get("x") > Duration::ZERO || sw.get("x") == Duration::ZERO);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Stopwatch::new();
+        a.add("s", Duration::from_millis(3));
+        let mut b = Stopwatch::new();
+        b.add("s", Duration::from_millis(4));
+        b.add("t", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.get("s"), Duration::from_millis(7));
+        assert_eq!(a.get("t"), Duration::from_millis(1));
+    }
+}

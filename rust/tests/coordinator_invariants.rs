@@ -1,0 +1,260 @@
+//! Property tests on coordinator invariants: allocation, pre-processing
+//! outputs (subset structure, WRE distributions), batching/padding, and
+//! the kernel-free path's structural agreement with the kernel path.
+//! (PJRT-dependent tests skip when `artifacts/` is absent.)
+
+use milo::coordinator::{PreprocessOptions, Preprocessor};
+use milo::data::{DatasetId, Split};
+use milo::kernel::SimilarityBackend;
+use milo::runtime::Runtime;
+use milo::selection::proportional_allocation;
+use milo::testkit::check_cases;
+use milo::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open("artifacts").ok()
+}
+
+// ---------------------------------------------------------------------------
+// proportional allocation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allocation_is_exact_and_capacity_bounded() {
+    check_cases(400, 40, |seed| {
+        let mut rng = Rng::new(seed);
+        let c = 1 + rng.below(40);
+        let sizes: Vec<usize> = (0..c).map(|_| rng.below(300)).collect();
+        let n: usize = sizes.iter().sum();
+        let k = rng.below(n + 2);
+        let alloc = proportional_allocation(&sizes, k);
+        assert_eq!(alloc.len(), c);
+        let total: usize = alloc.iter().sum();
+        assert_eq!(total, k.min(n), "total {total} != k {k} (n={n})");
+        for (a, s) in alloc.iter().zip(&sizes) {
+            assert!(a <= s, "alloc {a} exceeds class size {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_allocation_is_roughly_proportional() {
+    check_cases(401, 20, |seed| {
+        let mut rng = Rng::new(seed);
+        let c = 2 + rng.below(10);
+        let sizes: Vec<usize> = (0..c).map(|_| 50 + rng.below(200)).collect();
+        let n: usize = sizes.iter().sum();
+        let k = n / 4;
+        let alloc = proportional_allocation(&sizes, k);
+        for (a, s) in alloc.iter().zip(&sizes) {
+            let exact = k as f64 * *s as f64 / n as f64;
+            assert!(
+                (*a as f64 - exact).abs() <= 1.0 + 1e-9,
+                "alloc {a} vs exact {exact:.2}"
+            );
+        }
+    });
+}
+
+#[test]
+fn allocation_degenerate_cases() {
+    assert_eq!(proportional_allocation(&[], 5), Vec::<usize>::new());
+    assert_eq!(proportional_allocation(&[0, 0], 5), vec![0, 0]);
+    assert_eq!(proportional_allocation(&[10], 0), vec![0]);
+    assert_eq!(proportional_allocation(&[3, 3], 100), vec![3, 3]); // k > n clamps
+    // single-element classes all get a slot when k = n
+    assert_eq!(proportional_allocation(&[1, 1, 1], 3), vec![1, 1, 1]);
+}
+
+// ---------------------------------------------------------------------------
+// pre-processing output invariants
+// ---------------------------------------------------------------------------
+
+fn preprocessor<'a>(rt: &'a Runtime, fraction: f64, seed: u64) -> Preprocessor<'a> {
+    Preprocessor::with_options(
+        rt,
+        PreprocessOptions {
+            fraction,
+            backend: SimilarityBackend::Native,
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn preprocessing_outputs_are_structurally_sound() {
+    let Some(rt) = runtime() else { return };
+    for &(ds_id, fraction) in &[
+        (DatasetId::Trec6Like, 0.05),
+        (DatasetId::Cifar10Like, 0.1),
+        (DatasetId::DermaLike, 0.1),
+    ] {
+        let ds = ds_id.generate(3);
+        let k = (fraction * ds.n_train() as f64).round() as usize;
+        let meta = preprocessor(&rt, fraction, 3).run(&ds).unwrap();
+
+        // SGE subsets: right size, sorted, unique, in-range
+        assert!(!meta.sge_subsets.is_empty());
+        for s in &meta.sge_subsets {
+            assert_eq!(s.len(), k, "{}: subset size", ds.name());
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < ds.n_train()));
+        }
+
+        // WRE: one distribution per class, each a simplex over its class
+        let parts = ds.class_partition();
+        assert_eq!(meta.wre_classes.len(), ds.classes());
+        for (c, cp) in meta.wre_classes.iter().enumerate() {
+            assert_eq!(cp.indices.len(), parts[c].len(), "class {c}");
+            let sum: f64 = cp.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "class {c} probs sum {sum}");
+            assert!(cp.probs.iter().all(|&p| p > 0.0), "Taylor-softmax is positive");
+            for &i in &cp.indices {
+                assert_eq!(ds.train_y[i] as usize, c);
+            }
+        }
+
+        // fixed subset: same structural rules
+        assert_eq!(meta.fixed_dm.len(), k);
+        assert!(meta.fixed_dm.windows(2).all(|w| w[0] < w[1]));
+    }
+}
+
+#[test]
+fn kernel_free_path_matches_kernel_path_structure() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Trec6Like.generate(5);
+    let fraction = 0.1;
+    let pre = preprocessor(&rt, fraction, 5);
+    let a = pre.run(&ds).unwrap();
+    let b = pre.run_featurebased(&ds).unwrap();
+    assert_eq!(a.sge_subsets.len(), b.sge_subsets.len());
+    for (x, y) in a.sge_subsets.iter().zip(&b.sge_subsets) {
+        assert_eq!(x.len(), y.len());
+    }
+    assert_eq!(a.wre_classes.len(), b.wre_classes.len());
+    for (x, y) in a.wre_classes.iter().zip(&b.wre_classes) {
+        assert_eq!(x.indices, y.indices);
+        let sum: f64 = y.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+    assert_eq!(a.fixed_dm.len(), b.fixed_dm.len());
+}
+
+#[test]
+fn per_class_budgets_respected_in_sge_subsets() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Cifar10Like.generate(7);
+    let fraction = 0.1;
+    let k = (fraction * ds.n_train() as f64).round() as usize;
+    let meta = preprocessor(&rt, fraction, 7).run(&ds).unwrap();
+    let parts = ds.class_partition();
+    let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+    let alloc = proportional_allocation(&sizes, k);
+    for s in &meta.sge_subsets {
+        let mut by_class = vec![0usize; ds.classes()];
+        for &i in s {
+            by_class[ds.train_y[i] as usize] += 1;
+        }
+        assert_eq!(by_class, alloc, "per-class composition drifted");
+    }
+}
+
+#[test]
+fn encoder_variants_change_geometry_but_not_contract() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Trec6Like.generate(1);
+    let base = preprocessor(&rt, 0.05, 1).encode(&ds, Split::Train).unwrap();
+    for variant in ["mean32", "alt32", "wide64", "narrow16"] {
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.05,
+                backend: SimilarityBackend::Native,
+                encoder_variant: Some(variant.into()),
+                ..Default::default()
+            },
+        );
+        let z = pre.encode(&ds, Split::Train).unwrap();
+        assert_eq!(z.rows, ds.n_train(), "{variant}: row count");
+        // rows are unit-normalized for every variant
+        for i in (0..z.rows).step_by(97) {
+            let n2: f32 = z.row(i).iter().map(|v| v * v).sum();
+            assert!((n2 - 1.0).abs() < 1e-3, "{variant} row {i}: norm² {n2}");
+        }
+        // and the geometry actually differs from the default encoder
+        if z.cols == base.cols {
+            let same = (0..z.rows.min(50))
+                .all(|i| z.row(i).iter().zip(base.row(i)).all(|(a, b)| (a - b).abs() < 1e-6));
+            assert!(!same, "{variant} is identical to the default encoder");
+        }
+    }
+}
+
+#[test]
+fn unknown_encoder_variant_is_an_error() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Trec6Like.generate(1);
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            encoder_variant: Some("nope99".into()),
+            ..Default::default()
+        },
+    );
+    assert!(pre.encode(&ds, Split::Train).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// trainer batching / padding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn training_handles_subsets_smaller_than_one_batch() {
+    // k < BATCH forces a single padded batch; masked padding must not
+    // poison the loss/metrics
+    let Some(rt) = runtime() else { return };
+    use milo::selection::FixedStrategy;
+    use milo::train::{TrainConfig, Trainer};
+    let ds = DatasetId::Trec6Like.generate(2);
+    let subset: Vec<usize> = (0..30).collect(); // 30 < 128 batch
+    let cfg = TrainConfig {
+        epochs: 3,
+        fraction: 30.0 / ds.n_train() as f64,
+        eval_every: 0,
+        seed: 2,
+        ..TrainConfig::recipe_for(&ds, 3)
+    };
+    let mut strat = FixedStrategy::new("tiny", subset);
+    let out = Trainer::new(&rt, &ds, cfg).unwrap().run(&mut strat).unwrap();
+    assert!(out.test_accuracy.is_finite());
+    assert!(out.test_accuracy >= 0.0 && out.test_accuracy <= 1.0);
+    for p in &out.trace {
+        assert!(p.val_loss.is_finite(), "loss went non-finite");
+    }
+}
+
+#[test]
+fn training_is_bit_deterministic_per_seed() {
+    let Some(rt) = runtime() else { return };
+    use milo::selection::RandomStrategy;
+    use milo::train::{TrainConfig, Trainer};
+    let ds = DatasetId::Trec6Like.generate(4);
+    let run = |seed: u64| {
+        let cfg = TrainConfig {
+            epochs: 4,
+            fraction: 0.1,
+            eval_every: 0,
+            seed,
+            ..TrainConfig::recipe_for(&ds, 4)
+        };
+        Trainer::new(&rt, &ds, cfg)
+            .unwrap()
+            .run(&mut RandomStrategy::new())
+            .unwrap()
+            .test_accuracy
+    };
+    // param seeds are pre-baked for 1..=5 (aot.py PARAM_SEEDS)
+    assert_eq!(run(3), run(3));
+}

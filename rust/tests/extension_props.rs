@@ -1,0 +1,271 @@
+//! Property tests for the future-work extensions (Gibbs exchange chain,
+//! feature-based coverage functions) — seed sweeps over random instances.
+
+use milo::submod::{
+    coverage_features, featurebased::brute_force_coverage, functions::brute_force_value,
+    gibbs_class_subsets, greedy_maximize, sample_importance, FeatureCoverage,
+    GibbsSampler, GreedyMode, SetFunction, SetFunctionKind,
+};
+use milo::testkit::{check_cases, clustered_kernel, random_embeddings, random_kernel};
+use milo::util::rng::Rng;
+
+const KINDS: [SetFunctionKind; 4] = [
+    SetFunctionKind::FacilityLocation,
+    SetFunctionKind::GraphCut { lambda: 0.4 },
+    SetFunctionKind::DisparitySum,
+    SetFunctionKind::DisparityMin,
+];
+
+// ---------------------------------------------------------------------------
+// Gibbs exchange chain
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_gibbs_preserves_cardinality_and_membership() {
+    check_cases(300, 15, |seed| {
+        let n = 10 + (seed % 20) as usize;
+        let s = random_kernel(n, seed);
+        let mut rng = Rng::new(seed ^ 2);
+        let k = 2 + rng.below((n - 2).min(8));
+        for kind in KINDS {
+            let mut chain = GibbsSampler::new(&s, kind, 2.0, k, &mut rng);
+            for _ in 0..80 {
+                chain.step(&mut rng);
+                assert_eq!(chain.k(), k, "{kind:?} n={n} k={k}");
+                let mut st = chain.state().to_vec();
+                st.sort_unstable();
+                st.dedup();
+                assert_eq!(st.len(), k, "duplicate members: {kind:?}");
+                assert!(st.iter().all(|&i| i < n));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gibbs_cached_value_stays_exact() {
+    check_cases(301, 12, |seed| {
+        let n = 8 + (seed % 12) as usize;
+        let s = random_kernel(n, seed);
+        let mut rng = Rng::new(seed ^ 3);
+        let k = 2 + rng.below((n - 2).min(6));
+        for kind in KINDS {
+            let mut chain = GibbsSampler::new(&s, kind, 1.5, k, &mut rng);
+            for _ in 0..60 {
+                chain.step(&mut rng);
+            }
+            let brute = brute_force_value(kind, &s, chain.state());
+            assert!(
+                (chain.value() - brute).abs() < 1e-2 * (1.0 + brute.abs()),
+                "{kind:?} n={n} k={k}: cached {} vs brute {brute}",
+                chain.value()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_gibbs_stationary_value_beats_uniform_start() {
+    // a moderately hot chain should, on average, end above its random
+    // initial value for monotone representation functions
+    check_cases(302, 10, |seed| {
+        let n = 24;
+        let (s, _) = clustered_kernel(n, 4, 0.85, 0.15, seed);
+        let mut rng = Rng::new(seed ^ 4);
+        let mut chain =
+            GibbsSampler::new(&s, SetFunctionKind::FacilityLocation, 20.0, 5, &mut rng);
+        let start = chain.value();
+        for _ in 0..300 {
+            chain.step(&mut rng);
+        }
+        assert!(
+            chain.value() >= start - 1e-4,
+            "seed {seed}: {} -> {}",
+            start,
+            chain.value()
+        );
+    });
+}
+
+#[test]
+fn prop_gibbs_class_subsets_are_valid_partitioned_subsets() {
+    check_cases(303, 10, |seed| {
+        let mut rng = Rng::new(seed ^ 5);
+        let n1 = 8 + rng.below(10);
+        let n2 = 8 + rng.below(10);
+        let k1 = random_kernel(n1, seed);
+        let k2 = random_kernel(n2, seed ^ 6);
+        let idx1: Vec<usize> = (0..n1).collect();
+        let idx2: Vec<usize> = (n1..n1 + n2).collect();
+        let a1 = 1 + rng.below(n1 - 1);
+        let a2 = 1 + rng.below(n2 - 1);
+        let (subsets, stats) = gibbs_class_subsets(
+            &[(&k1, &idx1), (&k2, &idx2)],
+            &[a1, a2],
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            3.0,
+            30,
+            3,
+            3,
+            &mut rng,
+        );
+        assert_eq!(subsets.len(), 3);
+        for s in &subsets {
+            assert_eq!(s.len(), a1 + a2);
+            assert_eq!(s.iter().filter(|&&i| i < n1).count(), a1);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert!(stats.evaluations >= stats.proposals);
+    });
+}
+
+#[test]
+fn gibbs_determinism_under_same_seed() {
+    let s = random_kernel(20, 77);
+    let run = |seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut chain =
+            GibbsSampler::new(&s, SetFunctionKind::GRAPH_CUT_DEFAULT, 4.0, 6, &mut rng);
+        chain.sample(50, 5, 3, &mut rng)
+    };
+    assert_eq!(run(9), run(9));
+    assert_ne!(run(9), run(10));
+}
+
+// ---------------------------------------------------------------------------
+// Feature-based coverage
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_coverage_incremental_matches_brute_force() {
+    check_cases(310, 15, |seed| {
+        let n = 10 + (seed % 25) as usize;
+        let e = 3 + (seed % 6) as usize;
+        let z = random_embeddings(n, e, seed);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let mut rng = Rng::new(seed ^ 7);
+        let k = 1 + rng.below(n.min(8));
+        let picks = rng.sample_indices(n, k);
+        for &j in &picks {
+            f.add(j);
+        }
+        let brute = brute_force_coverage(&phi, &picks);
+        assert!(
+            (f.value() - brute).abs() < 1e-3 * (1.0 + brute.abs()),
+            "n={n} e={e}: {} vs {brute}",
+            f.value()
+        );
+    });
+}
+
+#[test]
+fn prop_coverage_is_monotone_submodular() {
+    check_cases(311, 15, |seed| {
+        let n = 12 + (seed % 14) as usize;
+        let z = random_embeddings(n, 4, seed);
+        let phi = coverage_features(&z);
+        let mut rng = Rng::new(seed ^ 8);
+        let probe = rng.below(n);
+        let mut f = FeatureCoverage::new(&phi);
+        let mut last = f.gain(probe);
+        assert!(last >= 0.0);
+        let adds = rng.sample_indices(n, n.min(7));
+        for &j in adds.iter().filter(|&&j| j != probe) {
+            f.add(j);
+            let g = f.gain(probe);
+            assert!(g >= -1e-6, "negative gain {g}");
+            assert!(g <= last + 1e-5, "gain grew {last} -> {g}");
+            last = g;
+        }
+    });
+}
+
+#[test]
+fn prop_coverage_greedy_beats_random_subsets() {
+    check_cases(312, 10, |seed| {
+        let n = 40;
+        let z = random_embeddings(n, 6, seed);
+        let phi = coverage_features(&z);
+        let mut rng = Rng::new(seed ^ 9);
+        let k = 8;
+        let mut f = FeatureCoverage::new(&phi);
+        let trace = greedy_maximize(&mut f, k, GreedyMode::Naive, true, &mut rng);
+        let greedy_val = brute_force_coverage(&phi, &trace.selected);
+        // greedy ≥ the best of 20 random subsets (1−1/e guarantee makes
+        // this overwhelmingly likely at these sizes)
+        let mut best_rand = 0.0f32;
+        for _ in 0..20 {
+            let r = rng.sample_indices(n, k);
+            best_rand = best_rand.max(brute_force_coverage(&phi, &r));
+        }
+        assert!(
+            greedy_val >= best_rand - 1e-3,
+            "greedy {greedy_val} < best random {best_rand}"
+        );
+    });
+}
+
+#[test]
+fn prop_coverage_importance_sweep_is_complete_permutation_weighting() {
+    check_cases(313, 10, |seed| {
+        let n = 10 + (seed % 15) as usize;
+        let z = random_embeddings(n, 5, seed);
+        let phi = coverage_features(&z);
+        let mut f = FeatureCoverage::new(&phi);
+        let gains = sample_importance(&mut f, true);
+        assert_eq!(gains.len(), n);
+        // every gain is finite and non-negative; the first (largest
+        // greedy pick) dominates the last
+        for &g in &gains {
+            assert!(g.is_finite() && g >= -1e-6);
+        }
+        let mx = gains.iter().cloned().fold(f32::MIN, f32::max);
+        let mn = gains.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(mx >= mn);
+    });
+}
+
+#[test]
+fn prop_lazy_and_naive_greedy_agree_for_coverage() {
+    check_cases(314, 12, |seed| {
+        let n = 15 + (seed % 10) as usize;
+        let z = random_embeddings(n, 4, seed);
+        let phi = coverage_features(&z);
+        let k = 5;
+        let mut rng = Rng::new(seed);
+        let mut f1 = FeatureCoverage::new(&phi);
+        let naive = greedy_maximize(&mut f1, k, GreedyMode::Naive, true, &mut rng);
+        let mut f2 = FeatureCoverage::new(&phi);
+        let lazy = greedy_maximize(&mut f2, k, GreedyMode::Lazy, true, &mut rng);
+        let nv = brute_force_coverage(&phi, &naive.selected);
+        let lv = brute_force_coverage(&phi, &lazy.selected);
+        assert!(
+            (nv - lv).abs() < 1e-3 * (1.0 + nv.abs()),
+            "naive {nv} vs lazy {lv}"
+        );
+    });
+}
+
+#[test]
+fn coverage_features_of_clustered_embeddings_separate_clusters() {
+    // samples in the same direction share coverage mass: greedy picks
+    // spread across clusters rather than duplicating one
+    let n = 30;
+    let mut z = milo::tensor::Matrix::zeros(n, 6);
+    for i in 0..n {
+        let c = i % 3;
+        for d in 0..6 {
+            let base = if d == 2 * c { 1.0 } else { 0.05 };
+            z.set(i, d, base + 0.01 * (i as f32));
+        }
+    }
+    z.l2_normalize_rows();
+    let phi = coverage_features(&z);
+    let mut f = FeatureCoverage::new(&phi);
+    let mut rng = Rng::new(1);
+    let trace = greedy_maximize(&mut f, 3, GreedyMode::Naive, true, &mut rng);
+    let clusters: std::collections::HashSet<usize> =
+        trace.selected.iter().map(|&i| i % 3).collect();
+    assert_eq!(clusters.len(), 3, "greedy should cover all 3 clusters");
+}

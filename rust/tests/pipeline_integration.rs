@@ -1,0 +1,263 @@
+//! Integration tests: the full pre-processing → strategy → trainer path
+//! over the real AOT artifacts, plus failure-injection checks.
+
+use milo::coordinator::{PreprocessOptions, Preprocessor, StrategyKind};
+use milo::data::{DatasetId, Split};
+use milo::kernel::SimilarityBackend;
+use milo::runtime::Runtime;
+use milo::selection::{SelectCtx, Strategy};
+use milo::train::model::MlpModel;
+use milo::train::{TrainConfig, Trainer};
+use milo::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; integration tests skipped");
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+#[test]
+fn milo_selects_correct_sizes_in_both_phases() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Trec6Like.generate(1);
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            fraction: 0.1,
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        },
+    );
+    let meta = pre.run(&ds).unwrap();
+    let mut strat = meta.milo_strategy(1.0 / 6.0);
+    let mut model = MlpModel::load(&rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(0);
+    let k = (0.1 * ds.n_train() as f64).round() as usize;
+    let total = 30;
+    for epoch in [0usize, 4, 5, 29] {
+        let mut ctx = SelectCtx {
+            rt: &rt,
+            ds: &ds,
+            model: &mut model,
+            epoch,
+            total_epochs: total,
+            k,
+            rng: &mut rng,
+        };
+        let sel = strat.select(&mut ctx).unwrap();
+        assert_eq!(sel.len(), k, "epoch {epoch}");
+        let mut d = sel.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), k, "duplicates at epoch {epoch}");
+        assert!(d.iter().all(|&i| i < ds.n_train()));
+    }
+}
+
+#[test]
+fn milo_curriculum_moves_from_easy_to_hard() {
+    // The curriculum's defining property on the generator's ground truth:
+    // mean hardness of selected samples must increase across the phase
+    // switch (graph-cut easy phase -> disparity-min WRE phase).
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Cifar100Like.generate(2);
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            fraction: 0.1,
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        },
+    );
+    let meta = pre.run(&ds).unwrap();
+    let mut strat = meta.milo_strategy(0.5);
+    let mut model = MlpModel::load(&rt, "cifar100", 128, 1).unwrap();
+    let mut rng = Rng::new(1);
+    let k = (0.1 * ds.n_train() as f64) as usize;
+    let mean_hardness = |sel: &[usize]| -> f64 {
+        sel.iter().map(|&i| ds.hardness[i] as f64).sum::<f64>() / sel.len() as f64
+    };
+    let mut phase_means = [0.0f64; 2];
+    for (slot, epoch) in [(0usize, 0usize), (1, 10)] {
+        let mut ctx = SelectCtx {
+            rt: &rt,
+            ds: &ds,
+            model: &mut model,
+            epoch,
+            total_epochs: 20,
+            k,
+            rng: &mut rng,
+        };
+        let sel = strat.select(&mut ctx).unwrap();
+        phase_means[slot] = mean_hardness(&sel);
+    }
+    assert!(
+        phase_means[1] > phase_means[0],
+        "WRE phase ({}) must be harder than SGE phase ({})",
+        phase_means[1],
+        phase_means[0]
+    );
+}
+
+#[test]
+fn gradient_baselines_produce_valid_subsets() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::RottenLike.generate(3);
+    let mut model = MlpModel::load(&rt, "rotten", 128, 1).unwrap();
+    let mut rng = Rng::new(2);
+    let k = 100;
+    for kind in [
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+        StrategyKind::Glister,
+    ] {
+        let mut strat = kind.build(None, None).unwrap();
+        let mut ctx = SelectCtx {
+            rt: &rt,
+            ds: &ds,
+            model: &mut model,
+            epoch: 0,
+            total_epochs: 10,
+            k,
+            rng: &mut rng,
+        };
+        let sel = strat.select(&mut ctx).unwrap();
+        assert_eq!(sel.len(), k, "{}", kind.name());
+        let mut d = sel.clone();
+        d.dedup();
+        assert_eq!(d.len(), k, "{} produced duplicates", kind.name());
+        // class-balanced: both classes represented
+        let classes: std::collections::HashSet<u32> =
+            sel.iter().map(|&i| ds.train_y[i]).collect();
+        assert_eq!(classes.len(), 2, "{}", kind.name());
+    }
+}
+
+#[test]
+fn strategies_are_deterministic_under_same_seed() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::Trec6Like.generate(4);
+    for kind in [
+        StrategyKind::Milo { kappa: 1.0 / 6.0 },
+        StrategyKind::AdaptiveRandom,
+        StrategyKind::CraigPb,
+    ] {
+        let run = || {
+            let pre = Preprocessor::with_options(
+                &rt,
+                PreprocessOptions {
+                    fraction: 0.1,
+                    backend: SimilarityBackend::Native,
+                    seed: 7,
+                    ..Default::default()
+                },
+            );
+            let metadata = if kind.needs_metadata() {
+                Some(pre.run(&ds).unwrap())
+            } else {
+                None
+            };
+            let mut strat = kind.build(metadata.as_ref(), None).unwrap();
+            let cfg = TrainConfig {
+                epochs: 3,
+                fraction: 0.1,
+                eval_every: 0,
+                seed: 1,
+                ..TrainConfig::recipe_for(&ds, 3)
+            };
+            Trainer::new(&rt, &ds, cfg)
+                .unwrap()
+                .run(strat.as_mut())
+                .unwrap()
+                .test_accuracy
+        };
+        assert_eq!(run(), run(), "{} not deterministic", kind.name());
+    }
+}
+
+#[test]
+fn pjrt_and_native_preprocessing_agree_on_structure() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::RottenLike.generate(5);
+    let run = |backend| {
+        let pre = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.1,
+                backend,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        pre.run(&ds).unwrap()
+    };
+    let native = run(SimilarityBackend::Native);
+    let pjrt = run(SimilarityBackend::Pjrt);
+    // The similarity kernels agree to float tolerance, so the deterministic
+    // parts of the metadata (fixed disparity-min subset) must agree exactly
+    // in size and near-exactly in membership.
+    assert_eq!(native.fixed_dm.len(), pjrt.fixed_dm.len());
+    let overlap = native
+        .fixed_dm
+        .iter()
+        .filter(|i| pjrt.fixed_dm.contains(i))
+        .count();
+    let frac = overlap as f64 / native.fixed_dm.len() as f64;
+    assert!(frac > 0.95, "fixed-DM overlap only {frac}");
+    // WRE probabilities close
+    for (a, b) in native.wre_classes.iter().zip(&pjrt.wre_classes) {
+        assert_eq!(a.indices, b.indices);
+        for (x, y) in a.probs.iter().zip(&b.probs) {
+            assert!((x - y).abs() < 1e-4, "probs {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn trainer_rejects_missing_artifact_variants() {
+    let Some(rt) = runtime() else { return };
+    let ds = DatasetId::RottenLike.generate(6);
+    // hidden=999 was never compiled
+    let cfg = TrainConfig { hidden: 999, ..TrainConfig::recipe_for(&ds, 2) };
+    assert!(Trainer::new(&rt, &ds, cfg).is_err());
+    // seed 99 has no param blob
+    let cfg = TrainConfig { seed: 99, ..TrainConfig::recipe_for(&ds, 2) };
+    assert!(Trainer::new(&rt, &ds, cfg).is_err());
+}
+
+#[test]
+fn encoder_embeddings_carry_class_signal() {
+    // zero-shot encoder sanity: within-class cosine similarity above
+    // across-class (otherwise the whole submodular pipeline is blind)
+    let Some(rt) = runtime() else { return };
+    for id in [DatasetId::Cifar10Like, DatasetId::Trec6Like, DatasetId::Glyphs] {
+        let ds = id.generate(7);
+        let pre = Preprocessor::new(&rt);
+        let emb = pre.encode(&ds, Split::Train).unwrap();
+        let cos = |a: &[f32], b: &[f32]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum()
+        };
+        let (mut win, mut acr) = (0.0, 0.0);
+        let (mut nw, mut na) = (0usize, 0usize);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let c = cos(emb.row(i), emb.row(j));
+                if ds.train_y[i] == ds.train_y[j] {
+                    win += c;
+                    nw += 1;
+                } else {
+                    acr += c;
+                    na += 1;
+                }
+            }
+        }
+        assert!(
+            win / nw as f64 > acr / na as f64,
+            "{}: encoder has no class signal",
+            ds.name()
+        );
+    }
+}

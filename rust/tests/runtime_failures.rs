@@ -1,0 +1,215 @@
+//! Failure-injection tests: the runtime and metadata layers must reject
+//! malformed inputs with actionable errors, never panic or silently
+//! mis-execute. (Requires `make artifacts`; tests skip when absent.)
+
+use milo::coordinator::{load_metadata, save_metadata, Metadata};
+use milo::runtime::{Arg, Runtime};
+use milo::selection::milo::ClassProbs;
+
+fn runtime() -> Option<Runtime> {
+    Runtime::open("artifacts").ok()
+}
+
+// ---------------------------------------------------------------------------
+// Runtime failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_artifact_is_an_error_not_a_panic() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("no_such_artifact", &[]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("no_such_artifact"),
+        "error should name the artifact: {msg}"
+    );
+}
+
+#[test]
+fn wrong_arity_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    // encoder_cifar10 takes exactly one input
+    let err = rt.execute("encoder_cifar10", &[]).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        msg.contains("input") || msg.contains("arity") || msg.contains("expected"),
+        "unhelpful arity error: {msg}"
+    );
+}
+
+#[test]
+fn wrong_buffer_size_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let short = vec![0.0f32; 7]; // encoder expects BATCH×D
+    let err = rt.execute("encoder_cifar10", &[Arg::F32(&short)]).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        msg.contains("shape") || msg.contains("size") || msg.contains("element"),
+        "unhelpful shape error: {msg}"
+    );
+}
+
+#[test]
+fn wrong_dtype_is_rejected() {
+    let Some(rt) = runtime() else { return };
+    let man = rt.manifest();
+    let spec = &man.artifacts["encoder_cifar10"].inputs[0];
+    let n: usize = spec.shape.iter().product();
+    let ints = vec![0i32; n];
+    let err = rt.execute("encoder_cifar10", &[Arg::I32(&ints)]).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        msg.contains("dtype") || msg.contains("f32") || msg.contains("type"),
+        "unhelpful dtype error: {msg}"
+    );
+}
+
+#[test]
+fn missing_artifacts_dir_fails_with_guidance() {
+    let err = match Runtime::open("definitely/not/a/dir") {
+        Ok(_) => panic!("open should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("make artifacts") || msg.contains("manifest"),
+        "error should point at `make artifacts`: {msg}"
+    );
+}
+
+#[test]
+fn corrupt_manifest_fails_cleanly() {
+    let dir = std::env::temp_dir().join(format!("milo_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json at all").unwrap();
+    let err = match Runtime::open(&dir) {
+        Ok(_) => panic!("open should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(msg.contains("manifest") || msg.contains("pars"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn manifest_with_missing_artifact_file_fails() {
+    let Some(rt) = runtime() else { return };
+    // clone the real manifest into a temp dir but don't copy the hlo files
+    let dir = std::env::temp_dir().join(format!("milo_missing_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = std::fs::read_to_string("artifacts/manifest.json").unwrap();
+    std::fs::write(dir.join("manifest.json"), src).unwrap();
+    let err = match Runtime::open(&dir) {
+        Ok(_) => panic!("open should fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(msg.contains("missing") || msg.contains("artifact"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+    drop(rt);
+}
+
+// ---------------------------------------------------------------------------
+// Metadata store failure injection + roundtrip
+// ---------------------------------------------------------------------------
+
+fn sample_metadata() -> Metadata {
+    Metadata {
+        dataset: "trec6".into(),
+        fraction: 0.1,
+        sge_subsets: vec![vec![1, 5, 9], vec![2, 5, 8]],
+        wre_classes: vec![
+            ClassProbs { indices: vec![0, 1, 2], probs: vec![0.5, 0.3, 0.2] },
+            ClassProbs { indices: vec![3, 4], probs: vec![0.6, 0.4] },
+        ],
+        fixed_dm: vec![0, 4, 9],
+        preprocess_secs: 1.25,
+    }
+}
+
+#[test]
+fn metadata_roundtrips_exactly() {
+    let dir = std::env::temp_dir().join(format!("milo_meta_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("meta.json");
+    let meta = sample_metadata();
+    save_metadata(&meta, &path).unwrap();
+    let back = load_metadata(&path).unwrap();
+    assert_eq!(back.dataset, meta.dataset);
+    assert_eq!(back.fraction, meta.fraction);
+    assert_eq!(back.sge_subsets, meta.sge_subsets);
+    assert_eq!(back.fixed_dm, meta.fixed_dm);
+    assert_eq!(back.wre_classes.len(), meta.wre_classes.len());
+    for (a, b) in back.wre_classes.iter().zip(&meta.wre_classes) {
+        assert_eq!(a.indices, b.indices);
+        for (x, y) in a.probs.iter().zip(&b.probs) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_metadata_fails_to_load() {
+    let dir = std::env::temp_dir().join(format!("milo_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("meta.json");
+    let meta = sample_metadata();
+    save_metadata(&meta, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    assert!(load_metadata(&path).is_err(), "truncated JSON must not parse");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn garbage_metadata_fields_fail_to_load() {
+    let dir = std::env::temp_dir().join(format!("milo_garbage_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("meta.json");
+    std::fs::write(&path, r#"{"dataset": 42, "fraction": "x"}"#).unwrap();
+    assert!(load_metadata(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_cached_recovers_from_corrupt_cache() {
+    // a corrupt cache entry must be silently regenerated, not crash
+    let Some(rt) = runtime() else { return };
+    use milo::coordinator::{PreprocessOptions, Preprocessor};
+    use milo::data::DatasetId;
+    let ds = DatasetId::Trec6Like.generate(1);
+    let dir = std::env::temp_dir().join(format!("milo_cache_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            fraction: 0.05,
+            backend: milo::kernel::SimilarityBackend::Native,
+            ..Default::default()
+        },
+    );
+    // seed the cache, then corrupt every file in it
+    pre.run_cached(&ds, &dir).unwrap();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        std::fs::write(entry.unwrap().path(), "{broken").unwrap();
+    }
+    let meta = pre.run_cached(&ds, &dir).expect("should regenerate");
+    assert!(!meta.sge_subsets.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(rt) = runtime() else { return };
+    let man = rt.manifest();
+    let spec = &man.artifacts["encoder_trec6"].inputs[0];
+    let n: usize = spec.shape.iter().product();
+    let x = vec![0.1f32; n];
+    let before = rt.stats();
+    rt.execute("encoder_trec6", &[Arg::F32(&x)]).unwrap();
+    rt.execute("encoder_trec6", &[Arg::F32(&x)]).unwrap();
+    let after = rt.stats();
+    assert!(after.executions >= before.executions + 2);
+    assert!(after.execute_secs >= before.execute_secs);
+}

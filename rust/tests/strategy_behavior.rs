@@ -1,0 +1,162 @@
+//! Behavioural contracts of the selection strategies (adaptive vs fixed,
+//! caching, class balance, exploration-share decay).
+
+use milo::coordinator::{PreprocessOptions, Preprocessor};
+use milo::data::DatasetId;
+use milo::kernel::SimilarityBackend;
+use milo::runtime::Runtime;
+use milo::selection::{
+    AdaptiveRandomStrategy, RandomStrategy, SelectCtx, SgeVariantStrategy, Strategy,
+};
+use milo::train::model::MlpModel;
+use milo::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::open(dir).unwrap())
+}
+
+struct Fixture {
+    rt: Runtime,
+    ds: milo::data::Dataset,
+}
+
+impl Fixture {
+    fn new() -> Option<Fixture> {
+        let rt = runtime()?;
+        let ds = DatasetId::Trec6Like.generate(9);
+        Some(Fixture { rt, ds })
+    }
+
+    fn select(
+        &self,
+        strat: &mut dyn Strategy,
+        model: &mut MlpModel,
+        rng: &mut Rng,
+        epoch: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        let mut ctx = SelectCtx {
+            rt: &self.rt,
+            ds: &self.ds,
+            model,
+            epoch,
+            total_epochs: 20,
+            k,
+            rng,
+        };
+        strat.select(&mut ctx).unwrap()
+    }
+}
+
+#[test]
+fn random_strategy_caches_first_draw() {
+    let Some(fx) = Fixture::new() else { return };
+    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(1);
+    let mut s = RandomStrategy::new();
+    let a = fx.select(&mut s, &mut model, &mut rng, 0, 50);
+    let b = fx.select(&mut s, &mut model, &mut rng, 5, 50);
+    assert_eq!(a, b, "RANDOM must reuse its first subset");
+    assert!(!s.is_adaptive());
+}
+
+#[test]
+fn adaptive_random_redraws() {
+    let Some(fx) = Fixture::new() else { return };
+    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(2);
+    let mut s = AdaptiveRandomStrategy;
+    let a = fx.select(&mut s, &mut model, &mut rng, 0, 50);
+    let b = fx.select(&mut s, &mut model, &mut rng, 1, 50);
+    assert_ne!(a, b, "ADAPTIVE-RANDOM must redraw");
+    assert!(s.is_adaptive());
+}
+
+#[test]
+fn sge_variant_greedy_share_decays() {
+    let Some(fx) = Fixture::new() else { return };
+    let pre = Preprocessor::with_options(
+        &fx.rt,
+        PreprocessOptions {
+            fraction: 0.1,
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        },
+    );
+    let meta = pre.run(&fx.ds).unwrap();
+    let sge_pool: std::collections::HashSet<usize> =
+        meta.sge_subsets.iter().flatten().cloned().collect();
+    let mut s = SgeVariantStrategy::new(meta.sge_subsets.clone());
+    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(3);
+    let k = 120;
+    // early epoch: almost all picks from the SGE pool; late epoch: few
+    let early = fx.select(&mut s, &mut model, &mut rng, 0, k);
+    let late = fx.select(&mut s, &mut model, &mut rng, 19, k);
+    let overlap = |sel: &[usize]| sel.iter().filter(|i| sge_pool.contains(i)).count();
+    let (e, l) = (overlap(&early), overlap(&late));
+    assert!(
+        e > l + k / 4,
+        "greedy share must decay: early {e}, late {l} of {k}"
+    );
+    assert_eq!(early.len(), k);
+    assert_eq!(late.len(), k);
+}
+
+#[test]
+fn milo_fixed_subset_is_disparity_min_selection() {
+    let Some(fx) = Fixture::new() else { return };
+    let pre = Preprocessor::with_options(
+        &fx.rt,
+        PreprocessOptions {
+            fraction: 0.1,
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        },
+    );
+    let meta = pre.run(&fx.ds).unwrap();
+    let mut s = meta.milo_fixed_strategy();
+    assert_eq!(s.name(), "milo_fixed");
+    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(4);
+    let sel = fx.select(&mut s, &mut model, &mut rng, 0, 240);
+    assert_eq!(sel, meta.fixed_dm);
+}
+
+#[test]
+fn wre_respects_class_balance_with_imbalanced_partition() {
+    // Craft an imbalanced ClassProbs set and verify proportional sampling.
+    use milo::selection::milo::ClassProbs;
+    use milo::selection::WreStrategy;
+    let classes = vec![
+        ClassProbs { indices: (0..300).collect(), probs: vec![1.0; 300] },
+        ClassProbs { indices: (300..400).collect(), probs: vec![1.0; 100] },
+        ClassProbs { indices: (400..420).collect(), probs: vec![1.0; 20] },
+    ];
+    let wre = WreStrategy::new("t", classes);
+    let mut rng = Rng::new(5);
+    let sel = wre.sample_k(42, &mut rng);
+    assert_eq!(sel.len(), 42);
+    let c0 = sel.iter().filter(|&&i| i < 300).count();
+    let c1 = sel.iter().filter(|&&i| (300..400).contains(&i)).count();
+    let c2 = sel.iter().filter(|&&i| i >= 400).count();
+    assert_eq!(c0, 30);
+    assert_eq!(c1, 10);
+    assert_eq!(c2, 2);
+}
+
+#[test]
+fn el2n_prune_is_cached_across_calls() {
+    let Some(fx) = Fixture::new() else { return };
+    let mut s = milo::selection::El2nPruneStrategy::new(1);
+    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
+    let mut rng = Rng::new(6);
+    let a = fx.select(&mut s, &mut model, &mut rng, 0, 60);
+    let b = fx.select(&mut s, &mut model, &mut rng, 3, 60);
+    assert_eq!(a, b, "pruning must be computed once");
+    assert!(!s.is_adaptive());
+}

@@ -1,0 +1,175 @@
+//! Property tests for the submodular machinery (testkit-driven seed
+//! sweeps; proptest is unavailable offline).
+
+use milo::submod::{
+    greedy_maximize, sample_importance, weighted_sample_without_replacement,
+    functions::brute_force_value, GreedyMode, SetFunctionKind,
+};
+use milo::testkit::{check_cases, clustered_kernel, random_kernel};
+use milo::util::rng::Rng;
+
+const KINDS: [SetFunctionKind; 4] = [
+    SetFunctionKind::FacilityLocation,
+    SetFunctionKind::GraphCut { lambda: 0.4 },
+    SetFunctionKind::DisparitySum,
+    SetFunctionKind::DisparityMin,
+];
+
+#[test]
+fn prop_incremental_value_matches_brute_force() {
+    check_cases(100, 20, |seed| {
+        let n = 8 + (seed % 12) as usize;
+        let s = random_kernel(n, seed);
+        let mut rng = Rng::new(seed ^ 1);
+        for kind in KINDS {
+            let mut f = kind.build(&s);
+            let k = 1 + rng.below(n.min(6));
+            let trace = greedy_maximize(f.as_mut(), k, GreedyMode::Naive, kind.lazy_safe(), &mut rng);
+            let brute = brute_force_value(kind, &s, &trace.selected);
+            let inc = f.value();
+            assert!(
+                (inc - brute).abs() < 1e-3 * (1.0 + brute.abs()),
+                "{kind:?} n={n} k={k}: incremental {inc} vs brute {brute}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_submodular_gains_never_increase_along_greedy() {
+    check_cases(200, 20, |seed| {
+        let n = 10 + (seed % 15) as usize;
+        let s = random_kernel(n, seed);
+        let mut rng = Rng::new(seed);
+        for kind in [SetFunctionKind::FacilityLocation, SetFunctionKind::GraphCut { lambda: 0.4 }] {
+            let mut f = kind.build(&s);
+            let trace =
+                greedy_maximize(f.as_mut(), n.min(8), GreedyMode::Naive, true, &mut rng);
+            for w in trace.gains.windows(2) {
+                assert!(
+                    w[0] >= w[1] - 1e-4,
+                    "{kind:?}: gains increased {:?}",
+                    trace.gains
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lazy_matches_naive_everywhere() {
+    check_cases(300, 15, |seed| {
+        let n = 12 + (seed % 20) as usize;
+        let s = random_kernel(n, seed);
+        for kind in KINDS {
+            if !kind.lazy_safe() {
+                continue;
+            }
+            let mut rng = Rng::new(0);
+            let mut f1 = kind.build(&s);
+            let t1 = greedy_maximize(f1.as_mut(), 6.min(n), GreedyMode::Naive, true, &mut rng);
+            let mut f2 = kind.build(&s);
+            let t2 = greedy_maximize(f2.as_mut(), 6.min(n), GreedyMode::Lazy, true, &mut rng);
+            // values must agree even if tie-breaking differs
+            let v1 = brute_force_value(kind, &s, &t1.selected);
+            let v2 = brute_force_value(kind, &s, &t2.selected);
+            assert!(
+                (v1 - v2).abs() < 1e-3 * (1.0 + v1.abs()),
+                "{kind:?} seed {seed}: naive {v1} vs lazy {v2}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_covers_clusters_facility_location() {
+    // FL with k = #clusters must take one element per cluster
+    check_cases(400, 10, |seed| {
+        let clusters = 3 + (seed % 3) as usize;
+        let n = clusters * 8;
+        let (s, assign) = clustered_kernel(n, clusters, 0.9, 0.15, seed);
+        let mut rng = Rng::new(seed);
+        let mut f = SetFunctionKind::FacilityLocation.build(&s);
+        let t = greedy_maximize(f.as_mut(), clusters, GreedyMode::Naive, true, &mut rng);
+        let covered: std::collections::HashSet<usize> =
+            t.selected.iter().map(|&i| assign[i]).collect();
+        assert_eq!(covered.len(), clusters, "FL missed clusters: {:?}", t.selected);
+    });
+}
+
+#[test]
+fn prop_disparity_min_spreads_across_clusters() {
+    check_cases(500, 10, |seed| {
+        let clusters = 4;
+        let n = clusters * 6;
+        let (s, assign) = clustered_kernel(n, clusters, 0.92, 0.2, seed);
+        let mut rng = Rng::new(seed);
+        let mut f = SetFunctionKind::DisparityMin.build(&s);
+        let t = greedy_maximize(f.as_mut(), clusters, GreedyMode::Naive, false, &mut rng);
+        let covered: std::collections::HashSet<usize> =
+            t.selected.iter().map(|&i| assign[i]).collect();
+        assert_eq!(covered.len(), clusters, "DM clumped: {:?}", t.selected);
+    });
+}
+
+#[test]
+fn prop_stochastic_greedy_within_factor_of_full_greedy() {
+    check_cases(600, 8, |seed| {
+        let n = 60;
+        let k = 10;
+        let s = random_kernel(n, seed);
+        let kind = SetFunctionKind::FacilityLocation;
+        let mut rng = Rng::new(seed);
+        let mut f_full = kind.build(&s);
+        let full = greedy_maximize(f_full.as_mut(), k, GreedyMode::Naive, true, &mut rng);
+        let v_full = brute_force_value(kind, &s, &full.selected);
+        let mut f_sg = kind.build(&s);
+        let sg = greedy_maximize(
+            f_sg.as_mut(),
+            k,
+            GreedyMode::Stochastic { epsilon: 0.01 },
+            true,
+            &mut rng,
+        );
+        let v_sg = brute_force_value(kind, &s, &sg.selected);
+        assert!(
+            v_sg >= 0.85 * v_full,
+            "stochastic too weak: {v_sg} vs {v_full} (seed {seed})"
+        );
+    });
+}
+
+#[test]
+fn prop_sample_importance_is_permutation_of_gains() {
+    check_cases(700, 10, |seed| {
+        let n = 20 + (seed % 10) as usize;
+        let s = random_kernel(n, seed);
+        for kind in KINDS {
+            let mut f = kind.build(&s);
+            let g = sample_importance(f.as_mut(), kind.lazy_safe());
+            assert_eq!(g.len(), n);
+            // every element got a score; for representation functions all
+            // finite
+            assert!(g.iter().all(|v| v.is_finite()), "{kind:?}: {g:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_weighted_sampling_marginals_order_by_weight() {
+    // items with larger weight appear at least as often (statistically)
+    let mut rng = Rng::new(42);
+    let w: Vec<f64> = vec![0.5, 1.0, 2.0, 4.0, 8.0];
+    let mut counts = [0usize; 5];
+    for _ in 0..4000 {
+        for i in weighted_sample_without_replacement(&w, 2, &mut rng) {
+            counts[i] += 1;
+        }
+    }
+    for i in 0..4 {
+        assert!(
+            counts[i] < counts[i + 1] + 150,
+            "marginals not ordered: {counts:?}"
+        );
+    }
+}
