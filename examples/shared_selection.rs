@@ -1,0 +1,150 @@
+//! Shared selection: one preprocessing pass, N concurrent consumers.
+//!
+//! The paper's amortization claim as a running topology:
+//!
+//! 1. pre-process once into the content-addressed metadata store
+//!    (`milo::store`) — the build counter proves the pass ran exactly once;
+//! 2. start a `milo::serve` subset server on an ephemeral port;
+//! 3. connect 4 concurrent clients, each drawing its own deterministic
+//!    SGE-subset cycle and WRE sample stream;
+//! 4. (with artifacts present) train a downstream model per client via
+//!    `ServedMiloStrategy`, sharing the single pass.
+//!
+//! Run: `cargo run --release --example shared_selection`
+//! Works without AOT artifacts too: it then serves synthetic metadata and
+//! skips the training step.
+
+use milo::coordinator::{Metadata, PreprocessOptions, Preprocessor};
+use milo::data::DatasetId;
+use milo::selection::milo::ClassProbs;
+use milo::serve::{ServeClient, ServedMiloStrategy, SubsetServer};
+use milo::store::{MetaKey, MetaStore};
+use milo::train::{TrainConfig, Trainer};
+
+const N_CLIENTS: usize = 4;
+
+fn synthetic_metadata() -> Metadata {
+    // 2 classes × 100 points, 3 SGE subsets of 20 — enough structure to
+    // exercise every protocol command without the AOT artifacts.
+    let n_per = 100;
+    Metadata {
+        dataset: "synthetic".into(),
+        fraction: 0.1,
+        sge_subsets: (0..3)
+            .map(|r| (0..20).map(|i| (i * 10 + r) % (2 * n_per)).collect())
+            .collect(),
+        wre_classes: (0..2)
+            .map(|c| ClassProbs {
+                indices: (c * n_per..(c + 1) * n_per).collect(),
+                probs: (0..n_per).map(|i| 1.0 + (i % 7) as f64).collect(),
+            })
+            .collect(),
+        fixed_dm: (0..20).map(|i| i * 9).collect(),
+        preprocess_secs: 0.0,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let store_dir = std::env::temp_dir()
+        .join(format!("milo_shared_selection_{}", std::process::id()));
+    let store = MetaStore::open(&store_dir)?;
+    let seed = 1u64;
+
+    // --- 1. one preprocessing pass, content-addressed -------------------
+    let rt = milo::runtime::Runtime::open("artifacts").ok();
+    let (key, meta) = match &rt {
+        Some(rt) => {
+            let ds = DatasetId::Trec6Like.generate(seed);
+            let pre = Preprocessor::with_options(
+                rt,
+                PreprocessOptions {
+                    fraction: 0.1,
+                    backend: milo::kernel::SimilarityBackend::Native,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            let key = MetaKey::from_options(ds.name(), &pre.opts);
+            let meta = store.get_or_build(&key, || pre.run(&ds))?;
+            (key, meta)
+        }
+        None => {
+            println!("artifacts missing -> serving synthetic metadata");
+            let mut key = MetaKey::from_options("synthetic", &PreprocessOptions::default());
+            key.seed = seed;
+            let meta = store.get_or_build(&key, || Ok(synthetic_metadata()))?;
+            (key, meta)
+        }
+    };
+    println!(
+        "store: fingerprint {}, builds {} (must be 1), {} SGE subsets",
+        key.fingerprint(),
+        store.stats().builds,
+        meta.sge_subsets.len(),
+    );
+
+    // --- 2. serve it on an ephemeral port -------------------------------
+    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), Some(store.clone()), seed)?;
+    let addr = server.addr().to_string();
+    println!("serving on {addr}");
+
+    // --- 3. four concurrent clients draw deterministic streams ----------
+    let streams: Vec<(String, Vec<usize>, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..N_CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                scope.spawn(move || -> anyhow::Result<(String, Vec<usize>, usize)> {
+                    let id = format!("trainer-{c}");
+                    let mut client = ServeClient::connect(&addr, &id)?;
+                    let mut cycle = Vec::new();
+                    for _ in 0..6 {
+                        cycle.push(client.next_subset()?.0);
+                    }
+                    let wre = client.sample_wre(10)?;
+                    Ok((id, cycle, wre.len()))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("client thread panicked"))
+            .collect::<anyhow::Result<Vec<_>>>()
+    })?;
+    for (id, cycle, wre_len) in &streams {
+        println!("  {id}: SGE cycle {cycle:?}, WRE draw of {wre_len}");
+    }
+
+    // --- 4. train off the served stream when artifacts exist ------------
+    if let Some(rt) = &rt {
+        let ds = DatasetId::Trec6Like.generate(seed);
+        let epochs = 6;
+        let cfg = TrainConfig {
+            epochs,
+            fraction: 0.1,
+            eval_every: 0,
+            ..TrainConfig::recipe_for(&ds, epochs)
+        };
+        let mut strategy =
+            ServedMiloStrategy::connect(&addr, "trainer-main", 1.0 / 6.0)?;
+        let out = Trainer::new(rt, &ds, cfg)?.run(&mut strategy)?;
+        println!(
+            "served training: test acc {:.2}% in {:.2}s (preprocess amortized to 0)",
+            100.0 * out.test_accuracy,
+            out.train_secs
+        );
+    }
+
+    let stats = server.stats();
+    println!(
+        "server: {} connections, {} requests, {} subsets served, {} WRE samples; \
+         store builds {} (the one pass everyone shared)",
+        stats.connections,
+        stats.requests,
+        stats.subsets_served,
+        stats.wre_samples,
+        store.stats().builds,
+    );
+    server.shutdown();
+    std::fs::remove_dir_all(&store_dir).ok();
+    Ok(())
+}

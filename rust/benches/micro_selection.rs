@@ -3,7 +3,9 @@
 //!   * greedy maximization (naive vs lazy vs stochastic),
 //!   * GreedySampleImportance (the WRE sweep),
 //!   * weighted sampling (the per-epoch WRE select),
-//!   * the PJRT train-step call itself.
+//!   * the PJRT train-step call itself,
+//!   * metadata-store cache-hit load vs a full preprocessing pass (the
+//!     amortization ratio behind the paper's "no additional cost" claim).
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -77,4 +79,89 @@ fn main() {
     bench("weighted_sample_5000_k500", 2, 20, || {
         weighted_sample_without_replacement(&weights, 500, &mut rng)
     });
+
+    bench_store_amortization();
+}
+
+/// Store amortization: once metadata is in the content-addressed store, a
+/// consumer pays a cache-hit load (or one binary decode) instead of a full
+/// `Preprocessor::run`. With artifacts present this prints the measured
+/// ratio; without, it still benches the encode/decode hot path over
+/// synthetic metadata.
+fn bench_store_amortization() {
+    use milo::store::{MetaKey, MetaStore};
+
+    let dir = std::env::temp_dir()
+        .join(format!("milo_bench_store_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+
+    let (key, meta, full_secs) = if let Ok(rt) = Runtime::open("artifacts") {
+        let ds = milo::data::DatasetId::Trec6Like.generate(1);
+        let pre = milo::coordinator::Preprocessor::with_options(
+            &rt,
+            milo::coordinator::PreprocessOptions {
+                fraction: 0.1,
+                backend: milo::kernel::SimilarityBackend::Native,
+                ..Default::default()
+            },
+        );
+        let key = MetaKey::from_options(ds.name(), &pre.opts);
+        let t0 = std::time::Instant::now();
+        let meta = pre.run(&ds).unwrap();
+        let full_secs = t0.elapsed().as_secs_f64();
+        (key, meta, Some(full_secs))
+    } else {
+        eprintln!("artifacts missing: store bench uses synthetic metadata");
+        let mut rng = Rng::new(11);
+        let n = 5000;
+        let meta = milo::coordinator::Metadata {
+            dataset: "synthetic".into(),
+            fraction: 0.1,
+            sge_subsets: (0..3).map(|_| rng.sample_indices(n, n / 10)).collect(),
+            wre_classes: (0..10)
+                .map(|c| milo::selection::milo::ClassProbs {
+                    indices: (c * n / 10..(c + 1) * n / 10).collect(),
+                    probs: vec![10.0 / n as f64; n / 10],
+                })
+                .collect(),
+            fixed_dm: rng.sample_indices(n, n / 10),
+            preprocess_secs: 0.0,
+        };
+        let key = MetaKey::from_options(
+            "synthetic",
+            &milo::coordinator::PreprocessOptions::default(),
+        );
+        (key, meta, None)
+    };
+
+    store.put(&key, meta).unwrap();
+    bench("store_lru_cache_hit", 2, 50, || {
+        store
+            .get_or_build(&key, || unreachable!("must be a cache hit"))
+            .unwrap()
+    });
+    bench("store_cold_binary_decode", 2, 50, || {
+        store.load_uncached(&key).unwrap().unwrap()
+    });
+
+    if let Some(full_secs) = full_secs {
+        // measured amortization ratio: full pass vs warm cache hit
+        let iters = 200;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(
+                store.get_or_build(&key, || unreachable!()).unwrap(),
+            );
+        }
+        let hit_secs = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "store amortization: full preprocess {:.3}s vs cache hit {:.6}s -> {:.0}x \
+             (every additional consumer is ~free)",
+            full_secs,
+            hit_secs,
+            full_secs / hit_secs.max(1e-12),
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

@@ -9,8 +9,11 @@
 //! 3. SGE: `n` stochastic-greedy subsets under graph-cut (easy phase);
 //! 4. WRE: full-sweep `GreedySampleImportance` under disparity-min →
 //!    Taylor-softmax importance distribution per class (hard phase);
-//! 5. store everything as dataset metadata (JSON on disk), so training any
-//!    number of downstream models costs no further selection work.
+//! 5. store everything as dataset metadata — the content-addressed binary
+//!    registry in [`crate::store`] (or plain JSON via [`save_metadata`]) —
+//!    so training any number of downstream models costs no further
+//!    selection work; `milo serve` ([`crate::serve`]) exposes one such
+//!    artifact to N concurrent trainers over TCP.
 
 pub mod experiment;
 pub mod repro;
@@ -79,7 +82,7 @@ impl Default for PreprocessOptions {
 
 /// The per-(dataset, fraction) metadata MILO stores (paper: "pre-selecting
 /// subsets and storing them as metadata with each dataset").
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Metadata {
     pub dataset: String,
     pub fraction: f64,
@@ -379,27 +382,21 @@ impl<'a> Preprocessor<'a> {
         })
     }
 
-    /// Run with a disk cache: `results/metadata/{ds}_f{frac}_s{seed}.json`.
-    /// Mirrors the paper's "pre-processing only needs to be done once per
-    /// dataset (and subset size)".
+    /// Run against the content-addressed metadata store rooted at `dir`
+    /// (see [`crate::store`]): the canonical fingerprint of the full
+    /// preprocessing configuration addresses a versioned binary artifact,
+    /// shared through an in-process LRU, so concurrent consumers trigger at
+    /// most one preprocessing pass per configuration. Mirrors the paper's
+    /// "pre-processing only needs to be done once per dataset (and subset
+    /// size)".
     pub fn run_cached(&self, ds: &Dataset, dir: impl Into<PathBuf>) -> Result<Metadata> {
-        let dir = dir.into();
-        std::fs::create_dir_all(&dir)?;
-        let path = dir.join(format!(
-            "{}_f{}_s{}_{}.json",
-            ds.name(),
-            self.opts.fraction,
-            self.opts.seed,
-            self.opts.metric.name(),
-        ));
-        if path.exists() {
-            if let Ok(meta) = load_metadata(&path) {
-                return Ok(meta);
-            }
-        }
-        let meta = self.run(ds)?;
-        save_metadata(&meta, &path)?;
-        Ok(meta)
+        // `shared` (not `open`): every run_cached call site on the same dir
+        // hits one process-wide LRU + build-lock set, so concurrent callers
+        // share a single pass instead of each opening a cold store.
+        let store = crate::store::MetaStore::shared(dir)?;
+        let key = crate::store::MetaKey::from_options(ds.name(), &self.opts);
+        let meta = store.get_or_build(&key, || self.run(ds))?;
+        Ok(Metadata::clone(&meta))
     }
 }
 
@@ -407,7 +404,9 @@ impl<'a> Preprocessor<'a> {
 // Metadata (de)serialization
 // ---------------------------------------------------------------------------
 
-pub fn save_metadata(meta: &Metadata, path: &std::path::Path) -> Result<()> {
+/// Metadata as a JSON document — the schema shared by [`save_metadata`]
+/// and the serve protocol's `GET_META` response.
+pub fn metadata_to_json(meta: &Metadata) -> Json {
     let sge = Json::arr(
         meta.sge_subsets
             .iter()
@@ -428,7 +427,7 @@ pub fn save_metadata(meta: &Metadata, path: &std::path::Path) -> Result<()> {
             })
             .collect(),
     );
-    let doc = Json::obj(vec![
+    Json::obj(vec![
         ("dataset", Json::str(meta.dataset.clone())),
         ("fraction", Json::num(meta.fraction)),
         ("sge_subsets", sge),
@@ -438,15 +437,11 @@ pub fn save_metadata(meta: &Metadata, path: &std::path::Path) -> Result<()> {
             Json::arr(meta.fixed_dm.iter().map(|&i| Json::num(i as f64)).collect()),
         ),
         ("preprocess_secs", Json::num(meta.preprocess_secs)),
-    ]);
-    std::fs::write(path, doc.to_string())?;
-    Ok(())
+    ])
 }
 
-pub fn load_metadata(path: &std::path::Path) -> Result<Metadata> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let v = Json::parse(&text)?;
+/// Parse the [`metadata_to_json`] schema back into [`Metadata`].
+pub fn metadata_from_json(v: &Json) -> Result<Metadata> {
     let usizes = |j: &Json| -> Result<Vec<usize>> {
         j.as_arr()?.iter().map(|x| x.as_usize()).collect()
     };
@@ -482,6 +477,17 @@ pub fn load_metadata(path: &std::path::Path) -> Result<Metadata> {
     })
 }
 
+pub fn save_metadata(meta: &Metadata, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, metadata_to_json(meta).to_string())?;
+    Ok(())
+}
+
+pub fn load_metadata(path: &std::path::Path) -> Result<Metadata> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    metadata_from_json(&Json::parse(&text)?)
+}
+
 impl Metadata {
     /// Instantiate the full MILO strategy from this metadata.
     pub fn milo_strategy(&self, kappa: f64) -> crate::selection::MiloStrategy {
@@ -504,11 +510,7 @@ mod tests {
     use crate::data::DatasetId;
 
     fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Runtime::open(dir).unwrap())
+        crate::testkit::artifacts_or_skip()
     }
 
     #[test]

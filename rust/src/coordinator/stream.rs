@@ -298,7 +298,7 @@ mod tests {
     use crate::runtime::Runtime;
 
     fn runtime() -> Option<Runtime> {
-        Runtime::open("artifacts").ok()
+        crate::testkit::artifacts_or_skip()
     }
 
     fn pre<'a>(rt: &'a Runtime, fraction: f64, seed: u64) -> Preprocessor<'a> {

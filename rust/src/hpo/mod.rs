@@ -94,6 +94,10 @@ pub struct Tuner<'a> {
     /// Pre-processing metadata, shared by every configuration evaluation —
     /// the amortization that makes MILO tuning fast.
     pub metadata: Option<Metadata>,
+    /// When set, metadata comes from a running `milo serve` instance at
+    /// this address (`GET_META`) instead of a local preprocessing pass —
+    /// N concurrent tuners then share exactly one pass server-side.
+    pub serve_addr: Option<String>,
     pub verbose: bool,
 }
 
@@ -104,9 +108,16 @@ impl<'a> Tuner<'a> {
             ds,
             space: HpoSpace::default_for(ds),
             metadata: None,
+            serve_addr: None,
             verbose: false,
             cfg,
         }
+    }
+
+    /// Run trials against a served metadata instance (see [`crate::serve`]).
+    pub fn with_server(mut self, addr: impl Into<String>) -> Tuner<'a> {
+        self.serve_addr = Some(addr.into());
+        self
     }
 
     /// Evaluate one configuration for `epochs`; returns val accuracy.
@@ -164,18 +175,58 @@ impl<'a> Tuner<'a> {
         let mut sw = Stopwatch::new();
         let mut rng = Rng::new(self.cfg.seed ^ 0x49_50_4F).derive_str(self.cfg.strategy.name());
 
-        // Pre-processing (once; shared by all trials)
+        // Pre-processing (once; shared by all trials). In served mode the
+        // pass already happened inside a `milo serve` process — fetch its
+        // metadata so this tuner (and any others pointed at the same
+        // address) pays nothing.
         if self.cfg.strategy.needs_metadata() && self.metadata.is_none() {
-            let pre = crate::coordinator::Preprocessor::with_options(
-                self.rt,
-                crate::coordinator::PreprocessOptions {
-                    fraction: self.cfg.fraction,
-                    backend: crate::kernel::SimilarityBackend::Native,
-                    seed: self.cfg.seed,
-                    ..Default::default()
-                },
-            );
-            self.metadata = Some(sw.time("preprocess", || pre.run(self.ds))?);
+            self.metadata = Some(match self.serve_addr.clone() {
+                Some(addr) => {
+                    let mut client = crate::serve::ServeClient::connect(
+                        &addr,
+                        &format!("tuner_{}_{}", self.ds.name(), self.cfg.seed),
+                    )?;
+                    // the dataset name is seedless, so the seed must be
+                    // checked explicitly: a seed-mismatched server serves
+                    // selections for a different dataset instantiation
+                    anyhow::ensure!(
+                        client.server_seed() == self.cfg.seed,
+                        "serve at {addr} runs seed {}, tuner needs {}",
+                        client.server_seed(),
+                        self.cfg.seed
+                    );
+                    let meta = sw.time("preprocess", || client.get_meta())?;
+                    // a mismatched server would hand us subsets indexing a
+                    // different train set — fail loudly, never train on them
+                    anyhow::ensure!(
+                        meta.dataset == self.ds.name(),
+                        "serve at {addr} holds metadata for dataset {:?}, \
+                         tuner needs {:?}",
+                        meta.dataset,
+                        self.ds.name()
+                    );
+                    anyhow::ensure!(
+                        (meta.fraction - self.cfg.fraction).abs() < 1e-9,
+                        "serve at {addr} holds metadata for fraction {}, \
+                         tuner needs {}",
+                        meta.fraction,
+                        self.cfg.fraction
+                    );
+                    meta
+                }
+                None => {
+                    let pre = crate::coordinator::Preprocessor::with_options(
+                        self.rt,
+                        crate::coordinator::PreprocessOptions {
+                            fraction: self.cfg.fraction,
+                            backend: crate::kernel::SimilarityBackend::Native,
+                            seed: self.cfg.seed,
+                            ..Default::default()
+                        },
+                    );
+                    sw.time("preprocess", || pre.run(self.ds))?
+                }
+            });
         }
 
         let mut tpe = TpeSampler::new(self.space.clone(), 0.25);
@@ -274,11 +325,7 @@ mod tests {
     use crate::data::DatasetId;
 
     fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Runtime::open(dir).unwrap())
+        crate::testkit::artifacts_or_skip()
     }
 
     #[test]
@@ -299,6 +346,45 @@ mod tests {
         assert!(out.best.val_accuracy >= 0.3);
         assert!(out.best_test_accuracy > 0.3);
         assert!(out.tuning_secs > 0.0);
+    }
+
+    #[test]
+    fn tuner_runs_against_served_metadata() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::RottenLike.generate(3);
+        // one preprocessing pass, served; the tuner fetches instead of
+        // recomputing
+        let pre = crate::coordinator::Preprocessor::with_options(
+            &rt,
+            crate::coordinator::PreprocessOptions {
+                fraction: 0.1,
+                backend: crate::kernel::SimilarityBackend::Native,
+                seed: 3,
+                ..Default::default()
+            },
+        );
+        let meta = std::sync::Arc::new(pre.run(&ds).unwrap());
+        let server =
+            crate::serve::SubsetServer::bind("127.0.0.1:0", meta.clone(), None, 3)
+                .unwrap();
+        let cfg = HpoConfig {
+            algo: SearchAlgo::Random,
+            strategy: StrategyKind::Milo { kappa: 1.0 / 6.0 },
+            fraction: 0.1,
+            max_epochs: 4,
+            eta: 2,
+            seed: 3,
+        };
+        let mut tuner =
+            Tuner::new(&rt, &ds, cfg).with_server(server.addr().to_string());
+        let out = tuner.run().unwrap();
+        assert!(!out.trials.is_empty());
+        // the tuner's metadata is the served pass, not a local recompute
+        assert_eq!(
+            tuner.metadata.as_ref().unwrap().sge_subsets,
+            meta.sge_subsets
+        );
+        server.shutdown();
     }
 
     #[test]

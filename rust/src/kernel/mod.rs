@@ -338,11 +338,7 @@ mod tests {
 
     #[test]
     fn pjrt_matches_native_cosine() {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
-        let rt = Runtime::open(dir).unwrap();
+        let Some(rt) = crate::testkit::artifacts_or_skip() else { return };
         let e = rt.manifest().embed_dim;
         let z = rand_embed(70, e, 5); // non-multiple of tile: exercises padding
         let native = native_similarity(&z, SimMetric::Cosine);
@@ -362,11 +358,7 @@ mod tests {
 
     #[test]
     fn pjrt_matches_native_rbf() {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
-        let rt = Runtime::open(dir).unwrap();
+        let Some(rt) = crate::testkit::artifacts_or_skip() else { return };
         let e = rt.manifest().embed_dim;
         let z = rand_embed(40, e, 6);
         let native = native_similarity(&z, SimMetric::Rbf { kw: 0.1 });

@@ -10,6 +10,13 @@
 //!   maximization (SGE / WRE), the easy-to-hard curriculum, baselines
 //!   (Random, AdaptiveRandom, CraigPB, GradMatchPB, Glister, pruning),
 //!   the trainer, and the hyper-parameter tuner (Random/TPE × Hyperband).
+//! * **Metadata store & selection service** — [`store`] is a versioned,
+//!   content-addressed registry of pre-processed selection metadata
+//!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
+//!   one such artifact to N concurrent trainers/HPO trials over a small
+//!   JSON-line TCP protocol (`milo serve`), so a single preprocessing pass
+//!   amortizes across every consumer — the paper's "train multiple models
+//!   at no additional cost", deployed.
 //! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
 //!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
 //!   text artifacts executed here via PJRT.
@@ -42,6 +49,8 @@ pub mod kernel;
 pub mod report;
 pub mod runtime;
 pub mod selection;
+pub mod serve;
+pub mod store;
 pub mod submod;
 pub mod tensor;
 pub mod testkit;
@@ -63,6 +72,8 @@ pub mod prelude {
         AdaptiveRandomStrategy, FixedStrategy, FullStrategy, MiloStrategy,
         RandomStrategy, Strategy,
     };
+    pub use crate::serve::{ServeClient, ServedMiloStrategy, SubsetServer};
+    pub use crate::store::{MetaKey, MetaStore};
     pub use crate::submod::{GreedyMode, SetFunctionKind};
     pub use crate::tensor::Matrix;
     pub use crate::train::{LrSchedule, TrainConfig, TrainOutcome, Trainer};

@@ -3,8 +3,13 @@
 //! Subcommands:
 //!   * `preprocess` — run MILO pre-processing for a dataset/fraction and
 //!     store the metadata (subsets + WRE distribution) on disk;
+//!   * `precompute` — pre-processing into the content-addressed metadata
+//!     store (versioned binary artifacts, fingerprinted by configuration);
+//!   * `serve`      — serve a store artifact to N concurrent trainers over
+//!     TCP (see `milo::serve` for the protocol);
 //!   * `train`      — train a downstream model with any strategy;
-//!   * `tune`       — hyper-parameter tuning (Random/TPE × Hyperband);
+//!   * `tune`       — hyper-parameter tuning (Random/TPE × Hyperband),
+//!     optionally against a running `milo serve` (`--server addr:port`);
 //!   * `repro`      — regenerate a paper table/figure (see DESIGN.md §5);
 //!   * `list`       — datasets / strategies / experiments.
 //!
@@ -27,10 +32,14 @@ milo — model-agnostic subset selection (MILO reproduction)
 USAGE:
   milo preprocess --dataset <name> [--fraction 0.1] [--backend pjrt|native]
                   [--streaming]    (bounded-memory pipeline w/ backpressure)
+  milo precompute --dataset <name> [--fraction 0.1] [--seed 1]
+                  [--store results/store]   (content-addressed binary store)
+  milo serve --dataset <name> [--addr 127.0.0.1:4077] [--fraction 0.1]
+             [--seed 1] [--store results/store]
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
              [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
   milo tune --dataset <name> --strategy <name> [--algo random|tpe]
-            [--fraction 0.1] [--max-epochs 27]
+            [--fraction 0.1] [--max-epochs 27] [--server host:port]
   milo repro <experiment>... [--epochs 40] [--seeds 1,2]
              [--fractions 0.01,0.05,0.1,0.3] [--out results]
   milo list
@@ -83,6 +92,8 @@ fn run() -> Result<()> {
             Ok(())
         }
         "preprocess" => cmd_preprocess(&args, &artifacts),
+        "precompute" => cmd_precompute(&args, &artifacts),
+        "serve" => cmd_serve(&args, &artifacts),
         "train" => cmd_train(&args, &artifacts),
         "tune" => cmd_tune(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
@@ -159,6 +170,67 @@ fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// Store-backed preprocessing shared by `precompute` and `serve`: resolve
+/// the configuration fingerprint, then hit the store (cache → disk →
+/// build).
+fn store_metadata(
+    args: &Args,
+    artifacts: &str,
+) -> Result<(milo::store::MetaStore, milo::store::MetaKey, std::sync::Arc<milo::coordinator::Metadata>, String, u64)>
+{
+    let rt = Runtime::open(artifacts)?;
+    let (id, seed) = dataset_of(args)?;
+    let ds = id.generate(seed);
+    let pre = Preprocessor::with_options(
+        &rt,
+        PreprocessOptions {
+            fraction: args.get_f64("fraction", 0.1)?,
+            backend: backend_of(args)?,
+            seed,
+            ..Default::default()
+        },
+    );
+    let store = milo::store::MetaStore::open(args.get_or("store", "results/store"))?;
+    let key = milo::store::MetaKey::from_options(ds.name(), &pre.opts);
+    let meta = store.get_or_build(&key, || pre.run(&ds))?;
+    Ok((store, key, meta, ds.name().to_string(), seed))
+}
+
+fn cmd_precompute(args: &Args, artifacts: &str) -> Result<()> {
+    let (store, key, meta, dataset, _) = store_metadata(args, artifacts)?;
+    let st = store.stats();
+    println!(
+        "{} {} -> {} ({} SGE subsets of {}, WRE over {} classes, {})",
+        dataset,
+        key.fingerprint(),
+        store.path_for(&key).display(),
+        meta.sge_subsets.len(),
+        meta.sge_subsets.first().map(|s| s.len()).unwrap_or(0),
+        meta.wre_classes.len(),
+        if st.builds > 0 {
+            format!("built in {:.2}s", meta.preprocess_secs)
+        } else {
+            "already in store".to_string()
+        },
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let (store, key, meta, dataset, seed) = store_metadata(args, artifacts)?;
+    let addr = args.get_or("addr", "127.0.0.1:4077");
+    let server = milo::serve::SubsetServer::bind(addr, meta, Some(store), seed)?;
+    println!(
+        "serving {} (fingerprint {}, seed {}) on {} — protocol: see `milo::serve` docs",
+        dataset,
+        key.fingerprint(),
+        seed,
+        server.addr(),
+    );
+    server.run_forever();
+    Ok(())
+}
+
 fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let rt = Runtime::open(artifacts)?;
     let (id, seed) = dataset_of(args)?;
@@ -214,6 +286,7 @@ fn cmd_tune(args: &Args, artifacts: &str) -> Result<()> {
         seed,
     };
     let mut tuner = Tuner::new(&rt, &ds, cfg);
+    tuner.serve_addr = args.get("server").map(|s| s.to_string());
     tuner.verbose = args.flag("verbose");
     let out = tuner.run()?;
     println!(

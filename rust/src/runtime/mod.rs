@@ -193,11 +193,7 @@ mod tests {
     use super::*;
 
     fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Runtime::open(dir).expect("runtime"))
+        crate::testkit::artifacts_or_skip()
     }
 
     #[test]

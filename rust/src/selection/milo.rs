@@ -13,7 +13,7 @@ use crate::submod::weighted_sample_without_replacement;
 
 /// Per-class WRE sampling state: class member indices (into the train set)
 /// and their Taylor-softmax importance probabilities.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClassProbs {
     pub indices: Vec<usize>,
     pub probs: Vec<f64>,
@@ -187,23 +187,39 @@ impl Strategy for SgeVariantStrategy {
         let t = ctx.epoch as f64 / ctx.total_epochs.max(1) as f64;
         // cosine decay of the greedy share from 1 to 0
         let share = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
-        let k_greedy = ((ctx.k as f64) * share).round() as usize;
+        // clamp to the population: only n_train distinct indices exist, so
+        // asking for more must not spin the uniform fill forever
+        let target = ctx.k.min(ctx.ds.n_train());
+        let k_greedy = ((target as f64) * share).round() as usize;
         let base = self.sge.select(ctx)?;
         let mut out: Vec<usize> = base.into_iter().take(k_greedy).collect();
-        // fill the remainder with uniform random picks not already present
-        let mut in_set = vec![false; ctx.ds.n_train()];
-        for &i in &out {
-            in_set[i] = true;
-        }
-        while out.len() < ctx.k {
-            let j = ctx.rng.below(ctx.ds.n_train());
-            if !in_set[j] {
-                in_set[j] = true;
-                out.push(j);
-            }
-        }
+        fill_uniform(&mut out, ctx.ds.n_train(), target, ctx.rng);
         out.sort_unstable();
         Ok(out)
+    }
+}
+
+/// Top `out` up to `min(target, n_train)` distinct indices with uniform
+/// random picks from `[0, n_train)` not already present. Terminates for
+/// every `target`, including `target >= n_train` (it then completes `out`
+/// to the whole population).
+pub(crate) fn fill_uniform(
+    out: &mut Vec<usize>,
+    n_train: usize,
+    target: usize,
+    rng: &mut crate::util::rng::Rng,
+) {
+    let target = target.min(n_train);
+    let mut in_set = vec![false; n_train];
+    for &i in out.iter() {
+        in_set[i] = true;
+    }
+    while out.len() < target {
+        let j = rng.below(n_train);
+        if !in_set[j] {
+            in_set[j] = true;
+            out.push(j);
+        }
     }
 }
 
@@ -262,11 +278,7 @@ mod tests {
         let mut s = SgeStrategy::new("t", subsets.clone());
         // dummy ctx pieces are unused by SgeStrategy::select
         let ds = crate::data::DatasetId::Trec6Like.generate(1);
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return;
-        }
-        let rt = crate::runtime::Runtime::open(dir).unwrap();
+        let Some(rt) = crate::testkit::artifacts_or_skip() else { return };
         let mut model = crate::train::model::MlpModel::load(&rt, "trec6", 128, 1).unwrap();
         let mut rng = Rng::new(0);
         for i in 0..6 {
@@ -282,6 +294,34 @@ mod tests {
             let got = s.select(&mut ctx).unwrap();
             assert_eq!(got, subsets[i % 3]);
         }
+    }
+
+    #[test]
+    fn fill_uniform_terminates_when_target_exceeds_population() {
+        // regression: SgeVariantStrategy::select used to spin forever when
+        // asked for k >= n_train — the uniform fill kept drawing from an
+        // exhausted population. The fill must clamp to n_train and stop.
+        let mut rng = Rng::new(7);
+        let mut out = vec![0, 1];
+        fill_uniform(&mut out, 4, 10, &mut rng);
+        out.sort_unstable();
+        assert_eq!(out, vec![0, 1, 2, 3], "must complete the population and stop");
+
+        // exact-population request
+        let mut out = Vec::new();
+        fill_uniform(&mut out, 5, 5, &mut rng);
+        out.sort_unstable();
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+
+        // ordinary sub-population request: distinct, bounded, right size
+        let mut out = vec![3];
+        fill_uniform(&mut out, 100, 10, &mut rng);
+        assert_eq!(out.len(), 10);
+        let mut d = out.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+        assert!(out.iter().all(|&i| i < 100));
     }
 
     #[test]

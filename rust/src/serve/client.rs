@@ -1,0 +1,166 @@
+//! Blocking Rust client for the `milo serve` protocol, plus a
+//! [`Strategy`] adapter so a trainer can draw its subsets live from a
+//! served metadata instance instead of local files.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{metadata_from_json, Metadata};
+use crate::selection::{SelectCtx, Strategy};
+use crate::util::json::Json;
+
+/// A blocking connection to a [`SubsetServer`](super::SubsetServer). One
+/// request/response round-trip per call; reconnect (same `client_id`) to
+/// replay the same deterministic stream.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    client_id: String,
+    server_dataset: String,
+    server_seed: u64,
+}
+
+impl ServeClient {
+    /// Connect and bind the session to `client_id` (which keys the
+    /// server-side deterministic streams — see the module docs of
+    /// [`crate::serve`]).
+    pub fn connect(addr: &str, client_id: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to milo serve at {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut client = ServeClient {
+            reader,
+            writer: stream,
+            client_id: client_id.to_string(),
+            server_dataset: String::new(),
+            server_seed: 0,
+        };
+        let hello = client.call(Json::obj(vec![
+            ("cmd", Json::str("HELLO")),
+            ("client", Json::str(client_id)),
+        ]))?;
+        client.server_dataset = hello.get("dataset")?.as_str()?.to_string();
+        client.server_seed = hello.get("seed")?.as_f64()? as u64;
+        Ok(client)
+    }
+
+    pub fn client_id(&self) -> &str {
+        &self.client_id
+    }
+
+    /// Dataset the server announced in HELLO.
+    pub fn server_dataset(&self) -> &str {
+        &self.server_dataset
+    }
+
+    /// Stream seed the server announced in HELLO — compare against your
+    /// own configuration before trusting the served selections.
+    pub fn server_seed(&self) -> u64 {
+        self.server_seed
+    }
+
+    /// One protocol round-trip; errors on transport failure or an
+    /// `"ok":false` response.
+    fn call(&mut self, request: Json) -> Result<Json> {
+        let mut line = request.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("sending request")?;
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response).context("reading response")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        let v = Json::parse(response.trim_end())
+            .with_context(|| format!("bad response line {response:?}"))?;
+        if !v.get("ok")?.as_bool()? {
+            let msg = v
+                .opt("error")
+                .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
+                .unwrap_or_else(|| "unknown server error".to_string());
+            bail!("server error: {msg}");
+        }
+        Ok(v)
+    }
+
+    /// Fetch the full metadata document (the `GET_META` command) — lets a
+    /// tuner or trainer run entirely off a served preprocessing pass.
+    pub fn get_meta(&mut self) -> Result<Metadata> {
+        let v = self.call(Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
+        metadata_from_json(v.get("meta")?)
+    }
+
+    /// Draw the next SGE subset in this client's cycle; returns
+    /// `(subset index, train indices)`.
+    pub fn next_subset(&mut self) -> Result<(usize, Vec<usize>)> {
+        let v = self.call(Json::obj(vec![("cmd", Json::str("NEXT_SUBSET"))]))?;
+        let index = v.get("index")?.as_usize()?;
+        let subset = v
+            .get("subset")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok((index, subset))
+    }
+
+    /// Draw a fresh size-`k` WRE subset from this client's seeded stream.
+    pub fn sample_wre(&mut self, k: usize) -> Result<Vec<usize>> {
+        let v = self.call(Json::obj(vec![
+            ("cmd", Json::str("SAMPLE_WRE")),
+            ("k", Json::num(k as f64)),
+        ]))?;
+        v.get("subset")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect()
+    }
+
+    /// Server + store statistics as raw JSON (the `STATS` command).
+    pub fn stats(&mut self) -> Result<Json> {
+        let v = self.call(Json::obj(vec![("cmd", Json::str("STATS"))]))?;
+        Ok(v.get("stats")?.clone())
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(Json::obj(vec![("cmd", Json::str("PING"))]))?;
+        Ok(())
+    }
+}
+
+/// The MILO easy-to-hard curriculum, served: SGE subsets come from
+/// `NEXT_SUBSET` during the first `κ·T` epochs, WRE draws from
+/// `SAMPLE_WRE` afterwards. N trainers pointing at one server share a
+/// single preprocessing pass — the paper's "no additional cost" claim as a
+/// deployment topology.
+pub struct ServedMiloStrategy {
+    client: ServeClient,
+    pub kappa: f64,
+}
+
+impl ServedMiloStrategy {
+    pub fn connect(addr: &str, client_id: &str, kappa: f64) -> Result<ServedMiloStrategy> {
+        Ok(ServedMiloStrategy { client: ServeClient::connect(addr, client_id)?, kappa })
+    }
+
+    fn switch_epoch(&self, total_epochs: usize) -> usize {
+        (self.kappa * total_epochs as f64).round() as usize
+    }
+}
+
+impl Strategy for ServedMiloStrategy {
+    fn name(&self) -> String {
+        "milo_served".into()
+    }
+
+    fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
+        anyhow::ensure!(ctx.total_epochs > 0, "total_epochs must be set");
+        if ctx.epoch < self.switch_epoch(ctx.total_epochs) {
+            Ok(self.client.next_subset()?.1)
+        } else {
+            self.client.sample_wre(ctx.k)
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! `milo serve` — a concurrent subset-serving service over pre-processed
+//! selection metadata.
+//!
+//! The paper's amortization claim ("the same pre-processed subsets can be
+//! used to train multiple models at no additional cost") becomes literal
+//! infrastructure here: one process pays for preprocessing once (via the
+//! [`crate::store`] registry), then any number of concurrent trainers /
+//! HPO trials connect and draw deterministic subset streams from it. The
+//! server is thread-per-connection over blocking TCP — no async runtime is
+//! available offline, and selection serving is tiny-message/low-QPS
+//! relative to training steps, so OS threads are the right tool.
+//!
+//! # Protocol reference
+//!
+//! One JSON object per line (`\n`-terminated, UTF-8) in each direction.
+//! Every response carries `"ok": true` or `"ok": false` with an `"error"`
+//! string. Requests:
+//!
+//! | request | response |
+//! |---|---|
+//! | `{"cmd":"HELLO","client":"<id>"}` | `{"ok":true,"server":"milo-serve","proto":1,"dataset":…,"n_sge_subsets":…}` — binds this connection to client id `<id>` and (re)starts its deterministic streams |
+//! | `{"cmd":"GET_META"}` | `{"ok":true,"meta":{…}}` — the full metadata document (same JSON schema as `save_metadata`) |
+//! | `{"cmd":"NEXT_SUBSET"}` | `{"ok":true,"index":i,"subset":[…]}` — the next SGE subset in this client's cycle (`index` = which pre-selected subset was served) |
+//! | `{"cmd":"SAMPLE_WRE","k":K}` | `{"ok":true,"subset":[…]}` — a fresh size-K WRE draw from this client's seeded stream |
+//! | `{"cmd":"STATS"}` | `{"ok":true,"stats":{connections,requests,subsets_served,wre_samples,store:{hits,misses,disk_loads,builds,evictions}\|null}}` |
+//! | `{"cmd":"PING"}` | `{"ok":true}` |
+//!
+//! # Determinism contract
+//!
+//! Streams are keyed by `(server seed, client id)`, **not** by arrival
+//! order, so N concurrent clients never race each other's randomness:
+//!
+//! * `NEXT_SUBSET` cycles the pre-selected SGE subsets starting at
+//!   `fnv1a64(client) % n_subsets` — distinct clients start at staggered
+//!   phases of the cycle and each client's sequence is a pure function of
+//!   its id and the metadata.
+//! * `SAMPLE_WRE` draws from `Rng::new(seed).derive_str("serve_wre")
+//!   .derive_str(client)` — an independent, non-overlapping RNG stream per
+//!   client id.
+//!
+//! Consequently a client that reconnects (or connects to a restarted
+//! server holding the same store artifact and seed) with the same id
+//! replays exactly the same stream — asserted end-to-end by
+//! `rust/tests/serve_concurrent.rs`.
+
+pub mod client;
+
+pub use client::{ServeClient, ServedMiloStrategy};
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{metadata_to_json, Metadata};
+use crate::selection::WreStrategy;
+use crate::store::{fnv1a64, MetaStore, StoreStats};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Wire-protocol version, bumped on incompatible changes.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Serving counters (reported by `STATS`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    pub connections: u64,
+    pub requests: u64,
+    pub subsets_served: u64,
+    pub wre_samples: u64,
+}
+
+struct Shared {
+    meta: Arc<Metadata>,
+    seed: u64,
+    store: Option<MetaStore>,
+    shutdown: AtomicBool,
+    connections: AtomicU64,
+    requests: AtomicU64,
+    subsets_served: AtomicU64,
+    wre_samples: AtomicU64,
+}
+
+impl Shared {
+    fn stats(&self) -> ServeStats {
+        ServeStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            requests: self.requests.load(Ordering::Relaxed),
+            subsets_served: self.subsets_served.load(Ordering::Relaxed),
+            wre_samples: self.wre_samples.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A running subset server. Bind with [`SubsetServer::bind`], read the
+/// actual address with [`addr`](SubsetServer::addr) (pass port 0 for an
+/// ephemeral port), stop with [`shutdown`](SubsetServer::shutdown) or block
+/// forever with [`run_forever`](SubsetServer::run_forever).
+pub struct SubsetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl SubsetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting connections.
+    /// `store` is optional and only used to report store statistics over
+    /// `STATS`.
+    pub fn bind(
+        addr: &str,
+        meta: Arc<Metadata>,
+        store: Option<MetaStore>,
+        seed: u64,
+    ) -> Result<SubsetServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            meta,
+            seed,
+            store,
+            shutdown: AtomicBool::new(false),
+            connections: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            subsets_served: AtomicU64::new(0),
+            wre_samples: AtomicU64::new(0),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(SubsetServer { addr: local, shared, accept: Some(accept) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats()
+    }
+
+    /// Block the calling thread until the accept loop exits (the `milo
+    /// serve` subcommand's steady state).
+    pub fn run_forever(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting connections and join the accept thread. Connections
+    /// already open are served until their client disconnects.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                shared.connections.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = shared.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, conn_shared);
+                });
+            }
+            Err(e) => {
+                eprintln!("[serve] accept error: {e}");
+            }
+        }
+    }
+}
+
+/// Per-connection deterministic stream state, (re)initialized by `HELLO`.
+struct Session {
+    client: String,
+    /// Absolute position in the SGE subset cycle.
+    cursor: usize,
+    /// WRE sampler, built on first `SAMPLE_WRE` — connections that only
+    /// `GET_META` or draw SGE subsets never pay the O(n_train)
+    /// distribution copy.
+    wre: Option<WreStrategy>,
+    rng: Rng,
+}
+
+impl Session {
+    fn new(client: &str, shared: &Shared) -> Session {
+        let n = shared.meta.sge_subsets.len().max(1);
+        Session {
+            client: client.to_string(),
+            cursor: (fnv1a64(client.as_bytes()) % n as u64) as usize,
+            wre: None,
+            rng: Rng::new(shared.seed)
+                .derive_str("serve_wre")
+                .derive_str(client),
+        }
+    }
+}
+
+fn ok_response(mut fields: Vec<(&str, Json)>) -> Json {
+    fields.insert(0, ("ok", Json::Bool(true)));
+    Json::obj(fields)
+}
+
+fn err_response(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
+}
+
+fn store_stats_json(stats: StoreStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(stats.hits as f64)),
+        ("misses", Json::num(stats.misses as f64)),
+        ("disk_loads", Json::num(stats.disk_loads as f64)),
+        ("builds", Json::num(stats.builds as f64)),
+        ("evictions", Json::num(stats.evictions as f64)),
+    ])
+}
+
+fn indices_json(idx: &[usize]) -> Json {
+    Json::arr(idx.iter().map(|&i| Json::num(i as f64)).collect())
+}
+
+fn dispatch(request: &Json, session: &mut Session, shared: &Shared) -> Json {
+    let cmd = match request.get("cmd").and_then(|c| Ok(c.as_str()?.to_string())) {
+        Ok(c) => c,
+        Err(_) => return err_response("request needs a string \"cmd\" field"),
+    };
+    match cmd.as_str() {
+        "HELLO" => {
+            let client = request
+                .opt("client")
+                .and_then(|c| c.as_str().ok())
+                .unwrap_or("anon");
+            *session = Session::new(client, shared);
+            ok_response(vec![
+                ("server", Json::str("milo-serve")),
+                ("proto", Json::num(PROTO_VERSION as f64)),
+                ("dataset", Json::str(shared.meta.dataset.clone())),
+                // the stream seed — clients verify it against their own
+                // configuration (a mismatched server would silently hand
+                // out selections for a different dataset instantiation)
+                ("seed", Json::num(shared.seed as f64)),
+                (
+                    "n_sge_subsets",
+                    Json::num(shared.meta.sge_subsets.len() as f64),
+                ),
+            ])
+        }
+        "GET_META" => ok_response(vec![("meta", metadata_to_json(&shared.meta))]),
+        "NEXT_SUBSET" => {
+            let n = shared.meta.sge_subsets.len();
+            if n == 0 {
+                return err_response("metadata has no SGE subsets");
+            }
+            let index = session.cursor % n;
+            session.cursor += 1;
+            shared.subsets_served.fetch_add(1, Ordering::Relaxed);
+            ok_response(vec![
+                ("index", Json::num(index as f64)),
+                ("subset", indices_json(&shared.meta.sge_subsets[index])),
+            ])
+        }
+        "SAMPLE_WRE" => {
+            let k = match request.get("k").and_then(|k| k.as_usize()) {
+                Ok(k) if k > 0 => k,
+                _ => return err_response("SAMPLE_WRE needs a positive integer \"k\""),
+            };
+            let wre = session.wre.get_or_insert_with(|| {
+                WreStrategy::new("serve_wre", shared.meta.wre_classes.clone())
+            });
+            let subset = wre.sample_k(k, &mut session.rng);
+            shared.wre_samples.fetch_add(1, Ordering::Relaxed);
+            ok_response(vec![("subset", indices_json(&subset))])
+        }
+        "STATS" => {
+            let s = shared.stats();
+            let store = match &shared.store {
+                Some(st) => store_stats_json(st.stats()),
+                None => Json::Null,
+            };
+            ok_response(vec![(
+                "stats",
+                Json::obj(vec![
+                    ("connections", Json::num(s.connections as f64)),
+                    ("requests", Json::num(s.requests as f64)),
+                    ("subsets_served", Json::num(s.subsets_served as f64)),
+                    ("wre_samples", Json::num(s.wre_samples as f64)),
+                    ("dataset", Json::str(shared.meta.dataset.clone())),
+                    ("client", Json::str(session.client.clone())),
+                    ("store", store),
+                ]),
+            )])
+        }
+        "PING" => ok_response(vec![]),
+        other => err_response(&format!("unknown cmd {other:?}")),
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut session = Session::new("anon", &shared);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client went away
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        let response = match Json::parse(&line) {
+            Ok(req) => dispatch(&req, &mut session, &shared),
+            Err(e) => err_response(&format!("bad request json: {e:#}")),
+        };
+        let mut out = response.to_string();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    Ok(())
+}

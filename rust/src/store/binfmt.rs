@@ -1,0 +1,267 @@
+//! Compact binary encoding for [`Metadata`] artifacts.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    8  b"MILOSTOR"
+//! version  4  u32 — FORMAT_VERSION; readers reject anything else
+//! dataset  4+n  u32 length + UTF-8 bytes
+//! fraction 8  f64
+//! secs     8  f64 (preprocess_secs)
+//! sge      4  u32 subset count
+//!          per subset: 4 u32 length + length×4 u32 indices
+//! wre      4  u32 class count
+//!          per class: 4 u32 length + length×4 u32 indices
+//!                     + length×8 f64 probabilities
+//! fixed    4  u32 length + length×4 u32 indices
+//! check    8  u64 FNV-1a over every preceding byte
+//! ```
+//!
+//! The encoding is deterministic, so save → load → save is byte-identical
+//! (property-tested in `rust/tests/store_props.rs`). Decoding validates the
+//! magic, the schema version, every length prefix against the remaining
+//! buffer (no length-driven over-allocation), and the trailing checksum —
+//! a truncated or bit-flipped artifact is a clean `Err`, never a panic or
+//! a silently wrong selection.
+
+use anyhow::{bail, Result};
+
+use super::fnv1a64;
+use crate::coordinator::Metadata;
+use crate::selection::milo::ClassProbs;
+
+pub const MAGIC: &[u8; 8] = b"MILOSTOR";
+pub const FORMAT_VERSION: u32 = 1;
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_indices(out: &mut Vec<u8>, idx: &[usize]) {
+    assert!(idx.len() <= u32::MAX as usize, "subset too large for format");
+    push_u32(out, idx.len() as u32);
+    for &i in idx {
+        assert!(i <= u32::MAX as usize, "index {i} overflows u32");
+        push_u32(out, i as u32);
+    }
+}
+
+/// Serialize metadata to the versioned binary layout.
+pub fn encode(meta: &Metadata) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 4 * meta.fixed_dm.len());
+    out.extend_from_slice(MAGIC);
+    push_u32(&mut out, FORMAT_VERSION);
+    push_u32(&mut out, meta.dataset.len() as u32);
+    out.extend_from_slice(meta.dataset.as_bytes());
+    push_f64(&mut out, meta.fraction);
+    push_f64(&mut out, meta.preprocess_secs);
+    push_u32(&mut out, meta.sge_subsets.len() as u32);
+    for s in &meta.sge_subsets {
+        push_indices(&mut out, s);
+    }
+    push_u32(&mut out, meta.wre_classes.len() as u32);
+    for c in &meta.wre_classes {
+        assert_eq!(c.indices.len(), c.probs.len(), "ClassProbs invariant");
+        push_indices(&mut out, &c.indices);
+        for &p in &c.probs {
+            push_f64(&mut out, p);
+        }
+    }
+    push_indices(&mut out, &meta.fixed_dm);
+    let check = fnv1a64(&out);
+    out.extend_from_slice(&check.to_le_bytes());
+    out
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.bytes.len() - self.pos < n {
+            bail!(
+                "truncated artifact: wanted {n} bytes at offset {}, {} left",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Length-prefixed count, validated against the bytes actually left
+    /// (`elem_bytes` per element) so a corrupted length can't drive an
+    /// over-allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.bytes.len() - self.pos {
+            bail!("corrupt length {n} at offset {}", self.pos - 4);
+        }
+        Ok(n)
+    }
+
+    fn indices(&mut self) -> Result<Vec<usize>> {
+        let n = self.count(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()? as usize);
+        }
+        Ok(out)
+    }
+}
+
+/// Decode a binary artifact, validating magic, version, lengths, and
+/// checksum.
+pub fn decode(bytes: &[u8]) -> Result<Metadata> {
+    if bytes.len() < MAGIC.len() + 4 + 8 {
+        bail!("artifact too short ({} bytes)", bytes.len());
+    }
+    if &bytes[..MAGIC.len()] != MAGIC {
+        bail!("bad magic: not a milo metadata artifact");
+    }
+    let (payload, check_bytes) = bytes.split_at(bytes.len() - 8);
+    let stored = u64::from_le_bytes([
+        check_bytes[0],
+        check_bytes[1],
+        check_bytes[2],
+        check_bytes[3],
+        check_bytes[4],
+        check_bytes[5],
+        check_bytes[6],
+        check_bytes[7],
+    ]);
+    if fnv1a64(payload) != stored {
+        bail!("checksum mismatch: artifact is truncated or corrupted");
+    }
+    let mut c = Cursor { bytes: payload, pos: MAGIC.len() };
+    let version = c.u32()?;
+    if version != FORMAT_VERSION {
+        bail!(
+            "schema version mismatch: artifact is v{version}, this build reads v{FORMAT_VERSION}"
+        );
+    }
+    let name_len = c.count(1)?;
+    let dataset = std::str::from_utf8(c.take(name_len)?)?.to_string();
+    let fraction = c.f64()?;
+    let preprocess_secs = c.f64()?;
+    let n_sge = c.count(4)?;
+    let mut sge_subsets = Vec::with_capacity(n_sge);
+    for _ in 0..n_sge {
+        sge_subsets.push(c.indices()?);
+    }
+    let n_wre = c.count(4)?;
+    let mut wre_classes = Vec::with_capacity(n_wre);
+    for _ in 0..n_wre {
+        let indices = c.indices()?;
+        let mut probs = Vec::with_capacity(indices.len());
+        for _ in 0..indices.len() {
+            probs.push(c.f64()?);
+        }
+        wre_classes.push(ClassProbs { indices, probs });
+    }
+    let fixed_dm = c.indices()?;
+    if c.pos != payload.len() {
+        bail!("trailing bytes after metadata payload (offset {})", c.pos);
+    }
+    Ok(Metadata {
+        dataset,
+        fraction,
+        sge_subsets,
+        wre_classes,
+        fixed_dm,
+        preprocess_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> Metadata {
+        Metadata {
+            dataset: "cifar10".into(),
+            fraction: 0.1,
+            sge_subsets: vec![vec![0, 3, 7], vec![1, 4, 8]],
+            wre_classes: vec![
+                ClassProbs { indices: vec![0, 1], probs: vec![0.75, 0.25] },
+                ClassProbs { indices: vec![2, 3, 4], probs: vec![0.2, 0.3, 0.5] },
+            ],
+            fixed_dm: vec![0, 4],
+            preprocess_secs: 2.5,
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact_and_byte_identical() {
+        let m = meta();
+        let bytes = encode(&m);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(encode(&back), bytes, "re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_error() {
+        let bytes = encode(&meta());
+        for cut in 0..bytes.len() {
+            assert!(
+                decode(&bytes[..cut]).is_err(),
+                "truncation to {cut} bytes must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum() {
+        let bytes = encode(&meta());
+        for pos in [0, 9, 13, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode(&bad).is_err(), "flip at {pos} must fail");
+        }
+    }
+
+    #[test]
+    fn future_schema_version_is_rejected_with_guidance() {
+        let mut bytes = encode(&meta());
+        // bump the version field and re-stamp the checksum
+        bytes[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let n = bytes.len();
+        let check = fnv1a64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&check.to_le_bytes());
+        let err = decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+    }
+
+    #[test]
+    fn empty_metadata_roundtrips() {
+        let m = Metadata {
+            dataset: String::new(),
+            fraction: 0.0,
+            sge_subsets: vec![],
+            wre_classes: vec![],
+            fixed_dm: vec![],
+            preprocess_secs: 0.0,
+        };
+        assert_eq!(decode(&encode(&m)).unwrap(), m);
+    }
+}

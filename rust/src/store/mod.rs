@@ -1,0 +1,587 @@
+//! Selection-metadata store: a versioned, content-addressed registry for
+//! pre-processed MILO metadata (SGE subsets, WRE distributions, fixed
+//! subsets).
+//!
+//! The paper's central economics — "pre-processing only needs to be done
+//! once per dataset (and subset size)" — only pays off if *every* consumer
+//! (trainer, HPO trial, bench, served client) can find and share the one
+//! artifact that matches its configuration. The store makes that artifact
+//! first-class:
+//!
+//! * **Content addressing** — a [`MetaKey`] canonically fingerprints
+//!   `(dataset, encoder, set functions, fraction, n_subsets, ε, seed,
+//!   kernel metric)`; two preprocessing runs with the same key share one
+//!   file and one cache slot, while any change to the recipe gets a new
+//!   address instead of silently reusing stale selections.
+//! * **Compact binary encoding** — [`binfmt`] replaces the seed's JSON
+//!   round-trip (the hot path for HPO, where every trial used to re-parse
+//!   float arrays) with a length-prefixed little-endian layout plus an
+//!   FNV-1a checksum, so corrupted or truncated artifacts are detected and
+//!   rebuilt rather than mis-parsed.
+//! * **Schema versioning** — artifacts carry a format version; a store
+//!   reading a future/past layout rebuilds instead of guessing.
+//! * **Shared in-process LRU** — a [`MetaStore`] is a cheap-`Clone` handle
+//!   over one `Arc`'d cache, so N threads (HPO trials, served connections)
+//!   hit the same decoded [`Metadata`] without re-reading disk.
+//!
+//! [`MetaStore::get_or_build`] is the single entry point:
+//! cache hit → disk load → build, with per-fingerprint build locks —
+//! concurrent callers of one configuration trigger exactly one
+//! preprocessing pass while distinct configurations build in parallel.
+//! [`MetaStore::shared`] hands out one process-wide handle per root so
+//! independent call sites get the same guarantee.
+
+pub mod binfmt;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Metadata, PreprocessOptions};
+use crate::submod::SetFunctionKind;
+
+/// FNV-1a 64-bit hash — the store's fingerprint and checksum primitive
+/// (dependency-free, stable across platforms).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Full descriptor of a set function, including parameters that
+/// `SetFunctionKind::name` elides (graph-cut λ changes the selection, so it
+/// must change the address).
+pub fn set_function_descriptor(kind: SetFunctionKind) -> String {
+    match kind {
+        SetFunctionKind::GraphCut { lambda } => format!("graph_cut_l{lambda}"),
+        other => other.name().to_string(),
+    }
+}
+
+/// Address component for the similarity backend. PJRT and native kernels
+/// agree only to float tolerance, so greedy tie-breaks (and thus the
+/// selections) can differ — the two must not alias to one artifact.
+pub fn backend_descriptor(backend: crate::kernel::SimilarityBackend) -> &'static str {
+    match backend {
+        crate::kernel::SimilarityBackend::Pjrt => "pjrt",
+        crate::kernel::SimilarityBackend::Native => "native",
+    }
+}
+
+/// Canonical fingerprint key of one preprocessing configuration. Everything
+/// that changes the selection output is part of the address; nothing else
+/// is.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetaKey {
+    pub dataset: String,
+    /// Encoder artifact variant; `"default"` for the zero-shot encoder.
+    pub encoder: String,
+    pub sge_function: String,
+    pub wre_function: String,
+    pub fraction: f64,
+    pub n_subsets: usize,
+    pub epsilon: f64,
+    pub seed: u64,
+    pub metric: String,
+    /// Similarity backend (`"pjrt"` / `"native"`) — part of the address
+    /// because the backends agree only to float tolerance.
+    pub backend: String,
+}
+
+impl MetaKey {
+    /// Key for a [`Preprocessor`](crate::coordinator::Preprocessor) run of
+    /// `dataset` under `opts`.
+    pub fn from_options(dataset: &str, opts: &PreprocessOptions) -> MetaKey {
+        MetaKey {
+            dataset: dataset.to_string(),
+            encoder: opts
+                .encoder_variant
+                .clone()
+                .unwrap_or_else(|| "default".to_string()),
+            sge_function: set_function_descriptor(opts.sge_function),
+            wre_function: set_function_descriptor(opts.wre_function),
+            fraction: opts.fraction,
+            n_subsets: opts.n_sge_subsets,
+            epsilon: opts.epsilon,
+            seed: opts.seed,
+            metric: opts.metric.name(),
+            backend: backend_descriptor(opts.backend).to_string(),
+        }
+    }
+
+    /// Canonical string form — the pre-image of the fingerprint. Field
+    /// order is fixed; floats use Rust's shortest-roundtrip formatting, so
+    /// equal f64 values always produce equal text.
+    pub fn canonical(&self) -> String {
+        format!(
+            "ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}",
+            self.dataset,
+            self.encoder,
+            self.sge_function,
+            self.wre_function,
+            self.fraction,
+            self.n_subsets,
+            self.epsilon,
+            self.seed,
+            self.metric,
+            self.backend,
+        )
+    }
+
+    /// 16-hex-char content address.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}", fnv1a64(self.canonical().as_bytes()))
+    }
+
+    /// Store-relative file name: human-greppable dataset prefix + address.
+    pub fn file_name(&self) -> String {
+        format!("{}_{}.meta", self.dataset, self.fingerprint())
+    }
+}
+
+/// Monotonic counters over a store's lifetime (exposed via `milo serve`
+/// STATS and asserted by the amortization tests: `builds == 1` is the
+/// paper's "train multiple models at no additional cost").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// `get_or_build` satisfied from the in-process LRU.
+    pub hits: u64,
+    /// `get_or_build` calls that missed the LRU.
+    pub misses: u64,
+    /// Misses satisfied by decoding a persisted artifact.
+    pub disk_loads: u64,
+    /// Misses that ran the builder (a full preprocessing pass).
+    pub builds: u64,
+    /// LRU entries evicted to respect capacity.
+    pub evictions: u64,
+}
+
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    disk_loads: AtomicU64,
+    builds: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Counters {
+    fn new() -> Counters {
+        Counters {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            disk_loads: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn snapshot(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            disk_loads: self.disk_loads.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// In-process LRU over decoded metadata, keyed by fingerprint. Entries are
+/// `Arc`s, so eviction never invalidates a handle a trainer still holds.
+struct LruCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<String, (Arc<Metadata>, u64)>,
+}
+
+impl LruCache {
+    fn get(&mut self, fp: &str) -> Option<Arc<Metadata>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(fp).map(|slot| {
+            slot.1 = tick;
+            slot.0.clone()
+        })
+    }
+
+    /// Insert, returning how many entries were evicted.
+    fn insert(&mut self, fp: String, meta: Arc<Metadata>) -> u64 {
+        self.tick += 1;
+        self.map.insert(fp, (meta, self.tick));
+        let mut evicted = 0;
+        while self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            self.map.remove(&oldest);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+struct StoreInner {
+    root: PathBuf,
+    cache: Mutex<LruCache>,
+    /// One lock per fingerprint: concurrent `get_or_build` callers of the
+    /// *same* key run exactly one disk load / builder invocation, while
+    /// distinct keys (other datasets/fractions) build in parallel instead
+    /// of queueing behind an unrelated minutes-long preprocessing pass.
+    key_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
+    counters: Counters,
+}
+
+/// Handle to a metadata store rooted at a directory. `Clone` is cheap and
+/// all clones share one cache and one stats block — pass clones freely to
+/// worker threads and server connections.
+#[derive(Clone)]
+pub struct MetaStore {
+    inner: Arc<StoreInner>,
+}
+
+/// Default LRU capacity: HPO sweeps touch a handful of (dataset, fraction)
+/// cells at a time; decoded metadata is O(n_train) floats per entry.
+pub const DEFAULT_CACHE_ENTRIES: usize = 16;
+
+/// Process-wide registry backing [`MetaStore::shared`].
+static SHARED_STORES: OnceLock<Mutex<HashMap<PathBuf, MetaStore>>> = OnceLock::new();
+
+impl MetaStore {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<MetaStore> {
+        Self::with_capacity(root, DEFAULT_CACHE_ENTRIES)
+    }
+
+    /// Process-wide shared handle for `root`: every caller passing the
+    /// same root (byte-identical path — no canonicalization) gets the same
+    /// LRU and per-key build locks, so independent call sites (e.g.
+    /// `Preprocessor::run_cached` across experiment threads) still trigger
+    /// at most one preprocessing pass per configuration.
+    pub fn shared(root: impl Into<PathBuf>) -> Result<MetaStore> {
+        let root = root.into();
+        let registry = SHARED_STORES.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut registry = registry.lock().unwrap();
+        if let Some(store) = registry.get(&root) {
+            return Ok(store.clone());
+        }
+        let store = MetaStore::open(root.clone())?;
+        registry.insert(root, store.clone());
+        Ok(store)
+    }
+
+    pub fn with_capacity(root: impl Into<PathBuf>, cap: usize) -> Result<MetaStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating store root {}", root.display()))?;
+        Ok(MetaStore {
+            inner: Arc::new(StoreInner {
+                root,
+                cache: Mutex::new(LruCache {
+                    cap: cap.max(1),
+                    tick: 0,
+                    map: HashMap::new(),
+                }),
+                key_locks: Mutex::new(HashMap::new()),
+                counters: Counters::new(),
+            }),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.inner.root
+    }
+
+    /// Absolute path of the artifact for `key` (whether or not it exists).
+    pub fn path_for(&self, key: &MetaKey) -> PathBuf {
+        self.inner.root.join(key.file_name())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.inner.counters.snapshot()
+    }
+
+    /// Decode the persisted artifact for `key`, bypassing the LRU.
+    /// `Ok(None)` when absent; `Err` on a corrupted / truncated / stale
+    /// artifact (callers that want self-healing use [`get_or_build`]).
+    ///
+    /// [`get_or_build`]: MetaStore::get_or_build
+    pub fn load_uncached(&self, key: &MetaKey) -> Result<Option<Metadata>> {
+        let path = self.path_for(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let meta = binfmt::decode(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        Ok(Some(meta))
+    }
+
+    /// Encode and persist `meta` under `key` (atomic write: temp file +
+    /// rename), and publish it to the shared cache.
+    pub fn put(&self, key: &MetaKey, meta: Metadata) -> Result<Arc<Metadata>> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let meta = Arc::new(meta);
+        let bytes = binfmt::encode(&meta);
+        let path = self.path_for(key);
+        // pid + process-wide sequence number: concurrent writers of the
+        // same key (even via independent handles) never share a temp file
+        let tmp = self.inner.root.join(format!(
+            ".{}.tmp{}.{}",
+            key.file_name(),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::write(&tmp, &bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        self.cache_insert(key, meta.clone());
+        Ok(meta)
+    }
+
+    /// The store's main entry point: LRU hit → disk load → `build` (exactly
+    /// once per key across all threads sharing this store). A persisted
+    /// artifact that fails to decode — corruption, truncation, or a schema
+    /// version this build doesn't speak — is rebuilt, not trusted.
+    pub fn get_or_build(
+        &self,
+        key: &MetaKey,
+        build: impl FnOnce() -> Result<Metadata>,
+    ) -> Result<Arc<Metadata>> {
+        let fp = key.fingerprint();
+        if let Some(meta) = self.inner.cache.lock().unwrap().get(&fp) {
+            self.inner.counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(meta);
+        }
+        self.inner.counters.misses.fetch_add(1, Ordering::Relaxed);
+        let key_lock = {
+            let mut locks = self.inner.key_locks.lock().unwrap();
+            locks.entry(fp.clone()).or_default().clone()
+        };
+        let _guard = key_lock.lock().unwrap();
+        // Another thread may have finished the same miss while we waited.
+        if let Some(meta) = self.inner.cache.lock().unwrap().get(&fp) {
+            return Ok(meta);
+        }
+        match self.load_uncached(key) {
+            Ok(Some(meta)) => {
+                self.inner.counters.disk_loads.fetch_add(1, Ordering::Relaxed);
+                let meta = Arc::new(meta);
+                self.cache_insert(key, meta.clone());
+                return Ok(meta);
+            }
+            Ok(None) => {}
+            Err(e) => {
+                eprintln!(
+                    "[store] stale or corrupted artifact {} ({e:#}); rebuilding",
+                    self.path_for(key).display()
+                );
+            }
+        }
+        self.inner.counters.builds.fetch_add(1, Ordering::Relaxed);
+        let meta = build().with_context(|| {
+            format!("building metadata for {}", key.canonical())
+        })?;
+        self.put(key, meta)
+    }
+
+    fn cache_insert(&self, key: &MetaKey, meta: Arc<Metadata>) {
+        let evicted = self
+            .inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(key.fingerprint(), meta);
+        if evicted > 0 {
+            self.inner
+                .counters
+                .evictions
+                .fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::milo::ClassProbs;
+
+    fn sample_meta(tag: usize) -> Metadata {
+        Metadata {
+            dataset: "trec6".into(),
+            fraction: 0.1,
+            sge_subsets: vec![vec![tag, tag + 2], vec![tag + 1, tag + 3]],
+            wre_classes: vec![ClassProbs {
+                indices: vec![0, 1, 2],
+                probs: vec![0.5, 0.25, 0.25],
+            }],
+            fixed_dm: vec![0, 2],
+            preprocess_secs: 0.5,
+        }
+    }
+
+    fn tmp_store(name: &str) -> MetaStore {
+        let dir = std::env::temp_dir()
+            .join(format!("milo_store_test_{name}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        MetaStore::open(dir).unwrap()
+    }
+
+    fn key(seed: u64) -> MetaKey {
+        MetaKey {
+            dataset: "trec6".into(),
+            encoder: "default".into(),
+            sge_function: "graph_cut_l0.4".into(),
+            wre_function: "disparity_min".into(),
+            fraction: 0.1,
+            n_subsets: 3,
+            epsilon: 0.01,
+            seed,
+            metric: "cosine".into(),
+            backend: "native".into(),
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_distinguishes_keys() {
+        let a = key(1);
+        assert_eq!(a.fingerprint(), key(1).fingerprint());
+        assert_ne!(a.fingerprint(), key(2).fingerprint());
+        let mut frac = key(1);
+        frac.fraction = 0.3;
+        assert_ne!(a.fingerprint(), frac.fingerprint());
+        assert_eq!(a.fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn get_or_build_builds_once_then_hits() {
+        let store = tmp_store("once");
+        let k = key(1);
+        let mut builds = 0;
+        let a = store
+            .get_or_build(&k, || {
+                builds += 1;
+                Ok(sample_meta(10))
+            })
+            .unwrap();
+        let b = store
+            .get_or_build(&k, || {
+                builds += 1;
+                Ok(sample_meta(99))
+            })
+            .unwrap();
+        assert_eq!(builds, 1);
+        assert_eq!(a.sge_subsets, b.sge_subsets);
+        let st = store.stats();
+        assert_eq!(st.builds, 1);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 1);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn fresh_handle_loads_from_disk_without_building() {
+        let store = tmp_store("disk");
+        let k = key(2);
+        store.put(&k, sample_meta(7)).unwrap();
+        // a fresh store over the same root has a cold LRU
+        let store2 = MetaStore::open(store.root()).unwrap();
+        let meta = store2
+            .get_or_build(&k, || panic!("must load from disk"))
+            .unwrap();
+        assert_eq!(meta.sge_subsets[0], vec![7, 9]);
+        assert_eq!(store2.stats().disk_loads, 1);
+        assert_eq!(store2.stats().builds, 0);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn corrupted_artifact_is_rebuilt() {
+        let store = tmp_store("corrupt");
+        let k = key(3);
+        store.put(&k, sample_meta(1)).unwrap();
+        std::fs::write(store.path_for(&k), b"definitely not a metadata blob").unwrap();
+        let store2 = MetaStore::open(store.root()).unwrap();
+        assert!(store2.load_uncached(&k).is_err(), "corrupt must be an error");
+        let meta = store2.get_or_build(&k, || Ok(sample_meta(5))).unwrap();
+        assert_eq!(meta.sge_subsets[0], vec![5, 7]);
+        assert_eq!(store2.stats().builds, 1);
+        // and the rebuilt artifact is readable again
+        assert!(store2.load_uncached(&k).unwrap().is_some());
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn concurrent_get_or_build_runs_builder_exactly_once() {
+        let store = tmp_store("concurrent");
+        let k = key(4);
+        let builds = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let store = store.clone();
+                let k = &k;
+                let builds = &builds;
+                scope.spawn(move || {
+                    store
+                        .get_or_build(k, || {
+                            builds.fetch_add(1, Ordering::Relaxed);
+                            // widen the race window
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            Ok(sample_meta(3))
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::Relaxed), 1);
+        assert_eq!(store.stats().builds, 1);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn shared_handles_share_cache_and_counters() {
+        let dir = std::env::temp_dir()
+            .join(format!("milo_store_test_shared_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let a = MetaStore::shared(&dir).unwrap();
+        let b = MetaStore::shared(&dir).unwrap();
+        a.get_or_build(&key(9), || Ok(sample_meta(2))).unwrap();
+        // b is the same handle under the hood: a's build is b's cache hit
+        let got = b
+            .get_or_build(&key(9), || panic!("must hit the shared cache"))
+            .unwrap();
+        assert_eq!(got.sge_subsets[0], vec![2, 4]);
+        assert_eq!(b.stats().builds, 1);
+        assert_eq!(b.stats().hits, 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lru_evicts_oldest_but_disk_persists() {
+        let store = MetaStore::with_capacity(
+            std::env::temp_dir().join(format!("milo_store_test_lru_{}", std::process::id())),
+            2,
+        )
+        .unwrap();
+        for s in 0..3u64 {
+            store.get_or_build(&key(s), || Ok(sample_meta(s as usize))).unwrap();
+        }
+        assert_eq!(store.stats().evictions, 1);
+        // evicted entry comes back from disk, not the builder
+        let meta = store
+            .get_or_build(&key(0), || panic!("evicted entry must reload from disk"))
+            .unwrap();
+        assert_eq!(meta.sge_subsets[0], vec![0, 2]);
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+}

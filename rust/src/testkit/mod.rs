@@ -6,6 +6,29 @@
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
+/// Open the AOT artifact runtime for a test, or skip uniformly.
+///
+/// Artifact-gated tests (anything touching the PJRT runtime, encoders, or
+/// trained models) call this instead of hand-rolling a `manifest.json`
+/// existence check: `let Some(rt) = artifacts_or_skip() else { return };`.
+/// Missing artifacts print one consistent skip line and the test passes
+/// vacuously; *present but broken* artifacts panic, because that's a real
+/// failure the suite must surface, not a skip.
+pub fn artifacts_or_skip() -> Option<crate::runtime::Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "testkit: artifacts missing under {} (run `make artifacts`); test skipped",
+            dir.display()
+        );
+        return None;
+    }
+    Some(
+        crate::runtime::Runtime::open(&dir)
+            .expect("artifacts present but the runtime failed to open them"),
+    )
+}
+
 /// Run `f` for `n_cases` derived seeds; panics carry the failing seed so a
 /// failure is reproducible with `case(seed)`.
 pub fn check_cases(base_seed: u64, n_cases: usize, f: impl Fn(u64)) {

@@ -251,11 +251,7 @@ mod tests {
     use crate::selection::{AdaptiveRandomStrategy, FullStrategy, RandomStrategy};
 
     fn runtime() -> Option<Runtime> {
-        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            return None;
-        }
-        Some(Runtime::open(dir).unwrap())
+        crate::testkit::artifacts_or_skip()
     }
 
     #[test]

@@ -12,7 +12,7 @@ use milo::testkit::check_cases;
 use milo::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
-    Runtime::open("artifacts").ok()
+    milo::testkit::artifacts_or_skip()
 }
 
 // ---------------------------------------------------------------------------

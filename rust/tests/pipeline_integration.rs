@@ -11,12 +11,7 @@ use milo::train::{TrainConfig, Trainer};
 use milo::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing; integration tests skipped");
-        return None;
-    }
-    Some(Runtime::open(dir).unwrap())
+    milo::testkit::artifacts_or_skip()
 }
 
 #[test]

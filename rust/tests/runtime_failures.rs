@@ -7,7 +7,7 @@ use milo::runtime::{Arg, Runtime};
 use milo::selection::milo::ClassProbs;
 
 fn runtime() -> Option<Runtime> {
-    Runtime::open("artifacts").ok()
+    milo::testkit::artifacts_or_skip()
 }
 
 // ---------------------------------------------------------------------------

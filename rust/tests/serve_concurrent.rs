@@ -1,0 +1,238 @@
+//! Integration test for the store + serve subsystem (no AOT artifacts
+//! required — metadata is synthesized, which is exactly the point: the
+//! store/serve layers are model- and runtime-agnostic).
+//!
+//! Asserts the subsystem's two contracts end-to-end:
+//!   (a) N concurrent consumers trigger exactly one preprocessing pass
+//!       (store build count == 1);
+//!   (b) each client's subset stream is a deterministic function of
+//!       (server seed, client id) — identical on reconnect and identical
+//!       across a server restart from the persisted store artifact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use milo::coordinator::Metadata;
+use milo::selection::milo::ClassProbs;
+use milo::serve::{ServeClient, SubsetServer};
+use milo::store::{MetaKey, MetaStore};
+
+const N_CLIENTS: usize = 5;
+const SGE_DRAWS: usize = 7;
+const WRE_DRAWS: usize = 3;
+const WRE_K: usize = 24;
+const SEED: u64 = 42;
+
+fn synthetic_metadata() -> Metadata {
+    // 4 classes × 120 points, 3 SGE subsets — large enough that two
+    // distinct WRE streams colliding is statistically impossible.
+    let n_per = 120;
+    let classes = 4;
+    Metadata {
+        dataset: "synthetic".into(),
+        fraction: 0.1,
+        sge_subsets: (0..3)
+            .map(|r| {
+                let mut s: Vec<usize> =
+                    (0..48).map(|i| (i * 11 + r * 7) % (classes * n_per)).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect(),
+        wre_classes: (0..classes)
+            .map(|c| ClassProbs {
+                indices: (c * n_per..(c + 1) * n_per).collect(),
+                probs: (0..n_per).map(|i| 1.0 + (i % 13) as f64).collect(),
+            })
+            .collect(),
+        fixed_dm: (0..48).map(|i| i * 10).collect(),
+        preprocess_secs: 0.01,
+    }
+}
+
+fn test_key() -> MetaKey {
+    MetaKey {
+        dataset: "synthetic".into(),
+        encoder: "default".into(),
+        sge_function: "graph_cut_l0.4".into(),
+        wre_function: "disparity_min".into(),
+        fraction: 0.1,
+        n_subsets: 3,
+        epsilon: 0.01,
+        seed: SEED,
+        metric: "cosine".into(),
+        backend: "native".into(),
+    }
+}
+
+/// One client's full draw: SGE cycle indices+subsets, then WRE samples.
+fn draw_stream(
+    addr: &str,
+    client_id: &str,
+) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    let mut client = ServeClient::connect(addr, client_id).unwrap();
+    let sge: Vec<(usize, Vec<usize>)> =
+        (0..SGE_DRAWS).map(|_| client.next_subset().unwrap()).collect();
+    let wre: Vec<Vec<usize>> =
+        (0..WRE_DRAWS).map(|_| client.sample_wre(WRE_K).unwrap()).collect();
+    (sge, wre)
+}
+
+#[test]
+fn concurrent_clients_share_one_preprocess_and_streams_survive_restart() {
+    let dir = std::env::temp_dir()
+        .join(format!("milo_serve_it_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+    let key = test_key();
+
+    // -- (a) exactly one preprocessing pass under concurrent demand ------
+    let builds = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for _ in 0..N_CLIENTS {
+            let store = store.clone();
+            let key = key.clone();
+            let builds = builds.clone();
+            scope.spawn(move || {
+                store
+                    .get_or_build(&key, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(synthetic_metadata())
+                    })
+                    .unwrap();
+            });
+        }
+    });
+    assert_eq!(builds.load(Ordering::SeqCst), 1, "preprocess must run once");
+    assert_eq!(store.stats().builds, 1);
+
+    let meta = store
+        .get_or_build(&key, || panic!("metadata must already be in the store"))
+        .unwrap();
+
+    // -- serve on an ephemeral port, ≥4 concurrent clients ---------------
+    let server =
+        SubsetServer::bind("127.0.0.1:0", meta.clone(), Some(store.clone()), SEED)
+            .unwrap();
+    let addr = server.addr().to_string();
+
+    let mut first_run: Vec<(String, (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>))> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..N_CLIENTS)
+                .map(|c| {
+                    let addr = addr.clone();
+                    scope.spawn(move || {
+                        let id = format!("client-{c}");
+                        let stream = draw_stream(&addr, &id);
+                        (id, stream)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+    first_run.sort_by(|a, b| a.0.cmp(&b.0));
+
+    // every subset the server handed out is well-formed
+    for (id, (sge, wre)) in &first_run {
+        assert_eq!(sge.len(), SGE_DRAWS, "{id}");
+        for (index, subset) in sge {
+            assert!(*index < meta.sge_subsets.len(), "{id}");
+            assert_eq!(subset, &meta.sge_subsets[*index], "{id}");
+        }
+        for draw in wre {
+            assert_eq!(draw.len(), WRE_K, "{id}");
+            let mut d = draw.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), WRE_K, "{id}: WRE draw has duplicates");
+        }
+    }
+
+    // distinct clients draw distinct (non-overlapping) WRE streams
+    for i in 0..first_run.len() {
+        for j in (i + 1)..first_run.len() {
+            assert_ne!(
+                first_run[i].1 .1, first_run[j].1 .1,
+                "{} and {} share a WRE stream",
+                first_run[i].0, first_run[j].0
+            );
+        }
+    }
+
+    // deterministic on reconnect: same id, same server -> same stream
+    for (id, stream) in &first_run {
+        assert_eq!(&draw_stream(&addr, id), stream, "{id} replay differs");
+    }
+
+    // the server's STATS sees the single store build and the traffic
+    let mut probe = ServeClient::connect(&addr, "probe").unwrap();
+    let stats = probe.stats().unwrap();
+    let store_stats = stats.get("store").unwrap();
+    assert_eq!(store_stats.get("builds").unwrap().as_usize().unwrap(), 1);
+    assert!(
+        stats.get("subsets_served").unwrap().as_usize().unwrap()
+            >= 2 * N_CLIENTS * SGE_DRAWS
+    );
+    drop(probe);
+    server.shutdown();
+
+    // -- (b) restart from the persisted artifact: identical streams ------
+    let store2 = MetaStore::open(&dir).unwrap(); // cold LRU, warm disk
+    let meta2 = store2
+        .get_or_build(&key, || panic!("restart must load from the store, not rebuild"))
+        .unwrap();
+    assert_eq!(*meta2, *meta, "persisted metadata must round-trip exactly");
+    assert_eq!(store2.stats().builds, 0);
+    assert_eq!(store2.stats().disk_loads, 1);
+
+    let server2 =
+        SubsetServer::bind("127.0.0.1:0", meta2, Some(store2), SEED).unwrap();
+    let addr2 = server2.addr().to_string();
+    for (id, stream) in &first_run {
+        assert_eq!(
+            &draw_stream(&addr2, id),
+            stream,
+            "{id} stream changed across server restart"
+        );
+    }
+    server2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn server_rejects_malformed_requests_without_dying() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let meta = Arc::new(synthetic_metadata());
+    let server = SubsetServer::bind("127.0.0.1:0", meta, None, 1).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(raw.try_clone().unwrap());
+    for (bad, expect) in [
+        ("this is not json", "bad request"),
+        ("{\"nocmd\":1}", "cmd"),
+        ("{\"cmd\":\"WAT\"}", "unknown cmd"),
+        ("{\"cmd\":\"SAMPLE_WRE\"}", "k"),
+    ] {
+        raw.write_all(format!("{bad}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("\"ok\":false") && line.contains(expect),
+            "request {bad:?} -> {line:?}"
+        );
+    }
+    // the connection (and server) still works afterwards
+    raw.write_all(b"{\"cmd\":\"PING\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line:?}");
+    drop(raw);
+
+    let mut client = ServeClient::connect(&addr, "after-garbage").unwrap();
+    assert_eq!(client.next_subset().unwrap().1.len(), 48);
+    server.shutdown();
+}

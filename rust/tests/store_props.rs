@@ -1,0 +1,162 @@
+//! Property tests for the metadata store's persistence layer: the binary
+//! round-trip must be byte-identical across random metadata instances, and
+//! every corruption mode (truncation, bit flips, garbage, stale schema)
+//! must surface as a clean error — never a panic, never a silently wrong
+//! selection.
+
+use milo::coordinator::Metadata;
+use milo::selection::milo::ClassProbs;
+use milo::store::{binfmt, MetaKey, MetaStore};
+use milo::testkit::check_cases;
+use milo::util::rng::Rng;
+
+/// Random but structurally valid metadata: variable class counts/sizes,
+/// subset counts, and probability mass (normalized per class).
+fn random_metadata(seed: u64) -> Metadata {
+    let mut rng = Rng::new(seed);
+    let classes = 1 + rng.below(5);
+    let n_per = 5 + rng.below(60);
+    let n = classes * n_per;
+    let n_subsets = 1 + rng.below(4);
+    let k = 1 + rng.below(n);
+    let wre_classes: Vec<ClassProbs> = (0..classes)
+        .map(|c| {
+            let raw: Vec<f64> = (0..n_per).map(|_| rng.f64() + 1e-6).collect();
+            let total: f64 = raw.iter().sum();
+            ClassProbs {
+                indices: (c * n_per..(c + 1) * n_per).collect(),
+                probs: raw.into_iter().map(|p| p / total).collect(),
+            }
+        })
+        .collect();
+    Metadata {
+        dataset: format!("ds_{}", seed % 97),
+        fraction: rng.f64(),
+        sge_subsets: (0..n_subsets).map(|_| rng.sample_indices(n, k)).collect(),
+        wre_classes,
+        fixed_dm: rng.sample_indices(n, k),
+        preprocess_secs: rng.f64() * 100.0,
+    }
+}
+
+#[test]
+fn prop_roundtrip_is_byte_identical() {
+    check_cases(2024, 40, |seed| {
+        let meta = random_metadata(seed);
+        let bytes = binfmt::encode(&meta);
+        let decoded = binfmt::decode(&bytes).expect("decode of fresh encode");
+        assert_eq!(decoded, meta, "decode must reproduce every field exactly");
+        // save -> load -> save: the second save is byte-identical
+        assert_eq!(binfmt::encode(&decoded), bytes);
+    });
+}
+
+#[test]
+fn prop_store_file_roundtrip_is_byte_identical() {
+    let dir = std::env::temp_dir()
+        .join(format!("milo_store_props_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+    check_cases(77, 10, |seed| {
+        let meta = random_metadata(seed);
+        let mut key = MetaKey::from_options(
+            &meta.dataset,
+            &milo::coordinator::PreprocessOptions::default(),
+        );
+        key.seed = seed;
+        store.put(&key, meta.clone()).unwrap();
+        let first = std::fs::read(store.path_for(&key)).unwrap();
+        // load through a cold handle, save again, compare bytes
+        let cold = MetaStore::open(&dir).unwrap();
+        let loaded = cold.load_uncached(&key).unwrap().expect("artifact exists");
+        assert_eq!(loaded, meta);
+        cold.put(&key, loaded).unwrap();
+        let second = std::fs::read(store.path_for(&key)).unwrap();
+        assert_eq!(first, second, "save -> load -> save must be byte-identical");
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_truncations_and_flips_error_cleanly() {
+    check_cases(4096, 12, |seed| {
+        let meta = random_metadata(seed);
+        let bytes = binfmt::encode(&meta);
+        let mut rng = Rng::new(seed ^ 0xC0FF_EE);
+        for _ in 0..16 {
+            let cut = rng.below(bytes.len());
+            assert!(
+                binfmt::decode(&bytes[..cut]).is_err(),
+                "truncation to {cut}/{} bytes must fail",
+                bytes.len()
+            );
+            let mut flipped = bytes.clone();
+            let pos = rng.below(bytes.len());
+            flipped[pos] ^= 1u8 << rng.below(8);
+            assert!(
+                binfmt::decode(&flipped).is_err(),
+                "bit flip at byte {pos} must fail the checksum"
+            );
+        }
+    });
+}
+
+#[test]
+fn garbage_files_error_cleanly_and_store_rebuilds() {
+    let dir = std::env::temp_dir()
+        .join(format!("milo_store_garbage_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+    let key = MetaKey::from_options(
+        "garbage",
+        &milo::coordinator::PreprocessOptions::default(),
+    );
+
+    for garbage in [
+        &b""[..],
+        &b"MILOSTOR"[..], // magic only
+        &b"{\"this\": \"is json, not binfmt\"}"[..],
+        &[0u8; 64][..],
+    ] {
+        std::fs::write(store.path_for(&key), garbage).unwrap();
+        let cold = MetaStore::open(&dir).unwrap();
+        assert!(
+            cold.load_uncached(&key).is_err(),
+            "{} garbage bytes must be a clean load error",
+            garbage.len()
+        );
+        // ...and get_or_build self-heals by rebuilding
+        let rebuilt = cold
+            .get_or_build(&key, || Ok(random_metadata(1)))
+            .unwrap();
+        assert_eq!(*rebuilt, random_metadata(1));
+        assert_eq!(cold.stats().builds, 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_schema_version_is_rebuilt_not_misparsed() {
+    let dir = std::env::temp_dir()
+        .join(format!("milo_store_stale_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+    let key = MetaKey::from_options(
+        "stale",
+        &milo::coordinator::PreprocessOptions::default(),
+    );
+    // forge a valid-checksum artifact with a future schema version
+    let mut bytes = binfmt::encode(&random_metadata(9));
+    bytes[8..12].copy_from_slice(&(binfmt::FORMAT_VERSION + 7).to_le_bytes());
+    let n = bytes.len();
+    let check = milo::store::fnv1a64(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&check.to_le_bytes());
+    std::fs::write(store.path_for(&key), &bytes).unwrap();
+
+    let err = store.load_uncached(&key).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+    let rebuilt = store.get_or_build(&key, || Ok(random_metadata(2))).unwrap();
+    assert_eq!(*rebuilt, random_metadata(2));
+    assert_eq!(store.stats().builds, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -12,11 +12,7 @@ use milo::train::model::MlpModel;
 use milo::util::rng::Rng;
 
 fn runtime() -> Option<Runtime> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        return None;
-    }
-    Some(Runtime::open(dir).unwrap())
+    milo::testkit::artifacts_or_skip()
 }
 
 struct Fixture {
