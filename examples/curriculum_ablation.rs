@@ -2,6 +2,9 @@
 //! curriculum fraction κ from 0 (pure WRE/disparity-min) to 1 (pure
 //! SGE/graph-cut) and show the interior optimum the paper finds at κ=1/6.
 //!
+//! One `MiloSession` = one pre-processing pass serving every κ arm; each
+//! arm is a `session.train` call with a different `StrategyKind::Milo`.
+//!
 //! Run: `cargo run --release --example curriculum_ablation [-- --epochs 40]`
 
 use milo::prelude::*;
@@ -14,36 +17,37 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 1)?;
 
     let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
-    let ds = DatasetId::Cifar10Like.generate(seed);
+    let session = MiloSession::builder()
+        .runtime(&rt)
+        .dataset(DatasetId::Cifar10Like.generate(seed))
+        .fraction(fraction)
+        .seed(seed)
+        .build()?;
 
     // one pre-processing pass serves every kappa
-    let pre = Preprocessor::with_options(
-        &rt,
-        PreprocessOptions { fraction, seed, ..Default::default() },
-    );
-    let meta = pre.run(&ds)?;
+    let meta = session.metadata()?;
     println!("pre-processing: {:.2}s", meta.preprocess_secs);
 
     let mut table = Table::new(
         format!(
             "Curriculum sweep on {} @ {:.0}% ({} epochs)",
-            ds.name(),
+            session.dataset().name(),
             fraction * 100.0,
             epochs
         ),
         &["kappa", "phase_split", "test_acc_%"],
     );
     for kappa in [0.0, 1.0 / 12.0, 1.0 / 8.0, 1.0 / 6.0, 0.25, 0.5, 1.0] {
-        let mut strategy = meta.milo_strategy(kappa);
-        let switch = strategy.switch_epoch(epochs);
+        // ask the strategy itself where the curriculum flips, so the
+        // printed phase split can never drift from what training does
+        let switch = meta.milo_strategy(kappa).switch_epoch(epochs);
         let cfg = TrainConfig {
             epochs,
-            fraction,
             eval_every: 0,
             seed,
-            ..TrainConfig::recipe_for(&ds, epochs)
+            ..TrainConfig::recipe_for(session.dataset(), epochs)
         };
-        let out = Trainer::new(&rt, &ds, cfg)?.run(&mut strategy)?;
+        let out = session.train(StrategyKind::Milo { kappa }, cfg)?;
         table.push(vec![
             format!("{kappa:.4}"),
             format!("SGE {} / WRE {}", switch, epochs - switch),

@@ -13,7 +13,6 @@
 //!
 //! Run: `cargo run --release --example end_to_end [-- --epochs 60 --fraction 0.1]`
 
-use milo::coordinator::StrategyKind;
 use milo::prelude::*;
 use milo::util::args::Args;
 
@@ -24,16 +23,26 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 1)?;
 
     let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
-    let ds = DatasetId::Glyphs.generate(seed);
+    let session = MiloSession::builder()
+        .runtime(&rt)
+        .dataset(DatasetId::Glyphs.generate(seed))
+        .source(MetaSource::inline(PreprocessOptions {
+            backend: SimilarityBackend::Pjrt,
+            ..Default::default()
+        }))
+        .fraction(fraction)
+        .seed(seed)
+        .build()?;
+    let ds = session.dataset();
     println!(
         "glyphs: {} rendered 16x16 digit images (train), {} test",
         ds.n_train(),
         ds.test_y.len()
     );
 
-    // Pre-processing through the PJRT/Pallas path — the architecture's L1.
-    let mut runner = milo::coordinator::ExperimentRunner::new(&rt, &ds, epochs);
-    runner.backend = SimilarityBackend::Pjrt;
+    // Pre-processing through the PJRT/Pallas path — the architecture's L1;
+    // the grid runner below inherits the session's source and backend.
+    let mut runner = session.runner(epochs)?;
     runner.verbose = !args.flag("quiet");
 
     let t0 = std::time::Instant::now();

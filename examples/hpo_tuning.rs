@@ -2,12 +2,12 @@
 //! the TREC6-like dataset with Random-Search×Hyperband and TPE×Hyperband,
 //! evaluating every configuration on MILO subsets vs full data.
 //!
-//! The pre-processing metadata is computed once and shared by every trial
-//! — the amortization that gives the paper its 20–75× tuning speedups.
+//! Tuners are handed out by one `MiloSession`, so the pre-processing
+//! metadata is resolved once and shared by every trial of every tuner —
+//! the amortization that gives the paper its 20–75× tuning speedups.
 //!
 //! Run: `cargo run --release --example hpo_tuning [-- --fraction 0.1 --max-epochs 9]`
 
-use milo::coordinator::StrategyKind;
 use milo::prelude::*;
 use milo::util::args::Args;
 
@@ -18,27 +18,37 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 1)?;
 
     let rt = Runtime::open(args.get_or("artifacts", "artifacts"))?;
-    let ds = DatasetId::Trec6Like.generate(seed);
+    // native backend: same preprocessing recipe the standalone Tuner used
+    let session = MiloSession::builder()
+        .runtime(&rt)
+        .dataset(DatasetId::Trec6Like.generate(seed))
+        .source(MetaSource::inline(PreprocessOptions {
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        }))
+        .fraction(fraction)
+        .seed(seed)
+        .build()?;
 
     let mut table = Table::new(
-        format!("HPO on {} (Hyperband R={max_epochs}, eta=3)", ds.name()),
+        format!(
+            "HPO on {} (Hyperband R={max_epochs}, eta=3)",
+            session.dataset().name()
+        ),
         &["search", "strategy", "best_test_acc_%", "trials", "tuning_secs", "speedup"],
     );
     for algo in [SearchAlgo::Random, SearchAlgo::Tpe] {
         // FULL-data tuning reference
-        let full_out = Tuner::new(
-            &rt,
-            &ds,
-            HpoConfig {
+        let full_out = session
+            .tuner(HpoConfig {
                 algo,
                 strategy: StrategyKind::Full,
                 fraction: 1.0,
                 max_epochs,
                 eta: 3,
                 seed,
-            },
-        )
-        .run()?;
+            })?
+            .run()?;
         table.push(vec![
             algo.name().into(),
             "full".into(),
@@ -52,12 +62,16 @@ fn main() -> anyhow::Result<()> {
             StrategyKind::AdaptiveRandom,
             StrategyKind::Random,
         ] {
-            let out = Tuner::new(
-                &rt,
-                &ds,
-                HpoConfig { algo, strategy: kind, fraction, max_epochs, eta: 3, seed },
-            )
-            .run()?;
+            let out = session
+                .tuner(HpoConfig {
+                    algo,
+                    strategy: kind,
+                    fraction,
+                    max_epochs,
+                    eta: 3,
+                    seed,
+                })?
+                .run()?;
             table.push(vec![
                 algo.name().into(),
                 kind.name().into(),

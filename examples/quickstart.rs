@@ -1,11 +1,11 @@
-//! Quickstart: the whole MILO workflow in ~40 lines.
+//! Quickstart: the whole MILO workflow through the session builder.
 //!
 //! 1. open the AOT artifact runtime (`make artifacts` first);
-//! 2. generate a dataset;
-//! 3. pre-process once (SGE subsets + WRE distribution — the paper's
-//!    model-agnostic step);
-//! 4. train a downstream model on the MILO curriculum;
-//! 5. compare with full-data training.
+//! 2. build a `MiloSession`: dataset + metadata source + fraction;
+//! 3. the session resolves pre-processing once (SGE subsets + WRE
+//!    distribution — the paper's model-agnostic step);
+//! 4. train the MILO curriculum and the full-data reference off the same
+//!    session — one `train` call each.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -13,7 +13,15 @@ use milo::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::open("artifacts")?;
-    let ds = DatasetId::Cifar10Like.generate(1);
+    let fraction = 0.1;
+    let session = MiloSession::builder()
+        .runtime(&rt)
+        .dataset(DatasetId::Cifar10Like.generate(1))
+        .source(MetaSource::inline(PreprocessOptions::default()))
+        .fraction(fraction)
+        .build()?;
+
+    let ds = session.dataset();
     println!(
         "dataset {}: {} train / {} val / {} test, {} classes",
         ds.name(),
@@ -23,14 +31,9 @@ fn main() -> anyhow::Result<()> {
         ds.classes()
     );
 
-    // Pre-process once: this is MILO's entire selection cost, paid before
-    // any model exists.
-    let fraction = 0.1;
-    let pre = Preprocessor::with_options(
-        &rt,
-        PreprocessOptions { fraction, ..Default::default() },
-    );
-    let meta = pre.run(&ds)?;
+    // Resolve once: this is MILO's entire selection cost, paid before any
+    // model exists — every consumer below shares it.
+    let meta = session.metadata()?;
     println!(
         "pre-processing: {:.2}s ({} SGE subsets of {}, WRE over {} classes)",
         meta.preprocess_secs,
@@ -39,20 +42,16 @@ fn main() -> anyhow::Result<()> {
         meta.wre_classes.len()
     );
 
-    // Train with the easy-to-hard curriculum (kappa = 1/6).
+    // Train with the easy-to-hard curriculum (kappa = 1/6), then the
+    // full-data reference — the session wires fraction and strategy.
     let epochs = 40;
     let cfg = TrainConfig {
         epochs,
-        fraction,
         eval_every: 10,
-        ..TrainConfig::recipe_for(&ds, epochs)
+        ..TrainConfig::recipe_for(session.dataset(), epochs)
     };
-    let mut strategy = meta.milo_strategy(1.0 / 6.0);
-    let milo_run = Trainer::new(&rt, &ds, cfg.clone())?.run(&mut strategy)?;
-
-    // Reference: full-data training.
-    let full_cfg = TrainConfig { fraction: 1.0, ..cfg };
-    let full_run = Trainer::new(&rt, &ds, full_cfg)?.run(&mut FullStrategy)?;
+    let milo_run = session.train(StrategyKind::Milo { kappa: 1.0 / 6.0 }, cfg.clone())?;
+    let full_run = session.train(StrategyKind::Full, cfg)?;
 
     println!(
         "MILO  (10%): test acc {:.2}%  train {:.2}s",

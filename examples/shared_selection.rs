@@ -1,90 +1,71 @@
-//! Shared selection: one preprocessing pass, N concurrent consumers.
+//! Shared selection: one preprocessing pass, N concurrent consumers —
+//! expressed entirely through the session API.
 //!
 //! The paper's amortization claim as a running topology:
 //!
-//! 1. pre-process once into the content-addressed metadata store
-//!    (`milo::store`) — the build counter proves the pass ran exactly once;
-//! 2. start a `milo::serve` subset server on an ephemeral port;
-//! 3. connect 4 concurrent clients, each drawing its own deterministic
-//!    SGE-subset cycle and WRE sample stream;
-//! 4. (with artifacts present) train a downstream model per client via
-//!    `ServedMiloStrategy`, sharing the single pass.
+//! 1. a store-backed `MiloSession` resolves pre-processing once into the
+//!    content-addressed metadata store (`milo::store`) — the build counter
+//!    proves the pass ran exactly once;
+//! 2. a `milo::serve` subset server exposes that resolution on an
+//!    ephemeral port;
+//! 3. four concurrent clients draw their own deterministic SGE-subset
+//!    cycles and WRE sample streams;
+//! 4. a *remote* `MiloSession` pointed at the server resolves the very
+//!    same metadata (validated dataset/seed/fraction) and — with
+//!    artifacts present — trains a downstream model off the live stream.
 //!
 //! Run: `cargo run --release --example shared_selection`
 //! Works without AOT artifacts too: it then serves synthetic metadata and
 //! skips the training step.
 
-use milo::coordinator::{Metadata, PreprocessOptions, Preprocessor};
-use milo::data::DatasetId;
-use milo::selection::milo::ClassProbs;
-use milo::serve::{ServeClient, ServedMiloStrategy, SubsetServer};
-use milo::store::{MetaKey, MetaStore};
-use milo::train::{TrainConfig, Trainer};
+use milo::prelude::*;
 
 const N_CLIENTS: usize = 4;
-
-fn synthetic_metadata() -> Metadata {
-    // 2 classes × 100 points, 3 SGE subsets of 20 — enough structure to
-    // exercise every protocol command without the AOT artifacts.
-    let n_per = 100;
-    Metadata {
-        dataset: "synthetic".into(),
-        fraction: 0.1,
-        sge_subsets: (0..3)
-            .map(|r| (0..20).map(|i| (i * 10 + r) % (2 * n_per)).collect())
-            .collect(),
-        wre_classes: (0..2)
-            .map(|c| ClassProbs {
-                indices: (c * n_per..(c + 1) * n_per).collect(),
-                probs: (0..n_per).map(|i| 1.0 + (i % 7) as f64).collect(),
-            })
-            .collect(),
-        fixed_dm: (0..20).map(|i| i * 9).collect(),
-        preprocess_secs: 0.0,
-    }
-}
+const SEED: u64 = 1;
+const FRACTION: f64 = 0.1;
 
 fn main() -> anyhow::Result<()> {
     let store_dir = std::env::temp_dir()
         .join(format!("milo_shared_selection_{}", std::process::id()));
     let store = MetaStore::open(&store_dir)?;
-    let seed = 1u64;
+    let opts = PreprocessOptions {
+        fraction: FRACTION,
+        backend: SimilarityBackend::Native,
+        seed: SEED,
+        ..Default::default()
+    };
 
-    // --- 1. one preprocessing pass, content-addressed -------------------
-    let rt = milo::runtime::Runtime::open("artifacts").ok();
-    let (key, meta) = match &rt {
+    // --- 1. one preprocessing pass, resolved through a store session ----
+    let rt = Runtime::open("artifacts").ok();
+    let meta = match &rt {
         Some(rt) => {
-            let ds = DatasetId::Trec6Like.generate(seed);
-            let pre = Preprocessor::with_options(
-                rt,
-                PreprocessOptions {
-                    fraction: 0.1,
-                    backend: milo::kernel::SimilarityBackend::Native,
-                    seed,
-                    ..Default::default()
-                },
-            );
-            let key = MetaKey::from_options(ds.name(), &pre.opts);
-            let meta = store.get_or_build(&key, || pre.run(&ds))?;
-            (key, meta)
+            let session = MiloSession::builder()
+                .runtime(rt)
+                .dataset(DatasetId::Trec6Like.generate(SEED))
+                .source(MetaSource::store_handle(store.clone(), opts.clone()))
+                .build()?;
+            session.metadata()?
         }
         None => {
+            // dataset generation is procedural — only *preprocessing*
+            // needs the AOT artifacts, so serve synthetic selections over
+            // the real dataset instead
             println!("artifacts missing -> serving synthetic metadata");
-            let mut key = MetaKey::from_options("synthetic", &PreprocessOptions::default());
-            key.seed = seed;
-            let meta = store.get_or_build(&key, || Ok(synthetic_metadata()))?;
-            (key, meta)
+            let ds = DatasetId::Trec6Like.generate(SEED);
+            let key = MetaKey::from_options(ds.name(), &opts);
+            store.get_or_build(&key, || {
+                Ok(milo::testkit::synthetic_metadata(&ds, FRACTION))
+            })?
         }
     };
     println!(
-        "store: fingerprint {}, builds {} (must be 1), {} SGE subsets",
-        key.fingerprint(),
+        "store: builds {} (must be 1), {} SGE subsets",
         store.stats().builds,
         meta.sge_subsets.len(),
     );
 
     // --- 2. serve it on an ephemeral port -------------------------------
-    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), Some(store.clone()), seed)?;
+    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), Some(store.clone()), SEED)?;
     let addr = server.addr().to_string();
     println!("serving on {addr}");
 
@@ -114,19 +95,26 @@ fn main() -> anyhow::Result<()> {
         println!("  {id}: SGE cycle {cycle:?}, WRE draw of {wre_len}");
     }
 
-    // --- 4. train off the served stream when artifacts exist ------------
+    // --- 4. a remote session trains off the served stream ---------------
     if let Some(rt) = &rt {
-        let ds = DatasetId::Trec6Like.generate(seed);
+        let remote = MiloSession::builder()
+            .runtime(rt)
+            .dataset(DatasetId::Trec6Like.generate(SEED))
+            .source(MetaSource::remote_expecting(&addr, SEED, FRACTION))
+            .build()?;
+        // the remote resolution is the same pass the store session paid for
+        assert_eq!(remote.metadata()?.sge_subsets, meta.sge_subsets);
         let epochs = 6;
+        // served_strategy bypasses session.train's fraction wiring, so
+        // size the trainer's k to the served fraction explicitly
         let cfg = TrainConfig {
             epochs,
-            fraction: 0.1,
+            fraction: remote.fraction(),
             eval_every: 0,
-            ..TrainConfig::recipe_for(&ds, epochs)
+            ..TrainConfig::recipe_for(remote.dataset(), epochs)
         };
-        let mut strategy =
-            ServedMiloStrategy::connect(&addr, "trainer-main", 1.0 / 6.0)?;
-        let out = Trainer::new(rt, &ds, cfg)?.run(&mut strategy)?;
+        let mut strategy = remote.served_strategy("trainer-main", 1.0 / 6.0)?;
+        let out = remote.trainer(cfg)?.run(&mut strategy)?;
         println!(
             "served training: test acc {:.2}% in {:.2}s (preprocess amortized to 0)",
             100.0 * out.test_accuracy,

@@ -1,10 +1,12 @@
-//! Bench: regenerate paper Fig. 7 / Table 10 (HPO speedup-accuracy
-//! tradeoff, Random+HB and TPE+HB) at a reduced budget.
+//! Bench: the paper Fig. 7 / Table 10 scenario (HPO speedup-accuracy
+//! tradeoff, Random+HB and TPE+HB) at a reduced budget, driven through
+//! the `MiloSession` builder — one session resolution amortizes across
+//! every tuner and both search algorithms.
 //!
 //! Run: `cargo bench --bench fig7_hpo`
+//! Full-scale grid: `milo repro fig7 --epochs 27`
 
-use milo::coordinator::repro::{fig7_hpo, ReproOptions};
-use milo::runtime::Runtime;
+use milo::prelude::*;
 
 fn main() {
     let rt = match Runtime::open("artifacts") {
@@ -14,16 +16,73 @@ fn main() {
             return;
         }
     };
-    let opts = ReproOptions {
-        epochs: 9, // hyperband max resource
-        fractions: vec![0.05, 0.3],
-        out_dir: "results/bench".into(),
-        verbose: false,
-        ..Default::default()
-    };
+    let fraction = 0.05;
+    let max_epochs = 9;
+    // native backend: same preprocessing recipe the standalone Tuner used
+    let session = MiloSession::builder()
+        .runtime(&rt)
+        .dataset(DatasetId::Trec6Like.generate(1))
+        .source(MetaSource::inline(PreprocessOptions {
+            backend: SimilarityBackend::Native,
+            ..Default::default()
+        }))
+        .fraction(fraction)
+        .seed(1)
+        .build()
+        .expect("session");
+
+    let mut table = Table::new(
+        "Fig 7 (bench budget): HPO tradeoff via MiloSession, trec6",
+        &["search", "strategy", "best_test_acc_%", "tuning_secs", "speedup"],
+    );
     let t0 = std::time::Instant::now();
-    for t in fig7_hpo(&rt, &opts).expect("fig7") {
-        println!("{}", t.to_markdown());
+    for algo in [SearchAlgo::Random, SearchAlgo::Tpe] {
+        let full = session
+            .tuner(HpoConfig {
+                algo,
+                strategy: StrategyKind::Full,
+                fraction: 1.0,
+                max_epochs,
+                eta: 3,
+                seed: 1,
+            })
+            .expect("full tuner")
+            .run()
+            .expect("full tuning");
+        table.push(vec![
+            algo.name().into(),
+            "full".into(),
+            format!("{:.2}", 100.0 * full.best_test_accuracy),
+            format!("{:.2}", full.tuning_secs),
+            "1.00".into(),
+        ]);
+        for kind in [
+            StrategyKind::Milo { kappa: 1.0 / 6.0 },
+            StrategyKind::MiloFixed,
+            StrategyKind::AdaptiveRandom,
+        ] {
+            let out = session
+                .tuner(HpoConfig {
+                    algo,
+                    strategy: kind,
+                    fraction,
+                    max_epochs,
+                    eta: 3,
+                    seed: 1,
+                })
+                .expect("tuner")
+                .run()
+                .expect("tuning");
+            table.push(vec![
+                algo.name().into(),
+                kind.name().into(),
+                format!("{:.2}", 100.0 * out.best_test_accuracy),
+                format!("{:.2}", out.tuning_secs),
+                format!("{:.2}", full.tuning_secs / out.tuning_secs.max(1e-9)),
+            ]);
+        }
     }
+    println!("{}", table.to_markdown());
+    table.save("results/bench", "fig7_hpo_session").expect("save");
     println!("fig7 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
 }

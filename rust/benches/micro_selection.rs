@@ -5,7 +5,10 @@
 //!   * weighted sampling (the per-epoch WRE select),
 //!   * the PJRT train-step call itself,
 //!   * metadata-store cache-hit load vs a full preprocessing pass (the
-//!     amortization ratio behind the paper's "no additional cost" claim).
+//!     amortization ratio behind the paper's "no additional cost" claim),
+//!   * MiloSession (builder API) vs a hand-wired pipeline: subset delivery
+//!     through the session layer must cost the same as wiring
+//!     Metadata→MiloStrategy by hand (asserted, not just printed).
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -81,6 +84,86 @@ fn main() {
     });
 
     bench_store_amortization();
+    bench_session_vs_handwired();
+}
+
+/// Builder-vs-hand-wired subset delivery: drive `MiloStrategy::select`
+/// through (a) a `MiloSession` (store source, cached resolution) and
+/// (b) a hand-wired `Metadata` → `MiloStrategy` pipeline, and assert the
+/// session layer adds no measurable overhead per delivered subset. Runs
+/// without artifacts (synthetic metadata through a store).
+fn bench_session_vs_handwired() {
+    use milo::prelude::*;
+
+    let dir = std::env::temp_dir()
+        .join(format!("milo_bench_session_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+
+    let ds = DatasetId::Trec6Like.generate(1);
+    let opts = PreprocessOptions {
+        fraction: 0.1,
+        backend: SimilarityBackend::Native,
+        seed: 1,
+        ..Default::default()
+    };
+    let k = ds.subset_size(0.1);
+    let key = MetaKey::from_options(ds.name(), &opts);
+    store
+        .put(&key, milo::testkit::synthetic_metadata(&ds, 0.1))
+        .unwrap();
+
+    // (a) the session path
+    let session = MiloSession::builder()
+        .dataset(DatasetId::Trec6Like.generate(1))
+        .source(MetaSource::store_handle(store.clone(), opts))
+        .build()
+        .unwrap();
+    let mut session_strat =
+        session.strategy(StrategyKind::Milo { kappa: 1.0 / 6.0 }).unwrap();
+
+    // (b) the hand-wired path over the same artifact
+    let handwired_meta = store.get_or_build(&key, || unreachable!()).unwrap();
+    let mut handwired_strat = handwired_meta.milo_strategy(1.0 / 6.0);
+
+    let epochs = 60usize;
+    let time_deliveries = |strat: &mut dyn Strategy, ds: &Dataset| -> f64 {
+        let mut rng = Rng::new(0xBE7C);
+        // warmup
+        for epoch in 0..epochs {
+            let mut ctx = SelectCtx::model_agnostic(ds, epoch, epochs, k, &mut rng);
+            std::hint::black_box(strat.select(&mut ctx).unwrap());
+        }
+        let iters = 20;
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            for epoch in 0..epochs {
+                let mut ctx =
+                    SelectCtx::model_agnostic(ds, epoch, epochs, k, &mut rng);
+                std::hint::black_box(strat.select(&mut ctx).unwrap());
+            }
+        }
+        t0.elapsed().as_secs_f64() / (iters * epochs) as f64
+    };
+
+    let handwired = time_deliveries(&mut handwired_strat, &ds);
+    let via_session = time_deliveries(session_strat.as_mut(), session.dataset());
+    println!(
+        "bench session_vs_handwired: hand-wired {:.3}us/select, session {:.3}us/select \
+         ({:.2}x)",
+        handwired * 1e6,
+        via_session * 1e6,
+        via_session / handwired.max(1e-12),
+    );
+    // "no measurable overhead": same strategy object underneath, so allow
+    // only scheduler noise — 25% relative or 20us absolute, whichever is
+    // larger.
+    assert!(
+        via_session <= handwired * 1.25 + 20e-6,
+        "session layer added measurable subset-delivery overhead: \
+         {via_session}s vs {handwired}s per select"
+    );
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Store amortization: once metadata is in the content-addressed store, a

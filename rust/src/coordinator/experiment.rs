@@ -1,6 +1,8 @@
 //! Experiment runner: the (dataset × strategy × fraction × seed) grid that
 //! regenerates the paper's tables/figures, plus the strategy factory.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::{Metadata, PreprocessOptions, Preprocessor};
@@ -12,6 +14,7 @@ use crate::selection::{
     GlisterStrategy, GradMatchPbStrategy, RandomStrategy, SgeVariantStrategy,
     SslPruneStrategy, Strategy,
 };
+use crate::session::MetaSource;
 use crate::train::{LrSchedule, TrainConfig, TrainOutcome, Trainer};
 
 /// All strategies the evaluation grid can instantiate. Paper §4's baseline
@@ -35,6 +38,24 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
+    /// Every strategy the grid knows, with default parameters — the single
+    /// table behind [`StrategyKind::from_name`], the
+    /// [`StrategyKind::parse`] error message, and `milo list`.
+    pub const ALL: [StrategyKind; 12] = [
+        StrategyKind::Milo { kappa: crate::selection::milo::DEFAULT_KAPPA },
+        StrategyKind::MiloFixed,
+        StrategyKind::Random,
+        StrategyKind::AdaptiveRandom,
+        StrategyKind::Full,
+        StrategyKind::FullEarlyStop,
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+        StrategyKind::Glister,
+        StrategyKind::El2nPrune,
+        StrategyKind::SslPrune,
+        StrategyKind::SgeVariant,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             StrategyKind::Milo { .. } => "milo",
@@ -52,21 +73,26 @@ impl StrategyKind {
         }
     }
 
+    /// Look a strategy up in [`StrategyKind::ALL`] by its
+    /// [`name`](StrategyKind::name).
     pub fn from_name(name: &str) -> Option<StrategyKind> {
-        Some(match name {
-            "milo" => StrategyKind::Milo { kappa: crate::selection::milo::DEFAULT_KAPPA },
-            "milo_fixed" => StrategyKind::MiloFixed,
-            "random" => StrategyKind::Random,
-            "adaptive_random" => StrategyKind::AdaptiveRandom,
-            "full" => StrategyKind::Full,
-            "full_earlystop" => StrategyKind::FullEarlyStop,
-            "craigpb" => StrategyKind::CraigPb,
-            "gradmatchpb" => StrategyKind::GradMatchPb,
-            "glister" => StrategyKind::Glister,
-            "el2n_prune" => StrategyKind::El2nPrune,
-            "ssl_prune" => StrategyKind::SslPrune,
-            "sge_variant" => StrategyKind::SgeVariant,
-            _ => return None,
+        Self::ALL.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// [`from_name`](StrategyKind::from_name), but an unknown name is an
+    /// error that lists the valid vocabulary — generated from
+    /// [`StrategyKind::ALL`], so the CLI surfaces (`milo train`, `repro`,
+    /// `tune`) never drift apart.
+    pub fn parse(name: &str) -> Result<StrategyKind> {
+        Self::from_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown strategy {name:?}; valid strategies: {}",
+                Self::ALL
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
         })
     }
 
@@ -150,10 +176,22 @@ pub struct ExperimentRunner<'a> {
     pub r_expensive: usize,
     /// SGE/WRE pre-processing backend.
     pub backend: SimilarityBackend,
-    /// Metadata cache dir (None disables caching).
+    /// Metadata cache dir (None disables caching). Superseded by `source`;
+    /// kept as the short spelling of a store-backed source.
     pub cache_dir: Option<std::path::PathBuf>,
+    /// Where per-cell metadata comes from (re-targeted per fraction/seed
+    /// cell). When unset, falls back to `cache_dir` (store) or an inline
+    /// pass. `MiloSession::runner` presets this with the session's source.
+    pub source: Option<MetaSource>,
     /// Verbose progress lines to stderr.
     pub verbose: bool,
+    /// One-slot memo of the last resolved cell, keyed by the full
+    /// configuration descriptor (so post-construction `backend`/`source`
+    /// mutations are never silently ignored) — grids run several
+    /// strategies at the same cell, and an Inline source is always-fresh,
+    /// so without this every metadata-consuming cell would repay the full
+    /// preprocessing pass.
+    memo: std::sync::Mutex<Option<(String, Arc<Metadata>)>>,
 }
 
 impl<'a> ExperimentRunner<'a> {
@@ -171,7 +209,9 @@ impl<'a> ExperimentRunner<'a> {
             r_expensive: if text { 3 } else { 10 },
             backend: SimilarityBackend::Native,
             cache_dir: None,
+            source: None,
             verbose: false,
+            memo: std::sync::Mutex::new(None),
         }
     }
 
@@ -181,21 +221,47 @@ impl<'a> ExperimentRunner<'a> {
         }
     }
 
-    /// Pre-process metadata for a fraction (cached when a dir is set).
-    pub fn preprocess(&self, fraction: f64, seed: u64) -> Result<Metadata> {
-        let pre = Preprocessor::with_options(
-            self.rt,
-            PreprocessOptions {
-                fraction,
-                backend: self.backend,
-                seed,
-                ..Default::default()
-            },
-        );
-        match &self.cache_dir {
-            Some(dir) => pre.run_cached(self.ds, dir.clone()),
-            None => pre.run(self.ds),
+    /// Pre-process metadata for one grid cell, routed through the runner's
+    /// [`MetaSource`] (re-targeted at the cell's fraction/seed). The last
+    /// resolution is memoized, so consecutive cells at one configuration
+    /// share a single pass even with an always-fresh Inline source.
+    pub fn preprocess(&self, fraction: f64, seed: u64) -> Result<Arc<Metadata>> {
+        let source = match &self.source {
+            Some(src) => src
+                .clone()
+                .with_fraction(fraction)
+                .with_seed(seed)
+                .with_backend(self.backend),
+            None => {
+                let opts = PreprocessOptions {
+                    fraction,
+                    backend: self.backend,
+                    seed,
+                    ..Default::default()
+                };
+                match &self.cache_dir {
+                    Some(dir) => MetaSource::store(dir.clone(), opts)?,
+                    None => MetaSource::inline(opts),
+                }
+            }
+        };
+        // everything that changes the selection output is in the tag:
+        // local sources use the store fingerprint, remote ones the
+        // address plus the re-targeted expectations
+        let tag = match source.options() {
+            Some(opts) => {
+                crate::store::MetaKey::from_options(self.ds.name(), opts).fingerprint()
+            }
+            None => format!("remote:{:?}:f{fraction}:s{seed}", source),
+        };
+        if let Some((t, meta)) = &*self.memo.lock().unwrap() {
+            if *t == tag {
+                return Ok(meta.clone());
+            }
         }
+        let meta = source.resolve(Some(self.rt), self.ds)?;
+        *self.memo.lock().unwrap() = Some((tag, meta.clone()));
+        Ok(meta)
     }
 
     fn config(&self, kind: StrategyKind, fraction: f64, seed: u64) -> TrainConfig {
@@ -255,7 +321,7 @@ impl<'a> ExperimentRunner<'a> {
         } else {
             None
         };
-        let mut strategy = kind.build(metadata.as_ref(), embeddings.as_ref())?;
+        let mut strategy = kind.build(metadata.as_deref(), embeddings.as_ref())?;
         let mut cfg = self.config(kind, fraction, seed);
         if matches!(kind, StrategyKind::FullEarlyStop) {
             // budget-match against a fraction-sized run: the paper stops FULL
@@ -324,25 +390,24 @@ mod tests {
 
     #[test]
     fn strategy_kind_roundtrip() {
-        for kind in [
-            StrategyKind::MiloFixed,
-            StrategyKind::Random,
-            StrategyKind::AdaptiveRandom,
-            StrategyKind::Full,
-            StrategyKind::CraigPb,
-            StrategyKind::GradMatchPb,
-            StrategyKind::Glister,
-            StrategyKind::El2nPrune,
-            StrategyKind::SslPrune,
-            StrategyKind::SgeVariant,
-        ] {
+        // the full table round-trips through its own names
+        for kind in StrategyKind::ALL {
             assert_eq!(StrategyKind::from_name(kind.name()), Some(kind));
+            assert_eq!(StrategyKind::parse(kind.name()).unwrap(), kind);
         }
         assert!(matches!(
             StrategyKind::from_name("milo"),
             Some(StrategyKind::Milo { .. })
         ));
         assert!(StrategyKind::from_name("bogus").is_none());
+    }
+
+    #[test]
+    fn parse_error_lists_every_valid_name() {
+        let err = format!("{:#}", StrategyKind::parse("bogus").unwrap_err());
+        for kind in StrategyKind::ALL {
+            assert!(err.contains(kind.name()), "{err} missing {}", kind.name());
+        }
     }
 
     #[test]

@@ -41,6 +41,29 @@ use crate::util::json::Json;
 use crate::util::math::taylor_softmax;
 use crate::util::rng::Rng;
 
+/// Which pre-processing pipeline produces the metadata. The kernel path is
+/// the paper's recipe; the feature-based path is the conclusion's
+/// kernel-free future-work variant (O(n·2E) memory instead of Σ n_c²).
+/// Part of [`PreprocessOptions`] so one [`crate::session::MetaSource`]
+/// addresses both — the pipeline is part of the store fingerprint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreprocessPipeline {
+    /// Class-wise similarity kernels + SGE/WRE (paper Algorithm 1).
+    Kernel,
+    /// Kernel-free [`crate::submod::FeatureCoverage`] pipeline.
+    FeatureBased,
+}
+
+impl PreprocessPipeline {
+    /// Stable descriptor used in store fingerprints.
+    pub fn name(self) -> &'static str {
+        match self {
+            PreprocessPipeline::Kernel => "kernel",
+            PreprocessPipeline::FeatureBased => "feature_based",
+        }
+    }
+}
+
 /// Pre-processing options (defaults = the paper's recipe).
 #[derive(Clone, Debug)]
 pub struct PreprocessOptions {
@@ -62,6 +85,8 @@ pub struct PreprocessOptions {
     /// Optional Fig-11 encoder variant (artifact `encoder_{ds}__{variant}`);
     /// `None` = the default zero-shot encoder.
     pub encoder_variant: Option<String>,
+    /// Pipeline variant (kernel vs kernel-free feature-based).
+    pub pipeline: PreprocessPipeline,
 }
 
 impl Default for PreprocessOptions {
@@ -76,6 +101,7 @@ impl Default for PreprocessOptions {
             epsilon: 0.01,
             seed: 1,
             encoder_variant: None,
+            pipeline: PreprocessPipeline::Kernel,
         }
     }
 }
@@ -382,20 +408,27 @@ impl<'a> Preprocessor<'a> {
         })
     }
 
-    /// Run against the content-addressed metadata store rooted at `dir`
-    /// (see [`crate::store`]): the canonical fingerprint of the full
-    /// preprocessing configuration addresses a versioned binary artifact,
-    /// shared through an in-process LRU, so concurrent consumers trigger at
-    /// most one preprocessing pass per configuration. Mirrors the paper's
-    /// "pre-processing only needs to be done once per dataset (and subset
-    /// size)".
+    /// Run whichever pipeline `opts.pipeline` selects — the single
+    /// execution entry point [`crate::session::MetaSource`] resolution
+    /// funnels through.
+    pub fn execute(&self, ds: &Dataset) -> Result<Metadata> {
+        match self.opts.pipeline {
+            PreprocessPipeline::Kernel => self.run(ds),
+            PreprocessPipeline::FeatureBased => self.run_featurebased(ds),
+        }
+    }
+
+    /// Deprecated shim over the store-backed
+    /// [`MetaSource`](crate::session::MetaSource) resolution path: one
+    /// process-wide store per `dir`, so concurrent callers of one
+    /// configuration trigger at most one preprocessing pass.
+    #[deprecated(
+        note = "build a session::MetaSource::store(dir, opts) and call \
+                resolve() — the MiloSession builder wires this up for you"
+    )]
     pub fn run_cached(&self, ds: &Dataset, dir: impl Into<PathBuf>) -> Result<Metadata> {
-        // `shared` (not `open`): every run_cached call site on the same dir
-        // hits one process-wide LRU + build-lock set, so concurrent callers
-        // share a single pass instead of each opening a cold store.
-        let store = crate::store::MetaStore::shared(dir)?;
-        let key = crate::store::MetaKey::from_options(ds.name(), &self.opts);
-        let meta = store.get_or_build(&key, || self.run(ds))?;
+        let source = crate::session::MetaSource::store(dir, self.opts.clone())?;
+        let meta = source.resolve(Some(self.rt), ds)?;
         Ok(Metadata::clone(&meta))
     }
 }

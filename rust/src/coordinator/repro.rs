@@ -34,6 +34,11 @@ pub struct ReproOptions {
     pub fractions: Vec<f64>,
     pub out_dir: std::path::PathBuf,
     pub backend: SimilarityBackend,
+    /// Restrict grid experiments (fig6, fig9) to these strategies; `None`
+    /// keeps each figure's paper defaults. Accepts the full
+    /// [`StrategyKind::from_name`] vocabulary (`milo repro fig6
+    /// --strategies milo,random`).
+    pub strategies: Option<Vec<StrategyKind>>,
     pub verbose: bool,
 }
 
@@ -45,6 +50,7 @@ impl Default for ReproOptions {
             fractions: vec![0.01, 0.05, 0.1, 0.3],
             out_dir: "results".into(),
             backend: SimilarityBackend::Native,
+            strategies: None,
             verbose: true,
         }
     }
@@ -414,10 +420,20 @@ pub fn fig14_curriculum_convergence(rt: &Runtime, opts: &ReproOptions) -> Result
         );
         let runner = opts.runner(rt, &ds);
         let meta = runner.preprocess(fraction, opts.seeds[0])?;
+        // pure-phase arms are MILO at κ = 1 / 0 — all through the factory
         let arms: Vec<(&str, Box<dyn Strategy>)> = vec![
-            ("milo_curriculum", Box::new(meta.milo_strategy(DEFAULT_KAPPA))),
-            ("sge_graph_cut", Box::new(meta.milo_strategy(1.0))),
-            ("wre_disparity_min", Box::new(meta.milo_strategy(0.0))),
+            (
+                "milo_curriculum",
+                StrategyKind::Milo { kappa: DEFAULT_KAPPA }.build(Some(&*meta), None)?,
+            ),
+            (
+                "sge_graph_cut",
+                StrategyKind::Milo { kappa: 1.0 }.build(Some(&*meta), None)?,
+            ),
+            (
+                "wre_disparity_min",
+                StrategyKind::Milo { kappa: 0.0 }.build(Some(&*meta), None)?,
+            ),
         ];
         for (name, mut strat) in arms {
             let cfg = TrainConfig {
@@ -447,15 +463,17 @@ pub fn fig6_tradeoff(
     opts: &ReproOptions,
     datasets: &[DatasetId],
 ) -> Result<Vec<Table>> {
-    let kinds = [
-        StrategyKind::Random,
-        StrategyKind::AdaptiveRandom,
-        StrategyKind::Glister,
-        StrategyKind::CraigPb,
-        StrategyKind::GradMatchPb,
-        StrategyKind::MiloFixed,
-        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
-    ];
+    let kinds = opts.strategies.clone().unwrap_or_else(|| {
+        vec![
+            StrategyKind::Random,
+            StrategyKind::AdaptiveRandom,
+            StrategyKind::Glister,
+            StrategyKind::CraigPb,
+            StrategyKind::GradMatchPb,
+            StrategyKind::MiloFixed,
+            StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+        ]
+    });
     let mut tables = Vec::new();
     for &ds_id in datasets {
         let ds = ds_id.generate(opts.seeds[0]);
@@ -501,7 +519,7 @@ pub fn fig6gh_convergence(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table
             } else {
                 None
             };
-            let mut strategy = kind.build(metadata.as_ref(), None)?;
+            let mut strategy = kind.build(metadata.as_deref(), None)?;
             let mut cfg = TrainConfig {
                 epochs: opts.epochs,
                 fraction: if matches!(kind, StrategyKind::Full) { 1.0 } else { 0.3 },
@@ -686,7 +704,7 @@ pub fn table_kendall(rt: &Runtime, opts: &ReproOptions, n_configs: usize) -> Res
                     ..Default::default()
                 },
             );
-            tuner.metadata = Some(pre.run(&ds)?);
+            tuner.metadata = Some(std::sync::Arc::new(pre.run(&ds)?));
         }
         let mut sw = crate::util::timer::Stopwatch::new();
         grid.iter()
@@ -860,16 +878,16 @@ pub fn table_wre_variant(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>
         );
         for &fraction in &[0.05, 0.1] {
             let meta = runner.preprocess(fraction, opts.seeds[0])?;
+            // both arms through the one strategy factory
             for (name, mut strat) in [
                 (
                     "milo",
-                    Box::new(meta.milo_strategy(DEFAULT_KAPPA)) as Box<dyn Strategy>,
+                    StrategyKind::Milo { kappa: DEFAULT_KAPPA }
+                        .build(Some(&*meta), None)?,
                 ),
                 (
                     "sge_variant",
-                    Box::new(crate::selection::SgeVariantStrategy::new(
-                        meta.sge_subsets.clone(),
-                    )),
+                    StrategyKind::SgeVariant.build(Some(&*meta), None)?,
                 ),
             ] {
                 let cfg = TrainConfig {
@@ -1034,14 +1052,16 @@ pub fn preprocess_time(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> 
 /// zero-shot encoder — the paper's claim is that a generic pre-trained
 /// encoder generalizes to unseen domains for subset selection.
 pub fn fig9_specialized(rt: &Runtime, opts: &ReproOptions) -> Result<Vec<Table>> {
-    let kinds = [
-        StrategyKind::Random,
-        StrategyKind::AdaptiveRandom,
-        StrategyKind::CraigPb,
-        StrategyKind::GradMatchPb,
-        StrategyKind::MiloFixed,
-        StrategyKind::Milo { kappa: DEFAULT_KAPPA },
-    ];
+    let kinds = opts.strategies.clone().unwrap_or_else(|| {
+        vec![
+            StrategyKind::Random,
+            StrategyKind::AdaptiveRandom,
+            StrategyKind::CraigPb,
+            StrategyKind::GradMatchPb,
+            StrategyKind::MiloFixed,
+            StrategyKind::Milo { kappa: DEFAULT_KAPPA },
+        ]
+    });
     let fractions = [0.05, 0.1];
     let mut tables = Vec::new();
     for ds_id in [DatasetId::OrganaLike, DatasetId::DermaLike] {

@@ -187,6 +187,13 @@ impl Dataset {
         self.train_y.len()
     }
 
+    /// Subset size for a fraction of the train split (rounded, clamped to
+    /// `[1, n_train]`) — the one rounding rule every consumer shares
+    /// (`TrainConfig::k`, `MiloSession::k`, testkit, benches).
+    pub fn subset_size(&self, fraction: f64) -> usize {
+        ((fraction * self.n_train() as f64).round() as usize).clamp(1, self.n_train())
+    }
+
     pub fn classes(&self) -> usize {
         self.id.classes()
     }

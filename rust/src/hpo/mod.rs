@@ -7,15 +7,18 @@ pub mod hyperband;
 pub mod space;
 pub mod tpe;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 pub use hyperband::{hyperband_brackets, Bracket};
 pub use space::{HpoSpace, TrialConfig};
 pub use tpe::TpeSampler;
 
-use crate::coordinator::{Metadata, StrategyKind};
+use crate::coordinator::{Metadata, PreprocessOptions, StrategyKind};
 use crate::data::Dataset;
 use crate::runtime::Runtime;
+use crate::session::MetaSource;
 use crate::train::{LrSchedule, TrainConfig, Trainer};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -93,11 +96,13 @@ pub struct Tuner<'a> {
     pub space: HpoSpace,
     /// Pre-processing metadata, shared by every configuration evaluation —
     /// the amortization that makes MILO tuning fast.
-    pub metadata: Option<Metadata>,
-    /// When set, metadata comes from a running `milo serve` instance at
-    /// this address (`GET_META`) instead of a local preprocessing pass —
-    /// N concurrent tuners then share exactly one pass server-side.
-    pub serve_addr: Option<String>,
+    pub metadata: Option<Arc<Metadata>>,
+    /// Where metadata comes from when it is not preset: inline pass,
+    /// content-addressed store, or a running `milo serve` instance (N
+    /// concurrent tuners then share exactly one pass server-side). `None`
+    /// defaults to an inline native-backend pass at the tuner's
+    /// fraction/seed.
+    pub source: Option<MetaSource>,
     pub verbose: bool,
 }
 
@@ -108,15 +113,24 @@ impl<'a> Tuner<'a> {
             ds,
             space: HpoSpace::default_for(ds),
             metadata: None,
-            serve_addr: None,
+            source: None,
             verbose: false,
             cfg,
         }
     }
 
-    /// Run trials against a served metadata instance (see [`crate::serve`]).
+    /// Deprecated shim over [`MetaSource::remote_expecting`]: run trials
+    /// against a served metadata instance (see [`crate::serve`]).
+    #[deprecated(
+        note = "set tuner.source = Some(MetaSource::remote_expecting(addr, seed, \
+                fraction)) — or build the tuner from a MiloSession"
+    )]
     pub fn with_server(mut self, addr: impl Into<String>) -> Tuner<'a> {
-        self.serve_addr = Some(addr.into());
+        self.source = Some(MetaSource::remote_expecting(
+            addr,
+            self.cfg.seed,
+            self.cfg.fraction,
+        ));
         self
     }
 
@@ -155,7 +169,7 @@ impl<'a> Tuner<'a> {
         let mut strategy = self
             .cfg
             .strategy
-            .build(self.metadata.as_ref(), None)?;
+            .build(self.metadata.as_deref(), None)?;
         let mut trainer = Trainer::new(self.rt, self.ds, tc)?;
         let out = sw.time("trials", || trainer.run(strategy.as_mut()))?;
         let val = trainer
@@ -175,58 +189,29 @@ impl<'a> Tuner<'a> {
         let mut sw = Stopwatch::new();
         let mut rng = Rng::new(self.cfg.seed ^ 0x49_50_4F).derive_str(self.cfg.strategy.name());
 
-        // Pre-processing (once; shared by all trials). In served mode the
-        // pass already happened inside a `milo serve` process — fetch its
-        // metadata so this tuner (and any others pointed at the same
-        // address) pays nothing.
+        // Pre-processing (once; shared by all trials), through the tuner's
+        // MetaSource: a served or store-backed source means the pass
+        // already happened elsewhere and this tuner (and any others
+        // pointed at the same source) pays nothing.
         if self.cfg.strategy.needs_metadata() && self.metadata.is_none() {
-            self.metadata = Some(match self.serve_addr.clone() {
-                Some(addr) => {
-                    let mut client = crate::serve::ServeClient::connect(
-                        &addr,
-                        &format!("tuner_{}_{}", self.ds.name(), self.cfg.seed),
-                    )?;
-                    // the dataset name is seedless, so the seed must be
-                    // checked explicitly: a seed-mismatched server serves
-                    // selections for a different dataset instantiation
-                    anyhow::ensure!(
-                        client.server_seed() == self.cfg.seed,
-                        "serve at {addr} runs seed {}, tuner needs {}",
-                        client.server_seed(),
-                        self.cfg.seed
-                    );
-                    let meta = sw.time("preprocess", || client.get_meta())?;
-                    // a mismatched server would hand us subsets indexing a
-                    // different train set — fail loudly, never train on them
-                    anyhow::ensure!(
-                        meta.dataset == self.ds.name(),
-                        "serve at {addr} holds metadata for dataset {:?}, \
-                         tuner needs {:?}",
-                        meta.dataset,
-                        self.ds.name()
-                    );
-                    anyhow::ensure!(
-                        (meta.fraction - self.cfg.fraction).abs() < 1e-9,
-                        "serve at {addr} holds metadata for fraction {}, \
-                         tuner needs {}",
-                        meta.fraction,
-                        self.cfg.fraction
-                    );
-                    meta
-                }
-                None => {
-                    let pre = crate::coordinator::Preprocessor::with_options(
-                        self.rt,
-                        crate::coordinator::PreprocessOptions {
-                            fraction: self.cfg.fraction,
-                            backend: crate::kernel::SimilarityBackend::Native,
-                            seed: self.cfg.seed,
-                            ..Default::default()
-                        },
-                    );
-                    sw.time("preprocess", || pre.run(self.ds))?
-                }
-            });
+            // Re-target the source at this tuner's fraction/seed (on a
+            // remote source this sets the expectations), so a source
+            // configured for a different cell can never silently hand
+            // over mismatched selections.
+            let source = self
+                .source
+                .clone()
+                .unwrap_or_else(|| {
+                    MetaSource::inline(PreprocessOptions {
+                        backend: crate::kernel::SimilarityBackend::Native,
+                        ..Default::default()
+                    })
+                })
+                .with_fraction(self.cfg.fraction)
+                .with_seed(self.cfg.seed);
+            let meta =
+                sw.time("preprocess", || source.resolve(Some(self.rt), self.ds))?;
+            self.metadata = Some(meta);
         }
 
         let mut tpe = TpeSampler::new(self.space.clone(), 0.25);
@@ -288,7 +273,7 @@ impl<'a> Tuner<'a> {
                 every: (self.cfg.max_epochs / 3).max(1),
             },
         };
-        let mut strategy = self.cfg.strategy.build(self.metadata.as_ref(), None)?;
+        let mut strategy = self.cfg.strategy.build(self.metadata.as_deref(), None)?;
         let tc = TrainConfig {
             epochs: self.cfg.max_epochs,
             fraction: if matches!(self.cfg.strategy, StrategyKind::Full) {
@@ -375,8 +360,12 @@ mod tests {
             eta: 2,
             seed: 3,
         };
-        let mut tuner =
-            Tuner::new(&rt, &ds, cfg).with_server(server.addr().to_string());
+        let mut tuner = Tuner::new(&rt, &ds, cfg.clone());
+        tuner.source = Some(MetaSource::remote_expecting(
+            server.addr().to_string(),
+            cfg.seed,
+            cfg.fraction,
+        ));
         let out = tuner.run().unwrap();
         assert!(!out.trials.is_empty());
         // the tuner's metadata is the served pass, not a local recompute
@@ -384,6 +373,13 @@ mod tests {
             tuner.metadata.as_ref().unwrap().sge_subsets,
             meta.sge_subsets
         );
+        // the deprecated shim wires the same source
+        #[allow(deprecated)]
+        let shimmed = Tuner::new(&rt, &ds, cfg).with_server(server.addr().to_string());
+        assert!(matches!(
+            shimmed.source,
+            Some(MetaSource::Remote { expect_seed: Some(3), .. })
+        ));
         server.shutdown();
     }
 

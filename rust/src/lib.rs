@@ -4,8 +4,16 @@
 //! Selection Framework for Efficient Model Training and Tuning*
 //! (Killamsetty et al., 2023).
 //!
-//! Three layers (see `DESIGN.md`):
+//! Layers (see `DESIGN.md`):
 //!
+//! * **Session API** — [`session`] is the crate's front door:
+//!   [`session::MetaSource`] says *where* selection metadata comes from
+//!   (inline preprocessing pass, content-addressed store, or a running
+//!   `milo serve` instance) behind one `resolve` entry point, and
+//!   [`session::MiloSession`] is a typed builder that hands out
+//!   strategies, trainers, tuners, and experiment grids off one shared,
+//!   cached resolution — the paper's "train multiple models at no
+//!   additional cost" as a one-liner.
 //! * **L3 (this crate)** — the coordinator: dataset pipeline, submodular
 //!   maximization (SGE / WRE), the easy-to-hard curriculum, baselines
 //!   (Random, AdaptiveRandom, CraigPB, GradMatchPB, Glister, pruning),
@@ -14,9 +22,8 @@
 //!   content-addressed registry of pre-processed selection metadata
 //!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
 //!   one such artifact to N concurrent trainers/HPO trials over a small
-//!   JSON-line TCP protocol (`milo serve`), so a single preprocessing pass
-//!   amortizes across every consumer — the paper's "train multiple models
-//!   at no additional cost", deployed.
+//!   JSON-line TCP protocol (`milo serve`). Both are consumed through
+//!   [`session::MetaSource`].
 //! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
 //!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
 //!   text artifacts executed here via PJRT.
@@ -29,18 +36,31 @@
 //!
 //! ## Quick start
 //!
+//! One session, one metadata resolution, as many consumers as you like:
+//!
 //! ```no_run
 //! use milo::prelude::*;
 //!
 //! let rt = Runtime::open("artifacts")?;
-//! let ds = DatasetId::Cifar10Like.generate(1);
-//! let meta = Preprocessor::new(&rt).run(&ds)?;         // SGE + WRE metadata
-//! let cfg = TrainConfig { epochs: 40, fraction: 0.1, ..Default::default() };
-//! let mut strategy = meta.milo_strategy(1.0 / 6.0);    // easy-to-hard curriculum
-//! let out = Trainer::new(&rt, &ds, cfg)?.run(&mut strategy)?;
+//! let session = MiloSession::builder()
+//!     .runtime(&rt)
+//!     .dataset(DatasetId::Cifar10Like.generate(1))
+//!     .source(MetaSource::inline(PreprocessOptions::default()))
+//!     .fraction(0.1)
+//!     .build()?;
+//! let cfg = TrainConfig { epochs: 40, ..Default::default() };
+//! // SGE + WRE metadata resolves once, then N models train off it
+//! let out = session.train(StrategyKind::Milo { kappa: 1.0 / 6.0 }, cfg)?;
 //! println!("test acc {:.2}%", 100.0 * out.test_accuracy);
 //! # Ok::<(), anyhow::Error>(())
 //! ```
+//!
+//! Swap `MetaSource::inline(..)` for `MetaSource::store("results/store",
+//! ..)?` to share one pass across processes, or
+//! `MetaSource::remote("host:4077")` to consume a `milo serve` instance —
+//! nothing else changes. The deprecated `Preprocessor::run_cached` and
+//! `Tuner::with_server` shims forward to these sources; see the
+//! [`session`] docs for the resolution order and the migration path.
 
 pub mod coordinator;
 pub mod data;
@@ -50,6 +70,7 @@ pub mod report;
 pub mod runtime;
 pub mod selection;
 pub mod serve;
+pub mod session;
 pub mod store;
 pub mod submod;
 pub mod tensor;
@@ -60,8 +81,8 @@ pub mod util;
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
     pub use crate::coordinator::{
-        ExperimentRunner, Metadata, PreprocessOptions, Preprocessor, StrategyKind,
-        TrialRecord,
+        ExperimentRunner, Metadata, PreprocessOptions, PreprocessPipeline,
+        Preprocessor, StrategyKind, TrialRecord,
     };
     pub use crate::data::{Dataset, DatasetId, Split};
     pub use crate::hpo::{HpoConfig, SearchAlgo, Tuner};
@@ -70,9 +91,10 @@ pub mod prelude {
     pub use crate::runtime::Runtime;
     pub use crate::selection::{
         AdaptiveRandomStrategy, FixedStrategy, FullStrategy, MiloStrategy,
-        RandomStrategy, Strategy,
+        ModelProbe, RandomStrategy, SelectCtx, Strategy,
     };
     pub use crate::serve::{ServeClient, ServedMiloStrategy, SubsetServer};
+    pub use crate::session::{MetaSource, MiloSession, MiloSessionBuilder};
     pub use crate::store::{MetaKey, MetaStore};
     pub use crate::submod::{GreedyMode, SetFunctionKind};
     pub use crate::tensor::Matrix;

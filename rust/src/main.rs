@@ -24,6 +24,7 @@ use milo::data::DatasetId;
 use milo::hpo::{HpoConfig, SearchAlgo, Tuner};
 use milo::kernel::SimilarityBackend;
 use milo::runtime::Runtime;
+use milo::session::MetaSource;
 use milo::util::args::Args;
 
 const USAGE: &str = "\
@@ -41,8 +42,12 @@ USAGE:
   milo tune --dataset <name> --strategy <name> [--algo random|tpe]
             [--fraction 0.1] [--max-epochs 27] [--server host:port]
   milo repro <experiment>... [--epochs 40] [--seeds 1,2]
-             [--fractions 0.01,0.05,0.1,0.3] [--out results]
+             [--fractions 0.01,0.05,0.1,0.3] [--strategies milo,random,...]
+             [--out results]
   milo list
+
+Strategy names (train/tune/repro share one vocabulary; see `milo list`):
+  any name from StrategyKind — an unknown name lists the valid set.
 
 EXPERIMENTS (milo repro):
   fig1 fig2 fig4 fig5a fig5b fig6 fig6gh fig7 fig9 fig11 fig12 fig13 fig14
@@ -84,10 +89,14 @@ fn run() -> Result<()> {
                     te
                 );
             }
+            // generated from the one StrategyKind table, never hand-listed
             println!(
-                "\nstrategies: milo milo_fixed random adaptive_random full \
-                 full_earlystop craigpb gradmatchpb glister el2n_prune \
-                 ssl_prune sge_variant"
+                "\nstrategies: {}",
+                StrategyKind::ALL
+                    .iter()
+                    .map(|k| k.name())
+                    .collect::<Vec<_>>()
+                    .join(" ")
             );
             Ok(())
         }
@@ -115,6 +124,30 @@ fn dataset_of(args: &Args) -> Result<(DatasetId, u64)> {
         .ok_or_else(|| anyhow::anyhow!("--dataset is required"))?;
     let seed = args.get_u64("seed", 1)?;
     Ok((DatasetId::from_name(name)?, seed))
+}
+
+/// `--strategy` for `train`/`tune`: the full [`StrategyKind::parse`]
+/// vocabulary, with `--kappa` overriding MILO's curriculum fraction.
+fn strategy_of(args: &Args) -> Result<StrategyKind> {
+    let kind = StrategyKind::parse(args.get_or("strategy", "milo"))?;
+    Ok(match kind {
+        StrategyKind::Milo { kappa } => {
+            StrategyKind::Milo { kappa: args.get_f64("kappa", kappa)? }
+        }
+        other => other,
+    })
+}
+
+/// `--strategies a,b,c` for `repro` (same vocabulary, same errors).
+fn strategies_of(args: &Args) -> Result<Option<Vec<StrategyKind>>> {
+    match args.get("strategies") {
+        None => Ok(None),
+        Some(list) => list
+            .split(',')
+            .map(|name| StrategyKind::parse(name.trim()))
+            .collect::<Result<Vec<_>>>()
+            .map(Some),
+    }
 }
 
 fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
@@ -155,7 +188,8 @@ fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
         )?;
         return Ok(());
     }
-    let meta = pre.run_cached(&ds, out_dir.clone())?;
+    let meta = MetaSource::store(out_dir.clone(), pre.opts.clone())?
+        .resolve(Some(&rt), &ds)?;
     println!(
         "preprocessed {} f={fraction}: {} SGE subsets of {}, WRE over {} classes, \
          fixed-DM {}, {:.2}s -> {}",
@@ -181,18 +215,17 @@ fn store_metadata(
     let rt = Runtime::open(artifacts)?;
     let (id, seed) = dataset_of(args)?;
     let ds = id.generate(seed);
-    let pre = Preprocessor::with_options(
-        &rt,
-        PreprocessOptions {
-            fraction: args.get_f64("fraction", 0.1)?,
-            backend: backend_of(args)?,
-            seed,
-            ..Default::default()
-        },
-    );
-    let store = milo::store::MetaStore::open(args.get_or("store", "results/store"))?;
-    let key = milo::store::MetaKey::from_options(ds.name(), &pre.opts);
-    let meta = store.get_or_build(&key, || pre.run(&ds))?;
+    let opts = PreprocessOptions {
+        fraction: args.get_f64("fraction", 0.1)?,
+        backend: backend_of(args)?,
+        seed,
+        ..Default::default()
+    };
+    let store = milo::store::MetaStore::shared(args.get_or("store", "results/store"))?;
+    // the key is only re-derived here for the fingerprint/path printout
+    let key = milo::store::MetaKey::from_options(ds.name(), &opts);
+    let meta =
+        MetaSource::store_handle(store.clone(), opts).resolve(Some(&rt), &ds)?;
     Ok((store, key, meta, ds.name().to_string(), seed))
 }
 
@@ -235,11 +268,7 @@ fn cmd_train(args: &Args, artifacts: &str) -> Result<()> {
     let rt = Runtime::open(artifacts)?;
     let (id, seed) = dataset_of(args)?;
     let ds = id.generate(seed);
-    let kind = match args.get_or("strategy", "milo") {
-        "milo" => StrategyKind::Milo { kappa: args.get_f64("kappa", 1.0 / 6.0)? },
-        other => StrategyKind::from_name(other)
-            .ok_or_else(|| anyhow::anyhow!("unknown strategy {other:?}"))?,
-    };
+    let kind = strategy_of(args)?;
     let fraction = args.get_f64("fraction", 0.1)?;
     let epochs = args.get_usize("epochs", 40)?;
     let mut runner = milo::coordinator::ExperimentRunner::new(&rt, &ds, epochs);
@@ -272,11 +301,7 @@ fn cmd_tune(args: &Args, artifacts: &str) -> Result<()> {
         "tpe" => SearchAlgo::Tpe,
         other => bail!("unknown search algo {other:?}"),
     };
-    let kind = match args.get_or("strategy", "milo") {
-        "milo" => StrategyKind::Milo { kappa: args.get_f64("kappa", 1.0 / 6.0)? },
-        other => StrategyKind::from_name(other)
-            .ok_or_else(|| anyhow::anyhow!("unknown strategy {other:?}"))?,
-    };
+    let kind = strategy_of(args)?;
     let cfg = HpoConfig {
         algo,
         strategy: kind,
@@ -285,8 +310,11 @@ fn cmd_tune(args: &Args, artifacts: &str) -> Result<()> {
         eta: args.get_usize("eta", 3)?,
         seed,
     };
+    let fraction = cfg.fraction;
     let mut tuner = Tuner::new(&rt, &ds, cfg);
-    tuner.serve_addr = args.get("server").map(|s| s.to_string());
+    tuner.source = args
+        .get("server")
+        .map(|addr| MetaSource::remote_expecting(addr, seed, fraction));
     tuner.verbose = args.flag("verbose");
     let out = tuner.run()?;
     println!(
@@ -315,6 +343,7 @@ fn cmd_repro(args: &Args, artifacts: &str) -> Result<()> {
         fractions: args.get_list_f64("fractions", &[0.01, 0.05, 0.1, 0.3])?,
         out_dir: args.get_or("out", "results").into(),
         backend: backend_of(args)?,
+        strategies: strategies_of(args)?,
         verbose: !args.flag("quiet"),
     };
     let mut experiments: Vec<String> = args.positional[1..].to_vec();

@@ -51,8 +51,9 @@ impl Strategy for CraigPbStrategy {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
-        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
-        let partition = ctx.ds.class_partition();
+        let ds = ctx.ds;
+        let meta = ctx.probe()?.meta(ds, Split::Train)?;
+        let partition = ds.class_partition();
         let sizes: Vec<usize> = partition.iter().map(|p| p.len()).collect();
         let alloc = proportional_allocation(&sizes, ctx.k);
         let mut out = Vec::with_capacity(ctx.k);
@@ -130,8 +131,9 @@ impl Strategy for GradMatchPbStrategy {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
-        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
-        let partition = ctx.ds.class_partition();
+        let ds = ctx.ds;
+        let meta = ctx.probe()?.meta(ds, Split::Train)?;
+        let partition = ds.class_partition();
         let sizes: Vec<usize> = partition.iter().map(|p| p.len()).collect();
         let alloc = proportional_allocation(&sizes, ctx.k);
         let mut out = Vec::with_capacity(ctx.k);
@@ -157,8 +159,11 @@ impl Strategy for GlisterStrategy {
     }
 
     fn select(&mut self, ctx: &mut SelectCtx<'_>) -> Result<Vec<usize>> {
-        let meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Train, None)?;
-        let val_meta = ctx.model.meta(ctx.rt, ctx.ds, Split::Val, None)?;
+        let ds = ctx.ds;
+        let (meta, val_meta) = {
+            let probe = ctx.probe()?;
+            (probe.meta(ds, Split::Train)?, probe.meta(ds, Split::Val)?)
+        };
         let c = meta.classes;
         // mean validation gradient embedding (the descent direction whose
         // alignment we reward; sign: train gradients that point along the

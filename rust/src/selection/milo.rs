@@ -276,21 +276,11 @@ mod tests {
     fn sge_cycles_subsets() {
         let subsets = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
         let mut s = SgeStrategy::new("t", subsets.clone());
-        // dummy ctx pieces are unused by SgeStrategy::select
+        // SGE is model-agnostic: a bare context, no runtime, no MlpModel
         let ds = crate::data::DatasetId::Trec6Like.generate(1);
-        let Some(rt) = crate::testkit::artifacts_or_skip() else { return };
-        let mut model = crate::train::model::MlpModel::load(&rt, "trec6", 128, 1).unwrap();
         let mut rng = Rng::new(0);
         for i in 0..6 {
-            let mut ctx = SelectCtx {
-                rt: &rt,
-                ds: &ds,
-                model: &mut model,
-                epoch: i,
-                total_epochs: 6,
-                k: 2,
-                rng: &mut rng,
-            };
+            let mut ctx = SelectCtx::model_agnostic(&ds, i, 6, 2, &mut rng);
             let got = s.select(&mut ctx).unwrap();
             assert_eq!(got, subsets[i % 3]);
         }

@@ -16,29 +16,59 @@
 //! | GradMatchPB (OMP)  | [`gradient`]    | yes              |
 //! | Glister            | [`gradient`]    | yes (+ val gradients) |
 //! | EL2N / SSL pruning | [`pruning`]     | EL2N: yes; SSL: no |
+//!
+//! The model dependence is visible in the type system: [`SelectCtx`] is a
+//! model-agnostic core (dataset, epoch horizon, subset size, RNG) and
+//! model-dependent strategies must explicitly request the optional
+//! [`ModelProbe`] via [`SelectCtx::probe`]. Model-agnostic strategies —
+//! MILO, Random, Served, SSL pruning — run against a context built with
+//! [`SelectCtx::model_agnostic`], with no `MlpModel` (or even runtime)
+//! anywhere in sight.
 
 pub mod gradient;
 pub mod milo;
 pub mod pruning;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 pub use gradient::{CraigPbStrategy, GlisterStrategy, GradMatchPbStrategy};
 pub use milo::{MiloStrategy, SgeStrategy, SgeVariantStrategy, WreStrategy};
 pub use pruning::{El2nPruneStrategy, SslPruneStrategy};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, Split};
 use crate::runtime::Runtime;
-use crate::train::model::MlpModel;
+use crate::train::model::{MetaOutputs, MlpModel};
 use crate::util::rng::Rng;
 
-/// Everything a strategy may consult when (re)selecting a subset. The
-/// model reference is what makes the gradient-based baselines
-/// *model-dependent*; MILO never touches it.
-pub struct SelectCtx<'a> {
+/// The model-dependent half of a selection context: the live downstream
+/// model plus the runtime needed to execute its artifacts. Gradient-based
+/// baselines pay a forward/meta pass through this every R epochs — exactly
+/// the cost MILO's pre-processing avoids.
+pub struct ModelProbe<'a> {
     pub rt: &'a Runtime,
-    pub ds: &'a Dataset,
     pub model: &'a mut MlpModel,
+}
+
+impl<'a> ModelProbe<'a> {
+    pub fn new(rt: &'a Runtime, model: &'a mut MlpModel) -> ModelProbe<'a> {
+        ModelProbe { rt, model }
+    }
+
+    /// Per-sample meta pass (losses, EL2N, gradient embeddings) over a
+    /// split — the expensive model-dependent computation.
+    pub fn meta(&mut self, ds: &Dataset, split: Split) -> Result<MetaOutputs> {
+        self.model.meta(self.rt, ds, split, None)
+    }
+}
+
+/// Everything a strategy may consult when (re)selecting a subset.
+///
+/// The core is model-agnostic; the optional [`ModelProbe`] is what makes a
+/// strategy *model-dependent*, and requesting it from a context that has
+/// none (e.g. one built by [`SelectCtx::model_agnostic`]) is a loud error
+/// rather than a hidden `&mut MlpModel` requirement.
+pub struct SelectCtx<'a> {
+    pub ds: &'a Dataset,
     /// Current epoch (0-based).
     pub epoch: usize,
     /// Total epochs of this run (curricula need the horizon).
@@ -46,6 +76,44 @@ pub struct SelectCtx<'a> {
     /// Requested subset size.
     pub k: usize,
     pub rng: &'a mut Rng,
+    probe: Option<ModelProbe<'a>>,
+}
+
+impl<'a> SelectCtx<'a> {
+    /// A context with no model attached — all MILO strategies (and every
+    /// other model-agnostic strategy) select through this.
+    pub fn model_agnostic(
+        ds: &'a Dataset,
+        epoch: usize,
+        total_epochs: usize,
+        k: usize,
+        rng: &'a mut Rng,
+    ) -> SelectCtx<'a> {
+        SelectCtx { ds, epoch, total_epochs, k, rng, probe: None }
+    }
+
+    /// Attach a [`ModelProbe`] (the trainer does this so model-dependent
+    /// baselines can run inside the same loop).
+    pub fn with_probe(mut self, probe: ModelProbe<'a>) -> SelectCtx<'a> {
+        self.probe = Some(probe);
+        self
+    }
+
+    /// Whether a model probe is attached.
+    pub fn has_probe(&self) -> bool {
+        self.probe.is_some()
+    }
+
+    /// Access the model probe; errors when the context is model-agnostic.
+    pub fn probe(&mut self) -> Result<&mut ModelProbe<'a>> {
+        self.probe.as_mut().ok_or_else(|| {
+            anyhow!(
+                "this strategy is model-dependent but the SelectCtx carries no \
+                 ModelProbe (build the context with SelectCtx::with_probe, or run \
+                 the strategy under a Trainer)"
+            )
+        })
+    }
 }
 
 /// A subset-selection strategy.
@@ -82,20 +150,25 @@ pub fn proportional_allocation(class_sizes: &[usize], k: usize) -> Vec<usize> {
         used += base;
         remainders.push((exact - base as f64, c));
     }
-    // distribute the remainder to the largest fractional parts with capacity
+    // Distribute the remainder to the largest fractional parts with spare
+    // capacity. Invariant: Σ alloc + left == k ≤ n == Σ sizes, so whenever
+    // `left > 0` some class still has capacity — after dropping saturated
+    // classes every sweep hands out at least one slot, and the loop
+    // terminates with Σ alloc == min(k, n) exactly (no heuristic bail-out).
     remainders.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
     let mut left = k - used;
-    let mut i = 0;
+    let mut candidates: Vec<usize> = remainders.iter().map(|&(_, c)| c).collect();
     while left > 0 {
-        let (_, c) = remainders[i % remainders.len()];
-        if alloc[c] < class_sizes[c] {
-            alloc[c] += 1;
-            left -= 1;
-        }
-        i += 1;
-        // safety: if all classes full we would loop forever, but k ≤ n
-        if i > remainders.len() * (k + 1) {
-            break;
+        candidates.retain(|&c| alloc[c] < class_sizes[c]);
+        debug_assert!(!candidates.is_empty(), "k <= n guarantees spare capacity");
+        for &c in &candidates {
+            if left == 0 {
+                break;
+            }
+            if alloc[c] < class_sizes[c] {
+                alloc[c] += 1;
+                left -= 1;
+            }
         }
     }
     alloc
@@ -230,5 +303,58 @@ mod tests {
     fn proportional_allocation_empty() {
         assert_eq!(proportional_allocation(&[], 10), Vec::<usize>::new());
         assert_eq!(proportional_allocation(&[0, 0], 10), vec![0, 0]);
+    }
+
+    /// The allocation invariants: Σ alloc == min(k, n) exactly and every
+    /// class stays within capacity.
+    fn assert_allocation_exact(sizes: &[usize], k: usize) {
+        let n: usize = sizes.iter().sum();
+        let a = proportional_allocation(sizes, k);
+        assert_eq!(a.len(), sizes.len());
+        assert_eq!(
+            a.iter().sum::<usize>(),
+            k.min(n),
+            "sizes {sizes:?} k={k} -> {a:?}"
+        );
+        for (i, &x) in a.iter().enumerate() {
+            assert!(x <= sizes[i], "class {i} over capacity: {a:?} vs {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn proportional_allocation_adversarial_cases() {
+        // crafted worst cases for the old heuristic bail-out: many tiny
+        // classes, saturation at k ≈ n, extreme imbalance, zero classes
+        assert_allocation_exact(&vec![1; 50], 49);
+        assert_allocation_exact(&vec![1; 50], 50);
+        assert_allocation_exact(&[1, 1, 998], 999);
+        assert_allocation_exact(&[0, 0, 5, 0], 5);
+        assert_allocation_exact(&[2, 3, 5, 7, 11, 13], 40);
+        let mut skew: Vec<usize> = vec![1; 99];
+        skew.push(10_000);
+        assert_allocation_exact(&skew, 10_050);
+    }
+
+    #[test]
+    fn proportional_allocation_property_sweep() {
+        crate::testkit::check_cases(0xA110C, 200, |seed| {
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let classes = 1 + rng.below(12);
+            // zeros allowed: empty classes must get 0 and never wedge
+            let sizes: Vec<usize> = (0..classes).map(|_| rng.below(40)).collect();
+            let n: usize = sizes.iter().sum();
+            for k in [
+                0,
+                1,
+                n / 3,
+                n.saturating_sub(1),
+                n,
+                n + 1,
+                7 * n + 13,
+                1 + rng.below(n.max(1) * 2),
+            ] {
+                assert_allocation_exact(&sizes, k);
+            }
+        });
     }
 }

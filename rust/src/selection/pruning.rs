@@ -60,7 +60,12 @@ impl Strategy for El2nPruneStrategy {
         if let Some(c) = &self.cached {
             return Ok(c.clone());
         }
-        let scores = Self::scores(ctx.rt, ctx.ds, ctx.model.hidden, self.warmup_epochs, ctx.rng)?;
+        // EL2N needs a model to warm up and score with — request the probe
+        let (rt, hidden) = {
+            let probe = ctx.probe()?;
+            (probe.rt, probe.model.hidden)
+        };
+        let scores = Self::scores(rt, ctx.ds, hidden, self.warmup_epochs, ctx.rng)?;
         let sel = keep_top_per_class(ctx.ds, &scores, ctx.k);
         self.cached = Some(sel.clone());
         Ok(sel)

@@ -1,0 +1,671 @@
+//! The crate's front door: one API for inline, store-backed, and served
+//! selection metadata.
+//!
+//! The paper's core move — decoupling subset selection from training so
+//! one preprocessing pass amortizes across any number of models — used to
+//! be spelled three different ways in this crate (`Preprocessor::run`,
+//! the store-backed `run_cached`, and the `milo serve` wire path), each
+//! hand-wired into the Trainer, Tuner, ExperimentRunner, and CLI
+//! separately. This module says it once, in the type system:
+//!
+//! * [`MetaSource`] — *where selection metadata comes from*. Three
+//!   variants with a single [`MetaSource::resolve`] entry point:
+//!
+//!   | variant | resolution order |
+//!   |---|---|
+//!   | [`MetaSource::Inline`]  | run the configured preprocessing pipeline (kernel or feature-based) in-process — always a fresh pass |
+//!   | [`MetaSource::Store`]   | in-process LRU → on-disk binary artifact → build via the pipeline (once per fingerprint, across threads) |
+//!   | [`MetaSource::Remote`]  | `GET_META` from a running `milo serve` instance — never builds locally |
+//!
+//! * [`MiloSession`] — *who consumes it*. A typed builder binding a
+//!   runtime (optional — store/remote sources work without one), a
+//!   dataset, a source, and a fraction; the session hands out strategies,
+//!   trainers, tuners, and experiment runners that all share one cached
+//!   resolution. "Train N models off one pass" is a loop over
+//!   [`MiloSession::train`].
+//!
+//! ```no_run
+//! use milo::prelude::*;
+//!
+//! let rt = Runtime::open("artifacts")?;
+//! let session = MiloSession::builder()
+//!     .runtime(&rt)
+//!     .dataset(DatasetId::Cifar10Like.generate(1))
+//!     .source(MetaSource::inline(PreprocessOptions::default()))
+//!     .fraction(0.1)
+//!     .build()?;
+//! // one resolution, any number of consumers
+//! for kind in [StrategyKind::Milo { kappa: 1.0 / 6.0 }, StrategyKind::MiloFixed] {
+//!     let cfg = TrainConfig { epochs: 40, ..Default::default() };
+//!     let out = session.train(kind, cfg)?;
+//!     println!("{}: {:.2}%", out.strategy, 100.0 * out.test_accuracy);
+//! }
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! # Deprecation path
+//!
+//! `Preprocessor::run_cached` and `Tuner::with_server` remain as thin
+//! shims over [`MetaSource::store`] / [`MetaSource::remote_expecting`] for
+//! one release and emit deprecation warnings; new code should construct a
+//! [`MetaSource`] (or let the [`MiloSession`] builder do it).
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::coordinator::{
+    ExperimentRunner, Metadata, PreprocessOptions, Preprocessor, StrategyKind,
+};
+use crate::data::{Dataset, Split};
+use crate::hpo::{HpoConfig, Tuner};
+use crate::kernel::SimilarityBackend;
+use crate::runtime::Runtime;
+use crate::selection::Strategy;
+use crate::serve::{ServeClient, ServedMiloStrategy};
+use crate::store::{MetaKey, MetaStore};
+use crate::train::{TrainConfig, TrainOutcome, Trainer};
+
+/// Where selection metadata comes from. See the [module docs](self) for
+/// the resolution order of each variant.
+#[derive(Clone)]
+pub enum MetaSource {
+    /// Run the preprocessing pipeline in-process, every time.
+    Inline(PreprocessOptions),
+    /// Resolve through a content-addressed [`MetaStore`]: LRU → disk →
+    /// build (at most one pass per fingerprint across all threads).
+    Store {
+        store: MetaStore,
+        opts: PreprocessOptions,
+    },
+    /// Fetch from a running `milo serve` instance; validates the served
+    /// dataset (always) and seed/fraction (when expectations are set).
+    Remote {
+        addr: String,
+        /// Client id keying the server-side deterministic streams.
+        client_id: String,
+        /// When set, the server's announced stream seed must match.
+        expect_seed: Option<u64>,
+        /// When set, the served metadata's fraction must match.
+        expect_fraction: Option<f64>,
+    },
+}
+
+impl std::fmt::Debug for MetaSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MetaSource::Inline(opts) => f.debug_tuple("Inline").field(opts).finish(),
+            MetaSource::Store { store, opts } => f
+                .debug_struct("Store")
+                .field("root", &store.root())
+                .field("opts", opts)
+                .finish(),
+            MetaSource::Remote { addr, client_id, expect_seed, expect_fraction } => f
+                .debug_struct("Remote")
+                .field("addr", addr)
+                .field("client_id", client_id)
+                .field("expect_seed", expect_seed)
+                .field("expect_fraction", expect_fraction)
+                .finish(),
+        }
+    }
+}
+
+impl MetaSource {
+    /// An inline source: preprocess in-process under `opts`.
+    pub fn inline(opts: PreprocessOptions) -> MetaSource {
+        MetaSource::Inline(opts)
+    }
+
+    /// A store-backed source rooted at `dir`. Uses [`MetaStore::shared`]
+    /// so every source on the same root shares one LRU and one set of
+    /// per-fingerprint build locks.
+    pub fn store(dir: impl Into<PathBuf>, opts: PreprocessOptions) -> Result<MetaSource> {
+        Ok(MetaSource::Store { store: MetaStore::shared(dir)?, opts })
+    }
+
+    /// A store-backed source over an existing handle.
+    pub fn store_handle(store: MetaStore, opts: PreprocessOptions) -> MetaSource {
+        MetaSource::Store { store, opts }
+    }
+
+    /// A served source with no seed/fraction expectations (the dataset is
+    /// always validated on resolve).
+    pub fn remote(addr: impl Into<String>) -> MetaSource {
+        MetaSource::Remote {
+            addr: addr.into(),
+            client_id: "milo_session".to_string(),
+            expect_seed: None,
+            expect_fraction: None,
+        }
+    }
+
+    /// A served source that refuses metadata from a server running a
+    /// different seed or holding a different fraction — a mismatched
+    /// server would hand out selections for a different dataset
+    /// instantiation.
+    pub fn remote_expecting(
+        addr: impl Into<String>,
+        seed: u64,
+        fraction: f64,
+    ) -> MetaSource {
+        MetaSource::Remote {
+            addr: addr.into(),
+            client_id: "milo_session".to_string(),
+            expect_seed: Some(seed),
+            expect_fraction: Some(fraction),
+        }
+    }
+
+    /// The fraction this source is configured for, when it knows one.
+    pub fn fraction(&self) -> Option<f64> {
+        match self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => Some(o.fraction),
+            MetaSource::Remote { expect_fraction, .. } => *expect_fraction,
+        }
+    }
+
+    /// The seed this source is configured for, when it knows one.
+    pub fn seed(&self) -> Option<u64> {
+        match self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => Some(o.seed),
+            MetaSource::Remote { expect_seed, .. } => *expect_seed,
+        }
+    }
+
+    /// Return this source re-targeted at `fraction` (expectation update on
+    /// a remote source).
+    pub fn with_fraction(mut self, fraction: f64) -> MetaSource {
+        match &mut self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => {
+                o.fraction = fraction;
+            }
+            MetaSource::Remote { expect_fraction, .. } => {
+                *expect_fraction = Some(fraction);
+            }
+        }
+        self
+    }
+
+    /// Return this source re-seeded (expectation update on a remote
+    /// source).
+    pub fn with_seed(mut self, seed: u64) -> MetaSource {
+        match &mut self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => o.seed = seed,
+            MetaSource::Remote { expect_seed, .. } => *expect_seed = Some(seed),
+        }
+        self
+    }
+
+    /// Return this source with the similarity backend swapped (no-op on a
+    /// remote source — the server already paid for preprocessing).
+    pub fn with_backend(mut self, backend: SimilarityBackend) -> MetaSource {
+        match &mut self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => {
+                o.backend = backend;
+            }
+            MetaSource::Remote { .. } => {}
+        }
+        self
+    }
+
+    /// Preprocessing options backing this source, when local.
+    pub fn options(&self) -> Option<&PreprocessOptions> {
+        match self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => Some(o),
+            MetaSource::Remote { .. } => None,
+        }
+    }
+
+    /// The single resolution entry point. `rt` is required by
+    /// [`MetaSource::Inline`] (and by a [`MetaSource::Store`] miss that
+    /// must build); store hits and remote fetches work without one, which
+    /// is what lets model-agnostic consumers run with no runtime at all.
+    pub fn resolve(&self, rt: Option<&Runtime>, ds: &Dataset) -> Result<Arc<Metadata>> {
+        match self {
+            MetaSource::Inline(opts) => {
+                let rt = rt.ok_or_else(|| {
+                    anyhow!("MetaSource::Inline needs a runtime to preprocess")
+                })?;
+                let pre = Preprocessor::with_options(rt, opts.clone());
+                Ok(Arc::new(pre.execute(ds)?))
+            }
+            MetaSource::Store { store, opts } => {
+                let key = MetaKey::from_options(ds.name(), opts);
+                store.get_or_build(&key, || match rt {
+                    Some(rt) => Preprocessor::with_options(rt, opts.clone()).execute(ds),
+                    None => bail!(
+                        "metadata {} is not in the store and no runtime is \
+                         available to build it",
+                        key.canonical()
+                    ),
+                })
+            }
+            MetaSource::Remote { addr, client_id, expect_seed, expect_fraction } => {
+                let mut client = ServeClient::connect(addr, client_id)?;
+                if let Some(seed) = expect_seed {
+                    ensure!(
+                        client.server_seed() == *seed,
+                        "serve at {addr} runs seed {}, this source expects {seed}",
+                        client.server_seed(),
+                    );
+                }
+                let meta = client.get_meta()?;
+                // a mismatched server would hand us subsets indexing a
+                // different train set — fail loudly, never train on them
+                ensure!(
+                    meta.dataset == ds.name(),
+                    "serve at {addr} holds metadata for dataset {:?}, \
+                     this source expects {:?}",
+                    meta.dataset,
+                    ds.name(),
+                );
+                if let Some(fraction) = expect_fraction {
+                    ensure!(
+                        (meta.fraction - fraction).abs() < 1e-9,
+                        "serve at {addr} holds metadata for fraction {}, \
+                         this source expects {fraction}",
+                        meta.fraction,
+                    );
+                }
+                Ok(Arc::new(meta))
+            }
+        }
+    }
+}
+
+/// Builder for [`MiloSession`]; see [`MiloSession::builder`].
+#[derive(Default)]
+pub struct MiloSessionBuilder<'a> {
+    rt: Option<&'a Runtime>,
+    ds: Option<Dataset>,
+    source: Option<MetaSource>,
+    fraction: Option<f64>,
+    seed: Option<u64>,
+}
+
+impl<'a> MiloSessionBuilder<'a> {
+    /// Attach the AOT artifact runtime. Optional: sessions over store or
+    /// remote sources can run model-agnostic strategies without one;
+    /// anything that preprocesses or trains will error until a runtime is
+    /// attached.
+    pub fn runtime(mut self, rt: &'a Runtime) -> Self {
+        self.rt = Some(rt);
+        self
+    }
+
+    /// The dataset this session selects over (required).
+    pub fn dataset(mut self, ds: Dataset) -> Self {
+        self.ds = Some(ds);
+        self
+    }
+
+    /// Where metadata comes from. Defaults to
+    /// `MetaSource::inline(PreprocessOptions::default())`.
+    pub fn source(mut self, source: MetaSource) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    /// Subset fraction; overrides the source's configured fraction so the
+    /// session has exactly one answer. Defaults to the source's fraction
+    /// (0.1 for an expectation-free remote).
+    pub fn fraction(mut self, fraction: f64) -> Self {
+        self.fraction = Some(fraction);
+        self
+    }
+
+    /// Preprocessing seed; overrides the source's configured seed the same
+    /// way.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn build(self) -> Result<MiloSession<'a>> {
+        let ds = self.ds.ok_or_else(|| anyhow!("MiloSession needs a dataset"))?;
+        let mut source = self
+            .source
+            .unwrap_or_else(|| MetaSource::inline(PreprocessOptions::default()));
+        if let Some(fraction) = self.fraction {
+            source = source.with_fraction(fraction);
+        }
+        if let Some(seed) = self.seed {
+            source = source.with_seed(seed);
+        }
+        let fraction = self.fraction.or_else(|| source.fraction()).unwrap_or(0.1);
+        let seed = self.seed.or_else(|| source.seed()).unwrap_or(1);
+        ensure!(
+            fraction > 0.0 && fraction <= 1.0,
+            "fraction must be in (0, 1], got {fraction}"
+        );
+        Ok(MiloSession {
+            rt: self.rt,
+            ds,
+            source,
+            fraction,
+            seed,
+            resolved: Mutex::new(None),
+            embeddings: Mutex::new(None),
+        })
+    }
+}
+
+/// One dataset + one metadata source + one cached resolution, shared by
+/// every consumer the session hands out. See the [module docs](self).
+pub struct MiloSession<'a> {
+    rt: Option<&'a Runtime>,
+    ds: Dataset,
+    source: MetaSource,
+    fraction: f64,
+    seed: u64,
+    resolved: Mutex<Option<Arc<Metadata>>>,
+    /// Cached train-split encoder embeddings (SSL pruning input).
+    embeddings: Mutex<Option<Arc<crate::tensor::Matrix>>>,
+}
+
+impl<'a> MiloSession<'a> {
+    pub fn builder() -> MiloSessionBuilder<'a> {
+        MiloSessionBuilder::default()
+    }
+
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    pub fn source(&self) -> &MetaSource {
+        &self.source
+    }
+
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Subset size implied by the session fraction.
+    pub fn k(&self) -> usize {
+        self.ds.subset_size(self.fraction)
+    }
+
+    /// The attached runtime, or a descriptive error for consumers that
+    /// need one.
+    pub fn runtime(&self) -> Result<&'a Runtime> {
+        self.rt.ok_or_else(|| {
+            anyhow!(
+                "this MiloSession has no runtime attached (builder().runtime(..)); \
+                 preprocessing and training need the AOT artifacts"
+            )
+        })
+    }
+
+    /// Resolve the session's metadata through its source — exactly once;
+    /// every later call (and every consumer built from this session) gets
+    /// the cached `Arc`.
+    pub fn metadata(&self) -> Result<Arc<Metadata>> {
+        let mut slot = self.resolved.lock().unwrap();
+        if let Some(meta) = &*slot {
+            return Ok(meta.clone());
+        }
+        let meta = self.source.resolve(self.rt, &self.ds)?;
+        // Local sources inherit the session fraction by construction, but
+        // an expectation-free remote (or a hand-crafted store artifact)
+        // could hold a different subset size — training a 10% config on
+        // 30% subsets must be loud, never silent.
+        ensure!(
+            (meta.fraction - self.fraction).abs() < 1e-9,
+            "resolved metadata holds fraction {}, this session is configured \
+             for {} (set .fraction(..) on the builder to match the source)",
+            meta.fraction,
+            self.fraction,
+        );
+        *slot = Some(meta.clone());
+        Ok(meta)
+    }
+
+    /// Encoder embeddings over the train split (SSL pruning input) —
+    /// computed once per session, like [`MiloSession::metadata`].
+    fn ssl_embeddings(&self) -> Result<Arc<crate::tensor::Matrix>> {
+        let mut slot = self.embeddings.lock().unwrap();
+        if let Some(emb) = &*slot {
+            return Ok(emb.clone());
+        }
+        let pre =
+            Preprocessor::with_options(self.runtime()?, self.preprocess_options());
+        let emb = Arc::new(pre.encode(&self.ds, Split::Train)?);
+        *slot = Some(emb.clone());
+        Ok(emb)
+    }
+
+    /// Preprocessing options consistent with this session (used for
+    /// embedding-only passes like SSL pruning).
+    fn preprocess_options(&self) -> PreprocessOptions {
+        match self.source.options() {
+            Some(opts) => opts.clone(),
+            None => PreprocessOptions {
+                fraction: self.fraction,
+                seed: self.seed,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Build any [`StrategyKind`] against this session's shared
+    /// resolution. All strategy construction funnels through
+    /// [`StrategyKind::build`]; the session supplies the inputs each kind
+    /// needs (metadata, embeddings) from its cache.
+    pub fn strategy(&self, kind: StrategyKind) -> Result<Box<dyn Strategy>> {
+        let metadata = if kind.needs_metadata() {
+            Some(self.metadata()?)
+        } else {
+            None
+        };
+        let embeddings = if matches!(kind, StrategyKind::SslPrune) {
+            Some(self.ssl_embeddings()?)
+        } else {
+            None
+        };
+        kind.build(metadata.as_deref(), embeddings.as_deref())
+    }
+
+    /// A live served strategy (SGE cycle + WRE draws over the wire) —
+    /// requires a [`MetaSource::Remote`] source.
+    pub fn served_strategy(
+        &self,
+        client_id: &str,
+        kappa: f64,
+    ) -> Result<ServedMiloStrategy> {
+        match &self.source {
+            MetaSource::Remote { addr, .. } => {
+                ServedMiloStrategy::connect(addr, client_id, kappa)
+            }
+            other => bail!(
+                "served_strategy needs a MetaSource::Remote source, this session \
+                 uses {other:?}"
+            ),
+        }
+    }
+
+    /// A trainer over this session's runtime and dataset.
+    pub fn trainer(&self, cfg: TrainConfig) -> Result<Trainer<'_>> {
+        Trainer::new(self.runtime()?, &self.ds, cfg)
+    }
+
+    /// Train one model with `kind` choosing subsets — strategy
+    /// construction, fraction wiring, and the shared resolution in one
+    /// call. The session's fraction is authoritative (`cfg.fraction` is
+    /// overwritten; FULL variants train on everything as always).
+    pub fn train(&self, kind: StrategyKind, mut cfg: TrainConfig) -> Result<TrainOutcome> {
+        // FullEarlyStop's semantics live entirely in the time budget
+        // (ExperimentRunner::run_cell budget-matches it against a subset
+        // run); without one it would silently degrade to plain FULL.
+        if matches!(kind, StrategyKind::FullEarlyStop) {
+            ensure!(
+                cfg.time_budget_secs.is_some(),
+                "StrategyKind::FullEarlyStop needs cfg.time_budget_secs (or use \
+                 session.runner(..) which budget-matches it against a subset run)"
+            );
+        }
+        cfg.fraction = if matches!(kind, StrategyKind::Full | StrategyKind::FullEarlyStop)
+        {
+            1.0
+        } else {
+            self.fraction
+        };
+        let mut strategy = self.strategy(kind)?;
+        self.trainer(cfg)?.run(strategy.as_mut())
+    }
+
+    /// A tuner whose trials share this session's resolution (the
+    /// amortization that makes MILO tuning fast). The tuner's fraction
+    /// must match the session's when its strategy consumes metadata.
+    pub fn tuner(&self, cfg: HpoConfig) -> Result<Tuner<'_>> {
+        let rt = self.runtime()?;
+        if cfg.strategy.needs_metadata() {
+            ensure!(
+                (cfg.fraction - self.fraction).abs() < 1e-9,
+                "HpoConfig fraction {} differs from the session fraction {} — \
+                 the shared metadata would not match",
+                cfg.fraction,
+                self.fraction,
+            );
+        }
+        let needs_meta = cfg.strategy.needs_metadata();
+        let mut tuner = Tuner::new(rt, &self.ds, cfg);
+        tuner.source = Some(self.source.clone());
+        if needs_meta {
+            tuner.metadata = Some(self.metadata()?);
+        }
+        Ok(tuner)
+    }
+
+    /// An experiment runner whose per-cell preprocessing routes through
+    /// this session's source (re-targeted per fraction/seed cell).
+    pub fn runner(&self, epochs: usize) -> Result<ExperimentRunner<'_>> {
+        let mut runner = ExperimentRunner::new(self.runtime()?, &self.ds, epochs);
+        if let Some(opts) = self.source.options() {
+            runner.backend = opts.backend;
+        }
+        runner.source = Some(self.source.clone());
+        Ok(runner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetId;
+    use crate::testkit::synthetic_metadata;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("milo_session_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn builder_requires_dataset() {
+        assert!(MiloSession::builder().build().is_err());
+    }
+
+    #[test]
+    fn builder_fraction_overrides_source() {
+        let ds = DatasetId::Trec6Like.generate(1);
+        let session = MiloSession::builder()
+            .dataset(ds)
+            .source(MetaSource::inline(PreprocessOptions {
+                fraction: 0.5,
+                ..Default::default()
+            }))
+            .fraction(0.2)
+            .build()
+            .unwrap();
+        assert_eq!(session.fraction(), 0.2);
+        assert_eq!(session.source().fraction(), Some(0.2));
+    }
+
+    #[test]
+    fn inline_without_runtime_errors_cleanly() {
+        let ds = DatasetId::Trec6Like.generate(1);
+        let session = MiloSession::builder().dataset(ds).build().unwrap();
+        let err = session.metadata().unwrap_err();
+        assert!(format!("{err:#}").contains("runtime"), "{err:#}");
+    }
+
+    #[test]
+    fn store_session_resolves_and_caches_without_runtime() {
+        let dir = tmp_dir("store_noruntime");
+        std::fs::remove_dir_all(&dir).ok();
+        let ds = DatasetId::Trec6Like.generate(3);
+        let opts = PreprocessOptions { fraction: 0.1, seed: 3, ..Default::default() };
+        let store = MetaStore::open(&dir).unwrap();
+        let key = MetaKey::from_options(ds.name(), &opts);
+        store.put(&key, synthetic_metadata(&ds, 0.1)).unwrap();
+
+        let session = MiloSession::builder()
+            .dataset(DatasetId::Trec6Like.generate(3))
+            .source(MetaSource::store_handle(store.clone(), opts))
+            .build()
+            .unwrap();
+        let a = session.metadata().unwrap();
+        let b = session.metadata().unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "resolution must be cached");
+        assert_eq!(a.dataset, "trec6");
+
+        // model-agnostic strategies come straight off the session, no
+        // runtime and no MlpModel anywhere
+        let mut strat = session.strategy(StrategyKind::Milo { kappa: 0.5 }).unwrap();
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut ctx = crate::selection::SelectCtx::model_agnostic(
+            session.dataset(),
+            0,
+            10,
+            session.k(),
+            &mut rng,
+        );
+        let sel = strat.select(&mut ctx).unwrap();
+        assert_eq!(sel, a.sge_subsets[0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_miss_without_runtime_is_a_clean_error() {
+        let dir = tmp_dir("store_miss");
+        std::fs::remove_dir_all(&dir).ok();
+        let ds = DatasetId::Trec6Like.generate(4);
+        let source = MetaSource::store(
+            &dir,
+            PreprocessOptions { seed: 4, ..Default::default() },
+        )
+        .unwrap();
+        let err = source.resolve(None, &ds).unwrap_err();
+        assert!(format!("{err:#}").contains("no runtime"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn remote_source_validates_dataset_and_seed() {
+        let ds = DatasetId::Trec6Like.generate(5);
+        let meta = Arc::new(synthetic_metadata(&ds, 0.1));
+        let server =
+            crate::serve::SubsetServer::bind("127.0.0.1:0", meta, None, 5).unwrap();
+        let addr = server.addr().to_string();
+
+        // matching expectations resolve
+        let ok = MetaSource::remote_expecting(&addr, 5, 0.1).resolve(None, &ds);
+        assert_eq!(ok.unwrap().dataset, "trec6");
+
+        // wrong seed expectation is refused
+        let err = MetaSource::remote_expecting(&addr, 6, 0.1)
+            .resolve(None, &ds)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("seed"), "{err:#}");
+
+        // wrong dataset is refused
+        let other = DatasetId::RottenLike.generate(5);
+        let err = MetaSource::remote(&addr).resolve(None, &other).unwrap_err();
+        assert!(format!("{err:#}").contains("dataset"), "{err:#}");
+        server.shutdown();
+    }
+}

@@ -92,6 +92,10 @@ pub struct MetaKey {
     /// Similarity backend (`"pjrt"` / `"native"`) — part of the address
     /// because the backends agree only to float tolerance.
     pub backend: String,
+    /// Preprocessing pipeline (`"kernel"` / `"feature_based"`) — the two
+    /// pipelines select different subsets from identical inputs, so they
+    /// must not alias to one artifact.
+    pub pipeline: String,
 }
 
 impl MetaKey {
@@ -112,6 +116,7 @@ impl MetaKey {
             seed: opts.seed,
             metric: opts.metric.name(),
             backend: backend_descriptor(opts.backend).to_string(),
+            pipeline: opts.pipeline.name().to_string(),
         }
     }
 
@@ -120,7 +125,7 @@ impl MetaKey {
     /// equal f64 values always produce equal text.
     pub fn canonical(&self) -> String {
         format!(
-            "ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}",
+            "ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}|pipe={}",
             self.dataset,
             self.encoder,
             self.sge_function,
@@ -131,6 +136,7 @@ impl MetaKey {
             self.seed,
             self.metric,
             self.backend,
+            self.pipeline,
         )
     }
 
@@ -264,8 +270,8 @@ impl MetaStore {
     /// Process-wide shared handle for `root`: every caller passing the
     /// same root (byte-identical path — no canonicalization) gets the same
     /// LRU and per-key build locks, so independent call sites (e.g.
-    /// `Preprocessor::run_cached` across experiment threads) still trigger
-    /// at most one preprocessing pass per configuration.
+    /// `session::MetaSource::store` resolutions across experiment threads)
+    /// still trigger at most one preprocessing pass per configuration.
     pub fn shared(root: impl Into<PathBuf>) -> Result<MetaStore> {
         let root = root.into();
         let registry = SHARED_STORES.get_or_init(|| Mutex::new(HashMap::new()));
@@ -449,6 +455,7 @@ mod tests {
             seed,
             metric: "cosine".into(),
             backend: "native".into(),
+            pipeline: "kernel".into(),
         }
     }
 

@@ -88,6 +88,47 @@ pub fn clustered_kernel(
     (m, assign)
 }
 
+/// Structurally valid synthetic selection metadata for a dataset: three
+/// strided SGE subsets of ~`fraction`·n, per-class striped WRE
+/// probabilities (normalized), and a strided fixed subset. Store, serve,
+/// and session tests (and the artifact-free benches/examples) share this
+/// instead of hand-rolling per-file variants — dataset generation needs
+/// no AOT artifacts, so it works in every environment.
+pub fn synthetic_metadata(
+    ds: &crate::data::Dataset,
+    fraction: f64,
+) -> crate::coordinator::Metadata {
+    let n = ds.n_train();
+    let k = ds.subset_size(fraction);
+    crate::coordinator::Metadata {
+        dataset: ds.name().to_string(),
+        fraction,
+        sge_subsets: (0..3)
+            .map(|r| {
+                let mut s: Vec<usize> = (0..k).map(|i| (i * 11 + r * 5) % n).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect(),
+        wre_classes: ds
+            .class_partition()
+            .into_iter()
+            .map(|indices| {
+                let probs: Vec<f64> =
+                    (0..indices.len()).map(|i| 1.0 + (i % 5) as f64).collect();
+                let total: f64 = probs.iter().sum::<f64>().max(1e-12);
+                crate::selection::milo::ClassProbs {
+                    indices,
+                    probs: probs.into_iter().map(|p| p / total).collect(),
+                }
+            })
+            .collect(),
+        fixed_dm: (0..k).map(|i| (i * 7) % n).collect(),
+        preprocess_secs: 0.125,
+    }
+}
+
 /// Random unit-norm embedding matrix.
 pub fn random_embeddings(n: usize, e: usize, seed: u64) -> Matrix {
     let mut rng = Rng::new(seed);

@@ -13,7 +13,7 @@ pub use schedule::LrSchedule;
 
 use crate::data::{Dataset, Split};
 use crate::runtime::Runtime;
-use crate::selection::{SelectCtx, Strategy};
+use crate::selection::{ModelProbe, SelectCtx, Strategy};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -87,8 +87,7 @@ impl TrainConfig {
 
     /// Subset size for this dataset.
     pub fn k(&self, ds: &Dataset) -> usize {
-        ((self.fraction * ds.n_train() as f64).round() as usize)
-            .clamp(1, ds.n_train())
+        ds.subset_size(self.fraction)
     }
 }
 
@@ -175,15 +174,14 @@ impl<'a> Trainer<'a> {
             let need_select = subset.is_empty()
                 || (strategy.is_adaptive() && epoch % self.cfg.r == 0);
             if need_select {
-                let mut ctx = SelectCtx {
-                    rt: self.rt,
-                    ds: self.ds,
-                    model: &mut self.model,
+                let mut ctx = SelectCtx::model_agnostic(
+                    self.ds,
                     epoch,
-                    total_epochs: self.cfg.epochs,
+                    self.cfg.epochs,
                     k,
-                    rng: &mut rng,
-                };
+                    &mut rng,
+                )
+                .with_probe(ModelProbe::new(self.rt, &mut self.model));
                 subset = sw.time("selection", || strategy.select(&mut ctx))?;
                 anyhow::ensure!(!subset.is_empty(), "strategy returned empty subset");
             }

@@ -5,7 +5,7 @@ use milo::coordinator::{PreprocessOptions, Preprocessor, StrategyKind};
 use milo::data::{DatasetId, Split};
 use milo::kernel::SimilarityBackend;
 use milo::runtime::Runtime;
-use milo::selection::{SelectCtx, Strategy};
+use milo::selection::{ModelProbe, SelectCtx, Strategy};
 use milo::train::model::MlpModel;
 use milo::train::{TrainConfig, Trainer};
 use milo::util::rng::Rng;
@@ -28,20 +28,12 @@ fn milo_selects_correct_sizes_in_both_phases() {
     );
     let meta = pre.run(&ds).unwrap();
     let mut strat = meta.milo_strategy(1.0 / 6.0);
-    let mut model = MlpModel::load(&rt, "trec6", 128, 1).unwrap();
+    // MILO is model-agnostic: no MlpModel (or ModelProbe) anywhere
     let mut rng = Rng::new(0);
     let k = (0.1 * ds.n_train() as f64).round() as usize;
     let total = 30;
     for epoch in [0usize, 4, 5, 29] {
-        let mut ctx = SelectCtx {
-            rt: &rt,
-            ds: &ds,
-            model: &mut model,
-            epoch,
-            total_epochs: total,
-            k,
-            rng: &mut rng,
-        };
+        let mut ctx = SelectCtx::model_agnostic(&ds, epoch, total, k, &mut rng);
         let sel = strat.select(&mut ctx).unwrap();
         assert_eq!(sel.len(), k, "epoch {epoch}");
         let mut d = sel.clone();
@@ -69,7 +61,6 @@ fn milo_curriculum_moves_from_easy_to_hard() {
     );
     let meta = pre.run(&ds).unwrap();
     let mut strat = meta.milo_strategy(0.5);
-    let mut model = MlpModel::load(&rt, "cifar100", 128, 1).unwrap();
     let mut rng = Rng::new(1);
     let k = (0.1 * ds.n_train() as f64) as usize;
     let mean_hardness = |sel: &[usize]| -> f64 {
@@ -77,15 +68,7 @@ fn milo_curriculum_moves_from_easy_to_hard() {
     };
     let mut phase_means = [0.0f64; 2];
     for (slot, epoch) in [(0usize, 0usize), (1, 10)] {
-        let mut ctx = SelectCtx {
-            rt: &rt,
-            ds: &ds,
-            model: &mut model,
-            epoch,
-            total_epochs: 20,
-            k,
-            rng: &mut rng,
-        };
+        let mut ctx = SelectCtx::model_agnostic(&ds, epoch, 20, k, &mut rng);
         let sel = strat.select(&mut ctx).unwrap();
         phase_means[slot] = mean_hardness(&sel);
     }
@@ -110,15 +93,9 @@ fn gradient_baselines_produce_valid_subsets() {
         StrategyKind::Glister,
     ] {
         let mut strat = kind.build(None, None).unwrap();
-        let mut ctx = SelectCtx {
-            rt: &rt,
-            ds: &ds,
-            model: &mut model,
-            epoch: 0,
-            total_epochs: 10,
-            k,
-            rng: &mut rng,
-        };
+        // gradient baselines are model-dependent: they get a ModelProbe
+        let mut ctx = SelectCtx::model_agnostic(&ds, 0, 10, k, &mut rng)
+            .with_probe(ModelProbe::new(&rt, &mut model));
         let sel = strat.select(&mut ctx).unwrap();
         assert_eq!(sel.len(), k, "{}", kind.name());
         let mut d = sel.clone();
@@ -128,6 +105,30 @@ fn gradient_baselines_produce_valid_subsets() {
         let classes: std::collections::HashSet<u32> =
             sel.iter().map(|&i| ds.train_y[i]).collect();
         assert_eq!(classes.len(), 2, "{}", kind.name());
+    }
+}
+
+#[test]
+fn model_dependent_strategies_require_a_probe() {
+    // no artifacts needed: the probe check fires before any model work —
+    // the type-level half of "model-agnostic strategies never construct an
+    // MlpModel"
+    let ds = DatasetId::RottenLike.generate(1);
+    let mut rng = Rng::new(0);
+    for kind in [
+        StrategyKind::CraigPb,
+        StrategyKind::GradMatchPb,
+        StrategyKind::Glister,
+        StrategyKind::El2nPrune,
+    ] {
+        let mut strat = kind.build(None, None).unwrap();
+        let mut ctx = SelectCtx::model_agnostic(&ds, 0, 10, 10, &mut rng);
+        let err = strat.select(&mut ctx).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("ModelProbe"),
+            "{}: {err:#}",
+            kind.name()
+        );
     }
 }
 

@@ -173,29 +173,40 @@ fn garbage_metadata_fields_fail_to_load() {
 }
 
 #[test]
-fn run_cached_recovers_from_corrupt_cache() {
+fn store_source_recovers_from_corrupt_cache() {
     // a corrupt cache entry must be silently regenerated, not crash
     let Some(rt) = runtime() else { return };
     use milo::coordinator::{PreprocessOptions, Preprocessor};
     use milo::data::DatasetId;
+    use milo::session::MetaSource;
     let ds = DatasetId::Trec6Like.generate(1);
     let dir = std::env::temp_dir().join(format!("milo_cache_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let pre = Preprocessor::with_options(
-        &rt,
-        PreprocessOptions {
-            fraction: 0.05,
-            backend: milo::kernel::SimilarityBackend::Native,
-            ..Default::default()
-        },
-    );
+    let opts = PreprocessOptions {
+        fraction: 0.05,
+        backend: milo::kernel::SimilarityBackend::Native,
+        ..Default::default()
+    };
     // seed the cache, then corrupt every file in it
-    pre.run_cached(&ds, &dir).unwrap();
+    MetaSource::store(&dir, opts.clone())
+        .unwrap()
+        .resolve(Some(&rt), &ds)
+        .unwrap();
     for entry in std::fs::read_dir(&dir).unwrap() {
         std::fs::write(entry.unwrap().path(), "{broken").unwrap();
     }
-    let meta = pre.run_cached(&ds, &dir).expect("should regenerate");
+    // a cold store over the same dir sees the corruption and rebuilds
+    let cold = milo::store::MetaStore::open(&dir).unwrap();
+    let meta = MetaSource::store_handle(cold, opts.clone())
+        .resolve(Some(&rt), &ds)
+        .expect("should regenerate");
     assert!(!meta.sge_subsets.is_empty());
+    // the deprecated shim forwards to the same path
+    #[allow(deprecated)]
+    let shimmed = Preprocessor::with_options(&rt, opts)
+        .run_cached(&ds, &dir)
+        .expect("deprecated shim still works");
+    assert_eq!(shimmed.sge_subsets, meta.sge_subsets);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -63,6 +63,7 @@ fn test_key() -> MetaKey {
         seed: SEED,
         metric: "cosine".into(),
         backend: "native".into(),
+        pipeline: "kernel".into(),
     }
 }
 

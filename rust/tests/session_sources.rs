@@ -1,0 +1,180 @@
+//! The session API's core contract, end to end: the *same* `MiloSession`
+//! driven through all three `MetaSource` variants — inline preprocessing,
+//! the content-addressed store, and a live `milo serve` instance — must
+//! resolve byte-identical `Metadata` (binfmt encoding compared) and
+//! produce identical first-R-epoch subset streams.
+//!
+//! The store/remote half runs without AOT artifacts (metadata is
+//! synthesized into a store and served); the inline leg joins when the
+//! artifacts exist.
+
+use milo::coordinator::{Metadata, PreprocessOptions, StrategyKind};
+use milo::data::{Dataset, DatasetId};
+use milo::kernel::SimilarityBackend;
+use milo::selection::SelectCtx;
+use milo::serve::SubsetServer;
+use milo::session::{MetaSource, MiloSession};
+use milo::store::{binfmt, MetaKey, MetaStore};
+use milo::testkit::synthetic_metadata;
+use milo::util::rng::Rng;
+
+const SEED: u64 = 5;
+const FRACTION: f64 = 0.1;
+const EPOCHS: usize = 6;
+
+fn dataset() -> Dataset {
+    DatasetId::Trec6Like.generate(SEED)
+}
+
+fn options() -> PreprocessOptions {
+    PreprocessOptions {
+        fraction: FRACTION,
+        backend: SimilarityBackend::Native,
+        seed: SEED,
+        ..Default::default()
+    }
+}
+
+/// Build a session over `source` (runtime optional).
+fn session(rt: Option<&milo::runtime::Runtime>, source: MetaSource) -> MiloSession<'_> {
+    let builder = MiloSession::builder()
+        .dataset(dataset())
+        .source(source)
+        .fraction(FRACTION)
+        .seed(SEED);
+    match rt {
+        Some(rt) => builder.runtime(rt).build().unwrap(),
+        None => builder.build().unwrap(),
+    }
+}
+
+/// The first R-epoch subset stream of the session's MILO strategy, under a
+/// fixed selection RNG — a pure function of the resolved metadata.
+fn subset_stream(session: &MiloSession<'_>) -> Vec<Vec<usize>> {
+    let mut strat = session
+        .strategy(StrategyKind::Milo { kappa: 1.0 / 6.0 })
+        .expect("milo strategy off the session");
+    let ds = session.dataset();
+    let k = session.k();
+    let mut rng = Rng::new(0xDEC1);
+    let mut stream = Vec::with_capacity(EPOCHS);
+    for epoch in 0..EPOCHS {
+        let mut ctx = SelectCtx::model_agnostic(ds, epoch, EPOCHS, k, &mut rng);
+        stream.push(strat.select(&mut ctx).expect("select"));
+    }
+    stream
+}
+
+fn encoded(meta: &Metadata) -> Vec<u8> {
+    binfmt::encode(meta)
+}
+
+#[test]
+fn same_session_identical_across_store_and_serve_sources() {
+    // artifact-free legs: synthesized metadata in a store, then served
+    let dir = std::env::temp_dir()
+        .join(format!("milo_session_sources_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let ds = dataset();
+    let store = MetaStore::open(&dir).unwrap();
+    let key = MetaKey::from_options(ds.name(), &options());
+    store.put(&key, synthetic_metadata(&ds, FRACTION)).unwrap();
+
+    // store-backed session (cold handle below proves the disk path too)
+    let store_session =
+        session(None, MetaSource::store_handle(store.clone(), options()));
+    let store_meta = store_session.metadata().unwrap();
+
+    // served session over the same artifact
+    let server =
+        SubsetServer::bind("127.0.0.1:0", store_meta.clone(), Some(store.clone()), SEED)
+            .unwrap();
+    let remote_session = session(
+        None,
+        MetaSource::remote_expecting(server.addr().to_string(), SEED, FRACTION),
+    );
+    let remote_meta = remote_session.metadata().unwrap();
+
+    // byte-identical resolution…
+    assert_eq!(
+        encoded(&store_meta),
+        encoded(&remote_meta),
+        "store and served resolutions must be byte-identical"
+    );
+    // …and identical subset streams
+    assert_eq!(subset_stream(&store_session), subset_stream(&remote_session));
+
+    // a cold store handle (fresh LRU) decodes the same bytes from disk
+    let cold_session = session(
+        None,
+        MetaSource::store_handle(MetaStore::open(&dir).unwrap(), options()),
+    );
+    assert_eq!(encoded(&cold_session.metadata().unwrap()), encoded(&store_meta));
+    assert_eq!(subset_stream(&cold_session), subset_stream(&store_session));
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn same_session_identical_across_all_three_sources() {
+    // the full three-way leg needs the AOT artifacts for the inline pass
+    let Some(rt) = milo::testkit::artifacts_or_skip() else { return };
+    let dir = std::env::temp_dir()
+        .join(format!("milo_session_threeway_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // 1. inline: the one real preprocessing pass
+    let inline_session = session(Some(&rt), MetaSource::inline(options()));
+    let inline_meta = inline_session.metadata().unwrap();
+
+    // 2. store: publish that pass (precompute-once topology), resolve from
+    //    a cold handle so the bytes genuinely come off disk
+    let ds = dataset();
+    let store = MetaStore::open(&dir).unwrap();
+    let key = MetaKey::from_options(ds.name(), &options());
+    store.put(&key, Metadata::clone(&inline_meta)).unwrap();
+    let store_session = session(
+        Some(&rt),
+        MetaSource::store_handle(MetaStore::open(&dir).unwrap(), options()),
+    );
+    let store_meta = store_session.metadata().unwrap();
+
+    // 3. remote: a live `milo serve` over the same artifact
+    let server =
+        SubsetServer::bind("127.0.0.1:0", store_meta.clone(), Some(store), SEED)
+            .unwrap();
+    let remote_session = session(
+        None, // served consumption needs no runtime at all
+        MetaSource::remote_expecting(server.addr().to_string(), SEED, FRACTION),
+    );
+    let remote_meta = remote_session.metadata().unwrap();
+
+    // resolved metadata is byte-identical across all three sources
+    let reference = encoded(&inline_meta);
+    assert_eq!(reference, encoded(&store_meta), "inline vs store");
+    assert_eq!(reference, encoded(&remote_meta), "inline vs served");
+
+    // and the first R-epoch subset stream is identical
+    let reference_stream = subset_stream(&inline_session);
+    assert_eq!(reference_stream, subset_stream(&store_session), "store stream");
+    assert_eq!(reference_stream, subset_stream(&remote_session), "served stream");
+
+    // an independently *built* store resolution reproduces the selection
+    // payload exactly (wall-clock provenance aside)
+    let dir2 = std::env::temp_dir()
+        .join(format!("milo_session_threeway_rebuild_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir2).ok();
+    let rebuilt_session = session(
+        Some(&rt),
+        MetaSource::store(&dir2, options()).unwrap(),
+    );
+    let rebuilt = rebuilt_session.metadata().unwrap();
+    assert_eq!(rebuilt.sge_subsets, inline_meta.sge_subsets);
+    assert_eq!(rebuilt.fixed_dm, inline_meta.fixed_dm);
+    assert_eq!(rebuilt.wre_classes, inline_meta.wre_classes);
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}

@@ -4,10 +4,11 @@
 //! must surface as a clean error — never a panic, never a silently wrong
 //! selection.
 
-use milo::coordinator::Metadata;
+use milo::coordinator::{metadata_from_json, metadata_to_json, Metadata};
 use milo::selection::milo::ClassProbs;
 use milo::store::{binfmt, MetaKey, MetaStore};
 use milo::testkit::check_cases;
+use milo::util::json::Json;
 use milo::util::rng::Rng;
 
 /// Random but structurally valid metadata: variable class counts/sizes,
@@ -75,6 +76,35 @@ fn prop_store_file_roundtrip_is_byte_identical() {
         assert_eq!(first, second, "save -> load -> save must be byte-identical");
     });
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cross-codec equivalence: the JSON codec (`save_metadata` /
+/// `load_metadata` / the serve protocol's `GET_META`) and the store's
+/// binfmt must reconstruct *identical* `Metadata` for the same input —
+/// any silent field drift between the two serializers shows up here as a
+/// byte-level mismatch.
+#[test]
+fn prop_json_and_binfmt_codecs_agree_exactly() {
+    check_cases(0xC0DEC, 40, |seed| {
+        let meta = random_metadata(seed);
+
+        // JSON text round-trip (shortest-float formatting is exact)
+        let text = metadata_to_json(&meta).to_string();
+        let via_json =
+            metadata_from_json(&Json::parse(&text).expect("codec JSON parses"))
+                .expect("codec JSON decodes");
+
+        // binary round-trip
+        let via_bin =
+            binfmt::decode(&binfmt::encode(&meta)).expect("binfmt decodes");
+
+        assert_eq!(via_json, meta, "JSON codec drifted from the source");
+        assert_eq!(via_bin, meta, "binfmt codec drifted from the source");
+        assert_eq!(via_json, via_bin, "the two codecs disagree");
+        // and at byte level: re-encoding either reconstruction is identical
+        assert_eq!(binfmt::encode(&via_json), binfmt::encode(&via_bin));
+        assert_eq!(metadata_to_json(&via_bin).to_string(), text);
+    });
 }
 
 #[test]

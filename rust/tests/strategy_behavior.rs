@@ -6,7 +6,8 @@ use milo::data::DatasetId;
 use milo::kernel::SimilarityBackend;
 use milo::runtime::Runtime;
 use milo::selection::{
-    AdaptiveRandomStrategy, RandomStrategy, SelectCtx, SgeVariantStrategy, Strategy,
+    AdaptiveRandomStrategy, ModelProbe, RandomStrategy, SelectCtx, SgeVariantStrategy,
+    Strategy,
 };
 use milo::train::model::MlpModel;
 use milo::util::rng::Rng;
@@ -27,7 +28,20 @@ impl Fixture {
         Some(Fixture { rt, ds })
     }
 
+    /// Model-agnostic selection: no probe, no MlpModel.
     fn select(
+        &self,
+        strat: &mut dyn Strategy,
+        rng: &mut Rng,
+        epoch: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        let mut ctx = SelectCtx::model_agnostic(&self.ds, epoch, 20, k, rng);
+        strat.select(&mut ctx).unwrap()
+    }
+
+    /// Model-dependent selection (EL2N, gradient baselines).
+    fn select_with_model(
         &self,
         strat: &mut dyn Strategy,
         model: &mut MlpModel,
@@ -35,15 +49,8 @@ impl Fixture {
         epoch: usize,
         k: usize,
     ) -> Vec<usize> {
-        let mut ctx = SelectCtx {
-            rt: &self.rt,
-            ds: &self.ds,
-            model,
-            epoch,
-            total_epochs: 20,
-            k,
-            rng,
-        };
+        let mut ctx = SelectCtx::model_agnostic(&self.ds, epoch, 20, k, rng)
+            .with_probe(ModelProbe::new(&self.rt, model));
         strat.select(&mut ctx).unwrap()
     }
 }
@@ -51,11 +58,10 @@ impl Fixture {
 #[test]
 fn random_strategy_caches_first_draw() {
     let Some(fx) = Fixture::new() else { return };
-    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
     let mut rng = Rng::new(1);
     let mut s = RandomStrategy::new();
-    let a = fx.select(&mut s, &mut model, &mut rng, 0, 50);
-    let b = fx.select(&mut s, &mut model, &mut rng, 5, 50);
+    let a = fx.select(&mut s, &mut rng, 0, 50);
+    let b = fx.select(&mut s, &mut rng, 5, 50);
     assert_eq!(a, b, "RANDOM must reuse its first subset");
     assert!(!s.is_adaptive());
 }
@@ -63,11 +69,10 @@ fn random_strategy_caches_first_draw() {
 #[test]
 fn adaptive_random_redraws() {
     let Some(fx) = Fixture::new() else { return };
-    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
     let mut rng = Rng::new(2);
     let mut s = AdaptiveRandomStrategy;
-    let a = fx.select(&mut s, &mut model, &mut rng, 0, 50);
-    let b = fx.select(&mut s, &mut model, &mut rng, 1, 50);
+    let a = fx.select(&mut s, &mut rng, 0, 50);
+    let b = fx.select(&mut s, &mut rng, 1, 50);
     assert_ne!(a, b, "ADAPTIVE-RANDOM must redraw");
     assert!(s.is_adaptive());
 }
@@ -87,12 +92,11 @@ fn sge_variant_greedy_share_decays() {
     let sge_pool: std::collections::HashSet<usize> =
         meta.sge_subsets.iter().flatten().cloned().collect();
     let mut s = SgeVariantStrategy::new(meta.sge_subsets.clone());
-    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
     let mut rng = Rng::new(3);
     let k = 120;
     // early epoch: almost all picks from the SGE pool; late epoch: few
-    let early = fx.select(&mut s, &mut model, &mut rng, 0, k);
-    let late = fx.select(&mut s, &mut model, &mut rng, 19, k);
+    let early = fx.select(&mut s, &mut rng, 0, k);
+    let late = fx.select(&mut s, &mut rng, 19, k);
     let overlap = |sel: &[usize]| sel.iter().filter(|i| sge_pool.contains(i)).count();
     let (e, l) = (overlap(&early), overlap(&late));
     assert!(
@@ -117,9 +121,8 @@ fn milo_fixed_subset_is_disparity_min_selection() {
     let meta = pre.run(&fx.ds).unwrap();
     let mut s = meta.milo_fixed_strategy();
     assert_eq!(s.name(), "milo_fixed");
-    let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
     let mut rng = Rng::new(4);
-    let sel = fx.select(&mut s, &mut model, &mut rng, 0, 240);
+    let sel = fx.select(&mut s, &mut rng, 0, 240);
     assert_eq!(sel, meta.fixed_dm);
 }
 
@@ -151,8 +154,8 @@ fn el2n_prune_is_cached_across_calls() {
     let mut s = milo::selection::El2nPruneStrategy::new(1);
     let mut model = MlpModel::load(&fx.rt, "trec6", 128, 1).unwrap();
     let mut rng = Rng::new(6);
-    let a = fx.select(&mut s, &mut model, &mut rng, 0, 60);
-    let b = fx.select(&mut s, &mut model, &mut rng, 3, 60);
+    let a = fx.select_with_model(&mut s, &mut model, &mut rng, 0, 60);
+    let b = fx.select_with_model(&mut s, &mut model, &mut rng, 3, 60);
     assert_eq!(a, b, "pruning must be computed once");
     assert!(!s.is_adaptive());
 }
