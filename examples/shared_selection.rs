@@ -70,13 +70,20 @@ fn main() -> anyhow::Result<()> {
     println!("serving on {addr}");
 
     // --- 3. four concurrent clients draw deterministic streams ----------
+    // half speak JSON lines, half the binary frame wire: the stream a
+    // client sees depends only on its id, never on the transport encoding
     let streams: Vec<(String, Vec<usize>, usize)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..N_CLIENTS)
             .map(|c| {
                 let addr = addr.clone();
                 scope.spawn(move || -> anyhow::Result<(String, Vec<usize>, usize)> {
+                    let wire = if c % 2 == 0 { WireMode::Json } else { WireMode::Frame };
                     let id = format!("trainer-{c}");
-                    let mut client = ServeClient::connect(&addr, &id)?;
+                    let mut client = ServeClient::connect_with(
+                        &addr,
+                        &id,
+                        ClientOptions { wire, ..Default::default() },
+                    )?;
                     let mut cycle = Vec::new();
                     for _ in 0..6 {
                         cycle.push(client.next_subset()?.0);

@@ -8,7 +8,10 @@
 //!     amortization ratio behind the paper's "no additional cost" claim),
 //!   * MiloSession (builder API) vs a hand-wired pipeline: subset delivery
 //!     through the session layer must cost the same as wiring
-//!     Metadata→MiloStrategy by hand (asserted, not just printed).
+//!     Metadata→MiloStrategy by hand (asserted, not just printed),
+//!   * serve wire modes: bytes and latency per `NEXT_SUBSET` over the
+//!     JSON-line protocol vs the binary frame mode (binary must transfer
+//!     strictly fewer bytes per request — asserted).
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -85,6 +88,58 @@ fn main() {
 
     bench_store_amortization();
     bench_session_vs_handwired();
+    bench_wire_modes();
+}
+
+/// JSON-line vs binary-frame `NEXT_SUBSET`: draw the same deterministic
+/// stream over both wire modes against one event-loop server and compare
+/// bytes received per request (asserted strictly smaller for frames — the
+/// subset index array travels as raw u32 words instead of decimal text)
+/// plus round-trip latency.
+fn bench_wire_modes() {
+    use milo::data::DatasetId;
+    use milo::serve::{ClientOptions, ServeClient, SubsetServer, WireMode};
+    use std::sync::Arc;
+
+    let ds = DatasetId::Trec6Like.generate(1);
+    let meta = Arc::new(milo::testkit::synthetic_metadata(&ds, 0.1));
+    let subset_len = meta.sge_subsets.first().map(|s| s.len()).unwrap_or(0);
+    let server = SubsetServer::bind("127.0.0.1:0", meta, None, 1).unwrap();
+    let addr = server.addr().to_string();
+
+    let draws = 64u64;
+    let mut per_request = Vec::new();
+    for wire in [WireMode::Json, WireMode::Frame] {
+        let mut client = ServeClient::connect_with(
+            &addr,
+            "bench-wire",
+            ClientOptions { wire, ..Default::default() },
+        )
+        .unwrap();
+        client.next_subset().unwrap(); // warmup
+        let rx0 = client.bytes_received();
+        let t0 = std::time::Instant::now();
+        for _ in 0..draws {
+            std::hint::black_box(client.next_subset().unwrap());
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rx = (client.bytes_received() - rx0) as f64 / draws as f64;
+        println!(
+            "bench serve_next_subset_{:5}  {:>8.1} B/request  {:>8.1} us/request \
+             (subset of {subset_len})",
+            wire.name(),
+            rx,
+            1e6 * secs / draws as f64,
+        );
+        per_request.push(rx);
+    }
+    server.shutdown();
+    let (json_bytes, frame_bytes) = (per_request[0], per_request[1]);
+    assert!(
+        frame_bytes < json_bytes,
+        "binary frames must transfer strictly fewer bytes per NEXT_SUBSET: \
+         frame {frame_bytes} B vs json {json_bytes} B"
+    );
 }
 
 /// Builder-vs-hand-wired subset delivery: drive `MiloStrategy::select`

@@ -21,9 +21,13 @@
 //! * **Metadata store & selection service** — [`store`] is a versioned,
 //!   content-addressed registry of pre-processed selection metadata
 //!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
-//!   one such artifact to N concurrent trainers/HPO trials over a small
-//!   JSON-line TCP protocol (`milo serve`). Both are consumed through
-//!   [`session::MetaSource`].
+//!   any number of `(dataset, fraction)` artifacts to N concurrent
+//!   trainers/HPO trials from a single poll-based event loop (`milo
+//!   serve`), over a JSON-line protocol or the binary frame wire
+//!   negotiated at `HELLO` (subset index arrays as raw `u32` frames,
+//!   metadata as the exact binfmt artifact bytes). The [`serve::ServeClient`]
+//!   adds reconnect/retry with deterministic mid-stream resume. Both
+//!   layers are consumed through [`session::MetaSource`].
 //! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
 //!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
 //!   text artifacts executed here via PJRT.
@@ -93,7 +97,10 @@ pub mod prelude {
         AdaptiveRandomStrategy, FixedStrategy, FullStrategy, MiloStrategy,
         ModelProbe, RandomStrategy, SelectCtx, Strategy,
     };
-    pub use crate::serve::{ServeClient, ServedMiloStrategy, SubsetServer};
+    pub use crate::serve::{
+        ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy, SubsetServer,
+        WireMode,
+    };
     pub use crate::session::{MetaSource, MiloSession, MiloSessionBuilder};
     pub use crate::store::{MetaKey, MetaStore};
     pub use crate::submod::{GreedyMode, SetFunctionKind};

@@ -5,8 +5,10 @@
 //!     store the metadata (subsets + WRE distribution) on disk;
 //!   * `precompute` — pre-processing into the content-addressed metadata
 //!     store (versioned binary artifacts, fingerprinted by configuration);
-//!   * `serve`      — serve a store artifact to N concurrent trainers over
-//!     TCP (see `milo::serve` for the protocol);
+//!   * `serve`      — serve store artifacts (any number of dataset ×
+//!     fraction entries from one event-loop process) to N concurrent
+//!     trainers over TCP, JSON-line or binary-frame wire (see
+//!     `milo::serve` for the protocol);
 //!   * `train`      — train a downstream model with any strategy;
 //!   * `tune`       — hyper-parameter tuning (Random/TPE × Hyperband),
 //!     optionally against a running `milo serve` (`--server addr:port`);
@@ -35,8 +37,10 @@ USAGE:
                   [--streaming]    (bounded-memory pipeline w/ backpressure)
   milo precompute --dataset <name> [--fraction 0.1] [--seed 1]
                   [--store results/store]   (content-addressed binary store)
-  milo serve --dataset <name> [--addr 127.0.0.1:4077] [--fraction 0.1]
-             [--seed 1] [--store results/store]
+  milo serve --dataset <name> | --datasets a,b [--fractions 0.1,0.3]
+             [--addr 127.0.0.1:4077] [--fraction 0.1] [--seed 1]
+             [--store results/store] [--featurebased]
+             (one event-loop process serves every dataset×fraction entry)
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
              [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
   milo tune --dataset <name> --strategy <name> [--algo random|tpe]
@@ -68,7 +72,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "quiet", "help", "streaming"])?;
+    let args = Args::from_env(&["verbose", "quiet", "help", "streaming", "featurebased"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -249,17 +253,64 @@ fn cmd_precompute(args: &Args, artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// `milo serve`: one event-loop process serving every `dataset × fraction`
+/// entry named on the command line, resolved through the content-addressed
+/// store. The runtime is optional — entries already precomputed into the
+/// store are served without the AOT artifacts; a store miss without a
+/// runtime is a clean error naming the missing fingerprint.
 fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
-    let (store, key, meta, dataset, seed) = store_metadata(args, artifacts)?;
+    let rt = Runtime::open(artifacts).ok();
+    let seed = args.get_u64("seed", 1)?;
+    let datasets: Vec<String> = match args.get("datasets") {
+        Some(_) => args.get_list_str("datasets", &[]),
+        None => vec![args
+            .get("dataset")
+            .ok_or_else(|| anyhow::anyhow!("--dataset or --datasets is required"))?
+            .to_string()],
+    };
+    let fractions: Vec<f64> = match args.get("fractions") {
+        Some(_) => args.get_list_f64("fractions", &[])?,
+        None => vec![args.get_f64("fraction", 0.1)?],
+    };
+    let pipeline = if args.flag("featurebased") {
+        milo::coordinator::PreprocessPipeline::FeatureBased
+    } else {
+        milo::coordinator::PreprocessPipeline::Kernel
+    };
+    let store = milo::store::MetaStore::shared(args.get_or("store", "results/store"))?;
+    let mut entries = Vec::new();
+    let mut described = Vec::new();
+    for name in &datasets {
+        let id = DatasetId::from_name(name)?;
+        let ds = id.generate(seed);
+        for &fraction in &fractions {
+            let opts = PreprocessOptions {
+                fraction,
+                backend: backend_of(args)?,
+                seed,
+                pipeline,
+                ..Default::default()
+            };
+            let key = milo::store::MetaKey::from_options(ds.name(), &opts);
+            let meta = milo::session::MetaSource::store_handle(store.clone(), opts)
+                .resolve(rt.as_ref(), &ds)?;
+            described.push(format!("{}@{} ({})", ds.name(), fraction, key.fingerprint()));
+            entries.push(meta);
+        }
+    }
     let addr = args.get_or("addr", "127.0.0.1:4077");
-    let server = milo::serve::SubsetServer::bind(addr, meta, Some(store), seed)?;
+    let server =
+        milo::serve::SubsetServer::bind_multi(addr, entries, Some(store), seed)?;
     println!(
-        "serving {} (fingerprint {}, seed {}) on {} — protocol: see `milo::serve` docs",
-        dataset,
-        key.fingerprint(),
+        "serving {} entr{} (seed {}) on {} — protocol: see `milo::serve` docs",
+        described.len(),
+        if described.len() == 1 { "y" } else { "ies" },
         seed,
         server.addr(),
     );
+    for d in &described {
+        println!("  {d}");
+    }
     server.run_forever();
     Ok(())
 }

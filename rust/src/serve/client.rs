@@ -1,58 +1,284 @@
 //! Blocking Rust client for the `milo serve` protocol, plus a
 //! [`Strategy`] adapter so a trainer can draw its subsets live from a
 //! served metadata instance instead of local files.
+//!
+//! The client speaks both wire formats (see [`crate::serve`]): JSON lines
+//! (the default) and the length-prefixed binary frame mode negotiated at
+//! `HELLO` ([`ClientOptions::wire`]). It also carries the fleet-scale
+//! resilience the ROADMAP asked for:
+//!
+//! * **Reconnect/retry** ([`RetryPolicy`]): when the transport fails
+//!   mid-stream, the client redials and re-`HELLO`s with the same client
+//!   id plus a `resume` hint (`{sge, wre_ks}`), which the server uses to
+//!   **fast-forward** its deterministic streams past every subset this
+//!   client already consumed — one request, no subset payloads
+//!   re-transferred (the streams are pure functions of `(seed, entry,
+//!   client id)` — see the serve module docs). The failed request is then
+//!   re-issued, so the consumer observes the exact stream an
+//!   uninterrupted connection would have produced, or a clear "giving
+//!   up" error once the retry budget is exhausted. The replay journal
+//!   costs one `u64` plus one `usize` per WRE draw.
+//! * **Graceful close**: dropping a [`ServeClient`] sends `GOODBYE` so
+//!   the server reclaims the connection slot immediately instead of
+//!   waiting to notice the FIN.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
+use super::frame::{self, Frame};
+use super::WireMode;
 use crate::coordinator::{metadata_from_json, Metadata};
 use crate::selection::{SelectCtx, Strategy};
 use crate::util::json::Json;
 
-/// A blocking connection to a [`SubsetServer`](super::SubsetServer). One
-/// request/response round-trip per call; reconnect (same `client_id`) to
-/// replay the same deterministic stream.
-pub struct ServeClient {
+/// Reconnect budget for a [`ServeClient`]: after a transport failure the
+/// client redials up to `max_reconnects` times with linear backoff
+/// (`backoff_ms`, `2·backoff_ms`, …) before giving up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_reconnects: u32,
+    pub backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_reconnects: 3, backoff_ms: 100 }
+    }
+}
+
+impl RetryPolicy {
+    /// Fail fast on the first transport error (the pre-retry behaviour).
+    pub fn none() -> RetryPolicy {
+        RetryPolicy { max_reconnects: 0, backoff_ms: 0 }
+    }
+}
+
+/// Connection options for [`ServeClient::connect_with`].
+#[derive(Clone, Debug, Default)]
+pub struct ClientOptions {
+    /// Wire format to negotiate at `HELLO` (default: JSON lines).
+    pub wire: WireMode,
+    /// Served entry to bind to on a multi-dataset server (default: the
+    /// server's first entry).
+    pub dataset: Option<String>,
+    /// Served fraction to bind to (with or without `dataset`).
+    pub fraction: Option<f64>,
+    pub retry: RetryPolicy,
+}
+
+/// What the server announced at `HELLO` for the bound entry.
+struct HelloInfo {
+    dataset: String,
+    fraction: f64,
+    seed: u64,
+}
+
+/// One live transport: buffered reader + writer halves of a TCP stream,
+/// byte counters, and the active wire format.
+struct Wire {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    framed: bool,
+    tx: u64,
+    rx: u64,
+}
+
+impl Wire {
+    fn send_line(&mut self, text: &str) -> Result<()> {
+        let mut line = text.to_string();
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).context("sending request")?;
+        self.tx += line.len() as u64;
+        Ok(())
+    }
+
+    fn recv_line(&mut self) -> Result<String> {
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response).context("reading response")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        self.rx += n as u64;
+        Ok(response)
+    }
+
+    fn send_frame(&mut self, f: &Frame) -> Result<()> {
+        let bytes = f.encode();
+        self.writer.write_all(&bytes).context("sending frame")?;
+        self.tx += bytes.len() as u64;
+        Ok(())
+    }
+
+    fn recv_frame(&mut self) -> Result<Frame> {
+        let mut header = [0u8; frame::HEADER_LEN];
+        self.reader.read_exact(&mut header).context("reading frame header")?;
+        // shared header validation (length cap, kind range) — the one
+        // definition in `frame` — before allocating for the payload
+        let (len, kind) = frame::parse_header(&header)?;
+        let mut payload = vec![0u8; len];
+        self.reader.read_exact(&mut payload).context("reading frame payload")?;
+        self.rx += (frame::HEADER_LEN + len) as u64;
+        frame::parse_payload(kind, &payload)
+    }
+
+    /// One request/response exchange in the active wire format. Errors
+    /// here are transport-level (lost connection, corrupt framing) — a
+    /// server-side `"ok":false` / `ERROR` frame comes back as `Ok` and is
+    /// surfaced by the response interpreters, so it is never retried.
+    fn roundtrip(&mut self, request: &Json) -> Result<Frame> {
+        if self.framed {
+            self.send_frame(&Frame::Json(request.to_string()))?;
+            self.recv_frame()
+        } else {
+            self.send_line(&request.to_string())?;
+            let line = self.recv_line()?;
+            Ok(Frame::Json(line.trim_end().to_string()))
+        }
+    }
+}
+
+/// Dial + `HELLO` handshake (always JSON-line; the connection switches to
+/// frames after a confirmed `"wire":"frame"` response). `resume` is the
+/// reconnect fast-forward hint: `(SGE draws consumed, WRE ks consumed)` —
+/// the server skips the deterministic streams ahead in this one request,
+/// with no subset payload re-transfer.
+fn dial(
+    addr: &str,
+    client_id: &str,
+    opts: &ClientOptions,
+    resume: Option<(u64, &[usize])>,
+) -> Result<(Wire, HelloInfo)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to milo serve at {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut wire = Wire {
+        reader: BufReader::new(stream.try_clone()?),
+        writer: stream,
+        framed: false,
+        tx: 0,
+        rx: 0,
+    };
+    let mut fields = vec![
+        ("cmd", Json::str("HELLO")),
+        ("client", Json::str(client_id)),
+        ("wire", Json::str(opts.wire.name())),
+    ];
+    if let Some(ds) = &opts.dataset {
+        fields.push(("dataset", Json::str(ds.clone())));
+    }
+    if let Some(f) = opts.fraction {
+        fields.push(("fraction", Json::num(f)));
+    }
+    if let Some((sge, ks)) = resume {
+        fields.push((
+            "resume",
+            Json::obj(vec![
+                ("sge", Json::num(sge as f64)),
+                (
+                    "wre_ks",
+                    Json::arr(ks.iter().map(|&k| Json::num(k as f64)).collect()),
+                ),
+            ]),
+        ));
+    }
+    wire.send_line(&Json::obj(fields).to_string())?;
+    let line = wire.recv_line()?;
+    let v = Json::parse(line.trim_end())
+        .with_context(|| format!("bad HELLO response line {line:?}"))?;
+    if !v.get("ok")?.as_bool()? {
+        let msg = v
+            .opt("error")
+            .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
+            .unwrap_or_else(|| "unknown server error".to_string());
+        bail!("server error: {msg}");
+    }
+    // prefer the exact hex seed; the numeric field rounds above 2^53
+    let seed = match v.opt("seed_hex").and_then(|s| s.as_str().ok()) {
+        Some(hex) => u64::from_str_radix(hex, 16)
+            .with_context(|| format!("bad seed_hex {hex:?} in HELLO response"))?,
+        None => v.get("seed")?.as_f64()? as u64,
+    };
+    let info = HelloInfo {
+        dataset: v.get("dataset")?.as_str()?.to_string(),
+        fraction: v.get("fraction")?.as_f64()?,
+        seed,
+    };
+    if opts.wire == WireMode::Frame {
+        let confirmed = v.opt("wire").and_then(|w| w.as_str().ok()) == Some("frame");
+        ensure!(confirmed, "server at {addr} did not confirm frame mode");
+        wire.framed = true;
+    }
+    Ok((wire, info))
+}
+
+/// A blocking connection to a [`SubsetServer`](super::SubsetServer). One
+/// request/response round-trip per call; reconnecting (same `client_id`)
+/// replays the same deterministic stream, and the built-in
+/// [`RetryPolicy`] does exactly that transparently on transport failure.
+pub struct ServeClient {
+    addr: String,
     client_id: String,
+    opts: ClientOptions,
+    conn: Option<Wire>,
     server_dataset: String,
+    server_fraction: f64,
     server_seed: u64,
+    /// Replay journal: successful `NEXT_SUBSET` count …
+    sge_drawn: u64,
+    /// … and the `k` of every successful `SAMPLE_WRE`, in order.
+    wre_ks: Vec<usize>,
+    /// Byte counters folded in from torn-down connections.
+    bytes_tx: u64,
+    bytes_rx: u64,
+    goodbye_sent: bool,
 }
 
 impl ServeClient {
-    /// Connect and bind the session to `client_id` (which keys the
+    /// Connect with default options (JSON lines, default entry, default
+    /// retry policy), binding the session to `client_id` (which keys the
     /// server-side deterministic streams — see the module docs of
     /// [`crate::serve`]).
     pub fn connect(addr: &str, client_id: &str) -> Result<ServeClient> {
-        let stream = TcpStream::connect(addr)
-            .with_context(|| format!("connecting to milo serve at {addr}"))?;
-        let reader = BufReader::new(stream.try_clone()?);
-        let mut client = ServeClient {
-            reader,
-            writer: stream,
+        ServeClient::connect_with(addr, client_id, ClientOptions::default())
+    }
+
+    /// Connect with explicit wire format, entry routing, and retry policy.
+    pub fn connect_with(
+        addr: &str,
+        client_id: &str,
+        opts: ClientOptions,
+    ) -> Result<ServeClient> {
+        let (wire, info) = dial(addr, client_id, &opts, None)?;
+        Ok(ServeClient {
+            addr: addr.to_string(),
             client_id: client_id.to_string(),
-            server_dataset: String::new(),
-            server_seed: 0,
-        };
-        let hello = client.call(Json::obj(vec![
-            ("cmd", Json::str("HELLO")),
-            ("client", Json::str(client_id)),
-        ]))?;
-        client.server_dataset = hello.get("dataset")?.as_str()?.to_string();
-        client.server_seed = hello.get("seed")?.as_f64()? as u64;
-        Ok(client)
+            opts,
+            conn: Some(wire),
+            server_dataset: info.dataset,
+            server_fraction: info.fraction,
+            server_seed: info.seed,
+            sge_drawn: 0,
+            wre_ks: Vec::new(),
+            bytes_tx: 0,
+            bytes_rx: 0,
+            goodbye_sent: false,
+        })
     }
 
     pub fn client_id(&self) -> &str {
         &self.client_id
     }
 
-    /// Dataset the server announced in HELLO.
+    /// Dataset of the entry the server bound this session to at HELLO.
     pub fn server_dataset(&self) -> &str {
         &self.server_dataset
+    }
+
+    /// Fraction of the bound entry.
+    pub fn server_fraction(&self) -> f64 {
+        self.server_fraction
     }
 
     /// Stream seed the server announced in HELLO — compare against your
@@ -61,72 +287,249 @@ impl ServeClient {
         self.server_seed
     }
 
-    /// One protocol round-trip; errors on transport failure or an
-    /// `"ok":false` response.
-    fn call(&mut self, request: Json) -> Result<Json> {
-        let mut line = request.to_string();
-        line.push('\n');
-        self.writer.write_all(line.as_bytes()).context("sending request")?;
-        let mut response = String::new();
-        let n = self.reader.read_line(&mut response).context("reading response")?;
-        if n == 0 {
-            bail!("server closed the connection");
-        }
-        let v = Json::parse(response.trim_end())
-            .with_context(|| format!("bad response line {response:?}"))?;
-        if !v.get("ok")?.as_bool()? {
-            let msg = v
-                .opt("error")
-                .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
-                .unwrap_or_else(|| "unknown server error".to_string());
-            bail!("server error: {msg}");
-        }
-        Ok(v)
+    /// Negotiated wire format.
+    pub fn wire_mode(&self) -> WireMode {
+        self.opts.wire
     }
 
-    /// Fetch the full metadata document (the `GET_META` command) — lets a
-    /// tuner or trainer run entirely off a served preprocessing pass.
+    /// Bytes written to the server so far (all connections).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_tx + self.conn.as_ref().map_or(0, |w| w.tx)
+    }
+
+    /// Bytes read from the server so far (all connections).
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_rx + self.conn.as_ref().map_or(0, |w| w.rx)
+    }
+
+    fn drop_conn(&mut self) {
+        if let Some(wire) = self.conn.take() {
+            self.bytes_tx += wire.tx;
+            self.bytes_rx += wire.rx;
+        }
+    }
+
+    /// Redial, re-HELLO with the resume hint (the server fast-forwards its
+    /// deterministic streams past everything this client already consumed
+    /// in that one request — no subset payloads are re-transferred), and
+    /// validate the server still serves the same stream universe. After
+    /// this, the next draw is exactly what the uninterrupted stream would
+    /// have produced.
+    fn reconnect_and_replay(&mut self) -> Result<()> {
+        let (wire, info) = dial(
+            &self.addr,
+            &self.client_id,
+            &self.opts,
+            Some((self.sge_drawn, &self.wre_ks)),
+        )?;
+        ensure!(
+            info.seed == self.server_seed,
+            "server at {} came back with seed {} (session started on {}) — \
+             refusing to resume a different stream universe",
+            self.addr,
+            info.seed,
+            self.server_seed,
+        );
+        ensure!(
+            info.dataset == self.server_dataset
+                && (info.fraction - self.server_fraction).abs() < 1e-9,
+            "server at {} came back serving {}@{} (session started on {}@{})",
+            self.addr,
+            info.dataset,
+            info.fraction,
+            self.server_dataset,
+            self.server_fraction,
+        );
+        self.conn = Some(wire);
+        Ok(())
+    }
+
+    /// One protocol round-trip with the retry policy applied: transport
+    /// failures trigger reconnect + deterministic replay; server-side
+    /// errors come back as frames and are never retried.
+    fn call(&mut self, request: &Json) -> Result<Frame> {
+        let mut first_err: Option<anyhow::Error> = None;
+        if let Some(wire) = self.conn.as_mut() {
+            match wire.roundtrip(request) {
+                Ok(f) => return Ok(f),
+                // keep the root cause: with an empty retry budget this is
+                // the error the caller sees
+                Err(e) => first_err = Some(e),
+            }
+        }
+        if first_err.is_some() {
+            self.drop_conn();
+        }
+        let max = self.opts.retry.max_reconnects;
+        let mut last = first_err
+            .unwrap_or_else(|| anyhow!("connection to milo serve at {} lost", self.addr));
+        for attempt in 1..=max {
+            std::thread::sleep(std::time::Duration::from_millis(
+                self.opts.retry.backoff_ms.saturating_mul(attempt as u64),
+            ));
+            match self.reconnect_and_replay() {
+                Ok(()) => {
+                    let wire = self.conn.as_mut().expect("just reconnected");
+                    match wire.roundtrip(request) {
+                        Ok(f) => return Ok(f),
+                        Err(e) => {
+                            last = e;
+                            self.drop_conn();
+                        }
+                    }
+                }
+                // a deterministic refusal (seed/entry mismatch, policy
+                // rejection) comes from a live server that will refuse
+                // every redial identically — fail fast, don't burn the
+                // backoff budget calling it "unreachable"
+                Err(e) if is_refusal(&e) => {
+                    return Err(e.context(format!(
+                        "reconnect to milo serve at {} was refused — giving up",
+                        self.addr,
+                    )))
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last.context(format!(
+            "milo serve at {} unreachable after {} reconnect attempt(s) — giving up",
+            self.addr, max,
+        )))
+    }
+
+    /// Fetch the full metadata document (the `GET_META` command) — in
+    /// frame mode the payload is the exact binfmt artifact bytes
+    /// (validated magic/version/checksum); in JSON mode the JSON schema
+    /// of `save_metadata`.
     pub fn get_meta(&mut self) -> Result<Metadata> {
-        let v = self.call(Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
-        metadata_from_json(v.get("meta")?)
+        let f = self.call(&Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
+        match &f {
+            Frame::Meta(_) => f.decode_meta(),
+            _ => {
+                let v = ok_json(&f)?;
+                metadata_from_json(v.get("meta")?)
+            }
+        }
     }
 
     /// Draw the next SGE subset in this client's cycle; returns
     /// `(subset index, train indices)`.
     pub fn next_subset(&mut self) -> Result<(usize, Vec<usize>)> {
-        let v = self.call(Json::obj(vec![("cmd", Json::str("NEXT_SUBSET"))]))?;
-        let index = v.get("index")?.as_usize()?;
-        let subset = v
-            .get("subset")?
-            .as_arr()?
-            .iter()
-            .map(|x| x.as_usize())
-            .collect::<Result<Vec<_>>>()?;
+        let f = self.call(&Json::obj(vec![("cmd", Json::str("NEXT_SUBSET"))]))?;
+        let (index, subset) = subset_of(&f)?;
+        let index = index.ok_or_else(|| anyhow!("NEXT_SUBSET response missing index"))?;
+        self.sge_drawn += 1;
         Ok((index, subset))
     }
 
     /// Draw a fresh size-`k` WRE subset from this client's seeded stream.
     pub fn sample_wre(&mut self, k: usize) -> Result<Vec<usize>> {
-        let v = self.call(Json::obj(vec![
+        let f = self.call(&Json::obj(vec![
             ("cmd", Json::str("SAMPLE_WRE")),
             ("k", Json::num(k as f64)),
         ]))?;
-        v.get("subset")?
-            .as_arr()?
-            .iter()
-            .map(|x| x.as_usize())
-            .collect()
+        let (_, subset) = subset_of(&f)?;
+        self.wre_ks.push(k);
+        Ok(subset)
     }
 
     /// Server + store statistics as raw JSON (the `STATS` command).
     pub fn stats(&mut self) -> Result<Json> {
-        let v = self.call(Json::obj(vec![("cmd", Json::str("STATS"))]))?;
+        let f = self.call(&Json::obj(vec![("cmd", Json::str("STATS"))]))?;
+        let v = ok_json(&f)?;
         Ok(v.get("stats")?.clone())
     }
 
     pub fn ping(&mut self) -> Result<()> {
-        self.call(Json::obj(vec![("cmd", Json::str("PING"))]))?;
+        let f = self.call(&Json::obj(vec![("cmd", Json::str("PING"))]))?;
+        ok_json(&f)?;
         Ok(())
+    }
+
+    /// Graceful close: tell the server to reclaim this connection's slot
+    /// now. Dropping the client sends the same close message best-effort;
+    /// calling this explicitly also confirms the acknowledgement.
+    pub fn goodbye(&mut self) -> Result<()> {
+        self.goodbye_sent = true;
+        if let Some(wire) = self.conn.as_mut() {
+            let f = wire.roundtrip(&Json::obj(vec![("cmd", Json::str("GOODBYE"))]))?;
+            ok_json(&f)?;
+        }
+        self.drop_conn();
+        Ok(())
+    }
+}
+
+impl Drop for ServeClient {
+    fn drop(&mut self) {
+        // best-effort goodbye so the server reclaims the slot promptly —
+        // never block (or panic) on the way out
+        if !self.goodbye_sent {
+            if let Some(wire) = self.conn.as_mut() {
+                let req = Json::obj(vec![("cmd", Json::str("GOODBYE"))]);
+                let _ = if wire.framed {
+                    wire.send_frame(&Frame::Json(req.to_string()))
+                } else {
+                    wire.send_line(&req.to_string())
+                };
+            }
+        }
+    }
+}
+
+/// Whether a reconnect failure is a deterministic server-side refusal
+/// (markers this crate stamps itself: the server's `"ok":false` HELLO
+/// becomes `server error:`, and the stream-universe guards in
+/// `reconnect_and_replay` say `refusing to resume` / `came back
+/// serving`). Redialing a live server that refused is pointless.
+fn is_refusal(e: &anyhow::Error) -> bool {
+    let msg = format!("{e:#}");
+    msg.contains("server error:")
+        || msg.contains("refusing to resume")
+        || msg.contains("came back serving")
+}
+
+/// Interpret a control response: parsed JSON on `"ok":true`, an error on
+/// `"ok":false` / `ERROR` frames / unexpected kinds.
+fn ok_json(f: &Frame) -> Result<Json> {
+    match f {
+        Frame::Json(text) => {
+            let v = Json::parse(text.trim_end())
+                .with_context(|| format!("bad response {text:?}"))?;
+            if !v.get("ok")?.as_bool()? {
+                let msg = v
+                    .opt("error")
+                    .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "unknown server error".to_string());
+                bail!("server error: {msg}");
+            }
+            Ok(v)
+        }
+        Frame::Error(msg) => bail!("server error: {msg}"),
+        other => bail!("unexpected {} response", other.kind_name()),
+    }
+}
+
+/// Interpret a subset response in either wire format: `(cycle index if
+/// any, train indices)`.
+fn subset_of(f: &Frame) -> Result<(Option<usize>, Vec<usize>)> {
+    match f {
+        Frame::Subset { index, indices } => Ok((
+            if *index == frame::NO_INDEX { None } else { Some(*index as usize) },
+            indices.iter().map(|&i| i as usize).collect(),
+        )),
+        Frame::Json(_) | Frame::Error(_) => {
+            let v = ok_json(f)?;
+            let index = v.opt("index").and_then(|x| x.as_usize().ok());
+            let subset = v
+                .get("subset")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            Ok((index, subset))
+        }
+        Frame::Meta(_) => bail!("unexpected META response to a subset request"),
     }
 }
 
@@ -142,7 +545,20 @@ pub struct ServedMiloStrategy {
 
 impl ServedMiloStrategy {
     pub fn connect(addr: &str, client_id: &str, kappa: f64) -> Result<ServedMiloStrategy> {
-        Ok(ServedMiloStrategy { client: ServeClient::connect(addr, client_id)?, kappa })
+        ServedMiloStrategy::connect_with(addr, client_id, kappa, ClientOptions::default())
+    }
+
+    /// Connect with explicit wire format / entry routing / retry policy.
+    pub fn connect_with(
+        addr: &str,
+        client_id: &str,
+        kappa: f64,
+        opts: ClientOptions,
+    ) -> Result<ServedMiloStrategy> {
+        Ok(ServedMiloStrategy {
+            client: ServeClient::connect_with(addr, client_id, opts)?,
+            kappa,
+        })
     }
 
     fn switch_epoch(&self, total_epochs: usize) -> usize {

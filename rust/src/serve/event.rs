@@ -1,0 +1,305 @@
+//! Readiness polling and listener setup for the event-loop server.
+//!
+//! The offline build vendors no async runtime and no `mio`/`libc` crates,
+//! so this module speaks to the OS directly: on Linux it declares the two
+//! syscalls it needs (`poll(2)` for readiness, plus a raw
+//! `socket`/`setsockopt`/`bind`/`listen` path so the listener carries
+//! `SO_REUSEADDR` — a restarted `milo serve` must rebind its port while
+//! old connections sit in TIME_WAIT). Everything else gets a portable
+//! fallback: a short sleep that reports every socket as ready, which the
+//! nonblocking reads/writes then resolve to `WouldBlock` — correct, just
+//! not as cheap as a real poll.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use anyhow::{Context, Result};
+
+/// What the event loop wants to hear about a connection.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+/// What the poll reported for a connection.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Ready {
+    pub readable: bool,
+    pub writable: bool,
+    /// POLLERR/POLLHUP/POLLNVAL — the connection should be torn down.
+    pub error: bool,
+}
+
+/// Opaque per-socket identity handed to [`wait`]. A real file descriptor
+/// on unix; unused by the fallback path elsewhere.
+#[cfg(unix)]
+pub(crate) type SockId = i32;
+#[cfg(not(unix))]
+pub(crate) type SockId = usize;
+
+#[cfg(unix)]
+pub(crate) fn stream_id(s: &TcpStream) -> SockId {
+    use std::os::unix::io::AsRawFd;
+    s.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub(crate) fn stream_id(_s: &TcpStream) -> SockId {
+    0
+}
+
+#[cfg(unix)]
+pub(crate) fn listener_id(l: &TcpListener) -> SockId {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd()
+}
+
+#[cfg(not(unix))]
+pub(crate) fn listener_id(_l: &TcpListener) -> SockId {
+    0
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) — Linux
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        // int poll(struct pollfd *fds, nfds_t nfds, int timeout);
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+}
+
+/// Block up to `timeout_ms` until the listener or a connection is ready.
+/// Returns `(listener_readable, per-connection readiness)` with the
+/// readiness vector in the same order as `conns`. Never panics; on an
+/// unexpected poll failure it degrades to "everything ready" after a
+/// short sleep, which the nonblocking socket ops resolve safely.
+#[cfg(target_os = "linux")]
+pub(crate) fn wait(
+    listener: SockId,
+    conns: &[(SockId, Interest)],
+    timeout_ms: i32,
+) -> (bool, Vec<Ready>) {
+    let mut fds: Vec<sys::PollFd> = Vec::with_capacity(conns.len() + 1);
+    fds.push(sys::PollFd { fd: listener, events: sys::POLLIN, revents: 0 });
+    for (id, interest) in conns {
+        let mut events = 0i16;
+        if interest.read {
+            events |= sys::POLLIN;
+        }
+        if interest.write {
+            events |= sys::POLLOUT;
+        }
+        fds.push(sys::PollFd { fd: *id, events, revents: 0 });
+    }
+    loop {
+        let rc = unsafe {
+            sys::poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms)
+        };
+        if rc >= 0 {
+            break;
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() == std::io::ErrorKind::Interrupted {
+            continue; // EINTR: retry the poll
+        }
+        // Unexpected failure: degrade to the fallback semantics.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        return (true, fallback_ready(conns));
+    }
+    let listener_ready = fds[0].revents & (sys::POLLIN | sys::POLLERR) != 0;
+    let ready = fds[1..]
+        .iter()
+        .map(|f| Ready {
+            readable: f.revents & sys::POLLIN != 0,
+            writable: f.revents & sys::POLLOUT != 0,
+            error: f.revents & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
+        })
+        .collect();
+    (listener_ready, ready)
+}
+
+/// Portable fallback: sleep briefly, then report everything as ready. The
+/// nonblocking socket ops turn spurious readiness into `WouldBlock`.
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn wait(
+    _listener: SockId,
+    conns: &[(SockId, Interest)],
+    timeout_ms: i32,
+) -> (bool, Vec<Ready>) {
+    std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 5) as u64));
+    (true, fallback_ready(conns))
+}
+
+fn fallback_ready(conns: &[(SockId, Interest)]) -> Vec<Ready> {
+    conns
+        .iter()
+        .map(|(_, interest)| Ready {
+            readable: interest.read,
+            writable: interest.write,
+            error: false,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// SO_REUSEADDR listener — Linux (raw socket FFI), std elsewhere
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod sock {
+    use std::os::raw::{c_int, c_void};
+
+    pub const AF_INET: c_int = 2;
+    pub const SOCK_STREAM: c_int = 1;
+    pub const SOL_SOCKET: c_int = 1;
+    pub const SO_REUSEADDR: c_int = 2;
+
+    /// `struct sockaddr_in` (Linux): family, BE port, BE address, padding.
+    #[repr(C)]
+    pub struct SockaddrIn {
+        pub family: u16,
+        pub port: u16,
+        pub addr: u32,
+        pub zero: [u8; 8],
+    }
+
+    extern "C" {
+        pub fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        pub fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            val: *const c_void,
+            len: u32,
+        ) -> c_int;
+        pub fn bind(fd: c_int, addr: *const SockaddrIn, len: u32) -> c_int;
+        pub fn listen(fd: c_int, backlog: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// Bind a TCP listener with `SO_REUSEADDR` so a restarted server can
+/// rebind its address while prior connections drain through TIME_WAIT
+/// (the reconnect tests kill and restart a server on one port). Falls
+/// back to a plain [`TcpListener::bind`] for non-IPv4 addresses and on
+/// non-Linux targets.
+pub(crate) fn bind_reusable(addr: &str) -> Result<TcpListener> {
+    let parsed: SocketAddr = addr
+        .parse()
+        .with_context(|| format!("invalid listen address {addr:?}"))?;
+    #[cfg(target_os = "linux")]
+    {
+        if let SocketAddr::V4(v4) = parsed {
+            if let Some(listener) = bind_reusable_v4(v4) {
+                return Ok(listener);
+            }
+        }
+    }
+    TcpListener::bind(parsed).with_context(|| format!("binding {addr}"))
+}
+
+#[cfg(target_os = "linux")]
+fn bind_reusable_v4(addr: std::net::SocketAddrV4) -> Option<TcpListener> {
+    use std::os::unix::io::FromRawFd;
+    unsafe {
+        let fd = sock::socket(sock::AF_INET, sock::SOCK_STREAM, 0);
+        if fd < 0 {
+            return None;
+        }
+        let one: std::os::raw::c_int = 1;
+        if sock::setsockopt(
+            fd,
+            sock::SOL_SOCKET,
+            sock::SO_REUSEADDR,
+            &one as *const _ as *const std::ffi::c_void,
+            std::mem::size_of_val(&one) as u32,
+        ) < 0
+        {
+            sock::close(fd);
+            return None;
+        }
+        let sa = sock::SockaddrIn {
+            family: sock::AF_INET as u16,
+            port: addr.port().to_be(),
+            addr: u32::from(*addr.ip()).to_be(),
+            zero: [0; 8],
+        };
+        if sock::bind(fd, &sa, std::mem::size_of::<sock::SockaddrIn>() as u32) < 0 {
+            sock::close(fd);
+            return None;
+        }
+        if sock::listen(fd, 128) < 0 {
+            sock::close(fd);
+            return None;
+        }
+        Some(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reusable_listener_binds_and_accepts() {
+        let listener = bind_reusable("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (_conn, _) = listener.accept().unwrap();
+        drop(client);
+    }
+
+    #[test]
+    fn rebinding_after_close_succeeds() {
+        // the property SO_REUSEADDR buys: close a listener that had live
+        // connections, then immediately bind the same port again
+        let listener = bind_reusable("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (conn, _) = listener.accept().unwrap();
+        drop(conn); // server-side close first -> TIME_WAIT on the port
+        drop(listener);
+        drop(client);
+        let again = bind_reusable(&addr.to_string()).unwrap();
+        assert_eq!(again.local_addr().unwrap(), addr);
+    }
+
+    #[test]
+    fn wait_reports_listener_readiness() {
+        let listener = bind_reusable("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        // nothing pending: poll times out quickly and reports not-ready
+        // (fallback builds report ready; both are valid inputs to the loop)
+        let (_ready, conns) = wait(listener_id(&listener), &[], 10);
+        assert!(conns.is_empty());
+        // a pending connection must wake the listener within the timeout
+        let _client = TcpStream::connect(addr).unwrap();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+        loop {
+            let (ready, _) = wait(listener_id(&listener), &[], 100);
+            if ready && listener.accept().is_ok() {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "listener never woke");
+        }
+    }
+}

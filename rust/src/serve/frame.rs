@@ -1,0 +1,336 @@
+//! Length-prefixed binary frames for the `milo serve` wire protocol.
+//!
+//! The JSON-line protocol re-serializes every subset index array per
+//! request — for a 10% CIFAR-sized subset that is ~5 text bytes per index
+//! plus the envelope, parsed back to integers on the client. The frame
+//! mode (negotiated at `HELLO`, see [`crate::serve`]) sends the same
+//! payloads as raw little-endian `u32` words and ships full metadata as
+//! the [`crate::store::binfmt`] artifact encoding — the exact bytes the
+//! store persists, checksum included, so a served document is
+//! *byte-identical* to the on-disk artifact.
+//!
+//! # Layout
+//!
+//! Every frame is a 5-byte header followed by the payload:
+//!
+//! ```text
+//! len   4  u32 LE — payload length in bytes (excluding this header)
+//! kind  1  u8     — payload interpretation (below)
+//! payload  len bytes
+//! ```
+//!
+//! | kind | name | payload |
+//! |---|---|---|
+//! | 0 | `JSON`   | a UTF-8 JSON document (requests; control responses) |
+//! | 1 | `SUBSET` | `u32` subset index (`NO_INDEX` for WRE draws) + `u32` count + count×`u32` train indices |
+//! | 2 | `META`   | a complete [`crate::store::binfmt`] metadata artifact |
+//! | 3 | `ERROR`  | a UTF-8 error message |
+//!
+//! Decoding is incremental ([`FrameDecoder`] accepts arbitrary byte
+//! chunks, as delivered by a nonblocking socket) and total: a truncated
+//! buffer is `Ok(None)` (wait for more bytes), while a corrupted one — an
+//! unknown kind, an oversized or inconsistent length prefix, invalid
+//! UTF-8 — is a clean `Err`, never a panic and never an over-allocation.
+//! `encode(decode(bytes)) == bytes` for every valid frame
+//! (property-tested in `rust/tests/serve_frame_props.rs`).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Metadata;
+use crate::store::binfmt;
+
+/// Frame header size: u32 payload length + u8 kind.
+pub const HEADER_LEN: usize = 5;
+
+/// Hard ceiling on a single frame's payload — a corrupted length prefix
+/// must never drive allocation (largest real payload is a full metadata
+/// artifact, a few MB).
+pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// `SUBSET` frame index sentinel for draws that have no cycle position
+/// (WRE samples).
+pub const NO_INDEX: u32 = u32::MAX;
+
+pub const KIND_JSON: u8 = 0;
+pub const KIND_SUBSET: u8 = 1;
+pub const KIND_META: u8 = 2;
+pub const KIND_ERROR: u8 = 3;
+
+/// One decoded wire frame. `Json`/`Error` hold the raw text, `Meta` holds
+/// the raw binfmt artifact bytes (decode with [`Frame::decode_meta`]) —
+/// round-tripping a frame through encode→decode→encode is byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// A JSON document (request or control response).
+    Json(String),
+    /// A subset payload: cycle index ([`NO_INDEX`] for WRE) + train indices.
+    Subset { index: u32, indices: Vec<u32> },
+    /// A binfmt-encoded metadata artifact (the store's on-disk bytes).
+    Meta(Vec<u8>),
+    /// A protocol error message.
+    Error(String),
+}
+
+impl Frame {
+    /// Build a `META` frame from a metadata document (binfmt encoding —
+    /// versioned, length-validated, FNV-checksummed).
+    pub fn meta(meta: &Metadata) -> Frame {
+        Frame::Meta(binfmt::encode(meta))
+    }
+
+    /// Build a `SUBSET` frame from usize train indices.
+    pub fn subset(index: u32, indices: &[usize]) -> Frame {
+        Frame::Subset {
+            index,
+            indices: indices
+                .iter()
+                .map(|&i| {
+                    assert!(i <= u32::MAX as usize, "index {i} overflows u32");
+                    i as u32
+                })
+                .collect(),
+        }
+    }
+
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Json(_) => KIND_JSON,
+            Frame::Subset { .. } => KIND_SUBSET,
+            Frame::Meta(_) => KIND_META,
+            Frame::Error(_) => KIND_ERROR,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Json(_) => "JSON",
+            Frame::Subset { .. } => "SUBSET",
+            Frame::Meta(_) => "META",
+            Frame::Error(_) => "ERROR",
+        }
+    }
+
+    /// Serialize to header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let payload: Vec<u8> = match self {
+            Frame::Json(s) => s.as_bytes().to_vec(),
+            Frame::Error(s) => s.as_bytes().to_vec(),
+            Frame::Meta(bytes) => bytes.clone(),
+            Frame::Subset { index, indices } => {
+                let mut p = Vec::with_capacity(8 + 4 * indices.len());
+                p.extend_from_slice(&index.to_le_bytes());
+                p.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+                for &i in indices {
+                    p.extend_from_slice(&i.to_le_bytes());
+                }
+                p
+            }
+        };
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        write_frame_into(&mut out, self.kind(), &payload);
+        out
+    }
+
+    /// Decode the `META` payload back to a metadata document, validating
+    /// the artifact's magic, schema version, lengths, and checksum.
+    pub fn decode_meta(&self) -> Result<Metadata> {
+        match self {
+            Frame::Meta(bytes) => binfmt::decode(bytes),
+            other => bail!("expected a META frame, got {}", other.kind_name()),
+        }
+    }
+
+    /// `SUBSET` payload as usize train indices; errors on any other kind.
+    pub fn decode_subset(&self) -> Result<(u32, Vec<usize>)> {
+        match self {
+            Frame::Subset { index, indices } => {
+                Ok((*index, indices.iter().map(|&i| i as usize).collect()))
+            }
+            other => bail!("expected a SUBSET frame, got {}", other.kind_name()),
+        }
+    }
+}
+
+/// Append one framed message (header + payload) to `out` — the single
+/// place that knows the header layout. Used by [`Frame::encode`] and by
+/// the server's cached-payload fast path (which frames pre-encoded bytes
+/// without re-building a [`Frame`]).
+pub fn write_frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
+    assert!(payload.len() <= MAX_PAYLOAD, "frame payload too large");
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(payload);
+}
+
+/// Validate a frame header, returning `(payload length, kind)`. The
+/// single place that checks the length cap and kind range — used by the
+/// incremental [`FrameDecoder`] and the client's blocking reader, so the
+/// two cannot drift.
+pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(usize, u8)> {
+    let len =
+        u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+    let kind = header[4];
+    // validate before anyone waits on (or allocates for) the payload: a
+    // corrupted length or kind must fail fast
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds the {MAX_PAYLOAD} byte cap");
+    }
+    if kind > KIND_ERROR {
+        bail!("unknown frame kind {kind}");
+    }
+    Ok((len, kind))
+}
+
+/// Parse one payload of `kind` into a [`Frame`]. Total: every malformed
+/// payload is an `Err`.
+pub fn parse_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
+    match kind {
+        KIND_JSON => Ok(Frame::Json(
+            std::str::from_utf8(payload)
+                .map_err(|e| anyhow::anyhow!("JSON frame is not UTF-8: {e}"))?
+                .to_string(),
+        )),
+        KIND_ERROR => Ok(Frame::Error(
+            std::str::from_utf8(payload)
+                .map_err(|e| anyhow::anyhow!("ERROR frame is not UTF-8: {e}"))?
+                .to_string(),
+        )),
+        KIND_META => Ok(Frame::Meta(payload.to_vec())),
+        KIND_SUBSET => {
+            if payload.len() < 8 {
+                bail!("SUBSET frame too short ({} bytes)", payload.len());
+            }
+            let index = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+            let count =
+                u32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]) as usize;
+            if payload.len() != 8 + 4 * count {
+                bail!(
+                    "SUBSET frame length mismatch: {} indices declared, {} payload bytes",
+                    count,
+                    payload.len()
+                );
+            }
+            let mut indices = Vec::with_capacity(count);
+            for c in payload[8..].chunks_exact(4) {
+                indices.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Ok(Frame::Subset { index, indices })
+        }
+        other => bail!("unknown frame kind {other}"),
+    }
+}
+
+/// Incremental frame decoder: push arbitrary byte chunks (as a nonblocking
+/// socket delivers them), pull complete frames. Partial input is never an
+/// error — [`FrameDecoder::next`] returns `Ok(None)` until a full frame is
+/// buffered — while structurally invalid input (bad kind, absurd length)
+/// fails fast without waiting for the bogus payload to "complete".
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> FrameDecoder {
+        FrameDecoder { buf: Vec::new() }
+    }
+
+    /// Append raw bytes from the transport.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed by a complete frame — nonzero
+    /// at connection close means the peer died mid-frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Take the undecoded remainder (used when a connection negotiates
+    /// back to JSON-line mode mid-stream).
+    pub fn take_buffer(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Pop the next complete frame. `Ok(None)` = incomplete, wait for more
+    /// bytes; `Err` = the stream is corrupt and cannot be resynchronized.
+    pub fn next(&mut self) -> Result<Option<Frame>> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let header: [u8; HEADER_LEN] =
+            self.buf[..HEADER_LEN].try_into().expect("sliced exactly HEADER_LEN");
+        let (len, kind) = parse_header(&header)?;
+        if self.buf.len() < HEADER_LEN + len {
+            return Ok(None);
+        }
+        let frame = parse_payload(kind, &self.buf[HEADER_LEN..HEADER_LEN + len])?;
+        self.buf.drain(..HEADER_LEN + len);
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subset_roundtrip_is_byte_identical() {
+        let f = Frame::subset(2, &[0, 7, 1000, 4_000_000]);
+        let bytes = f.encode();
+        let mut d = FrameDecoder::new();
+        d.push(&bytes);
+        let back = d.next().unwrap().unwrap();
+        assert_eq!(back, f);
+        assert_eq!(back.encode(), bytes);
+        assert_eq!(d.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn split_delivery_reassembles() {
+        let f = Frame::Json("{\"cmd\":\"PING\"}".into());
+        let bytes = f.encode();
+        let mut d = FrameDecoder::new();
+        for b in &bytes[..bytes.len() - 1] {
+            d.push(&[*b]);
+            assert_eq!(d.next().unwrap(), None, "must wait for the full frame");
+        }
+        d.push(&bytes[bytes.len() - 1..]);
+        assert_eq!(d.next().unwrap().unwrap(), f);
+    }
+
+    #[test]
+    fn bad_kind_and_oversized_length_are_errors() {
+        let mut d = FrameDecoder::new();
+        d.push(&[1, 0, 0, 0, 99, 0]); // kind 99
+        assert!(d.next().is_err());
+
+        let mut d = FrameDecoder::new();
+        d.push(&[0xFF, 0xFF, 0xFF, 0xFF, KIND_JSON]); // 4 GB payload claim
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn subset_length_mismatch_is_an_error() {
+        let mut bytes = Frame::subset(0, &[1, 2, 3]).encode();
+        // shrink the payload but keep the declared index count
+        bytes.truncate(bytes.len() - 4);
+        let declared = (bytes.len() - HEADER_LEN) as u32;
+        bytes[..4].copy_from_slice(&declared.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.push(&bytes);
+        assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn non_utf8_json_frame_is_an_error() {
+        let mut out = vec![2, 0, 0, 0, KIND_JSON, 0xFF, 0xFE];
+        let mut d = FrameDecoder::new();
+        d.push(&out);
+        assert!(d.next().is_err());
+        out[4] = KIND_META; // raw bytes are fine for META
+        let mut d = FrameDecoder::new();
+        d.push(&out);
+        assert!(matches!(d.next().unwrap(), Some(Frame::Meta(_))));
+    }
+}

@@ -5,108 +5,246 @@
 //! used to train multiple models at no additional cost") becomes literal
 //! infrastructure here: one process pays for preprocessing once (via the
 //! [`crate::store`] registry), then any number of concurrent trainers /
-//! HPO trials connect and draw deterministic subset streams from it. The
-//! server is thread-per-connection over blocking TCP — no async runtime is
-//! available offline, and selection serving is tiny-message/low-QPS
-//! relative to training steps, so OS threads are the right tool.
+//! HPO trials connect and draw deterministic subset streams from it.
+//!
+//! The server is a **single poll-based event loop** over nonblocking TCP
+//! (no async runtime is vendored offline; readiness comes straight from
+//! `poll(2)` on Linux — see the private `event` module): one thread owns
+//! a registry of connections
+//! keyed by token, each with its own read/write buffers, so thousands of
+//! mostly-idle trainer connections cost a few KB apiece instead of an OS
+//! thread. One server process can serve **multiple `(dataset, fraction)`
+//! metadata entries** ([`SubsetServer::bind_multi`], `milo serve
+//! --datasets a,b --fractions 0.1,0.3`); a connection binds to one entry
+//! at `HELLO` and draws from it until the next `HELLO`.
+//!
+//! # Wire formats
+//!
+//! Every connection starts in **JSON-line mode**: one JSON object per
+//! `\n`-terminated UTF-8 line in each direction. A client that sends
+//! `"wire":"frame"` in `HELLO` switches the connection to **binary frame
+//! mode** after the (JSON-line) `HELLO` response: both directions then
+//! carry length-prefixed frames (see [`frame`]) — requests are `JSON`
+//! frames, control responses are `JSON` frames, `NEXT_SUBSET` /
+//! `SAMPLE_WRE` responses are raw-`u32` `SUBSET` frames, `GET_META`
+//! responses are `META` frames holding the exact [`crate::store::binfmt`]
+//! artifact bytes (checksum included — a served document is byte-identical
+//! to the on-disk artifact), and protocol errors are `ERROR` frames.
 //!
 //! # Protocol reference
 //!
-//! One JSON object per line (`\n`-terminated, UTF-8) in each direction.
-//! Every response carries `"ok": true` or `"ok": false` with an `"error"`
-//! string. Requests:
+//! Requests (JSON object with a `"cmd"` field, in either wire format):
 //!
 //! | request | response |
 //! |---|---|
-//! | `{"cmd":"HELLO","client":"<id>"}` | `{"ok":true,"server":"milo-serve","proto":1,"dataset":…,"n_sge_subsets":…}` — binds this connection to client id `<id>` and (re)starts its deterministic streams |
-//! | `{"cmd":"GET_META"}` | `{"ok":true,"meta":{…}}` — the full metadata document (same JSON schema as `save_metadata`) |
-//! | `{"cmd":"NEXT_SUBSET"}` | `{"ok":true,"index":i,"subset":[…]}` — the next SGE subset in this client's cycle (`index` = which pre-selected subset was served) |
-//! | `{"cmd":"SAMPLE_WRE","k":K}` | `{"ok":true,"subset":[…]}` — a fresh size-K WRE draw from this client's seeded stream |
-//! | `{"cmd":"STATS"}` | `{"ok":true,"stats":{connections,requests,subsets_served,wre_samples,store:{hits,misses,disk_loads,builds,evictions}\|null}}` |
+//! | `{"cmd":"HELLO","client":"<id>","wire":"json"\|"frame","dataset":…,"fraction":…,"resume":{"sge":N,"wre_ks":[…]}}` | `{"ok":true,"server":"milo-serve","proto":2,"dataset":…,"fraction":…,"seed":…,"seed_hex":…,"n_sge_subsets":…,"n_entries":…,"wire":…}` — binds this connection to client id `<id>` and a served entry (`dataset`/`fraction` optional; default = the first entry, entries searched in registration order), (re)starts its deterministic streams, optionally fast-forwards them past draws a reconnecting client already consumed (`resume`), and switches the wire format. `seed_hex` is the exact stream seed (the numeric `seed` rounds above 2^53) |
+//! | `{"cmd":"GET_META"}` | the bound entry's full metadata document (JSON schema of `save_metadata`, or a binfmt `META` frame) |
+//! | `{"cmd":"NEXT_SUBSET"}` | the next SGE subset in this client's cycle with its cycle `index` |
+//! | `{"cmd":"SAMPLE_WRE","k":K}` | a fresh size-K WRE draw from this client's seeded stream |
+//! | `{"cmd":"STATS"}` | serving + store counters, including `open_connections` and the served `entries` |
+//! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`, then the server closes the connection and reclaims its slot |
 //! | `{"cmd":"PING"}` | `{"ok":true}` |
+//!
+//! A malformed request (bad JSON, bad frame, unknown command) gets an
+//! `"ok":false` line / `ERROR` frame; only an unrecoverable framing error
+//! closes the connection. Clients should send `GOODBYE` before closing
+//! (the [`ServeClient`] does so on drop) — the event loop also reclaims
+//! slots on abrupt disconnect, so a crashed trainer never leaks a token.
 //!
 //! # Determinism contract
 //!
-//! Streams are keyed by `(server seed, client id)`, **not** by arrival
-//! order, so N concurrent clients never race each other's randomness:
+//! Streams are keyed by `(server seed, entry, client id)`, **not** by
+//! arrival order or wire format, so N concurrent clients never race each
+//! other's randomness and JSON/frame consumers of one id see one stream:
 //!
-//! * `NEXT_SUBSET` cycles the pre-selected SGE subsets starting at
-//!   `fnv1a64(client) % n_subsets` — distinct clients start at staggered
-//!   phases of the cycle and each client's sequence is a pure function of
-//!   its id and the metadata.
-//! * `SAMPLE_WRE` draws from `Rng::new(seed).derive_str("serve_wre")
-//!   .derive_str(client)` — an independent, non-overlapping RNG stream per
-//!   client id.
+//! * `NEXT_SUBSET` cycles the entry's pre-selected SGE subsets starting at
+//!   [`client_start_cursor`] (`fnv1a64(client) % n_subsets`) — distinct
+//!   clients start at staggered phases and each client's sequence is a
+//!   pure function of its id and the metadata.
+//! * `SAMPLE_WRE` draws from [`client_stream_rng`] — an independent,
+//!   non-overlapping RNG stream per `(entry, client id)`.
 //!
-//! Consequently a client that reconnects (or connects to a restarted
-//! server holding the same store artifact and seed) with the same id
-//! replays exactly the same stream — asserted end-to-end by
-//! `rust/tests/serve_concurrent.rs`.
+//! Consequently a client that reconnects — or connects to a restarted
+//! server holding the same store artifact and seed — with the same id
+//! replays exactly the same stream from the start, and [`ServeClient`]'s
+//! retry policy turns that replay into transparent mid-stream resume:
+//! its re-`HELLO` carries a `resume` hint and the server fast-forwards
+//! the streams server-side, so no already-consumed payload crosses the
+//! wire twice. Asserted end-to-end by `rust/tests/serve_concurrent.rs`,
+//! `rust/tests/serve_stress.rs`, and `rust/tests/serve_reconnect.rs`.
 
 pub mod client;
+pub(crate) mod event;
+pub mod frame;
 
-pub use client::{ServeClient, ServedMiloStrategy};
+pub use client::{ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy};
+pub use frame::{Frame, FrameDecoder};
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Result};
 
 use crate::coordinator::{metadata_to_json, Metadata};
 use crate::selection::WreStrategy;
-use crate::store::{fnv1a64, MetaStore, StoreStats};
+use crate::store::{binfmt, fnv1a64, MetaStore, StoreStats};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Wire-protocol version, bumped on incompatible changes.
-pub const PROTO_VERSION: u32 = 1;
+/// Wire-protocol version, bumped on incompatible changes. v2 = binary
+/// frame negotiation + multi-entry routing + `GOODBYE`.
+pub const PROTO_VERSION: u32 = 2;
+
+/// Ceiling on a single buffered request (line or partial frame) — a
+/// misbehaving client must not grow server memory without bound.
+const MAX_REQUEST_BYTES: usize = 16 << 20;
+
+/// Ceiling on a connection's queued outbound bytes. A client that
+/// pipelines requests without reading responses stops being read once
+/// its responses back up (TCP backpressure), and is torn down if a
+/// single processing burst still overshoots this cap — server memory
+/// stays bounded per connection.
+const MAX_WBUF_BYTES: usize = 64 << 20;
+
+/// Poll timeout: bounds shutdown latency, not request latency (readiness
+/// wakes the loop immediately).
+const POLL_TIMEOUT_MS: i32 = 50;
+
+/// Hard ceiling on the `resume.wre_ks` fast-forward list a single `HELLO`
+/// may carry. The effective per-entry cap is work-based — each replayed
+/// draw costs O(population), so the allowed draw count is
+/// `MAX_RESUME_WORK / population`, clamped by this constant — bounding
+/// the synchronous replay one reconnect can put on the shared event-loop
+/// thread to roughly a second. A trainer draws one WRE subset per epoch,
+/// so real sessions sit orders of magnitude below either bound.
+const MAX_RESUME_DRAWS: usize = 100_000;
+
+/// Work budget (in per-point units) for one resume fast-forward.
+const MAX_RESUME_WORK: u64 = 1 << 30;
+
+/// Wire format of a connection (negotiated at `HELLO`; see the
+/// [module docs](self)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireMode {
+    /// One JSON object per `\n`-terminated line (the default).
+    Json,
+    /// Length-prefixed binary frames (see [`frame`]).
+    Frame,
+}
+
+impl Default for WireMode {
+    fn default() -> Self {
+        WireMode::Json
+    }
+}
+
+impl WireMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireMode::Json => "json",
+            WireMode::Frame => "frame",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<WireMode> {
+        match name {
+            "json" => Ok(WireMode::Json),
+            "frame" => Ok(WireMode::Frame),
+            other => anyhow::bail!("unknown wire mode {other:?} (expected json|frame)"),
+        }
+    }
+}
+
+/// The deterministic WRE stream for `(seed, entry, client id)` — the
+/// server draws `SAMPLE_WRE` responses from exactly this generator, in
+/// request order. Public so tests (and suspicious clients) can reproduce
+/// a served stream inline from the shared metadata.
+pub fn client_stream_rng(seed: u64, meta: &Metadata, client: &str) -> Rng {
+    Rng::new(seed)
+        .derive_str("serve_wre")
+        .derive_str(&meta.dataset)
+        .derive(meta.fraction.to_bits())
+        .derive_str(client)
+}
+
+/// Where `client`'s SGE cycle starts in `meta.sge_subsets` — clients are
+/// staggered across the cycle by a hash of their id.
+pub fn client_start_cursor(meta: &Metadata, client: &str) -> usize {
+    let n = meta.sge_subsets.len().max(1);
+    (fnv1a64(client.as_bytes()) % n as u64) as usize
+}
 
 /// Serving counters (reported by `STATS`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
+    /// Total connections accepted over the server's lifetime.
     pub connections: u64,
+    /// Connections currently open (a gauge — the "no leaked slots"
+    /// number the goodbye tests assert on).
+    pub open_connections: u64,
     pub requests: u64,
     pub subsets_served: u64,
     pub wre_samples: u64,
+    /// `GOODBYE`s received (graceful closes).
+    pub goodbyes: u64,
+    pub bytes_rx: u64,
+    pub bytes_tx: u64,
 }
 
 struct Shared {
-    meta: Arc<Metadata>,
+    entries: Vec<Arc<Metadata>>,
+    /// Per-entry binfmt artifact bytes, encoded once at bind: `GET_META`
+    /// in frame mode serves these without re-encoding on the event-loop
+    /// thread. `None` = the entry cannot travel as a `META` frame (not
+    /// binfmt-encodable or above the frame cap); frame-mode clients get
+    /// an error directing them to the JSON wire.
+    encoded: Vec<Option<Vec<u8>>>,
     seed: u64,
     store: Option<MetaStore>,
     shutdown: AtomicBool,
     connections: AtomicU64,
+    open_connections: AtomicU64,
     requests: AtomicU64,
     subsets_served: AtomicU64,
     wre_samples: AtomicU64,
+    goodbyes: AtomicU64,
+    bytes_rx: AtomicU64,
+    bytes_tx: AtomicU64,
 }
 
 impl Shared {
     fn stats(&self) -> ServeStats {
         ServeStats {
             connections: self.connections.load(Ordering::Relaxed),
+            open_connections: self.open_connections.load(Ordering::Relaxed),
             requests: self.requests.load(Ordering::Relaxed),
             subsets_served: self.subsets_served.load(Ordering::Relaxed),
             wre_samples: self.wre_samples.load(Ordering::Relaxed),
+            goodbyes: self.goodbyes.load(Ordering::Relaxed),
+            bytes_rx: self.bytes_rx.load(Ordering::Relaxed),
+            bytes_tx: self.bytes_tx.load(Ordering::Relaxed),
         }
     }
 }
 
-/// A running subset server. Bind with [`SubsetServer::bind`], read the
-/// actual address with [`addr`](SubsetServer::addr) (pass port 0 for an
-/// ephemeral port), stop with [`shutdown`](SubsetServer::shutdown) or block
-/// forever with [`run_forever`](SubsetServer::run_forever).
+/// A running subset server. Bind with [`SubsetServer::bind`] (one entry)
+/// or [`SubsetServer::bind_multi`] (one process, many `(dataset,
+/// fraction)` entries), read the actual address with
+/// [`addr`](SubsetServer::addr) (pass port 0 for an ephemeral port), stop
+/// with [`shutdown`](SubsetServer::shutdown) or block forever with
+/// [`run_forever`](SubsetServer::run_forever).
 pub struct SubsetServer {
     addr: SocketAddr,
     shared: Arc<Shared>,
-    accept: Option<JoinHandle<()>>,
+    event_loop: Option<JoinHandle<()>>,
 }
 
 impl SubsetServer {
-    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and start accepting connections.
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) serving a single metadata entry.
     /// `store` is optional and only used to report store statistics over
     /// `STATS`.
     pub fn bind(
@@ -115,22 +253,59 @@ impl SubsetServer {
         store: Option<MetaStore>,
         seed: u64,
     ) -> Result<SubsetServer> {
-        let listener =
-            TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        SubsetServer::bind_multi(addr, vec![meta], store, seed)
+    }
+
+    /// Bind `addr` serving several `(dataset, fraction)` entries from one
+    /// event loop. Clients route with the `dataset`/`fraction` fields of
+    /// `HELLO`; entry 0 is the default for clients that name neither.
+    pub fn bind_multi(
+        addr: &str,
+        entries: Vec<Arc<Metadata>>,
+        store: Option<MetaStore>,
+        seed: u64,
+    ) -> Result<SubsetServer> {
+        ensure!(!entries.is_empty(), "a subset server needs at least one entry");
+        for (i, a) in entries.iter().enumerate() {
+            for b in entries.iter().skip(i + 1) {
+                ensure!(
+                    a.dataset != b.dataset || (a.fraction - b.fraction).abs() > 1e-9,
+                    "duplicate served entry {}@{} — routing would be ambiguous",
+                    a.dataset,
+                    a.fraction,
+                );
+            }
+        }
+        let listener = event::bind_reusable(addr)?;
         let local = listener.local_addr()?;
+        // pay each entry's artifact encoding once, up front — never per
+        // GET_META on the event-loop thread
+        let encoded = entries
+            .iter()
+            .map(|m| {
+                binfmt::try_encode(m)
+                    .ok()
+                    .filter(|bytes| bytes.len() <= frame::MAX_PAYLOAD)
+            })
+            .collect();
         let shared = Arc::new(Shared {
-            meta,
+            entries,
+            encoded,
             seed,
             store,
             shutdown: AtomicBool::new(false),
             connections: AtomicU64::new(0),
+            open_connections: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             subsets_served: AtomicU64::new(0),
             wre_samples: AtomicU64::new(0),
+            goodbyes: AtomicU64::new(0),
+            bytes_rx: AtomicU64::new(0),
+            bytes_tx: AtomicU64::new(0),
         });
-        let accept_shared = shared.clone();
-        let accept = std::thread::spawn(move || accept_loop(listener, accept_shared));
-        Ok(SubsetServer { addr: local, shared, accept: Some(accept) })
+        let loop_shared = shared.clone();
+        let event_loop = std::thread::spawn(move || event_loop(listener, loop_shared));
+        Ok(SubsetServer { addr: local, shared, event_loop: Some(event_loop) })
     }
 
     pub fn addr(&self) -> SocketAddr {
@@ -141,50 +316,421 @@ impl SubsetServer {
         self.shared.stats()
     }
 
-    /// Block the calling thread until the accept loop exits (the `milo
+    /// The `(dataset, fraction)` entries this server routes between.
+    pub fn entries(&self) -> Vec<(String, f64)> {
+        self.shared
+            .entries
+            .iter()
+            .map(|m| (m.dataset.clone(), m.fraction))
+            .collect()
+    }
+
+    /// Block the calling thread until the event loop exits (the `milo
     /// serve` subcommand's steady state).
     pub fn run_forever(mut self) {
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
     }
 
-    /// Stop accepting connections and join the accept thread. Connections
-    /// already open are served until their client disconnects.
+    /// Stop the event loop and join it. Open connections are closed.
     pub fn shutdown(mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        // Unblock the accept loop with a throwaway connection.
+        // Unblock the poll with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.accept.take() {
+        if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
     }
 }
 
-fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
-    for conn in listener.incoming() {
+// ---------------------------------------------------------------------------
+// The event loop
+// ---------------------------------------------------------------------------
+
+fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
+    if listener.set_nonblocking(true).is_err() {
+        eprintln!("[serve] listener set_nonblocking failed; server exiting");
+        return;
+    }
+    let listener_id = event::listener_id(&listener);
+    let mut conns: HashMap<usize, Conn> = HashMap::new();
+    let mut next_token: usize = 0;
+    loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        match conn {
-            Ok(stream) => {
-                shared.connections.fetch_add(1, Ordering::Relaxed);
-                let conn_shared = shared.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_connection(stream, conn_shared);
-                });
+        let tokens: Vec<usize> = conns.keys().copied().collect();
+        let poll_set: Vec<(event::SockId, event::Interest)> = tokens
+            .iter()
+            .map(|t| {
+                let c = &conns[t];
+                let interest = event::Interest {
+                    // stop reading a client whose responses are backed up
+                    // (outbound cap) — TCP backpressure does the rest
+                    read: !c.closing && c.wbuf.len() - c.wpos < MAX_WBUF_BYTES,
+                    write: c.wpos < c.wbuf.len(),
+                };
+                (c.id, interest)
+            })
+            .collect();
+        let (listener_ready, ready) = event::wait(listener_id, &poll_set, POLL_TIMEOUT_MS);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // don't accept the shutdown wake-up connection
+        }
+        if listener_ready {
+            accept_new(&listener, &mut conns, &mut next_token, &shared);
+        }
+        for (t, r) in tokens.iter().zip(ready) {
+            let Some(conn) = conns.get_mut(t) else { continue };
+            // read before honouring an error condition: a peer that sent
+            // GOODBYE and hung up still gets its goodbye processed (the
+            // read itself surfaces the reset if the data is gone)
+            if (r.readable || r.error) && !conn.dead && !conn.closing {
+                conn.read_ready(&shared);
             }
+            if r.error {
+                conn.dead = true;
+            }
+            if !conn.dead && conn.wpos < conn.wbuf.len() {
+                conn.write_ready(&shared);
+            }
+            if conn.closing && conn.wpos >= conn.wbuf.len() {
+                conn.dead = true;
+            }
+        }
+        conns.retain(|_, c| {
+            if c.dead {
+                shared.open_connections.fetch_sub(1, Ordering::Relaxed);
+            }
+            !c.dead
+        });
+    }
+    let remaining = conns.len() as u64;
+    if remaining > 0 {
+        shared.open_connections.fetch_sub(remaining, Ordering::Relaxed);
+    }
+}
+
+fn accept_new(
+    listener: &TcpListener,
+    conns: &mut HashMap<usize, Conn>,
+    next_token: &mut usize,
+    shared: &Arc<Shared>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                shared.connections.fetch_add(1, Ordering::Relaxed);
+                shared.open_connections.fetch_add(1, Ordering::Relaxed);
+                let token = *next_token;
+                *next_token += 1;
+                conns.insert(token, Conn::new(stream, shared));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => {
+                // a persistent error (e.g. EMFILE under fd exhaustion)
+                // leaves the backlog poll-ready forever — back off briefly
+                // so the loop doesn't hot-spin and flood stderr
                 eprintln!("[serve] accept error: {e}");
+                std::thread::sleep(std::time::Duration::from_millis(50));
+                break;
             }
         }
     }
 }
+
+/// One registered connection: nonblocking stream + read/write buffers +
+/// negotiated wire format + deterministic stream state.
+struct Conn {
+    stream: TcpStream,
+    id: event::SockId,
+    /// Inbound bytes awaiting a complete JSON line (JSON-line mode).
+    rbuf: Vec<u8>,
+    /// Inbound frame reassembly (frame mode).
+    decoder: FrameDecoder,
+    /// Outbound bytes not yet written; `wpos` marks the flushed prefix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    wire: WireMode,
+    session: Session,
+    /// Flush the write buffer, then close (set by `GOODBYE` / protocol
+    /// errors).
+    closing: bool,
+    /// Tear down on the next sweep.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, shared: &Shared) -> Conn {
+        let id = event::stream_id(&stream);
+        Conn {
+            stream,
+            id,
+            rbuf: Vec::new(),
+            decoder: FrameDecoder::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            wire: WireMode::Json,
+            session: Session::new("anon", 0, shared),
+            closing: false,
+            dead: false,
+        }
+    }
+
+    fn read_ready(&mut self, shared: &Shared) {
+        let mut chunk = [0u8; 8192];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    shared.bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                    match self.wire {
+                        WireMode::Json => self.rbuf.extend_from_slice(&chunk[..n]),
+                        WireMode::Frame => self.decoder.push(&chunk[..n]),
+                    }
+                    self.process_pending(shared);
+                    if self.closing || self.dead {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    fn write_ready(&mut self, shared: &Shared) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    shared.bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                    self.wpos += n;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if self.wpos >= self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+
+    /// Drain every complete message buffered so far, appending responses
+    /// to the write buffer.
+    fn process_pending(&mut self, shared: &Shared) {
+        loop {
+            if self.closing || self.dead {
+                return;
+            }
+            if self.wbuf.len() - self.wpos > MAX_WBUF_BYTES {
+                // the client pipelined far past its read rate: one burst
+                // overshot the outbound cap even with reads gated off
+                self.dead = true;
+                return;
+            }
+            match self.wire {
+                WireMode::Json => {
+                    let Some(nl) = self.rbuf.iter().position(|&b| b == b'\n') else {
+                        if self.rbuf.len() > MAX_REQUEST_BYTES {
+                            self.push_reply(
+                                Err("request line exceeds the size cap".to_string()),
+                                shared,
+                            );
+                            self.closing = true;
+                        }
+                        return;
+                    };
+                    let line: Vec<u8> = self.rbuf.drain(..=nl).collect();
+                    let text = String::from_utf8_lossy(&line[..nl]).into_owned();
+                    if text.trim().is_empty() {
+                        continue;
+                    }
+                    shared.requests.fetch_add(1, Ordering::Relaxed);
+                    let reply = match Json::parse(&text) {
+                        Ok(req) => {
+                            handle_request(&req, &mut self.session, self.wire, shared)
+                        }
+                        Err(e) => Err(format!("bad request json: {e:#}")),
+                    };
+                    self.push_reply(reply, shared);
+                }
+                WireMode::Frame => match self.decoder.next() {
+                    Ok(None) => {
+                        if self.decoder.pending_bytes() > MAX_REQUEST_BYTES {
+                            self.push_reply(
+                                Err("frame exceeds the size cap".to_string()),
+                                shared,
+                            );
+                            self.closing = true;
+                        }
+                        return;
+                    }
+                    Ok(Some(Frame::Json(text))) => {
+                        shared.requests.fetch_add(1, Ordering::Relaxed);
+                        let reply = match Json::parse(&text) {
+                            Ok(req) => {
+                                handle_request(&req, &mut self.session, self.wire, shared)
+                            }
+                            Err(e) => Err(format!("bad request json: {e:#}")),
+                        };
+                        self.push_reply(reply, shared);
+                    }
+                    Ok(Some(other)) => {
+                        // requests must be JSON frames; anything else is a
+                        // protocol violation we cannot resynchronize from
+                        self.push_reply(
+                            Err(format!(
+                                "requests must be JSON frames, got {}",
+                                other.kind_name()
+                            )),
+                            shared,
+                        );
+                        self.closing = true;
+                    }
+                    Err(e) => {
+                        self.push_reply(Err(format!("bad frame: {e:#}")), shared);
+                        self.closing = true;
+                    }
+                },
+            }
+        }
+    }
+
+    fn push_reply(&mut self, reply: Result<Reply, String>, shared: &Shared) {
+        match reply {
+            Ok(Reply::Fields(fields)) => self.push_ok(fields),
+            Ok(Reply::Hello { fields, switch }) => {
+                // the HELLO response travels in the *old* wire format;
+                // everything after it speaks the negotiated one
+                self.push_ok(fields);
+                self.switch_wire(switch);
+            }
+            Ok(Reply::Subset { index, subset }) => match self.wire {
+                WireMode::Json => {
+                    let mut fields: Vec<(&str, Json)> = Vec::new();
+                    if index != frame::NO_INDEX {
+                        fields.push(("index", Json::num(index as f64)));
+                    }
+                    fields.push(("subset", indices_json(&subset)));
+                    self.push_ok(fields);
+                }
+                WireMode::Frame => {
+                    // pre-validate so a pathological artifact degrades to a
+                    // per-connection error frame, never a panic that would
+                    // take the whole event loop down
+                    let fits = subset.len() <= (frame::MAX_PAYLOAD - 8) / 4
+                        && subset.iter().all(|&i| i <= u32::MAX as usize);
+                    if fits {
+                        self.push_frame(&Frame::subset(index, &subset));
+                    } else {
+                        self.push_frame(&Frame::Error(
+                            "subset does not fit a binary frame — use the JSON wire"
+                                .to_string(),
+                        ));
+                    }
+                }
+            },
+            Ok(Reply::Meta(entry)) => match self.wire {
+                WireMode::Json => {
+                    let meta = &shared.entries[entry];
+                    self.push_ok(vec![("meta", metadata_to_json(meta))]);
+                }
+                // the artifact bytes were encoded (and size/contract
+                // checked) once at bind — frame them straight into the
+                // write buffer, no per-request re-encode and no panic path
+                WireMode::Frame => match &shared.encoded[entry] {
+                    Some(bytes) => {
+                        frame::write_frame_into(&mut self.wbuf, frame::KIND_META, bytes);
+                    }
+                    None => {
+                        self.push_frame(&Frame::Error(
+                            "metadata cannot travel as a META frame (not \
+                             binfmt-encodable or above the frame cap) — use \
+                             the JSON wire"
+                                .to_string(),
+                        ));
+                    }
+                },
+            },
+            Ok(Reply::Goodbye) => {
+                shared.goodbyes.fetch_add(1, Ordering::Relaxed);
+                self.push_ok(vec![("goodbye", Json::Bool(true))]);
+                self.closing = true;
+            }
+            Err(msg) => match self.wire {
+                WireMode::Json => self.push_line(&err_response(&msg).to_string()),
+                WireMode::Frame => self.push_frame(&Frame::Error(msg)),
+            },
+        }
+    }
+
+    fn push_ok(&mut self, fields: Vec<(&str, Json)>) {
+        let doc = ok_response(fields).to_string();
+        match self.wire {
+            WireMode::Json => self.push_line(&doc),
+            WireMode::Frame => self.push_frame(&Frame::Json(doc)),
+        }
+    }
+
+    fn push_line(&mut self, text: &str) {
+        self.wbuf.extend_from_slice(text.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    fn push_frame(&mut self, f: &Frame) {
+        self.wbuf.extend_from_slice(&f.encode());
+    }
+
+    fn switch_wire(&mut self, to: WireMode) {
+        if self.wire == to {
+            return;
+        }
+        // migrate any pipelined inbound bytes to the new format's buffer
+        match to {
+            WireMode::Frame => {
+                let leftover: Vec<u8> = self.rbuf.drain(..).collect();
+                self.decoder.push(&leftover);
+            }
+            WireMode::Json => {
+                self.rbuf.extend_from_slice(&self.decoder.take_buffer());
+            }
+        }
+        self.wire = to;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Request dispatch
+// ---------------------------------------------------------------------------
 
 /// Per-connection deterministic stream state, (re)initialized by `HELLO`.
 struct Session {
     client: String,
-    /// Absolute position in the SGE subset cycle.
+    /// Index into `Shared::entries` this connection is bound to.
+    entry: usize,
+    /// Absolute position in the entry's SGE subset cycle.
     cursor: usize,
     /// WRE sampler, built on first `SAMPLE_WRE` — connections that only
     /// `GET_META` or draw SGE subsets never pay the O(n_train)
@@ -194,16 +740,251 @@ struct Session {
 }
 
 impl Session {
-    fn new(client: &str, shared: &Shared) -> Session {
-        let n = shared.meta.sge_subsets.len().max(1);
+    fn new(client: &str, entry: usize, shared: &Shared) -> Session {
+        let meta = &shared.entries[entry];
         Session {
             client: client.to_string(),
-            cursor: (fnv1a64(client.as_bytes()) % n as u64) as usize,
+            entry,
+            cursor: client_start_cursor(meta, client),
             wre: None,
-            rng: Rng::new(shared.seed)
-                .derive_str("serve_wre")
-                .derive_str(client),
+            rng: client_stream_rng(shared.seed, meta, client),
         }
+    }
+}
+
+/// What a request produced; the connection encodes it per wire format.
+enum Reply {
+    /// Control response fields (`ok:true` is prepended at encode time).
+    Fields(Vec<(&'static str, Json)>),
+    /// HELLO response + the wire format to switch to afterwards.
+    Hello {
+        fields: Vec<(&'static str, Json)>,
+        switch: WireMode,
+    },
+    /// A subset payload (`index == frame::NO_INDEX` for WRE draws).
+    Subset { index: u32, subset: Vec<usize> },
+    /// The bound entry's full metadata document (by entry index — the
+    /// encoder picks the cached bytes or the JSON form).
+    Meta(usize),
+    /// Acknowledge and close.
+    Goodbye,
+}
+
+fn find_entry(
+    shared: &Shared,
+    dataset: Option<&str>,
+    fraction: Option<f64>,
+) -> Result<usize, String> {
+    if dataset.is_none() && fraction.is_none() {
+        return Ok(0);
+    }
+    for (i, m) in shared.entries.iter().enumerate() {
+        if let Some(ds) = dataset {
+            if m.dataset != ds {
+                continue;
+            }
+        }
+        if let Some(f) = fraction {
+            if (m.fraction - f).abs() > 1e-9 {
+                continue;
+            }
+        }
+        return Ok(i);
+    }
+    let served: Vec<String> = shared
+        .entries
+        .iter()
+        .map(|m| format!("{}@{}", m.dataset, m.fraction))
+        .collect();
+    Err(format!(
+        "no served entry for dataset {} fraction {}; serving: {}",
+        dataset.map(|d| format!("{d:?}")).unwrap_or_else(|| "<any>".to_string()),
+        fraction.map(|f| f.to_string()).unwrap_or_else(|| "<any>".to_string()),
+        served.join(", "),
+    ))
+}
+
+fn handle_request(
+    request: &Json,
+    session: &mut Session,
+    wire: WireMode,
+    shared: &Shared,
+) -> Result<Reply, String> {
+    let cmd = match request.get("cmd").and_then(|c| Ok(c.as_str()?.to_string())) {
+        Ok(c) => c,
+        Err(_) => return Err("request needs a string \"cmd\" field".to_string()),
+    };
+    match cmd.as_str() {
+        "HELLO" => {
+            let client = request
+                .opt("client")
+                .and_then(|c| c.as_str().ok())
+                .unwrap_or("anon");
+            let switch = match request.opt("wire").and_then(|w| w.as_str().ok()) {
+                None => wire,
+                Some(name) => WireMode::parse(name).map_err(|e| format!("{e:#}"))?,
+            };
+            let dataset = request.opt("dataset").and_then(|d| d.as_str().ok());
+            let fraction = request.opt("fraction").and_then(|f| f.as_f64().ok());
+            let entry = find_entry(shared, dataset, fraction)?;
+            *session = Session::new(client, entry, shared);
+            let meta = &shared.entries[entry];
+            // `resume`: fast-forward the deterministic streams past draws a
+            // reconnecting client already consumed — one request, no subset
+            // payload re-transfer (the streams are pure functions of the
+            // session key, so skipping ahead here is exact)
+            if let Some(resume) = request.opt("resume") {
+                let sge = match resume.opt("sge") {
+                    None => 0,
+                    Some(x) => x
+                        .as_usize()
+                        .map_err(|_| "resume.sge must be a non-negative integer")?,
+                };
+                // only cursor % n is observable, so advance modulo the
+                // cycle — immune to an absurd (overflowing) hint
+                let n = meta.sge_subsets.len().max(1);
+                session.cursor = (session.cursor % n) + (sge % n);
+                if let Some(ks) = resume.opt("wre_ks") {
+                    let ks = ks
+                        .as_arr()
+                        .map_err(|_| "resume.wre_ks must be an array".to_string())?;
+                    let population = wre_population(meta);
+                    // each replayed draw costs O(population) regardless of
+                    // k, so cap the *work* (draws × population), not just
+                    // the count — one HELLO must never stall the shared
+                    // event-loop thread for more than ~a second
+                    let max_draws = (MAX_RESUME_WORK / population.max(1) as u64)
+                        .min(MAX_RESUME_DRAWS as u64) as usize;
+                    if ks.len() > max_draws {
+                        return Err(format!(
+                            "resume.wre_ks has {} entries, above this entry's \
+                             {} cap — the stream is too old to resume; \
+                             restart it",
+                            ks.len(),
+                            max_draws,
+                        ));
+                    }
+                    let wre = session.wre.get_or_insert_with(|| {
+                        WreStrategy::new("serve_wre", meta.wre_classes.clone())
+                    });
+                    for k in ks {
+                        match k.as_usize() {
+                            Ok(k) if k > 0 && k <= population => {
+                                let _ = wre.sample_k(k, &mut session.rng);
+                            }
+                            _ => {
+                                return Err(format!(
+                                    "resume.wre_ks must be positive integers \
+                                     within the served population ({population})"
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(Reply::Hello {
+                fields: vec![
+                    ("server", Json::str("milo-serve")),
+                    ("proto", Json::num(PROTO_VERSION as f64)),
+                    ("dataset", Json::str(meta.dataset.clone())),
+                    ("fraction", Json::num(meta.fraction)),
+                    // the stream seed — clients verify it against their own
+                    // configuration (a mismatched server would silently hand
+                    // out selections for a different dataset instantiation).
+                    // `seed_hex` is the exact value; the numeric field is
+                    // kept for human readers but rounds above 2^53.
+                    ("seed", Json::num(shared.seed as f64)),
+                    ("seed_hex", Json::str(format!("{:016x}", shared.seed))),
+                    ("n_sge_subsets", Json::num(meta.sge_subsets.len() as f64)),
+                    ("n_entries", Json::num(shared.entries.len() as f64)),
+                    ("wire", Json::str(switch.name())),
+                ],
+                switch,
+            })
+        }
+        "GET_META" => Ok(Reply::Meta(session.entry)),
+        "NEXT_SUBSET" => {
+            let meta = &shared.entries[session.entry];
+            let n = meta.sge_subsets.len();
+            if n == 0 {
+                return Err("metadata has no SGE subsets".to_string());
+            }
+            let index = session.cursor % n;
+            session.cursor += 1;
+            shared.subsets_served.fetch_add(1, Ordering::Relaxed);
+            Ok(Reply::Subset {
+                index: index as u32,
+                subset: meta.sge_subsets[index].clone(),
+            })
+        }
+        "SAMPLE_WRE" => {
+            let k = match request.get("k").and_then(|k| k.as_usize()) {
+                Ok(k) if k > 0 => k,
+                _ => {
+                    return Err(
+                        "SAMPLE_WRE needs a positive integer \"k\"".to_string()
+                    )
+                }
+            };
+            let meta = &shared.entries[session.entry];
+            // reject k beyond the served population before sampling: an
+            // absurd k must cost this client an error response, never an
+            // allocation (or panic) on the shared event-loop thread
+            let population = wre_population(meta);
+            if k > population {
+                return Err(format!(
+                    "SAMPLE_WRE k={k} exceeds the served population {population}"
+                ));
+            }
+            let wre = session.wre.get_or_insert_with(|| {
+                WreStrategy::new("serve_wre", meta.wre_classes.clone())
+            });
+            let subset = wre.sample_k(k, &mut session.rng);
+            shared.wre_samples.fetch_add(1, Ordering::Relaxed);
+            Ok(Reply::Subset { index: frame::NO_INDEX, subset })
+        }
+        "STATS" => {
+            let s = shared.stats();
+            let store = match &shared.store {
+                Some(st) => store_stats_json(st.stats()),
+                None => Json::Null,
+            };
+            let entries = Json::arr(
+                shared
+                    .entries
+                    .iter()
+                    .map(|m| {
+                        Json::obj(vec![
+                            ("dataset", Json::str(m.dataset.clone())),
+                            ("fraction", Json::num(m.fraction)),
+                        ])
+                    })
+                    .collect(),
+            );
+            Ok(Reply::Fields(vec![(
+                "stats",
+                Json::obj(vec![
+                    ("connections", Json::num(s.connections as f64)),
+                    ("open_connections", Json::num(s.open_connections as f64)),
+                    ("requests", Json::num(s.requests as f64)),
+                    ("subsets_served", Json::num(s.subsets_served as f64)),
+                    ("wre_samples", Json::num(s.wre_samples as f64)),
+                    ("goodbyes", Json::num(s.goodbyes as f64)),
+                    ("bytes_rx", Json::num(s.bytes_rx as f64)),
+                    ("bytes_tx", Json::num(s.bytes_tx as f64)),
+                    (
+                        "dataset",
+                        Json::str(shared.entries[session.entry].dataset.clone()),
+                    ),
+                    ("entries", entries),
+                    ("client", Json::str(session.client.clone())),
+                    ("store", store),
+                ]),
+            )]))
+        }
+        "GOODBYE" => Ok(Reply::Goodbye),
+        "PING" => Ok(Reply::Fields(vec![])),
+        other => Err(format!("unknown cmd {other:?}")),
     }
 }
 
@@ -230,104 +1011,9 @@ fn indices_json(idx: &[usize]) -> Json {
     Json::arr(idx.iter().map(|&i| Json::num(i as f64)).collect())
 }
 
-fn dispatch(request: &Json, session: &mut Session, shared: &Shared) -> Json {
-    let cmd = match request.get("cmd").and_then(|c| Ok(c.as_str()?.to_string())) {
-        Ok(c) => c,
-        Err(_) => return err_response("request needs a string \"cmd\" field"),
-    };
-    match cmd.as_str() {
-        "HELLO" => {
-            let client = request
-                .opt("client")
-                .and_then(|c| c.as_str().ok())
-                .unwrap_or("anon");
-            *session = Session::new(client, shared);
-            ok_response(vec![
-                ("server", Json::str("milo-serve")),
-                ("proto", Json::num(PROTO_VERSION as f64)),
-                ("dataset", Json::str(shared.meta.dataset.clone())),
-                // the stream seed — clients verify it against their own
-                // configuration (a mismatched server would silently hand
-                // out selections for a different dataset instantiation)
-                ("seed", Json::num(shared.seed as f64)),
-                (
-                    "n_sge_subsets",
-                    Json::num(shared.meta.sge_subsets.len() as f64),
-                ),
-            ])
-        }
-        "GET_META" => ok_response(vec![("meta", metadata_to_json(&shared.meta))]),
-        "NEXT_SUBSET" => {
-            let n = shared.meta.sge_subsets.len();
-            if n == 0 {
-                return err_response("metadata has no SGE subsets");
-            }
-            let index = session.cursor % n;
-            session.cursor += 1;
-            shared.subsets_served.fetch_add(1, Ordering::Relaxed);
-            ok_response(vec![
-                ("index", Json::num(index as f64)),
-                ("subset", indices_json(&shared.meta.sge_subsets[index])),
-            ])
-        }
-        "SAMPLE_WRE" => {
-            let k = match request.get("k").and_then(|k| k.as_usize()) {
-                Ok(k) if k > 0 => k,
-                _ => return err_response("SAMPLE_WRE needs a positive integer \"k\""),
-            };
-            let wre = session.wre.get_or_insert_with(|| {
-                WreStrategy::new("serve_wre", shared.meta.wre_classes.clone())
-            });
-            let subset = wre.sample_k(k, &mut session.rng);
-            shared.wre_samples.fetch_add(1, Ordering::Relaxed);
-            ok_response(vec![("subset", indices_json(&subset))])
-        }
-        "STATS" => {
-            let s = shared.stats();
-            let store = match &shared.store {
-                Some(st) => store_stats_json(st.stats()),
-                None => Json::Null,
-            };
-            ok_response(vec![(
-                "stats",
-                Json::obj(vec![
-                    ("connections", Json::num(s.connections as f64)),
-                    ("requests", Json::num(s.requests as f64)),
-                    ("subsets_served", Json::num(s.subsets_served as f64)),
-                    ("wre_samples", Json::num(s.wre_samples as f64)),
-                    ("dataset", Json::str(shared.meta.dataset.clone())),
-                    ("client", Json::str(session.client.clone())),
-                    ("store", store),
-                ]),
-            )])
-        }
-        "PING" => ok_response(vec![]),
-        other => err_response(&format!("unknown cmd {other:?}")),
-    }
+/// Total points the entry's WRE distribution covers — the largest `k` a
+/// draw (or a resume fast-forward) may legitimately request.
+fn wre_population(meta: &Metadata) -> usize {
+    meta.wre_classes.iter().map(|c| c.indices.len()).sum()
 }
 
-fn handle_connection(stream: TcpStream, shared: Arc<Shared>) -> Result<()> {
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut session = Session::new("anon", &shared);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break, // client went away
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        shared.requests.fetch_add(1, Ordering::Relaxed);
-        let response = match Json::parse(&line) {
-            Ok(req) => dispatch(&req, &mut session, &shared),
-            Err(e) => err_response(&format!("bad request json: {e:#}")),
-        };
-        let mut out = response.to_string();
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
-            break;
-        }
-    }
-    Ok(())
-}

@@ -15,7 +15,7 @@
 //!   |---|---|
 //!   | [`MetaSource::Inline`]  | run the configured preprocessing pipeline (kernel or feature-based) in-process — always a fresh pass |
 //!   | [`MetaSource::Store`]   | in-process LRU → on-disk binary artifact → build via the pipeline (once per fingerprint, across threads) |
-//!   | [`MetaSource::Remote`]  | `GET_META` from a running `milo serve` instance — never builds locally |
+//!   | [`MetaSource::Remote`]  | `GET_META` from a running `milo serve` instance (binary frame wire by default — the exact binfmt artifact bytes — with reconnect/retry); never builds locally |
 //!
 //! * [`MiloSession`] — *who consumes it*. A typed builder binding a
 //!   runtime (optional — store/remote sources work without one), a
@@ -63,7 +63,7 @@ use crate::hpo::{HpoConfig, Tuner};
 use crate::kernel::SimilarityBackend;
 use crate::runtime::Runtime;
 use crate::selection::Strategy;
-use crate::serve::{ServeClient, ServedMiloStrategy};
+use crate::serve::{ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy, WireMode};
 use crate::store::{MetaKey, MetaStore};
 use crate::train::{TrainConfig, TrainOutcome, Trainer};
 
@@ -89,6 +89,12 @@ pub enum MetaSource {
         expect_seed: Option<u64>,
         /// When set, the served metadata's fraction must match.
         expect_fraction: Option<f64>,
+        /// Wire format to negotiate (default: binary frames — `GET_META`
+        /// then transfers the exact binfmt artifact bytes).
+        wire: WireMode,
+        /// Reconnect/retry policy for transport failures mid-resolution
+        /// and mid-stream.
+        retry: RetryPolicy,
     },
 }
 
@@ -101,12 +107,21 @@ impl std::fmt::Debug for MetaSource {
                 .field("root", &store.root())
                 .field("opts", opts)
                 .finish(),
-            MetaSource::Remote { addr, client_id, expect_seed, expect_fraction } => f
+            MetaSource::Remote {
+                addr,
+                client_id,
+                expect_seed,
+                expect_fraction,
+                wire,
+                retry,
+            } => f
                 .debug_struct("Remote")
                 .field("addr", addr)
                 .field("client_id", client_id)
                 .field("expect_seed", expect_seed)
                 .field("expect_fraction", expect_fraction)
+                .field("wire", wire)
+                .field("retry", retry)
                 .finish(),
         }
     }
@@ -131,13 +146,16 @@ impl MetaSource {
     }
 
     /// A served source with no seed/fraction expectations (the dataset is
-    /// always validated on resolve).
+    /// always validated on resolve). Negotiates the binary frame wire and
+    /// the default [`RetryPolicy`].
     pub fn remote(addr: impl Into<String>) -> MetaSource {
         MetaSource::Remote {
             addr: addr.into(),
             client_id: "milo_session".to_string(),
             expect_seed: None,
             expect_fraction: None,
+            wire: WireMode::Frame,
+            retry: RetryPolicy::default(),
         }
     }
 
@@ -155,7 +173,27 @@ impl MetaSource {
             client_id: "milo_session".to_string(),
             expect_seed: Some(seed),
             expect_fraction: Some(fraction),
+            wire: WireMode::Frame,
+            retry: RetryPolicy::default(),
         }
+    }
+
+    /// Return this source with the wire format swapped (no-op on local
+    /// sources).
+    pub fn with_wire(mut self, mode: WireMode) -> MetaSource {
+        if let MetaSource::Remote { wire, .. } = &mut self {
+            *wire = mode;
+        }
+        self
+    }
+
+    /// Return this source with the reconnect policy swapped (no-op on
+    /// local sources).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> MetaSource {
+        if let MetaSource::Remote { retry, .. } = &mut self {
+            *retry = policy;
+        }
+        self
     }
 
     /// The fraction this source is configured for, when it knows one.
@@ -242,8 +280,24 @@ impl MetaSource {
                     ),
                 })
             }
-            MetaSource::Remote { addr, client_id, expect_seed, expect_fraction } => {
-                let mut client = ServeClient::connect(addr, client_id)?;
+            MetaSource::Remote {
+                addr,
+                client_id,
+                expect_seed,
+                expect_fraction,
+                wire,
+                retry,
+            } => {
+                // route to the right entry on a multi-dataset server: the
+                // HELLO names the dataset (and fraction, when expected), so
+                // a server not holding it refuses loudly up front
+                let opts = ClientOptions {
+                    wire: *wire,
+                    dataset: Some(ds.name().to_string()),
+                    fraction: *expect_fraction,
+                    retry: *retry,
+                };
+                let mut client = ServeClient::connect_with(addr, client_id, opts)?;
                 if let Some(seed) = expect_seed {
                     ensure!(
                         client.server_seed() == *seed,
@@ -472,15 +526,23 @@ impl<'a> MiloSession<'a> {
     }
 
     /// A live served strategy (SGE cycle + WRE draws over the wire) —
-    /// requires a [`MetaSource::Remote`] source.
+    /// requires a [`MetaSource::Remote`] source. Inherits the source's
+    /// wire format and retry policy and routes to this session's
+    /// `(dataset, fraction)` entry on a multi-dataset server.
     pub fn served_strategy(
         &self,
         client_id: &str,
         kappa: f64,
     ) -> Result<ServedMiloStrategy> {
         match &self.source {
-            MetaSource::Remote { addr, .. } => {
-                ServedMiloStrategy::connect(addr, client_id, kappa)
+            MetaSource::Remote { addr, wire, retry, .. } => {
+                let opts = ClientOptions {
+                    wire: *wire,
+                    dataset: Some(self.ds.name().to_string()),
+                    fraction: Some(self.fraction),
+                    retry: *retry,
+                };
+                ServedMiloStrategy::connect_with(addr, client_id, kappa, opts)
             }
             other => bail!(
                 "served_strategy needs a MetaSource::Remote source, this session \

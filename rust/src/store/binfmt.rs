@@ -24,7 +24,7 @@
 //! a truncated or bit-flipped artifact is a clean `Err`, never a panic or
 //! a silently wrong selection.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use super::fnv1a64;
 use crate::coordinator::Metadata;
@@ -41,40 +41,61 @@ fn push_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_indices(out: &mut Vec<u8>, idx: &[usize]) {
-    assert!(idx.len() <= u32::MAX as usize, "subset too large for format");
+fn push_indices(out: &mut Vec<u8>, idx: &[usize]) -> Result<()> {
+    ensure!(idx.len() <= u32::MAX as usize, "subset too large for format");
     push_u32(out, idx.len() as u32);
     for &i in idx {
-        assert!(i <= u32::MAX as usize, "index {i} overflows u32");
+        ensure!(i <= u32::MAX as usize, "index {i} overflows u32");
         push_u32(out, i as u32);
     }
+    Ok(())
 }
 
-/// Serialize metadata to the versioned binary layout.
-pub fn encode(meta: &Metadata) -> Vec<u8> {
+/// Fallible serialization: validates the format contract (every index and
+/// length fits `u32`, per-class probs aligned with indices) and returns a
+/// clean `Err` for a document that cannot be represented. The serve layer
+/// uses this so a pathological in-memory document degrades to a protocol
+/// error instead of panicking the event loop.
+pub fn try_encode(meta: &Metadata) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(64 + 4 * meta.fixed_dm.len());
     out.extend_from_slice(MAGIC);
     push_u32(&mut out, FORMAT_VERSION);
+    ensure!(meta.dataset.len() <= u32::MAX as usize, "dataset name too long");
     push_u32(&mut out, meta.dataset.len() as u32);
     out.extend_from_slice(meta.dataset.as_bytes());
     push_f64(&mut out, meta.fraction);
     push_f64(&mut out, meta.preprocess_secs);
+    ensure!(meta.sge_subsets.len() <= u32::MAX as usize, "too many SGE subsets");
     push_u32(&mut out, meta.sge_subsets.len() as u32);
     for s in &meta.sge_subsets {
-        push_indices(&mut out, s);
+        push_indices(&mut out, s)?;
     }
+    ensure!(meta.wre_classes.len() <= u32::MAX as usize, "too many WRE classes");
     push_u32(&mut out, meta.wre_classes.len() as u32);
     for c in &meta.wre_classes {
-        assert_eq!(c.indices.len(), c.probs.len(), "ClassProbs invariant");
-        push_indices(&mut out, &c.indices);
+        ensure!(
+            c.indices.len() == c.probs.len(),
+            "ClassProbs invariant violated: {} indices vs {} probs",
+            c.indices.len(),
+            c.probs.len(),
+        );
+        push_indices(&mut out, &c.indices)?;
         for &p in &c.probs {
             push_f64(&mut out, p);
         }
     }
-    push_indices(&mut out, &meta.fixed_dm);
+    push_indices(&mut out, &meta.fixed_dm)?;
     let check = fnv1a64(&out);
     out.extend_from_slice(&check.to_le_bytes());
-    out
+    Ok(out)
+}
+
+/// Serialize metadata to the versioned binary layout. Panics on a document
+/// that violates the format contract — every `Metadata` produced by the
+/// pipeline satisfies it; use [`try_encode`] when the document comes from
+/// an untrusted source.
+pub fn encode(meta: &Metadata) -> Vec<u8> {
+    try_encode(meta).expect("metadata violates the binfmt format contract")
 }
 
 struct Cursor<'a> {

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use milo::coordinator::Metadata;
 use milo::selection::milo::ClassProbs;
-use milo::serve::{ServeClient, SubsetServer};
+use milo::serve::{ClientOptions, ServeClient, SubsetServer, WireMode};
 use milo::store::{MetaKey, MetaStore};
 
 const N_CLIENTS: usize = 5;
@@ -67,17 +67,28 @@ fn test_key() -> MetaKey {
     }
 }
 
-/// One client's full draw: SGE cycle indices+subsets, then WRE samples.
-fn draw_stream(
+/// One client's full draw over `wire`: SGE cycle indices+subsets, then
+/// WRE samples.
+fn draw_stream_wire(
     addr: &str,
     client_id: &str,
+    wire: WireMode,
 ) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
-    let mut client = ServeClient::connect(addr, client_id).unwrap();
+    let mut client = ServeClient::connect_with(
+        addr,
+        client_id,
+        ClientOptions { wire, ..Default::default() },
+    )
+    .unwrap();
     let sge: Vec<(usize, Vec<usize>)> =
         (0..SGE_DRAWS).map(|_| client.next_subset().unwrap()).collect();
     let wre: Vec<Vec<usize>> =
         (0..WRE_DRAWS).map(|_| client.sample_wre(WRE_K).unwrap()).collect();
     (sge, wre)
+}
+
+fn draw_stream(addr: &str, client_id: &str) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    draw_stream_wire(addr, client_id, WireMode::Json)
 }
 
 #[test]
@@ -125,8 +136,12 @@ fn concurrent_clients_share_one_preprocess_and_streams_survive_restart() {
                 .map(|c| {
                     let addr = addr.clone();
                     scope.spawn(move || {
+                        // alternate wire modes: stream content must not
+                        // depend on the transport encoding
+                        let wire =
+                            if c % 2 == 0 { WireMode::Json } else { WireMode::Frame };
                         let id = format!("client-{c}");
-                        let stream = draw_stream(&addr, &id);
+                        let stream = draw_stream_wire(&addr, &id, wire);
                         (id, stream)
                     })
                 })
@@ -234,6 +249,48 @@ fn server_rejects_malformed_requests_without_dying() {
     drop(raw);
 
     let mut client = ServeClient::connect(&addr, "after-garbage").unwrap();
+    assert_eq!(client.next_subset().unwrap().1.len(), 48);
+    server.shutdown();
+}
+
+#[test]
+fn server_rejects_corrupt_frames_without_dying() {
+    use milo::serve::frame::{Frame, FrameDecoder};
+    use std::io::{Read, Write};
+
+    let meta = Arc::new(synthetic_metadata());
+    let server = SubsetServer::bind("127.0.0.1:0", meta, None, 1).unwrap();
+    let addr = server.addr().to_string();
+
+    // negotiate frame mode by hand, then send a corrupt frame header
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    raw.write_all(b"{\"cmd\":\"HELLO\",\"client\":\"vandal\",\"wire\":\"frame\"}\n")
+        .unwrap();
+    let mut hello = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        raw.read_exact(&mut byte).unwrap();
+        if byte[0] == b'\n' {
+            break;
+        }
+        hello.push(byte[0]);
+    }
+    assert!(String::from_utf8_lossy(&hello).contains("\"wire\":\"frame\""));
+
+    // a frame with an unknown kind: the server answers with an ERROR
+    // frame and closes this connection — but keeps serving others
+    raw.write_all(&[3, 0, 0, 0, 250, 1, 2, 3]).unwrap();
+    let mut response = Vec::new();
+    raw.read_to_end(&mut response).unwrap(); // server closes after the error
+    let mut decoder = FrameDecoder::new();
+    decoder.push(&response);
+    match decoder.next().unwrap() {
+        Some(Frame::Error(msg)) => assert!(msg.contains("frame"), "{msg}"),
+        other => panic!("expected an ERROR frame, got {other:?}"),
+    }
+    drop(raw);
+
+    let mut client = ServeClient::connect(&addr, "after-vandal").unwrap();
     assert_eq!(client.next_subset().unwrap().1.len(), 48);
     server.shutdown();
 }

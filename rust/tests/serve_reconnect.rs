@@ -1,0 +1,187 @@
+//! Reconnect semantics of `ServeClient`'s retry policy: kill and restart
+//! the server mid-epoch and assert the client resumes the *exact* stream
+//! an uninterrupted connection would have produced (the server streams
+//! are pure functions of `(seed, entry, client id)`; the client
+//! fast-forwards past everything it already consumed). Also covers the
+//! give-up path (clear error once the budget is exhausted) and the
+//! refuse-to-resume path (a restarted server with a different seed must
+//! not be silently continued into).
+
+use std::sync::Arc;
+
+use milo::coordinator::Metadata;
+use milo::data::DatasetId;
+use milo::selection::WreStrategy;
+use milo::serve::{
+    client_start_cursor, client_stream_rng, ClientOptions, RetryPolicy, ServeClient,
+    SubsetServer, WireMode,
+};
+use milo::testkit::synthetic_metadata;
+
+const SEED: u64 = 9;
+const WRE_K: usize = 16;
+const ROUNDS: usize = 4;
+
+fn meta() -> Arc<Metadata> {
+    Arc::new(synthetic_metadata(&DatasetId::Trec6Like.generate(SEED), 0.1))
+}
+
+/// The uninterrupted reference stream (see `serve_stress.rs`).
+fn inline_stream(
+    meta: &Metadata,
+    client: &str,
+    rounds: usize,
+) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    let start = client_start_cursor(meta, client);
+    let n = meta.sge_subsets.len();
+    let sge = (0..rounds)
+        .map(|i| {
+            let idx = (start + i) % n;
+            (idx, meta.sge_subsets[idx].clone())
+        })
+        .collect();
+    let wre_inline = WreStrategy::new("inline", meta.wre_classes.clone());
+    let mut rng = client_stream_rng(SEED, meta, client);
+    let wre = (0..rounds).map(|_| wre_inline.sample_k(WRE_K, &mut rng)).collect();
+    (sge, wre)
+}
+
+fn retrying_options(wire: WireMode) -> ClientOptions {
+    ClientOptions {
+        wire,
+        retry: RetryPolicy { max_reconnects: 5, backoff_ms: 20 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn server_restart_mid_epoch_resumes_the_stream_deterministically() {
+    for wire in [WireMode::Json, WireMode::Frame] {
+        let meta = meta();
+        let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), None, SEED).unwrap();
+        let addr = server.addr().to_string();
+
+        let mut client =
+            ServeClient::connect_with(&addr, "trainer-restart", retrying_options(wire))
+                .unwrap();
+        let mut sge = Vec::new();
+        let mut wre = Vec::new();
+        // first half of the epoch against the original server
+        for _ in 0..ROUNDS / 2 {
+            sge.push(client.next_subset().unwrap());
+            wre.push(client.sample_wre(WRE_K).unwrap());
+        }
+
+        // kill the server mid-epoch and restart it on the same address
+        // (the listener carries SO_REUSEADDR exactly for this) with the
+        // same artifact and seed
+        server.shutdown();
+        let server2 = SubsetServer::bind(&addr, meta.clone(), None, SEED).unwrap();
+
+        // the client notices the dead transport on its next draw,
+        // reconnects, replays, and hands out the *remaining* stream
+        for _ in ROUNDS / 2..ROUNDS {
+            sge.push(client.next_subset().unwrap());
+            wre.push(client.sample_wre(WRE_K).unwrap());
+        }
+
+        let (expect_sge, expect_wre) = inline_stream(&meta, "trainer-restart", ROUNDS);
+        assert_eq!(sge, expect_sge, "SGE stream diverged across restart ({wire:?})");
+        assert_eq!(wre, expect_wre, "WRE stream diverged across restart ({wire:?})");
+        server2.shutdown();
+    }
+}
+
+#[test]
+fn give_up_path_is_a_clear_error_after_the_retry_budget() {
+    let meta = meta();
+    let server = SubsetServer::bind("127.0.0.1:0", meta, None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect_with(
+        &addr,
+        "trainer-doomed",
+        ClientOptions {
+            retry: RetryPolicy { max_reconnects: 2, backoff_ms: 5 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    client.next_subset().unwrap();
+    server.shutdown(); // nobody comes back
+    let err = loop {
+        // the first call after the kill may still see buffered bytes;
+        // keep drawing until the transport failure surfaces
+        match client.next_subset() {
+            Ok(_) => continue,
+            Err(e) => break e,
+        }
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("giving up") && msg.contains("2 reconnect"),
+        "give-up error must name the exhausted budget: {msg}"
+    );
+}
+
+#[test]
+fn a_restarted_server_with_a_different_seed_is_refused() {
+    let meta = meta();
+    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect_with(
+        &addr,
+        "trainer-suspicious",
+        ClientOptions {
+            retry: RetryPolicy { max_reconnects: 2, backoff_ms: 5 },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    client.next_subset().unwrap();
+    server.shutdown();
+    // same address, same artifact — but a different stream seed: resuming
+    // would splice two unrelated streams together
+    let imposter = SubsetServer::bind(&addr, meta, None, SEED + 1).unwrap();
+    let err = loop {
+        match client.next_subset() {
+            Ok(_) => continue,
+            Err(e) => break e,
+        }
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("refusing to resume") || msg.contains("seed"),
+        "seed mismatch must be refused: {msg}"
+    );
+    imposter.shutdown();
+}
+
+#[test]
+fn reconnect_replays_wre_draw_sizes_exactly() {
+    // a client whose pre-kill history mixes WRE draw sizes: the replay
+    // must re-issue the same k sequence or the post-restart stream drifts
+    let meta = meta();
+    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect_with(
+        &addr,
+        "trainer-mixed-k",
+        retrying_options(WireMode::Frame),
+    )
+    .unwrap();
+    let ks = [8usize, 32, 16];
+    let mut got: Vec<Vec<usize>> = ks.iter().map(|&k| client.sample_wre(k).unwrap()).collect();
+    server.shutdown();
+    let server2 = SubsetServer::bind(&addr, meta.clone(), None, SEED).unwrap();
+    got.push(client.sample_wre(WRE_K).unwrap());
+
+    let wre_inline = WreStrategy::new("inline", meta.wre_classes.clone());
+    let mut rng = client_stream_rng(SEED, &meta, "trainer-mixed-k");
+    let expect: Vec<Vec<usize>> = ks
+        .iter()
+        .chain(std::iter::once(&WRE_K))
+        .map(|&k| wre_inline.sample_k(k, &mut rng))
+        .collect();
+    assert_eq!(got, expect, "mixed-k WRE stream diverged across restart");
+    server2.shutdown();
+}

@@ -1,0 +1,261 @@
+//! Stress tests for the event-loop subset server: one process, multiple
+//! `(dataset, fraction)` entries, many concurrent clients mixing JSON-line
+//! and binary-frame wire modes, with abrupt mid-stream disconnects thrown
+//! in — asserting that
+//!
+//!   (a) every client's subset stream is exactly the stream the *inline*
+//!       strategies (SGE cycle over `meta.sge_subsets`, `WreStrategy`
+//!       draws from the documented per-client RNG) would produce from the
+//!       shared metadata — the server adds transport, never transformation;
+//!   (b) the wire format does not change stream content (JSON and frame
+//!       clients with one id see one stream) and `GET_META` is
+//!       byte-identical across modes (binfmt encoding compared);
+//!   (c) other clients disconnecting mid-stream — abruptly, without a
+//!       goodbye — perturb nothing;
+//!   (d) connection slots are reclaimed: 100 connect/drop cycles leave no
+//!       fd growth and no open-connection growth (the `ServeClient` drop
+//!       goodbye + event-loop EOF sweep).
+//!
+//! The `#[ignore]`d soak variant runs the same topology much harder and is
+//! exercised in release mode by CI (`cargo test --release -- --ignored`).
+
+use std::sync::Arc;
+
+use milo::coordinator::Metadata;
+use milo::data::DatasetId;
+use milo::selection::WreStrategy;
+use milo::serve::{
+    client_start_cursor, client_stream_rng, ClientOptions, ServeClient, SubsetServer,
+    WireMode,
+};
+use milo::store::binfmt;
+use milo::testkit::synthetic_metadata;
+
+const SEED: u64 = 42;
+const WRE_K: usize = 24;
+
+fn entries() -> Vec<Arc<Metadata>> {
+    vec![
+        Arc::new(synthetic_metadata(&DatasetId::Trec6Like.generate(SEED), 0.1)),
+        Arc::new(synthetic_metadata(&DatasetId::RottenLike.generate(SEED), 0.3)),
+    ]
+}
+
+/// The stream an inline consumer of the shared metadata would produce for
+/// `client`: the SGE cycle starting at the client's staggered cursor, and
+/// WRE draws from `WreStrategy` (the exact sampler `MiloStrategy` uses)
+/// seeded with the documented per-client stream RNG.
+fn inline_stream(
+    meta: &Metadata,
+    client: &str,
+    rounds: usize,
+) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    let start = client_start_cursor(meta, client);
+    let n = meta.sge_subsets.len();
+    let sge: Vec<(usize, Vec<usize>)> = (0..rounds)
+        .map(|i| {
+            let idx = (start + i) % n;
+            (idx, meta.sge_subsets[idx].clone())
+        })
+        .collect();
+    let wre_inline = WreStrategy::new("inline", meta.wre_classes.clone());
+    let mut rng = client_stream_rng(SEED, meta, client);
+    let wre: Vec<Vec<usize>> =
+        (0..rounds).map(|_| wre_inline.sample_k(WRE_K, &mut rng)).collect();
+    (sge, wre)
+}
+
+/// Draw `rounds` alternating SGE/WRE pairs over the wire.
+fn served_stream(
+    addr: &str,
+    client_id: &str,
+    wire: WireMode,
+    dataset: &str,
+    rounds: usize,
+) -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    let mut client = ServeClient::connect_with(
+        addr,
+        client_id,
+        ClientOptions {
+            wire,
+            dataset: Some(dataset.to_string()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut sge = Vec::with_capacity(rounds);
+    let mut wre = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        sge.push(client.next_subset().unwrap());
+        wre.push(client.sample_wre(WRE_K).unwrap());
+    }
+    (sge, wre)
+}
+
+fn run_mixed_fleet(n_clients: usize, rounds: usize) {
+    let entries = entries();
+    let server =
+        SubsetServer::bind_multi("127.0.0.1:0", entries.clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            let entries = &entries;
+            scope.spawn(move || {
+                let meta = &entries[c % entries.len()];
+                let wire = if c % 2 == 0 { WireMode::Json } else { WireMode::Frame };
+                let id = format!("client-{c}");
+                if c % 7 == 3 {
+                    // abrupt mid-stream disconnect: a raw socket (not the
+                    // polite ServeClient) draws a little and vanishes with
+                    // a bare FIN, no GOODBYE — must perturb nobody
+                    use std::io::{BufRead, BufReader, Write};
+                    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+                    let mut reader = BufReader::new(raw.try_clone().unwrap());
+                    let hello = format!(
+                        "{{\"cmd\":\"HELLO\",\"client\":\"churn-{c}\",\"dataset\":{:?}}}\n",
+                        meta.dataset,
+                    );
+                    raw.write_all(hello.as_bytes()).unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains("\"ok\":true"), "{line:?}");
+                    raw.write_all(b"{\"cmd\":\"NEXT_SUBSET\"}\n").unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.contains("\"ok\":true"), "{line:?}");
+                    return; // raw drops here: mid-stream, no goodbye
+                }
+                let got = served_stream(&addr, &id, wire, &meta.dataset, rounds);
+                let expect = inline_stream(meta, &id, rounds);
+                assert_eq!(
+                    got, expect,
+                    "{id} ({wire:?}, {}) diverged from the inline strategy stream",
+                    meta.dataset,
+                );
+            });
+        }
+    });
+
+    // wire format does not change content: one id, both modes, same stream
+    for meta in &entries {
+        let a = served_stream(&addr, "bimodal", WireMode::Json, &meta.dataset, rounds);
+        let b = served_stream(&addr, "bimodal", WireMode::Frame, &meta.dataset, rounds);
+        assert_eq!(a, b, "wire mode changed the {} stream", meta.dataset);
+    }
+
+    // GET_META is byte-identical across modes and to the shared artifact
+    for meta in &entries {
+        let reference = binfmt::encode(meta);
+        for wire in [WireMode::Json, WireMode::Frame] {
+            let mut client = ServeClient::connect_with(
+                &addr,
+                "meta-probe",
+                ClientOptions {
+                    wire,
+                    dataset: Some(meta.dataset.clone()),
+                    fraction: Some(meta.fraction),
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let served = client.get_meta().unwrap();
+            assert_eq!(
+                binfmt::encode(&served),
+                reference,
+                "{} over {wire:?} is not byte-identical",
+                meta.dataset,
+            );
+        }
+    }
+
+    let stats = server.stats();
+    assert!(stats.connections >= n_clients as u64);
+    assert!(stats.subsets_served > 0 && stats.wre_samples > 0);
+    server.shutdown();
+}
+
+#[test]
+fn fifty_mixed_clients_two_datasets_deterministic_streams() {
+    run_mixed_fleet(50, 6);
+}
+
+/// The heavier version CI runs in release mode:
+/// `cargo test --release --test serve_stress -- --ignored`.
+#[test]
+#[ignore = "soak test — run explicitly (CI runs it in release mode)"]
+fn soak_fifty_clients_many_rounds() {
+    for _ in 0..3 {
+        run_mixed_fleet(50, 40);
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn open_fd_count() -> Option<usize> {
+    std::fs::read_dir("/proc/self/fd").ok().map(|d| d.count())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn open_fd_count() -> Option<usize> {
+    None
+}
+
+#[test]
+fn hundred_connect_drop_cycles_leak_no_slots_and_no_fds() {
+    let server = SubsetServer::bind_multi("127.0.0.1:0", entries(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    const CYCLES: u64 = 100;
+
+    // settle a baseline after one warmup connection
+    {
+        let mut warm = ServeClient::connect(&addr, "warmup").unwrap();
+        warm.ping().unwrap();
+        warm.goodbye().unwrap();
+    }
+    wait_until(|| server.stats().open_connections == 0, "warmup close");
+    let fd_baseline = open_fd_count();
+
+    for c in 0..CYCLES {
+        let wire = if c % 2 == 0 { WireMode::Json } else { WireMode::Frame };
+        let mut client = ServeClient::connect_with(
+            &addr,
+            &format!("cycle-{c}"),
+            ClientOptions { wire, ..Default::default() },
+        )
+        .unwrap();
+        let _ = client.next_subset().unwrap();
+        drop(client); // Drop sends the goodbye
+    }
+
+    // every slot must be reclaimed (goodbye fast path or EOF sweep)
+    wait_until(
+        || server.stats().open_connections == 0,
+        "open_connections back to 0 after 100 connect/drop cycles",
+    );
+    let stats = server.stats();
+    assert_eq!(stats.connections, CYCLES + 1, "accepted every cycle");
+    assert!(
+        stats.goodbyes >= CYCLES,
+        "drop must send goodbyes (got {} of {CYCLES})",
+        stats.goodbyes,
+    );
+    // and the process-level view agrees: no fd growth. Other tests in
+    // this binary run concurrently and own fds too, so wait for the
+    // count to settle back rather than asserting an instantaneous value.
+    if let Some(base) = fd_baseline {
+        wait_until(
+            || open_fd_count().map_or(true, |now| now <= base + 2),
+            "process fd count to settle back to the pre-cycle baseline",
+        );
+    }
+    server.shutdown();
+}
+
+fn wait_until(cond: impl Fn() -> bool, what: &str) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
