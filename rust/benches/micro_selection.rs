@@ -11,7 +11,16 @@
 //!     Metadata→MiloStrategy by hand (asserted, not just printed),
 //!   * serve wire modes: bytes and latency per `NEXT_SUBSET` over the
 //!     JSON-line protocol vs the binary frame mode (binary must transfer
-//!     strictly fewer bytes per request — asserted).
+//!     strictly fewer bytes per request — asserted),
+//!   * preprocessing end-to-end over the synthetic 10-class bench
+//!     dataset: dense vs sparse top-knn kernels at knn ∈ {32, 128, full}
+//!     (wall-time per stage + stored kernel floats), emitted as
+//!     `BENCH_select.json` so the perf trajectory accumulates across
+//!     PRs. Asserted: knn=full selections are identical to dense, and
+//!     knn=32 stores ≥ 4× fewer kernel floats; the ≥ 2× end-to-end
+//!     speedup is asserted in full mode (CI runs `MILO_BENCH_SMOKE=1`,
+//!     which confines the binary to this one bench and skips the
+//!     wall-clock assert — timings in shared CI runners are noise).
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -25,6 +34,15 @@ use milo::testkit::{bench, random_embeddings, random_kernel};
 use milo::util::rng::Rng;
 
 fn main() {
+    // CI smoke mode runs ONLY the preprocessing bench (the one that
+    // emits BENCH_select.json): the other benches are full-size
+    // micro-benchmarks with wall-clock asserts that have no business on
+    // a noisy shared runner.
+    if std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false) {
+        bench_preprocess_select();
+        return;
+    }
+
     let n = 512;
     let k = 64;
     let kernel = random_kernel(n, 1);
@@ -89,6 +107,152 @@ fn main() {
     bench_store_amortization();
     bench_session_vs_handwired();
     bench_wire_modes();
+    bench_preprocess_select();
+}
+
+/// Dense vs sparse top-knn preprocessing over the synthetic 10-class
+/// bench dataset: per-stage wall time (kernel build, SGE, WRE, fixed)
+/// and stored kernel floats, written to `BENCH_select.json`. Runs
+/// artifact-free (native backend over random embeddings).
+fn bench_preprocess_select() {
+    use milo::coordinator::{
+        fixed_subset_from_kernels, sge_subsets_from_kernels,
+        wre_distribution_from_kernels,
+    };
+    use milo::kernel::{build_class_kernels, SimilarityBackend};
+    use milo::submod::SetFunctionKind;
+    use milo::util::json::Json;
+    use std::time::Instant;
+
+    let smoke = std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    // full mode sizes the greedy stages to dominate (the stages sparsity
+    // accelerates); smoke keeps CI fast while still proving the memory
+    // ratio and the knn=full equivalence
+    let (per_class, embed_dim, n_sge) = if smoke { (320, 16, 3) } else { (512, 16, 16) };
+    let classes = 10usize;
+    let n = per_class * classes;
+    let fraction = 0.1;
+    let k = (fraction * n as f64).round() as usize;
+    let sge_fn = SetFunctionKind::FacilityLocation;
+    let wre_fn = SetFunctionKind::DisparityMin;
+    let emb = random_embeddings(n, embed_dim, 42);
+    let partition: Vec<Vec<usize>> = (0..classes)
+        .map(|c| (c * per_class..(c + 1) * per_class).collect())
+        .collect();
+
+    struct Run {
+        label: String,
+        floats: usize,
+        kernel_s: f64,
+        sge_s: f64,
+        wre_s: f64,
+        fixed_s: f64,
+        sge: Vec<Vec<usize>>,
+        wre: Vec<milo::selection::milo::ClassProbs>,
+        fixed: Vec<usize>,
+    }
+
+    let configs: Vec<(String, Option<usize>)> = vec![
+        ("dense".to_string(), None),
+        ("knn32".to_string(), Some(32)),
+        ("knn128".to_string(), Some(128)),
+        ("full".to_string(), Some(per_class)),
+    ];
+    let mut runs: Vec<Run> = Vec::new();
+    for (label, knn) in configs {
+        let t0 = Instant::now();
+        let kernels = build_class_kernels(
+            None,
+            &emb,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+            knn,
+        )
+        .unwrap();
+        let kernel_s = t0.elapsed().as_secs_f64();
+        let mut rng = Rng::new(7);
+        let t1 = Instant::now();
+        let sge = sge_subsets_from_kernels(n, &kernels, sge_fn, k, n_sge, 0.01, &mut rng);
+        let sge_s = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        let wre = wre_distribution_from_kernels(&kernels, wre_fn);
+        let wre_s = t2.elapsed().as_secs_f64();
+        let t3 = Instant::now();
+        let fixed = fixed_subset_from_kernels(n, &kernels, wre_fn, k);
+        let fixed_s = t3.elapsed().as_secs_f64();
+        let floats = kernels.total_elements();
+        println!(
+            "bench preprocess_select[{label:>6}]  kernel {:>7.1}ms  sge {:>7.1}ms  \
+             wre {:>7.1}ms  fixed {:>6.1}ms  total {:>7.1}ms  ({floats} floats)",
+            kernel_s * 1e3,
+            sge_s * 1e3,
+            wre_s * 1e3,
+            fixed_s * 1e3,
+            (kernel_s + sge_s + wre_s + fixed_s) * 1e3,
+        );
+        runs.push(Run { label, floats, kernel_s, sge_s, wre_s, fixed_s, sge, wre, fixed });
+    }
+
+    // knn ≥ n_c must reproduce the dense selections exactly — same RNG
+    // stream, bit-identical gains, identical subsets
+    let (dense, full) = (&runs[0], &runs[3]);
+    assert_eq!(dense.sge, full.sge, "knn=full SGE subsets diverged from dense");
+    assert_eq!(dense.fixed, full.fixed, "knn=full fixed subset diverged from dense");
+    assert_eq!(dense.wre, full.wre, "knn=full WRE distributions diverged from dense");
+
+    let total = |r: &Run| r.kernel_s + r.sge_s + r.wre_s + r.fixed_s;
+    let knn32 = &runs[1];
+    let memory_ratio = dense.floats as f64 / knn32.floats.max(1) as f64;
+    let speedup = total(dense) / total(knn32).max(1e-12);
+    println!(
+        "bench preprocess_select: knn=32 stores {memory_ratio:.1}x fewer kernel \
+         floats and preprocesses {speedup:.2}x faster end-to-end than dense"
+    );
+    assert!(
+        memory_ratio >= 4.0,
+        "knn=32 must store ≥ 4x fewer kernel floats than dense, got {memory_ratio:.2}x"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "knn=32 must preprocess ≥ 2x faster end-to-end than dense, got {speedup:.2}x"
+        );
+    }
+
+    let config_json = |r: &Run| {
+        Json::obj(vec![
+            ("config", Json::str(r.label.clone())),
+            ("kernel_floats", Json::num(r.floats as f64)),
+            (
+                "secs",
+                Json::obj(vec![
+                    ("kernel", Json::num(r.kernel_s)),
+                    ("sge", Json::num(r.sge_s)),
+                    ("wre", Json::num(r.wre_s)),
+                    ("fixed", Json::num(r.fixed_s)),
+                    ("total", Json::num(total(r))),
+                ]),
+            ),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::str("preprocess_select")),
+        ("smoke", Json::Bool(smoke)),
+        ("n_train", Json::num(n as f64)),
+        ("classes", Json::num(classes as f64)),
+        ("embed_dim", Json::num(embed_dim as f64)),
+        ("fraction", Json::num(fraction)),
+        ("n_sge_subsets", Json::num(n_sge as f64)),
+        ("sge_function", Json::str(sge_fn.name())),
+        ("wre_function", Json::str(wre_fn.name())),
+        ("configs", Json::arr(runs.iter().map(config_json).collect())),
+        ("memory_ratio_knn32", Json::num(memory_ratio)),
+        ("speedup_knn32", Json::num(speedup)),
+        ("full_matches_dense", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_select.json", doc.to_string()).unwrap();
+    println!("bench preprocess_select: wrote BENCH_select.json");
 }
 
 /// JSON-line vs binary-frame `NEXT_SUBSET`: draw the same deterministic
@@ -212,7 +376,8 @@ fn bench_session_vs_handwired() {
     );
     // "no measurable overhead": same strategy object underneath, so allow
     // only scheduler noise — 25% relative or 20us absolute, whichever is
-    // larger.
+    // larger. (Never runs under MILO_BENCH_SMOKE — main() confines smoke
+    // runs to the preprocessing bench.)
     assert!(
         via_session <= handwired * 1.25 + 20e-6,
         "session layer added measurable subset-delivery overhead: \

@@ -5,10 +5,14 @@
 //! happens **once per dataset**, before any training:
 //!
 //! 1. encode the train split with the frozen zero-shot encoder artifact;
-//! 2. build class-wise similarity kernels (Pallas artifact or native);
+//! 2. build class-wise similarity kernels (Pallas artifact or native;
+//!    dense `n_c²` blocks or sparse top-`knn` CSR via the `knn` option);
 //! 3. SGE: `n` stochastic-greedy subsets under graph-cut (easy phase);
 //! 4. WRE: full-sweep `GreedySampleImportance` under disparity-min →
 //!    Taylor-softmax importance distribution per class (hard phase);
+//!    — steps 2–4 and the fixed subset all fan out per class over
+//!    `par_map`, with per-`(subset, class)` RNG streams so results are
+//!    independent of scheduling;
 //! 5. store everything as dataset metadata — the content-addressed binary
 //!    registry in [`crate::store`] (or plain JSON via [`save_metadata`]) —
 //!    so training any number of downstream models costs no further
@@ -40,6 +44,7 @@ use crate::tensor::Matrix;
 use crate::util::json::Json;
 use crate::util::math::taylor_softmax;
 use crate::util::rng::Rng;
+use crate::util::threads::par_map;
 
 /// Which pre-processing pipeline produces the metadata. The kernel path is
 /// the paper's recipe; the feature-based path is the conclusion's
@@ -87,6 +92,13 @@ pub struct PreprocessOptions {
     pub encoder_variant: Option<String>,
     /// Pipeline variant (kernel vs kernel-free feature-based).
     pub pipeline: PreprocessPipeline,
+    /// Sparse kernel width: `Some(k)` builds top-`k` CSR class blocks
+    /// (`≈ n_c·k` floats, gains in O(k)) instead of dense `n_c²` ones.
+    /// `knn < n_c` is an approximation and selects differently from the
+    /// dense path, so it is part of the store address
+    /// ([`crate::store::MetaKey`]); `knn ≥ n_c` reproduces dense
+    /// selections bit-for-bit. `None` = dense (the paper's recipe).
+    pub knn: Option<usize>,
 }
 
 impl Default for PreprocessOptions {
@@ -102,6 +114,7 @@ impl Default for PreprocessOptions {
             seed: 1,
             encoder_variant: None,
             pipeline: PreprocessPipeline::Kernel,
+            knn: None,
         }
     }
 }
@@ -175,7 +188,8 @@ impl<'a> Preprocessor<'a> {
         Ok(out)
     }
 
-    /// Build the class-wise kernels from provided embeddings.
+    /// Build the class-wise kernels from provided embeddings (dense or
+    /// sparse top-`knn`, per `opts.knn`).
     pub fn kernels(&self, ds: &Dataset, embeddings: &Matrix) -> Result<ClassKernels> {
         build_class_kernels(
             Some(self.rt),
@@ -183,6 +197,7 @@ impl<'a> Preprocessor<'a> {
             &ds.class_partition(),
             self.opts.metric,
             self.opts.backend,
+            self.opts.knn,
         )
     }
 
@@ -197,29 +212,15 @@ impl<'a> Preprocessor<'a> {
         n_subsets: usize,
         rng: &mut Rng,
     ) -> Vec<Vec<usize>> {
-        let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
-        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
-        (0..n_subsets)
-            .map(|_| {
-                let mut subset = Vec::with_capacity(k);
-                for (ck, &kc) in kernels.per_class.iter().zip(&alloc) {
-                    if kc == 0 {
-                        continue;
-                    }
-                    let mut f = kind.build(&ck.sim);
-                    let trace = greedy_maximize(
-                        f.as_mut(),
-                        kc,
-                        GreedyMode::Stochastic { epsilon: self.opts.epsilon },
-                        kind.lazy_safe(),
-                        rng,
-                    );
-                    subset.extend(trace.selected.iter().map(|&l| ck.indices[l]));
-                }
-                subset.sort_unstable();
-                subset
-            })
-            .collect()
+        sge_subsets_from_kernels(
+            ds.n_train(),
+            kernels,
+            kind,
+            k,
+            n_subsets,
+            self.opts.epsilon,
+            rng,
+        )
     }
 
     /// Fixed subset by full (lazy) greedy under `kind` — Fig. 4's fixed
@@ -231,21 +232,7 @@ impl<'a> Preprocessor<'a> {
         kind: SetFunctionKind,
         k: usize,
     ) -> Vec<usize> {
-        let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
-        let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
-        let mut subset = Vec::with_capacity(k);
-        let mut rng = Rng::new(self.opts.seed);
-        for (ck, &kc) in kernels.per_class.iter().zip(&alloc) {
-            if kc == 0 {
-                continue;
-            }
-            let mut f = kind.build(&ck.sim);
-            let trace =
-                greedy_maximize(f.as_mut(), kc, GreedyMode::Lazy, kind.lazy_safe(), &mut rng);
-            subset.extend(trace.selected.iter().map(|&l| ck.indices[l]));
-        }
-        subset.sort_unstable();
-        subset
+        fixed_subset_from_kernels(ds.n_train(), kernels, kind, k)
     }
 
     /// WRE: per-class GreedySampleImportance sweep under `kind`, Taylor-
@@ -255,19 +242,7 @@ impl<'a> Preprocessor<'a> {
         kernels: &ClassKernels,
         kind: SetFunctionKind,
     ) -> Vec<ClassProbs> {
-        kernels
-            .per_class
-            .iter()
-            .map(|ck| {
-                let mut f = kind.build(&ck.sim);
-                let gains = sample_importance(f.as_mut(), kind.lazy_safe());
-                let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
-                ClassProbs {
-                    indices: ck.indices.clone(),
-                    probs: taylor_softmax(&g64),
-                }
-            })
-            .collect()
+        wre_distribution_from_kernels(kernels, kind)
     }
 
     /// Exchange-chain subsets from `P(S) ∝ exp(β·f(S))` (§3.1 Eq. 2, the
@@ -286,10 +261,10 @@ impl<'a> Preprocessor<'a> {
     ) -> (Vec<Vec<usize>>, crate::submod::GibbsStats) {
         let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
         let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
-        let refs: Vec<(&Matrix, &[usize])> = kernels
+        let refs: Vec<(crate::kernel::KernelRef<'_>, &[usize])> = kernels
             .per_class
             .iter()
-            .map(|ck| (&ck.sim, ck.indices.as_slice()))
+            .map(|ck| (ck.sim.view(), ck.indices.as_slice()))
             .collect();
         // burn-in/thinning scaled to the per-class budget: the chain needs
         // ~k accepted swaps to decorrelate a size-k state.
@@ -431,6 +406,110 @@ impl<'a> Preprocessor<'a> {
         let meta = source.resolve(Some(self.rt), ds)?;
         Ok(Metadata::clone(&meta))
     }
+}
+
+// ---------------------------------------------------------------------------
+// Per-class selection stages (runtime-free, parallel)
+// ---------------------------------------------------------------------------
+//
+// The greedy stages of pre-processing are pure functions of the class
+// kernels, so they neither need the PJRT runtime nor a `Preprocessor` —
+// the selection bench drives them directly over synthetic kernels, and
+// the `Preprocessor` methods above are thin delegates. Each class is an
+// independent greedy problem; all three stages fan out over
+// `par_map` (kernel *construction* already did), which is what makes
+// preprocessing scale with cores instead of class count.
+
+/// SGE: `n_subsets` stochastic-greedy subsets of size `k`, assembled
+/// class-wise under `kind`. One RNG stream per `(subset, class)` cell is
+/// drawn from `rng` up front in a fixed order, so the result is a pure
+/// function of the inputs regardless of how the parallel fan-out
+/// schedules classes.
+pub fn sge_subsets_from_kernels(
+    n_train: usize,
+    kernels: &ClassKernels,
+    kind: SetFunctionKind,
+    k: usize,
+    n_subsets: usize,
+    epsilon: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
+    let alloc = proportional_allocation(&sizes, k.min(n_train));
+    let classes = kernels.per_class.len();
+    let jobs: Vec<(usize, usize, u64)> = (0..n_subsets)
+        .flat_map(|si| (0..classes).map(move |ci| (si, ci)))
+        .map(|(si, ci)| (si, ci, rng.next_u64()))
+        .collect();
+    let picks: Vec<(usize, Vec<usize>)> = par_map(jobs, |(si, ci, seed)| {
+        let ck = &kernels.per_class[ci];
+        let kc = alloc[ci];
+        if kc == 0 {
+            return (si, Vec::new());
+        }
+        let mut f = kind.build_view(ck.sim.view());
+        let mut cell_rng = Rng::new(seed);
+        let trace = greedy_maximize(
+            f.as_mut(),
+            kc,
+            GreedyMode::Stochastic { epsilon },
+            kind.lazy_safe(),
+            &mut cell_rng,
+        );
+        (si, trace.selected.iter().map(|&l| ck.indices[l]).collect())
+    });
+    let mut out = vec![Vec::with_capacity(k); n_subsets];
+    for (si, mut local) in picks {
+        out[si].append(&mut local);
+    }
+    for subset in &mut out {
+        subset.sort_unstable();
+    }
+    out
+}
+
+/// Fixed subset by full (lazy) greedy under `kind`, classes in parallel
+/// (lazy greedy is deterministic — no RNG is consumed).
+pub fn fixed_subset_from_kernels(
+    n_train: usize,
+    kernels: &ClassKernels,
+    kind: SetFunctionKind,
+    k: usize,
+) -> Vec<usize> {
+    let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
+    let alloc = proportional_allocation(&sizes, k.min(n_train));
+    let classes: Vec<usize> = (0..kernels.per_class.len()).collect();
+    let picks: Vec<Vec<usize>> = par_map(classes, |ci| {
+        let ck = &kernels.per_class[ci];
+        let kc = alloc[ci];
+        if kc == 0 {
+            return Vec::new();
+        }
+        let mut f = kind.build_view(ck.sim.view());
+        let mut rng = Rng::new(0); // unused by Lazy/Naive modes
+        let trace =
+            greedy_maximize(f.as_mut(), kc, GreedyMode::Lazy, kind.lazy_safe(), &mut rng);
+        trace.selected.iter().map(|&l| ck.indices[l]).collect()
+    });
+    let mut subset: Vec<usize> = picks.into_iter().flatten().collect();
+    subset.sort_unstable();
+    subset
+}
+
+/// WRE: per-class GreedySampleImportance sweep under `kind`, Taylor-
+/// softmax normalized (paper Eq. 4–5), classes in parallel (the sweep is
+/// deterministic per class).
+pub fn wre_distribution_from_kernels(
+    kernels: &ClassKernels,
+    kind: SetFunctionKind,
+) -> Vec<ClassProbs> {
+    let refs: Vec<&crate::kernel::ClassKernel> = kernels.per_class.iter().collect();
+    par_map(refs, |ck| {
+        let mut f = kind.build_view(ck.sim.view());
+        let gains = sample_importance(f.as_mut(), kind.lazy_safe());
+        let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
+        ClassProbs { indices: ck.indices.clone(), probs: taylor_softmax(&g64) }
+    })
 }
 
 // ---------------------------------------------------------------------------

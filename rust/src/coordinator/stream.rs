@@ -68,8 +68,9 @@ pub struct StreamStats {
     pub peak_inflight: usize,
     /// Peak bytes of embeddings + kernels alive at once.
     pub peak_bytes: usize,
-    /// Bytes the batch path would have held at its peak (full embedding
-    /// matrix + all class kernels).
+    /// Bytes the dense-kernel batch path would have held at its peak
+    /// (full embedding matrix + all dense class kernels) — the reference
+    /// axis for the paper's memory-limitation comparison.
     pub batch_bytes: usize,
 }
 
@@ -84,6 +85,10 @@ struct ClassPayload {
     sge_fn: crate::submod::SetFunctionKind,
     wre_fn: crate::submod::SetFunctionKind,
     epsilon: f64,
+    /// Sparse top-`knn` class blocks (`None` = dense) — the streaming
+    /// path honors the same option as the batch path, and the two
+    /// memory levers compound.
+    knn: Option<usize>,
 }
 
 /// Per-class results folded back into [`Metadata`].
@@ -96,14 +101,26 @@ struct ClassResult {
 }
 
 fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> ClassResult {
-    let kern = native_similarity(&p.emb, crate::kernel::SimMetric::Cosine);
+    // dense or sparse top-knn per the preprocessing option — the
+    // bounded-memory pipeline and kernel sparsification compound
+    let sim = match p.knn {
+        None => crate::kernel::ClassSim::Dense(native_similarity(
+            &p.emb,
+            crate::kernel::SimMetric::Cosine,
+        )),
+        Some(k) => crate::kernel::ClassSim::Sparse(crate::kernel::sparse::sparse_native(
+            &p.emb,
+            crate::kernel::SimMetric::Cosine,
+            k,
+        )),
+    };
     let mut rng = Rng::new(p.seed);
     let sge_picks: Vec<Vec<usize>> = (0..p.n_sge)
         .map(|_| {
             if p.kc == 0 {
                 return Vec::new();
             }
-            let mut f = p.sge_fn.build(&kern);
+            let mut f = p.sge_fn.build_view(sim.view());
             greedy_maximize(
                 f.as_mut(),
                 p.kc,
@@ -115,7 +132,7 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
         })
         .collect();
     let probs = {
-        let mut f = p.wre_fn.build(&kern);
+        let mut f = p.wre_fn.build_view(sim.view());
         let gains = sample_importance(f.as_mut(), p.wre_fn.lazy_safe());
         let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
         taylor_softmax(&g64)
@@ -123,13 +140,14 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
     let fixed_picks = if p.kc == 0 {
         Vec::new()
     } else {
-        let mut f = p.wre_fn.build(&kern);
+        let mut f = p.wre_fn.build_view(sim.view());
         greedy_maximize(f.as_mut(), p.kc, GreedyMode::Lazy, p.wre_fn.lazy_safe(), &mut rng)
             .selected
     };
-    // account this class's working set against the peak
+    // account this class's working set against the peak (CSR blocks pay
+    // columns + row index on top of the floats — count real bytes)
     let bytes =
-        (p.emb.rows * p.emb.cols + kern.rows * kern.cols) * std::mem::size_of::<f32>();
+        p.emb.rows * p.emb.cols * std::mem::size_of::<f32>() + sim.memory_bytes();
     let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
     peak.fetch_max(now, Ordering::SeqCst);
     live.fetch_sub(bytes, Ordering::SeqCst);
@@ -239,6 +257,7 @@ impl<'a> Preprocessor<'a> {
                     sge_fn: self.opts.sge_function,
                     wre_fn: self.opts.wre_function,
                     epsilon: self.opts.epsilon,
+                    knn: self.opts.knn,
                 };
                 if tx.send(payload).is_err() {
                     break;
@@ -338,6 +357,36 @@ mod tests {
                 assert!((x - y).abs() < 1e-9, "WRE probs diverged");
             }
         }
+    }
+
+    #[test]
+    fn streaming_honors_sparse_kernels() {
+        let Some(rt) = runtime() else { return };
+        let ds = DatasetId::Trec6Like.generate(6);
+        let p = Preprocessor::with_options(
+            &rt,
+            PreprocessOptions {
+                fraction: 0.1,
+                seed: 6,
+                backend: crate::kernel::SimilarityBackend::Native,
+                knn: Some(8),
+                ..Default::default()
+            },
+        );
+        let (meta, stats) = p.run_streaming(&ds, StreamOptions::default()).unwrap();
+        let k = (0.1 * ds.n_train() as f64).round() as usize;
+        for s in &meta.sge_subsets {
+            assert_eq!(s.len(), k);
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+        }
+        assert_eq!(meta.fixed_dm.len(), k);
+        for c in &meta.wre_classes {
+            let sum: f64 = c.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+        }
+        // sparse blocks shrink the streamed working set further below
+        // the dense batch reference
+        assert!(stats.peak_bytes < stats.batch_bytes);
     }
 
     #[test]

@@ -6,6 +6,27 @@
 //! `(m/c)²` blocks, a `c²` memory saving) and each block feeds the
 //! submodular machinery independently.
 //!
+//! # Representations
+//!
+//! Each class block is stored as one of two [`ClassSim`] representations,
+//! selected by the `knn` preprocessing option:
+//!
+//! * **Dense** (`knn = None`) — the full `n_c × n_c` [`Matrix`] block,
+//!   `n_c²` floats. The paper's recipe.
+//! * **Sparse** (`knn = Some(k)`) — a top-`k` CSR block
+//!   ([`sparse::SparseKernel`]): each point keeps its `k` largest
+//!   similarities (self-loop always kept, symmetrized by union), built
+//!   blockwise from the embeddings without ever materializing the dense
+//!   block. Memory is `≈ n_c·knn` floats instead of `n_c²` — the
+//!   standard sparsification trick for scaling facility-location-style
+//!   selection (CRAIG; Mirzasoleiman et al. 2020). For `knn < n_c` the
+//!   kernel (and hence the selections) is an approximation; `knn ≥ n_c`
+//!   reproduces the dense selections bit-for-bit (see [`sparse`]).
+//!
+//! The submodular stack consumes either through the [`view::KernelView`]
+//! abstraction, so set functions and greedy maximizers are agnostic to
+//! the representation.
+//!
 //! Two backends compute each block:
 //!
 //! * [`SimilarityBackend::Pjrt`] — streams `sim_tile × sim_tile` blocks
@@ -18,6 +39,12 @@
 //!
 //! Metrics: rescaled cosine (default), dot-product, and RBF with the
 //! paper's `kw` parameterization (ablation I.2, Tables 11–12).
+
+pub mod sparse;
+pub mod view;
+
+pub use sparse::{build_sparse_kernel, SparseKernel};
+pub use view::{KernelRef, KernelRow, KernelView};
 
 use anyhow::Result;
 
@@ -56,13 +83,60 @@ pub enum SimilarityBackend {
     Native,
 }
 
+/// One class's similarity block: dense (the paper's recipe) or sparse
+/// top-`knn` CSR (the memory-scaling variant). Either way the submodular
+/// stack reads it through [`ClassSim::view`].
+#[derive(Clone, Debug)]
+pub enum ClassSim {
+    /// `n_c × n_c` block, values in [0, 1] for cosine/RBF.
+    Dense(Matrix),
+    /// Top-`knn` CSR block (`≈ n_c·knn` stored floats).
+    Sparse(SparseKernel),
+}
+
+impl ClassSim {
+    /// Ground-set size of this block.
+    pub fn n(&self) -> usize {
+        match self {
+            ClassSim::Dense(m) => m.rows,
+            ClassSim::Sparse(s) => s.n(),
+        }
+    }
+
+    /// Stored floats — `n_c²` dense, `nnz` sparse (the memory axis of
+    /// the §3.2 report and the selection bench).
+    pub fn stored(&self) -> usize {
+        match self {
+            ClassSim::Dense(m) => m.rows * m.cols,
+            ClassSim::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Actual resident bytes of this block — CSR blocks pay a `u32`
+    /// column per value plus the row index, not just the floats.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            ClassSim::Dense(m) => m.rows * m.cols * std::mem::size_of::<f32>(),
+            ClassSim::Sparse(s) => s.memory_bytes(),
+        }
+    }
+
+    /// Borrowed [`KernelView`] over this block.
+    pub fn view(&self) -> KernelRef<'_> {
+        match self {
+            ClassSim::Dense(m) => KernelRef::Dense(m),
+            ClassSim::Sparse(s) => KernelRef::Sparse(s),
+        }
+    }
+}
+
 /// One class's kernel block.
 #[derive(Clone, Debug)]
 pub struct ClassKernel {
     /// Train-set indices of this class's samples (row/col order of `sim`).
     pub indices: Vec<usize>,
-    /// `n_c × n_c` similarity block, values in [0, 1] for cosine/RBF.
-    pub sim: Matrix,
+    /// This class's similarity block (dense or sparse top-`knn`).
+    pub sim: ClassSim,
 }
 
 /// The class-partitioned similarity structure MILO stores as metadata.
@@ -73,9 +147,10 @@ pub struct ClassKernels {
 }
 
 impl ClassKernels {
-    /// Total kernel memory in floats (for the §3.2 memory-saving report).
+    /// Total stored kernel floats (for the §3.2 memory-saving report and
+    /// the `BENCH_select` memory axis): `Σ n_c²` dense, `Σ nnz_c` sparse.
     pub fn total_elements(&self) -> usize {
-        self.per_class.iter().map(|k| k.sim.rows * k.sim.rows).sum()
+        self.per_class.iter().map(|k| k.sim.stored()).sum()
     }
 }
 
@@ -83,37 +158,58 @@ impl ClassKernels {
 ///
 /// `embeddings` is the full train-split embedding matrix (row = sample);
 /// `partition[c]` lists the train indices of class `c` (from
-/// [`crate::data::Dataset::class_partition`]).
+/// [`crate::data::Dataset::class_partition`]); `knn = Some(k)` builds
+/// sparse top-`k` blocks instead of dense ones.
+///
+/// Class embedding rows are gathered once up front (shared by both
+/// backends) and each class's `indices` vector is cloned exactly once,
+/// into the returned [`ClassKernel`].
 pub fn build_class_kernels(
     runtime: Option<&Runtime>,
     embeddings: &Matrix,
     partition: &[Vec<usize>],
     metric: SimMetric,
     backend: SimilarityBackend,
+    knn: Option<usize>,
 ) -> Result<ClassKernels> {
     let per_class = match backend {
         SimilarityBackend::Native => {
-            // pure Rust: parallel over classes
-            let jobs: Vec<(Vec<usize>, Matrix)> = partition
-                .iter()
-                .map(|idx| (idx.clone(), embeddings.gather_rows(idx)))
-                .collect();
-            par_map(jobs, |(indices, z)| ClassKernel {
-                sim: native_similarity(&z, metric),
-                indices,
+            // pure Rust: gather + similarity fan out over classes
+            let classes: Vec<usize> = (0..partition.len()).collect();
+            par_map(classes, |ci| {
+                let idx = &partition[ci];
+                let z = embeddings.gather_rows(idx);
+                let sim = match knn {
+                    None => ClassSim::Dense(native_similarity(&z, metric)),
+                    Some(k) => ClassSim::Sparse(sparse::sparse_native(&z, metric, k)),
+                };
+                ClassKernel { indices: idx.clone(), sim }
             })
         }
         SimilarityBackend::Pjrt => {
             let rt = runtime.ok_or_else(|| {
                 anyhow::anyhow!("Pjrt backend requires a Runtime")
             })?;
+            // the gather is pure CPU work — hoist it out of the serial
+            // artifact loop and fan it out, but only a bounded window of
+            // classes at a time: gathering every class up front would
+            // transiently duplicate the whole embedding matrix
+            let window = crate::util::threads::max_threads().max(1);
             let mut out = Vec::with_capacity(partition.len());
-            for idx in partition {
-                let z = embeddings.gather_rows(idx);
-                out.push(ClassKernel {
-                    sim: pjrt_similarity(rt, &z, metric)?,
-                    indices: idx.clone(),
-                });
+            for chunk in partition.chunks(window) {
+                let gathered: Vec<Matrix> = par_map(
+                    chunk.iter().collect::<Vec<_>>(),
+                    |idx| embeddings.gather_rows(idx),
+                );
+                for (idx, z) in chunk.iter().zip(gathered) {
+                    let sim = match knn {
+                        None => ClassSim::Dense(pjrt_similarity(rt, &z, metric)?),
+                        Some(k) => {
+                            ClassSim::Sparse(sparse::sparse_pjrt(rt, &z, metric, k)?)
+                        }
+                    };
+                    out.push(ClassKernel { indices: idx.clone(), sim });
+                }
             }
             out
         }
@@ -326,14 +422,61 @@ mod tests {
             &partition,
             SimMetric::Cosine,
             SimilarityBackend::Native,
+            None,
         )
         .unwrap();
         assert_eq!(ck.per_class.len(), 3);
-        assert_eq!(ck.per_class[0].sim.rows, 10);
-        assert_eq!(ck.per_class[1].sim.rows, 15);
-        assert_eq!(ck.per_class[2].sim.rows, 5);
+        assert_eq!(ck.per_class[0].sim.n(), 10);
+        assert_eq!(ck.per_class[1].sim.n(), 15);
+        assert_eq!(ck.per_class[2].sim.n(), 5);
         // memory saving vs full kernel: 10²+15²+5² ≪ 30²
         assert!(ck.total_elements() < 30 * 30);
+    }
+
+    #[test]
+    fn class_kernels_sparse_structure() {
+        let z = rand_embed(60, 8, 7);
+        let partition = vec![
+            (0..30).collect::<Vec<_>>(),
+            (30..55).collect(),
+            (55..60).collect(),
+        ];
+        let dense = build_class_kernels(
+            None,
+            &z,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+            None,
+        )
+        .unwrap();
+        let sparse = build_class_kernels(
+            None,
+            &z,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+            Some(4),
+        )
+        .unwrap();
+        assert_eq!(sparse.per_class.len(), 3);
+        for (d, s) in dense.per_class.iter().zip(&sparse.per_class) {
+            assert_eq!(d.indices, s.indices);
+            assert_eq!(d.sim.n(), s.sim.n());
+        }
+        // top-4 blocks store far fewer floats than the dense 30²+25²+5²
+        assert!(
+            sparse.total_elements() * 2 < dense.total_elements(),
+            "sparse {} vs dense {}",
+            sparse.total_elements(),
+            dense.total_elements()
+        );
+        // every row of the tiny class (n_c = 5, knn = 4) keeps its knn
+        // entries, self-loop included
+        match &sparse.per_class[2].sim {
+            ClassSim::Sparse(k) => assert!(k.nnz() >= 5 * 4),
+            ClassSim::Dense(_) => panic!("expected a sparse block"),
+        }
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! Sparse top-`knn` similarity kernels: CSR class blocks built blockwise
+//! from embeddings, without ever materializing the dense `n_c × n_c`
+//! matrix.
+//!
+//! # Layout
+//!
+//! [`SparseKernel`] is standard CSR over a square `n × n` kernel:
+//! `row_ptr[j]..row_ptr[j+1]` indexes parallel `cols`/`vals` slices
+//! holding row `j`'s stored entries, columns sorted ascending. Memory is
+//! `n·r̄` floats (plus `u32` columns) for an average stored row of `r̄`
+//! entries, versus `n²` for a dense block — at `knn ≪ n_c` that is the
+//! `n_c·knn` vs `n_c²` saving the selection bench (`BENCH_select.json`)
+//! tracks, and it shrinks every artifact the store/serve layers ship.
+//!
+//! # Construction
+//!
+//! [`build_sparse_kernel`] streams `STRIP_ROWS × n` (native) or
+//! `sim_tile × n` (PJRT) row strips of the similarity matrix, keeps each
+//! row's `knn` largest similarities (the self-loop is always kept, and
+//! ties break toward the smaller column so construction is fully
+//! deterministic), and then **symmetrizes by union**: whenever `(i, j)`
+//! is kept, `(j, i)` is stored too with the same value. Stored rows
+//! therefore hold between `knn` and `n` entries; the kernel stays
+//! symmetric, which every gain oracle in [`crate::submod`] relies on.
+//!
+//! Peak construction memory is one strip plus the kept entries — the
+//! dense block never exists, for either backend.
+//!
+//! # Semantics: when sparse changes selections
+//!
+//! An unstored pair has similarity exactly `0.0` (distance `1.0`), so
+//! for `knn < n_c` the sparse kernel is an **approximation**: facility
+//! location / graph-cut gains ignore weak similarities below the top-k
+//! cut, and the disparity functions saturate far pairs at distance 1.
+//! Selections can (and usually do) differ from the dense kernel's — this
+//! is the standard sparsification trade of the CRAIG line of work, and
+//! the property suite in `rust/tests/sparse_selection.rs` bounds it from
+//! the other side: with `knn ≥ n_c` every row is complete, the per-entry
+//! f32 operations happen in exactly the dense order, and selections are
+//! **bit-for-bit identical** to the dense path for every set function ×
+//! greedy mode.
+
+use std::cmp::Ordering;
+
+use anyhow::Result;
+
+use crate::runtime::{Arg, Runtime};
+use crate::tensor::Matrix;
+use crate::util::math::round_up;
+
+use super::{SimMetric, SimilarityBackend};
+
+/// Rows per native construction strip: large enough to amortize the
+/// block matmul, small enough that a strip (`STRIP_ROWS × n_c` floats)
+/// stays cache-resident for class-partition sizes.
+const STRIP_ROWS: usize = 128;
+
+/// CSR top-`knn` similarity kernel. See the [module docs](self) for the
+/// layout and construction contract.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseKernel {
+    n: usize,
+    row_ptr: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+impl SparseKernel {
+    /// Ground-set size (the kernel is `n × n`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored entries.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Whether every pair is stored (`knn ≥ n` construction): complete
+    /// kernels reproduce dense gains bit-for-bit.
+    pub fn is_complete(&self) -> bool {
+        self.nnz() == self.n * self.n
+    }
+
+    /// Actual resident bytes: values + `u32` columns + the row index.
+    pub fn memory_bytes(&self) -> usize {
+        self.vals.len() * std::mem::size_of::<f32>()
+            + self.cols.len() * std::mem::size_of::<u32>()
+            + self.row_ptr.len() * std::mem::size_of::<usize>()
+    }
+
+    /// Row `j` as parallel `(cols, vals)` slices, columns ascending.
+    pub fn row(&self, j: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.row_ptr[j], self.row_ptr[j + 1]);
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// `s[i, j]`, `0.0` when the pair is not stored.
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(p) => vals[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Sparsify an existing dense kernel: per-row top-`knn` (self-loop
+    /// kept, smaller-column tie-break), symmetrized by union. Values are
+    /// copied as-is — used by tests and by consumers that already hold a
+    /// dense block.
+    pub fn from_dense(m: &Matrix, knn: usize) -> SparseKernel {
+        assert_eq!(m.rows, m.cols, "kernel must be square");
+        let n = m.rows;
+        let knn = knn.max(1);
+        let rows: Vec<Vec<(u32, f32)>> =
+            (0..n).map(|i| row_topk(m.row(i), i, knn)).collect();
+        symmetrize(n, rows)
+    }
+}
+
+/// Keep row `i`'s `knn` largest scores. The self-loop (`diag == i`) is
+/// always kept; among the rest, ties break toward the smaller column so
+/// the result is a deterministic function of the scores. Returned
+/// entries are sorted by column.
+fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
+    let n = scores.len();
+    debug_assert!(diag < n && knn >= 1);
+    if knn >= n {
+        return scores.iter().enumerate().map(|(c, &v)| (c as u32, v)).collect();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).filter(|&c| c as usize != diag).collect();
+    let keep = knn - 1; // the diagonal occupies one of the knn slots
+    let by_score_then_col = |a: &u32, b: &u32| {
+        let (sa, sb) = (scores[*a as usize], scores[*b as usize]);
+        sb.partial_cmp(&sa).unwrap_or(Ordering::Equal).then(a.cmp(b))
+    };
+    if keep == 0 {
+        idx.clear();
+    } else {
+        // knn < n ⇒ keep ≤ n − 2 < idx.len(), so the partition is valid
+        idx.select_nth_unstable_by(keep - 1, by_score_then_col);
+        idx.truncate(keep);
+    }
+    idx.push(diag as u32);
+    idx.sort_unstable();
+    idx.into_iter().map(|c| (c, scores[c as usize])).collect()
+}
+
+/// Union-symmetrize per-row kept lists (each sorted by column) and pack
+/// them into CSR: whenever `(i, j)` was kept, `(j, i)` is stored with
+/// the same value (similarities are symmetric, so copying the value is
+/// exact — and it *enforces* symmetry for backends whose float results
+/// are only symmetric to tolerance).
+fn symmetrize(n: usize, mut rows: Vec<Vec<(u32, f32)>>) -> SparseKernel {
+    let mut mirrors: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for &(j, v) in &rows[i] {
+            let j = j as usize;
+            if j == i {
+                continue;
+            }
+            if rows[j].binary_search_by_key(&(i as u32), |e| e.0).is_err() {
+                mirrors[j].push((i as u32, v));
+            }
+        }
+    }
+    for (row, mut extra) in rows.iter_mut().zip(mirrors) {
+        if extra.is_empty() {
+            continue;
+        }
+        row.append(&mut extra);
+        row.sort_unstable_by_key(|e| e.0);
+    }
+    let nnz: usize = rows.iter().map(|r| r.len()).sum();
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut cols = Vec::with_capacity(nnz);
+    let mut vals = Vec::with_capacity(nnz);
+    row_ptr.push(0);
+    for row in rows {
+        for (c, v) in row {
+            cols.push(c);
+            vals.push(v);
+        }
+        row_ptr.push(cols.len());
+    }
+    SparseKernel { n, row_ptr, cols, vals }
+}
+
+/// Build a sparse top-`knn` kernel over `z` (`n × e` embeddings) under
+/// `metric`, via the requested similarity backend. `knn` is clamped to
+/// `[1, n]`; `knn ≥ n` yields a complete kernel whose gains are
+/// bit-identical to the dense path's.
+pub fn build_sparse_kernel(
+    runtime: Option<&Runtime>,
+    z: &Matrix,
+    metric: SimMetric,
+    backend: SimilarityBackend,
+    knn: usize,
+) -> Result<SparseKernel> {
+    match backend {
+        SimilarityBackend::Native => Ok(sparse_native(z, metric, knn)),
+        SimilarityBackend::Pjrt => {
+            let rt = runtime.ok_or_else(|| {
+                anyhow::anyhow!("Pjrt backend requires a Runtime")
+            })?;
+            sparse_pjrt(rt, z, metric, knn)
+        }
+    }
+}
+
+/// `r1 − r0` contiguous rows of `src` as their own matrix (the strip
+/// operand for the blockwise matmul).
+fn block_rows(src: &Matrix, r0: usize, r1: usize) -> Matrix {
+    Matrix::from_vec(r1 - r0, src.cols, src.data()[r0 * src.cols..r1 * src.cols].to_vec())
+        .expect("block rows dims are consistent by construction")
+}
+
+/// Native blockwise construction. Per-entry f32 values are computed by
+/// the exact operations [`super::native_similarity`] performs (same
+/// normalized operands, same strip matmul loop, same per-entry
+/// transform), so a complete (`knn ≥ n`) sparse kernel holds the exact
+/// dense values.
+pub fn sparse_native(z: &Matrix, metric: SimMetric, knn: usize) -> SparseKernel {
+    let n = z.rows;
+    if n == 0 {
+        return SparseKernel { n: 0, row_ptr: vec![0], cols: Vec::new(), vals: Vec::new() };
+    }
+    let knn = knn.clamp(1, n);
+    match metric {
+        SimMetric::Cosine => {
+            let mut zn = z.clone();
+            zn.l2_normalize_rows();
+            let mut rows = Vec::with_capacity(n);
+            let mut at = 0;
+            while at < n {
+                let hi = (at + STRIP_ROWS).min(n);
+                let block = block_rows(&zn, at, hi);
+                let mut strip = block.matmul_nt(&zn);
+                for v in strip.data_mut().iter_mut() {
+                    *v = 0.5 + 0.5 * *v;
+                }
+                for r in 0..(hi - at) {
+                    rows.push(row_topk(strip.row(r), at + r, knn));
+                }
+                at = hi;
+            }
+            symmetrize(n, rows)
+        }
+        SimMetric::Dot => {
+            let mut rows = Vec::with_capacity(n);
+            let mut min = f32::MAX;
+            let mut at = 0;
+            while at < n {
+                let hi = (at + STRIP_ROWS).min(n);
+                let block = block_rows(z, at, hi);
+                let strip = block.matmul_nt(z);
+                min = strip.data().iter().cloned().fold(min, f32::min);
+                for r in 0..(hi - at) {
+                    rows.push(row_topk(strip.row(r), at + r, knn));
+                }
+                at = hi;
+            }
+            let mut kernel = symmetrize(n, rows);
+            // additive shift to non-negativity (paper I.2). The shift is
+            // monotone, so applying it after top-k selection keeps the
+            // kept set identical to selecting on shifted values.
+            if min < 0.0 {
+                for v in kernel.vals.iter_mut() {
+                    *v -= min;
+                }
+            }
+            kernel
+        }
+        SimMetric::Rbf { kw } => {
+            // One pass over squared-distance strips: keep each row's knn
+            // *smallest* d² (similarity is monotone-decreasing in d²)
+            // while accumulating the matrix mean — in dense row-major
+            // order, so gamma matches the dense parameterization exactly.
+            let mut sq = vec![0.0f32; n];
+            for (i, s) in sq.iter_mut().enumerate() {
+                *s = z.row(i).iter().map(|v| v * v).sum();
+            }
+            let mut rows = Vec::with_capacity(n);
+            let mut sum = 0.0f64;
+            let mut at = 0;
+            // one reused buffer of negated d² scores (smallest d² =
+            // largest similarity) — no per-row allocation
+            let mut neg = vec![0.0f32; n];
+            while at < n {
+                let hi = (at + STRIP_ROWS).min(n);
+                let block = block_rows(z, at, hi);
+                let strip = block.matmul_nt(z);
+                for r in 0..(hi - at) {
+                    let i = at + r;
+                    let dots = strip.row(r);
+                    for j in 0..n {
+                        let v = (sq[i] + sq[j] - 2.0 * dots[j]).max(0.0);
+                        neg[j] = -v;
+                        sum += v as f64;
+                    }
+                    let mut kept = row_topk(&neg, i, knn);
+                    for e in kept.iter_mut() {
+                        e.1 = -e.1;
+                    }
+                    rows.push(kept);
+                }
+                at = hi;
+            }
+            let mean = (sum / (n * n) as f64).max(1e-12);
+            let gamma = (1.0 / (kw * mean)) as f32;
+            let mut kernel = symmetrize(n, rows);
+            for v in kernel.vals.iter_mut() {
+                *v = (-gamma * *v).exp();
+            }
+            kernel
+        }
+    }
+}
+
+/// Dense row-major mean of the pairwise squared distances, accumulated
+/// blockwise — the exact value (same per-entry f32 arithmetic, same f64
+/// summation order) `pairwise_sq_dists(z).mean()` produces, without the
+/// `n × n` matrix.
+fn mean_sq_dist_blockwise(z: &Matrix) -> f64 {
+    let n = z.rows;
+    if n == 0 {
+        return 0.0;
+    }
+    let mut sq = vec![0.0f32; n];
+    for (i, s) in sq.iter_mut().enumerate() {
+        *s = z.row(i).iter().map(|v| v * v).sum();
+    }
+    let mut sum = 0.0f64;
+    let mut at = 0;
+    while at < n {
+        let hi = (at + STRIP_ROWS).min(n);
+        let block = block_rows(z, at, hi);
+        let strip = block.matmul_nt(z);
+        for r in 0..(hi - at) {
+            let i = at + r;
+            let dots = strip.row(r);
+            for j in 0..n {
+                sum += (sq[i] + sq[j] - 2.0 * dots[j]).max(0.0) as f64;
+            }
+        }
+        at = hi;
+    }
+    sum / (n * n) as f64
+}
+
+/// PJRT blockwise construction: one `sim_tile × n` strip at a time
+/// through the Pallas similarity artifact (the same tile calls
+/// [`super::pjrt_similarity`] makes, minus the `n × n` assembly). RBF
+/// gamma is derived blockwise natively so it matches the dense PJRT
+/// path's parameterization exactly.
+pub fn sparse_pjrt(
+    rt: &Runtime,
+    z: &Matrix,
+    metric: SimMetric,
+    knn: usize,
+) -> Result<SparseKernel> {
+    let n = z.rows;
+    if n == 0 {
+        return Ok(SparseKernel {
+            n: 0,
+            row_ptr: vec![0],
+            cols: Vec::new(),
+            vals: Vec::new(),
+        });
+    }
+    let knn = knn.clamp(1, n);
+    let tile = rt.manifest().sim_tile;
+    let e = z.cols;
+    let np = round_up(n, tile);
+    let mut zp = Matrix::zeros(np, e);
+    zp.write_rows(0, z);
+
+    let artifact;
+    let mut gamma = 0.0f32;
+    match metric {
+        SimMetric::Cosine => artifact = format!("sim_cosine_e{e}"),
+        SimMetric::Dot => artifact = format!("sim_dot_e{e}"),
+        SimMetric::Rbf { kw } => {
+            artifact = format!("sim_rbf_e{e}");
+            gamma = (1.0 / (kw * mean_sq_dist_blockwise(z).max(1e-12))) as f32;
+        }
+    }
+
+    let tiles = np / tile;
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    let mut min = f32::MAX;
+    let mut strip = vec![0.0f32; tile * np];
+    for bi in 0..tiles {
+        let a = Matrix::from_vec(
+            tile,
+            e,
+            zp.data()[bi * tile * e..(bi + 1) * tile * e].to_vec(),
+        )?;
+        for bj in 0..tiles {
+            let b = Matrix::from_vec(
+                tile,
+                e,
+                zp.data()[bj * tile * e..(bj + 1) * tile * e].to_vec(),
+            )?;
+            let res = match metric {
+                SimMetric::Rbf { .. } => rt.execute(
+                    &artifact,
+                    &[Arg::F32(a.data()), Arg::F32(b.data()), Arg::F32(&[gamma])],
+                )?,
+                _ => rt.execute(&artifact, &[Arg::F32(a.data()), Arg::F32(b.data())])?,
+            };
+            let block = &res[0];
+            for r in 0..tile {
+                strip[r * np + bj * tile..r * np + (bj + 1) * tile]
+                    .copy_from_slice(&block[r * tile..(r + 1) * tile]);
+            }
+        }
+        for r in 0..tile {
+            let i = bi * tile + r;
+            if i >= n {
+                break;
+            }
+            // crop padded columns before selection — padded rows/cols
+            // must never become edges
+            let srow = &strip[r * np..r * np + n];
+            if matches!(metric, SimMetric::Dot) {
+                min = srow.iter().cloned().fold(min, f32::min);
+            }
+            rows.push(row_topk(srow, i, knn));
+        }
+    }
+    let mut kernel = symmetrize(n, rows);
+    // dot metric: shift after selection (monotone) over the cropped
+    // min, matching the dense PJRT path
+    if matches!(metric, SimMetric::Dot) && min < 0.0 {
+        for v in kernel.vals.iter_mut() {
+            *v -= min;
+        }
+    }
+    Ok(kernel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::native_similarity;
+    use crate::testkit::{random_embeddings, random_kernel};
+
+    fn assert_valid(k: &SparseKernel, knn: usize) {
+        let n = k.n();
+        assert_eq!(k.row_ptr.len(), n + 1);
+        for j in 0..n {
+            let (cols, vals) = k.row(j);
+            assert_eq!(cols.len(), vals.len());
+            assert!(cols.len() >= knn.min(n), "row {j} lost entries");
+            assert!(cols.len() <= n);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {j} not sorted/unique");
+            assert!(cols.binary_search(&(j as u32)).is_ok(), "row {j} lost its self-loop");
+        }
+        // symmetric union with equal values
+        for i in 0..n {
+            let (cols, vals) = k.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                assert_eq!(k.at(c as usize, i), v, "asymmetric at ({i},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn from_dense_keeps_topk_and_symmetrizes() {
+        let m = random_kernel(20, 3);
+        for knn in [1, 2, 5, 10, 20, 64] {
+            let s = SparseKernel::from_dense(&m, knn);
+            assert_valid(&s, knn.min(20));
+            for i in 0..20 {
+                for j in 0..20 {
+                    let v = s.at(i, j);
+                    assert!(v == 0.0 || v == m.at(i, j), "({i},{j}) holds a foreign value");
+                }
+            }
+        }
+        // complete sparsification stores everything
+        let full = SparseKernel::from_dense(&m, 20);
+        assert!(full.is_complete());
+        assert_eq!(full.nnz(), 400);
+    }
+
+    #[test]
+    fn native_complete_matches_dense_values_exactly() {
+        let z = random_embeddings(30, 8, 5);
+        for metric in [SimMetric::Cosine, SimMetric::Dot, SimMetric::Rbf { kw: 0.3 }] {
+            let dense = native_similarity(&z, metric);
+            let sparse = sparse_native(&z, metric, 30);
+            assert!(sparse.is_complete(), "{metric:?}");
+            for i in 0..30 {
+                for j in 0..30 {
+                    assert_eq!(
+                        dense.at(i, j).to_bits(),
+                        sparse.at(i, j).to_bits(),
+                        "{metric:?} ({i},{j}): {} vs {}",
+                        dense.at(i, j),
+                        sparse.at(i, j),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn native_sparse_rows_hold_the_largest_similarities() {
+        let z = random_embeddings(40, 6, 7);
+        let dense = native_similarity(&z, SimMetric::Cosine);
+        let knn = 5;
+        let sparse = sparse_native(&z, SimMetric::Cosine, knn);
+        assert_valid(&sparse, knn);
+        // every stored value matches the dense entry, and each row's own
+        // top-k (pre-union) can't have dropped a strictly larger
+        // similarity than one it kept: the knn-th largest dense value of
+        // row i must be stored
+        for i in 0..40 {
+            let mut row: Vec<f32> = (0..40).map(|j| dense.at(i, j)).collect();
+            row.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let threshold = row[knn - 1];
+            let (cols, vals) = sparse.row(i);
+            let stored_max_missing = (0..40)
+                .filter(|j| cols.binary_search(&(*j as u32)).is_err())
+                .map(|j| dense.at(i, j))
+                .fold(f32::MIN, f32::max);
+            assert!(
+                stored_max_missing <= threshold + 1e-6,
+                "row {i} dropped a top-{knn} similarity"
+            );
+            for (&c, &v) in cols.iter().zip(vals) {
+                assert_eq!(v.to_bits(), dense.at(i, c as usize).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes_are_handled() {
+        // n = 1: one self-loop, complete
+        let z1 = random_embeddings(1, 4, 1);
+        let s = sparse_native(&z1, SimMetric::Cosine, 8);
+        assert_eq!(s.n(), 1);
+        assert!(s.is_complete());
+        assert_eq!(s.row(0).0, &[0u32]);
+        // n = 0: empty
+        let z0 = Matrix::zeros(0, 4);
+        let s0 = sparse_native(&z0, SimMetric::Cosine, 8);
+        assert_eq!(s0.n(), 0);
+        assert_eq!(s0.nnz(), 0);
+        // knn ≥ n clamps to complete for every small n
+        for n in 2..6 {
+            let z = random_embeddings(n, 4, n as u64);
+            let s = sparse_native(&z, SimMetric::Cosine, 64);
+            assert!(s.is_complete(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn rbf_gamma_matches_dense_parameterization() {
+        let z = random_embeddings(25, 6, 9);
+        // the blockwise mean must equal the dense pairwise mean exactly
+        let dense = {
+            let n = z.rows;
+            let mut sq = vec![0.0f32; n];
+            for (i, s) in sq.iter_mut().enumerate() {
+                *s = z.row(i).iter().map(|v| v * v).sum();
+            }
+            let d = z.matmul_nt(&z);
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m.set(i, j, (sq[i] + sq[j] - 2.0 * d.at(i, j)).max(0.0));
+                }
+            }
+            m.mean()
+        };
+        assert_eq!(dense.to_bits(), mean_sq_dist_blockwise(&z).to_bits());
+    }
+
+    #[test]
+    fn pjrt_sparse_complete_matches_dense_pjrt() {
+        let Some(rt) = crate::testkit::artifacts_or_skip() else { return };
+        let e = rt.manifest().embed_dim;
+        let z = random_embeddings(70, e, 11); // non-multiple of tile
+        for metric in [SimMetric::Cosine, SimMetric::Rbf { kw: 0.1 }] {
+            let dense = crate::kernel::pjrt_similarity(&rt, &z, metric).unwrap();
+            let sparse = sparse_pjrt(&rt, &z, metric, 70).unwrap();
+            assert!(sparse.is_complete());
+            for i in 0..70 {
+                for j in 0..70 {
+                    // the union copies s[i,j] over s[j,i] where the PJRT
+                    // output is asymmetric at float level, so compare
+                    // against either orientation
+                    let got = sparse.at(i, j);
+                    assert!(
+                        got == dense.at(i, j) || got == dense.at(j, i),
+                        "{metric:?} ({i},{j}): {got} vs {} / {}",
+                        dense.at(i, j),
+                        dense.at(j, i),
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! `KernelView` — the similarity-kernel access abstraction the whole
+//! submodular stack is routed over.
+//!
+//! The set functions in [`crate::submod`] never touch a concrete kernel
+//! type: they are generic over this trait, so one implementation of each
+//! gain oracle serves both the dense `n_c × n_c` class blocks
+//! ([`crate::tensor::Matrix`]) and the sparse top-`knn` CSR blocks
+//! ([`crate::kernel::SparseKernel`]). The contract:
+//!
+//! * the kernel is square over `n` points, symmetric, with values in
+//!   `[0, 1]` for the cosine/RBF metrics;
+//! * a pair that is **not stored** has similarity exactly `0.0`
+//!   (equivalently: distance `1 − 0 = 1` for the disparity functions) —
+//!   sparse representations are "dense matrices with implicit zeros", so
+//!   every gain formula stays well-defined;
+//! * [`KernelView::kernel_row`] hands back the storage-native row form:
+//!   a contiguous `&[f32]` for dense kernels (the auto-vectorized hot
+//!   loops are preserved verbatim), or parallel `(cols, vals)` slices
+//!   for CSR rows. Rows are iterated in ascending column order in both
+//!   forms, which is what makes a *complete* sparse kernel (`knn ≥ n`)
+//!   reproduce dense gains bit-for-bit: identical f32 operations in
+//!   identical order.
+
+use crate::tensor::Matrix;
+
+use super::sparse::SparseKernel;
+
+/// One kernel row, in its storage-native form. Both forms iterate
+/// entries in ascending column order.
+pub enum KernelRow<'a> {
+    /// A contiguous dense row (`len == n`).
+    Dense(&'a [f32]),
+    /// A CSR row: `cols[t]` holds the column of `vals[t]`, sorted
+    /// ascending, no duplicates.
+    Sparse { cols: &'a [u32], vals: &'a [f32] },
+}
+
+/// Read access to a square similarity kernel. See the [module
+/// docs](self) for the contract.
+pub trait KernelView {
+    /// Ground-set size (the kernel is `n × n`).
+    fn n(&self) -> usize;
+
+    /// Stored entries — `n²` for dense, `nnz` for sparse (the memory
+    /// axis of the §3.2 report and the selection bench).
+    fn stored(&self) -> usize;
+
+    /// Whether every pair is stored. Complete kernels skip the
+    /// implicit-zero handling (e.g. disparity-min's distance-1 clamp),
+    /// which is what keeps the dense hot paths byte-for-byte unchanged.
+    fn is_complete(&self) -> bool;
+
+    /// `s[i, j]`; `0.0` for unstored sparse pairs.
+    fn value_at(&self, i: usize, j: usize) -> f32;
+
+    /// Row `j` in storage-native form.
+    fn kernel_row(&self, j: usize) -> KernelRow<'_>;
+}
+
+impl KernelView for Matrix {
+    #[inline]
+    fn n(&self) -> usize {
+        // a rectangular "kernel" would silently truncate the oracle
+        // state zips — fail loudly, as the old per-oracle asserts did
+        assert_eq!(self.rows, self.cols, "kernel must be square");
+        self.rows
+    }
+
+    #[inline]
+    fn stored(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    #[inline]
+    fn is_complete(&self) -> bool {
+        true
+    }
+
+    #[inline]
+    fn value_at(&self, i: usize, j: usize) -> f32 {
+        self.at(i, j)
+    }
+
+    #[inline]
+    fn kernel_row(&self, j: usize) -> KernelRow<'_> {
+        KernelRow::Dense(self.row(j))
+    }
+}
+
+impl KernelView for SparseKernel {
+    #[inline]
+    fn n(&self) -> usize {
+        self.n()
+    }
+
+    #[inline]
+    fn stored(&self) -> usize {
+        self.nnz()
+    }
+
+    #[inline]
+    fn is_complete(&self) -> bool {
+        self.is_complete()
+    }
+
+    #[inline]
+    fn value_at(&self, i: usize, j: usize) -> f32 {
+        self.at(i, j)
+    }
+
+    #[inline]
+    fn kernel_row(&self, j: usize) -> KernelRow<'_> {
+        let (cols, vals) = self.row(j);
+        KernelRow::Sparse { cols, vals }
+    }
+}
+
+/// References are views too, so `SetFunctionKind::build(&matrix)` and
+/// the boxed oracles keep working over borrowed kernels.
+impl<K: KernelView + ?Sized> KernelView for &K {
+    #[inline]
+    fn n(&self) -> usize {
+        (**self).n()
+    }
+
+    #[inline]
+    fn stored(&self) -> usize {
+        (**self).stored()
+    }
+
+    #[inline]
+    fn is_complete(&self) -> bool {
+        (**self).is_complete()
+    }
+
+    #[inline]
+    fn value_at(&self, i: usize, j: usize) -> f32 {
+        (**self).value_at(i, j)
+    }
+
+    #[inline]
+    fn kernel_row(&self, j: usize) -> KernelRow<'_> {
+        (**self).kernel_row(j)
+    }
+}
+
+/// A borrowed kernel of either representation — the runtime-dispatch
+/// companion to the [`KernelView`] generic (one `match` per row access,
+/// with the per-entry loops monomorphized inside each arm).
+#[derive(Clone, Copy, Debug)]
+pub enum KernelRef<'a> {
+    Dense(&'a Matrix),
+    Sparse(&'a SparseKernel),
+}
+
+impl KernelView for KernelRef<'_> {
+    #[inline]
+    fn n(&self) -> usize {
+        match self {
+            KernelRef::Dense(m) => KernelView::n(*m),
+            KernelRef::Sparse(s) => s.n(),
+        }
+    }
+
+    #[inline]
+    fn stored(&self) -> usize {
+        match self {
+            KernelRef::Dense(m) => KernelView::stored(*m),
+            KernelRef::Sparse(s) => s.nnz(),
+        }
+    }
+
+    #[inline]
+    fn is_complete(&self) -> bool {
+        match self {
+            KernelRef::Dense(_) => true,
+            KernelRef::Sparse(s) => s.is_complete(),
+        }
+    }
+
+    #[inline]
+    fn value_at(&self, i: usize, j: usize) -> f32 {
+        match self {
+            KernelRef::Dense(m) => m.at(i, j),
+            KernelRef::Sparse(s) => s.at(i, j),
+        }
+    }
+
+    #[inline]
+    fn kernel_row(&self, j: usize) -> KernelRow<'_> {
+        match self {
+            KernelRef::Dense(m) => KernelRow::Dense(m.row(j)),
+            KernelRef::Sparse(s) => {
+                let (cols, vals) = s.row(j);
+                KernelRow::Sparse { cols, vals }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_view_reports_matrix_shape() {
+        let mut m = Matrix::zeros(3, 3);
+        m.set(1, 2, 0.5);
+        assert_eq!(KernelView::n(&m), 3);
+        assert_eq!(KernelView::stored(&m), 9);
+        assert!(KernelView::is_complete(&m));
+        assert_eq!(m.value_at(1, 2), 0.5);
+        match m.kernel_row(1) {
+            KernelRow::Dense(row) => assert_eq!(row, &[0.0, 0.0, 0.5]),
+            KernelRow::Sparse { .. } => panic!("dense kernel must yield dense rows"),
+        }
+    }
+
+    #[test]
+    fn kernel_ref_delegates_to_both_representations() {
+        let m = crate::testkit::random_kernel(6, 1);
+        let s = SparseKernel::from_dense(&m, 6);
+        let dv = KernelRef::Dense(&m);
+        let sv = KernelRef::Sparse(&s);
+        assert_eq!(dv.n(), sv.n());
+        assert!(dv.is_complete() && sv.is_complete());
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(dv.value_at(i, j), sv.value_at(i, j), "({i},{j})");
+            }
+        }
+    }
+}

@@ -15,7 +15,9 @@
 //!   cached resolution — the paper's "train multiple models at no
 //!   additional cost" as a one-liner.
 //! * **L3 (this crate)** — the coordinator: dataset pipeline, submodular
-//!   maximization (SGE / WRE), the easy-to-hard curriculum, baselines
+//!   maximization (SGE / WRE) over dense *or* sparse top-`knn` class
+//!   kernels (one [`kernel::KernelView`] abstraction, per-class greedy
+//!   fanned out across cores), the easy-to-hard curriculum, baselines
 //!   (Random, AdaptiveRandom, CraigPB, GradMatchPB, Glister, pruning),
 //!   the trainer, and the hyper-parameter tuner (Random/TPE × Hyperband).
 //! * **Metadata store & selection service** — [`store`] is a versioned,
@@ -90,7 +92,10 @@ pub mod prelude {
     };
     pub use crate::data::{Dataset, DatasetId, Split};
     pub use crate::hpo::{HpoConfig, SearchAlgo, Tuner};
-    pub use crate::kernel::{ClassKernels, SimMetric, SimilarityBackend};
+    pub use crate::kernel::{
+        ClassKernels, ClassSim, KernelRef, KernelView, SimMetric,
+        SimilarityBackend, SparseKernel,
+    };
     pub use crate::report::Table;
     pub use crate::runtime::Runtime;
     pub use crate::selection::{

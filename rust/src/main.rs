@@ -34,11 +34,12 @@ milo — model-agnostic subset selection (MILO reproduction)
 
 USAGE:
   milo preprocess --dataset <name> [--fraction 0.1] [--backend pjrt|native]
+                  [--knn 32|full]  (sparse top-knn kernels vs dense blocks)
                   [--streaming]    (bounded-memory pipeline w/ backpressure)
-  milo precompute --dataset <name> [--fraction 0.1] [--seed 1]
+  milo precompute --dataset <name> [--fraction 0.1] [--seed 1] [--knn 32|full]
                   [--store results/store]   (content-addressed binary store)
   milo serve --dataset <name> | --datasets a,b [--fractions 0.1,0.3]
-             [--addr 127.0.0.1:4077] [--fraction 0.1] [--seed 1]
+             [--addr 127.0.0.1:4077] [--fraction 0.1] [--seed 1] [--knn 32|full]
              [--store results/store] [--featurebased]
              (one event-loop process serves every dataset×fraction entry)
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
@@ -122,6 +123,26 @@ fn backend_of(args: &Args) -> Result<SimilarityBackend> {
     })
 }
 
+/// `--knn N` selects sparse top-`N` kernel blocks (`≈ n_c·N` floats,
+/// O(N) gains); `--knn full` (or omitting the flag) keeps the paper's
+/// dense `n_c²` blocks. Sparse configs address separate store artifacts.
+fn knn_of(args: &Args) -> Result<Option<usize>> {
+    match args.get("knn") {
+        None | Some("full") | Some("dense") => Ok(None),
+        Some(text) => {
+            let k: usize = text.parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "--knn expects a positive integer or 'full', got {text:?}"
+                )
+            })?;
+            if k == 0 {
+                bail!("--knn must be positive (use 'full' for dense kernels)");
+            }
+            Ok(Some(k))
+        }
+    }
+}
+
 fn dataset_of(args: &Args) -> Result<(DatasetId, u64)> {
     let name = args
         .get("dataset")
@@ -165,6 +186,7 @@ fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
             fraction,
             backend: backend_of(args)?,
             seed,
+            knn: knn_of(args)?,
             ..Default::default()
         },
     );
@@ -223,6 +245,7 @@ fn store_metadata(
         fraction: args.get_f64("fraction", 0.1)?,
         backend: backend_of(args)?,
         seed,
+        knn: knn_of(args)?,
         ..Default::default()
     };
     let store = milo::store::MetaStore::shared(args.get_or("store", "results/store"))?;
@@ -289,6 +312,7 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
                 backend: backend_of(args)?,
                 seed,
                 pipeline,
+                knn: knn_of(args)?,
                 ..Default::default()
             };
             let key = milo::store::MetaKey::from_options(ds.name(), &opts);

@@ -162,6 +162,27 @@ pub fn write_frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
     out.extend_from_slice(payload);
 }
 
+/// Append a `SUBSET` frame encoded straight from a `usize` index slice —
+/// byte-identical to `Frame::subset(index, indices).encode()` without the
+/// intermediate `Vec<u32>`/`Vec<u8>`. This is the server's `NEXT_SUBSET`
+/// hot path: the subset travels from the shared metadata slice into the
+/// connection's write buffer with no per-request re-encode. The caller
+/// validates lengths/ranges up front (a served payload must degrade to an
+/// ERROR frame, never panic the event loop).
+pub fn write_subset_frame_into(out: &mut Vec<u8>, index: u32, indices: &[usize]) {
+    let len = 8 + 4 * indices.len();
+    assert!(len <= MAX_PAYLOAD, "subset frame payload too large");
+    out.reserve(HEADER_LEN + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(KIND_SUBSET);
+    out.extend_from_slice(&index.to_le_bytes());
+    out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    for &i in indices {
+        debug_assert!(i <= u32::MAX as usize, "index {i} overflows u32");
+        out.extend_from_slice(&(i as u32).to_le_bytes());
+    }
+}
+
 /// Validate a frame header, returning `(payload length, kind)`. The
 /// single place that checks the length cap and kind range — used by the
 /// incremental [`FrameDecoder`] and the client's blocking reader, so the
@@ -284,6 +305,18 @@ mod tests {
         assert_eq!(back, f);
         assert_eq!(back.encode(), bytes);
         assert_eq!(d.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn direct_subset_writer_matches_frame_encode() {
+        for indices in [vec![], vec![0usize], vec![5, 0, 7, 1000, 4_000_000]] {
+            for index in [0u32, 3, NO_INDEX] {
+                let canonical = Frame::subset(index, &indices).encode();
+                let mut direct = Vec::new();
+                write_subset_frame_into(&mut direct, index, &indices);
+                assert_eq!(direct, canonical, "index {index} indices {indices:?}");
+            }
+        }
     }
 
     #[test]

@@ -31,6 +31,13 @@
 //! artifact bytes (checksum included — a served document is byte-identical
 //! to the on-disk artifact), and protocol errors are `ERROR` frames.
 //!
+//! Hot-path responses never re-encode on the event-loop thread:
+//! `NEXT_SUBSET` frames are written straight from the entry's stored
+//! subset slice into the connection's write buffer (no per-request clone
+//! or intermediate `Vec<u8>`), and `GET_META` serves per-entry bytes
+//! serialized once at bind on *both* wires (binfmt artifact bytes in
+//! frame mode, the full JSON response line in JSON mode).
+//!
 //! # Protocol reference
 //!
 //! Requests (JSON object with a `"cmd"` field, in either wire format):
@@ -203,6 +210,11 @@ struct Shared {
     /// binfmt-encodable or above the frame cap); frame-mode clients get
     /// an error directing them to the JSON wire.
     encoded: Vec<Option<Vec<u8>>>,
+    /// Per-entry JSON `GET_META` response line (`ok` envelope + document +
+    /// trailing newline), serialized once at bind — the JSON wire's
+    /// analogue of `encoded`, so neither wire re-serializes metadata on
+    /// the event-loop thread.
+    meta_json: Vec<Vec<u8>>,
     seed: u64,
     store: Option<MetaStore>,
     shutdown: AtomicBool,
@@ -288,9 +300,20 @@ impl SubsetServer {
                     .filter(|bytes| bytes.len() <= frame::MAX_PAYLOAD)
             })
             .collect();
+        let meta_json = entries
+            .iter()
+            .map(|m| {
+                let mut line = ok_response(vec![("meta", metadata_to_json(m))])
+                    .to_string()
+                    .into_bytes();
+                line.push(b'\n');
+                line
+            })
+            .collect();
         let shared = Arc::new(Shared {
             entries,
             encoded,
+            meta_json,
             seed,
             store,
             shutdown: AtomicBool::new(false),
@@ -618,7 +641,7 @@ impl Conn {
         }
     }
 
-    fn push_reply(&mut self, reply: Result<Reply, String>, shared: &Shared) {
+    fn push_reply(&mut self, reply: Result<Reply<'_>, String>, shared: &Shared) {
         match reply {
             Ok(Reply::Fields(fields)) => self.push_ok(fields),
             Ok(Reply::Hello { fields, switch }) => {
@@ -627,35 +650,42 @@ impl Conn {
                 self.push_ok(fields);
                 self.switch_wire(switch);
             }
-            Ok(Reply::Subset { index, subset }) => match self.wire {
-                WireMode::Json => {
-                    let mut fields: Vec<(&str, Json)> = Vec::new();
-                    if index != frame::NO_INDEX {
-                        fields.push(("index", Json::num(index as f64)));
+            Ok(Reply::Subset { index, subset }) => {
+                let subset = subset.as_slice();
+                match self.wire {
+                    WireMode::Json => {
+                        let mut fields: Vec<(&str, Json)> = Vec::new();
+                        if index != frame::NO_INDEX {
+                            fields.push(("index", Json::num(index as f64)));
+                        }
+                        fields.push(("subset", indices_json(subset)));
+                        self.push_ok(fields);
                     }
-                    fields.push(("subset", indices_json(&subset)));
-                    self.push_ok(fields);
-                }
-                WireMode::Frame => {
-                    // pre-validate so a pathological artifact degrades to a
-                    // per-connection error frame, never a panic that would
-                    // take the whole event loop down
-                    let fits = subset.len() <= (frame::MAX_PAYLOAD - 8) / 4
-                        && subset.iter().all(|&i| i <= u32::MAX as usize);
-                    if fits {
-                        self.push_frame(&Frame::subset(index, &subset));
-                    } else {
-                        self.push_frame(&Frame::Error(
-                            "subset does not fit a binary frame — use the JSON wire"
-                                .to_string(),
-                        ));
+                    WireMode::Frame => {
+                        // pre-validate so a pathological artifact degrades to a
+                        // per-connection error frame, never a panic that would
+                        // take the whole event loop down
+                        let fits = subset.len() <= (frame::MAX_PAYLOAD - 8) / 4
+                            && subset.iter().all(|&i| i <= u32::MAX as usize);
+                        if fits {
+                            // encode straight from the (shared or freshly
+                            // drawn) subset slice into the write buffer —
+                            // no intermediate Frame/Vec<u8> per request
+                            frame::write_subset_frame_into(&mut self.wbuf, index, subset);
+                        } else {
+                            self.push_frame(&Frame::Error(
+                                "subset does not fit a binary frame — use the JSON wire"
+                                    .to_string(),
+                            ));
+                        }
                     }
                 }
-            },
+            }
             Ok(Reply::Meta(entry)) => match self.wire {
+                // the JSON response line was serialized once at bind —
+                // copy it straight into the write buffer
                 WireMode::Json => {
-                    let meta = &shared.entries[entry];
-                    self.push_ok(vec![("meta", metadata_to_json(meta))]);
+                    self.wbuf.extend_from_slice(&shared.meta_json[entry]);
                 }
                 // the artifact bytes were encoded (and size/contract
                 // checked) once at bind — frame them straight into the
@@ -753,7 +783,9 @@ impl Session {
 }
 
 /// What a request produced; the connection encodes it per wire format.
-enum Reply {
+/// Borrows from the server's shared state so served payloads travel
+/// zero-copy into the connection's write buffer.
+enum Reply<'a> {
     /// Control response fields (`ok:true` is prepended at encode time).
     Fields(Vec<(&'static str, Json)>),
     /// HELLO response + the wire format to switch to afterwards.
@@ -762,12 +794,28 @@ enum Reply {
         switch: WireMode,
     },
     /// A subset payload (`index == frame::NO_INDEX` for WRE draws).
-    Subset { index: u32, subset: Vec<usize> },
+    Subset { index: u32, subset: SubsetPayload<'a> },
     /// The bound entry's full metadata document (by entry index — the
-    /// encoder picks the cached bytes or the JSON form).
+    /// encoder picks the per-entry bytes cached at bind, on both wires).
     Meta(usize),
     /// Acknowledge and close.
     Goodbye,
+}
+
+/// Subset payload: `NEXT_SUBSET` borrows the entry's pre-selected subset
+/// (no per-request clone); `SAMPLE_WRE` draws are owned.
+enum SubsetPayload<'a> {
+    Served(&'a [usize]),
+    Owned(Vec<usize>),
+}
+
+impl SubsetPayload<'_> {
+    fn as_slice(&self) -> &[usize] {
+        match self {
+            SubsetPayload::Served(s) => s,
+            SubsetPayload::Owned(v) => v,
+        }
+    }
 }
 
 fn find_entry(
@@ -804,12 +852,12 @@ fn find_entry(
     ))
 }
 
-fn handle_request(
+fn handle_request<'s>(
     request: &Json,
     session: &mut Session,
     wire: WireMode,
-    shared: &Shared,
-) -> Result<Reply, String> {
+    shared: &'s Shared,
+) -> Result<Reply<'s>, String> {
     let cmd = match request.get("cmd").and_then(|c| Ok(c.as_str()?.to_string())) {
         Ok(c) => c,
         Err(_) => return Err("request needs a string \"cmd\" field".to_string()),
@@ -912,9 +960,11 @@ fn handle_request(
             let index = session.cursor % n;
             session.cursor += 1;
             shared.subsets_served.fetch_add(1, Ordering::Relaxed);
+            // zero-copy: the reply borrows the entry's subset slice; the
+            // connection encodes it straight into its write buffer
             Ok(Reply::Subset {
                 index: index as u32,
-                subset: meta.sge_subsets[index].clone(),
+                subset: SubsetPayload::Served(&meta.sge_subsets[index]),
             })
         }
         "SAMPLE_WRE" => {
@@ -941,7 +991,10 @@ fn handle_request(
             });
             let subset = wre.sample_k(k, &mut session.rng);
             shared.wre_samples.fetch_add(1, Ordering::Relaxed);
-            Ok(Reply::Subset { index: frame::NO_INDEX, subset })
+            Ok(Reply::Subset {
+                index: frame::NO_INDEX,
+                subset: SubsetPayload::Owned(subset),
+            })
         }
         "STATS" => {
             let s = shared.stats();

@@ -248,6 +248,20 @@ impl MetaSource {
         self
     }
 
+    /// Return this source with the sparse-kernel width swapped
+    /// (`Some(k)` = top-`k` CSR class blocks, `None` = dense; no-op on a
+    /// remote source). Sparse and dense configurations address separate
+    /// store artifacts — `knn` is part of the [`MetaKey`] fingerprint.
+    pub fn with_knn(mut self, knn: Option<usize>) -> MetaSource {
+        match &mut self {
+            MetaSource::Inline(o) | MetaSource::Store { opts: o, .. } => {
+                o.knn = knn;
+            }
+            MetaSource::Remote { .. } => {}
+        }
+        self
+    }
+
     /// Preprocessing options backing this source, when local.
     pub fn options(&self) -> Option<&PreprocessOptions> {
         match self {

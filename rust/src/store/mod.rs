@@ -43,6 +43,14 @@ use anyhow::{Context, Result};
 use crate::coordinator::{Metadata, PreprocessOptions};
 use crate::submod::SetFunctionKind;
 
+/// Selection-algorithm revision, folded into every [`MetaKey`]
+/// fingerprint. Bumped whenever the preprocessing pipeline changes the
+/// selections it produces for *identical options* (rev 2: per-
+/// `(subset, class)` RNG streams for the parallel SGE fan-out), so
+/// artifacts built by an older revision re-address and rebuild instead
+/// of silently serving selections the current code cannot reproduce.
+pub const SELECTION_ALGO_REVISION: u32 = 2;
+
 /// FNV-1a 64-bit hash — the store's fingerprint and checksum primitive
 /// (dependency-free, stable across platforms).
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
@@ -96,6 +104,10 @@ pub struct MetaKey {
     /// pipelines select different subsets from identical inputs, so they
     /// must not alias to one artifact.
     pub pipeline: String,
+    /// Sparse kernel width (`None` = dense blocks). `knn < n_c` changes
+    /// the selections (the sparse kernel is an approximation), so sparse
+    /// and dense artifacts must address separately.
+    pub knn: Option<usize>,
 }
 
 impl MetaKey {
@@ -117,6 +129,7 @@ impl MetaKey {
             metric: opts.metric.name(),
             backend: backend_descriptor(opts.backend).to_string(),
             pipeline: opts.pipeline.name().to_string(),
+            knn: opts.knn,
         }
     }
 
@@ -125,7 +138,8 @@ impl MetaKey {
     /// equal f64 values always produce equal text.
     pub fn canonical(&self) -> String {
         format!(
-            "ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}|pipe={}",
+            "alg={}|ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}|pipe={}|knn={}",
+            SELECTION_ALGO_REVISION,
             self.dataset,
             self.encoder,
             self.sge_function,
@@ -137,6 +151,9 @@ impl MetaKey {
             self.metric,
             self.backend,
             self.pipeline,
+            self.knn
+                .map(|k| k.to_string())
+                .unwrap_or_else(|| "dense".to_string()),
         )
     }
 
@@ -456,6 +473,7 @@ mod tests {
             metric: "cosine".into(),
             backend: "native".into(),
             pipeline: "kernel".into(),
+            knn: None,
         }
     }
 
@@ -467,6 +485,13 @@ mod tests {
         let mut frac = key(1);
         frac.fraction = 0.3;
         assert_ne!(a.fingerprint(), frac.fingerprint());
+        // sparse and dense kernels must not alias to one artifact
+        let mut sparse = key(1);
+        sparse.knn = Some(32);
+        assert_ne!(a.fingerprint(), sparse.fingerprint());
+        let mut wider = key(1);
+        wider.knn = Some(64);
+        assert_ne!(sparse.fingerprint(), wider.fingerprint());
         assert_eq!(a.fingerprint().len(), 16);
     }
 

@@ -1,13 +1,24 @@
 //! The four set functions from the paper's Appendix D, with incremental
 //! marginal-gain oracles over a symmetric similarity kernel in [0, 1].
 //!
+//! Every oracle is generic over [`KernelView`], so one implementation
+//! serves dense [`Matrix`] blocks and sparse top-`knn`
+//! [`crate::kernel::SparseKernel`] blocks alike. Sparse semantics: an
+//! unstored pair has similarity exactly 0 (distance 1), which keeps all
+//! four gain formulas well-defined; a *complete* sparse kernel
+//! (`knn ≥ n`) iterates rows in the dense order and reproduces dense
+//! gains bit-for-bit (property-tested in
+//! `rust/tests/sparse_selection.rs`).
+//!
 //! Incremental state invariants (checked by property tests in
 //! `rust/tests/submod_props.rs`):
 //!   * FL:  `mx[i] = max_{k∈S} s[i,k]` (0 when S empty; valid since s ≥ 0)
 //!   * GC:  `covered[j] = Σ_{k∈S} s[j,k]`, `colsum[j] = Σ_i s[i,j]`
 //!   * DS:  `covered[j]` as above
-//!   * DM:  `mindist[j] = min_{k∈S} (1 - s[j,k])` (∞-like 2.0 when empty)
+//!   * DM:  `mindist[j] = min_{k∈S} (1 - s[j,k])` (∞-like 2.0 when empty;
+//!     unstored sparse pairs clamp it to exactly 1.0)
 
+use crate::kernel::{KernelRef, KernelRow, KernelView, SparseKernel};
 use crate::tensor::Matrix;
 
 /// Which set function (with parameters) — the paper's experiment axis.
@@ -57,13 +68,25 @@ impl SetFunctionKind {
         )
     }
 
-    /// Instantiate an oracle over a kernel.
+    /// Instantiate an oracle over a dense kernel.
     pub fn build<'a>(&self, kernel: &'a Matrix) -> Box<dyn SetFunction + 'a> {
+        self.build_view(KernelRef::Dense(kernel))
+    }
+
+    /// Instantiate an oracle over a sparse top-`knn` kernel.
+    pub fn build_sparse<'a>(&self, kernel: &'a SparseKernel) -> Box<dyn SetFunction + 'a> {
+        self.build_view(KernelRef::Sparse(kernel))
+    }
+
+    /// Instantiate an oracle over either kernel representation — the
+    /// entry point the coordinator's per-class pipeline uses
+    /// (`ClassSim::view()` → oracle).
+    pub fn build_view<'a>(&self, view: KernelRef<'a>) -> Box<dyn SetFunction + 'a> {
         match *self {
-            SetFunctionKind::FacilityLocation => Box::new(FacilityLocation::new(kernel)),
-            SetFunctionKind::GraphCut { lambda } => Box::new(GraphCut::new(kernel, lambda)),
-            SetFunctionKind::DisparitySum => Box::new(DisparitySum::new(kernel)),
-            SetFunctionKind::DisparityMin => Box::new(DisparityMin::new(kernel)),
+            SetFunctionKind::FacilityLocation => Box::new(FacilityLocation::new(view)),
+            SetFunctionKind::GraphCut { lambda } => Box::new(GraphCut::new(view, lambda)),
+            SetFunctionKind::DisparitySum => Box::new(DisparitySum::new(view)),
+            SetFunctionKind::DisparityMin => Box::new(DisparityMin::new(view)),
         }
     }
 }
@@ -88,44 +111,66 @@ pub trait SetFunction {
 // Facility location: f(S) = Σ_i max_{j∈S} s_ij
 // ---------------------------------------------------------------------------
 
-pub struct FacilityLocation<'a> {
-    s: &'a Matrix,
+pub struct FacilityLocation<K: KernelView> {
+    s: K,
     mx: Vec<f32>,
     picked: Vec<usize>,
     value: f32,
 }
 
-impl<'a> FacilityLocation<'a> {
-    pub fn new(s: &'a Matrix) -> Self {
-        assert_eq!(s.rows, s.cols, "kernel must be square");
-        FacilityLocation { s, mx: vec![0.0; s.rows], picked: Vec::new(), value: 0.0 }
+impl<K: KernelView> FacilityLocation<K> {
+    pub fn new(s: K) -> Self {
+        let n = s.n();
+        FacilityLocation { s, mx: vec![0.0; n], picked: Vec::new(), value: 0.0 }
     }
 }
 
-impl SetFunction for FacilityLocation<'_> {
+impl<K: KernelView> SetFunction for FacilityLocation<K> {
     fn n(&self) -> usize {
-        self.s.rows
+        self.s.n()
     }
 
     #[inline]
     fn gain(&self, j: usize) -> f32 {
         // Σ_i max(0, s[i,j] − mx[i]); kernel symmetry lets us walk row j.
-        // Branchless `max` keeps the loop auto-vectorizable (≈4× over the
-        // branchy form, see EXPERIMENTS.md §Perf).
-        let row = self.s.row(j);
+        // Unstored sparse entries contribute max(0, 0 − mx[i]) = 0 (mx ≥ 0),
+        // so only stored entries are visited. Branchless `max` keeps the
+        // dense loop auto-vectorizable (≈4× over the branchy form, see
+        // EXPERIMENTS.md §Perf).
         let mut acc = 0.0f32;
-        for (sij, mxi) in row.iter().zip(&self.mx) {
-            acc += (sij - mxi).max(0.0);
+        match self.s.kernel_row(j) {
+            KernelRow::Dense(row) => {
+                for (sij, mxi) in row.iter().zip(&self.mx) {
+                    acc += (sij - mxi).max(0.0);
+                }
+            }
+            KernelRow::Sparse { cols, vals } => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    acc += (v - self.mx[c as usize]).max(0.0);
+                }
+            }
         }
         acc
     }
 
     fn add(&mut self, j: usize) {
         self.value += self.gain(j);
-        let row = self.s.row(j);
-        for (mxi, sij) in self.mx.iter_mut().zip(row) {
-            if *sij > *mxi {
-                *mxi = *sij;
+        let mx = &mut self.mx;
+        match self.s.kernel_row(j) {
+            KernelRow::Dense(row) => {
+                for (mxi, sij) in mx.iter_mut().zip(row) {
+                    if *sij > *mxi {
+                        *mxi = *sij;
+                    }
+                }
+            }
+            KernelRow::Sparse { cols, vals } => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let mxi = &mut mx[c as usize];
+                    if v > *mxi {
+                        *mxi = v;
+                    }
+                }
             }
         }
         self.picked.push(j);
@@ -150,8 +195,8 @@ impl SetFunction for FacilityLocation<'_> {
 // Graph cut: f(S) = Σ_{i∈D} Σ_{j∈S} s_ij − λ Σ_{i∈S} Σ_{j∈S} s_ij
 // ---------------------------------------------------------------------------
 
-pub struct GraphCut<'a> {
-    s: &'a Matrix,
+pub struct GraphCut<K: KernelView> {
+    s: K,
     lambda: f32,
     colsum: Vec<f32>,
     covered: Vec<f32>, // Σ_{k∈S} s[j,k]
@@ -159,14 +204,24 @@ pub struct GraphCut<'a> {
     value: f32,
 }
 
-impl<'a> GraphCut<'a> {
-    pub fn new(s: &'a Matrix, lambda: f32) -> Self {
-        assert_eq!(s.rows, s.cols);
-        let n = s.rows;
+impl<K: KernelView> GraphCut<K> {
+    pub fn new(s: K, lambda: f32) -> Self {
+        let n = s.n();
+        // colsum in row-major order — the dense accumulation order, which
+        // a complete sparse kernel reproduces exactly
         let mut colsum = vec![0.0f32; n];
         for i in 0..n {
-            for (j, v) in s.row(i).iter().enumerate() {
-                colsum[j] += v;
+            match s.kernel_row(i) {
+                KernelRow::Dense(row) => {
+                    for (j, v) in row.iter().enumerate() {
+                        colsum[j] += v;
+                    }
+                }
+                KernelRow::Sparse { cols, vals } => {
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        colsum[c as usize] += v;
+                    }
+                }
             }
         }
         GraphCut {
@@ -180,22 +235,31 @@ impl<'a> GraphCut<'a> {
     }
 }
 
-impl SetFunction for GraphCut<'_> {
+impl<K: KernelView> SetFunction for GraphCut<K> {
     fn n(&self) -> usize {
-        self.s.rows
+        self.s.n()
     }
 
     #[inline]
     fn gain(&self, j: usize) -> f32 {
         // Δ = colsum[j] − λ (2 Σ_{k∈S} s_jk + s_jj)
-        self.colsum[j] - self.lambda * (2.0 * self.covered[j] + self.s.at(j, j))
+        self.colsum[j] - self.lambda * (2.0 * self.covered[j] + self.s.value_at(j, j))
     }
 
     fn add(&mut self, j: usize) {
         self.value += self.gain(j);
-        let row = self.s.row(j);
-        for (cov, sjk) in self.covered.iter_mut().zip(row) {
-            *cov += *sjk;
+        let covered = &mut self.covered;
+        match self.s.kernel_row(j) {
+            KernelRow::Dense(row) => {
+                for (cov, sjk) in covered.iter_mut().zip(row) {
+                    *cov += *sjk;
+                }
+            }
+            KernelRow::Sparse { cols, vals } => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    covered[c as usize] += v;
+                }
+            }
         }
         self.picked.push(j);
     }
@@ -219,38 +283,49 @@ impl SetFunction for GraphCut<'_> {
 // Disparity-sum: f(S) = Σ_{i∈S} Σ_{j∈S} (1 − s_ij)
 // ---------------------------------------------------------------------------
 
-pub struct DisparitySum<'a> {
-    s: &'a Matrix,
+pub struct DisparitySum<K: KernelView> {
+    s: K,
     covered: Vec<f32>, // Σ_{k∈S} s[j,k]
     picked: Vec<usize>,
     value: f32,
 }
 
-impl<'a> DisparitySum<'a> {
-    pub fn new(s: &'a Matrix) -> Self {
-        assert_eq!(s.rows, s.cols);
-        DisparitySum { s, covered: vec![0.0; s.rows], picked: Vec::new(), value: 0.0 }
+impl<K: KernelView> DisparitySum<K> {
+    pub fn new(s: K) -> Self {
+        let n = s.n();
+        DisparitySum { s, covered: vec![0.0; n], picked: Vec::new(), value: 0.0 }
     }
 }
 
-impl SetFunction for DisparitySum<'_> {
+impl<K: KernelView> SetFunction for DisparitySum<K> {
     fn n(&self) -> usize {
-        self.s.rows
+        self.s.n()
     }
 
     #[inline]
     fn gain(&self, j: usize) -> f32 {
         // Adding j contributes (1 − s_jk) + (1 − s_kj) for each k∈S plus the
         // self term (1 − s_jj): with symmetry, 2(|S| − covered[j]) + (1 − s_jj).
+        // Unstored sparse pairs sit at s = 0 — full distance — and are
+        // covered by the |S| term.
         let k = self.picked.len() as f32;
-        2.0 * (k - self.covered[j]) + (1.0 - self.s.at(j, j))
+        2.0 * (k - self.covered[j]) + (1.0 - self.s.value_at(j, j))
     }
 
     fn add(&mut self, j: usize) {
         self.value += self.gain(j);
-        let row = self.s.row(j);
-        for (cov, sjk) in self.covered.iter_mut().zip(row) {
-            *cov += *sjk;
+        let covered = &mut self.covered;
+        match self.s.kernel_row(j) {
+            KernelRow::Dense(row) => {
+                for (cov, sjk) in covered.iter_mut().zip(row) {
+                    *cov += *sjk;
+                }
+            }
+            KernelRow::Sparse { cols, vals } => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    covered[c as usize] += v;
+                }
+            }
         }
         self.picked.push(j);
     }
@@ -280,32 +355,53 @@ impl SetFunction for DisparitySum<'_> {
 /// 1/4-approximation construction of Dasgupta et al. cited in Appendix D.
 /// For the empty set the gain is the candidate's average distance to the
 /// ground set, which makes the first pick the most outlying point.
-pub struct DisparityMin<'a> {
-    s: &'a Matrix,
+pub struct DisparityMin<K: KernelView> {
+    s: K,
     mindist: Vec<f32>,
     avgdist: Vec<f32>,
     picked: Vec<usize>,
+    /// Incomplete kernels clamp `mindist` to 1.0 (the unstored-pair
+    /// distance) on the first add; distances only shrink afterwards, so
+    /// the O(n) clamp never needs to run twice.
+    clamped: bool,
 }
 
 const EMPTY_DIST: f32 = 2.0; // > any 1 − s with s ∈ [0, 1]
 
-impl<'a> DisparityMin<'a> {
-    pub fn new(s: &'a Matrix) -> Self {
-        assert_eq!(s.rows, s.cols);
-        let n = s.rows;
+impl<K: KernelView> DisparityMin<K> {
+    pub fn new(s: K) -> Self {
+        let n = s.n();
         let mut avgdist = vec![0.0f32; n];
-        for j in 0..n {
-            let row = s.row(j);
-            let total: f32 = row.iter().map(|v| 1.0 - v).sum();
-            avgdist[j] = total / n as f32;
+        for (j, avg) in avgdist.iter_mut().enumerate() {
+            *avg = match s.kernel_row(j) {
+                KernelRow::Dense(row) => {
+                    let total: f32 = row.iter().map(|v| 1.0 - v).sum();
+                    total / n as f32
+                }
+                KernelRow::Sparse { cols: _, vals } => {
+                    // unstored pairs sit at distance exactly 1
+                    let stored: f32 = vals.iter().map(|v| 1.0 - v).sum();
+                    if vals.len() == n {
+                        stored / n as f32
+                    } else {
+                        (stored + (n - vals.len()) as f32) / n as f32
+                    }
+                }
+            };
         }
-        DisparityMin { s, mindist: vec![EMPTY_DIST; n], avgdist, picked: Vec::new() }
+        DisparityMin {
+            s,
+            mindist: vec![EMPTY_DIST; n],
+            avgdist,
+            picked: Vec::new(),
+            clamped: false,
+        }
     }
 }
 
-impl SetFunction for DisparityMin<'_> {
+impl<K: KernelView> SetFunction for DisparityMin<K> {
     fn n(&self) -> usize {
-        self.s.rows
+        self.s.n()
     }
 
     #[inline]
@@ -322,11 +418,34 @@ impl SetFunction for DisparityMin<'_> {
     }
 
     fn add(&mut self, j: usize) {
-        let row = self.s.row(j);
-        for (md, sjk) in self.mindist.iter_mut().zip(row) {
-            let d = 1.0 - *sjk;
-            if d < *md {
-                *md = d;
+        let mindist = &mut self.mindist;
+        if !self.clamped && !self.s.is_complete() {
+            // pairs the sparse row does not store are at distance exactly
+            // 1.0; stored pairs tighten further below
+            for md in mindist.iter_mut() {
+                if *md > 1.0 {
+                    *md = 1.0;
+                }
+            }
+            self.clamped = true;
+        }
+        match self.s.kernel_row(j) {
+            KernelRow::Dense(row) => {
+                for (md, sjk) in mindist.iter_mut().zip(row) {
+                    let d = 1.0 - *sjk;
+                    if d < *md {
+                        *md = d;
+                    }
+                }
+            }
+            KernelRow::Sparse { cols, vals } => {
+                for (&c, &v) in cols.iter().zip(vals) {
+                    let d = 1.0 - v;
+                    let md = &mut mindist[c as usize];
+                    if d < *md {
+                        *md = d;
+                    }
+                }
             }
         }
         self.picked.push(j);
@@ -340,7 +459,7 @@ impl SetFunction for DisparityMin<'_> {
         let mut best = f32::MAX;
         for (a, &i) in self.picked.iter().enumerate() {
             for &j in &self.picked[a + 1..] {
-                let d = 1.0 - self.s.at(i, j);
+                let d = 1.0 - self.s.value_at(i, j);
                 if d < best {
                     best = d;
                 }
@@ -352,6 +471,7 @@ impl SetFunction for DisparityMin<'_> {
     fn reset(&mut self) {
         self.mindist.iter_mut().for_each(|v| *v = EMPTY_DIST);
         self.picked.clear();
+        self.clamped = false;
     }
 
     fn selected(&self) -> &[usize] {
@@ -359,16 +479,22 @@ impl SetFunction for DisparityMin<'_> {
     }
 }
 
-/// Brute-force f(S) evaluation (test oracle).
-pub fn brute_force_value(kind: SetFunctionKind, s: &Matrix, subset: &[usize]) -> f32 {
-    let n = s.rows;
+/// Brute-force f(S) evaluation (test oracle and Gibbs rebuild path).
+/// Unstored sparse pairs evaluate at similarity 0, consistent with the
+/// incremental oracles.
+pub fn brute_force_value<K: KernelView>(
+    kind: SetFunctionKind,
+    s: &K,
+    subset: &[usize],
+) -> f32 {
+    let n = s.n();
     match kind {
         SetFunctionKind::FacilityLocation => {
             let mut total = 0.0;
             for i in 0..n {
                 let mut best = 0.0f32;
                 for &j in subset {
-                    best = best.max(s.at(i, j));
+                    best = best.max(s.value_at(i, j));
                 }
                 total += best;
             }
@@ -378,13 +504,13 @@ pub fn brute_force_value(kind: SetFunctionKind, s: &Matrix, subset: &[usize]) ->
             let mut cross = 0.0;
             for i in 0..n {
                 for &j in subset {
-                    cross += s.at(i, j);
+                    cross += s.value_at(i, j);
                 }
             }
             let mut within = 0.0;
             for &i in subset {
                 for &j in subset {
-                    within += s.at(i, j);
+                    within += s.value_at(i, j);
                 }
             }
             cross - lambda * within
@@ -393,7 +519,7 @@ pub fn brute_force_value(kind: SetFunctionKind, s: &Matrix, subset: &[usize]) ->
             let mut total = 0.0;
             for &i in subset {
                 for &j in subset {
-                    total += 1.0 - s.at(i, j);
+                    total += 1.0 - s.value_at(i, j);
                 }
             }
             total
@@ -405,7 +531,7 @@ pub fn brute_force_value(kind: SetFunctionKind, s: &Matrix, subset: &[usize]) ->
             let mut best = f32::MAX;
             for (a, &i) in subset.iter().enumerate() {
                 for &j in &subset[a + 1..] {
-                    best = best.min(1.0 - s.at(i, j));
+                    best = best.min(1.0 - s.value_at(i, j));
                 }
             }
             best

@@ -23,14 +23,15 @@
 //! chain at a small fraction of its evaluations, which is the empirical
 //! justification for MILO's §3.1 design choice.
 
-use crate::tensor::Matrix;
+use crate::kernel::KernelView;
 use crate::util::rng::Rng;
 
 use super::functions::SetFunctionKind;
 
-/// Fixed-cardinality Metropolis exchange sampler over one class kernel.
-pub struct GibbsSampler<'a> {
-    kernel: &'a Matrix,
+/// Fixed-cardinality Metropolis exchange sampler over one class kernel
+/// (dense or sparse — any [`KernelView`]).
+pub struct GibbsSampler<K: KernelView> {
+    kernel: K,
     kind: SetFunctionKind,
     beta: f32,
     /// Current subset (sorted not required; membership mirrored in `in_s`).
@@ -45,16 +46,16 @@ pub struct GibbsSampler<'a> {
     pub evaluations: u64,
 }
 
-impl<'a> GibbsSampler<'a> {
+impl<K: KernelView> GibbsSampler<K> {
     /// Start the chain from a uniformly random size-`k` subset.
     pub fn new(
-        kernel: &'a Matrix,
+        kernel: K,
         kind: SetFunctionKind,
         beta: f32,
         k: usize,
         rng: &mut Rng,
     ) -> Self {
-        let n = kernel.rows;
+        let n = kernel.n();
         let k = k.min(n);
         let mut idx: Vec<usize> = (0..n).collect();
         rng.shuffle(&mut idx);
@@ -63,7 +64,7 @@ impl<'a> GibbsSampler<'a> {
         for &i in &state {
             in_s[i] = true;
         }
-        let value = super::functions::brute_force_value(kind, kernel, &state);
+        let value = super::functions::brute_force_value(kind, &kernel, &state);
         GibbsSampler {
             kernel,
             kind,
@@ -107,11 +108,11 @@ impl<'a> GibbsSampler<'a> {
         let out = self.state[pos];
         if let SetFunctionKind::GraphCut { lambda } = self.kind {
             // f = Σ_i Σ_{t∈S} s_it − λ Σ_{t,u∈S} s_tu
-            let s = self.kernel;
-            let n = s.rows;
+            let s = &self.kernel;
+            let n = s.n();
             let mut cross_delta = 0.0f32;
             for i in 0..n {
-                cross_delta += s.at(i, j) - s.at(i, out);
+                cross_delta += s.value_at(i, j) - s.value_at(i, out);
             }
             // within-S pair terms that change: pairs touching `out` or `j`
             let mut within_delta = 0.0f32;
@@ -119,21 +120,21 @@ impl<'a> GibbsSampler<'a> {
                 if t == out {
                     continue;
                 }
-                within_delta += 2.0 * (s.at(t, j) - s.at(t, out));
+                within_delta += 2.0 * (s.value_at(t, j) - s.value_at(t, out));
             }
-            within_delta += s.at(j, j) - s.at(out, out);
+            within_delta += s.value_at(j, j) - s.value_at(out, out);
             self.evaluations += 1;
             return self.value + cross_delta - lambda * within_delta;
         }
         let mut probe = self.state.clone();
         probe[pos] = j;
         self.evaluations += 1;
-        super::functions::brute_force_value(self.kind, self.kernel, &probe)
+        super::functions::brute_force_value(self.kind, &self.kernel, &probe)
     }
 
     /// One Metropolis exchange step. Returns whether the swap was accepted.
     pub fn step(&mut self, rng: &mut Rng) -> bool {
-        let n = self.kernel.rows;
+        let n = self.kernel.n();
         let k = self.state.len();
         if k == 0 || k == n {
             return false; // nothing to exchange
@@ -188,9 +189,10 @@ impl<'a> GibbsSampler<'a> {
 
 /// Sample `n_subsets` class-stitched subsets from `P(S) ∝ exp(β·f(S))`
 /// over per-class kernels (the same class-wise partitioning trick MILO
-/// uses for SGE/WRE; `alloc[c]` is the per-class budget).
-pub fn gibbs_class_subsets(
-    kernels: &[(&Matrix, &[usize])], // (class kernel, global indices)
+/// uses for SGE/WRE; `alloc[c]` is the per-class budget). Kernels are
+/// any copyable [`KernelView`] — `&Matrix`, `KernelRef`, …
+pub fn gibbs_class_subsets<K: KernelView + Copy>(
+    kernels: &[(K, &[usize])], // (class kernel, global indices)
     alloc: &[usize],
     kind: SetFunctionKind,
     beta: f32,
@@ -206,7 +208,7 @@ pub fn gibbs_class_subsets(
             per_class.push(vec![Vec::new(); n_subsets]);
             continue;
         }
-        let mut chain = GibbsSampler::new(kernel, kind, beta, kc, rng);
+        let mut chain = GibbsSampler::new(*kernel, kind, beta, kc, rng);
         let samples = chain.sample(burn_in, thin, n_subsets, rng);
         stats.proposals += chain.proposals;
         stats.acceptances += chain.acceptances;
@@ -248,6 +250,7 @@ impl GibbsStats {
 mod tests {
     use super::*;
     use crate::submod::functions::brute_force_value;
+    use crate::tensor::Matrix;
 
     fn toy_kernel(n: usize, seed: u64) -> Matrix {
         // random symmetric kernel in [0, 1] with unit diagonal

@@ -7,6 +7,18 @@
 //! O(n²) per class — the complexity SUBMODLIB achieves with memoization —
 //! and is what keeps MILO's pre-processing "minimal" relative to training.
 //!
+//! The oracles are generic over [`crate::kernel::KernelView`], so the
+//! same code runs against dense `n_c × n_c` blocks *and* sparse top-`knn`
+//! CSR blocks ([`crate::kernel::SparseKernel`]): gains/adds over a sparse
+//! row cost O(row nnz) ≈ O(knn) instead of O(n_c), and unstored pairs
+//! evaluate at similarity 0 (distance 1). With `knn ≥ n_c` the sparse
+//! rows are complete and iterate in the dense order, so every maximizer
+//! here produces bit-identical selections over either representation —
+//! `greedy_maximize`, `sample_importance`, and the [`gibbs`] chain are
+//! untouched by the representation choice. The kernel-free
+//! [`featurebased`] coverage functions sidestep kernels entirely and
+//! keep composing through the same [`SetFunction`] trait.
+//!
 //! | function          | type            | paper role                        |
 //! |-------------------|-----------------|-----------------------------------|
 //! | facility location | representation  | Fig. 4 / SGE ablation (easy)      |

@@ -64,6 +64,7 @@ fn test_key() -> MetaKey {
         metric: "cosine".into(),
         backend: "native".into(),
         pipeline: "kernel".into(),
+        knn: None,
     }
 }
 

@@ -1,0 +1,321 @@
+//! Property suite for the sparse top-`knn` kernel path (testkit-driven
+//! seed sweeps):
+//!
+//! * `knn ≥ n_c` selections are **bit-identical** to the dense path for
+//!   every `SetFunctionKind` × greedy mode × metric;
+//! * sparse-kernel structural invariants (row-sorted columns, symmetric
+//!   top-k union, self-loops never lost);
+//! * sparse gains equal dense gains over the zero-densified kernel
+//!   (the "implicit zeros" semantics) for `knn < n_c`;
+//! * degenerate classes (`n_c ≤ knn`, `n_c = 1`) survive the full
+//!   per-class pipeline;
+//! * the dense and sparse-complete pipelines produce byte-identical
+//!   store artifacts, while `knn` addresses separately in the `MetaKey`.
+
+use milo::coordinator::{
+    fixed_subset_from_kernels, sge_subsets_from_kernels,
+    wre_distribution_from_kernels, Metadata, PreprocessOptions,
+};
+use milo::kernel::{
+    build_class_kernels, build_sparse_kernel, native_similarity, SimMetric,
+    SimilarityBackend, SparseKernel,
+};
+use milo::store::{binfmt, MetaKey};
+use milo::submod::{
+    greedy_maximize, sample_importance, GreedyMode, SetFunctionKind,
+};
+use milo::tensor::Matrix;
+use milo::testkit::{check_cases, random_embeddings, random_kernel};
+use milo::util::rng::Rng;
+
+const KINDS: [SetFunctionKind; 4] = [
+    SetFunctionKind::FacilityLocation,
+    SetFunctionKind::GraphCut { lambda: 0.4 },
+    SetFunctionKind::DisparitySum,
+    SetFunctionKind::DisparityMin,
+];
+
+#[test]
+fn prop_complete_sparse_selections_match_dense_bitwise() {
+    check_cases(900, 10, |seed| {
+        let n = 10 + (seed % 24) as usize;
+        let e = 4 + (seed % 5) as usize;
+        let z = random_embeddings(n, e, seed);
+        for metric in [SimMetric::Cosine, SimMetric::Dot, SimMetric::Rbf { kw: 0.5 }] {
+            let dense = native_similarity(&z, metric);
+            let sparse =
+                build_sparse_kernel(None, &z, metric, SimilarityBackend::Native, n)
+                    .unwrap();
+            assert!(sparse.is_complete());
+            for kind in KINDS {
+                let k = (1 + (seed % 7) as usize).min(n);
+                for mode in [
+                    GreedyMode::Naive,
+                    GreedyMode::Lazy,
+                    GreedyMode::Stochastic { epsilon: 0.05 },
+                ] {
+                    let mut rng_d = Rng::new(seed ^ 0xD00D);
+                    let mut rng_s = Rng::new(seed ^ 0xD00D);
+                    let mut fd = kind.build(&dense);
+                    let td =
+                        greedy_maximize(fd.as_mut(), k, mode, kind.lazy_safe(), &mut rng_d);
+                    let mut fs = kind.build_sparse(&sparse);
+                    let ts =
+                        greedy_maximize(fs.as_mut(), k, mode, kind.lazy_safe(), &mut rng_s);
+                    assert_eq!(
+                        td.selected, ts.selected,
+                        "{kind:?} {mode:?} {metric:?} seed {seed}: selections diverged"
+                    );
+                    assert_eq!(
+                        td.gains, ts.gains,
+                        "{kind:?} {mode:?} {metric:?} seed {seed}: gains diverged"
+                    );
+                }
+                // the WRE importance sweep must agree bitwise too
+                let mut fd = kind.build(&dense);
+                let gd = sample_importance(fd.as_mut(), kind.lazy_safe());
+                let mut fs = kind.build_sparse(&sparse);
+                let gs = sample_importance(fs.as_mut(), kind.lazy_safe());
+                assert_eq!(gd, gs, "{kind:?} {metric:?} seed {seed}: importances diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_kernel_invariants() {
+    check_cases(901, 10, |seed| {
+        let n = 12 + (seed % 30) as usize;
+        let z = random_embeddings(n, 6, seed);
+        for knn in [1usize, 3, 8, n / 2 + 1, n, n + 5] {
+            let k = build_sparse_kernel(
+                None,
+                &z,
+                SimMetric::Cosine,
+                SimilarityBackend::Native,
+                knn,
+            )
+            .unwrap();
+            assert_eq!(k.n(), n);
+            let mut nnz = 0;
+            for i in 0..n {
+                let (cols, vals) = k.row(i);
+                nnz += cols.len();
+                assert_eq!(cols.len(), vals.len());
+                // each row keeps at least its own top-knn (self-loop
+                // included) and never exceeds the ground set
+                assert!(cols.len() >= knn.min(n), "row {i} lost entries (knn={knn})");
+                assert!(cols.len() <= n);
+                assert!(
+                    cols.windows(2).all(|w| w[0] < w[1]),
+                    "row {i} columns not sorted/unique"
+                );
+                assert!(
+                    cols.binary_search(&(i as u32)).is_ok(),
+                    "row {i} lost its self-loop (knn={knn})"
+                );
+                for (&c, &v) in cols.iter().zip(vals) {
+                    assert!((-1e-5..=1.0 + 1e-5).contains(&v), "({i},{c}) = {v}");
+                    // symmetric union: the mirrored entry exists and
+                    // holds the same value
+                    assert_eq!(k.at(c as usize, i), v, "asymmetric at ({i},{c})");
+                }
+            }
+            assert_eq!(nnz, k.nnz());
+            if knn >= n {
+                assert!(k.is_complete());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_gains_match_densified_zeros() {
+    // a sparse kernel is semantically a dense kernel with implicit
+    // zeros: running the oracles over the explicitly zero-densified
+    // matrix must select identically (FL/GC/DS) for knn < n
+    check_cases(902, 8, |seed| {
+        let n = 14 + (seed % 10) as usize;
+        let m = random_kernel(n, seed);
+        let knn = 3 + (seed % 4) as usize;
+        let sk = SparseKernel::from_dense(&m, knn);
+        assert!(!sk.is_complete(), "knn {knn} < n {n} must stay sparse");
+        let mut densified = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                densified.set(i, j, sk.at(i, j));
+            }
+        }
+        for kind in [
+            SetFunctionKind::FacilityLocation,
+            SetFunctionKind::GraphCut { lambda: 0.4 },
+            SetFunctionKind::DisparitySum,
+        ] {
+            let k = (n / 3).max(2);
+            let mut rng_a = Rng::new(seed);
+            let mut rng_b = Rng::new(seed);
+            let mut fa = kind.build(&densified);
+            let ta =
+                greedy_maximize(fa.as_mut(), k, GreedyMode::Naive, kind.lazy_safe(), &mut rng_a);
+            let mut fb = kind.build_sparse(&sk);
+            let tb =
+                greedy_maximize(fb.as_mut(), k, GreedyMode::Naive, kind.lazy_safe(), &mut rng_b);
+            assert_eq!(ta.selected, tb.selected, "{kind:?} seed {seed}");
+        }
+        // disparity-min: the seed gain's summation order differs
+        // (stored-then-absent vs interleaved), so compare to tolerance
+        let mut fa = SetFunctionKind::DisparityMin.build(&densified);
+        let mut fb = SetFunctionKind::DisparityMin.build_sparse(&sk);
+        for j in 0..n {
+            assert!(
+                (fa.gain(j) - fb.gain(j)).abs() < 1e-4,
+                "DM seed gain {j}: {} vs {}",
+                fa.gain(j),
+                fb.gain(j)
+            );
+        }
+        fa.add(0);
+        fb.add(0);
+        for j in 0..n {
+            assert_eq!(fa.gain(j), fb.gain(j), "DM mindist gain {j} diverged");
+        }
+        fa.add(n / 2);
+        fb.add(n / 2);
+        assert_eq!(fa.value(), fb.value());
+    });
+}
+
+#[test]
+fn degenerate_classes_survive_sparse_preprocessing() {
+    // n_c = 1, n_c = 2, n_c ≤ knn, n_c > knn in one partition
+    let emb = random_embeddings(30, 6, 5);
+    let partition: Vec<Vec<usize>> = vec![
+        vec![0],
+        (1..3).collect(),
+        (3..10).collect(),
+        (10..30).collect(),
+    ];
+    for knn in [1usize, 4, 64] {
+        let kernels = build_class_kernels(
+            None,
+            &emb,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+            Some(knn),
+        )
+        .unwrap();
+        let mut rng = Rng::new(1);
+        let sge = sge_subsets_from_kernels(
+            30,
+            &kernels,
+            SetFunctionKind::GRAPH_CUT_DEFAULT,
+            6,
+            2,
+            0.01,
+            &mut rng,
+        );
+        assert_eq!(sge.len(), 2, "knn={knn}");
+        for s in &sge {
+            assert_eq!(s.len(), 6, "knn={knn}");
+            assert!(s.windows(2).all(|w| w[0] < w[1]));
+            assert!(s.iter().all(|&i| i < 30));
+        }
+        let wre = wre_distribution_from_kernels(&kernels, SetFunctionKind::DisparityMin);
+        assert_eq!(wre.len(), 4);
+        for (cp, part) in wre.iter().zip(&partition) {
+            assert_eq!(&cp.indices, part, "knn={knn}");
+            let sum: f64 = cp.probs.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "knn={knn} probs sum {sum}");
+            assert!(cp.probs.iter().all(|&p| p > 0.0));
+        }
+        let fixed = fixed_subset_from_kernels(30, &kernels, SetFunctionKind::DisparityMin, 6);
+        assert_eq!(fixed.len(), 6, "knn={knn}");
+        assert!(fixed.windows(2).all(|w| w[0] < w[1]));
+    }
+}
+
+#[test]
+fn complete_sparse_pipeline_is_byte_identical_to_dense() {
+    // the acceptance bar: one full preprocessing pass per representation
+    // (same seeds), encoded as store artifacts, compared byte-for-byte
+    let per = 40usize;
+    let classes = 5usize;
+    let n = per * classes;
+    let emb = random_embeddings(n, 10, 77);
+    let partition: Vec<Vec<usize>> = (0..classes)
+        .map(|c| (c * per..(c + 1) * per).collect())
+        .collect();
+    let dense = build_class_kernels(
+        None,
+        &emb,
+        &partition,
+        SimMetric::Cosine,
+        SimilarityBackend::Native,
+        None,
+    )
+    .unwrap();
+    let sparse = build_class_kernels(
+        None,
+        &emb,
+        &partition,
+        SimMetric::Cosine,
+        SimilarityBackend::Native,
+        Some(per), // knn = n_c → complete
+    )
+    .unwrap();
+    let k = n / 10;
+    let run = |kernels: &milo::kernel::ClassKernels| -> Metadata {
+        let mut rng = Rng::new(3);
+        Metadata {
+            dataset: "synthetic".into(),
+            fraction: 0.1,
+            sge_subsets: sge_subsets_from_kernels(
+                n,
+                kernels,
+                SetFunctionKind::GRAPH_CUT_DEFAULT,
+                k,
+                3,
+                0.01,
+                &mut rng,
+            ),
+            wre_classes: wre_distribution_from_kernels(
+                kernels,
+                SetFunctionKind::DisparityMin,
+            ),
+            fixed_dm: fixed_subset_from_kernels(
+                n,
+                kernels,
+                SetFunctionKind::DisparityMin,
+                k,
+            ),
+            preprocess_secs: 0.25,
+        }
+    };
+    let a = run(&dense);
+    let b = run(&sparse);
+    assert_eq!(a.sge_subsets, b.sge_subsets);
+    assert_eq!(a.fixed_dm, b.fixed_dm);
+    assert_eq!(a.wre_classes, b.wre_classes);
+    assert_eq!(
+        binfmt::encode(&a),
+        binfmt::encode(&b),
+        "dense and complete-sparse artifacts must be byte-identical"
+    );
+
+    // …while the configurations address separately: knn is part of the
+    // MetaKey, so a sparse artifact can never silently shadow a dense one
+    let opts = |knn: Option<usize>| PreprocessOptions {
+        backend: SimilarityBackend::Native,
+        knn,
+        ..Default::default()
+    };
+    let kd = MetaKey::from_options("synthetic", &opts(None));
+    let k32 = MetaKey::from_options("synthetic", &opts(Some(32)));
+    assert_ne!(kd.fingerprint(), k32.fingerprint());
+    assert_ne!(kd, k32);
+    // equal configurations still share one address (the amortization)
+    let again = MetaKey::from_options("synthetic", &opts(Some(32)));
+    assert_eq!(k32, again);
+    assert_eq!(k32.fingerprint(), again.fingerprint());
+}

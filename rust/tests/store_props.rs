@@ -78,6 +78,36 @@ fn prop_store_file_roundtrip_is_byte_identical() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The sparse-kernel width is part of the content address: a sparse
+/// artifact (an approximation for knn < n_c) must never alias a dense
+/// one, and each knn gets its own slot.
+#[test]
+fn prop_knn_is_part_of_the_address() {
+    check_cases(0x5A5A, 20, |seed| {
+        let opts = milo::coordinator::PreprocessOptions {
+            seed,
+            ..Default::default()
+        };
+        let dense = MetaKey::from_options("trec6", &opts);
+        let opts = milo::coordinator::PreprocessOptions {
+            knn: Some(1 + (seed % 256) as usize),
+            ..opts
+        };
+        let sparse = MetaKey::from_options("trec6", &opts);
+        assert_ne!(dense.fingerprint(), sparse.fingerprint(), "seed {seed}");
+        let wider = MetaKey {
+            knn: sparse.knn.map(|k| k + 1),
+            ..sparse.clone()
+        };
+        assert_ne!(sparse.fingerprint(), wider.fingerprint(), "seed {seed}");
+        // same width → same address (the amortization still holds)
+        assert_eq!(
+            sparse.fingerprint(),
+            MetaKey::from_options("trec6", &opts).fingerprint()
+        );
+    });
+}
+
 /// Cross-codec equivalence: the JSON codec (`save_metadata` /
 /// `load_metadata` / the serve protocol's `GET_META`) and the store's
 /// binfmt must reconstruct *identical* `Metadata` for the same input —
