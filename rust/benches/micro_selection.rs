@@ -12,6 +12,12 @@
 //!   * serve wire modes: bytes and latency per `NEXT_SUBSET` over the
 //!     JSON-line protocol vs the binary frame mode (binary must transfer
 //!     strictly fewer bytes per request — asserted),
+//!   * serve request latency under concurrent clients: per-frame-type
+//!     round-trip p50/p99 (obs histograms client-side, cross-checked
+//!     against the server's own `STATS` summaries), plus the overhead of
+//!     the telemetry layer itself — `NEXT_SUBSET` timed with
+//!     observability on vs `milo::obs::set_enabled(false)`, asserted
+//!     within 5% in full mode — emitted as `BENCH_serve.json`,
 //!   * preprocessing end-to-end over the synthetic 10-class bench
 //!     dataset: dense vs sparse top-knn kernels at knn ∈ {32, 128, full}
 //!     (wall-time per stage + stored kernel floats), emitted as
@@ -19,8 +25,9 @@
 //!     PRs. Asserted: knn=full selections are identical to dense, and
 //!     knn=32 stores ≥ 4× fewer kernel floats; the ≥ 2× end-to-end
 //!     speedup is asserted in full mode (CI runs `MILO_BENCH_SMOKE=1`,
-//!     which confines the binary to this one bench and skips the
-//!     wall-clock assert — timings in shared CI runners are noise).
+//!     which confines the binary to the two JSON-emitting benches and
+//!     skips the wall-clock asserts — timings in shared CI runners are
+//!     noise).
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -34,12 +41,13 @@ use milo::testkit::{bench, random_embeddings, random_kernel};
 use milo::util::rng::Rng;
 
 fn main() {
-    // CI smoke mode runs ONLY the preprocessing bench (the one that
-    // emits BENCH_select.json): the other benches are full-size
-    // micro-benchmarks with wall-clock asserts that have no business on
-    // a noisy shared runner.
+    // CI smoke mode runs ONLY the two benches that emit JSON documents
+    // (BENCH_select.json, BENCH_serve.json): the other benches are
+    // full-size micro-benchmarks with wall-clock asserts that have no
+    // business on a noisy shared runner.
     if std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false) {
         bench_preprocess_select();
+        bench_serve();
         return;
     }
 
@@ -107,7 +115,165 @@ fn main() {
     bench_store_amortization();
     bench_session_vs_handwired();
     bench_wire_modes();
+    bench_serve();
     bench_preprocess_select();
+}
+
+/// End-to-end serve latency under concurrent clients: N frame-wire
+/// clients drive `NEXT_SUBSET` / `SAMPLE_WRE` / `GET_META` rounds against
+/// one event-loop server, recording client-side round-trip latency per
+/// frame type into [`milo::obs::Histogram`]s (the same bucket scheme the
+/// server's own `serve.request_latency_ns.*` histograms use — the `STATS`
+/// summaries are captured alongside for cross-checking). Then the cost of
+/// the telemetry layer itself is measured, not assumed: `NEXT_SUBSET`
+/// draws are timed with observability enabled vs
+/// `milo::obs::set_enabled(false)`, and full mode asserts the
+/// instrumented path stays within 5% of the uninstrumented baseline.
+/// Results land in `BENCH_serve.json`.
+fn bench_serve() {
+    use milo::data::DatasetId;
+    use milo::obs::Histogram;
+    use milo::serve::{ClientOptions, ServeClient, SubsetServer, WireMode};
+    use milo::util::json::Json;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let smoke = std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (n_clients, rounds) = if smoke { (4usize, 50usize) } else { (8, 400) };
+
+    let ds = DatasetId::Trec6Like.generate(1);
+    let meta = Arc::new(milo::testkit::synthetic_metadata(&ds, 0.1));
+    let wre_k = ds.subset_size(0.05).max(1);
+    let server = SubsetServer::bind("127.0.0.1:0", meta, None, 1).unwrap();
+    let addr = server.addr().to_string();
+
+    // one merged histogram per instrumented frame type; clients record
+    // into locals and merge on exit (Histogram::merge is atomic)
+    const FRAMES: [&str; 3] = ["next_subset", "sample_wre", "get_meta"];
+    let merged: Vec<Histogram> = (0..FRAMES.len()).map(|_| Histogram::new()).collect();
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let addr = &addr;
+            let merged = &merged;
+            scope.spawn(move || {
+                let mut client = ServeClient::connect_with(
+                    addr,
+                    &format!("bench-serve-{c}"),
+                    ClientOptions { wire: WireMode::Frame, ..Default::default() },
+                )
+                .unwrap();
+                let local: Vec<Histogram> =
+                    (0..FRAMES.len()).map(|_| Histogram::new()).collect();
+                for r in 0..rounds {
+                    let t0 = Instant::now();
+                    std::hint::black_box(client.next_subset().unwrap());
+                    local[0].record_duration(t0.elapsed());
+                    let t1 = Instant::now();
+                    std::hint::black_box(client.sample_wre(wre_k).unwrap());
+                    local[1].record_duration(t1.elapsed());
+                    if r % 10 == 0 {
+                        let t2 = Instant::now();
+                        std::hint::black_box(client.get_meta().unwrap());
+                        local[2].record_duration(t2.elapsed());
+                    }
+                }
+                for (m, l) in merged.iter().zip(&local) {
+                    m.merge(l);
+                }
+            });
+        }
+    });
+
+    // the server's own view: per-frame-type latency summaries over STATS
+    let mut probe = ServeClient::connect(&addr, "bench-serve-probe").unwrap();
+    let stats = probe.stats().unwrap();
+    let server_metrics = stats.get("metrics").unwrap().clone();
+    let served_next = server_metrics
+        .get("serve.request_latency_ns.next_subset")
+        .and_then(|s| s.get("count"))
+        .and_then(|c| c.as_f64())
+        .unwrap();
+    assert!(
+        served_next >= (n_clients * rounds) as f64,
+        "server counted {served_next} NEXT_SUBSET latencies, expected at least {}",
+        n_clients * rounds,
+    );
+
+    for (name, h) in FRAMES.iter().zip(&merged) {
+        let s = h.snapshot();
+        println!(
+            "bench serve[{name:>11}]  {:>6} requests  p50 {:>7.1}us  p99 {:>7.1}us  \
+             max {:>8.1}us",
+            s.count(),
+            s.percentile(0.50) as f64 / 1e3,
+            s.percentile(0.99) as f64 / 1e3,
+            s.max() as f64 / 1e3,
+        );
+    }
+
+    // instrumentation overhead, measured: the same client, the same
+    // request stream, observability on vs off
+    let mut measure = |draws: usize| -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..draws {
+            std::hint::black_box(probe.next_subset().unwrap());
+        }
+        t0.elapsed().as_secs_f64() / draws as f64
+    };
+    let draws = if smoke { 100 } else { 2000 };
+    measure(draws); // warmup
+    let with_obs = measure(draws);
+    milo::obs::set_enabled(false);
+    let without_obs = measure(draws);
+    milo::obs::set_enabled(true);
+    let ratio = with_obs / without_obs.max(1e-12);
+    println!(
+        "bench serve: NEXT_SUBSET {:.2}us/draw instrumented vs {:.2}us/draw with \
+         obs disabled ({ratio:.3}x)",
+        with_obs * 1e6,
+        without_obs * 1e6,
+    );
+    if !smoke {
+        // the acceptance bar: telemetry must cost < 5% on the hot serve
+        // path (plus 5us absolute slack for scheduler noise at this scale)
+        assert!(
+            with_obs <= without_obs * 1.05 + 5e-6,
+            "instrumented NEXT_SUBSET path exceeds the 5% overhead budget: \
+             {with_obs}s vs {without_obs}s per draw"
+        );
+    }
+
+    let frames_json = Json::arr(
+        FRAMES
+            .iter()
+            .zip(&merged)
+            .map(|(name, h)| {
+                let s = h.snapshot();
+                Json::obj(vec![
+                    ("frame", Json::str(*name)),
+                    ("requests", Json::num(s.count() as f64)),
+                    ("p50_us", Json::num(s.percentile(0.50) as f64 / 1e3)),
+                    ("p99_us", Json::num(s.percentile(0.99) as f64 / 1e3)),
+                    ("max_us", Json::num(s.max() as f64 / 1e3)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("smoke", Json::Bool(smoke)),
+        ("clients", Json::num(n_clients as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("frames", frames_json),
+        ("next_subset_us_with_obs", Json::num(with_obs * 1e6)),
+        ("next_subset_us_without_obs", Json::num(without_obs * 1e6)),
+        ("obs_overhead_ratio", Json::num(ratio)),
+        ("server_metrics", server_metrics),
+    ]);
+    std::fs::write("BENCH_serve.json", doc.to_string()).unwrap();
+    println!("bench serve: wrote BENCH_serve.json");
+    drop(probe);
+    server.shutdown();
 }
 
 /// Dense vs sparse top-knn preprocessing over the synthetic 10-class

@@ -191,6 +191,7 @@ impl<'a> Preprocessor<'a> {
     /// Build the class-wise kernels from provided embeddings (dense or
     /// sparse top-`knn`, per `opts.knn`).
     pub fn kernels(&self, ds: &Dataset, embeddings: &Matrix) -> Result<ClassKernels> {
+        let _span = crate::obs::Span::enter("preprocess.kernels");
         build_class_kernels(
             Some(self.rt),
             embeddings,
@@ -289,7 +290,8 @@ impl<'a> Preprocessor<'a> {
         let t0 = Instant::now();
         let mut rng = Rng::new(self.opts.seed ^ 0xFEA7).derive_str(ds.name());
         let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
-        let embeddings = self.encode(ds, Split::Train)?;
+        let embeddings =
+            crate::obs::time("preprocess.encode", || self.encode(ds, Split::Train))?;
         let parts = ds.class_partition();
         let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
         let alloc = proportional_allocation(&sizes, k.min(ds.n_train()));
@@ -302,48 +304,54 @@ impl<'a> Preprocessor<'a> {
             })
             .collect();
         // SGE-analog: stochastic-greedy over the coverage function
-        let sge_subsets: Vec<Vec<usize>> = (0..self.opts.n_sge_subsets)
-            .map(|_| {
-                let mut subset = Vec::with_capacity(k);
-                for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
-                    if kc == 0 {
-                        continue;
+        let sge_subsets: Vec<Vec<usize>> = crate::obs::time("preprocess.sge", || {
+            (0..self.opts.n_sge_subsets)
+                .map(|_| {
+                    let mut subset = Vec::with_capacity(k);
+                    for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
+                        if kc == 0 {
+                            continue;
+                        }
+                        let mut f = crate::submod::FeatureCoverage::new(phi);
+                        let trace = greedy_maximize(
+                            &mut f,
+                            kc,
+                            GreedyMode::Stochastic { epsilon: self.opts.epsilon },
+                            true,
+                            &mut rng,
+                        );
+                        subset.extend(trace.selected.iter().map(|&l| idx[l]));
                     }
-                    let mut f = crate::submod::FeatureCoverage::new(phi);
-                    let trace = greedy_maximize(
-                        &mut f,
-                        kc,
-                        GreedyMode::Stochastic { epsilon: self.opts.epsilon },
-                        true,
-                        &mut rng,
-                    );
-                    subset.extend(trace.selected.iter().map(|&l| idx[l]));
-                }
-                subset.sort_unstable();
-                subset
-            })
-            .collect();
+                    subset.sort_unstable();
+                    subset
+                })
+                .collect()
+        });
         // WRE-analog: importance sweep of the coverage gains
-        let wre_classes: Vec<ClassProbs> = phis
-            .iter()
-            .map(|(phi, idx)| {
-                let mut f = crate::submod::FeatureCoverage::new(phi);
-                let gains = sample_importance(&mut f, true);
-                let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
-                ClassProbs { indices: (*idx).clone(), probs: taylor_softmax(&g64) }
-            })
-            .collect();
+        let wre_classes: Vec<ClassProbs> = crate::obs::time("preprocess.wre", || {
+            phis.iter()
+                .map(|(phi, idx)| {
+                    let mut f = crate::submod::FeatureCoverage::new(phi);
+                    let gains = sample_importance(&mut f, true);
+                    let g64: Vec<f64> = gains.iter().map(|&g| g as f64).collect();
+                    ClassProbs { indices: (*idx).clone(), probs: taylor_softmax(&g64) }
+                })
+                .collect()
+        });
         // fixed subset: full lazy greedy
-        let mut fixed = Vec::with_capacity(k);
-        for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
-            if kc == 0 {
-                continue;
+        let fixed = crate::obs::time("preprocess.fixed", || {
+            let mut fixed = Vec::with_capacity(k);
+            for ((phi, idx), &kc) in phis.iter().zip(&alloc) {
+                if kc == 0 {
+                    continue;
+                }
+                let mut f = crate::submod::FeatureCoverage::new(phi);
+                let trace = greedy_maximize(&mut f, kc, GreedyMode::Lazy, true, &mut rng);
+                fixed.extend(trace.selected.iter().map(|&l| idx[l]));
             }
-            let mut f = crate::submod::FeatureCoverage::new(phi);
-            let trace = greedy_maximize(&mut f, kc, GreedyMode::Lazy, true, &mut rng);
-            fixed.extend(trace.selected.iter().map(|&l| idx[l]));
-        }
-        fixed.sort_unstable();
+            fixed.sort_unstable();
+            fixed
+        });
         Ok(Metadata {
             dataset: ds.name().to_string(),
             fraction: self.opts.fraction,
@@ -361,7 +369,8 @@ impl<'a> Preprocessor<'a> {
         let t0 = Instant::now();
         let mut rng = Rng::new(self.opts.seed ^ 0x9E1E_C7).derive_str(ds.name());
         let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
-        let embeddings = self.encode(ds, Split::Train)?;
+        let embeddings =
+            crate::obs::time("preprocess.encode", || self.encode(ds, Split::Train))?;
         let kernels = self.kernels(ds, &embeddings)?;
         let sge_subsets = self.sge_subsets(
             ds,
@@ -434,6 +443,7 @@ pub fn sge_subsets_from_kernels(
     epsilon: f64,
     rng: &mut Rng,
 ) -> Vec<Vec<usize>> {
+    let _span = crate::obs::Span::enter("preprocess.sge");
     let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
     let alloc = proportional_allocation(&sizes, k.min(n_train));
     let classes = kernels.per_class.len();
@@ -476,6 +486,7 @@ pub fn fixed_subset_from_kernels(
     kind: SetFunctionKind,
     k: usize,
 ) -> Vec<usize> {
+    let _span = crate::obs::Span::enter("preprocess.fixed");
     let sizes: Vec<usize> = kernels.per_class.iter().map(|c| c.indices.len()).collect();
     let alloc = proportional_allocation(&sizes, k.min(n_train));
     let classes: Vec<usize> = (0..kernels.per_class.len()).collect();
@@ -503,6 +514,7 @@ pub fn wre_distribution_from_kernels(
     kernels: &ClassKernels,
     kind: SetFunctionKind,
 ) -> Vec<ClassProbs> {
+    let _span = crate::obs::Span::enter("preprocess.wre");
     let refs: Vec<&crate::kernel::ClassKernel> = kernels.per_class.iter().collect();
     par_map(refs, |ck| {
         let mut f = kind.build_view(ck.sim.view());

@@ -30,6 +30,16 @@
 //!   metadata as the exact binfmt artifact bytes). The [`serve::ServeClient`]
 //!   adds reconnect/retry with deterministic mid-stream resume. Both
 //!   layers are consumed through [`session::MetaSource`].
+//! * **Observability** — [`obs`] is a zero-dependency telemetry layer:
+//!   per-component [`obs::MetricsRegistry`]s of atomic counters/gauges,
+//!   mergeable log-bucketed latency [`obs::Histogram`]s with exact-bounds
+//!   p50/p95/p99 extraction, and scoped [`obs::Span`] timers with an
+//!   optional `MILO_TRACE=path` JSON-lines event log. The serve event
+//!   loop, store, preprocessing stages, and session resolution all record
+//!   into it; it surfaces through the extended `STATS` reply, the
+//!   `milo serve --metrics-addr` Prometheus-style text endpoint, and
+//!   `BENCH_serve.json` (see the [`obs`] module docs for the metric
+//!   naming scheme and histogram bucket math).
 //! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
 //!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
 //!   text artifacts executed here via PJRT.
@@ -72,6 +82,7 @@ pub mod coordinator;
 pub mod data;
 pub mod hpo;
 pub mod kernel;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod selection;
@@ -96,6 +107,7 @@ pub mod prelude {
         ClassKernels, ClassSim, KernelRef, KernelView, SimMetric,
         SimilarityBackend, SparseKernel,
     };
+    pub use crate::obs::{Histogram, MetricsRegistry, Span};
     pub use crate::report::Table;
     pub use crate::runtime::Runtime;
     pub use crate::selection::{

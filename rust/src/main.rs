@@ -41,6 +41,7 @@ USAGE:
   milo serve --dataset <name> | --datasets a,b [--fractions 0.1,0.3]
              [--addr 127.0.0.1:4077] [--fraction 0.1] [--seed 1] [--knn 32|full]
              [--store results/store] [--featurebased]
+             [--metrics-addr 127.0.0.1:9464]  (plain-text metrics exposition)
              (one event-loop process serves every dataset×fraction entry)
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
              [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
@@ -323,8 +324,11 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         }
     }
     let addr = args.get_or("addr", "127.0.0.1:4077");
+    let opts = milo::serve::ServeOptions {
+        metrics_addr: args.get("metrics-addr").map(|s| s.to_string()),
+    };
     let server =
-        milo::serve::SubsetServer::bind_multi(addr, entries, Some(store), seed)?;
+        milo::serve::SubsetServer::bind_with(addr, entries, Some(store), seed, opts)?;
     println!(
         "serving {} entr{} (seed {}) on {} — protocol: see `milo::serve` docs",
         described.len(),
@@ -332,6 +336,9 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         seed,
         server.addr(),
     );
+    if let Some(m) = server.metrics_addr() {
+        println!("  metrics exposition on http://{m}/metrics (plain text)");
+    }
     for d in &described {
         println!("  {d}");
     }

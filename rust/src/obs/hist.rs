@@ -1,0 +1,294 @@
+//! Log-bucketed latency histograms: fixed memory, lock-free recording,
+//! exact-bounds percentile extraction.
+//!
+//! # Bucket scheme
+//!
+//! Values (nanoseconds by convention) are binned with [`SUB_BITS`] = 3
+//! bits of sub-precision: each power-of-two range `[2^g, 2^(g+1))` splits
+//! into 8 equal sub-buckets, bounding the relative bucket width to 12.5%.
+//! Values below `2 * 2^SUB_BITS = 16` get one bucket each (exact).
+//! Concretely, for `v >= 16` with `g = floor(log2 v)`:
+//!
+//! ```text
+//! index(v) = (g - 3) * 8 + 8 + ((v >> (g - 3)) - 8)
+//! ```
+//!
+//! and the bounds are recoverable from the index alone (see
+//! [`bucket_bounds`]), which is what makes snapshots mergeable and
+//! percentiles well-defined: a percentile query returns the *upper bound*
+//! of the bucket holding the requested rank, so reported quantiles are a
+//! conservative (≤ 12.5% high) estimate, never an underestimate.
+//!
+//! The scheme caps at [`MAX_VALUE`] = `2^40 - 1` ns (~18 minutes); larger
+//! values clamp into the last bucket and tick the `saturated` counter so
+//! overflow is visible rather than silent. Total footprint: [`N_BUCKETS`]
+//! = 304 `AtomicU64` slots per histogram.
+//!
+//! Recording is a handful of relaxed atomic adds — safe from any thread,
+//! cheap enough for the serve event loop's per-request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Sub-bucket precision: `2^SUB_BITS` linear sub-buckets per power of two.
+pub const SUB_BITS: u32 = 3;
+const SUBS: u64 = 1 << SUB_BITS;
+/// Power-of-two cap exponent: values at or above `2^MAX_GROUP` saturate.
+const MAX_GROUP: u32 = 40;
+/// Largest representable value; everything above clamps here.
+pub const MAX_VALUE: u64 = (1u64 << MAX_GROUP) - 1;
+/// Number of buckets in the scheme.
+pub const N_BUCKETS: usize =
+    (MAX_GROUP - SUB_BITS) as usize * SUBS as usize + SUBS as usize;
+
+/// Bucket index for `v` (clamped to [`MAX_VALUE`]).
+pub fn bucket_index(v: u64) -> usize {
+    let v = v.min(MAX_VALUE);
+    if v < 2 * SUBS {
+        return v as usize;
+    }
+    let g = 63 - v.leading_zeros();
+    let shift = g - SUB_BITS;
+    let sub = (v >> shift) - SUBS;
+    ((g - SUB_BITS) as u64 * SUBS + SUBS + sub) as usize
+}
+
+/// Inclusive `(lower, upper)` value bounds of bucket `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let subs = SUBS as usize;
+    if i < 2 * subs {
+        return (i as u64, i as u64);
+    }
+    let g = SUB_BITS + ((i - subs) / subs) as u32;
+    let sub = ((i - subs) % subs) as u64;
+    let width = 1u64 << (g - SUB_BITS);
+    let lo = (SUBS + sub) << (g - SUB_BITS);
+    (lo, lo + width - 1)
+}
+
+/// A mergeable, thread-safe latency histogram over the module's bucket
+/// scheme. All methods take `&self`; recording is relaxed-atomic only.
+pub struct Histogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    saturated: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            saturated: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (nanoseconds by convention). Values above
+    /// [`MAX_VALUE`] clamp into the last bucket and count as saturated.
+    pub fn record(&self, v: u64) {
+        if v > MAX_VALUE {
+            self.saturated.fetch_add(1, Ordering::Relaxed);
+        }
+        let v = v.min(MAX_VALUE);
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record an elapsed duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold `other`'s recorded values into `self`.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.counts.iter().zip(other.counts.iter()) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.saturated
+            .fetch_add(other.saturated.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// A plain-integer copy for percentile queries and serialization.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            saturated: self.saturated.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An immutable copy of a [`Histogram`]'s state.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    max: u64,
+    saturated: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn saturated(&self) -> u64 {
+        self.saturated
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`q` in `[0, 1]`): the upper bound of the bucket
+    /// containing rank `ceil(q * count)`. Returns 0 for an empty
+    /// histogram. Because every query answers with a fixed representative
+    /// per bucket, quantiles of `merge(a, b)` are always bracketed by the
+    /// corresponding quantiles of `a` and `b`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_bounds(i).1;
+            }
+        }
+        bucket_bounds(N_BUCKETS - 1).1
+    }
+
+    /// Summary object used by the registry JSON renderer and the STATS
+    /// reply: counts plus p50/p95/p99/max/mean in microseconds.
+    pub fn summary_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("p50_us", Json::num(self.percentile(0.50) as f64 / 1e3)),
+            ("p95_us", Json::num(self.percentile(0.95) as f64 / 1e3)),
+            ("p99_us", Json::num(self.percentile(0.99) as f64 / 1e3)),
+            ("max_us", Json::num(self.max as f64 / 1e3)),
+            ("mean_us", Json::num(self.mean_ns() / 1e3)),
+            ("saturated", Json::num(self.saturated as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_have_exact_buckets() {
+        for v in 0..16u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v));
+        }
+    }
+
+    #[test]
+    fn bucket_scheme_is_a_partition() {
+        // indices are monotone non-decreasing in v and bounds tile the
+        // whole range with no gaps or overlaps
+        let mut expected_lo = 0u64;
+        for i in 0..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expected_lo, "bucket {i} leaves a gap");
+            assert!(hi >= lo);
+            assert_eq!(bucket_index(lo), i);
+            assert_eq!(bucket_index(hi), i);
+            expected_lo = hi + 1;
+        }
+        assert_eq!(expected_lo, MAX_VALUE + 1, "buckets must cover up to the cap");
+    }
+
+    #[test]
+    fn relative_bucket_width_is_bounded() {
+        for i in 16..N_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            let width = (hi - lo + 1) as f64;
+            assert!(width / lo as f64 <= 0.125 + 1e-12, "bucket {i} too wide");
+        }
+    }
+
+    #[test]
+    fn percentiles_of_exact_values_are_exact() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count(), 10);
+        assert_eq!(s.sum(), 55);
+        assert_eq!(s.percentile(0.5), 5);
+        assert_eq!(s.percentile(1.0), 10);
+        assert_eq!(s.percentile(0.0), 1);
+        assert_eq!(s.max(), 10);
+    }
+
+    #[test]
+    fn saturation_clamps_and_counts() {
+        let h = Histogram::new();
+        h.record(MAX_VALUE + 12345);
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.saturated(), 2);
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.max(), MAX_VALUE);
+        assert_eq!(s.percentile(0.99), MAX_VALUE);
+    }
+
+    #[test]
+    fn merge_sums_counts() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(100);
+        b.record(1000);
+        b.record(2000);
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum(), 3100);
+        assert_eq!(s.max(), 2000);
+    }
+}

@@ -1,0 +1,370 @@
+//! Unified telemetry: metric registries, latency histograms, and scoped
+//! trace spans — zero new dependencies.
+//!
+//! The paper's headline axis is wall-clock, so the reproduction treats
+//! timing as first-class infrastructure rather than scattered ad-hoc
+//! counters. One subsystem feeds every surface: the serve `STATS` reply,
+//! the `milo serve --metrics-addr` Prometheus-style exposition endpoint,
+//! `BENCH_serve.json`, and the optional `MILO_TRACE` event log.
+//!
+//! # Pieces
+//!
+//! * [`MetricsRegistry`] — a named map of atomic counters, gauges, and
+//!   [`Histogram`]s. Registries are cheap-`Clone` handles and can be
+//!   per-component (each `MetaStore` and each `SubsetServer` owns one, so
+//!   their stats stay independent) or process-global
+//!   ([`MetricsRegistry::global`], which collects [`Span`] timings).
+//!   Handle types ([`Counter`], [`Gauge`], `Arc<Histogram>`) are resolved
+//!   once at construction; hot paths never take the registry lock.
+//! * [`Histogram`] — log-bucketed latency distribution (see
+//!   [`hist`] for the bucket math: 8 sub-buckets per power of two,
+//!   ≤ 12.5% relative error, exact below 16 ns, saturating at ~18 min).
+//!   Mergeable across threads; percentile queries return exact bucket
+//!   upper bounds.
+//! * [`Span`] — a scoped timer. On drop it records its elapsed time into
+//!   the global registry under `span.<name>` and, when `MILO_TRACE=path`
+//!   is set, appends a JSON-lines event (see [`trace`] for the schema).
+//!   [`Stopwatch`](crate::util::timer::Stopwatch) sections ride on spans,
+//!   so legacy `sw.time("selection", ..)` call sites feed the same
+//!   telemetry.
+//!
+//! # Metric naming scheme
+//!
+//! Dotted lowercase paths, `<component>.<metric>[_<unit>][.<variant>]`:
+//!
+//! * `serve.requests`, `serve.accept_errors` — counters;
+//! * `serve.open_connections`, `serve.wbuf_high_water` — gauges;
+//! * `serve.request_latency_ns.next_subset`, `store.build_latency_ns`,
+//!   `span.preprocess.sge` — histograms (values in nanoseconds; summaries
+//!   render in microseconds).
+//!
+//! The text exposition ([`MetricsRegistry::render_text`]) maps a dotted
+//! name to `milo_` + the name with non-`[A-Za-z0-9_]` characters replaced
+//! by `_`, rendering histograms as Prometheus summaries (quantile series
+//! plus `_sum`/`_count`).
+//!
+//! # Kill switch
+//!
+//! [`set_enabled(false)`](set_enabled) turns all span/latency recording
+//! into no-ops (counters still tick — they predate this layer and cost a
+//! single relaxed add). `bench_serve` uses it to *measure* the telemetry
+//! overhead on the `NEXT_SUBSET` path instead of assuming it.
+
+pub mod hist;
+pub mod trace;
+
+pub use hist::{Histogram, HistogramSnapshot};
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Globally enable/disable latency recording (spans and timed-path
+/// histograms). Counters are unaffected. Used by benches to measure
+/// instrumentation overhead; defaults to enabled.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether latency recording is enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A monotone counter handle (relaxed-atomic, cheap `Clone`).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge handle: a settable value with high-water helpers.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if it is currently lower.
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self, n: u64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics. `Clone` is cheap (one `Arc`); all
+/// clones share the same metrics. Lookup/creation takes a lock — resolve
+/// handles once and store them, as `serve`/`store` do.
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    metrics: Arc<Mutex<BTreeMap<String, Metric>>>,
+}
+
+static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// The process-global registry: [`Span`]s and other component-less
+    /// telemetry (preprocess stages, session resolution) record here.
+    pub fn global() -> &'static MetricsRegistry {
+        GLOBAL.get_or_init(MetricsRegistry::new)
+    }
+
+    /// Get-or-create the counter `name`. If `name` is already registered
+    /// as a different kind, a detached (unexported) handle is returned.
+    pub fn counter(&self, name: impl Into<Cow<'static, str>>) -> Counter {
+        let name = name.into();
+        let mut metrics = self.metrics.lock().unwrap();
+        if let Some(Metric::Counter(c)) = metrics.get(name.as_ref()) {
+            return Counter(c.clone());
+        }
+        if metrics.contains_key(name.as_ref()) {
+            return Counter(Arc::new(AtomicU64::new(0)));
+        }
+        let cell = Arc::new(AtomicU64::new(0));
+        metrics.insert(name.into_owned(), Metric::Counter(cell.clone()));
+        Counter(cell)
+    }
+
+    /// Get-or-create the gauge `name` (same mismatch rule as `counter`).
+    pub fn gauge(&self, name: impl Into<Cow<'static, str>>) -> Gauge {
+        let name = name.into();
+        let mut metrics = self.metrics.lock().unwrap();
+        if let Some(Metric::Gauge(g)) = metrics.get(name.as_ref()) {
+            return Gauge(g.clone());
+        }
+        if metrics.contains_key(name.as_ref()) {
+            return Gauge(Arc::new(AtomicU64::new(0)));
+        }
+        let cell = Arc::new(AtomicU64::new(0));
+        metrics.insert(name.into_owned(), Metric::Gauge(cell.clone()));
+        Gauge(cell)
+    }
+
+    /// Get-or-create the histogram `name` (same mismatch rule as
+    /// `counter`).
+    pub fn histogram(&self, name: impl Into<Cow<'static, str>>) -> Arc<Histogram> {
+        let name = name.into();
+        let mut metrics = self.metrics.lock().unwrap();
+        if let Some(Metric::Histogram(h)) = metrics.get(name.as_ref()) {
+            return h.clone();
+        }
+        if metrics.contains_key(name.as_ref()) {
+            return Arc::new(Histogram::new());
+        }
+        let h = Arc::new(Histogram::new());
+        metrics.insert(name.into_owned(), Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Render every metric as one JSON object: counters/gauges as
+    /// numbers, histograms as summary objects (`count`, `p50_us`,
+    /// `p95_us`, `p99_us`, `max_us`, `mean_us`, `saturated`). This is the
+    /// single registry→JSON path shared by the serve STATS reply for both
+    /// the server and store registries.
+    pub fn to_json(&self) -> Json {
+        let metrics = self.metrics.lock().unwrap();
+        let mut obj = BTreeMap::new();
+        for (name, metric) in metrics.iter() {
+            let v = match metric {
+                Metric::Counter(c) => Json::num(c.load(Ordering::Relaxed) as f64),
+                Metric::Gauge(g) => Json::num(g.load(Ordering::Relaxed) as f64),
+                Metric::Histogram(h) => h.snapshot().summary_json(),
+            };
+            obj.insert(name.clone(), v);
+        }
+        Json::Obj(obj)
+    }
+
+    /// Append a plain-text Prometheus-style exposition of every metric to
+    /// `out` (see the module docs for the name mapping). Histograms render
+    /// as summaries; values are in their recorded unit (nanoseconds for
+    /// latency histograms).
+    pub fn render_text(&self, out: &mut String) {
+        let metrics = self.metrics.lock().unwrap();
+        for (name, metric) in metrics.iter() {
+            let mut id = String::with_capacity(name.len() + 5);
+            id.push_str("milo_");
+            for ch in name.chars() {
+                id.push(if ch.is_ascii_alphanumeric() || ch == '_' { ch } else { '_' });
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {id} counter");
+                    let _ = writeln!(out, "{id} {}", c.load(Ordering::Relaxed));
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {id} gauge");
+                    let _ = writeln!(out, "{id} {}", g.load(Ordering::Relaxed));
+                }
+                Metric::Histogram(h) => {
+                    let s = h.snapshot();
+                    let _ = writeln!(out, "# TYPE {id} summary");
+                    for (q, label) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                        let _ = writeln!(
+                            out,
+                            "{id}{{quantile=\"{label}\"}} {}",
+                            s.percentile(q)
+                        );
+                    }
+                    let _ = writeln!(out, "{id}_sum {}", s.sum());
+                    let _ = writeln!(out, "{id}_count {}", s.count());
+                }
+            }
+        }
+    }
+}
+
+/// A scoped timer. Created with [`Span::enter`]; on drop (or explicit
+/// [`finish`](Span::finish)) it records its elapsed time into the global
+/// registry's `span.<name>` histogram and emits a `MILO_TRACE` event when
+/// tracing is configured. When telemetry is disabled ([`set_enabled`]),
+/// entering a span is a single relaxed load.
+pub struct Span {
+    name: Cow<'static, str>,
+    start: Option<Instant>,
+}
+
+impl Span {
+    pub fn enter(name: impl Into<Cow<'static, str>>) -> Span {
+        Span { name: name.into(), start: enabled().then(Instant::now) }
+    }
+
+    /// End the span now, returning its measured duration (zero when
+    /// telemetry was disabled at entry).
+    pub fn finish(mut self) -> Duration {
+        self.finish_inner()
+    }
+
+    fn finish_inner(&mut self) -> Duration {
+        let Some(start) = self.start.take() else { return Duration::ZERO };
+        let d = start.elapsed();
+        MetricsRegistry::global()
+            .histogram(format!("span.{}", self.name))
+            .record_duration(d);
+        trace::emit_span(&self.name, d);
+        d
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.finish_inner();
+    }
+}
+
+/// Run `f` inside a span named `name`.
+pub fn time<R>(name: impl Into<Cow<'static, str>>, f: impl FnOnce() -> R) -> R {
+    let _span = Span::enter(name);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("t.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name resolves to the same cell
+        assert_eq!(reg.counter("t.count").get(), 5);
+        let g = reg.gauge("t.gauge");
+        g.set(7);
+        g.record_max(3);
+        assert_eq!(g.get(), 7);
+        g.record_max(11);
+        g.inc();
+        g.dec(2);
+        assert_eq!(g.get(), 10);
+    }
+
+    #[test]
+    fn kind_mismatch_returns_detached_handle() {
+        let reg = MetricsRegistry::new();
+        reg.counter("t.dual").add(3);
+        // registering the same name as a gauge must not clobber the counter
+        let g = reg.gauge("t.dual");
+        g.set(99);
+        assert_eq!(reg.counter("t.dual").get(), 3);
+    }
+
+    #[test]
+    fn to_json_renders_all_kinds() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a.count").add(2);
+        reg.gauge("b.gauge").set(9);
+        let h = reg.histogram("c.hist_ns");
+        h.record(5);
+        h.record(7);
+        let json = reg.to_json();
+        assert_eq!(json.get("a.count").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(json.get("b.gauge").unwrap().as_f64().unwrap(), 9.0);
+        let hist = json.get("c.hist_ns").unwrap();
+        assert_eq!(hist.get("count").unwrap().as_f64().unwrap(), 2.0);
+        assert!(hist.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // one test (not two) because `set_enabled` is process-global and the
+    // test harness runs tests concurrently
+    #[test]
+    fn span_records_into_global_registry_unless_disabled() {
+        let count = |name: &str| {
+            MetricsRegistry::global().histogram(name.to_string()).snapshot().count()
+        };
+        let before = count("span.obs_test_span");
+        time("obs_test_span", || std::hint::black_box(1 + 1));
+        assert_eq!(count("span.obs_test_span"), before + 1);
+
+        set_enabled(false);
+        let disabled_before = count("span.obs_test_disabled");
+        let d = Span::enter("obs_test_disabled").finish();
+        set_enabled(true);
+        assert_eq!(d, Duration::ZERO);
+        assert_eq!(count("span.obs_test_disabled"), disabled_before);
+    }
+}

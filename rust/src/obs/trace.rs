@@ -1,0 +1,62 @@
+//! Optional structured trace log, gated by the `MILO_TRACE` environment
+//! variable.
+//!
+//! When `MILO_TRACE=/path/to/trace.jsonl` is set, every finished
+//! [`Span`](super::Span) appends one JSON object per line (JSON-lines) to
+//! that file:
+//!
+//! ```text
+//! {"ev":"span","name":"preprocess.sge","t_us":812.0,"us":15301.2}
+//! ```
+//!
+//! Fields: `ev` — event kind (currently always `"span"`); `name` — the
+//! span name; `t_us` — microseconds since the process's first trace
+//! event; `us` — the span's elapsed microseconds. The file is opened in
+//! append mode once per process; unset (the default) costs one relaxed
+//! load per span.
+
+use std::io::Write;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+static SINK: OnceLock<Option<Mutex<std::fs::File>>> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+fn sink() -> Option<&'static Mutex<std::fs::File>> {
+    SINK.get_or_init(|| {
+        let path = std::env::var("MILO_TRACE").ok()?;
+        if path.is_empty() {
+            return None;
+        }
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| eprintln!("[obs] cannot open MILO_TRACE={path}: {e}"))
+            .ok()?;
+        Some(Mutex::new(file))
+    })
+    .as_ref()
+}
+
+/// Whether a trace sink is configured (first call resolves `MILO_TRACE`).
+pub fn enabled() -> bool {
+    sink().is_some()
+}
+
+/// Append one span event; a no-op unless `MILO_TRACE` is set.
+pub fn emit_span(name: &str, elapsed: std::time::Duration) {
+    let Some(sink) = sink() else { return };
+    let t_us = EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6;
+    let line = Json::obj(vec![
+        ("ev", Json::str("span")),
+        ("name", Json::str(name)),
+        ("t_us", Json::num(t_us)),
+        ("us", Json::num(elapsed.as_secs_f64() * 1e6)),
+    ])
+    .to_string();
+    let mut f = sink.lock().unwrap();
+    let _ = writeln!(f, "{line}");
+}

@@ -86,19 +86,24 @@ mod sys {
     }
 }
 
-/// Block up to `timeout_ms` until the listener or a connection is ready.
-/// Returns `(listener_readable, per-connection readiness)` with the
-/// readiness vector in the same order as `conns`. Never panics; on an
-/// unexpected poll failure it degrades to "everything ready" after a
-/// short sleep, which the nonblocking socket ops resolve safely.
+/// Block up to `timeout_ms` until a listener or a connection is ready.
+/// Takes any number of listeners (the serve loop passes the protocol
+/// listener plus an optional `--metrics-addr` one); returns per-listener
+/// readiness in the same order as `listeners` and per-connection readiness
+/// in the same order as `conns`. Never panics; on an unexpected poll
+/// failure it degrades to "everything ready" after a short sleep, which
+/// the nonblocking socket ops resolve safely.
 #[cfg(target_os = "linux")]
 pub(crate) fn wait(
-    listener: SockId,
+    listeners: &[SockId],
     conns: &[(SockId, Interest)],
     timeout_ms: i32,
-) -> (bool, Vec<Ready>) {
-    let mut fds: Vec<sys::PollFd> = Vec::with_capacity(conns.len() + 1);
-    fds.push(sys::PollFd { fd: listener, events: sys::POLLIN, revents: 0 });
+) -> (Vec<bool>, Vec<Ready>) {
+    let mut fds: Vec<sys::PollFd> =
+        Vec::with_capacity(listeners.len() + conns.len());
+    for id in listeners {
+        fds.push(sys::PollFd { fd: *id, events: sys::POLLIN, revents: 0 });
+    }
     for (id, interest) in conns {
         let mut events = 0i16;
         if interest.read {
@@ -122,10 +127,13 @@ pub(crate) fn wait(
         }
         // Unexpected failure: degrade to the fallback semantics.
         std::thread::sleep(std::time::Duration::from_millis(2));
-        return (true, fallback_ready(conns));
+        return (vec![true; listeners.len()], fallback_ready(conns));
     }
-    let listener_ready = fds[0].revents & (sys::POLLIN | sys::POLLERR) != 0;
-    let ready = fds[1..]
+    let listeners_ready = fds[..listeners.len()]
+        .iter()
+        .map(|f| f.revents & (sys::POLLIN | sys::POLLERR) != 0)
+        .collect();
+    let ready = fds[listeners.len()..]
         .iter()
         .map(|f| Ready {
             readable: f.revents & sys::POLLIN != 0,
@@ -133,19 +141,19 @@ pub(crate) fn wait(
             error: f.revents & (sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0,
         })
         .collect();
-    (listener_ready, ready)
+    (listeners_ready, ready)
 }
 
 /// Portable fallback: sleep briefly, then report everything as ready. The
 /// nonblocking socket ops turn spurious readiness into `WouldBlock`.
 #[cfg(not(target_os = "linux"))]
 pub(crate) fn wait(
-    _listener: SockId,
+    listeners: &[SockId],
     conns: &[(SockId, Interest)],
     timeout_ms: i32,
-) -> (bool, Vec<Ready>) {
+) -> (Vec<bool>, Vec<Ready>) {
     std::thread::sleep(std::time::Duration::from_millis(timeout_ms.clamp(1, 5) as u64));
-    (true, fallback_ready(conns))
+    (vec![true; listeners.len()], fallback_ready(conns))
 }
 
 fn fallback_ready(conns: &[(SockId, Interest)]) -> Vec<Ready> {
@@ -289,14 +297,15 @@ mod tests {
         let addr = listener.local_addr().unwrap();
         // nothing pending: poll times out quickly and reports not-ready
         // (fallback builds report ready; both are valid inputs to the loop)
-        let (_ready, conns) = wait(listener_id(&listener), &[], 10);
+        let (ready, conns) = wait(&[listener_id(&listener)], &[], 10);
+        assert_eq!(ready.len(), 1);
         assert!(conns.is_empty());
         // a pending connection must wake the listener within the timeout
         let _client = TcpStream::connect(addr).unwrap();
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
         loop {
-            let (ready, _) = wait(listener_id(&listener), &[], 100);
-            if ready && listener.accept().is_ok() {
+            let (ready, _) = wait(&[listener_id(&listener)], &[], 100);
+            if ready[0] && listener.accept().is_ok() {
                 break;
             }
             assert!(std::time::Instant::now() < deadline, "listener never woke");

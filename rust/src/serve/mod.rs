@@ -48,9 +48,43 @@
 //! | `{"cmd":"GET_META"}` | the bound entry's full metadata document (JSON schema of `save_metadata`, or a binfmt `META` frame) |
 //! | `{"cmd":"NEXT_SUBSET"}` | the next SGE subset in this client's cycle with its cycle `index` |
 //! | `{"cmd":"SAMPLE_WRE","k":K}` | a fresh size-K WRE draw from this client's seeded stream |
-//! | `{"cmd":"STATS"}` | serving + store counters, including `open_connections` and the served `entries` |
+//! | `{"cmd":"STATS"}` | serving + store telemetry (see *STATS reply* below) |
 //! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`, then the server closes the connection and reclaims its slot |
 //! | `{"cmd":"PING"}` | `{"ok":true}` |
+//!
+//! ## STATS reply
+//!
+//! `STATS` returns a `"stats"` object with (both wires, JSON either way):
+//!
+//! * the legacy flat counters — `connections`, `open_connections`,
+//!   `requests`, `subsets_served`, `wre_samples`, `goodbyes`, `bytes_rx`,
+//!   `bytes_tx` — plus `accept_errors` (listener `accept` failures, e.g.
+//!   fd exhaustion) and `wbuf_teardowns` (connections killed for
+//!   overshooting the outbound-buffer cap), so slow-reader kills and
+//!   accept backoff are diagnosable instead of silent;
+//! * `"metrics"` — the server's full [`crate::obs::MetricsRegistry`]
+//!   rendered to JSON: every counter above under its `serve.*` name, the
+//!   `serve.wbuf_high_water` gauge, and histogram summaries
+//!   (`count`/`p50_us`/`p95_us`/`p99_us`/`max_us`/`mean_us`/`saturated`)
+//!   for per-frame-type request latency
+//!   (`serve.request_latency_ns.<hello|get_meta|next_subset|sample_wre|stats|ping|goodbye|other>`)
+//!   and per-tick poll/dispatch time (`serve.tick_{poll,dispatch}_ns`);
+//! * `"store"` — the same registry rendering of the backing
+//!   [`MetaStore`]'s metrics (counters + hit/disk-load/build latency
+//!   histograms), or `null` when serving without a store;
+//! * `"entries"`, `"dataset"`, `"client"` — the served entry list and
+//!   this connection's binding.
+//!
+//! # Metrics exposition (`--metrics-addr`)
+//!
+//! `milo serve --metrics-addr host:port` (or
+//! [`ServeOptions::metrics_addr`] via [`SubsetServer::bind_with`]) binds
+//! a second listener on the *same* event loop that answers any HTTP
+//! request with a plain-text Prometheus-style exposition of the server
+//! registry, the store registry, and the process-global registry (span
+//! timings) — `curl http://host:port/metrics` and point a scraper at it.
+//! Responses are one-shot (`Connection: close`); the endpoint shares the
+//! serve thread, so a scrape costs one registry render, no extra thread.
 //!
 //! A malformed request (bad JSON, bad frame, unknown command) gets an
 //! `"ok":false` line / `ERROR` frame; only an unrecoverable framing error
@@ -90,15 +124,17 @@ pub use frame::{Frame, FrameDecoder};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use crate::coordinator::{metadata_to_json, Metadata};
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::selection::WreStrategy;
-use crate::store::{binfmt, fnv1a64, MetaStore, StoreStats};
+use crate::store::{binfmt, fnv1a64, MetaStore};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -185,10 +221,13 @@ pub fn client_start_cursor(meta: &Metadata, client: &str) -> usize {
     (fnv1a64(client.as_bytes()) % n as u64) as usize
 }
 
-/// Serving counters (reported by `STATS`).
+/// Serving counters (reported by `STATS`). A snapshot of the server's
+/// [`MetricsRegistry`] counters — the registry additionally carries the
+/// latency histograms and gauges the struct form elides.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServeStats {
-    /// Total connections accepted over the server's lifetime.
+    /// Total connections accepted over the server's lifetime (including
+    /// metrics-exposition connections).
     pub connections: u64,
     /// Connections currently open (a gauge — the "no leaked slots"
     /// number the goodbye tests assert on).
@@ -200,6 +239,86 @@ pub struct ServeStats {
     pub goodbyes: u64,
     pub bytes_rx: u64,
     pub bytes_tx: u64,
+    /// Listener `accept` failures (e.g. EMFILE under fd exhaustion) that
+    /// triggered the accept backoff.
+    pub accept_errors: u64,
+    /// Connections torn down for overshooting the outbound-buffer cap
+    /// (a client pipelining far past its read rate).
+    pub wbuf_teardowns: u64,
+}
+
+/// Request commands instrumented with a per-frame-type latency histogram
+/// (`serve.request_latency_ns.<name>`); the last slot collects unknown /
+/// malformed requests.
+const CMD_NAMES: [&str; 8] = [
+    "hello", "get_meta", "next_subset", "sample_wre", "stats", "ping", "goodbye",
+    "other",
+];
+const CMD_OTHER: usize = CMD_NAMES.len() - 1;
+
+fn cmd_slot(cmd: &str) -> usize {
+    match cmd {
+        "HELLO" => 0,
+        "GET_META" => 1,
+        "NEXT_SUBSET" => 2,
+        "SAMPLE_WRE" => 3,
+        "STATS" => 4,
+        "PING" => 5,
+        "GOODBYE" => 6,
+        _ => CMD_OTHER,
+    }
+}
+
+/// The server's per-instance metrics: one registry, with every handle the
+/// event loop touches pre-resolved at bind so the hot path never takes
+/// the registry lock.
+struct ServeMetrics {
+    registry: MetricsRegistry,
+    connections: Counter,
+    open_connections: Gauge,
+    requests: Counter,
+    subsets_served: Counter,
+    wre_samples: Counter,
+    goodbyes: Counter,
+    bytes_rx: Counter,
+    bytes_tx: Counter,
+    accept_errors: Counter,
+    wbuf_teardowns: Counter,
+    metrics_scrapes: Counter,
+    /// Largest unflushed outbound buffer observed on any connection.
+    wbuf_high_water: Gauge,
+    /// Time spent blocked in `poll(2)` per event-loop tick.
+    tick_poll: Arc<Histogram>,
+    /// Time spent accepting/reading/dispatching/writing per tick.
+    tick_dispatch: Arc<Histogram>,
+    /// Request handling + response encode latency, per frame type.
+    req_latency: [Arc<Histogram>; CMD_NAMES.len()],
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        let registry = MetricsRegistry::new();
+        ServeMetrics {
+            connections: registry.counter("serve.connections"),
+            open_connections: registry.gauge("serve.open_connections"),
+            requests: registry.counter("serve.requests"),
+            subsets_served: registry.counter("serve.subsets_served"),
+            wre_samples: registry.counter("serve.wre_samples"),
+            goodbyes: registry.counter("serve.goodbyes"),
+            bytes_rx: registry.counter("serve.bytes_rx"),
+            bytes_tx: registry.counter("serve.bytes_tx"),
+            accept_errors: registry.counter("serve.accept_errors"),
+            wbuf_teardowns: registry.counter("serve.wbuf_teardowns"),
+            metrics_scrapes: registry.counter("serve.metrics_scrapes"),
+            wbuf_high_water: registry.gauge("serve.wbuf_high_water"),
+            tick_poll: registry.histogram("serve.tick_poll_ns"),
+            tick_dispatch: registry.histogram("serve.tick_dispatch_ns"),
+            req_latency: std::array::from_fn(|i| {
+                registry.histogram(format!("serve.request_latency_ns.{}", CMD_NAMES[i]))
+            }),
+            registry,
+        }
+    }
 }
 
 struct Shared {
@@ -218,39 +337,47 @@ struct Shared {
     seed: u64,
     store: Option<MetaStore>,
     shutdown: AtomicBool,
-    connections: AtomicU64,
-    open_connections: AtomicU64,
-    requests: AtomicU64,
-    subsets_served: AtomicU64,
-    wre_samples: AtomicU64,
-    goodbyes: AtomicU64,
-    bytes_rx: AtomicU64,
-    bytes_tx: AtomicU64,
+    metrics: ServeMetrics,
 }
 
 impl Shared {
     fn stats(&self) -> ServeStats {
+        let m = &self.metrics;
         ServeStats {
-            connections: self.connections.load(Ordering::Relaxed),
-            open_connections: self.open_connections.load(Ordering::Relaxed),
-            requests: self.requests.load(Ordering::Relaxed),
-            subsets_served: self.subsets_served.load(Ordering::Relaxed),
-            wre_samples: self.wre_samples.load(Ordering::Relaxed),
-            goodbyes: self.goodbyes.load(Ordering::Relaxed),
-            bytes_rx: self.bytes_rx.load(Ordering::Relaxed),
-            bytes_tx: self.bytes_tx.load(Ordering::Relaxed),
+            connections: m.connections.get(),
+            open_connections: m.open_connections.get(),
+            requests: m.requests.get(),
+            subsets_served: m.subsets_served.get(),
+            wre_samples: m.wre_samples.get(),
+            goodbyes: m.goodbyes.get(),
+            bytes_rx: m.bytes_rx.get(),
+            bytes_tx: m.bytes_tx.get(),
+            accept_errors: m.accept_errors.get(),
+            wbuf_teardowns: m.wbuf_teardowns.get(),
         }
     }
 }
 
-/// A running subset server. Bind with [`SubsetServer::bind`] (one entry)
-/// or [`SubsetServer::bind_multi`] (one process, many `(dataset,
-/// fraction)` entries), read the actual address with
+/// Options for [`SubsetServer::bind_with`] beyond the required entry
+/// list.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Bind a plain-text metrics exposition listener on this address
+    /// (e.g. `"127.0.0.1:9464"`), served from the same event loop — see
+    /// the [module docs](self) *Metrics exposition* section.
+    pub metrics_addr: Option<String>,
+}
+
+/// A running subset server. Bind with [`SubsetServer::bind`] (one entry),
+/// [`SubsetServer::bind_multi`] (one process, many `(dataset, fraction)`
+/// entries), or [`SubsetServer::bind_with`] (multi + [`ServeOptions`]),
+/// read the actual address with
 /// [`addr`](SubsetServer::addr) (pass port 0 for an ephemeral port), stop
 /// with [`shutdown`](SubsetServer::shutdown) or block forever with
 /// [`run_forever`](SubsetServer::run_forever).
 pub struct SubsetServer {
     addr: SocketAddr,
+    metrics_addr: Option<SocketAddr>,
     shared: Arc<Shared>,
     event_loop: Option<JoinHandle<()>>,
 }
@@ -277,6 +404,18 @@ impl SubsetServer {
         store: Option<MetaStore>,
         seed: u64,
     ) -> Result<SubsetServer> {
+        SubsetServer::bind_with(addr, entries, store, seed, ServeOptions::default())
+    }
+
+    /// [`bind_multi`](SubsetServer::bind_multi) plus [`ServeOptions`]
+    /// (e.g. a metrics exposition listener).
+    pub fn bind_with(
+        addr: &str,
+        entries: Vec<Arc<Metadata>>,
+        store: Option<MetaStore>,
+        seed: u64,
+        opts: ServeOptions,
+    ) -> Result<SubsetServer> {
         ensure!(!entries.is_empty(), "a subset server needs at least one entry");
         for (i, a) in entries.iter().enumerate() {
             for b in entries.iter().skip(i + 1) {
@@ -290,6 +429,14 @@ impl SubsetServer {
         }
         let listener = event::bind_reusable(addr)?;
         let local = listener.local_addr()?;
+        let metrics_listener = match &opts.metrics_addr {
+            Some(maddr) => Some(event::bind_reusable(maddr)?),
+            None => None,
+        };
+        let metrics_local = match &metrics_listener {
+            Some(l) => Some(l.local_addr()?),
+            None => None,
+        };
         // pay each entry's artifact encoding once, up front — never per
         // GET_META on the event-loop thread
         let encoded = entries
@@ -317,22 +464,28 @@ impl SubsetServer {
             seed,
             store,
             shutdown: AtomicBool::new(false),
-            connections: AtomicU64::new(0),
-            open_connections: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            subsets_served: AtomicU64::new(0),
-            wre_samples: AtomicU64::new(0),
-            goodbyes: AtomicU64::new(0),
-            bytes_rx: AtomicU64::new(0),
-            bytes_tx: AtomicU64::new(0),
+            metrics: ServeMetrics::new(),
         });
         let loop_shared = shared.clone();
-        let event_loop = std::thread::spawn(move || event_loop(listener, loop_shared));
-        Ok(SubsetServer { addr: local, shared, event_loop: Some(event_loop) })
+        let event_loop = std::thread::spawn(move || {
+            event_loop(listener, metrics_listener, loop_shared)
+        });
+        Ok(SubsetServer {
+            addr: local,
+            metrics_addr: metrics_local,
+            shared,
+            event_loop: Some(event_loop),
+        })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The bound metrics exposition address, when
+    /// [`ServeOptions::metrics_addr`] was set.
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.metrics_addr
     }
 
     pub fn stats(&self) -> ServeStats {
@@ -371,12 +524,23 @@ impl SubsetServer {
 // The event loop
 // ---------------------------------------------------------------------------
 
-fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
+fn event_loop(
+    listener: TcpListener,
+    metrics_listener: Option<TcpListener>,
+    shared: Arc<Shared>,
+) {
     if listener.set_nonblocking(true).is_err() {
         eprintln!("[serve] listener set_nonblocking failed; server exiting");
         return;
     }
-    let listener_id = event::listener_id(&listener);
+    let mut listener_ids = vec![event::listener_id(&listener)];
+    if let Some(ml) = &metrics_listener {
+        if ml.set_nonblocking(true).is_err() {
+            eprintln!("[serve] metrics listener set_nonblocking failed; server exiting");
+            return;
+        }
+        listener_ids.push(event::listener_id(ml));
+    }
     let mut conns: HashMap<usize, Conn> = HashMap::new();
     let mut next_token: usize = 0;
     loop {
@@ -397,12 +561,23 @@ fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
                 (c.id, interest)
             })
             .collect();
-        let (listener_ready, ready) = event::wait(listener_id, &poll_set, POLL_TIMEOUT_MS);
+        let t_poll = crate::obs::enabled().then(Instant::now);
+        let (listeners_ready, ready) =
+            event::wait(&listener_ids, &poll_set, POLL_TIMEOUT_MS);
+        if let Some(t) = t_poll {
+            shared.metrics.tick_poll.record_duration(t.elapsed());
+        }
         if shared.shutdown.load(Ordering::SeqCst) {
             break; // don't accept the shutdown wake-up connection
         }
-        if listener_ready {
-            accept_new(&listener, &mut conns, &mut next_token, &shared);
+        let t_dispatch = crate::obs::enabled().then(Instant::now);
+        if listeners_ready[0] {
+            accept_new(&listener, &mut conns, &mut next_token, &shared, ConnKind::Proto);
+        }
+        if let Some(ml) = &metrics_listener {
+            if listeners_ready[1] {
+                accept_new(ml, &mut conns, &mut next_token, &shared, ConnKind::Metrics);
+            }
         }
         for (t, r) in tokens.iter().zip(ready) {
             let Some(conn) = conns.get_mut(t) else { continue };
@@ -424,14 +599,17 @@ fn event_loop(listener: TcpListener, shared: Arc<Shared>) {
         }
         conns.retain(|_, c| {
             if c.dead {
-                shared.open_connections.fetch_sub(1, Ordering::Relaxed);
+                shared.metrics.open_connections.dec(1);
             }
             !c.dead
         });
+        if let Some(t) = t_dispatch {
+            shared.metrics.tick_dispatch.record_duration(t.elapsed());
+        }
     }
     let remaining = conns.len() as u64;
     if remaining > 0 {
-        shared.open_connections.fetch_sub(remaining, Ordering::Relaxed);
+        shared.metrics.open_connections.dec(remaining);
     }
 }
 
@@ -440,6 +618,7 @@ fn accept_new(
     conns: &mut HashMap<usize, Conn>,
     next_token: &mut usize,
     shared: &Arc<Shared>,
+    kind: ConnKind,
 ) {
     loop {
         match listener.accept() {
@@ -448,18 +627,20 @@ fn accept_new(
                     continue;
                 }
                 let _ = stream.set_nodelay(true);
-                shared.connections.fetch_add(1, Ordering::Relaxed);
-                shared.open_connections.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.connections.inc();
+                shared.metrics.open_connections.inc();
                 let token = *next_token;
                 *next_token += 1;
-                conns.insert(token, Conn::new(stream, shared));
+                conns.insert(token, Conn::new(stream, shared, kind));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => {
                 // a persistent error (e.g. EMFILE under fd exhaustion)
                 // leaves the backlog poll-ready forever — back off briefly
-                // so the loop doesn't hot-spin and flood stderr
+                // so the loop doesn't hot-spin and flood stderr, and count
+                // it so the backoff is visible in STATS instead of silent
+                shared.metrics.accept_errors.inc();
                 eprintln!("[serve] accept error: {e}");
                 std::thread::sleep(std::time::Duration::from_millis(50));
                 break;
@@ -468,11 +649,20 @@ fn accept_new(
     }
 }
 
+/// What protocol a connection speaks: the subset protocol (JSON lines /
+/// frames) or the one-shot HTTP metrics exposition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ConnKind {
+    Proto,
+    Metrics,
+}
+
 /// One registered connection: nonblocking stream + read/write buffers +
 /// negotiated wire format + deterministic stream state.
 struct Conn {
     stream: TcpStream,
     id: event::SockId,
+    kind: ConnKind,
     /// Inbound bytes awaiting a complete JSON line (JSON-line mode).
     rbuf: Vec<u8>,
     /// Inbound frame reassembly (frame mode).
@@ -490,11 +680,12 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream, shared: &Shared) -> Conn {
+    fn new(stream: TcpStream, shared: &Shared, kind: ConnKind) -> Conn {
         let id = event::stream_id(&stream);
         Conn {
             stream,
             id,
+            kind,
             rbuf: Vec::new(),
             decoder: FrameDecoder::new(),
             wbuf: Vec::new(),
@@ -515,7 +706,7 @@ impl Conn {
                     break;
                 }
                 Ok(n) => {
-                    shared.bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                    shared.metrics.bytes_rx.add(n as u64);
                     match self.wire {
                         WireMode::Json => self.rbuf.extend_from_slice(&chunk[..n]),
                         WireMode::Frame => self.decoder.push(&chunk[..n]),
@@ -543,7 +734,7 @@ impl Conn {
                     break;
                 }
                 Ok(n) => {
-                    shared.bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                    shared.metrics.bytes_tx.add(n as u64);
                     self.wpos += n;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
@@ -563,6 +754,10 @@ impl Conn {
     /// Drain every complete message buffered so far, appending responses
     /// to the write buffer.
     fn process_pending(&mut self, shared: &Shared) {
+        if self.kind == ConnKind::Metrics {
+            self.process_metrics(shared);
+            return;
+        }
         loop {
             if self.closing || self.dead {
                 return;
@@ -570,6 +765,7 @@ impl Conn {
             if self.wbuf.len() - self.wpos > MAX_WBUF_BYTES {
                 // the client pipelined far past its read rate: one burst
                 // overshot the outbound cap even with reads gated off
+                shared.metrics.wbuf_teardowns.inc();
                 self.dead = true;
                 return;
             }
@@ -590,14 +786,7 @@ impl Conn {
                     if text.trim().is_empty() {
                         continue;
                     }
-                    shared.requests.fetch_add(1, Ordering::Relaxed);
-                    let reply = match Json::parse(&text) {
-                        Ok(req) => {
-                            handle_request(&req, &mut self.session, self.wire, shared)
-                        }
-                        Err(e) => Err(format!("bad request json: {e:#}")),
-                    };
-                    self.push_reply(reply, shared);
+                    self.dispatch(&text, shared);
                 }
                 WireMode::Frame => match self.decoder.next() {
                     Ok(None) => {
@@ -611,14 +800,7 @@ impl Conn {
                         return;
                     }
                     Ok(Some(Frame::Json(text))) => {
-                        shared.requests.fetch_add(1, Ordering::Relaxed);
-                        let reply = match Json::parse(&text) {
-                            Ok(req) => {
-                                handle_request(&req, &mut self.session, self.wire, shared)
-                            }
-                            Err(e) => Err(format!("bad request json: {e:#}")),
-                        };
-                        self.push_reply(reply, shared);
+                        self.dispatch(&text, shared);
                     }
                     Ok(Some(other)) => {
                         // requests must be JSON frames; anything else is a
@@ -639,6 +821,62 @@ impl Conn {
                 },
             }
         }
+    }
+
+    /// Handle one complete request (either wire): parse, dispatch, encode
+    /// the reply — recording the end-to-end latency into the per-frame-
+    /// type histogram and the outbound high-water mark.
+    fn dispatch(&mut self, text: &str, shared: &Shared) {
+        shared.metrics.requests.inc();
+        let t0 = crate::obs::enabled().then(Instant::now);
+        let (slot, reply) = match Json::parse(text) {
+            Ok(req) => {
+                let slot = req
+                    .opt("cmd")
+                    .and_then(|c| c.as_str().ok())
+                    .map(cmd_slot)
+                    .unwrap_or(CMD_OTHER);
+                (slot, handle_request(&req, &mut self.session, self.wire, shared))
+            }
+            Err(e) => (CMD_OTHER, Err(format!("bad request json: {e:#}"))),
+        };
+        self.push_reply(reply, shared);
+        if let Some(t0) = t0 {
+            shared.metrics.req_latency[slot].record_duration(t0.elapsed());
+        }
+        shared
+            .metrics
+            .wbuf_high_water
+            .record_max((self.wbuf.len() - self.wpos) as u64);
+    }
+
+    /// The metrics-exposition protocol: wait for a complete HTTP request
+    /// head (blank line), answer with one plain-text exposition document,
+    /// flush, close. Everything else about HTTP is deliberately ignored.
+    fn process_metrics(&mut self, shared: &Shared) {
+        if self.closing || self.dead {
+            return;
+        }
+        if self.rbuf.len() > MAX_REQUEST_BYTES {
+            self.dead = true;
+            return;
+        }
+        let head_done = self.rbuf.windows(4).any(|w| w == b"\r\n\r\n")
+            || self.rbuf.windows(2).any(|w| w == b"\n\n");
+        if !head_done {
+            return;
+        }
+        self.rbuf.clear();
+        shared.metrics.metrics_scrapes.inc();
+        let body = render_exposition(shared);
+        let head = format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len(),
+        );
+        self.wbuf.extend_from_slice(head.as_bytes());
+        self.wbuf.extend_from_slice(body.as_bytes());
+        self.closing = true;
     }
 
     fn push_reply(&mut self, reply: Result<Reply<'_>, String>, shared: &Shared) {
@@ -705,7 +943,7 @@ impl Conn {
                 },
             },
             Ok(Reply::Goodbye) => {
-                shared.goodbyes.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.goodbyes.inc();
                 self.push_ok(vec![("goodbye", Json::Bool(true))]);
                 self.closing = true;
             }
@@ -959,7 +1197,7 @@ fn handle_request<'s>(
             }
             let index = session.cursor % n;
             session.cursor += 1;
-            shared.subsets_served.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.subsets_served.inc();
             // zero-copy: the reply borrows the entry's subset slice; the
             // connection encodes it straight into its write buffer
             Ok(Reply::Subset {
@@ -990,7 +1228,7 @@ fn handle_request<'s>(
                 WreStrategy::new("serve_wre", meta.wre_classes.clone())
             });
             let subset = wre.sample_k(k, &mut session.rng);
-            shared.wre_samples.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.wre_samples.inc();
             Ok(Reply::Subset {
                 index: frame::NO_INDEX,
                 subset: SubsetPayload::Owned(subset),
@@ -998,8 +1236,11 @@ fn handle_request<'s>(
         }
         "STATS" => {
             let s = shared.stats();
+            // one registry→JSON renderer serves both the server's and the
+            // store's telemetry (counters + histogram summaries) — no
+            // hand-assembled stats JSON to drift out of sync
             let store = match &shared.store {
-                Some(st) => store_stats_json(st.stats()),
+                Some(st) => st.registry().to_json(),
                 None => Json::Null,
             };
             let entries = Json::arr(
@@ -1025,6 +1266,8 @@ fn handle_request<'s>(
                     ("goodbyes", Json::num(s.goodbyes as f64)),
                     ("bytes_rx", Json::num(s.bytes_rx as f64)),
                     ("bytes_tx", Json::num(s.bytes_tx as f64)),
+                    ("accept_errors", Json::num(s.accept_errors as f64)),
+                    ("wbuf_teardowns", Json::num(s.wbuf_teardowns as f64)),
                     (
                         "dataset",
                         Json::str(shared.entries[session.entry].dataset.clone()),
@@ -1032,6 +1275,7 @@ fn handle_request<'s>(
                     ("entries", entries),
                     ("client", Json::str(session.client.clone())),
                     ("store", store),
+                    ("metrics", shared.metrics.registry.to_json()),
                 ]),
             )]))
         }
@@ -1050,14 +1294,17 @@ fn err_response(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg))])
 }
 
-fn store_stats_json(stats: StoreStats) -> Json {
-    Json::obj(vec![
-        ("hits", Json::num(stats.hits as f64)),
-        ("misses", Json::num(stats.misses as f64)),
-        ("disk_loads", Json::num(stats.disk_loads as f64)),
-        ("builds", Json::num(stats.builds as f64)),
-        ("evictions", Json::num(stats.evictions as f64)),
-    ])
+/// The `--metrics-addr` document: the server registry, the store
+/// registry (when serving from a store), and the process-global registry
+/// (span timings), concatenated as one text exposition.
+fn render_exposition(shared: &Shared) -> String {
+    let mut out = String::new();
+    shared.metrics.registry.render_text(&mut out);
+    if let Some(store) = &shared.store {
+        store.registry().render_text(&mut out);
+    }
+    MetricsRegistry::global().render_text(&mut out);
+    out
 }
 
 fn indices_json(idx: &[usize]) -> Json {

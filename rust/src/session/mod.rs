@@ -275,6 +275,13 @@ impl MetaSource {
     /// must build); store hits and remote fetches work without one, which
     /// is what lets model-agnostic consumers run with no runtime at all.
     pub fn resolve(&self, rt: Option<&Runtime>, ds: &Dataset) -> Result<Arc<Metadata>> {
+        // per-source-kind resolution latency in the global registry
+        // (`span.session.resolve.*`) — how long consumers wait on metadata
+        let _span = crate::obs::Span::enter(match self {
+            MetaSource::Inline(_) => "session.resolve.inline",
+            MetaSource::Store { .. } => "session.resolve.store",
+            MetaSource::Remote { .. } => "session.resolve.remote",
+        });
         match self {
             MetaSource::Inline(opts) => {
                 let rt = rt.ok_or_else(|| {

@@ -37,10 +37,12 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Metadata, PreprocessOptions};
+use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::submod::SetFunctionKind;
 
 /// Selection-algorithm revision, folded into every [`MetaKey`]
@@ -171,6 +173,10 @@ impl MetaKey {
 /// Monotonic counters over a store's lifetime (exposed via `milo serve`
 /// STATS and asserted by the amortization tests: `builds == 1` is the
 /// paper's "train multiple models at no additional cost").
+///
+/// This is a snapshot of the store's [`MetricsRegistry`] counters — the
+/// registry (see [`MetaStore::registry`]) additionally carries
+/// hit/disk-load/build latency histograms that the struct form elides.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreStats {
     /// `get_or_build` satisfied from the in-process LRU.
@@ -185,32 +191,44 @@ pub struct StoreStats {
     pub evictions: u64,
 }
 
-struct Counters {
-    hits: AtomicU64,
-    misses: AtomicU64,
-    disk_loads: AtomicU64,
-    builds: AtomicU64,
-    evictions: AtomicU64,
+/// The store's per-instance metrics: one registry, with counter and
+/// histogram handles pre-resolved so `get_or_build` never takes the
+/// registry lock.
+struct StoreMetrics {
+    registry: MetricsRegistry,
+    hits: Counter,
+    misses: Counter,
+    disk_loads: Counter,
+    builds: Counter,
+    evictions: Counter,
+    hit_latency: Arc<Histogram>,
+    disk_load_latency: Arc<Histogram>,
+    build_latency: Arc<Histogram>,
 }
 
-impl Counters {
-    fn new() -> Counters {
-        Counters {
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            disk_loads: AtomicU64::new(0),
-            builds: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+impl StoreMetrics {
+    fn new() -> StoreMetrics {
+        let registry = MetricsRegistry::new();
+        StoreMetrics {
+            hits: registry.counter("store.hits"),
+            misses: registry.counter("store.misses"),
+            disk_loads: registry.counter("store.disk_loads"),
+            builds: registry.counter("store.builds"),
+            evictions: registry.counter("store.evictions"),
+            hit_latency: registry.histogram("store.hit_latency_ns"),
+            disk_load_latency: registry.histogram("store.disk_load_latency_ns"),
+            build_latency: registry.histogram("store.build_latency_ns"),
+            registry,
         }
     }
 
     fn snapshot(&self) -> StoreStats {
         StoreStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            disk_loads: self.disk_loads.load(Ordering::Relaxed),
-            builds: self.builds.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            disk_loads: self.disk_loads.get(),
+            builds: self.builds.get(),
+            evictions: self.evictions.get(),
         }
     }
 }
@@ -260,7 +278,7 @@ struct StoreInner {
     /// distinct keys (other datasets/fractions) build in parallel instead
     /// of queueing behind an unrelated minutes-long preprocessing pass.
     key_locks: Mutex<HashMap<String, Arc<Mutex<()>>>>,
-    counters: Counters,
+    metrics: StoreMetrics,
 }
 
 /// Handle to a metadata store rooted at a directory. `Clone` is cheap and
@@ -314,7 +332,7 @@ impl MetaStore {
                     map: HashMap::new(),
                 }),
                 key_locks: Mutex::new(HashMap::new()),
-                counters: Counters::new(),
+                metrics: StoreMetrics::new(),
             }),
         })
     }
@@ -329,7 +347,15 @@ impl MetaStore {
     }
 
     pub fn stats(&self) -> StoreStats {
-        self.inner.counters.snapshot()
+        self.inner.metrics.snapshot()
+    }
+
+    /// This store's metrics registry: the [`StoreStats`] counters plus
+    /// `store.{hit,disk_load,build}_latency_ns` histograms. The serve
+    /// layer renders it into STATS replies and the `--metrics-addr`
+    /// exposition.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.inner.metrics.registry
     }
 
     /// Decode the persisted artifact for `key`, bypassing the LRU.
@@ -381,12 +407,17 @@ impl MetaStore {
         key: &MetaKey,
         build: impl FnOnce() -> Result<Metadata>,
     ) -> Result<Arc<Metadata>> {
+        let m = &self.inner.metrics;
         let fp = key.fingerprint();
+        let t0 = crate::obs::enabled().then(Instant::now);
         if let Some(meta) = self.inner.cache.lock().unwrap().get(&fp) {
-            self.inner.counters.hits.fetch_add(1, Ordering::Relaxed);
+            m.hits.inc();
+            if let Some(t0) = t0 {
+                m.hit_latency.record_duration(t0.elapsed());
+            }
             return Ok(meta);
         }
-        self.inner.counters.misses.fetch_add(1, Ordering::Relaxed);
+        m.misses.inc();
         let key_lock = {
             let mut locks = self.inner.key_locks.lock().unwrap();
             locks.entry(fp.clone()).or_default().clone()
@@ -398,7 +429,10 @@ impl MetaStore {
         }
         match self.load_uncached(key) {
             Ok(Some(meta)) => {
-                self.inner.counters.disk_loads.fetch_add(1, Ordering::Relaxed);
+                m.disk_loads.inc();
+                if let Some(t0) = t0 {
+                    m.disk_load_latency.record_duration(t0.elapsed());
+                }
                 let meta = Arc::new(meta);
                 self.cache_insert(key, meta.clone());
                 return Ok(meta);
@@ -411,10 +445,13 @@ impl MetaStore {
                 );
             }
         }
-        self.inner.counters.builds.fetch_add(1, Ordering::Relaxed);
+        m.builds.inc();
         let meta = build().with_context(|| {
             format!("building metadata for {}", key.canonical())
         })?;
+        if let Some(t0) = t0 {
+            m.build_latency.record_duration(t0.elapsed());
+        }
         self.put(key, meta)
     }
 
@@ -426,10 +463,7 @@ impl MetaStore {
             .unwrap()
             .insert(key.fingerprint(), meta);
         if evicted > 0 {
-            self.inner
-                .counters
-                .evictions
-                .fetch_add(evicted, Ordering::Relaxed);
+            self.inner.metrics.evictions.add(evicted);
         }
     }
 }

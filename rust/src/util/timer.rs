@@ -6,14 +6,23 @@
 //! selection-time vs step-time vs eval-time separately, which is how we
 //! reproduce Figure 1's "fast per-epoch but slow per-wallclock" effect for
 //! the gradient-based baselines.
+//!
+//! Section names are `Cow<'static, str>`, so both static labels
+//! (`sw.time("selection", ..)`) and dynamically built ones
+//! (`sw.time(format!("class_{c}"), ..)`) work without leaking. Timed
+//! sections also run inside an [`obs::Span`](crate::obs::Span), so every
+//! Stopwatch section shows up in the global telemetry registry (as
+//! `span.<name>`) and the `MILO_TRACE` event log alongside the rest of
+//! the system's spans.
 
+use std::borrow::Cow;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Accumulates wall-clock time per named section.
 #[derive(Default, Debug, Clone)]
 pub struct Stopwatch {
-    totals: BTreeMap<&'static str, Duration>,
+    totals: BTreeMap<Cow<'static, str>, Duration>,
 }
 
 impl Stopwatch {
@@ -21,16 +30,24 @@ impl Stopwatch {
         Self::default()
     }
 
-    /// Time a closure under `name`.
-    pub fn time<R>(&mut self, name: &'static str, f: impl FnOnce() -> R) -> R {
+    /// Time a closure under `name` (also recorded as an obs span).
+    pub fn time<R>(
+        &mut self,
+        name: impl Into<Cow<'static, str>>,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let name = name.into();
+        let span = crate::obs::Span::enter(name.clone());
         let t0 = Instant::now();
         let r = f();
-        self.add(name, t0.elapsed());
+        let elapsed = t0.elapsed();
+        drop(span);
+        self.add(name, elapsed);
         r
     }
 
-    pub fn add(&mut self, name: &'static str, d: Duration) {
-        *self.totals.entry(name).or_default() += d;
+    pub fn add(&mut self, name: impl Into<Cow<'static, str>>, d: Duration) {
+        *self.totals.entry(name.into()).or_default() += d;
     }
 
     pub fn get(&self, name: &str) -> Duration {
@@ -45,13 +62,13 @@ impl Stopwatch {
         self.get(name).as_secs_f64()
     }
 
-    pub fn sections(&self) -> impl Iterator<Item = (&'static str, Duration)> + '_ {
-        self.totals.iter().map(|(k, v)| (*k, *v))
+    pub fn sections(&self) -> impl Iterator<Item = (&str, Duration)> + '_ {
+        self.totals.iter().map(|(k, v)| (k.as_ref(), *v))
     }
 
     pub fn merge(&mut self, other: &Stopwatch) {
         for (k, v) in &other.totals {
-            *self.totals.entry(k).or_default() += *v;
+            *self.totals.entry(k.clone()).or_default() += *v;
         }
     }
 
@@ -85,6 +102,18 @@ mod tests {
         let v = sw.time("x", || 42);
         assert_eq!(v, 42);
         assert!(sw.get("x") > Duration::ZERO || sw.get("x") == Duration::ZERO);
+    }
+
+    #[test]
+    fn dynamic_section_names() {
+        let mut sw = Stopwatch::new();
+        for c in 0..3u64 {
+            sw.add(format!("class_{c}"), Duration::from_millis(c + 1));
+        }
+        assert_eq!(sw.get("class_1"), Duration::from_millis(2));
+        let names: Vec<String> =
+            sw.sections().map(|(name, _)| name.to_string()).collect();
+        assert_eq!(names, vec!["class_0", "class_1", "class_2"]);
     }
 
     #[test]

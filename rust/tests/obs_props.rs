@@ -1,0 +1,137 @@
+//! Property tests for the observability layer: the histogram bucket
+//! scheme (recorded values stay within their reported bucket bounds, for
+//! random values across every magnitude), percentile bracketing under
+//! merge (a merged histogram's quantiles never leave the envelope of its
+//! inputs' quantiles — the property that makes per-thread recording +
+//! merge-on-exit sound), saturation behaviour at the value cap, and a
+//! golden test pinning the text exposition format byte-for-byte.
+
+use milo::obs::hist::{bucket_bounds, bucket_index, MAX_VALUE, N_BUCKETS};
+use milo::obs::{Histogram, MetricsRegistry};
+use milo::util::rng::Rng;
+
+/// Random values spanning every magnitude (uniform in log2 space).
+fn random_values(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let bits = (rng.next_u64() % 41) as u32; // 0..=40 bits of magnitude
+            if bits == 0 {
+                rng.next_u64() % 2
+            } else {
+                (1u64 << (bits - 1)) + rng.next_u64() % (1u64 << (bits - 1))
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn recorded_values_stay_within_their_bucket_bounds() {
+    for v in random_values(0xB0C4E7, 4000) {
+        let i = bucket_index(v);
+        assert!(i < N_BUCKETS, "bucket_index({v}) = {i} out of range");
+        let (lo, hi) = bucket_bounds(i);
+        assert!(
+            lo <= v && v <= hi,
+            "value {v} landed in bucket {i} with bounds [{lo}, {hi}]"
+        );
+    }
+    // and the recording path agrees with the indexing function: a single
+    // recorded value bumps exactly the bucket whose bounds contain it
+    for v in random_values(0x5EED, 200) {
+        let h = Histogram::new();
+        h.record(v);
+        let s = h.snapshot();
+        let hit: Vec<usize> = s
+            .counts()
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(hit.len(), 1, "recording one value must hit one bucket");
+        let (lo, hi) = bucket_bounds(hit[0]);
+        assert!(lo <= v && v <= hi, "{v} recorded outside [{lo}, {hi}]");
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.sum(), v);
+        assert_eq!(s.max(), v);
+    }
+}
+
+#[test]
+fn merged_percentiles_are_bracketed_by_the_inputs() {
+    for seed in 0..20u64 {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let na = 1 + (seed as usize * 37) % 400;
+        let nb = 1 + (seed as usize * 53) % 400;
+        for v in random_values(seed * 2 + 1, na) {
+            a.record(v);
+        }
+        for v in random_values(seed * 2 + 2, nb) {
+            b.record(v);
+        }
+        let m = Histogram::new();
+        m.merge(&a);
+        m.merge(&b);
+        let (sa, sb, sm) = (a.snapshot(), b.snapshot(), m.snapshot());
+        assert_eq!(sm.count(), sa.count() + sb.count());
+        assert_eq!(sm.sum(), sa.sum() + sb.sum());
+        assert_eq!(sm.max(), sa.max().max(sb.max()));
+        for q in [0.0, 0.25, 0.5, 0.75, 0.95, 0.99, 1.0] {
+            let (pa, pb, pm) =
+                (sa.percentile(q), sb.percentile(q), sm.percentile(q));
+            assert!(
+                pa.min(pb) <= pm && pm <= pa.max(pb),
+                "seed {seed} q={q}: merged percentile {pm} outside \
+                 [{}, {}]",
+                pa.min(pb),
+                pa.max(pb),
+            );
+        }
+    }
+}
+
+#[test]
+fn values_above_the_cap_saturate_and_are_counted() {
+    let h = Histogram::new();
+    h.record(MAX_VALUE);
+    h.record(MAX_VALUE + 1);
+    h.record(u64::MAX);
+    let s = h.snapshot();
+    assert_eq!(s.count(), 3);
+    assert_eq!(s.saturated(), 2, "two values were above the cap");
+    // all three land in the top bucket; percentiles answer with the cap
+    assert_eq!(s.percentile(1.0), MAX_VALUE);
+    assert_eq!(s.max(), MAX_VALUE, "max is clamped to the representable cap");
+}
+
+#[test]
+fn exposition_text_is_stable() {
+    let reg = MetricsRegistry::new();
+    let hits = reg.counter("store.hits");
+    hits.add(3);
+    let open = reg.gauge("serve.open_connections");
+    open.set(2);
+    let lat = reg.histogram("serve.request_latency_ns.ping");
+    for v in [1u64, 2, 3, 4] {
+        lat.record(v);
+    }
+    let mut out = String::new();
+    reg.render_text(&mut out);
+    // golden: names sanitized to [A-Za-z0-9_] under a `milo_` prefix,
+    // BTreeMap (sorted) order, integer values, histograms as summaries
+    let expect = "\
+# TYPE milo_serve_open_connections gauge
+milo_serve_open_connections 2
+# TYPE milo_serve_request_latency_ns_ping summary
+milo_serve_request_latency_ns_ping{quantile=\"0.5\"} 2
+milo_serve_request_latency_ns_ping{quantile=\"0.95\"} 4
+milo_serve_request_latency_ns_ping{quantile=\"0.99\"} 4
+milo_serve_request_latency_ns_ping_sum 10
+milo_serve_request_latency_ns_ping_count 4
+# TYPE milo_store_hits counter
+milo_store_hits 3
+";
+    assert_eq!(out, expect);
+}

@@ -184,10 +184,23 @@ fn concurrent_clients_share_one_preprocess_and_streams_survive_restart() {
     }
 
     // the server's STATS sees the single store build and the traffic
+    // (the "store" field is the store registry's JSON rendering — dotted
+    // metric names, histograms as summary objects)
     let mut probe = ServeClient::connect(&addr, "probe").unwrap();
     let stats = probe.stats().unwrap();
     let store_stats = stats.get("store").unwrap();
-    assert_eq!(store_stats.get("builds").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(store_stats.get("store.builds").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(
+        store_stats
+            .get("store.build_latency_ns")
+            .unwrap()
+            .get("count")
+            .unwrap()
+            .as_usize()
+            .unwrap(),
+        1,
+        "the one build must have recorded one build latency"
+    );
     assert!(
         stats.get("subsets_served").unwrap().as_usize().unwrap()
             >= 2 * N_CLIENTS * SGE_DRAWS

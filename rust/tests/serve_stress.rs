@@ -14,7 +14,12 @@
 //!       goodbye — perturb nothing;
 //!   (d) connection slots are reclaimed: 100 connect/drop cycles leave no
 //!       fd growth and no open-connection growth (the `ServeClient` drop
-//!       goodbye + event-loop EOF sweep).
+//!       goodbye + event-loop EOF sweep);
+//!   (e) the telemetry surface holds under load: the extended `STATS`
+//!       reply carries populated per-frame-type latency summaries with
+//!       sane percentiles, the error counters are present (and zero on a
+//!       healthy run), and every monotone counter is non-decreasing
+//!       across successive snapshots.
 //!
 //! The `#[ignore]`d soak variant runs the same topology much harder and is
 //! exercised in release mode by CI (`cargo test --release -- --ignored`).
@@ -189,6 +194,64 @@ fn soak_fifty_clients_many_rounds() {
     for _ in 0..3 {
         run_mixed_fleet(50, 40);
     }
+}
+
+/// (e): STATS latency summaries populate under traffic and monotone
+/// counters never decrease across snapshots.
+#[test]
+fn stats_reports_latency_summaries_and_monotone_counters() {
+    let server = SubsetServer::bind_multi("127.0.0.1:0", entries(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut client = ServeClient::connect(&addr, "stats-probe").unwrap();
+    let mut drawn = 0u64;
+    let mut prev = server.stats();
+    for round in 1..=5u64 {
+        for _ in 0..4 {
+            client.next_subset().unwrap();
+            client.sample_wre(WRE_K).unwrap();
+            drawn += 1;
+        }
+
+        // monotone counters never decrease between snapshots
+        let now = server.stats();
+        assert!(now.connections >= prev.connections, "connections decreased");
+        assert!(now.requests > prev.requests, "requests did not advance");
+        assert!(now.subsets_served >= prev.subsets_served + 4);
+        assert!(now.wre_samples >= prev.wre_samples + 4);
+        assert!(now.bytes_rx > prev.bytes_rx, "bytes_rx did not advance");
+        assert!(now.bytes_tx > prev.bytes_tx, "bytes_tx did not advance");
+        assert!(now.goodbyes >= prev.goodbyes);
+        prev = now;
+
+        let stats = client.stats().unwrap();
+        // the error counters are surfaced, and a healthy run has none
+        assert_eq!(stats.get("accept_errors").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(stats.get("wbuf_teardowns").unwrap().as_f64().unwrap(), 0.0);
+
+        // per-frame-type latency summaries are populated with sane shapes
+        let metrics = stats.get("metrics").unwrap();
+        let next = metrics.get("serve.request_latency_ns.next_subset").unwrap();
+        let count = next.get("count").unwrap().as_f64().unwrap();
+        assert!(
+            count >= drawn as f64,
+            "round {round}: NEXT_SUBSET latency count {count} < {drawn} draws"
+        );
+        let p50 = next.get("p50_us").unwrap().as_f64().unwrap();
+        let p99 = next.get("p99_us").unwrap().as_f64().unwrap();
+        let max = next.get("max_us").unwrap().as_f64().unwrap();
+        assert!(p50 > 0.0, "round {round}: p50 must be positive, got {p50}");
+        assert!(p99 >= p50, "round {round}: p99 {p99} below p50 {p50}");
+        assert!(max >= p50, "round {round}: max {max} below p50 {p50}");
+        let wre = metrics.get("serve.request_latency_ns.sample_wre").unwrap();
+        assert!(wre.get("count").unwrap().as_f64().unwrap() >= drawn as f64);
+        // STATS itself is instrumented too — the in-flight request records
+        // *after* its reply is built, so this snapshot sees the prior ones
+        let st = metrics.get("serve.request_latency_ns.stats").unwrap();
+        assert!(st.get("count").unwrap().as_f64().unwrap() >= (round - 1) as f64);
+    }
+    drop(client);
+    server.shutdown();
 }
 
 #[cfg(target_os = "linux")]
