@@ -25,9 +25,14 @@
 //!     PRs. Asserted: knn=full selections are identical to dense, and
 //!     knn=32 stores ≥ 4× fewer kernel floats; the ≥ 2× end-to-end
 //!     speedup is asserted in full mode (CI runs `MILO_BENCH_SMOKE=1`,
-//!     which confines the binary to the two JSON-emitting benches and
+//!     which confines the binary to the three JSON-emitting benches and
 //!     skips the wall-clock asserts — timings in shared CI runners are
-//!     noise).
+//!     noise),
+//!   * the continual-arrival path: per arrival batch, an incremental
+//!     `ContinualSelector::advance_epoch` vs a from-scratch batch rebuild
+//!     over the concatenated prefix (bit-identity of the two asserted
+//!     every wave), emitted as `BENCH_stream.json`; full mode asserts the
+//!     incremental path is ≥ 2× faster across the drift waves.
 //!
 //! Run: `cargo bench --bench micro_selection`
 
@@ -41,13 +46,14 @@ use milo::testkit::{bench, random_embeddings, random_kernel};
 use milo::util::rng::Rng;
 
 fn main() {
-    // CI smoke mode runs ONLY the two benches that emit JSON documents
-    // (BENCH_select.json, BENCH_serve.json): the other benches are
-    // full-size micro-benchmarks with wall-clock asserts that have no
-    // business on a noisy shared runner.
+    // CI smoke mode runs ONLY the three benches that emit JSON documents
+    // (BENCH_select.json, BENCH_serve.json, BENCH_stream.json): the other
+    // benches are full-size micro-benchmarks with wall-clock asserts that
+    // have no business on a noisy shared runner.
     if std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false) {
         bench_preprocess_select();
         bench_serve();
+        bench_stream();
         return;
     }
 
@@ -117,6 +123,154 @@ fn main() {
     bench_wire_modes();
     bench_serve();
     bench_preprocess_select();
+    bench_stream();
+}
+
+/// Continual-arrival maintenance vs from-scratch rebuild: a seed wave
+/// stripes all classes, then drift waves land in two classes each (the
+/// realistic stream: most classes idle per epoch). Each wave is timed
+/// twice — the incremental `advance_epoch` and a full batch rebuild over
+/// the concatenated prefix — and the two are asserted **bit-identical**
+/// every wave (the continual module's core contract, exercised here at
+/// bench scale). The fraction stays fixed, so clean classes keep their
+/// proportional budgets and the revision-keyed selection caches hit.
+/// Results land in `BENCH_stream.json`; full mode asserts the
+/// incremental path is ≥ 2× faster summed over the drift waves.
+fn bench_stream() {
+    use milo::continual::{ContinualOptions, ContinualSelector};
+    use milo::coordinator::{
+        fixed_subset_from_kernels, sge_subsets_from_kernels,
+        wre_distribution_from_kernels,
+    };
+    use milo::kernel::{build_class_kernels, SimilarityBackend};
+    use milo::util::json::Json;
+    use std::time::Instant;
+
+    let smoke = std::env::var("MILO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (n0, waves, batch, dim) = if smoke { (600, 4, 120, 8) } else { (4000, 8, 400, 16) };
+    let classes = 10usize;
+    let knn = 32usize;
+
+    let mut opts = ContinualOptions::new("bench-stream");
+    opts.knn = Some(knn);
+    opts.fraction = 0.1;
+    let (sge_fn, wre_fn, n_sge, epsilon, seed) = (
+        opts.sge_function,
+        opts.wre_function,
+        opts.n_sge_subsets,
+        opts.epsilon,
+        opts.seed,
+    );
+    let z = random_embeddings(n0 + waves * batch, dim, 77);
+
+    let mut sel = ContinualSelector::new(opts);
+    // the batch baseline's class partition, mirrored in arrival order
+    let mut partition: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    let mut next = 0usize;
+    let (mut inc_drift_s, mut full_drift_s) = (0.0f64, 0.0f64);
+    let mut per_wave = Vec::new();
+    for w in 0..=waves {
+        let count = if w == 0 { n0 } else { batch };
+        for j in 0..count {
+            let c = if w == 0 {
+                next % classes
+            } else if j % 2 == 0 {
+                w % classes
+            } else {
+                (w + 3) % classes
+            };
+            partition[c].push(next);
+            sel.arrive(c, z.row(next)).unwrap();
+            next += 1;
+        }
+
+        let t0 = Instant::now();
+        let (meta, stats) = sel.advance_epoch().unwrap();
+        let inc_s = t0.elapsed().as_secs_f64();
+
+        // from-scratch baseline over the concatenated prefix
+        let t1 = Instant::now();
+        let prefix: Vec<usize> = (0..next).collect();
+        let zp = z.gather_rows(&prefix);
+        let kernels = build_class_kernels(
+            None,
+            &zp,
+            &partition,
+            SimMetric::Cosine,
+            SimilarityBackend::Native,
+            Some(knn),
+        )
+        .unwrap();
+        let k = ((0.1 * next as f64).round() as usize).max(1);
+        let mut rng = Rng::new(seed ^ 0x9E1E_C7).derive_str("bench-stream");
+        let sge =
+            sge_subsets_from_kernels(next, &kernels, sge_fn, k, n_sge, epsilon, &mut rng);
+        let wre = wre_distribution_from_kernels(&kernels, wre_fn);
+        let fixed = fixed_subset_from_kernels(next, &kernels, wre_fn, k);
+        let full_s = t1.elapsed().as_secs_f64();
+
+        assert_eq!(meta.sge_subsets, sge, "wave {w}: incremental SGE diverged");
+        assert_eq!(meta.wre_classes, wre, "wave {w}: incremental WRE diverged");
+        assert_eq!(meta.fixed_dm, fixed, "wave {w}: incremental fixed subset diverged");
+
+        if w > 0 {
+            inc_drift_s += inc_s;
+            full_drift_s += full_s;
+        }
+        println!(
+            "bench stream[wave {w:>2}]  n {next:>5}  dirty {:>2}/{classes}  \
+             sge recomputed {:>2}/{:<2}  incremental {:>7.1}ms  rebuild {:>7.1}ms",
+            stats.dirty_classes,
+            stats.sge_recomputed,
+            stats.sge_jobs,
+            inc_s * 1e3,
+            full_s * 1e3,
+        );
+        per_wave.push(Json::obj(vec![
+            ("wave", Json::num(w as f64)),
+            ("n_train", Json::num(next as f64)),
+            ("dirty_classes", Json::num(stats.dirty_classes as f64)),
+            ("sge_recomputed", Json::num(stats.sge_recomputed as f64)),
+            ("wre_recomputed", Json::num(stats.wre_recomputed as f64)),
+            ("fixed_recomputed", Json::num(stats.fixed_recomputed as f64)),
+            ("kernel_bytes", Json::num(stats.kernel_bytes as f64)),
+            ("incremental_s", Json::num(inc_s)),
+            ("full_rebuild_s", Json::num(full_s)),
+        ]));
+    }
+
+    let speedup = full_drift_s / inc_drift_s.max(1e-12);
+    println!(
+        "bench stream: drift waves incremental {:.1}ms vs full rebuild {:.1}ms \
+         ({speedup:.2}x)",
+        inc_drift_s * 1e3,
+        full_drift_s * 1e3,
+    );
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "incremental maintenance must beat full rebuild ≥ 2x across drift \
+             waves, got {speedup:.2}x"
+        );
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("stream")),
+        ("smoke", Json::Bool(smoke)),
+        ("classes", Json::num(classes as f64)),
+        ("embed_dim", Json::num(dim as f64)),
+        ("knn", Json::num(knn as f64)),
+        ("seed_points", Json::num(n0 as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("drift_waves", Json::num(waves as f64)),
+        ("per_wave", Json::arr(per_wave)),
+        ("incremental_drift_s", Json::num(inc_drift_s)),
+        ("full_rebuild_drift_s", Json::num(full_drift_s)),
+        ("speedup_drift", Json::num(speedup)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    std::fs::write("BENCH_stream.json", doc.to_string()).unwrap();
+    println!("bench stream: wrote BENCH_stream.json");
 }
 
 /// End-to-end serve latency under concurrent clients: N frame-wire

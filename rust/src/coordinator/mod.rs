@@ -23,7 +23,6 @@ pub mod experiment;
 pub mod repro;
 pub mod stream;
 
-use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -402,19 +401,6 @@ impl<'a> Preprocessor<'a> {
         }
     }
 
-    /// Deprecated shim over the store-backed
-    /// [`MetaSource`](crate::session::MetaSource) resolution path: one
-    /// process-wide store per `dir`, so concurrent callers of one
-    /// configuration trigger at most one preprocessing pass.
-    #[deprecated(
-        note = "build a session::MetaSource::store(dir, opts) and call \
-                resolve() — the MiloSession builder wires this up for you"
-    )]
-    pub fn run_cached(&self, ds: &Dataset, dir: impl Into<PathBuf>) -> Result<Metadata> {
-        let source = crate::session::MetaSource::store(dir, self.opts.clone())?;
-        let meta = source.resolve(Some(self.rt), ds)?;
-        Ok(Metadata::clone(&meta))
-    }
 }
 
 // ---------------------------------------------------------------------------

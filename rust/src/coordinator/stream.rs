@@ -25,6 +25,11 @@
 //!
 //! Determinism: per-class RNG streams are derived as `seed ⊕ class`, so
 //! results are independent of worker scheduling.
+//!
+//! This pipeline streams the *processing* of a dataset that is already
+//! complete; when the **data itself** arrives over time, use
+//! [`crate::continual`], which maintains the kernels and selections
+//! incrementally across arrival batches instead of bounding one pass.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
@@ -114,6 +119,14 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
             k,
         )),
     };
+    // account this class's working set against the peak for its whole
+    // processing lifetime — embeddings + kernel stay alive through the
+    // greedy sweeps below (CSR blocks pay columns + row index on top of
+    // the floats, so count real bytes)
+    let bytes =
+        p.emb.rows * p.emb.cols * std::mem::size_of::<f32>() + sim.memory_bytes();
+    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+    peak.fetch_max(now, Ordering::SeqCst);
     let mut rng = Rng::new(p.seed);
     let sge_picks: Vec<Vec<usize>> = (0..p.n_sge)
         .map(|_| {
@@ -144,12 +157,6 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
         greedy_maximize(f.as_mut(), p.kc, GreedyMode::Lazy, p.wre_fn.lazy_safe(), &mut rng)
             .selected
     };
-    // account this class's working set against the peak (CSR blocks pay
-    // columns + row index on top of the floats — count real bytes)
-    let bytes =
-        p.emb.rows * p.emb.cols * std::mem::size_of::<f32>() + sim.memory_bytes();
-    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
-    peak.fetch_max(now, Ordering::SeqCst);
     live.fetch_sub(bytes, Ordering::SeqCst);
     ClassResult {
         class: p.class,

@@ -119,21 +119,6 @@ impl<'a> Tuner<'a> {
         }
     }
 
-    /// Deprecated shim over [`MetaSource::remote_expecting`]: run trials
-    /// against a served metadata instance (see [`crate::serve`]).
-    #[deprecated(
-        note = "set tuner.source = Some(MetaSource::remote_expecting(addr, seed, \
-                fraction)) — or build the tuner from a MiloSession"
-    )]
-    pub fn with_server(mut self, addr: impl Into<String>) -> Tuner<'a> {
-        self.source = Some(MetaSource::remote_expecting(
-            addr,
-            self.cfg.seed,
-            self.cfg.fraction,
-        ));
-        self
-    }
-
     /// Evaluate one configuration for `epochs`; returns val accuracy.
     pub fn evaluate(
         &self,
@@ -360,11 +345,12 @@ mod tests {
             eta: 2,
             seed: 3,
         };
-        let mut tuner = Tuner::new(&rt, &ds, cfg.clone());
+        let (seed, fraction) = (cfg.seed, cfg.fraction);
+        let mut tuner = Tuner::new(&rt, &ds, cfg);
         tuner.source = Some(MetaSource::remote_expecting(
             server.addr().to_string(),
-            cfg.seed,
-            cfg.fraction,
+            seed,
+            fraction,
         ));
         let out = tuner.run().unwrap();
         assert!(!out.trials.is_empty());
@@ -373,13 +359,6 @@ mod tests {
             tuner.metadata.as_ref().unwrap().sge_subsets,
             meta.sge_subsets
         );
-        // the deprecated shim wires the same source
-        #[allow(deprecated)]
-        let shimmed = Tuner::new(&rt, &ds, cfg).with_server(server.addr().to_string());
-        assert!(matches!(
-            shimmed.source,
-            Some(MetaSource::Remote { expect_seed: Some(3), .. })
-        ));
         server.shutdown();
     }
 

@@ -122,7 +122,7 @@ impl SparseKernel {
 /// always kept; among the rest, ties break toward the smaller column so
 /// the result is a deterministic function of the scores. Returned
 /// entries are sorted by column.
-fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
+pub(crate) fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
     let n = scores.len();
     debug_assert!(diag < n && knn >= 1);
     if knn >= n {
@@ -151,7 +151,7 @@ fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
 /// the same value (similarities are symmetric, so copying the value is
 /// exact — and it *enforces* symmetry for backends whose float results
 /// are only symmetric to tolerance).
-fn symmetrize(n: usize, mut rows: Vec<Vec<(u32, f32)>>) -> SparseKernel {
+pub(crate) fn symmetrize(n: usize, mut rows: Vec<Vec<(u32, f32)>>) -> SparseKernel {
     let mut mirrors: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
     for i in 0..n {
         for &(j, v) in &rows[i] {
@@ -184,6 +184,23 @@ fn symmetrize(n: usize, mut rows: Vec<Vec<(u32, f32)>>) -> SparseKernel {
         row_ptr.push(cols.len());
     }
     SparseKernel { n, row_ptr, cols, vals }
+}
+
+/// Pack per-row top-`knn` kept lists (exact [`row_topk`] outputs over
+/// the full score rows) into a finished kernel: union-symmetrize, then
+/// apply the dot-metric non-negativity shift when `min < 0.0`. This is
+/// precisely the tail of [`sparse_native`]'s Cosine/Dot paths (pass
+/// `min = 0.0` for cosine), factored out so the continual-arrival layer
+/// ([`crate::continual`]) can publish incrementally maintained rows with
+/// bit-identical results to a from-scratch build.
+pub(crate) fn kernel_from_topk(n: usize, rows: Vec<Vec<(u32, f32)>>, min: f32) -> SparseKernel {
+    let mut kernel = symmetrize(n, rows);
+    if min < 0.0 {
+        for v in kernel.vals.iter_mut() {
+            *v -= min;
+        }
+    }
+    kernel
 }
 
 /// Build a sparse top-`knn` kernel over `z` (`n × e` embeddings) under
@@ -244,7 +261,7 @@ pub fn sparse_native(z: &Matrix, metric: SimMetric, knn: usize) -> SparseKernel 
                 }
                 at = hi;
             }
-            symmetrize(n, rows)
+            kernel_from_topk(n, rows, 0.0)
         }
         SimMetric::Dot => {
             let mut rows = Vec::with_capacity(n);
@@ -260,16 +277,10 @@ pub fn sparse_native(z: &Matrix, metric: SimMetric, knn: usize) -> SparseKernel 
                 }
                 at = hi;
             }
-            let mut kernel = symmetrize(n, rows);
             // additive shift to non-negativity (paper I.2). The shift is
             // monotone, so applying it after top-k selection keeps the
             // kept set identical to selecting on shifted values.
-            if min < 0.0 {
-                for v in kernel.vals.iter_mut() {
-                    *v -= min;
-                }
-            }
-            kernel
+            kernel_from_topk(n, rows, min)
         }
         SimMetric::Rbf { kw } => {
             // One pass over squared-distance strips: keep each row's knn

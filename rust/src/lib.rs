@@ -20,6 +20,14 @@
 //!   fanned out across cores), the easy-to-hard curriculum, baselines
 //!   (Random, AdaptiveRandom, CraigPB, GradMatchPB, Glister, pruning),
 //!   the trainer, and the hyper-parameter tuner (Random/TPE × Hyperband).
+//! * **Continual arrivals** — [`continual`] maintains MILO selections
+//!   under a stream of labelled arrivals: per-class top-`knn` CSR kernels
+//!   grow incrementally (append + re-top-k union, bit-identical to a
+//!   from-scratch rebuild), dirty-class tracking re-selects only affected
+//!   classes, and each `advance_epoch` yields versioned metadata that
+//!   [`store::MetaStore::publish_epoch`] chains under an epoch head and
+//!   [`serve::SubsetServer::publish`] pushes to subscribed trainers as
+//!   `EPOCH_ADVANCE` / `SUBSET_DELTA` frames.
 //! * **Metadata store & selection service** — [`store`] is a versioned,
 //!   content-addressed registry of pre-processed selection metadata
 //!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
@@ -74,10 +82,11 @@
 //! Swap `MetaSource::inline(..)` for `MetaSource::store("results/store",
 //! ..)?` to share one pass across processes, or
 //! `MetaSource::remote("host:4077")` to consume a `milo serve` instance —
-//! nothing else changes. The deprecated `Preprocessor::run_cached` and
-//! `Tuner::with_server` shims forward to these sources; see the
-//! [`session`] docs for the resolution order and the migration path.
+//! nothing else changes; see the [`session`] docs for the resolution
+//! order. Sessions over a remote source can additionally *follow* a
+//! continually-updated server via [`session::MiloSession::follow_client`].
 
+pub mod continual;
 pub mod coordinator;
 pub mod data;
 pub mod hpo;
@@ -97,6 +106,7 @@ pub mod util;
 
 /// Convenience re-exports for examples and benches.
 pub mod prelude {
+    pub use crate::continual::{ContinualOptions, ContinualSelector, EpochStats};
     pub use crate::coordinator::{
         ExperimentRunner, Metadata, PreprocessOptions, PreprocessPipeline,
         Preprocessor, StrategyKind, TrialRecord,
@@ -115,8 +125,8 @@ pub mod prelude {
         ModelProbe, RandomStrategy, SelectCtx, Strategy,
     };
     pub use crate::serve::{
-        ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy, SubsetServer,
-        WireMode,
+        ClientOptions, EpochUpdate, RetryPolicy, ServeClient, ServedMiloStrategy,
+        SubsetServer, WireMode,
     };
     pub use crate::session::{MetaSource, MiloSession, MiloSessionBuilder};
     pub use crate::store::{MetaKey, MetaStore};

@@ -9,6 +9,11 @@
 //!     fraction entries from one event-loop process) to N concurrent
 //!     trainers over TCP, JSON-line or binary-frame wire (see
 //!     `milo::serve` for the protocol);
+//!   * `stream`     — synthetic continual-arrival workload: batches of
+//!     embeddings arrive, a fixed-size replay-buffer coreset is
+//!     re-selected incrementally each epoch (`milo::continual`), and
+//!     each epoch is optionally published to the store's version chain
+//!     and pushed live to `--serve` subscribers;
 //!   * `train`      — train a downstream model with any strategy;
 //!   * `tune`       — hyper-parameter tuning (Random/TPE × Hyperband),
 //!     optionally against a running `milo serve` (`--server addr:port`);
@@ -43,6 +48,10 @@ USAGE:
              [--store results/store] [--featurebased]
              [--metrics-addr 127.0.0.1:9464]  (plain-text metrics exposition)
              (one event-loop process serves every dataset×fraction entry)
+  milo stream [--dataset stream] [--classes 4] [--dim 16] [--batch 64]
+              [--batches 8] [--buffer 128] [--knn 16|full] [--seed 1]
+              [--store results/store]      (publish each epoch's artifact + head)
+              [--serve 127.0.0.1:4077]     (push EPOCH_ADVANCE/SUBSET_DELTA live)
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
              [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
   milo tune --dataset <name> --strategy <name> [--algo random|tpe]
@@ -109,6 +118,7 @@ fn run() -> Result<()> {
         "preprocess" => cmd_preprocess(&args, &artifacts),
         "precompute" => cmd_precompute(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
+        "stream" => cmd_stream(&args),
         "train" => cmd_train(&args, &artifacts),
         "tune" => cmd_tune(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
@@ -343,6 +353,117 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         println!("  {d}");
     }
     server.run_forever();
+    Ok(())
+}
+
+/// `milo stream`: the continual-arrival workload end to end. Synthetic
+/// embeddings arrive in batches; before each epoch advance the selection
+/// fraction is re-pointed at `buffer / n`, so the coreset stays
+/// fixed-size while the stream grows (the replay-buffer regime). Each
+/// epoch's metadata is re-derived incrementally (dirty classes only —
+/// the per-epoch ledger is printed), optionally chained into the store
+/// (`--store`: versioned artifact + head record) and pushed to
+/// subscribed trainers (`--serve`: EPOCH_ADVANCE + SUBSET_DELTA frames).
+fn cmd_stream(args: &Args) -> Result<()> {
+    use milo::continual::{ContinualOptions, ContinualSelector};
+    let dataset = args.get_or("dataset", "stream").to_string();
+    let classes = args.get_usize("classes", 4)?.max(1);
+    let dim = args.get_usize("dim", 16)?.max(1);
+    let batch = args.get_usize("batch", 64)?.max(1);
+    let batches = args.get_usize("batches", 8)?.max(1);
+    let buffer = args.get_usize("buffer", 128)?.max(1);
+    let seed = args.get_u64("seed", 1)?;
+    let mut copts = ContinualOptions::new(&dataset);
+    copts.seed = seed;
+    copts.knn = knn_of(args)?;
+    let store = match args.get("store") {
+        Some(root) => Some(milo::store::MetaStore::shared(root)?),
+        None => None,
+    };
+
+    let mut sel = ContinualSelector::new(copts.clone());
+    let mut sched = milo::util::rng::Rng::new(seed).derive_str("arrivals");
+    let mut server: Option<milo::serve::SubsetServer> = None;
+    let mut chain_key: Option<milo::store::MetaKey> = None;
+    for b in 0..batches as u64 {
+        let z = milo::testkit::random_embeddings(batch, dim, seed ^ ((b + 1) << 32));
+        for i in 0..batch {
+            sel.arrive(sched.below(classes), z.row(i))?;
+        }
+        sel.set_fraction((buffer as f64 / sel.n_train() as f64).min(1.0));
+        let (meta, stats) = sel.advance_epoch()?;
+        let meta = std::sync::Arc::new(meta);
+        println!(
+            "epoch {:>3}: n={:<6} k={:<5} dirty {}/{} classes, sge {}/{} wre {} \
+             fixed {}, integrate {:.1}ms select {:.1}ms, kernels {} KiB",
+            stats.epoch,
+            stats.n_train,
+            stats.k,
+            stats.dirty_classes,
+            stats.classes,
+            stats.sge_recomputed,
+            stats.sge_jobs,
+            stats.wre_recomputed,
+            stats.fixed_recomputed,
+            1e3 * stats.integrate_secs,
+            1e3 * stats.select_secs,
+            stats.kernel_bytes / 1024,
+        );
+        if let Some(store) = &store {
+            // the chain key is the epoch-1 configuration: the key's
+            // fraction is a fingerprint component, so it must stay fixed
+            // across the chain even though each epoch's metadata carries
+            // the fraction it was actually sized for
+            let key = chain_key.get_or_insert_with(|| milo::store::MetaKey {
+                dataset: dataset.clone(),
+                encoder: "stream".into(),
+                sge_function: milo::store::set_function_descriptor(copts.sge_function),
+                wre_function: milo::store::set_function_descriptor(copts.wre_function),
+                fraction: copts.fraction,
+                n_subsets: copts.n_sge_subsets,
+                epsilon: copts.epsilon,
+                seed,
+                metric: format!("{:?}", copts.metric).to_lowercase(),
+                backend: "native".into(),
+                pipeline: "continual".into(),
+                knn: copts.knn,
+                epoch: None,
+            });
+            store.publish_epoch(key, stats.epoch, (*meta).clone())?;
+        }
+        match (&server, args.get("serve")) {
+            (None, Some(addr)) => {
+                let s = milo::serve::SubsetServer::bind(
+                    addr,
+                    meta.clone(),
+                    store.clone(),
+                    seed,
+                )?;
+                println!(
+                    "serving {dataset} on {} — SUBSCRIBE (frame wire) for live \
+                     epoch pushes",
+                    s.addr()
+                );
+                server = Some(s);
+            }
+            (Some(s), _) => s.publish(&dataset, stats.epoch, meta.clone())?,
+            (None, None) => {}
+        }
+    }
+    if let Some(key) = &chain_key {
+        if let Some(store) = &store {
+            println!(
+                "store chain {} head={:?} epochs={:?}",
+                key.fingerprint(),
+                store.head_epoch(key)?,
+                store.epoch_chain(key)?,
+            );
+        }
+    }
+    if let Some(s) = server {
+        println!("stream complete — serving the head epoch until killed");
+        s.run_forever();
+    }
     Ok(())
 }
 

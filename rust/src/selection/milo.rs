@@ -55,6 +55,15 @@ impl SgeStrategy {
         assert!(!subsets.is_empty(), "SGE needs at least one subset");
         SgeStrategy { label: label.into(), subsets, cursor: 0 }
     }
+
+    /// Swap in a new epoch's subset pool and restart the cycle at subset
+    /// 0, so every follower applying the same update at the same epoch
+    /// boundary sees the same subsequent stream.
+    pub fn replace_subsets(&mut self, subsets: Vec<Vec<usize>>) {
+        assert!(!subsets.is_empty(), "SGE needs at least one subset");
+        self.subsets = subsets;
+        self.cursor = 0;
+    }
 }
 
 impl Strategy for SgeStrategy {
@@ -143,6 +152,23 @@ impl MiloStrategy {
 
     pub fn in_sge_phase(&self, epoch: usize, total_epochs: usize) -> bool {
         epoch < self.switch_epoch(total_epochs)
+    }
+
+    /// Apply a continual-arrival epoch update (the payload of a
+    /// [`crate::serve::EpochUpdate`] pushed by a followed server): the
+    /// SGE pool is replaced and its cycle restarts at subset 0. Push
+    /// frames carry subsets only, so WRE distributions are optional —
+    /// pass `Some` after a `GET_META` refresh when the WRE phase of the
+    /// curriculum still lies ahead.
+    pub fn apply_epoch(
+        &mut self,
+        sge_subsets: Vec<Vec<usize>>,
+        wre_classes: Option<Vec<ClassProbs>>,
+    ) {
+        self.sge.replace_subsets(sge_subsets);
+        if let Some(classes) = wre_classes {
+            self.wre.classes = classes;
+        }
     }
 }
 
@@ -312,6 +338,26 @@ mod tests {
         d.dedup();
         assert_eq!(d.len(), 10);
         assert!(out.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn apply_epoch_swaps_the_pool_and_restarts_the_cycle() {
+        let ds = crate::data::DatasetId::Trec6Like.generate(1);
+        let mut rng = Rng::new(0);
+        let mut m = MiloStrategy::new(
+            vec![vec![0, 1], vec![2, 3]],
+            mk_classes(10, 2),
+            1.0, // pure SGE phase
+        );
+        let mut ctx = SelectCtx::model_agnostic(&ds, 0, 4, 2, &mut rng);
+        assert_eq!(m.select(&mut ctx).unwrap(), vec![0, 1]);
+        m.apply_epoch(vec![vec![7, 8], vec![9, 10]], None);
+        // the cycle restarts at subset 0 of the new epoch's pool
+        let mut rng = Rng::new(0);
+        for (epoch, want) in [(1, vec![7, 8]), (2, vec![9, 10]), (3, vec![7, 8])] {
+            let mut ctx = SelectCtx::model_agnostic(&ds, epoch, 9, 2, &mut rng);
+            assert_eq!(m.select(&mut ctx).unwrap(), want);
+        }
     }
 
     #[test]

@@ -21,9 +21,22 @@
 //! * **Graceful close**: dropping a [`ServeClient`] sends `GOODBYE` so
 //!   the server reclaims the connection slot immediately instead of
 //!   waiting to notice the FIN.
+//! * **Follow mode** ([`ServeClient::subscribe`] /
+//!   [`ServeClient::poll_push`] / [`ServeClient::follow`]): on the frame
+//!   wire, a subscribed client receives the server's `EPOCH_ADVANCE` +
+//!   `SUBSET_DELTA` push bursts (see the [`crate::serve`] *Epoch
+//!   versioning* docs), reassembled into [`EpochUpdate`]s and delivered
+//!   at most once per epoch — push frames that arrive interleaved with
+//!   request/response traffic are stashed, never confused for a response.
+//!   Across a reconnect the client re-subscribes and, if the server's
+//!   epoch moved while it was away, synthesizes the missed advance from
+//!   `GET_META` (collapsing intermediate epochs to the head — a follower
+//!   observes each delivered epoch exactly once, in increasing order).
 
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -73,6 +86,20 @@ struct HelloInfo {
     dataset: String,
     fraction: f64,
     seed: u64,
+    /// The entry's continual-arrival epoch (0 = batch / pre-epoch server).
+    epoch: u64,
+}
+
+/// One complete epoch advance, reassembled from a push burst (or
+/// synthesized from `GET_META` after a reconnect that skipped epochs):
+/// the new epoch's full subset universe.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochUpdate {
+    pub epoch: u64,
+    /// The epoch's SGE subsets, in cycle order.
+    pub sge_subsets: Vec<Vec<usize>>,
+    /// The epoch's fixed disparity-min subset.
+    pub fixed_dm: Vec<usize>,
 }
 
 /// One live transport: buffered reader + writer halves of a TCP stream,
@@ -81,6 +108,9 @@ struct Wire {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
     framed: bool,
+    /// Push frames that arrived interleaved with request/response traffic
+    /// — stashed by [`Wire::roundtrip`], reassembled by the client.
+    pushed: Vec<Frame>,
     tx: u64,
     rx: u64,
 }
@@ -127,16 +157,62 @@ impl Wire {
     /// here are transport-level (lost connection, corrupt framing) — a
     /// server-side `"ok":false` / `ERROR` frame comes back as `Ok` and is
     /// surfaced by the response interpreters, so it is never retried.
+    /// Server-initiated push frames that land between a request and its
+    /// response are stashed, never returned as the response.
     fn roundtrip(&mut self, request: &Json) -> Result<Frame> {
         if self.framed {
             self.send_frame(&Frame::Json(request.to_string()))?;
-            self.recv_frame()
+            loop {
+                let f = self.recv_frame()?;
+                if is_push(&f) {
+                    self.pushed.push(f);
+                    continue;
+                }
+                return Ok(f);
+            }
         } else {
             self.send_line(&request.to_string())?;
             let line = self.recv_line()?;
             Ok(Frame::Json(line.trim_end().to_string()))
         }
     }
+
+    /// Wait up to `timeout` for the next frame without consuming any
+    /// bytes on timeout: the readiness probe is `fill_buf` (which only
+    /// peeks), so a timeout mid-wait can never desynchronize the frame
+    /// stream; once bytes are available the full frame is read blocking
+    /// (the server writes frames contiguously).
+    fn poll_frame(&mut self, timeout: Duration) -> Result<Option<Frame>> {
+        self.writer
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .context("arming the poll timeout")?;
+        let ready = match self.reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => {
+                let _ = self.writer.set_read_timeout(None);
+                bail!("server closed the connection");
+            }
+            Ok(_) => true,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                false
+            }
+            Err(e) => {
+                let _ = self.writer.set_read_timeout(None);
+                return Err(e).context("polling for push frames");
+            }
+        };
+        self.writer.set_read_timeout(None).context("disarming the poll timeout")?;
+        if !ready {
+            return Ok(None);
+        }
+        self.recv_frame().map(Some)
+    }
+}
+
+fn is_push(f: &Frame) -> bool {
+    matches!(f, Frame::EpochAdvance { .. } | Frame::SubsetDelta { .. })
 }
 
 /// Dial + `HELLO` handshake (always JSON-line; the connection switches to
@@ -157,6 +233,7 @@ fn dial(
         reader: BufReader::new(stream.try_clone()?),
         writer: stream,
         framed: false,
+        pushed: Vec::new(),
         tx: 0,
         rx: 0,
     };
@@ -204,6 +281,8 @@ fn dial(
         dataset: v.get("dataset")?.as_str()?.to_string(),
         fraction: v.get("fraction")?.as_f64()?,
         seed,
+        // absent on pre-epoch servers: those serve the batch state (0)
+        epoch: v.opt("epoch").and_then(|e| e.as_f64().ok()).unwrap_or(0.0) as u64,
     };
     if opts.wire == WireMode::Frame {
         let confirmed = v.opt("wire").and_then(|w| w.as_str().ok()) == Some("frame");
@@ -225,6 +304,19 @@ pub struct ServeClient {
     server_dataset: String,
     server_fraction: f64,
     server_seed: u64,
+    /// The server epoch this session's streams belong to (from `HELLO` /
+    /// the last delivered [`EpochUpdate`]).
+    server_epoch: u64,
+    /// Whether this client asked for push frames (survives reconnects:
+    /// the retry path re-`SUBSCRIBE`s).
+    subscribed: bool,
+    /// Highest epoch delivered to the consumer — the at-most-once gate.
+    last_epoch: u64,
+    /// Reassembled, not-yet-delivered epoch updates, oldest first.
+    pending_pushes: VecDeque<EpochUpdate>,
+    /// The burst currently being reassembled (`EPOCH_ADVANCE` seen, some
+    /// deltas still in flight).
+    partial: Option<PartialUpdate>,
     /// Replay journal: successful `NEXT_SUBSET` count …
     sge_drawn: u64,
     /// … and the `k` of every successful `SAMPLE_WRE`, in order.
@@ -233,6 +325,15 @@ pub struct ServeClient {
     bytes_tx: u64,
     bytes_rx: u64,
     goodbye_sent: bool,
+}
+
+/// An [`EpochUpdate`] mid-reassembly: the announced delta count and the
+/// deltas received so far.
+struct PartialUpdate {
+    epoch: u64,
+    n_subsets: usize,
+    sge_subsets: Vec<Vec<usize>>,
+    fixed_dm: Option<Vec<usize>>,
 }
 
 impl ServeClient {
@@ -259,6 +360,11 @@ impl ServeClient {
             server_dataset: info.dataset,
             server_fraction: info.fraction,
             server_seed: info.seed,
+            server_epoch: info.epoch,
+            subscribed: false,
+            last_epoch: info.epoch,
+            pending_pushes: VecDeque::new(),
+            partial: None,
             sge_drawn: 0,
             wre_ks: Vec::new(),
             bytes_tx: 0,
@@ -316,7 +422,7 @@ impl ServeClient {
     /// this, the next draw is exactly what the uninterrupted stream would
     /// have produced.
     fn reconnect_and_replay(&mut self) -> Result<()> {
-        let (wire, info) = dial(
+        let (mut wire, mut info) = dial(
             &self.addr,
             &self.client_id,
             &self.opts,
@@ -330,9 +436,14 @@ impl ServeClient {
             info.seed,
             self.server_seed,
         );
+        // a following session tolerates fraction drift (a fixed-size
+        // replay buffer over a growing stream shrinks the fraction every
+        // epoch); an ordinary session does not
+        let fraction_ok = (info.fraction - self.server_fraction).abs() < 1e-9
+            || self.subscribed
+            || info.epoch != self.server_epoch;
         ensure!(
-            info.dataset == self.server_dataset
-                && (info.fraction - self.server_fraction).abs() < 1e-9,
+            info.dataset == self.server_dataset && fraction_ok,
             "server at {} came back serving {}@{} (session started on {}@{})",
             self.addr,
             info.dataset,
@@ -340,7 +451,44 @@ impl ServeClient {
             self.server_dataset,
             self.server_fraction,
         );
+        if info.epoch != self.server_epoch {
+            // the entry advanced while we were away: the replay journal
+            // describes the *old* epoch's streams, so the fast-forward
+            // just performed was against the wrong universe — restart the
+            // streams cleanly at the head epoch instead
+            self.sge_drawn = 0;
+            self.wre_ks.clear();
+            let (w, i) = dial(&self.addr, &self.client_id, &self.opts, None)?;
+            wire = w;
+            info = i;
+        }
+        let missed_epoch = info.epoch > self.last_epoch;
+        self.server_fraction = info.fraction;
+        self.server_epoch = info.epoch;
         self.conn = Some(wire);
+        if self.subscribed {
+            // the subscription died with the old connection — re-arm it,
+            // and surface the advance(s) we slept through as one
+            // synthesized update from the head epoch's metadata, so a
+            // follower still observes every delivered epoch in order
+            let wire = self.conn.as_mut().expect("just reconnected");
+            let f =
+                wire.roundtrip(&Json::obj(vec![("cmd", Json::str("SUBSCRIBE"))]))?;
+            ok_json(&f)?;
+            if missed_epoch {
+                let f = wire.roundtrip(&Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
+                let meta = match &f {
+                    Frame::Meta(_) => f.decode_meta()?,
+                    _ => metadata_from_json(ok_json(&f)?.get("meta")?)?,
+                };
+                self.partial = None; // any half-burst died with the old conn
+                self.pending_pushes.push_back(EpochUpdate {
+                    epoch: info.epoch,
+                    sge_subsets: meta.sge_subsets,
+                    fixed_dm: meta.fixed_dm,
+                });
+            }
+        }
         Ok(())
     }
 
@@ -446,6 +594,144 @@ impl ServeClient {
         Ok(())
     }
 
+    /// The server epoch this session's streams belong to (0 = batch).
+    pub fn server_epoch(&self) -> u64 {
+        self.server_epoch
+    }
+
+    /// Ask the server to push `EPOCH_ADVANCE` + `SUBSET_DELTA` frames on
+    /// every epoch publish (frame wire only). Returns `(current epoch,
+    /// SGE subset count)`. The subscription survives reconnects — the
+    /// retry path re-subscribes and synthesizes any advance that happened
+    /// while the connection was down.
+    pub fn subscribe(&mut self) -> Result<(u64, usize)> {
+        ensure!(
+            self.opts.wire == WireMode::Frame,
+            "SUBSCRIBE requires the frame wire — connect with ClientOptions \
+             {{ wire: WireMode::Frame, .. }}",
+        );
+        let f = self.call(&Json::obj(vec![("cmd", Json::str("SUBSCRIBE"))]))?;
+        let v = ok_json(&f)?;
+        let epoch = v.get("epoch")?.as_f64()? as u64;
+        let n_subsets = v.get("n_subsets")?.as_usize()?;
+        self.subscribed = true;
+        self.server_epoch = self.server_epoch.max(epoch);
+        self.last_epoch = self.last_epoch.max(epoch);
+        Ok((epoch, n_subsets))
+    }
+
+    /// Deliver the next epoch update, waiting up to `timeout_ms` for one
+    /// to arrive. `Ok(None)` = no update within the window (the
+    /// connection is fine). Each delivered epoch is observed **exactly
+    /// once**, in increasing order — duplicates (e.g. a replayed burst
+    /// plus a reconnect-synthesized head) are dropped here. Delivering an
+    /// update moves this session's streams to the new epoch: the next
+    /// `NEXT_SUBSET` / `SAMPLE_WRE` draws come from the new epoch's
+    /// universe, restarting the deterministic streams.
+    pub fn poll_push(&mut self, timeout_ms: u64) -> Result<Option<EpochUpdate>> {
+        ensure!(self.subscribed, "poll_push requires subscribe() first");
+        loop {
+            self.ingest_stashed();
+            if let Some(u) = self.take_ready() {
+                return Ok(Some(u));
+            }
+            let Some(wire) = self.conn.as_mut() else {
+                // the transport died earlier; reuse the retry machinery by
+                // issuing a cheap request, which reconnects + re-subscribes
+                // (and synthesizes a missed advance) or gives up cleanly
+                self.ping()?;
+                continue;
+            };
+            match wire.poll_frame(Duration::from_millis(timeout_ms)) {
+                Ok(Some(f)) if is_push(&f) => self.assemble(f),
+                Ok(Some(f)) => {
+                    bail!("unsolicited {} frame outside a request", f.kind_name())
+                }
+                Ok(None) => return Ok(None),
+                Err(e) => {
+                    // transport failure mid-follow: reconnect via the retry
+                    // path (ping re-subscribes and synthesizes the head
+                    // advance if one was missed), then keep polling
+                    self.drop_conn();
+                    self.ping().context(e)?;
+                }
+            }
+        }
+    }
+
+    /// Iterate epoch updates: each `next()` waits up to `timeout_ms` and
+    /// ends the iteration (returns `None`) when no update arrives in the
+    /// window. Errors surface as `Some(Err(_))`.
+    pub fn follow(&mut self, timeout_ms: u64) -> FollowStream<'_> {
+        FollowStream { client: self, timeout_ms }
+    }
+
+    /// Move stashed push frames (received interleaved with responses)
+    /// into the reassembler.
+    fn ingest_stashed(&mut self) {
+        let frames = match self.conn.as_mut() {
+            Some(w) if !w.pushed.is_empty() => std::mem::take(&mut w.pushed),
+            _ => return,
+        };
+        for f in frames {
+            self.assemble(f);
+        }
+    }
+
+    /// Feed one push frame to the burst reassembler; a completed burst
+    /// becomes a pending [`EpochUpdate`].
+    fn assemble(&mut self, f: Frame) {
+        match f {
+            Frame::EpochAdvance { epoch, n_subsets } => {
+                self.partial = Some(PartialUpdate {
+                    epoch,
+                    n_subsets: n_subsets as usize,
+                    sge_subsets: Vec::with_capacity(n_subsets as usize),
+                    fixed_dm: None,
+                });
+            }
+            Frame::SubsetDelta { epoch, index, indices } => {
+                let Some(p) = self.partial.as_mut() else { return };
+                if p.epoch != epoch {
+                    return; // a delta without its announce — drop it
+                }
+                let indices: Vec<usize> = indices.iter().map(|&i| i as usize).collect();
+                if index == frame::NO_INDEX {
+                    p.fixed_dm = Some(indices);
+                } else if (index as usize) == p.sge_subsets.len() {
+                    // deltas arrive in cycle order within one burst
+                    p.sge_subsets.push(indices);
+                }
+                if p.sge_subsets.len() == p.n_subsets && p.fixed_dm.is_some() {
+                    let p = self.partial.take().expect("checked");
+                    self.pending_pushes.push_back(EpochUpdate {
+                        epoch: p.epoch,
+                        sge_subsets: p.sge_subsets,
+                        fixed_dm: p.fixed_dm.expect("checked"),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Pop the oldest pending update newer than anything delivered,
+    /// advancing the session's stream epoch and resetting the replay
+    /// journal (the old epoch's draw counts describe streams that no
+    /// longer exist).
+    fn take_ready(&mut self) -> Option<EpochUpdate> {
+        while let Some(u) = self.pending_pushes.pop_front() {
+            if u.epoch > self.last_epoch {
+                self.last_epoch = u.epoch;
+                self.server_epoch = u.epoch;
+                self.sge_drawn = 0;
+                self.wre_ks.clear();
+                return Some(u);
+            }
+        }
+        None
+    }
+
     /// Graceful close: tell the server to reclaim this connection's slot
     /// now. Dropping the client sends the same close message best-effort;
     /// calling this explicitly also confirms the acknowledgement.
@@ -457,6 +743,36 @@ impl ServeClient {
         }
         self.drop_conn();
         Ok(())
+    }
+
+    /// Drop the connection abruptly — a bare FIN, no GOODBYE (and none on
+    /// [`Drop`] either). Exercises the server's EOF sweep the way a
+    /// crashed trainer would; the stress/push tests use it to prove slot
+    /// and subscriber reclamation without a polite disconnect.
+    pub fn abandon(&mut self) {
+        self.goodbye_sent = true;
+        self.drop_conn();
+    }
+}
+
+/// Iterator form of [`ServeClient::poll_push`]: yields epoch updates as
+/// they arrive, ending the iteration when `timeout_ms` passes without
+/// one. A trainer's follow loop is then plain `for update in
+/// client.follow(ms) { ... }`, switching datasets at each yield.
+pub struct FollowStream<'a> {
+    client: &'a mut ServeClient,
+    timeout_ms: u64,
+}
+
+impl Iterator for FollowStream<'_> {
+    type Item = Result<EpochUpdate>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.client.poll_push(self.timeout_ms) {
+            Ok(Some(u)) => Some(Ok(u)),
+            Ok(None) => None,
+            Err(e) => Some(Err(e)),
+        }
     }
 }
 
@@ -529,7 +845,7 @@ fn subset_of(f: &Frame) -> Result<(Option<usize>, Vec<usize>)> {
                 .collect::<Result<Vec<_>>>()?;
             Ok((index, subset))
         }
-        Frame::Meta(_) => bail!("unexpected META response to a subset request"),
+        other => bail!("unexpected {} response to a subset request", other.kind_name()),
     }
 }
 

@@ -25,6 +25,13 @@
 //! | 1 | `SUBSET` | `u32` subset index (`NO_INDEX` for WRE draws) + `u32` count + count×`u32` train indices |
 //! | 2 | `META`   | a complete [`crate::store::binfmt`] metadata artifact |
 //! | 3 | `ERROR`  | a UTF-8 error message |
+//! | 4 | `EPOCH_ADVANCE` | `u64` epoch + `u32` SGE subset count — server-initiated, announces a continual-arrival epoch |
+//! | 5 | `SUBSET_DELTA`  | `u64` epoch + `u32` subset index (`NO_INDEX` = fixed subset) + `u32` count + count×`u32` train indices — server-initiated, the subset's full new contents |
+//!
+//! Kinds 4–5 are **push** frames: only the server emits them, only to
+//! connections that sent `SUBSCRIBE`, and always as one `EPOCH_ADVANCE`
+//! followed contiguously by that epoch's `SUBSET_DELTA`s (see the
+//! [`crate::serve`] protocol docs).
 //!
 //! Decoding is incremental ([`FrameDecoder`] accepts arbitrary byte
 //! chunks, as delivered by a nonblocking socket) and total: a truncated
@@ -55,6 +62,11 @@ pub const KIND_JSON: u8 = 0;
 pub const KIND_SUBSET: u8 = 1;
 pub const KIND_META: u8 = 2;
 pub const KIND_ERROR: u8 = 3;
+pub const KIND_EPOCH: u8 = 4;
+pub const KIND_DELTA: u8 = 5;
+
+/// Highest valid frame kind — [`parse_header`]'s range check.
+const KIND_MAX: u8 = KIND_DELTA;
 
 /// One decoded wire frame. `Json`/`Error` hold the raw text, `Meta` holds
 /// the raw binfmt artifact bytes (decode with [`Frame::decode_meta`]) —
@@ -69,6 +81,12 @@ pub enum Frame {
     Meta(Vec<u8>),
     /// A protocol error message.
     Error(String),
+    /// Server push: a continual-arrival epoch advanced; `n_subsets`
+    /// `SUBSET_DELTA` frames (plus one for the fixed subset) follow.
+    EpochAdvance { epoch: u64, n_subsets: u32 },
+    /// Server push: one subset's full contents at `epoch` ([`NO_INDEX`]
+    /// = the fixed disparity-min subset).
+    SubsetDelta { epoch: u64, index: u32, indices: Vec<u32> },
 }
 
 impl Frame {
@@ -98,6 +116,8 @@ impl Frame {
             Frame::Subset { .. } => KIND_SUBSET,
             Frame::Meta(_) => KIND_META,
             Frame::Error(_) => KIND_ERROR,
+            Frame::EpochAdvance { .. } => KIND_EPOCH,
+            Frame::SubsetDelta { .. } => KIND_DELTA,
         }
     }
 
@@ -107,6 +127,8 @@ impl Frame {
             Frame::Subset { .. } => "SUBSET",
             Frame::Meta(_) => "META",
             Frame::Error(_) => "ERROR",
+            Frame::EpochAdvance { .. } => "EPOCH_ADVANCE",
+            Frame::SubsetDelta { .. } => "SUBSET_DELTA",
         }
     }
 
@@ -118,6 +140,22 @@ impl Frame {
             Frame::Meta(bytes) => bytes.clone(),
             Frame::Subset { index, indices } => {
                 let mut p = Vec::with_capacity(8 + 4 * indices.len());
+                p.extend_from_slice(&index.to_le_bytes());
+                p.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+                for &i in indices {
+                    p.extend_from_slice(&i.to_le_bytes());
+                }
+                p
+            }
+            Frame::EpochAdvance { epoch, n_subsets } => {
+                let mut p = Vec::with_capacity(12);
+                p.extend_from_slice(&epoch.to_le_bytes());
+                p.extend_from_slice(&n_subsets.to_le_bytes());
+                p
+            }
+            Frame::SubsetDelta { epoch, index, indices } => {
+                let mut p = Vec::with_capacity(16 + 4 * indices.len());
+                p.extend_from_slice(&epoch.to_le_bytes());
                 p.extend_from_slice(&index.to_le_bytes());
                 p.extend_from_slice(&(indices.len() as u32).to_le_bytes());
                 for &i in indices {
@@ -183,6 +221,27 @@ pub fn write_subset_frame_into(out: &mut Vec<u8>, index: u32, indices: &[usize])
     }
 }
 
+/// Append a `SUBSET_DELTA` frame encoded straight from a `usize` index
+/// slice — byte-identical to
+/// `Frame::SubsetDelta { .. }.encode()` without intermediate vectors.
+/// This is the push-broadcast hot path: on an epoch advance the server
+/// writes each new subset once per subscriber, straight from the shared
+/// metadata slice into the connection's write buffer.
+pub fn write_delta_frame_into(out: &mut Vec<u8>, epoch: u64, index: u32, indices: &[usize]) {
+    let len = 16 + 4 * indices.len();
+    assert!(len <= MAX_PAYLOAD, "delta frame payload too large");
+    out.reserve(HEADER_LEN + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.push(KIND_DELTA);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&index.to_le_bytes());
+    out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    for &i in indices {
+        debug_assert!(i <= u32::MAX as usize, "index {i} overflows u32");
+        out.extend_from_slice(&(i as u32).to_le_bytes());
+    }
+}
+
 /// Validate a frame header, returning `(payload length, kind)`. The
 /// single place that checks the length cap and kind range — used by the
 /// incremental [`FrameDecoder`] and the client's blocking reader, so the
@@ -196,7 +255,7 @@ pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(usize, u8)> {
     if len > MAX_PAYLOAD {
         bail!("frame payload length {len} exceeds the {MAX_PAYLOAD} byte cap");
     }
-    if kind > KIND_ERROR {
+    if kind > KIND_MAX {
         bail!("unknown frame kind {kind}");
     }
     Ok((len, kind))
@@ -236,6 +295,36 @@ pub fn parse_payload(kind: u8, payload: &[u8]) -> Result<Frame> {
                 indices.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
             }
             Ok(Frame::Subset { index, indices })
+        }
+        KIND_EPOCH => {
+            if payload.len() != 12 {
+                bail!("EPOCH_ADVANCE frame must be 12 bytes, got {}", payload.len());
+            }
+            let epoch = u64::from_le_bytes(payload[..8].try_into().expect("checked"));
+            let n_subsets =
+                u32::from_le_bytes(payload[8..12].try_into().expect("checked"));
+            Ok(Frame::EpochAdvance { epoch, n_subsets })
+        }
+        KIND_DELTA => {
+            if payload.len() < 16 {
+                bail!("SUBSET_DELTA frame too short ({} bytes)", payload.len());
+            }
+            let epoch = u64::from_le_bytes(payload[..8].try_into().expect("checked"));
+            let index = u32::from_le_bytes(payload[8..12].try_into().expect("checked"));
+            let count =
+                u32::from_le_bytes(payload[12..16].try_into().expect("checked")) as usize;
+            if payload.len() != 16 + 4 * count {
+                bail!(
+                    "SUBSET_DELTA frame length mismatch: {} indices declared, {} payload bytes",
+                    count,
+                    payload.len()
+                );
+            }
+            let mut indices = Vec::with_capacity(count);
+            for c in payload[16..].chunks_exact(4) {
+                indices.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            Ok(Frame::SubsetDelta { epoch, index, indices })
         }
         other => bail!("unknown frame kind {other}"),
     }
@@ -317,6 +406,64 @@ mod tests {
                 assert_eq!(direct, canonical, "index {index} indices {indices:?}");
             }
         }
+    }
+
+    #[test]
+    fn push_frame_roundtrips_are_byte_identical() {
+        let frames = [
+            Frame::EpochAdvance { epoch: 0, n_subsets: 0 },
+            Frame::EpochAdvance { epoch: u64::MAX, n_subsets: 3 },
+            Frame::SubsetDelta { epoch: 7, index: 0, indices: vec![] },
+            Frame::SubsetDelta {
+                epoch: 1 << 40,
+                index: NO_INDEX,
+                indices: vec![5, 0, 7, 1000, 4_000_000],
+            },
+        ];
+        for f in frames {
+            let bytes = f.encode();
+            let mut d = FrameDecoder::new();
+            d.push(&bytes);
+            let back = d.next().unwrap().unwrap();
+            assert_eq!(back, f);
+            assert_eq!(back.encode(), bytes);
+            assert_eq!(d.pending_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn direct_delta_writer_matches_frame_encode() {
+        for indices in [vec![], vec![0usize], vec![5, 0, 7, 1000, 4_000_000]] {
+            for (epoch, index) in [(0u64, 0u32), (9, 2), (u64::MAX, NO_INDEX)] {
+                let canonical = Frame::SubsetDelta {
+                    epoch,
+                    index,
+                    indices: indices.iter().map(|&i| i as u32).collect(),
+                }
+                .encode();
+                let mut direct = Vec::new();
+                write_delta_frame_into(&mut direct, epoch, index, &indices);
+                assert_eq!(direct, canonical, "epoch {epoch} index {index}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_push_frames_are_errors() {
+        // an EPOCH_ADVANCE must be exactly 12 bytes
+        let mut d = FrameDecoder::new();
+        d.push(&[8, 0, 0, 0, KIND_EPOCH, 1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(d.next().is_err());
+
+        // a SUBSET_DELTA whose declared count exceeds the payload
+        let mut bytes = Frame::SubsetDelta { epoch: 1, index: 0, indices: vec![1, 2, 3] }
+            .encode();
+        bytes.truncate(bytes.len() - 4);
+        let declared = (bytes.len() - HEADER_LEN) as u32;
+        bytes[..4].copy_from_slice(&declared.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.push(&bytes);
+        assert!(d.next().is_err());
     }
 
     #[test]

@@ -48,9 +48,45 @@
 //! | `{"cmd":"GET_META"}` | the bound entry's full metadata document (JSON schema of `save_metadata`, or a binfmt `META` frame) |
 //! | `{"cmd":"NEXT_SUBSET"}` | the next SGE subset in this client's cycle with its cycle `index` |
 //! | `{"cmd":"SAMPLE_WRE","k":K}` | a fresh size-K WRE draw from this client's seeded stream |
+//! | `{"cmd":"SUBSCRIBE"}` | `{"ok":true,"subscribed":true,"epoch":…,"n_subsets":…}` — frame wire only; this connection now receives push frames on every epoch publish (see *Epoch versioning* below) |
 //! | `{"cmd":"STATS"}` | serving + store telemetry (see *STATS reply* below) |
 //! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`, then the server closes the connection and reclaims its slot |
 //! | `{"cmd":"PING"}` | `{"ok":true}` |
+//!
+//! # Epoch versioning and push frames
+//!
+//! A continual-arrival pipeline (see [`crate::continual`]) re-selects as
+//! data streams in and hands each new selection to the running server via
+//! [`SubsetServer::publish`]`(dataset, epoch, meta)`. Publishes are
+//! queued and applied **on the event-loop thread between ticks**, so a
+//! request never observes a half-swapped entry:
+//!
+//! * the entry's metadata, pre-encoded `GET_META` bytes, and epoch number
+//!   are swapped atomically (epochs must be strictly increasing; epoch 0
+//!   is the bind-time state and stale publishes are dropped);
+//! * every **subscribed** connection bound to that entry receives one
+//!   `EPOCH_ADVANCE` frame (new epoch + SGE subset count) followed
+//!   contiguously by one `SUBSET_DELTA` frame per SGE subset (index =
+//!   cycle position) plus one for the fixed disparity-min subset (index =
+//!   [`frame::NO_INDEX`]) — each delta carries the subset's **full new
+//!   contents**, so a follower never needs a read-back request;
+//! * sessions bound to the entry switch streams at the epoch boundary:
+//!   the next request after a publish re-derives the connection's SGE
+//!   cursor and WRE stream for the new epoch (see *Determinism* below),
+//!   so a trainer that keeps drawing simply crosses over.
+//!
+//! `SUBSCRIBE` requires the binary frame wire (push payloads are binary);
+//! a `HELLO` (re-bind) cancels the subscription, and a subscribed
+//! connection that says `GOODBYE` — or is torn down for overshooting the
+//! outbound-buffer cap, or disconnects abruptly — is removed from the
+//! subscriber set before the next broadcast, so a push can never write
+//! into a reclaimed slot. Trainers that only ever poll (`NEXT_SUBSET`)
+//! need none of this: polling sessions follow the head epoch implicitly.
+//!
+//! Followers that pin instead of following resolve artifacts through the
+//! store, not the server: [`crate::store::MetaStore::load_following`]
+//! resolves **pinned epoch → published head → base artifact**, in that
+//! order (the server always serves its newest published epoch).
 //!
 //! ## STATS reply
 //!
@@ -59,9 +95,12 @@
 //! * the legacy flat counters — `connections`, `open_connections`,
 //!   `requests`, `subsets_served`, `wre_samples`, `goodbyes`, `bytes_rx`,
 //!   `bytes_tx` — plus `accept_errors` (listener `accept` failures, e.g.
-//!   fd exhaustion) and `wbuf_teardowns` (connections killed for
-//!   overshooting the outbound-buffer cap), so slow-reader kills and
-//!   accept backoff are diagnosable instead of silent;
+//!   fd exhaustion), `wbuf_teardowns` (connections killed for
+//!   overshooting the outbound-buffer cap), `push_frames` (push frames
+//!   broadcast to subscribers across all epoch publishes), and
+//!   `subscribers` (connections currently subscribed — a gauge, like
+//!   `open_connections`), so slow-reader kills, accept backoff, and push
+//!   fan-out are diagnosable instead of silent;
 //! * `"metrics"` — the server's full [`crate::obs::MetricsRegistry`]
 //!   rendered to JSON: every counter above under its `serve.*` name, the
 //!   `serve.wbuf_high_water` gauge, and histogram summaries
@@ -105,6 +144,15 @@
 //! * `SAMPLE_WRE` draws from [`client_stream_rng`] — an independent,
 //!   non-overlapping RNG stream per `(entry, client id)`.
 //!
+//! Under epoch versioning the key grows one component: streams are a pure
+//! function of `(server seed, entry, client id, epoch)` —
+//! [`client_stream_rng_at`] derives the epoch into the WRE stream (epoch
+//! 0, the bind-time state, keeps the exact historical batch streams), and
+//! the SGE cursor restarts at [`client_start_cursor`] over the epoch's
+//! subsets. Two followers of the same epoch therefore see identical
+//! streams regardless of when they attached or how many publishes they
+//! watched happen.
+//!
 //! Consequently a client that reconnects — or connects to a restarted
 //! server holding the same store artifact and seed — with the same id
 //! replays exactly the same stream from the start, and [`ServeClient`]'s
@@ -118,14 +166,17 @@ pub mod client;
 pub(crate) mod event;
 pub mod frame;
 
-pub use client::{ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy};
+pub use client::{
+    ClientOptions, EpochUpdate, FollowStream, RetryPolicy, ServeClient,
+    ServedMiloStrategy,
+};
 pub use frame::{Frame, FrameDecoder};
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -214,6 +265,20 @@ pub fn client_stream_rng(seed: u64, meta: &Metadata, client: &str) -> Rng {
         .derive_str(client)
 }
 
+/// [`client_stream_rng`] at a continual-arrival epoch: epoch 0 (the
+/// bind-time state) is exactly the batch stream — byte-compatible with
+/// every pre-epoch client — and each later epoch derives an independent
+/// stream, so a follower's draws after an `EPOCH_ADVANCE` are a pure
+/// function of `(seed, entry, client id, epoch)`.
+pub fn client_stream_rng_at(seed: u64, meta: &Metadata, client: &str, epoch: u64) -> Rng {
+    let base = client_stream_rng(seed, meta, client);
+    if epoch == 0 {
+        base
+    } else {
+        base.derive(epoch)
+    }
+}
+
 /// Where `client`'s SGE cycle starts in `meta.sge_subsets` — clients are
 /// staggered across the cycle by a hash of their id.
 pub fn client_start_cursor(meta: &Metadata, client: &str) -> usize {
@@ -245,14 +310,19 @@ pub struct ServeStats {
     /// Connections torn down for overshooting the outbound-buffer cap
     /// (a client pipelining far past its read rate).
     pub wbuf_teardowns: u64,
+    /// Push frames (`EPOCH_ADVANCE` + `SUBSET_DELTA`) broadcast to
+    /// subscribers across all epoch publishes.
+    pub push_frames: u64,
+    /// Connections currently subscribed to push frames (a gauge).
+    pub subscribers: u64,
 }
 
 /// Request commands instrumented with a per-frame-type latency histogram
 /// (`serve.request_latency_ns.<name>`); the last slot collects unknown /
 /// malformed requests.
-const CMD_NAMES: [&str; 8] = [
-    "hello", "get_meta", "next_subset", "sample_wre", "stats", "ping", "goodbye",
-    "other",
+const CMD_NAMES: [&str; 9] = [
+    "hello", "get_meta", "next_subset", "sample_wre", "subscribe", "stats", "ping",
+    "goodbye", "other",
 ];
 const CMD_OTHER: usize = CMD_NAMES.len() - 1;
 
@@ -262,9 +332,10 @@ fn cmd_slot(cmd: &str) -> usize {
         "GET_META" => 1,
         "NEXT_SUBSET" => 2,
         "SAMPLE_WRE" => 3,
-        "STATS" => 4,
-        "PING" => 5,
-        "GOODBYE" => 6,
+        "SUBSCRIBE" => 4,
+        "STATS" => 5,
+        "PING" => 6,
+        "GOODBYE" => 7,
         _ => CMD_OTHER,
     }
 }
@@ -284,6 +355,8 @@ struct ServeMetrics {
     bytes_tx: Counter,
     accept_errors: Counter,
     wbuf_teardowns: Counter,
+    push_frames: Counter,
+    subscribers: Gauge,
     metrics_scrapes: Counter,
     /// Largest unflushed outbound buffer observed on any connection.
     wbuf_high_water: Gauge,
@@ -309,6 +382,8 @@ impl ServeMetrics {
             bytes_tx: registry.counter("serve.bytes_tx"),
             accept_errors: registry.counter("serve.accept_errors"),
             wbuf_teardowns: registry.counter("serve.wbuf_teardowns"),
+            push_frames: registry.counter("serve.push_frames"),
+            subscribers: registry.gauge("serve.subscribers"),
             metrics_scrapes: registry.counter("serve.metrics_scrapes"),
             wbuf_high_water: registry.gauge("serve.wbuf_high_water"),
             tick_poll: registry.histogram("serve.tick_poll_ns"),
@@ -321,19 +396,73 @@ impl ServeMetrics {
     }
 }
 
+/// One served entry's epoch-versioned payloads — everything a request
+/// handler may serve for the entry, swapped as a unit by a publish so a
+/// session never sees metadata from one epoch and encoded bytes from
+/// another.
+struct EntryState {
+    meta: Arc<Metadata>,
+    /// binfmt artifact bytes, encoded once per epoch (at bind / publish,
+    /// never on the event-loop thread): `GET_META` in frame mode serves
+    /// these directly. `None` = the entry cannot travel as a `META` frame
+    /// (not binfmt-encodable or above the frame cap); frame-mode clients
+    /// get an error directing them to the JSON wire.
+    encoded: Option<Arc<Vec<u8>>>,
+    /// JSON `GET_META` response line (`ok` envelope + document + trailing
+    /// newline) — the JSON wire's analogue of `encoded`.
+    meta_json: Arc<Vec<u8>>,
+    /// Continual-arrival epoch; 0 = the bind-time (batch) state.
+    epoch: u64,
+}
+
+fn entry_state(meta: Arc<Metadata>, epoch: u64) -> EntryState {
+    let encoded = binfmt::try_encode(&meta)
+        .ok()
+        .filter(|bytes| bytes.len() <= frame::MAX_PAYLOAD)
+        .map(Arc::new);
+    let mut line = ok_response(vec![("meta", metadata_to_json(&meta))])
+        .to_string()
+        .into_bytes();
+    line.push(b'\n');
+    EntryState { meta, encoded, meta_json: Arc::new(line), epoch }
+}
+
+/// A served `(dataset, fraction)` slot. The routing key is fixed at bind
+/// (a re-published entry keeps its `HELLO` address even when the replayed
+/// fraction drifts, e.g. a fixed-size buffer over a growing stream); the
+/// state behind it is epoch-versioned.
+struct EntryCell {
+    dataset: String,
+    fraction: f64,
+    state: Mutex<EntryState>,
+}
+
+impl EntryCell {
+    /// The entry's current `(epoch, metadata)` — one short lock, no
+    /// allocation beyond the `Arc` bump.
+    fn snapshot(&self) -> (u64, Arc<Metadata>) {
+        let st = self.state.lock().expect("entry lock poisoned");
+        (st.epoch, st.meta.clone())
+    }
+}
+
+/// One queued [`SubsetServer::publish`], fully pre-encoded on the
+/// publisher's thread: the event loop only swaps the state and copies the
+/// broadcast burst into subscriber write buffers.
+struct PendingPublish {
+    entry: usize,
+    state: EntryState,
+    /// The push burst — one `EPOCH_ADVANCE` + all `SUBSET_DELTA` frames,
+    /// encoded once per publish (not per subscriber).
+    burst: Vec<u8>,
+    /// Frames in `burst`, for the `serve.push_frames` counter.
+    n_frames: u64,
+}
+
 struct Shared {
-    entries: Vec<Arc<Metadata>>,
-    /// Per-entry binfmt artifact bytes, encoded once at bind: `GET_META`
-    /// in frame mode serves these without re-encoding on the event-loop
-    /// thread. `None` = the entry cannot travel as a `META` frame (not
-    /// binfmt-encodable or above the frame cap); frame-mode clients get
-    /// an error directing them to the JSON wire.
-    encoded: Vec<Option<Vec<u8>>>,
-    /// Per-entry JSON `GET_META` response line (`ok` envelope + document +
-    /// trailing newline), serialized once at bind — the JSON wire's
-    /// analogue of `encoded`, so neither wire re-serializes metadata on
-    /// the event-loop thread.
-    meta_json: Vec<Vec<u8>>,
+    entries: Vec<EntryCell>,
+    /// Publishes queued for the event loop to apply between ticks.
+    pending: Mutex<Vec<PendingPublish>>,
     seed: u64,
     store: Option<MetaStore>,
     shutdown: AtomicBool,
@@ -354,6 +483,8 @@ impl Shared {
             bytes_tx: m.bytes_tx.get(),
             accept_errors: m.accept_errors.get(),
             wbuf_teardowns: m.wbuf_teardowns.get(),
+            push_frames: m.push_frames.get(),
+            subscribers: m.subscribers.get(),
         }
     }
 }
@@ -437,30 +568,19 @@ impl SubsetServer {
             Some(l) => Some(l.local_addr()?),
             None => None,
         };
-        // pay each entry's artifact encoding once, up front — never per
-        // GET_META on the event-loop thread
-        let encoded = entries
-            .iter()
-            .map(|m| {
-                binfmt::try_encode(m)
-                    .ok()
-                    .filter(|bytes| bytes.len() <= frame::MAX_PAYLOAD)
-            })
-            .collect();
-        let meta_json = entries
-            .iter()
-            .map(|m| {
-                let mut line = ok_response(vec![("meta", metadata_to_json(m))])
-                    .to_string()
-                    .into_bytes();
-                line.push(b'\n');
-                line
+        // pay each entry's artifact encoding once, up front (and once per
+        // publish thereafter) — never per GET_META on the event-loop thread
+        let cells = entries
+            .into_iter()
+            .map(|m| EntryCell {
+                dataset: m.dataset.clone(),
+                fraction: m.fraction,
+                state: Mutex::new(entry_state(m, 0)),
             })
             .collect();
         let shared = Arc::new(Shared {
-            entries,
-            encoded,
-            meta_json,
+            entries: cells,
+            pending: Mutex::new(Vec::new()),
             seed,
             store,
             shutdown: AtomicBool::new(false),
@@ -492,13 +612,80 @@ impl SubsetServer {
         self.shared.stats()
     }
 
-    /// The `(dataset, fraction)` entries this server routes between.
+    /// The `(dataset, fraction)` entries this server routes between
+    /// (bind-time routing keys — a published entry keeps its address).
     pub fn entries(&self) -> Vec<(String, f64)> {
         self.shared
             .entries
             .iter()
-            .map(|m| (m.dataset.clone(), m.fraction))
+            .map(|e| (e.dataset.clone(), e.fraction))
             .collect()
+    }
+
+    /// The entry's current continual-arrival epoch (0 = bind-time state).
+    pub fn epoch_of(&self, dataset: &str) -> Option<u64> {
+        self.shared
+            .entries
+            .iter()
+            .find(|e| e.dataset == dataset)
+            .map(|e| e.snapshot().0)
+    }
+
+    /// Publish a new epoch of selection metadata for the entry serving
+    /// `dataset` (see the [module docs](self), *Epoch versioning*).
+    ///
+    /// All encoding — the binfmt artifact, the JSON `GET_META` line, the
+    /// push burst (`EPOCH_ADVANCE` + `SUBSET_DELTA` frames) — happens on
+    /// the caller's thread; the event loop atomically swaps the entry
+    /// state between ticks and copies the burst into every subscribed
+    /// connection's write buffer. Epochs must be strictly increasing per
+    /// entry (epoch 0 is the bind-time state).
+    pub fn publish(&self, dataset: &str, epoch: u64, meta: Arc<Metadata>) -> Result<()> {
+        let entry = self
+            .shared
+            .entries
+            .iter()
+            .position(|e| e.dataset == dataset)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no served entry for dataset {dataset:?}")
+            })?;
+        ensure!(epoch > 0, "epoch 0 is the bind-time state; publish epochs from 1");
+        {
+            let st = self.shared.entries[entry].state.lock().expect("entry lock");
+            ensure!(
+                epoch > st.epoch,
+                "publish epoch {epoch} must exceed the current epoch {}",
+                st.epoch,
+            );
+        }
+        // pre-validate the push payloads so the broadcast can never panic
+        // (or overflow a frame) on the shared event-loop thread
+        for s in meta.sge_subsets.iter().chain(std::iter::once(&meta.fixed_dm)) {
+            ensure!(
+                s.len() <= (frame::MAX_PAYLOAD - 16) / 4
+                    && s.iter().all(|&i| i <= u32::MAX as usize),
+                "subset does not fit a SUBSET_DELTA frame",
+            );
+        }
+        let mut burst = Frame::EpochAdvance {
+            epoch,
+            n_subsets: meta.sge_subsets.len() as u32,
+        }
+        .encode();
+        for (si, s) in meta.sge_subsets.iter().enumerate() {
+            frame::write_delta_frame_into(&mut burst, epoch, si as u32, s);
+        }
+        frame::write_delta_frame_into(&mut burst, epoch, frame::NO_INDEX, &meta.fixed_dm);
+        let n_frames = 2 + meta.sge_subsets.len() as u64;
+        let state = entry_state(meta, epoch);
+        self.shared
+            .pending
+            .lock()
+            .expect("pending lock")
+            .push(PendingPublish { entry, state, burst, n_frames });
+        // wake the poll so the push lands now, not at the next timeout tick
+        let _ = TcpStream::connect(self.addr);
+        Ok(())
     }
 
     /// Block the calling thread until the event loop exits (the `milo
@@ -547,6 +734,9 @@ fn event_loop(
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
         }
+        // apply queued epoch publishes before building the poll set, so
+        // broadcast bytes get their write interest registered this tick
+        apply_pending(&shared, &mut conns);
         let tokens: Vec<usize> = conns.keys().copied().collect();
         let poll_set: Vec<(event::SockId, event::Interest)> = tokens
             .iter()
@@ -600,6 +790,12 @@ fn event_loop(
         conns.retain(|_, c| {
             if c.dead {
                 shared.metrics.open_connections.dec(1);
+                // a dead subscriber (abrupt disconnect, wbuf teardown)
+                // leaves the subscriber set with its slot — the next
+                // broadcast must never write into reclaimed state
+                if c.subscribed {
+                    shared.metrics.subscribers.dec(1);
+                }
             }
             !c.dead
         });
@@ -610,6 +806,44 @@ fn event_loop(
     let remaining = conns.len() as u64;
     if remaining > 0 {
         shared.metrics.open_connections.dec(remaining);
+    }
+}
+
+/// Swap in queued epoch publishes and broadcast each one's push burst to
+/// the subscribed connections bound to the entry. Runs on the event-loop
+/// thread between ticks, so requests never observe a half-applied
+/// publish; skips `closing`/`dead` connections (a `GOODBYE` already
+/// cleared their subscription — pushes never target a reclaimed slot).
+fn apply_pending(shared: &Arc<Shared>, conns: &mut HashMap<usize, Conn>) {
+    let pending: Vec<PendingPublish> =
+        std::mem::take(&mut *shared.pending.lock().expect("pending lock"));
+    for p in pending {
+        {
+            let mut st = shared.entries[p.entry].state.lock().expect("entry lock");
+            if p.state.epoch <= st.epoch {
+                continue; // stale publish (raced a newer one) — drop it
+            }
+            *st = p.state;
+        }
+        for conn in conns.values_mut() {
+            if conn.kind != ConnKind::Proto
+                || !conn.subscribed
+                || conn.dead
+                || conn.closing
+                || conn.session.entry != p.entry
+            {
+                continue;
+            }
+            conn.wbuf.extend_from_slice(&p.burst);
+            shared.metrics.push_frames.add(p.n_frames);
+            if conn.wbuf.len() - conn.wpos > MAX_WBUF_BYTES {
+                // a subscriber that stopped reading: tear it down (the
+                // sweep below reclaims its subscription) rather than let
+                // epoch bursts grow server memory without bound
+                shared.metrics.wbuf_teardowns.inc();
+                conn.dead = true;
+            }
+        }
     }
 }
 
@@ -672,6 +906,9 @@ struct Conn {
     wpos: usize,
     wire: WireMode,
     session: Session,
+    /// Receives push frames on epoch publishes (set by `SUBSCRIBE`,
+    /// cleared by `HELLO`/`GOODBYE` and on teardown).
+    subscribed: bool,
     /// Flush the write buffer, then close (set by `GOODBYE` / protocol
     /// errors).
     closing: bool,
@@ -692,6 +929,7 @@ impl Conn {
             wpos: 0,
             wire: WireMode::Json,
             session: Session::new("anon", 0, shared),
+            subscribed: false,
             closing: false,
             dead: false,
         }
@@ -879,14 +1117,28 @@ impl Conn {
         self.closing = true;
     }
 
-    fn push_reply(&mut self, reply: Result<Reply<'_>, String>, shared: &Shared) {
+    fn push_reply(&mut self, reply: Result<Reply, String>, shared: &Shared) {
         match reply {
             Ok(Reply::Fields(fields)) => self.push_ok(fields),
             Ok(Reply::Hello { fields, switch }) => {
+                // a re-bind cancels any subscription: the new entry (or
+                // identity) must opt in again explicitly
+                self.unsubscribe(shared);
                 // the HELLO response travels in the *old* wire format;
                 // everything after it speaks the negotiated one
                 self.push_ok(fields);
                 self.switch_wire(switch);
+            }
+            Ok(Reply::Subscribed { epoch, n_subsets }) => {
+                if !self.subscribed {
+                    self.subscribed = true;
+                    shared.metrics.subscribers.inc();
+                }
+                self.push_ok(vec![
+                    ("subscribed", Json::Bool(true)),
+                    ("epoch", Json::num(epoch as f64)),
+                    ("n_subsets", Json::num(n_subsets as f64)),
+                ]);
             }
             Ok(Reply::Subset { index, subset }) => {
                 let subset = subset.as_slice();
@@ -919,16 +1171,17 @@ impl Conn {
                     }
                 }
             }
-            Ok(Reply::Meta(entry)) => match self.wire {
-                // the JSON response line was serialized once at bind —
-                // copy it straight into the write buffer
+            Ok(Reply::Meta { json, bin }) => match self.wire {
+                // the JSON response line was serialized once at
+                // bind/publish — copy it straight into the write buffer
                 WireMode::Json => {
-                    self.wbuf.extend_from_slice(&shared.meta_json[entry]);
+                    self.wbuf.extend_from_slice(&json);
                 }
                 // the artifact bytes were encoded (and size/contract
-                // checked) once at bind — frame them straight into the
-                // write buffer, no per-request re-encode and no panic path
-                WireMode::Frame => match &shared.encoded[entry] {
+                // checked) once at bind/publish — frame them straight into
+                // the write buffer, no per-request re-encode and no panic
+                // path
+                WireMode::Frame => match &bin {
                     Some(bytes) => {
                         frame::write_frame_into(&mut self.wbuf, frame::KIND_META, bytes);
                     }
@@ -944,6 +1197,10 @@ impl Conn {
             },
             Ok(Reply::Goodbye) => {
                 shared.metrics.goodbyes.inc();
+                // leave the subscriber set *now*: broadcasts between this
+                // goodbye and the flush-then-close sweep must not append
+                // push frames to a connection that said goodbye
+                self.unsubscribe(shared);
                 self.push_ok(vec![("goodbye", Json::Bool(true))]);
                 self.closing = true;
             }
@@ -951,6 +1208,13 @@ impl Conn {
                 WireMode::Json => self.push_line(&err_response(&msg).to_string()),
                 WireMode::Frame => self.push_frame(&Frame::Error(msg)),
             },
+        }
+    }
+
+    fn unsubscribe(&mut self, shared: &Shared) {
+        if self.subscribed {
+            self.subscribed = false;
+            shared.metrics.subscribers.dec(1);
         }
     }
 
@@ -993,11 +1257,18 @@ impl Conn {
 // Request dispatch
 // ---------------------------------------------------------------------------
 
-/// Per-connection deterministic stream state, (re)initialized by `HELLO`.
+/// Per-connection deterministic stream state, (re)initialized by `HELLO`
+/// and re-derived at each epoch boundary (see [`Session::sync`]).
 struct Session {
     client: String,
     /// Index into `Shared::entries` this connection is bound to.
     entry: usize,
+    /// The epoch this session's streams were derived for.
+    epoch: u64,
+    /// The entry's metadata at `epoch` — the snapshot every draw in this
+    /// epoch serves from (and the `Arc` the zero-copy subset replies
+    /// share), so a mid-session publish never tears a response.
+    meta: Arc<Metadata>,
     /// Absolute position in the entry's SGE subset cycle.
     cursor: usize,
     /// WRE sampler, built on first `SAMPLE_WRE` — connections that only
@@ -1009,21 +1280,46 @@ struct Session {
 
 impl Session {
     fn new(client: &str, entry: usize, shared: &Shared) -> Session {
-        let meta = &shared.entries[entry];
+        let (epoch, meta) = shared.entries[entry].snapshot();
+        Session::at_epoch(client, entry, epoch, meta, shared.seed)
+    }
+
+    fn at_epoch(
+        client: &str,
+        entry: usize,
+        epoch: u64,
+        meta: Arc<Metadata>,
+        seed: u64,
+    ) -> Session {
         Session {
             client: client.to_string(),
             entry,
-            cursor: client_start_cursor(meta, client),
+            epoch,
+            cursor: client_start_cursor(&meta, client),
             wre: None,
-            rng: client_stream_rng(shared.seed, meta, client),
+            rng: client_stream_rng_at(seed, &meta, client, epoch),
+            meta,
+        }
+    }
+
+    /// Re-derive the streams if the bound entry advanced past this
+    /// session's epoch — called before dispatching every request, so a
+    /// session crosses an epoch boundary at its next draw and two
+    /// followers of one epoch see identical streams regardless of when
+    /// they attached.
+    fn sync(&mut self, shared: &Shared) {
+        let (epoch, meta) = shared.entries[self.entry].snapshot();
+        if epoch != self.epoch {
+            let client = std::mem::take(&mut self.client);
+            *self = Session::at_epoch(&client, self.entry, epoch, meta, shared.seed);
         }
     }
 }
 
 /// What a request produced; the connection encodes it per wire format.
-/// Borrows from the server's shared state so served payloads travel
-/// zero-copy into the connection's write buffer.
-enum Reply<'a> {
+/// Shares the server's per-epoch payloads by `Arc` so served bytes travel
+/// into the connection's write buffer without a per-request re-encode.
+enum Reply {
     /// Control response fields (`ok:true` is prepended at encode time).
     Fields(Vec<(&'static str, Json)>),
     /// HELLO response + the wire format to switch to afterwards.
@@ -1032,25 +1328,31 @@ enum Reply<'a> {
         switch: WireMode,
     },
     /// A subset payload (`index == frame::NO_INDEX` for WRE draws).
-    Subset { index: u32, subset: SubsetPayload<'a> },
-    /// The bound entry's full metadata document (by entry index — the
-    /// encoder picks the per-entry bytes cached at bind, on both wires).
-    Meta(usize),
+    Subset { index: u32, subset: SubsetPayload },
+    /// The session's metadata document — the per-epoch bytes encoded at
+    /// bind/publish time, on both wires.
+    Meta {
+        json: Arc<Vec<u8>>,
+        bin: Option<Arc<Vec<u8>>>,
+    },
+    /// SUBSCRIBE acknowledgment; the connection flips its subscriber flag.
+    Subscribed { epoch: u64, n_subsets: u32 },
     /// Acknowledge and close.
     Goodbye,
 }
 
-/// Subset payload: `NEXT_SUBSET` borrows the entry's pre-selected subset
-/// (no per-request clone); `SAMPLE_WRE` draws are owned.
-enum SubsetPayload<'a> {
-    Served(&'a [usize]),
+/// Subset payload: `NEXT_SUBSET` shares the session's epoch-snapshot
+/// metadata (no per-request clone of the subset); `SAMPLE_WRE` draws are
+/// owned.
+enum SubsetPayload {
+    Shared { meta: Arc<Metadata>, si: usize },
     Owned(Vec<usize>),
 }
 
-impl SubsetPayload<'_> {
+impl SubsetPayload {
     fn as_slice(&self) -> &[usize] {
         match self {
-            SubsetPayload::Served(s) => s,
+            SubsetPayload::Shared { meta, si } => &meta.sge_subsets[*si],
             SubsetPayload::Owned(v) => v,
         }
     }
@@ -1064,14 +1366,14 @@ fn find_entry(
     if dataset.is_none() && fraction.is_none() {
         return Ok(0);
     }
-    for (i, m) in shared.entries.iter().enumerate() {
+    for (i, e) in shared.entries.iter().enumerate() {
         if let Some(ds) = dataset {
-            if m.dataset != ds {
+            if e.dataset != ds {
                 continue;
             }
         }
         if let Some(f) = fraction {
-            if (m.fraction - f).abs() > 1e-9 {
+            if (e.fraction - f).abs() > 1e-9 {
                 continue;
             }
         }
@@ -1080,7 +1382,7 @@ fn find_entry(
     let served: Vec<String> = shared
         .entries
         .iter()
-        .map(|m| format!("{}@{}", m.dataset, m.fraction))
+        .map(|e| format!("{}@{}", e.dataset, e.fraction))
         .collect();
     Err(format!(
         "no served entry for dataset {} fraction {}; serving: {}",
@@ -1090,16 +1392,19 @@ fn find_entry(
     ))
 }
 
-fn handle_request<'s>(
+fn handle_request(
     request: &Json,
     session: &mut Session,
     wire: WireMode,
-    shared: &'s Shared,
-) -> Result<Reply<'s>, String> {
+    shared: &Shared,
+) -> Result<Reply, String> {
     let cmd = match request.get("cmd").and_then(|c| Ok(c.as_str()?.to_string())) {
         Ok(c) => c,
         Err(_) => return Err("request needs a string \"cmd\" field".to_string()),
     };
+    // cross any epoch boundary before serving: publishes are applied
+    // between ticks, so within this dispatch the entry state is stable
+    session.sync(shared);
     match cmd.as_str() {
         "HELLO" => {
             let client = request
@@ -1114,7 +1419,8 @@ fn handle_request<'s>(
             let fraction = request.opt("fraction").and_then(|f| f.as_f64().ok());
             let entry = find_entry(shared, dataset, fraction)?;
             *session = Session::new(client, entry, shared);
-            let meta = &shared.entries[entry];
+            let meta = session.meta.clone();
+            let meta = &*meta;
             // `resume`: fast-forward the deterministic streams past draws a
             // reconnecting client already consumed — one request, no subset
             // payload re-transfer (the streams are pure functions of the
@@ -1183,26 +1489,46 @@ fn handle_request<'s>(
                     ("seed_hex", Json::str(format!("{:016x}", shared.seed))),
                     ("n_sge_subsets", Json::num(meta.sge_subsets.len() as f64)),
                     ("n_entries", Json::num(shared.entries.len() as f64)),
+                    // the entry's continual-arrival epoch (0 = batch);
+                    // follow-mode clients use it to detect missed advances
+                    ("epoch", Json::num(session.epoch as f64)),
                     ("wire", Json::str(switch.name())),
                 ],
                 switch,
             })
         }
-        "GET_META" => Ok(Reply::Meta(session.entry)),
+        "GET_META" => {
+            // the per-epoch bytes, encoded once at bind/publish — the
+            // session synced above, so this is its epoch's document
+            let st = shared.entries[session.entry].state.lock().expect("entry lock");
+            Ok(Reply::Meta { json: st.meta_json.clone(), bin: st.encoded.clone() })
+        }
         "NEXT_SUBSET" => {
-            let meta = &shared.entries[session.entry];
-            let n = meta.sge_subsets.len();
+            let n = session.meta.sge_subsets.len();
             if n == 0 {
                 return Err("metadata has no SGE subsets".to_string());
             }
             let index = session.cursor % n;
             session.cursor += 1;
             shared.metrics.subsets_served.inc();
-            // zero-copy: the reply borrows the entry's subset slice; the
-            // connection encodes it straight into its write buffer
+            // zero-copy: the reply shares the session's epoch-snapshot
+            // metadata; the connection encodes the subset straight from it
             Ok(Reply::Subset {
                 index: index as u32,
-                subset: SubsetPayload::Served(&meta.sge_subsets[index]),
+                subset: SubsetPayload::Shared { meta: session.meta.clone(), si: index },
+            })
+        }
+        "SUBSCRIBE" => {
+            if wire != WireMode::Frame {
+                return Err(
+                    "SUBSCRIBE requires the binary frame wire (push frames are \
+                     binary) — HELLO with \"wire\":\"frame\" first"
+                        .to_string(),
+                );
+            }
+            Ok(Reply::Subscribed {
+                epoch: session.epoch,
+                n_subsets: session.meta.sge_subsets.len() as u32,
             })
         }
         "SAMPLE_WRE" => {
@@ -1214,11 +1540,11 @@ fn handle_request<'s>(
                     )
                 }
             };
-            let meta = &shared.entries[session.entry];
+            let meta = session.meta.clone();
             // reject k beyond the served population before sampling: an
             // absurd k must cost this client an error response, never an
             // allocation (or panic) on the shared event-loop thread
-            let population = wre_population(meta);
+            let population = wre_population(&meta);
             if k > population {
                 return Err(format!(
                     "SAMPLE_WRE k={k} exceeds the served population {population}"
@@ -1268,10 +1594,13 @@ fn handle_request<'s>(
                     ("bytes_tx", Json::num(s.bytes_tx as f64)),
                     ("accept_errors", Json::num(s.accept_errors as f64)),
                     ("wbuf_teardowns", Json::num(s.wbuf_teardowns as f64)),
+                    ("push_frames", Json::num(s.push_frames as f64)),
+                    ("subscribers", Json::num(s.subscribers as f64)),
                     (
                         "dataset",
                         Json::str(shared.entries[session.entry].dataset.clone()),
                     ),
+                    ("epoch", Json::num(session.epoch as f64)),
                     ("entries", entries),
                     ("client", Json::str(session.client.clone())),
                     ("store", store),

@@ -43,12 +43,22 @@
 //! # Ok::<(), anyhow::Error>(())
 //! ```
 //!
-//! # Deprecation path
+//! The pre-session shims (`Preprocessor::run_cached`, `Tuner::with_server`)
+//! are gone: construct a [`MetaSource`] (or let the [`MiloSession`]
+//! builder do it).
 //!
-//! `Preprocessor::run_cached` and `Tuner::with_server` remain as thin
-//! shims over [`MetaSource::store`] / [`MetaSource::remote_expecting`] for
-//! one release and emit deprecation warnings; new code should construct a
-//! [`MetaSource`] (or let the [`MiloSession`] builder do it).
+//! # Following a continual-arrival server
+//!
+//! A session over a [`MetaSource::Remote`] source can additionally
+//! **follow** a server fed by [`crate::continual`]:
+//! [`MiloSession::follow_client`] hands out a subscribed
+//! [`ServeClient`] whose [`ServeClient::follow`] iterator yields one
+//! [`crate::serve::EpochUpdate`] per published epoch — the trainer
+//! switches subset universes at each yield, and across reconnects each
+//! epoch is still observed at most once (see the [`crate::serve`] *Epoch
+//! versioning* docs for the push protocol and
+//! [`crate::store::MetaStore::load_following`] for the pin → head → base
+//! resolution order used by store-side followers).
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -567,6 +577,33 @@ impl<'a> MiloSession<'a> {
             }
             other => bail!(
                 "served_strategy needs a MetaSource::Remote source, this session \
+                 uses {other:?}"
+            ),
+        }
+    }
+
+    /// A subscribed follow-mode client for a continual-arrival server —
+    /// requires a [`MetaSource::Remote`] source. Negotiates the frame
+    /// wire (push frames are binary) and routes by dataset only: a
+    /// followed entry's fraction drifts as the stream grows (a fixed-size
+    /// buffer over more arrivals), so the bind-time fraction key is not
+    /// required to match this session's. Iterate epoch updates with
+    /// [`ServeClient::follow`] / [`ServeClient::poll_push`].
+    pub fn follow_client(&self, client_id: &str) -> Result<ServeClient> {
+        match &self.source {
+            MetaSource::Remote { addr, retry, .. } => {
+                let opts = ClientOptions {
+                    wire: WireMode::Frame,
+                    dataset: Some(self.ds.name().to_string()),
+                    fraction: None,
+                    retry: *retry,
+                };
+                let mut client = ServeClient::connect_with(addr, client_id, opts)?;
+                client.subscribe()?;
+                Ok(client)
+            }
+            other => bail!(
+                "follow_client needs a MetaSource::Remote source, this session \
                  uses {other:?}"
             ),
         }

@@ -44,6 +44,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::{Metadata, PreprocessOptions};
 use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::submod::SetFunctionKind;
+use crate::util::json::Json;
 
 /// Selection-algorithm revision, folded into every [`MetaKey`]
 /// fingerprint. Bumped whenever the preprocessing pipeline changes the
@@ -110,6 +111,12 @@ pub struct MetaKey {
     /// the selections (the sparse kernel is an approximation), so sparse
     /// and dense artifacts must address separately.
     pub knn: Option<usize>,
+    /// Continual-arrival epoch (`None` = the ordinary batch artifact).
+    /// Each [`crate::continual::ContinualSelector::advance_epoch`] output
+    /// is immutable and addresses separately; `None` keys fingerprint
+    /// exactly as before the epoch component existed, so every batch
+    /// artifact keeps its address.
+    pub epoch: Option<u64>,
 }
 
 impl MetaKey {
@@ -132,14 +139,23 @@ impl MetaKey {
             backend: backend_descriptor(opts.backend).to_string(),
             pipeline: opts.pipeline.name().to_string(),
             knn: opts.knn,
+            epoch: None,
         }
+    }
+
+    /// This key pinned to one continual-arrival epoch (the version-chain
+    /// member, not the batch artifact).
+    pub fn at_epoch(&self, epoch: u64) -> MetaKey {
+        MetaKey { epoch: Some(epoch), ..self.clone() }
     }
 
     /// Canonical string form — the pre-image of the fingerprint. Field
     /// order is fixed; floats use Rust's shortest-roundtrip formatting, so
-    /// equal f64 values always produce equal text.
+    /// equal f64 values always produce equal text. The epoch component is
+    /// appended only when pinned, so pre-epoch keys (and their on-disk
+    /// artifacts) keep their exact historical addresses.
     pub fn canonical(&self) -> String {
-        format!(
+        let mut s = format!(
             "alg={}|ds={}|enc={}|sge={}|wre={}|f={}|n={}|eps={}|seed={}|metric={}|backend={}|pipe={}|knn={}",
             SELECTION_ALGO_REVISION,
             self.dataset,
@@ -156,7 +172,11 @@ impl MetaKey {
             self.knn
                 .map(|k| k.to_string())
                 .unwrap_or_else(|| "dense".to_string()),
-        )
+        );
+        if let Some(e) = self.epoch {
+            s.push_str(&format!("|epoch={e}"));
+        }
+        s
     }
 
     /// 16-hex-char content address.
@@ -455,6 +475,141 @@ impl MetaStore {
         self.put(key, meta)
     }
 
+    /// Cache-aware single-key load: LRU hit → disk → `Ok(None)`. Unlike
+    /// [`get_or_build`](MetaStore::get_or_build) there is no builder —
+    /// continual-arrival followers must *observe* the published chain,
+    /// never regenerate it.
+    pub fn load(&self, key: &MetaKey) -> Result<Option<Arc<Metadata>>> {
+        let m = &self.inner.metrics;
+        let fp = key.fingerprint();
+        if let Some(meta) = self.inner.cache.lock().unwrap().get(&fp) {
+            m.hits.inc();
+            return Ok(Some(meta));
+        }
+        match self.load_uncached(key)? {
+            Some(meta) => {
+                m.disk_loads.inc();
+                let meta = Arc::new(meta);
+                self.cache_insert(key, meta.clone());
+                Ok(Some(meta))
+            }
+            None => Ok(None),
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Continual-arrival version chains
+    //
+    // Epoch-pinned artifacts are ordinary immutable store entries (the
+    // epoch is part of the fingerprint). The only mutable state is one
+    // small head record per base configuration —
+    // `{dataset}_{base_fp}.head`, JSON `{"head": N, "epochs": [...]}` —
+    // updated by atomic rename under the base key's build lock, so
+    // trainers either see the old head or the new one, never a torn
+    // record.
+    // -----------------------------------------------------------------
+
+    /// Path of the version-chain head record for `key`'s base
+    /// configuration (the epoch component is ignored).
+    pub fn head_path(&self, key: &MetaKey) -> PathBuf {
+        let base = MetaKey { epoch: None, ..key.clone() };
+        self.inner
+            .root
+            .join(format!("{}_{}.head", base.dataset, base.fingerprint()))
+    }
+
+    /// Persist `meta` as the epoch-`epoch` member of `key`'s version
+    /// chain and advance the head record. The pinned artifact lands
+    /// before the head moves, so a follower that reads the new head
+    /// always finds its artifact.
+    pub fn publish_epoch(
+        &self,
+        key: &MetaKey,
+        epoch: u64,
+        meta: Metadata,
+    ) -> Result<Arc<Metadata>> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let meta = self.put(&key.at_epoch(epoch), meta)?;
+        let head_lock = {
+            let base = MetaKey { epoch: None, ..key.clone() };
+            let mut locks = self.inner.key_locks.lock().unwrap();
+            locks
+                .entry(format!("{}.head", base.fingerprint()))
+                .or_default()
+                .clone()
+        };
+        let _guard = head_lock.lock().unwrap();
+        let mut epochs = self.epoch_chain(key)?;
+        if !epochs.contains(&epoch) {
+            epochs.push(epoch);
+            epochs.sort_unstable();
+        }
+        let head = *epochs.last().expect("chain contains the epoch just added");
+        let doc = Json::obj(vec![
+            ("head", Json::num(head as f64)),
+            (
+                "epochs",
+                Json::arr(epochs.iter().map(|&e| Json::num(e as f64)).collect()),
+            ),
+        ]);
+        let path = self.head_path(key);
+        let tmp = self.inner.root.join(format!(
+            ".head.tmp{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        std::fs::write(&tmp, doc.to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(meta)
+    }
+
+    /// Current head epoch of `key`'s version chain; `Ok(None)` when no
+    /// epoch was ever published for this configuration.
+    pub fn head_epoch(&self, key: &MetaKey) -> Result<Option<u64>> {
+        Ok(self.read_head(key)?.map(|(head, _)| head))
+    }
+
+    /// All published epochs of `key`'s version chain, ascending (empty
+    /// when none exist).
+    pub fn epoch_chain(&self, key: &MetaKey) -> Result<Vec<u64>> {
+        Ok(self.read_head(key)?.map(|(_, chain)| chain).unwrap_or_default())
+    }
+
+    fn read_head(&self, key: &MetaKey) -> Result<Option<(u64, Vec<u64>)>> {
+        let path = self.head_path(key);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let head = doc.get("head")?.as_usize()? as u64;
+        let epochs = doc
+            .get("epochs")?
+            .as_arr()?
+            .iter()
+            .map(|e| Ok(e.as_usize()? as u64))
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(Some((head, epochs)))
+    }
+
+    /// Resolve `key` under the pin/follow order the serve layer and
+    /// trainers rely on: a pinned epoch loads exactly that artifact
+    /// (deterministic forever); an unpinned key follows the chain head
+    /// when one exists, falling back to the plain batch artifact.
+    pub fn load_following(&self, key: &MetaKey) -> Result<Option<Arc<Metadata>>> {
+        if key.epoch.is_some() {
+            return self.load(key);
+        }
+        if let Some(head) = self.head_epoch(key)? {
+            return self.load(&key.at_epoch(head));
+        }
+        self.load(key)
+    }
+
     fn cache_insert(&self, key: &MetaKey, meta: Arc<Metadata>) {
         let evicted = self
             .inner
@@ -508,6 +663,7 @@ mod tests {
             backend: "native".into(),
             pipeline: "kernel".into(),
             knn: None,
+            epoch: None,
         }
     }
 
@@ -630,6 +786,47 @@ mod tests {
         assert_eq!(b.stats().builds, 1);
         assert_eq!(b.stats().hits, 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn epoch_component_extends_but_never_rewrites_addresses() {
+        let base = key(1);
+        // unpinned keys fingerprint exactly as before the epoch existed
+        assert!(!base.canonical().contains("epoch"));
+        let e3 = base.at_epoch(3);
+        assert!(e3.canonical().ends_with("|epoch=3"));
+        assert_ne!(base.fingerprint(), e3.fingerprint());
+        assert_ne!(e3.fingerprint(), base.at_epoch(4).fingerprint());
+    }
+
+    #[test]
+    fn publish_epoch_chains_and_follow_resolves_pin_then_head_then_base() {
+        let store = tmp_store("epochs");
+        let k = key(6);
+        // no chain, no base artifact: nothing to follow
+        assert!(store.load_following(&k).unwrap().is_none());
+        assert_eq!(store.head_epoch(&k).unwrap(), None);
+        // base batch artifact only → follow falls back to it
+        store.put(&k, sample_meta(1)).unwrap();
+        assert_eq!(store.load_following(&k).unwrap().unwrap().sge_subsets[0], vec![1, 3]);
+        // published epochs advance the head
+        store.publish_epoch(&k, 1, sample_meta(10)).unwrap();
+        store.publish_epoch(&k, 2, sample_meta(20)).unwrap();
+        assert_eq!(store.head_epoch(&k).unwrap(), Some(2));
+        assert_eq!(store.epoch_chain(&k).unwrap(), vec![1, 2]);
+        let followed = store.load_following(&k).unwrap().unwrap();
+        assert_eq!(followed.sge_subsets[0], vec![20, 22]);
+        // a pinned key stays pinned regardless of the head
+        let pinned = store.load_following(&k.at_epoch(1)).unwrap().unwrap();
+        assert_eq!(pinned.sge_subsets[0], vec![10, 12]);
+        // a fresh handle over the same root sees the same chain
+        let store2 = MetaStore::open(store.root()).unwrap();
+        assert_eq!(store2.head_epoch(&k).unwrap(), Some(2));
+        assert_eq!(
+            store2.load_following(&k).unwrap().unwrap().sge_subsets[0],
+            vec![20, 22]
+        );
+        std::fs::remove_dir_all(store.root()).ok();
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Bit-identity property suite for the continual-arrival subsystem.
+//!
+//! The contract under test: N incremental appends plus re-selection must
+//! be **byte-identical** to a from-scratch batch build over the
+//! concatenated dataset — the maintained class kernels (dense and sparse
+//! top-`knn`), the SGE subset pool, the WRE Taylor-softmax distribution,
+//! and the fixed disparity-min subset. The continual path *is* the batch
+//! recipe with revision-keyed caches bolted on, so every assertion here
+//! is exact `assert_eq!` — any drift is a bug, not float noise.
+//!
+//! Coverage: every [`SimMetric`] × dense/sparse kernel layout for the
+//! kernel maintenance, and every [`SetFunctionKind`] (in both the SGE
+//! and the WRE/fixed role) for the re-selection, plus the replay-buffer
+//! workload's mid-stream `set_fraction` resizing.
+
+use milo::continual::{ContinualOptions, ContinualSelector};
+use milo::coordinator::{
+    fixed_subset_from_kernels, sge_subsets_from_kernels, wre_distribution_from_kernels,
+    Metadata,
+};
+use milo::kernel::{
+    build_class_kernels, ClassKernels, ClassSim, SimMetric, SimilarityBackend,
+};
+use milo::submod::SetFunctionKind;
+use milo::tensor::Matrix;
+use milo::testkit::random_embeddings;
+use milo::util::rng::Rng;
+
+const CLASSES: usize = 4;
+const DIM: usize = 7;
+const N: usize = 72;
+/// Uneven arrival waves (including a single-point wave) — each wave is
+/// one `advance_epoch`, so later epochs exercise the cache/dirty paths.
+const WAVES: &[(usize, usize)] = &[(0, 17), (17, 18), (18, 49), (49, 72)];
+
+/// The batch-side class partition matching `arrive(i % CLASSES, row i)`.
+fn striped_partition(n: usize, classes: usize) -> Vec<Vec<usize>> {
+    let mut parts = vec![Vec::new(); classes];
+    for i in 0..n {
+        parts[i % classes].push(i);
+    }
+    parts
+}
+
+/// Feed `z` through the arrival waves (row `i` ↦ class `i % CLASSES`),
+/// advancing one epoch per wave; returns the selector and the last
+/// epoch's metadata.
+fn stream(z: &Matrix, opts: ContinualOptions) -> (ContinualSelector, Metadata) {
+    let mut sel = ContinualSelector::new(opts);
+    let mut last = None;
+    for &(lo, hi) in WAVES {
+        for i in lo..hi {
+            assert_eq!(sel.arrive(i % CLASSES, z.row(i)).unwrap(), i);
+        }
+        last = Some(sel.advance_epoch().unwrap());
+    }
+    let (meta, stats) = last.unwrap();
+    assert_eq!(stats.epoch, WAVES.len() as u64);
+    (sel, meta)
+}
+
+fn assert_kernels_eq(inc: &ClassKernels, full: &ClassKernels, ctx: &str) {
+    assert_eq!(inc.per_class.len(), full.per_class.len(), "{ctx}");
+    for (ci, (a, b)) in inc.per_class.iter().zip(&full.per_class).enumerate() {
+        assert_eq!(a.indices, b.indices, "class {ci} indices ({ctx})");
+        match (&a.sim, &b.sim) {
+            (ClassSim::Dense(x), ClassSim::Dense(y)) => {
+                assert_eq!(x, y, "class {ci} dense block ({ctx})")
+            }
+            (ClassSim::Sparse(x), ClassSim::Sparse(y)) => {
+                assert_eq!(x, y, "class {ci} sparse block ({ctx})")
+            }
+            _ => panic!("class {ci} dense/sparse layout mismatch ({ctx})"),
+        }
+    }
+}
+
+#[test]
+fn incremental_kernels_match_batch_rebuild_for_every_metric_and_layout() {
+    let z = random_embeddings(N, DIM, 21);
+    for metric in [SimMetric::Cosine, SimMetric::Dot, SimMetric::Rbf { kw: 1.0 }] {
+        for knn in [None, Some(5)] {
+            let mut opts = ContinualOptions::new("bitident");
+            opts.metric = metric;
+            opts.knn = knn;
+            opts.seed = 9;
+            let (mut sel, _) = stream(&z, opts);
+            let full = build_class_kernels(
+                None,
+                &z,
+                &striped_partition(N, CLASSES),
+                metric,
+                SimilarityBackend::Native,
+                knn,
+            )
+            .unwrap();
+            assert_kernels_eq(
+                &sel.class_kernels(),
+                &full,
+                &format!("{metric:?} knn={knn:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn re_selection_matches_the_batch_recipe_for_every_set_function() {
+    // every SetFunctionKind appears in both the SGE role and the
+    // WRE/fixed role across the four pairs
+    const PAIRS: [(SetFunctionKind, SetFunctionKind); 4] = [
+        (SetFunctionKind::FacilityLocation, SetFunctionKind::DisparityMin),
+        (SetFunctionKind::GraphCut { lambda: 0.4 }, SetFunctionKind::DisparitySum),
+        (SetFunctionKind::DisparitySum, SetFunctionKind::GraphCut { lambda: 0.4 }),
+        (SetFunctionKind::DisparityMin, SetFunctionKind::FacilityLocation),
+    ];
+    let z = random_embeddings(N, DIM, 33);
+    for (sge_fn, wre_fn) in PAIRS {
+        for knn in [None, Some(6)] {
+            let mut opts = ContinualOptions::new("bitident-sel");
+            opts.sge_function = sge_fn;
+            opts.wre_function = wre_fn;
+            opts.knn = knn;
+            opts.seed = 5;
+            opts.fraction = 0.2;
+            opts.n_sge_subsets = 2;
+            opts.epsilon = 0.05;
+            let (_, meta) = stream(&z, opts);
+
+            let kernels = build_class_kernels(
+                None,
+                &z,
+                &striped_partition(N, CLASSES),
+                SimMetric::Cosine,
+                SimilarityBackend::Native,
+                knn,
+            )
+            .unwrap();
+            let ctx = format!("sge={sge_fn:?} wre={wre_fn:?} knn={knn:?}");
+            let k = ((0.2 * N as f64).round() as usize).max(1);
+            let mut rng = Rng::new(5 ^ 0x9E1E_C7).derive_str("bitident-sel");
+            assert_eq!(
+                meta.sge_subsets,
+                sge_subsets_from_kernels(N, &kernels, sge_fn, k, 2, 0.05, &mut rng),
+                "SGE pool ({ctx})"
+            );
+            assert_eq!(
+                meta.wre_classes,
+                wre_distribution_from_kernels(&kernels, wre_fn),
+                "WRE distribution ({ctx})"
+            );
+            assert_eq!(
+                meta.fixed_dm,
+                fixed_subset_from_kernels(N, &kernels, wre_fn, k),
+                "fixed subset ({ctx})"
+            );
+        }
+    }
+}
+
+#[test]
+fn replay_buffer_fraction_resizing_still_matches_the_batch_recipe() {
+    // the `milo stream` workload shrinks fraction as the stream grows so
+    // the coreset stays `BUFFER` points; the final epoch must equal a
+    // batch build over the final dataset at the final fraction
+    const BUFFER: usize = 12;
+    let z = random_embeddings(N, DIM, 44);
+    let mut opts = ContinualOptions::new("bitident-frac");
+    opts.knn = Some(4);
+    opts.seed = 2;
+    let mut sel = ContinualSelector::new(opts);
+    let mut last = None;
+    for &(lo, hi) in WAVES {
+        for i in lo..hi {
+            sel.arrive(i % CLASSES, z.row(i)).unwrap();
+        }
+        sel.set_fraction((BUFFER as f64 / sel.n_train() as f64).min(1.0));
+        last = Some(sel.advance_epoch().unwrap());
+    }
+    let (meta, _) = last.unwrap();
+    let fraction = BUFFER as f64 / N as f64;
+    assert_eq!(meta.fraction, fraction);
+
+    let kernels = build_class_kernels(
+        None,
+        &z,
+        &striped_partition(N, CLASSES),
+        SimMetric::Cosine,
+        SimilarityBackend::Native,
+        Some(4),
+    )
+    .unwrap();
+    let k = ((fraction * N as f64).round() as usize).max(1);
+    let mut rng = Rng::new(2 ^ 0x9E1E_C7).derive_str("bitident-frac");
+    let opts = ContinualOptions::new("defaults"); // default functions/eps
+    assert_eq!(
+        meta.sge_subsets,
+        sge_subsets_from_kernels(
+            N,
+            &kernels,
+            opts.sge_function,
+            k,
+            opts.n_sge_subsets,
+            opts.epsilon,
+            &mut rng,
+        )
+    );
+    assert_eq!(meta.wre_classes, wre_distribution_from_kernels(&kernels, opts.wre_function));
+    assert_eq!(meta.fixed_dm, fixed_subset_from_kernels(N, &kernels, opts.wre_function, k));
+}

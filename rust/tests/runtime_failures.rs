@@ -176,7 +176,7 @@ fn garbage_metadata_fields_fail_to_load() {
 fn store_source_recovers_from_corrupt_cache() {
     // a corrupt cache entry must be silently regenerated, not crash
     let Some(rt) = runtime() else { return };
-    use milo::coordinator::{PreprocessOptions, Preprocessor};
+    use milo::coordinator::PreprocessOptions;
     use milo::data::DatasetId;
     use milo::session::MetaSource;
     let ds = DatasetId::Trec6Like.generate(1);
@@ -197,16 +197,10 @@ fn store_source_recovers_from_corrupt_cache() {
     }
     // a cold store over the same dir sees the corruption and rebuilds
     let cold = milo::store::MetaStore::open(&dir).unwrap();
-    let meta = MetaSource::store_handle(cold, opts.clone())
+    let meta = MetaSource::store_handle(cold, opts)
         .resolve(Some(&rt), &ds)
         .expect("should regenerate");
     assert!(!meta.sge_subsets.is_empty());
-    // the deprecated shim forwards to the same path
-    #[allow(deprecated)]
-    let shimmed = Preprocessor::with_options(&rt, opts)
-        .run_cached(&ds, &dir)
-        .expect("deprecated shim still works");
-    assert_eq!(shimmed.sge_subsets, meta.sge_subsets);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -65,6 +65,7 @@ fn test_key() -> MetaKey {
         backend: "native".into(),
         pipeline: "kernel".into(),
         knn: None,
+        epoch: None,
     }
 }
 

@@ -36,9 +36,10 @@ fn random_metadata(rng: &mut Rng) -> Metadata {
     }
 }
 
-/// A random frame of any kind, including empty payload edge cases.
+/// A random frame of any kind — including the server-initiated push
+/// kinds (`EPOCH_ADVANCE`, `SUBSET_DELTA`) and empty payload edge cases.
 fn random_frame(rng: &mut Rng) -> Frame {
-    match rng.below(4) {
+    match rng.below(6) {
         0 => {
             // JSON payloads including escapes and non-ASCII
             let docs = [
@@ -64,7 +65,23 @@ fn random_frame(rng: &mut Rng) -> Frame {
             }
         }
         2 => Frame::meta(&random_metadata(rng)),
-        _ => Frame::Error(format!("error #{}", rng.below(100))),
+        3 => Frame::Error(format!("error #{}", rng.below(100))),
+        4 => Frame::EpochAdvance {
+            epoch: rng.next_u64() >> rng.below(64),
+            n_subsets: rng.below(16) as u32,
+        },
+        _ => {
+            let k = rng.below(120);
+            Frame::SubsetDelta {
+                epoch: 1 + rng.below(1_000_000) as u64,
+                index: if rng.chance(0.2) {
+                    frame::NO_INDEX
+                } else {
+                    rng.below(1000) as u32
+                },
+                indices: (0..k).map(|_| rng.below(u32::MAX as usize) as u32).collect(),
+            }
+        }
     }
 }
 

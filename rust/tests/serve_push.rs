@@ -1,0 +1,227 @@
+//! Integration tests for epoch-versioned push serving: a continual
+//! producer publishes new selection epochs into a running `SubsetServer`,
+//! and subscribed frame-wire clients receive `EPOCH_ADVANCE` +
+//! `SUBSET_DELTA` bursts. Asserts the subsystem's contracts:
+//!
+//!   (a) every published epoch is observed by a subscribed follower
+//!       exactly once, in order, with byte-exact subset contents;
+//!   (b) the per-client subset/WRE streams at an epoch are deterministic —
+//!       a fresh connection with the same id resumes the identical
+//!       stream, and epoch streams differ from the epoch-0 base stream;
+//!   (c) subscriber slots are reclaimed on GOODBYE and on abrupt
+//!       disconnect, so later broadcasts never write to dead slots;
+//!   (d) non-subscribed clients simply observe the new head through the
+//!       ordinary request path (`GET_META` after the swap).
+//!
+//! The producer here is a real [`milo::continual::ContinualSelector`], so
+//! the epochs carry genuinely re-selected (incrementally maintained)
+//! MILO metadata rather than hand-mutated fixtures.
+
+use std::sync::Arc;
+
+use milo::continual::{ContinualOptions, ContinualSelector};
+use milo::coordinator::Metadata;
+use milo::selection::WreStrategy;
+use milo::serve::{
+    client_start_cursor, client_stream_rng_at, ClientOptions, ServeClient,
+    SubsetServer, WireMode,
+};
+use milo::testkit::random_embeddings;
+
+const SEED: u64 = 7;
+const DATASET: &str = "pushed";
+const CLASSES: usize = 3;
+const DIM: usize = 6;
+
+/// A continual producer fed `waves` arrival batches, advancing one epoch
+/// per wave; returns the selector plus every epoch's metadata.
+fn produce(waves: usize) -> (ContinualSelector, Vec<Arc<Metadata>>) {
+    let mut opts = ContinualOptions::new(DATASET);
+    opts.seed = SEED;
+    opts.knn = Some(4);
+    let mut sel = ContinualSelector::new(opts);
+    let mut metas = Vec::new();
+    let z = random_embeddings(30 * waves, DIM, 11);
+    for w in 0..waves {
+        for i in 30 * w..30 * (w + 1) {
+            sel.arrive(i % CLASSES, z.row(i)).unwrap();
+        }
+        let (meta, stats) = sel.advance_epoch().unwrap();
+        assert_eq!(stats.epoch, w as u64 + 1);
+        metas.push(Arc::new(meta));
+    }
+    (sel, metas)
+}
+
+fn subscriber(addr: &str, id: &str) -> ServeClient {
+    ServeClient::connect_with(
+        addr,
+        id,
+        ClientOptions {
+            wire: WireMode::Frame,
+            dataset: Some(DATASET.to_string()),
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn every_published_epoch_is_pushed_exactly_once_in_order() {
+    let (mut sel, mut metas) = produce(1);
+    let server =
+        SubsetServer::bind("127.0.0.1:0", metas[0].clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut follower = subscriber(&addr, "follower");
+    let (epoch0, n_subsets) = follower.subscribe().unwrap();
+    assert_eq!(epoch0, 0, "bind-time state is epoch 0");
+    assert_eq!(n_subsets, metas[0].sge_subsets.len());
+
+    // publish three more epochs before the follower polls: the bursts
+    // queue on the socket and must come out once each, in order
+    let z = random_embeddings(90, DIM, 13);
+    for w in 0..3usize {
+        for i in 30 * w..30 * (w + 1) {
+            sel.arrive(i % CLASSES, z.row(i)).unwrap();
+        }
+        let (meta, stats) = sel.advance_epoch().unwrap();
+        let meta = Arc::new(meta);
+        server.publish(DATASET, stats.epoch, meta.clone()).unwrap();
+        metas.push(meta);
+    }
+
+    for (i, want) in metas[1..].iter().enumerate() {
+        let update = follower
+            .poll_push(5_000)
+            .unwrap()
+            .expect("published epoch must arrive");
+        assert_eq!(update.epoch, i as u64 + 2, "epochs arrive in publish order");
+        assert_eq!(update.sge_subsets, want.sge_subsets, "epoch {}", update.epoch);
+        assert_eq!(update.fixed_dm, want.fixed_dm, "epoch {}", update.epoch);
+        assert_eq!(follower.server_epoch(), update.epoch);
+    }
+    // exactly once: nothing further arrives
+    assert!(follower.poll_push(100).unwrap().is_none());
+    assert_eq!(server.epoch_of(DATASET), Some(4));
+
+    let stats = server.stats();
+    // one EPOCH_ADVANCE + n SGE deltas + one fixed delta, per publish
+    let per_burst = 2 + metas[0].sge_subsets.len() as u64;
+    assert_eq!(stats.push_frames, 3 * per_burst);
+    assert_eq!(stats.subscribers, 1);
+    server.shutdown();
+}
+
+#[test]
+fn epoch_streams_are_deterministic_and_distinct_from_the_base_stream() {
+    let (_, metas) = produce(2);
+    let server =
+        SubsetServer::bind("127.0.0.1:0", metas[0].clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let draw = |id: &str| -> (Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+        let mut c = subscriber(&addr, id);
+        let sge = (0..5).map(|_| c.next_subset().unwrap()).collect();
+        let wre = (0..3).map(|_| c.sample_wre(8).unwrap()).collect();
+        (sge, wre)
+    };
+    let base = draw("trainer");
+
+    server.publish(DATASET, 2, metas[1].clone()).unwrap();
+    let at2 = draw("trainer");
+    assert_eq!(at2, draw("trainer"), "reconnect at epoch 2 must resume the stream");
+    assert_ne!(base.1, at2.1, "epoch 2 WRE stream must be re-derived, not the base");
+
+    // the served epoch stream is exactly the documented inline recipe
+    let meta = &metas[1];
+    let start = client_start_cursor(meta, "trainer");
+    let n = meta.sge_subsets.len();
+    for (i, (index, subset)) in at2.0.iter().enumerate() {
+        assert_eq!(*index, (start + i) % n);
+        assert_eq!(subset, &meta.sge_subsets[*index]);
+    }
+    let inline = WreStrategy::new("inline", meta.wre_classes.clone());
+    let mut rng = client_stream_rng_at(SEED, meta, "trainer", 2);
+    for w in &at2.1 {
+        assert_eq!(w, &inline.sample_k(8, &mut rng));
+    }
+
+    // (d) an ordinary (never-subscribed) client sees the head via GET_META
+    let mut plain = ServeClient::connect_with(
+        &addr,
+        "plain",
+        ClientOptions { dataset: Some(DATASET.to_string()), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(
+        milo::store::binfmt::encode(&plain.get_meta().unwrap()),
+        milo::store::binfmt::encode(meta),
+    );
+    server.shutdown();
+}
+
+#[test]
+fn follow_iterator_yields_each_epoch_then_ends_on_quiet_timeout() {
+    let (_, metas) = produce(3);
+    let server =
+        SubsetServer::bind("127.0.0.1:0", metas[0].clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut follower = subscriber(&addr, "iter");
+    follower.subscribe().unwrap();
+    server.publish(DATASET, 2, metas[1].clone()).unwrap();
+    server.publish(DATASET, 3, metas[2].clone()).unwrap();
+
+    let seen: Vec<u64> = follower
+        .follow(300)
+        .map(|u| u.unwrap().epoch)
+        .collect();
+    assert_eq!(seen, vec![2, 3]);
+    server.shutdown();
+}
+
+#[test]
+fn subscriber_slots_are_reclaimed_on_goodbye_and_abrupt_disconnect() {
+    let (_, metas) = produce(2);
+    let server =
+        SubsetServer::bind("127.0.0.1:0", metas[0].clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // polite: GOODBYE while subscribed must leave the subscriber list
+    let mut polite = subscriber(&addr, "polite");
+    polite.subscribe().unwrap();
+    wait_until(|| server.stats().subscribers == 1, "subscribe registered");
+    polite.goodbye().unwrap();
+    drop(polite);
+    wait_until(|| server.stats().subscribers == 0, "goodbye unsubscribes");
+
+    // abrupt: a bare FIN mid-subscription must be swept too
+    {
+        let mut rude = subscriber(&addr, "rude");
+        rude.subscribe().unwrap();
+        wait_until(|| server.stats().subscribers == 1, "second subscribe");
+        rude.abandon(); // bare FIN — no GOODBYE, not even on Drop
+    }
+    wait_until(|| server.stats().subscribers == 0, "EOF sweep unsubscribes");
+
+    // a broadcast after the churn reaches only live subscribers (and
+    // must not touch the reclaimed slots)
+    let mut alive = subscriber(&addr, "alive");
+    alive.subscribe().unwrap();
+    server.publish(DATASET, 2, metas[1].clone()).unwrap();
+    let update = alive.poll_push(5_000).unwrap().expect("live subscriber gets the push");
+    assert_eq!(update.epoch, 2);
+    let stats = server.stats();
+    assert_eq!(stats.subscribers, 1);
+    assert_eq!(stats.push_frames, 2 + metas[1].sge_subsets.len() as u64);
+    server.shutdown();
+}
+
+fn wait_until(cond: impl Fn() -> bool, what: &str) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while !cond() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}

@@ -14,7 +14,9 @@
 //!       goodbye — perturb nothing;
 //!   (d) connection slots are reclaimed: 100 connect/drop cycles leave no
 //!       fd growth and no open-connection growth (the `ServeClient` drop
-//!       goodbye + event-loop EOF sweep);
+//!       goodbye + event-loop EOF sweep) — including cycles that
+//!       SUBSCRIBE to push frames first, polite and abrupt alike, so a
+//!       later epoch broadcast can never write into a reclaimed slot;
 //!   (e) the telemetry surface holds under load: the extended `STATS`
 //!       reply carries populated per-frame-type latency summaries with
 //!       sane percentiles, the error counters are present (and zero on a
@@ -288,19 +290,36 @@ fn hundred_connect_drop_cycles_leak_no_slots_and_no_fds() {
         )
         .unwrap();
         let _ = client.next_subset().unwrap();
-        drop(client); // Drop sends the goodbye
+        // frame-wire cycles churn the subscriber list too: subscribe,
+        // then leave either politely (GOODBYE via Drop) or abruptly
+        // (bare FIN) — both must clear the subscription with the slot
+        if wire == WireMode::Frame {
+            client.subscribe().unwrap();
+            if c % 4 == 1 {
+                client.abandon();
+            }
+        }
+        drop(client); // Drop sends the goodbye (unless abandoned)
     }
 
-    // every slot must be reclaimed (goodbye fast path or EOF sweep)
+    // every slot must be reclaimed (goodbye fast path or EOF sweep),
+    // and no stale subscription may outlive its connection
     wait_until(
         || server.stats().open_connections == 0,
         "open_connections back to 0 after 100 connect/drop cycles",
     );
+    assert_eq!(
+        server.stats().subscribers,
+        0,
+        "subscriber list must drain with the connections"
+    );
     let stats = server.stats();
     assert_eq!(stats.connections, CYCLES + 1, "accepted every cycle");
+    // every 4th cycle abandoned without a goodbye; the rest must have one
+    let polite = CYCLES - CYCLES / 4;
     assert!(
-        stats.goodbyes >= CYCLES,
-        "drop must send goodbyes (got {} of {CYCLES})",
+        stats.goodbyes >= polite,
+        "drop must send goodbyes (got {} of {polite})",
         stats.goodbyes,
     );
     // and the process-level view agrees: no fd growth. Other tests in
