@@ -9,7 +9,10 @@
 //! 2. a `milo::serve` subset server exposes that resolution on an
 //!    ephemeral port;
 //! 3. four concurrent clients draw their own deterministic SGE-subset
-//!    cycles and WRE sample streams;
+//!    cycles and WRE sample streams — two over dedicated sockets (one
+//!    JSON-line, one framed), two as multiplexed streams sharing a
+//!    single pooled connection (the stream a client sees depends only on
+//!    its id, never on the transport underneath);
 //! 4. a *remote* `MiloSession` pointed at the server resolves the very
 //!    same metadata (validated dataset/seed/fraction) and — with
 //!    artifacts present — trains a downstream model off the live stream.
@@ -70,20 +73,35 @@ fn main() -> anyhow::Result<()> {
     println!("serving on {addr}");
 
     // --- 3. four concurrent clients draw deterministic streams ----------
-    // half speak JSON lines, half the binary frame wire: the stream a
-    // client sees depends only on its id, never on the transport encoding
+    // two get dedicated sockets (one JSON-line, one framed); the other two
+    // lease multiplexed streams from a shared `ConnectionPool`, riding a
+    // single TCP connection together. The stream a client sees depends
+    // only on its id, never on the transport underneath.
+    let pool = ConnectionPool::new(&addr);
     let streams: Vec<(String, Vec<usize>, usize)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..N_CLIENTS)
             .map(|c| {
                 let addr = addr.clone();
+                let pool = pool.clone();
                 scope.spawn(move || -> anyhow::Result<(String, Vec<usize>, usize)> {
-                    let wire = if c % 2 == 0 { WireMode::Json } else { WireMode::Frame };
                     let id = format!("trainer-{c}");
-                    let mut client = ServeClient::connect_with(
-                        &addr,
-                        &id,
-                        ClientOptions { wire, ..Default::default() },
-                    )?;
+                    let mut client = match c {
+                        0 => ServeClient::connect_with(
+                            &addr,
+                            &id,
+                            ClientOptions { wire: WireMode::Json, ..Default::default() },
+                        )?,
+                        1 => ServeClient::connect_with(
+                            &addr,
+                            &id,
+                            ClientOptions { wire: WireMode::Frame, ..Default::default() },
+                        )?,
+                        _ => ServeClient::connect_pooled(
+                            &pool,
+                            &id,
+                            ClientOptions { wire: WireMode::Frame, ..Default::default() },
+                        )?,
+                    };
                     let mut cycle = Vec::new();
                     for _ in 0..6 {
                         cycle.push(client.next_subset()?.0);
@@ -101,6 +119,10 @@ fn main() -> anyhow::Result<()> {
     for (id, cycle, wre_len) in &streams {
         println!("  {id}: SGE cycle {cycle:?}, WRE draw of {wre_len}");
     }
+    println!(
+        "  pool: 2 multiplexed trainers shared {} TCP connection(s)",
+        pool.connections()
+    );
 
     // --- 4. a remote session trains off the served stream ---------------
     if let Some(rt) = &rt {

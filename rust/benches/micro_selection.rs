@@ -283,7 +283,9 @@ fn bench_stream() {
 /// draws are timed with observability enabled vs
 /// `milo::obs::set_enabled(false)`, and full mode asserts the
 /// instrumented path stays within 5% of the uninstrumented baseline.
-/// Results land in `BENCH_serve.json`.
+/// A scale sweep then holds tiers of idle connections open (64 →
+/// thousands, fd-budget-clamped) and records PING p50/p99 at each
+/// occupancy. Results land in `BENCH_serve.json`.
 fn bench_serve() {
     use milo::data::DatasetId;
     use milo::obs::Histogram;
@@ -397,6 +399,82 @@ fn bench_serve() {
         );
     }
 
+    // scale sweep: small-request latency as a function of *held-open*
+    // connections — the fleet-scale serving curve (the soak tests prove
+    // correctness at this occupancy; this records what it costs). Each
+    // tier holds N idle JSON-line connections and measures PING
+    // round-trips sampled across the fleet. Tiers clamp to the fd budget
+    // (two fds per in-process connection); CI raises `ulimit -n` so the
+    // thousands tiers run for real.
+    let fd_budget = std::fs::read_to_string("/proc/self/limits")
+        .ok()
+        .and_then(|text| {
+            text.lines()
+                .find(|l| l.starts_with("Max open files"))
+                .and_then(|l| l.split_whitespace().nth(3))
+                .and_then(|v| v.parse::<u64>().ok())
+        })
+        .map(|soft| (soft.saturating_sub(100) / 2) as usize)
+        .unwrap_or(usize::MAX);
+    // MILO_BENCH_SCALE_FULL=1 upgrades just this sweep to the full tiers
+    // while smoke mode keeps the noisy wall-clock asserts off — how the
+    // CI soak job records the thousands-of-connections curve
+    let scale_full = std::env::var("MILO_BENCH_SCALE_FULL")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let tiers: &[usize] =
+        if smoke && !scale_full { &[16, 64] } else { &[64, 256, 1024, 2048] };
+    let mut scale_rows = Vec::new();
+    for &target in tiers {
+        use std::io::{BufRead, BufReader, Write};
+        let n = target.min(fd_budget).max(1);
+        let mut conns = Vec::with_capacity(n);
+        let mut line = String::new();
+        for c in 0..n {
+            let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+            sock.set_nodelay(true).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            sock.write_all(
+                format!("{{\"cmd\":\"HELLO\",\"client\":\"scale-{target}-{c}\"}}\n")
+                    .as_bytes(),
+            )
+            .unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.contains("\"ok\":true"), "scale HELLO failed: {line:?}");
+            conns.push((sock, reader));
+        }
+        let h = Histogram::new();
+        let probes = if smoke { 100usize } else { 400 };
+        let step = (n / 16).max(1) | 1; // odd stride walks every residue
+        let mut at = 0usize;
+        for _ in 0..probes {
+            let (sock, reader) = &mut conns[at % n];
+            at += step;
+            let t0 = Instant::now();
+            sock.write_all(b"{\"cmd\":\"PING\"}\n").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            h.record_duration(t0.elapsed());
+        }
+        let s = h.snapshot();
+        println!(
+            "bench serve[scale]  {n:>5} conns held  ping p50 {:>7.1}us  \
+             p99 {:>7.1}us  max {:>8.1}us",
+            s.percentile(0.50) as f64 / 1e3,
+            s.percentile(0.99) as f64 / 1e3,
+            s.max() as f64 / 1e3,
+        );
+        scale_rows.push(Json::obj(vec![
+            ("connections", Json::num(n as f64)),
+            ("ping_probes", Json::num(s.count() as f64)),
+            ("ping_p50_us", Json::num(s.percentile(0.50) as f64 / 1e3)),
+            ("ping_p99_us", Json::num(s.percentile(0.99) as f64 / 1e3)),
+            ("ping_max_us", Json::num(s.max() as f64 / 1e3)),
+        ]));
+        drop(conns);
+    }
+
     let frames_json = Json::arr(
         FRAMES
             .iter()
@@ -422,6 +500,7 @@ fn bench_serve() {
         ("next_subset_us_with_obs", Json::num(with_obs * 1e6)),
         ("next_subset_us_without_obs", Json::num(without_obs * 1e6)),
         ("obs_overhead_ratio", Json::num(ratio)),
+        ("scale", Json::arr(scale_rows)),
         ("server_metrics", server_metrics),
     ]);
     std::fs::write("BENCH_serve.json", doc.to_string()).unwrap();

@@ -31,13 +31,19 @@
 //! * **Metadata store & selection service** — [`store`] is a versioned,
 //!   content-addressed registry of pre-processed selection metadata
 //!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
-//!   any number of `(dataset, fraction)` artifacts to N concurrent
-//!   trainers/HPO trials from a single poll-based event loop (`milo
-//!   serve`), over a JSON-line protocol or the binary frame wire
-//!   negotiated at `HELLO` (subset index arrays as raw `u32` frames,
-//!   metadata as the exact binfmt artifact bytes). The [`serve::ServeClient`]
-//!   adds reconnect/retry with deterministic mid-stream resume. Both
-//!   layers are consumed through [`session::MetaSource`].
+//!   any number of `(dataset, fraction)` artifacts to thousands of
+//!   concurrent trainers/HPO trials from a single-threaded event loop
+//!   (`milo serve`) — readiness via epoll on Linux (raw FFI, with
+//!   `poll(2)` and portable fallbacks), bounded per-connection
+//!   read/write quanta for fair scheduling, and a JSON-line protocol or
+//!   the binary frame wire negotiated at `HELLO` (subset index arrays
+//!   as raw `u32` frames, metadata as the exact binfmt artifact bytes).
+//!   Frame headers carry a stream id, so a [`serve::ConnectionPool`]
+//!   multiplexes up to 31 logical sessions over one socket — each with
+//!   its own entry, deterministic streams, and push subscription. The
+//!   [`serve::ServeClient`] adds reconnect/retry with deterministic
+//!   mid-stream resume. Both layers are consumed through
+//!   [`session::MetaSource`].
 //! * **Observability** — [`obs`] is a zero-dependency telemetry layer:
 //!   per-component [`obs::MetricsRegistry`]s of atomic counters/gauges,
 //!   mergeable log-bucketed latency [`obs::Histogram`]s with exact-bounds
@@ -125,8 +131,8 @@ pub mod prelude {
         ModelProbe, RandomStrategy, SelectCtx, Strategy,
     };
     pub use crate::serve::{
-        ClientOptions, EpochUpdate, RetryPolicy, ServeClient, ServedMiloStrategy,
-        SubsetServer, WireMode,
+        ClientOptions, ConnectionPool, EpochUpdate, RetryPolicy, ServeClient,
+        ServedMiloStrategy, SubsetServer, WireMode,
     };
     pub use crate::session::{MetaSource, MiloSession, MiloSessionBuilder};
     pub use crate::store::{MetaKey, MetaStore};

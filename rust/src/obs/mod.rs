@@ -114,6 +114,10 @@ impl Gauge {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn dec(&self, n: u64) {
         self.0.fetch_sub(n, Ordering::Relaxed);
     }

@@ -32,11 +32,26 @@
 //!   epoch moved while it was away, synthesizes the missed advance from
 //!   `GET_META` (collapsing intermediate epochs to the head — a follower
 //!   observes each delivered epoch exactly once, in increasing order).
+//! * **Connection pooling** ([`ConnectionPool`] /
+//!   [`ServeClient::connect_pooled`]): a fleet of logical sessions shares
+//!   framed TCP connections instead of one socket per trainer. Each
+//!   pooled session gets its own stream id (the frame header's stream
+//!   bits — see [`crate::serve`] *Stream multiplexing*) on a shared
+//!   connection, with its own `HELLO`-negotiated entry binding, its own
+//!   deterministic streams, and its own per-stream subscription; up to
+//!   [`frame::MAX_STREAMS`]` - 1` sessions ride one socket before the
+//!   pool dials another. Request/response exchanges serialize on the
+//!   shared connection (one roundtrip holds it at a time), pushes for
+//!   sibling streams are stashed for their owners, and a transport error
+//!   poisons the shared socket so every session on it reconnects onto a
+//!   fresh one — replaying its deterministic streams exactly as a
+//!   dedicated connection would.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -109,8 +124,9 @@ struct Wire {
     writer: TcpStream,
     framed: bool,
     /// Push frames that arrived interleaved with request/response traffic
-    /// — stashed by [`Wire::roundtrip`], reassembled by the client.
-    pushed: Vec<Frame>,
+    /// — stashed with their stream id by [`Wire::roundtrip_on`], picked
+    /// up by the owning session's reassembler.
+    pushed: Vec<(u8, Frame)>,
     tx: u64,
     rx: u64,
 }
@@ -135,42 +151,57 @@ impl Wire {
     }
 
     fn send_frame(&mut self, f: &Frame) -> Result<()> {
-        let bytes = f.encode();
+        self.send_frame_on(0, f)
+    }
+
+    fn send_frame_on(&mut self, stream: u8, f: &Frame) -> Result<()> {
+        let bytes = f.encode_on(stream);
         self.writer.write_all(&bytes).context("sending frame")?;
         self.tx += bytes.len() as u64;
         Ok(())
     }
 
-    fn recv_frame(&mut self) -> Result<Frame> {
+    fn recv_frame(&mut self) -> Result<(u8, Frame)> {
         let mut header = [0u8; frame::HEADER_LEN];
         self.reader.read_exact(&mut header).context("reading frame header")?;
         // shared header validation (length cap, kind range) — the one
         // definition in `frame` — before allocating for the payload
-        let (len, kind) = frame::parse_header(&header)?;
+        let (len, kind, stream) = frame::parse_header(&header)?;
         let mut payload = vec![0u8; len];
         self.reader.read_exact(&mut payload).context("reading frame payload")?;
         self.rx += (frame::HEADER_LEN + len) as u64;
-        frame::parse_payload(kind, &payload)
+        Ok((stream, frame::parse_payload(kind, &payload)?))
     }
 
-    /// One request/response exchange in the active wire format. Errors
-    /// here are transport-level (lost connection, corrupt framing) — a
-    /// server-side `"ok":false` / `ERROR` frame comes back as `Ok` and is
-    /// surfaced by the response interpreters, so it is never retried.
+    /// One request/response exchange on `stream` in the active wire
+    /// format. Errors here are transport-level (lost connection, corrupt
+    /// framing, a response on the wrong stream) — a server-side
+    /// `"ok":false` / `ERROR` frame comes back as `Ok` and is surfaced by
+    /// the response interpreters, so it is never retried.
     /// Server-initiated push frames that land between a request and its
-    /// response are stashed, never returned as the response.
-    fn roundtrip(&mut self, request: &Json) -> Result<Frame> {
+    /// response are stashed with their stream id, never returned as the
+    /// response. Exchanges on a shared connection serialize (the caller
+    /// holds the connection for the whole roundtrip), so the response to
+    /// this request is the next non-push frame — and it must carry this
+    /// stream's id.
+    fn roundtrip_on(&mut self, stream: u8, request: &Json) -> Result<Frame> {
         if self.framed {
-            self.send_frame(&Frame::Json(request.to_string()))?;
+            self.send_frame_on(stream, &Frame::Json(request.to_string()))?;
             loop {
-                let f = self.recv_frame()?;
+                let (s, f) = self.recv_frame()?;
                 if is_push(&f) {
-                    self.pushed.push(f);
+                    self.pushed.push((s, f));
                     continue;
                 }
+                ensure!(
+                    s == stream,
+                    "response arrived on stream {s} while waiting on stream \
+                     {stream} — the multiplexed connection is desynchronized",
+                );
                 return Ok(f);
             }
         } else {
+            debug_assert_eq!(stream, 0, "the JSON wire is single-stream");
             self.send_line(&request.to_string())?;
             let line = self.recv_line()?;
             Ok(Frame::Json(line.trim_end().to_string()))
@@ -182,7 +213,7 @@ impl Wire {
     /// peeks), so a timeout mid-wait can never desynchronize the frame
     /// stream; once bytes are available the full frame is read blocking
     /// (the server writes frames contiguously).
-    fn poll_frame(&mut self, timeout: Duration) -> Result<Option<Frame>> {
+    fn poll_frame(&mut self, timeout: Duration) -> Result<Option<(u8, Frame)>> {
         self.writer
             .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
             .context("arming the poll timeout")?;
@@ -209,39 +240,55 @@ impl Wire {
         }
         self.recv_frame().map(Some)
     }
+
+    /// [`Wire::poll_frame`] filtered to `stream`: a push for a sibling
+    /// stream is stashed for its owner (and reported as `None` — the
+    /// caller's deadline loop keeps polling); a non-push frame for any
+    /// other stream means the connection is desynchronized.
+    fn poll_frame_on(&mut self, stream: u8, timeout: Duration) -> Result<Option<Frame>> {
+        match self.poll_frame(timeout)? {
+            None => Ok(None),
+            Some((s, f)) if s == stream => Ok(Some(f)),
+            Some((s, f)) if is_push(&f) => {
+                self.pushed.push((s, f));
+                Ok(None)
+            }
+            Some((s, f)) => bail!(
+                "unsolicited {} frame on stream {s} while polling stream {stream} \
+                 — the multiplexed connection is desynchronized",
+                f.kind_name(),
+            ),
+        }
+    }
 }
 
 fn is_push(f: &Frame) -> bool {
     matches!(f, Frame::EpochAdvance { .. } | Frame::SubsetDelta { .. })
 }
 
-/// Dial + `HELLO` handshake (always JSON-line; the connection switches to
-/// frames after a confirmed `"wire":"frame"` response). `resume` is the
-/// reconnect fast-forward hint: `(SGE draws consumed, WRE ks consumed)` —
-/// the server skips the deterministic streams ahead in this one request,
-/// with no subset payload re-transfer.
-fn dial(
-    addr: &str,
+/// How long a pooled session's `poll_push` holds the shared connection
+/// per wait slice before releasing it to sibling roundtrips.
+const POOL_POLL_SLICE_MS: u64 = 20;
+
+/// Assemble a `HELLO` request. `resume` is the reconnect fast-forward
+/// hint: `(SGE draws consumed, WRE ks consumed)` — the server skips the
+/// deterministic streams ahead in this one request, with no subset
+/// payload re-transfer. `negotiate_wire` includes the `wire` field — only
+/// the handshake on a fresh connection (stream 0) renegotiates the wire;
+/// a pooled stream's `HELLO` inherits the connection's framing.
+fn hello_request(
     client_id: &str,
     opts: &ClientOptions,
     resume: Option<(u64, &[usize])>,
-) -> Result<(Wire, HelloInfo)> {
-    let stream = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to milo serve at {addr}"))?;
-    let _ = stream.set_nodelay(true);
-    let mut wire = Wire {
-        reader: BufReader::new(stream.try_clone()?),
-        writer: stream,
-        framed: false,
-        pushed: Vec::new(),
-        tx: 0,
-        rx: 0,
-    };
+    negotiate_wire: bool,
+) -> Json {
     let mut fields = vec![
         ("cmd", Json::str("HELLO")),
         ("client", Json::str(client_id)),
-        ("wire", Json::str(opts.wire.name())),
     ];
+    if negotiate_wire {
+        fields.push(("wire", Json::str(opts.wire.name())));
+    }
     if let Some(ds) = &opts.dataset {
         fields.push(("dataset", Json::str(ds.clone())));
     }
@@ -260,30 +307,50 @@ fn dial(
             ]),
         ));
     }
-    wire.send_line(&Json::obj(fields).to_string())?;
-    let line = wire.recv_line()?;
-    let v = Json::parse(line.trim_end())
-        .with_context(|| format!("bad HELLO response line {line:?}"))?;
-    if !v.get("ok")?.as_bool()? {
-        let msg = v
-            .opt("error")
-            .and_then(|e| e.as_str().ok().map(|s| s.to_string()))
-            .unwrap_or_else(|| "unknown server error".to_string());
-        bail!("server error: {msg}");
-    }
+    Json::obj(fields)
+}
+
+/// Extract what the server announced from an `"ok":true` HELLO response.
+fn parse_hello(v: &Json) -> Result<HelloInfo> {
     // prefer the exact hex seed; the numeric field rounds above 2^53
     let seed = match v.opt("seed_hex").and_then(|s| s.as_str().ok()) {
         Some(hex) => u64::from_str_radix(hex, 16)
             .with_context(|| format!("bad seed_hex {hex:?} in HELLO response"))?,
         None => v.get("seed")?.as_f64()? as u64,
     };
-    let info = HelloInfo {
+    Ok(HelloInfo {
         dataset: v.get("dataset")?.as_str()?.to_string(),
         fraction: v.get("fraction")?.as_f64()?,
         seed,
         // absent on pre-epoch servers: those serve the batch state (0)
         epoch: v.opt("epoch").and_then(|e| e.as_f64().ok()).unwrap_or(0.0) as u64,
+    })
+}
+
+/// Dial + `HELLO` handshake (always JSON-line; the connection switches to
+/// frames after a confirmed `"wire":"frame"` response).
+fn dial(
+    addr: &str,
+    client_id: &str,
+    opts: &ClientOptions,
+    resume: Option<(u64, &[usize])>,
+) -> Result<(Wire, HelloInfo)> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to milo serve at {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let mut wire = Wire {
+        reader: BufReader::new(stream.try_clone()?),
+        writer: stream,
+        framed: false,
+        pushed: Vec::new(),
+        tx: 0,
+        rx: 0,
     };
+    wire.send_line(&hello_request(client_id, opts, resume, true).to_string())?;
+    let line = wire.recv_line()?;
+    let v = ok_json(&Frame::Json(line.clone()))
+        .with_context(|| format!("HELLO to milo serve at {addr}"))?;
+    let info = parse_hello(&v)?;
     if opts.wire == WireMode::Frame {
         let confirmed = v.opt("wire").and_then(|w| w.as_str().ok()) == Some("frame");
         ensure!(confirmed, "server at {addr} did not confirm frame mode");
@@ -292,7 +359,140 @@ fn dial(
     Ok((wire, info))
 }
 
-/// A blocking connection to a [`SubsetServer`](super::SubsetServer). One
+// ---------------------------------------------------------------------------
+// Connection pooling
+// ---------------------------------------------------------------------------
+
+/// A framed connection shared by several pooled sessions. `wire` goes
+/// `None` when a transport error poisons the socket — every session
+/// multiplexed on it then reconnects through the pool (a desynchronized
+/// shared connection cannot be trusted for anyone).
+struct PooledWire {
+    wire: Option<Wire>,
+}
+
+type SharedConn = Arc<Mutex<PooledWire>>;
+
+/// One pooled connection and the stream ids currently allocated on it
+/// (bit `s` set = stream `s` leased; bit 0 is the connection's control
+/// stream, never leased).
+struct PoolSlot {
+    conn: SharedConn,
+    streams: u32,
+}
+
+/// A shared pool of multiplexed framed connections to one `milo serve`
+/// address. [`ServeClient::connect_pooled`] leases a stream id on an
+/// existing connection with capacity, dialing a new socket only when
+/// every pooled connection already carries [`frame::MAX_STREAMS`]` - 1`
+/// sessions. Clone the pool handle freely — clones share the same
+/// connections.
+#[derive(Clone)]
+pub struct ConnectionPool {
+    addr: String,
+    inner: Arc<Mutex<Vec<PoolSlot>>>,
+}
+
+impl ConnectionPool {
+    /// A pool for `addr`. No connection is dialed until the first lease.
+    pub fn new(addr: &str) -> ConnectionPool {
+        ConnectionPool { addr: addr.to_string(), inner: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Live pooled connections (diagnostics: N sessions over
+    /// `connections()` sockets is the multiplexing win).
+    pub fn connections(&self) -> usize {
+        self.inner
+            .lock()
+            .expect("pool lock")
+            .iter()
+            .filter(|s| s.conn.lock().expect("pooled conn lock").wire.is_some())
+            .count()
+    }
+
+    /// Lease `(connection, stream id)` — reusing a live connection with a
+    /// free stream id, else dialing a fresh one (its stream-0 handshake
+    /// negotiates the frame wire; stream 0 stays the pool's control
+    /// session and is never leased).
+    fn checkout(&self) -> Result<(SharedConn, u8)> {
+        let mut slots = self.inner.lock().expect("pool lock");
+        // drop fully-idle poisoned slots; poisoned slots with outstanding
+        // leases stay until their sessions check back in (checkin on a
+        // pruned slot is a no-op)
+        slots.retain(|s| {
+            s.streams != 0 || s.conn.lock().expect("pooled conn lock").wire.is_some()
+        });
+        for slot in slots.iter_mut() {
+            if slot.conn.lock().expect("pooled conn lock").wire.is_none() {
+                continue;
+            }
+            if let Some(s) =
+                (1..frame::MAX_STREAMS as u32).find(|s| slot.streams & (1 << s) == 0)
+            {
+                slot.streams |= 1 << s;
+                return Ok((slot.conn.clone(), s as u8));
+            }
+        }
+        let opts = ClientOptions { wire: WireMode::Frame, ..ClientOptions::default() };
+        let (wire, _info) = dial(&self.addr, "pool", &opts, None)?;
+        let conn: SharedConn = Arc::new(Mutex::new(PooledWire { wire: Some(wire) }));
+        slots.push(PoolSlot { conn: conn.clone(), streams: 1 << 1 });
+        Ok((conn, 1))
+    }
+
+    /// Return a leased stream id. The connection stays pooled for reuse.
+    fn checkin(&self, conn: &SharedConn, stream: u8) {
+        let mut slots = self.inner.lock().expect("pool lock");
+        if let Some(slot) = slots.iter_mut().find(|s| Arc::ptr_eq(&s.conn, conn)) {
+            slot.streams &= !(1u32 << stream);
+        }
+    }
+}
+
+/// `HELLO` on a pooled stream: open (or re-bind) the stream's session on
+/// the shared framed connection. A transport error poisons the shared
+/// socket.
+fn open_session(
+    conn: &SharedConn,
+    stream: u8,
+    addr: &str,
+    client_id: &str,
+    opts: &ClientOptions,
+    resume: Option<(u64, &[usize])>,
+) -> Result<HelloInfo> {
+    let mut pw = conn.lock().expect("pooled conn lock");
+    let wire = pw
+        .wire
+        .as_mut()
+        .ok_or_else(|| anyhow!("pooled connection to milo serve at {addr} lost"))?;
+    let req = hello_request(client_id, opts, resume, false);
+    match wire.roundtrip_on(stream, &req) {
+        Ok(f) => {
+            let v = ok_json(&f)
+                .with_context(|| format!("HELLO on stream {stream} to {addr}"))?;
+            parse_hello(&v)
+        }
+        Err(e) => {
+            pw.wire = None;
+            Err(e)
+        }
+    }
+}
+
+/// How a [`ServeClient`] reaches the server: a dedicated socket (all
+/// traffic on stream 0) or a leased stream on a pool-shared socket.
+enum Transport {
+    Direct(Option<Wire>),
+    Pooled { pool: ConnectionPool, conn: SharedConn, stream: u8 },
+}
+
+/// A blocking session against a [`SubsetServer`](super::SubsetServer) —
+/// over its own socket ([`ServeClient::connect`]) or a stream leased from
+/// a shared [`ConnectionPool`] ([`ServeClient::connect_pooled`]). One
 /// request/response round-trip per call; reconnecting (same `client_id`)
 /// replays the same deterministic stream, and the built-in
 /// [`RetryPolicy`] does exactly that transparently on transport failure.
@@ -300,7 +500,7 @@ pub struct ServeClient {
     addr: String,
     client_id: String,
     opts: ClientOptions,
-    conn: Option<Wire>,
+    transport: Transport,
     server_dataset: String,
     server_fraction: f64,
     server_seed: u64,
@@ -352,11 +552,58 @@ impl ServeClient {
         opts: ClientOptions,
     ) -> Result<ServeClient> {
         let (wire, info) = dial(addr, client_id, &opts, None)?;
-        Ok(ServeClient {
+        Ok(ServeClient::assemble(
+            addr,
+            client_id,
+            opts,
+            Transport::Direct(Some(wire)),
+            info,
+        ))
+    }
+
+    /// Open a logical session as a multiplexed stream on a pool-shared
+    /// connection: same protocol surface as a dedicated connection (entry
+    /// routing, deterministic streams, per-stream subscription + push
+    /// delivery), but a fleet of sessions shares sockets. Always the
+    /// frame wire (the stream id lives in the frame header).
+    pub fn connect_pooled(
+        pool: &ConnectionPool,
+        client_id: &str,
+        opts: ClientOptions,
+    ) -> Result<ServeClient> {
+        ensure!(
+            opts.wire == WireMode::Frame,
+            "pooled sessions are multiplexed over the frame wire — connect \
+             with ClientOptions {{ wire: WireMode::Frame, .. }}",
+        );
+        let (conn, stream) = pool.checkout()?;
+        match open_session(&conn, stream, pool.addr(), client_id, &opts, None) {
+            Ok(info) => Ok(ServeClient::assemble(
+                pool.addr(),
+                client_id,
+                opts,
+                Transport::Pooled { pool: pool.clone(), conn, stream },
+                info,
+            )),
+            Err(e) => {
+                pool.checkin(&conn, stream);
+                Err(e)
+            }
+        }
+    }
+
+    fn assemble(
+        addr: &str,
+        client_id: &str,
+        opts: ClientOptions,
+        transport: Transport,
+        info: HelloInfo,
+    ) -> ServeClient {
+        ServeClient {
             addr: addr.to_string(),
             client_id: client_id.to_string(),
             opts,
-            conn: Some(wire),
+            transport,
             server_dataset: info.dataset,
             server_fraction: info.fraction,
             server_seed: info.seed,
@@ -370,7 +617,7 @@ impl ServeClient {
             bytes_tx: 0,
             bytes_rx: 0,
             goodbye_sent: false,
-        })
+        }
     }
 
     pub fn client_id(&self) -> &str {
@@ -398,20 +645,139 @@ impl ServeClient {
         self.opts.wire
     }
 
-    /// Bytes written to the server so far (all connections).
+    /// Bytes written to the server so far (all connections). On a pooled
+    /// session the live term counts the whole shared connection — every
+    /// stream's traffic, not just this session's.
     pub fn bytes_sent(&self) -> u64 {
-        self.bytes_tx + self.conn.as_ref().map_or(0, |w| w.tx)
+        self.bytes_tx
+            + match &self.transport {
+                Transport::Direct(w) => w.as_ref().map_or(0, |w| w.tx),
+                Transport::Pooled { conn, .. } => conn
+                    .lock()
+                    .expect("pooled conn lock")
+                    .wire
+                    .as_ref()
+                    .map_or(0, |w| w.tx),
+            }
     }
 
-    /// Bytes read from the server so far (all connections).
+    /// Bytes read from the server so far (all connections; see
+    /// [`ServeClient::bytes_sent`] for pooled-session scope).
     pub fn bytes_received(&self) -> u64 {
-        self.bytes_rx + self.conn.as_ref().map_or(0, |w| w.rx)
+        self.bytes_rx
+            + match &self.transport {
+                Transport::Direct(w) => w.as_ref().map_or(0, |w| w.rx),
+                Transport::Pooled { conn, .. } => conn
+                    .lock()
+                    .expect("pooled conn lock")
+                    .wire
+                    .as_ref()
+                    .map_or(0, |w| w.rx),
+            }
     }
 
+    /// Whether the transport currently has a live socket.
+    fn transport_live(&self) -> bool {
+        match &self.transport {
+            Transport::Direct(w) => w.is_some(),
+            Transport::Pooled { conn, .. } => {
+                conn.lock().expect("pooled conn lock").wire.is_some()
+            }
+        }
+    }
+
+    /// Tear down the live socket. For a pooled session this poisons the
+    /// *shared* connection — a transport error on a multiplexed socket
+    /// desynchronizes every stream on it, so all sibling sessions
+    /// reconnect too (exactly what a dropped dedicated socket would mean
+    /// for each of them).
     fn drop_conn(&mut self) {
-        if let Some(wire) = self.conn.take() {
+        let taken = match &mut self.transport {
+            Transport::Direct(w) => w.take(),
+            Transport::Pooled { conn, .. } => {
+                conn.lock().expect("pooled conn lock").wire.take()
+            }
+        };
+        if let Some(wire) = taken {
             self.bytes_tx += wire.tx;
             self.bytes_rx += wire.rx;
+        }
+    }
+
+    /// One roundtrip on the live transport — no retry, no reconnect (the
+    /// building block `call` and the reconnect path share). A transport
+    /// error on a shared connection poisons it for every stream.
+    fn roundtrip_live(&mut self, request: &Json) -> Result<Frame> {
+        match &mut self.transport {
+            Transport::Direct(Some(wire)) => wire.roundtrip_on(0, request),
+            Transport::Direct(None) => {
+                bail!("connection to milo serve at {} lost", self.addr)
+            }
+            Transport::Pooled { conn, stream, .. } => {
+                let mut pw = conn.lock().expect("pooled conn lock");
+                let wire = pw.wire.as_mut().ok_or_else(|| {
+                    anyhow!("pooled connection to milo serve at {} lost", self.addr)
+                })?;
+                let r = wire.roundtrip_on(*stream, request);
+                if r.is_err() {
+                    pw.wire = None;
+                }
+                r
+            }
+        }
+    }
+
+    /// Re-establish the transport and re-`HELLO` with `resume`. Direct:
+    /// redial the socket. Pooled: lease a fresh `(connection, stream)`
+    /// from the pool (the old lease died with its poisoned socket) and
+    /// open the session there.
+    fn redial(&mut self, resume: Option<(u64, &[usize])>) -> Result<HelloInfo> {
+        match &mut self.transport {
+            Transport::Direct(slot) => {
+                let (wire, info) = dial(&self.addr, &self.client_id, &self.opts, resume)?;
+                *slot = Some(wire);
+                Ok(info)
+            }
+            Transport::Pooled { pool, conn, stream } => {
+                if conn.lock().expect("pooled conn lock").wire.is_some() {
+                    // the shared socket is fine (e.g. the epoch-change
+                    // re-HELLO): re-bind this stream's session in place —
+                    // never check the id in while live, or a sibling
+                    // could lease it before we re-acquire one
+                    return open_session(
+                        conn,
+                        *stream,
+                        &self.addr,
+                        &self.client_id,
+                        &self.opts,
+                        resume,
+                    );
+                }
+                let pool = pool.clone();
+                // the old lease died with its poisoned socket; ids on a
+                // poisoned connection are never re-leased, so this
+                // checkin cannot collide
+                pool.checkin(conn, *stream);
+                let (new_conn, new_stream) = pool.checkout()?;
+                match open_session(
+                    &new_conn,
+                    new_stream,
+                    &self.addr,
+                    &self.client_id,
+                    &self.opts,
+                    resume,
+                ) {
+                    Ok(info) => {
+                        *conn = new_conn;
+                        *stream = new_stream;
+                        Ok(info)
+                    }
+                    Err(e) => {
+                        pool.checkin(&new_conn, new_stream);
+                        Err(e)
+                    }
+                }
+            }
         }
     }
 
@@ -422,12 +788,8 @@ impl ServeClient {
     /// this, the next draw is exactly what the uninterrupted stream would
     /// have produced.
     fn reconnect_and_replay(&mut self) -> Result<()> {
-        let (mut wire, mut info) = dial(
-            &self.addr,
-            &self.client_id,
-            &self.opts,
-            Some((self.sge_drawn, &self.wre_ks)),
-        )?;
+        let journal = (self.sge_drawn, self.wre_ks.clone());
+        let mut info = self.redial(Some((journal.0, &journal.1)))?;
         ensure!(
             info.seed == self.server_seed,
             "server at {} came back with seed {} (session started on {}) — \
@@ -455,28 +817,26 @@ impl ServeClient {
             // the entry advanced while we were away: the replay journal
             // describes the *old* epoch's streams, so the fast-forward
             // just performed was against the wrong universe — restart the
-            // streams cleanly at the head epoch instead
+            // streams cleanly at the head epoch instead (a re-HELLO on a
+            // pooled stream re-binds that stream's session in place)
             self.sge_drawn = 0;
             self.wre_ks.clear();
-            let (w, i) = dial(&self.addr, &self.client_id, &self.opts, None)?;
-            wire = w;
-            info = i;
+            info = self.redial(None)?;
         }
         let missed_epoch = info.epoch > self.last_epoch;
         self.server_fraction = info.fraction;
         self.server_epoch = info.epoch;
-        self.conn = Some(wire);
         if self.subscribed {
             // the subscription died with the old connection — re-arm it,
             // and surface the advance(s) we slept through as one
             // synthesized update from the head epoch's metadata, so a
             // follower still observes every delivered epoch in order
-            let wire = self.conn.as_mut().expect("just reconnected");
-            let f =
-                wire.roundtrip(&Json::obj(vec![("cmd", Json::str("SUBSCRIBE"))]))?;
+            let f = self
+                .roundtrip_live(&Json::obj(vec![("cmd", Json::str("SUBSCRIBE"))]))?;
             ok_json(&f)?;
             if missed_epoch {
-                let f = wire.roundtrip(&Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
+                let f = self
+                    .roundtrip_live(&Json::obj(vec![("cmd", Json::str("GET_META"))]))?;
                 let meta = match &f {
                     Frame::Meta(_) => f.decode_meta()?,
                     _ => metadata_from_json(ok_json(&f)?.get("meta")?)?,
@@ -497,8 +857,8 @@ impl ServeClient {
     /// errors come back as frames and are never retried.
     fn call(&mut self, request: &Json) -> Result<Frame> {
         let mut first_err: Option<anyhow::Error> = None;
-        if let Some(wire) = self.conn.as_mut() {
-            match wire.roundtrip(request) {
+        if self.transport_live() {
+            match self.roundtrip_live(request) {
                 Ok(f) => return Ok(f),
                 // keep the root cause: with an empty retry budget this is
                 // the error the caller sees
@@ -516,16 +876,13 @@ impl ServeClient {
                 self.opts.retry.backoff_ms.saturating_mul(attempt as u64),
             ));
             match self.reconnect_and_replay() {
-                Ok(()) => {
-                    let wire = self.conn.as_mut().expect("just reconnected");
-                    match wire.roundtrip(request) {
-                        Ok(f) => return Ok(f),
-                        Err(e) => {
-                            last = e;
-                            self.drop_conn();
-                        }
+                Ok(()) => match self.roundtrip_live(request) {
+                    Ok(f) => return Ok(f),
+                    Err(e) => {
+                        last = e;
+                        self.drop_conn();
                     }
-                }
+                },
                 // a deterministic refusal (seed/entry mismatch, policy
                 // rejection) comes from a live server that will refuse
                 // every redial identically — fail fast, don't burn the
@@ -630,24 +987,45 @@ impl ServeClient {
     /// universe, restarting the deterministic streams.
     pub fn poll_push(&mut self, timeout_ms: u64) -> Result<Option<EpochUpdate>> {
         ensure!(self.subscribed, "poll_push requires subscribe() first");
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
         loop {
             self.ingest_stashed();
             if let Some(u) = self.take_ready() {
                 return Ok(Some(u));
             }
-            let Some(wire) = self.conn.as_mut() else {
+            if !self.transport_live() {
                 // the transport died earlier; reuse the retry machinery by
                 // issuing a cheap request, which reconnects + re-subscribes
                 // (and synthesizes a missed advance) or gives up cleanly
                 self.ping()?;
                 continue;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Ok(None);
+            }
+            // on a pool-shared connection, wait in short slices: the
+            // socket is released between slices so sibling sessions can
+            // run their roundtrips inside this session's follow window
+            let slice = match &self.transport {
+                Transport::Pooled { .. } => {
+                    left.min(Duration::from_millis(POOL_POLL_SLICE_MS))
+                }
+                Transport::Direct(_) => left,
             };
-            match wire.poll_frame(Duration::from_millis(timeout_ms)) {
+            match self.poll_transport(slice) {
                 Ok(Some(f)) if is_push(&f) => self.assemble(f),
                 Ok(Some(f)) => {
                     bail!("unsolicited {} frame outside a request", f.kind_name())
                 }
-                Ok(None) => return Ok(None),
+                Ok(None) => {
+                    if matches!(self.transport, Transport::Direct(_)) {
+                        return Ok(None);
+                    }
+                    // pooled: a sibling's push may have been stashed, or
+                    // the slice elapsed — loop (the deadline check above
+                    // ends the wait)
+                }
                 Err(e) => {
                     // transport failure mid-follow: reconnect via the retry
                     // path (ping re-subscribes and synthesizes the head
@@ -659,6 +1037,29 @@ impl ServeClient {
         }
     }
 
+    /// Wait up to `timeout` for one frame on this session's stream;
+    /// sibling-stream pushes are stashed for their owners. A transport
+    /// error on a shared connection poisons it.
+    fn poll_transport(&mut self, timeout: Duration) -> Result<Option<Frame>> {
+        match &mut self.transport {
+            Transport::Direct(Some(wire)) => wire.poll_frame_on(0, timeout),
+            Transport::Direct(None) => {
+                bail!("connection to milo serve at {} lost", self.addr)
+            }
+            Transport::Pooled { conn, stream, .. } => {
+                let mut pw = conn.lock().expect("pooled conn lock");
+                let wire = pw.wire.as_mut().ok_or_else(|| {
+                    anyhow!("pooled connection to milo serve at {} lost", self.addr)
+                })?;
+                let r = wire.poll_frame_on(*stream, timeout);
+                if r.is_err() {
+                    pw.wire = None;
+                }
+                r
+            }
+        }
+    }
+
     /// Iterate epoch updates: each `next()` waits up to `timeout_ms` and
     /// ends the iteration (returns `None`) when no update arrives in the
     /// window. Errors surface as `Some(Err(_))`.
@@ -666,14 +1067,30 @@ impl ServeClient {
         FollowStream { client: self, timeout_ms }
     }
 
-    /// Move stashed push frames (received interleaved with responses)
-    /// into the reassembler.
+    /// Move this session's stashed push frames (received interleaved with
+    /// responses) into the reassembler. On a shared connection only the
+    /// frames tagged with this session's stream id are taken — siblings'
+    /// pushes stay stashed for their owners, in arrival order.
     fn ingest_stashed(&mut self) {
-        let frames = match self.conn.as_mut() {
-            Some(w) if !w.pushed.is_empty() => std::mem::take(&mut w.pushed),
-            _ => return,
+        let mine: Vec<Frame> = match &mut self.transport {
+            Transport::Direct(Some(w)) if !w.pushed.is_empty() => {
+                std::mem::take(&mut w.pushed).into_iter().map(|(_, f)| f).collect()
+            }
+            Transport::Direct(_) => return,
+            Transport::Pooled { conn, stream, .. } => {
+                let mut pw = conn.lock().expect("pooled conn lock");
+                let Some(w) = pw.wire.as_mut() else { return };
+                if w.pushed.is_empty() {
+                    return;
+                }
+                let s = *stream;
+                let (mine, rest): (Vec<_>, Vec<_>) =
+                    std::mem::take(&mut w.pushed).into_iter().partition(|(t, _)| *t == s);
+                w.pushed = rest;
+                mine.into_iter().map(|(_, f)| f).collect()
+            }
         };
-        for f in frames {
+        for f in mine {
             self.assemble(f);
         }
     }
@@ -732,23 +1149,49 @@ impl ServeClient {
         None
     }
 
-    /// Graceful close: tell the server to reclaim this connection's slot
-    /// now. Dropping the client sends the same close message best-effort;
-    /// calling this explicitly also confirms the acknowledgement.
+    /// Graceful close. On a dedicated connection the server reclaims the
+    /// whole slot; on a pooled session only this stream's server-side
+    /// session is torn down — the shared socket lives on for its
+    /// siblings. The stream id itself returns to the pool when the
+    /// client is dropped (checking it in here would let a sibling lease
+    /// it while this object still exists — and `Drop`'s unconditional
+    /// checkin would then free the sibling's lease). Dropping the client
+    /// sends the same close message best-effort; calling this explicitly
+    /// also confirms the acknowledgement.
     pub fn goodbye(&mut self) -> Result<()> {
         self.goodbye_sent = true;
-        if let Some(wire) = self.conn.as_mut() {
-            let f = wire.roundtrip(&Json::obj(vec![("cmd", Json::str("GOODBYE"))]))?;
-            ok_json(&f)?;
+        let req = Json::obj(vec![("cmd", Json::str("GOODBYE"))]);
+        match &mut self.transport {
+            Transport::Direct(_) => {
+                if self.transport_live() {
+                    let f = self.roundtrip_live(&req)?;
+                    ok_json(&f)?;
+                }
+                self.drop_conn();
+                Ok(())
+            }
+            Transport::Pooled { conn, stream, .. } => {
+                let mut pw = conn.lock().expect("pooled conn lock");
+                match pw.wire.as_mut() {
+                    None => Ok(()),
+                    Some(wire) => match wire.roundtrip_on(*stream, &req) {
+                        Ok(f) => ok_json(&f).map(|_| ()),
+                        Err(e) => {
+                            pw.wire = None;
+                            Err(e)
+                        }
+                    },
+                }
+            }
         }
-        self.drop_conn();
-        Ok(())
     }
 
     /// Drop the connection abruptly — a bare FIN, no GOODBYE (and none on
     /// [`Drop`] either). Exercises the server's EOF sweep the way a
     /// crashed trainer would; the stress/push tests use it to prove slot
-    /// and subscriber reclamation without a polite disconnect.
+    /// and subscriber reclamation without a polite disconnect. On a
+    /// pooled session this kills the *shared* socket — exactly what a
+    /// crash of a process multiplexing several trainers does.
     pub fn abandon(&mut self) {
         self.goodbye_sent = true;
         self.drop_conn();
@@ -778,17 +1221,39 @@ impl Iterator for FollowStream<'_> {
 
 impl Drop for ServeClient {
     fn drop(&mut self) {
-        // best-effort goodbye so the server reclaims the slot promptly —
-        // never block (or panic) on the way out
+        // best-effort goodbye so the server reclaims the slot (or the
+        // stream's session) promptly — never block (or panic) on the way
+        // out
         if !self.goodbye_sent {
-            if let Some(wire) = self.conn.as_mut() {
-                let req = Json::obj(vec![("cmd", Json::str("GOODBYE"))]);
-                let _ = if wire.framed {
-                    wire.send_frame(&Frame::Json(req.to_string()))
-                } else {
-                    wire.send_line(&req.to_string())
-                };
+            let req = Json::obj(vec![("cmd", Json::str("GOODBYE"))]);
+            match &mut self.transport {
+                Transport::Direct(Some(wire)) => {
+                    let _ = if wire.framed {
+                        wire.send_frame(&Frame::Json(req.to_string()))
+                    } else {
+                        wire.send_line(&req.to_string())
+                    };
+                }
+                Transport::Direct(None) => {}
+                Transport::Pooled { conn, stream, .. } => {
+                    // a fire-and-forget GOODBYE would leave its response
+                    // frame unread on the shared socket and desynchronize
+                    // the siblings — do the full roundtrip (the server
+                    // answers control frames promptly); on any error
+                    // poison the socket rather than leave it torn
+                    if let Ok(mut pw) = conn.try_lock() {
+                        if let Some(wire) = pw.wire.as_mut() {
+                            if wire.roundtrip_on(*stream, &req).is_err() {
+                                pw.wire = None;
+                            }
+                        }
+                    }
+                }
             }
+        }
+        // return a pooled stream id regardless of how the session ended
+        if let Transport::Pooled { pool, conn, stream } = &self.transport {
+            pool.checkin(conn, *stream);
         }
     }
 }
@@ -873,6 +1338,21 @@ impl ServedMiloStrategy {
     ) -> Result<ServedMiloStrategy> {
         Ok(ServedMiloStrategy {
             client: ServeClient::connect_with(addr, client_id, opts)?,
+            kappa,
+        })
+    }
+
+    /// Draw from a stream multiplexed on a pool-shared connection — a
+    /// trainer fleet on one host shares sockets instead of holding one
+    /// each (`opts.wire` must be [`WireMode::Frame`]).
+    pub fn connect_pooled(
+        pool: &ConnectionPool,
+        client_id: &str,
+        kappa: f64,
+        opts: ClientOptions,
+    ) -> Result<ServedMiloStrategy> {
+        Ok(ServedMiloStrategy {
+            client: ServeClient::connect_pooled(pool, client_id, opts)?,
             kappa,
         })
     }

@@ -14,10 +14,18 @@
 //! Every frame is a 5-byte header followed by the payload:
 //!
 //! ```text
-//! len   4  u32 LE — payload length in bytes (excluding this header)
+//! word  4  u32 LE — low 27 bits: payload length in bytes (excluding
+//!                   this header); high 5 bits: stream id (0–31)
 //! kind  1  u8     — payload interpretation (below)
 //! payload  len bytes
 //! ```
+//!
+//! The **stream id** multiplexes up to [`MAX_STREAMS`] logical sessions
+//! over one TCP connection (see the [`crate::serve`] protocol docs).
+//! Stream 0 is the connection's default/control stream; because
+//! [`MAX_PAYLOAD`] needs only 27 bits, a stream-0 frame is *byte-identical*
+//! to the pre-multiplexing wire — old clients and servers interoperate
+//! unchanged as long as they never open a nonzero stream.
 //!
 //! | kind | name | payload |
 //! |---|---|---|
@@ -51,8 +59,23 @@ pub const HEADER_LEN: usize = 5;
 
 /// Hard ceiling on a single frame's payload — a corrupted length prefix
 /// must never drive allocation (largest real payload is a full metadata
-/// artifact, a few MB).
+/// artifact, a few MB). Must stay under `1 << LEN_BITS`: the length
+/// shares the header's u32 word with the stream id.
 pub const MAX_PAYLOAD: usize = 64 << 20;
+
+/// Bits of the header word carrying the payload length; the remaining
+/// `32 - LEN_BITS` high bits carry the stream id.
+const LEN_BITS: u32 = 27;
+
+/// Mask extracting the payload length from the header word.
+const LEN_MASK: u32 = (1 << LEN_BITS) - 1;
+
+/// Logical streams per connection (5 header bits). Stream 0 is the
+/// control/default stream; 1..=31 are allocatable session streams.
+pub const MAX_STREAMS: usize = 32;
+
+// the length field must be able to express MAX_PAYLOAD
+const _: () = assert!(MAX_PAYLOAD as u32 <= LEN_MASK);
 
 /// `SUBSET` frame index sentinel for draws that have no cycle position
 /// (WRE samples).
@@ -132,8 +155,14 @@ impl Frame {
         }
     }
 
-    /// Serialize to header + payload bytes.
+    /// Serialize to header + payload bytes on stream 0 (the legacy wire).
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_on(0)
+    }
+
+    /// Serialize to header + payload bytes with `stream` in the header's
+    /// stream-id bits.
+    pub fn encode_on(&self, stream: u8) -> Vec<u8> {
         let payload: Vec<u8> = match self {
             Frame::Json(s) => s.as_bytes().to_vec(),
             Frame::Error(s) => s.as_bytes().to_vec(),
@@ -165,7 +194,7 @@ impl Frame {
             }
         };
         let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
-        write_frame_into(&mut out, self.kind(), &payload);
+        write_frame_on(&mut out, stream, self.kind(), &payload);
         out
     }
 
@@ -189,29 +218,45 @@ impl Frame {
     }
 }
 
-/// Append one framed message (header + payload) to `out` — the single
-/// place that knows the header layout. Used by [`Frame::encode`] and by
-/// the server's cached-payload fast path (which frames pre-encoded bytes
-/// without re-building a [`Frame`]).
+/// Pack payload length + stream id into the header's u32 word.
+#[inline]
+fn header_word(len: usize, stream: u8) -> u32 {
+    debug_assert!(len <= MAX_PAYLOAD);
+    debug_assert!((stream as usize) < MAX_STREAMS);
+    (len as u32) | ((stream as u32) << LEN_BITS)
+}
+
+/// Append one framed message (header + payload) on stream 0 to `out`.
+/// Used by [`Frame::encode`] and by the server's cached-payload fast path
+/// (which frames pre-encoded bytes without re-building a [`Frame`]).
 pub fn write_frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
+    write_frame_on(out, 0, kind, payload);
+}
+
+/// Append one framed message on an explicit stream — the single place
+/// that knows the header layout.
+pub fn write_frame_on(out: &mut Vec<u8>, stream: u8, kind: u8, payload: &[u8]) {
     assert!(payload.len() <= MAX_PAYLOAD, "frame payload too large");
-    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    assert!((stream as usize) < MAX_STREAMS, "stream id {stream} out of range");
+    out.extend_from_slice(&header_word(payload.len(), stream).to_le_bytes());
     out.push(kind);
     out.extend_from_slice(payload);
 }
 
 /// Append a `SUBSET` frame encoded straight from a `usize` index slice —
-/// byte-identical to `Frame::subset(index, indices).encode()` without the
-/// intermediate `Vec<u32>`/`Vec<u8>`. This is the server's `NEXT_SUBSET`
-/// hot path: the subset travels from the shared metadata slice into the
-/// connection's write buffer with no per-request re-encode. The caller
-/// validates lengths/ranges up front (a served payload must degrade to an
-/// ERROR frame, never panic the event loop).
-pub fn write_subset_frame_into(out: &mut Vec<u8>, index: u32, indices: &[usize]) {
+/// byte-identical to `Frame::subset(index, indices).encode()` (plus the
+/// stream bits) without the intermediate `Vec<u32>`/`Vec<u8>`. This is
+/// the server's `NEXT_SUBSET` hot path: the subset travels from the
+/// shared metadata slice into the connection's write buffer with no
+/// per-request re-encode. The caller validates lengths/ranges up front (a
+/// served payload must degrade to an ERROR frame, never panic the event
+/// loop).
+pub fn write_subset_frame_on(out: &mut Vec<u8>, stream: u8, index: u32, indices: &[usize]) {
     let len = 8 + 4 * indices.len();
     assert!(len <= MAX_PAYLOAD, "subset frame payload too large");
+    assert!((stream as usize) < MAX_STREAMS, "stream id {stream} out of range");
     out.reserve(HEADER_LEN + len);
-    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&header_word(len, stream).to_le_bytes());
     out.push(KIND_SUBSET);
     out.extend_from_slice(&index.to_le_bytes());
     out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
@@ -221,17 +266,22 @@ pub fn write_subset_frame_into(out: &mut Vec<u8>, index: u32, indices: &[usize])
     }
 }
 
+/// Stream-0 [`write_subset_frame_on`].
+pub fn write_subset_frame_into(out: &mut Vec<u8>, index: u32, indices: &[usize]) {
+    write_subset_frame_on(out, 0, index, indices);
+}
+
 /// Append a `SUBSET_DELTA` frame encoded straight from a `usize` index
 /// slice — byte-identical to
 /// `Frame::SubsetDelta { .. }.encode()` without intermediate vectors.
 /// This is the push-broadcast hot path: on an epoch advance the server
-/// writes each new subset once per subscriber, straight from the shared
-/// metadata slice into the connection's write buffer.
+/// encodes each new subset once and replays the burst per subscribed
+/// stream (see [`restream_frames`]).
 pub fn write_delta_frame_into(out: &mut Vec<u8>, epoch: u64, index: u32, indices: &[usize]) {
     let len = 16 + 4 * indices.len();
     assert!(len <= MAX_PAYLOAD, "delta frame payload too large");
     out.reserve(HEADER_LEN + len);
-    out.extend_from_slice(&(len as u32).to_le_bytes());
+    out.extend_from_slice(&header_word(len, 0).to_le_bytes());
     out.push(KIND_DELTA);
     out.extend_from_slice(&epoch.to_le_bytes());
     out.extend_from_slice(&index.to_le_bytes());
@@ -242,13 +292,41 @@ pub fn write_delta_frame_into(out: &mut Vec<u8>, epoch: u64, index: u32, indices
     }
 }
 
-/// Validate a frame header, returning `(payload length, kind)`. The
-/// single place that checks the length cap and kind range — used by the
-/// incremental [`FrameDecoder`] and the client's blocking reader, so the
-/// two cannot drift.
-pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(usize, u8)> {
-    let len =
-        u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+/// Copy a pre-encoded stream-0 frame sequence into `out`, rewriting every
+/// header's stream bits to `stream`. The push path pre-encodes one epoch
+/// burst per publish; broadcasting to a subscriber on stream N is this
+/// header patch plus a memcpy — payloads are never re-encoded, so the
+/// bytes delivered per stream stay identical to a dedicated connection's.
+pub fn restream_frames(src: &[u8], out: &mut Vec<u8>, stream: u8) -> Result<()> {
+    assert!((stream as usize) < MAX_STREAMS, "stream id {stream} out of range");
+    out.reserve(src.len());
+    let mut pos = 0usize;
+    while pos < src.len() {
+        if src.len() - pos < HEADER_LEN {
+            bail!("truncated frame header in pre-encoded burst");
+        }
+        let header: [u8; HEADER_LEN] =
+            src[pos..pos + HEADER_LEN].try_into().expect("sliced exactly HEADER_LEN");
+        let (len, kind, _) = parse_header(&header)?;
+        if src.len() - pos < HEADER_LEN + len {
+            bail!("truncated frame payload in pre-encoded burst");
+        }
+        out.extend_from_slice(&header_word(len, stream).to_le_bytes());
+        out.push(kind);
+        out.extend_from_slice(&src[pos + HEADER_LEN..pos + HEADER_LEN + len]);
+        pos += HEADER_LEN + len;
+    }
+    Ok(())
+}
+
+/// Validate a frame header, returning `(payload length, kind, stream)`.
+/// The single place that checks the length cap and kind range — used by
+/// the incremental [`FrameDecoder`] and the client's blocking reader, so
+/// the two cannot drift.
+pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(usize, u8, u8)> {
+    let word = u32::from_le_bytes([header[0], header[1], header[2], header[3]]);
+    let len = (word & LEN_MASK) as usize;
+    let stream = (word >> LEN_BITS) as u8;
     let kind = header[4];
     // validate before anyone waits on (or allocates for) the payload: a
     // corrupted length or kind must fail fast
@@ -258,7 +336,7 @@ pub fn parse_header(header: &[u8; HEADER_LEN]) -> Result<(usize, u8)> {
     if kind > KIND_MAX {
         bail!("unknown frame kind {kind}");
     }
-    Ok((len, kind))
+    Ok((len, kind, stream))
 }
 
 /// Parse one payload of `kind` into a [`Frame`]. Total: every malformed
@@ -362,21 +440,44 @@ impl FrameDecoder {
         std::mem::take(&mut self.buf)
     }
 
+    /// Release buffer capacity left over from a burst: once drained below
+    /// `keep` bytes of content, capacity above `keep` is returned to the
+    /// allocator. One oversized request must not pin its high-water
+    /// allocation for the connection's lifetime.
+    pub fn shrink(&mut self, keep: usize) {
+        if self.buf.capacity() > keep && self.buf.len() <= keep {
+            self.buf.shrink_to(keep);
+        }
+    }
+
+    /// Buffer capacity currently held (content + slack) — the
+    /// per-connection memory the decoder pins between requests.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
     /// Pop the next complete frame. `Ok(None)` = incomplete, wait for more
     /// bytes; `Err` = the stream is corrupt and cannot be resynchronized.
     pub fn next(&mut self) -> Result<Option<Frame>> {
+        Ok(self.next_with_stream()?.map(|(_, frame)| frame))
+    }
+
+    /// Pop the next complete frame with its stream id. `Ok(None)` =
+    /// incomplete, wait for more bytes; `Err` = the stream is corrupt and
+    /// cannot be resynchronized.
+    pub fn next_with_stream(&mut self) -> Result<Option<(u8, Frame)>> {
         if self.buf.len() < HEADER_LEN {
             return Ok(None);
         }
         let header: [u8; HEADER_LEN] =
             self.buf[..HEADER_LEN].try_into().expect("sliced exactly HEADER_LEN");
-        let (len, kind) = parse_header(&header)?;
+        let (len, kind, stream) = parse_header(&header)?;
         if self.buf.len() < HEADER_LEN + len {
             return Ok(None);
         }
         let frame = parse_payload(kind, &self.buf[HEADER_LEN..HEADER_LEN + len])?;
         self.buf.drain(..HEADER_LEN + len);
-        Ok(Some(frame))
+        Ok(Some((stream, frame)))
     }
 }
 
@@ -500,6 +601,78 @@ mod tests {
         let mut d = FrameDecoder::new();
         d.push(&bytes);
         assert!(d.next().is_err());
+    }
+
+    #[test]
+    fn stream_bits_roundtrip_and_stream_zero_is_the_legacy_wire() {
+        let f = Frame::subset(2, &[0, 7, 1000]);
+        for stream in [0u8, 1, 5, (MAX_STREAMS - 1) as u8] {
+            let mut bytes = Vec::new();
+            write_frame_on(&mut bytes, stream, f.kind(), &f.encode()[HEADER_LEN..]);
+            let mut d = FrameDecoder::new();
+            d.push(&bytes);
+            let (got_stream, got) = d.next_with_stream().unwrap().unwrap();
+            assert_eq!(got_stream, stream);
+            assert_eq!(got, f);
+        }
+        // stream 0 must be byte-identical to the pre-multiplexing header:
+        // the u32 word is exactly the payload length
+        let bytes = f.encode();
+        let word = u32::from_le_bytes(bytes[..4].try_into().unwrap());
+        assert_eq!(word as usize, bytes.len() - HEADER_LEN);
+    }
+
+    #[test]
+    fn restream_patches_headers_and_preserves_payload_bytes() {
+        let mut burst = Vec::new();
+        write_delta_frame_into(&mut burst, 3, 0, &[1, 2, 9]);
+        write_delta_frame_into(&mut burst, 3, NO_INDEX, &[4]);
+        let mut out = Vec::new();
+        restream_frames(&burst, &mut out, 7).unwrap();
+        assert_eq!(out.len(), burst.len());
+        let mut d = FrameDecoder::new();
+        d.push(&out);
+        let mut streams = Vec::new();
+        let mut frames = Vec::new();
+        while let Some((s, f)) = d.next_with_stream().unwrap() {
+            streams.push(s);
+            frames.push(f);
+        }
+        assert_eq!(streams, vec![7, 7]);
+        // payloads are untouched: re-encoding on stream 0 reproduces the burst
+        let mut back = Vec::new();
+        for f in &frames {
+            back.extend_from_slice(&f.encode());
+        }
+        assert_eq!(back, burst);
+        // restreaming to 0 is the identity
+        let mut zero = Vec::new();
+        restream_frames(&burst, &mut zero, 0).unwrap();
+        assert_eq!(zero, burst);
+        // truncated bursts are errors, never panics
+        assert!(restream_frames(&burst[..burst.len() - 1], &mut Vec::new(), 1).is_err());
+        assert!(restream_frames(&burst[..3], &mut Vec::new(), 1).is_err());
+    }
+
+    #[test]
+    fn subset_writer_on_stream_matches_patched_encode() {
+        let indices = vec![5usize, 0, 7, 1000];
+        let mut direct = Vec::new();
+        write_subset_frame_on(&mut direct, 9, 3, &indices);
+        let mut patched = Vec::new();
+        restream_frames(&Frame::subset(3, &indices).encode(), &mut patched, 9).unwrap();
+        assert_eq!(direct, patched);
+    }
+
+    #[test]
+    fn decoder_shrink_releases_burst_capacity() {
+        let mut d = FrameDecoder::new();
+        let big = Frame::Json("x".repeat(1 << 20)).encode();
+        d.push(&big);
+        assert!(d.capacity() >= 1 << 20);
+        d.next().unwrap().unwrap();
+        d.shrink(4096);
+        assert!(d.capacity() <= 4096, "capacity {} still pinned", d.capacity());
     }
 
     #[test]

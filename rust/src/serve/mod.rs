@@ -7,16 +7,18 @@
 //! [`crate::store`] registry), then any number of concurrent trainers /
 //! HPO trials connect and draw deterministic subset streams from it.
 //!
-//! The server is a **single poll-based event loop** over nonblocking TCP
-//! (no async runtime is vendored offline; readiness comes straight from
-//! `poll(2)` on Linux — see the private `event` module): one thread owns
-//! a registry of connections
-//! keyed by token, each with its own read/write buffers, so thousands of
-//! mostly-idle trainer connections cost a few KB apiece instead of an OS
-//! thread. One server process can serve **multiple `(dataset, fraction)`
-//! metadata entries** ([`SubsetServer::bind_multi`], `milo serve
-//! --datasets a,b --fractions 0.1,0.3`); a connection binds to one entry
-//! at `HELLO` and draws from it until the next `HELLO`.
+//! The server is a **single event loop** over nonblocking TCP (no async
+//! runtime is vendored offline; readiness comes from a stateful
+//! [`event::Poller`] — **epoll** on Linux, with `poll(2)` and a portable
+//! sleep as fallback tiers, so per-tick cost scales with socket
+//! *activity*, not with the total connection count): one thread owns a
+//! registry of connections keyed by token, each with its own read/write
+//! buffers, so thousands of mostly-idle trainer connections cost a few KB
+//! apiece instead of an OS thread. One server process can serve
+//! **multiple `(dataset, fraction)` metadata entries**
+//! ([`SubsetServer::bind_multi`], `milo serve --datasets a,b --fractions
+//! 0.1,0.3`); each logical session binds to one entry at `HELLO` and
+//! draws from it until its next `HELLO`.
 //!
 //! # Wire formats
 //!
@@ -31,6 +33,48 @@
 //! artifact bytes (checksum included — a served document is byte-identical
 //! to the on-disk artifact), and protocol errors are `ERROR` frames.
 //!
+//! # Stream multiplexing
+//!
+//! On the frame wire, the header's spare bits carry a **stream id**
+//! (0–31, see [`frame`]): one TCP connection multiplexes up to
+//! [`frame::MAX_STREAMS`] logical sessions. Stream 0 is the connection's
+//! default session (byte-identical to the pre-multiplexing wire, so
+//! proto-2 clients interoperate unchanged); a client opens stream `N > 0`
+//! by sending `HELLO` on it — each stream then holds an independent
+//! session (its own client id, `(dataset, fraction)` entry binding,
+//! deterministic cursors, and subscription), and every response/push
+//! frame travels on the stream that asked for it. Per-stream rules:
+//!
+//! * the wire format is a **connection** property: only a stream-0
+//!   `HELLO` may switch it (a nonzero-stream `HELLO` naming a different
+//!   wire is an error);
+//! * `SUBSCRIBE` subscribes **the stream**, not the socket — the
+//!   `serve.subscribers` gauge counts subscribed streams, and an epoch
+//!   push burst is delivered once per subscribed stream bound to the
+//!   published entry (same payload bytes, per-stream headers);
+//! * `GOODBYE` on stream `N > 0` tears down that session only (its
+//!   subscription included) and the connection lives on; `GOODBYE` on
+//!   stream 0 closes the whole connection, every session with it.
+//!
+//! [`ServeClient`] exposes this through a shared
+//! [`client::ConnectionPool`]: a fleet of [`crate::session::MiloSession`]
+//! trainers hands each client one pooled stream instead of one socket —
+//! byte-identical payloads at a fraction of the fd budget.
+//!
+//! # Fairness
+//!
+//! The loop bounds per-connection work per tick: outbound bytes flush in
+//! bounded **write quanta** and inbound bytes are read in bounded **read
+//! quanta**, with ready connections serviced in round-robin rotation. A
+//! multi-MB `GET_META` (or an epoch push burst, or a chatty pipeliner)
+//! therefore spreads across ticks instead of monopolizing the loop, and
+//! other clients' small-request latency stays bounded (asserted by
+//! `rust/tests/serve_fairness.rs`). Buffers that ballooned for one burst
+//! are shrunk back under a threshold once flushed, so a burst sets no
+//! permanent per-connection memory high-water (the `serve.buffer_bytes`
+//! gauge tracks currently-held capacity; `serve.wbuf_high_water` keeps
+//! the historical peak).
+//!
 //! Hot-path responses never re-encode on the event-loop thread:
 //! `NEXT_SUBSET` frames are written straight from the entry's stored
 //! subset slice into the connection's write buffer (no per-request clone
@@ -44,13 +88,13 @@
 //!
 //! | request | response |
 //! |---|---|
-//! | `{"cmd":"HELLO","client":"<id>","wire":"json"\|"frame","dataset":…,"fraction":…,"resume":{"sge":N,"wre_ks":[…]}}` | `{"ok":true,"server":"milo-serve","proto":2,"dataset":…,"fraction":…,"seed":…,"seed_hex":…,"n_sge_subsets":…,"n_entries":…,"wire":…}` — binds this connection to client id `<id>` and a served entry (`dataset`/`fraction` optional; default = the first entry, entries searched in registration order), (re)starts its deterministic streams, optionally fast-forwards them past draws a reconnecting client already consumed (`resume`), and switches the wire format. `seed_hex` is the exact stream seed (the numeric `seed` rounds above 2^53) |
+//! | `{"cmd":"HELLO","client":"<id>","wire":"json"\|"frame","dataset":…,"fraction":…,"resume":{"sge":N,"wre_ks":[…]}}` | `{"ok":true,"server":"milo-serve","proto":3,"dataset":…,"fraction":…,"seed":…,"seed_hex":…,"n_sge_subsets":…,"n_entries":…,"wire":…}` — binds this connection to client id `<id>` and a served entry (`dataset`/`fraction` optional; default = the first entry, entries searched in registration order), (re)starts its deterministic streams, optionally fast-forwards them past draws a reconnecting client already consumed (`resume`), and switches the wire format. `seed_hex` is the exact stream seed (the numeric `seed` rounds above 2^53) |
 //! | `{"cmd":"GET_META"}` | the bound entry's full metadata document (JSON schema of `save_metadata`, or a binfmt `META` frame) |
 //! | `{"cmd":"NEXT_SUBSET"}` | the next SGE subset in this client's cycle with its cycle `index` |
 //! | `{"cmd":"SAMPLE_WRE","k":K}` | a fresh size-K WRE draw from this client's seeded stream |
-//! | `{"cmd":"SUBSCRIBE"}` | `{"ok":true,"subscribed":true,"epoch":…,"n_subsets":…}` — frame wire only; this connection now receives push frames on every epoch publish (see *Epoch versioning* below) |
+//! | `{"cmd":"SUBSCRIBE"}` | `{"ok":true,"subscribed":true,"epoch":…,"n_subsets":…}` — frame wire only; the requesting **stream** now receives push frames on every epoch publish (see *Epoch versioning* below) |
 //! | `{"cmd":"STATS"}` | serving + store telemetry (see *STATS reply* below) |
-//! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`, then the server closes the connection and reclaims its slot |
+//! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`; on stream 0 the server then closes the connection and reclaims its slot, on stream `N > 0` only that stream's session is torn down |
 //! | `{"cmd":"PING"}` | `{"ok":true}` |
 //!
 //! # Epoch versioning and push frames
@@ -64,23 +108,25 @@
 //! * the entry's metadata, pre-encoded `GET_META` bytes, and epoch number
 //!   are swapped atomically (epochs must be strictly increasing; epoch 0
 //!   is the bind-time state and stale publishes are dropped);
-//! * every **subscribed** connection bound to that entry receives one
+//! * every **subscribed stream** bound to that entry receives one
 //!   `EPOCH_ADVANCE` frame (new epoch + SGE subset count) followed
 //!   contiguously by one `SUBSET_DELTA` frame per SGE subset (index =
 //!   cycle position) plus one for the fixed disparity-min subset (index =
 //!   [`frame::NO_INDEX`]) — each delta carries the subset's **full new
-//!   contents**, so a follower never needs a read-back request;
+//!   contents**, so a follower never needs a read-back request; the burst
+//!   is encoded once per publish and replayed per stream with only the
+//!   header's stream bits rewritten;
 //! * sessions bound to the entry switch streams at the epoch boundary:
 //!   the next request after a publish re-derives the connection's SGE
 //!   cursor and WRE stream for the new epoch (see *Determinism* below),
 //!   so a trainer that keeps drawing simply crosses over.
 //!
 //! `SUBSCRIBE` requires the binary frame wire (push payloads are binary);
-//! a `HELLO` (re-bind) cancels the subscription, and a subscribed
-//! connection that says `GOODBYE` — or is torn down for overshooting the
-//! outbound-buffer cap, or disconnects abruptly — is removed from the
-//! subscriber set before the next broadcast, so a push can never write
-//! into a reclaimed slot. Trainers that only ever poll (`NEXT_SUBSET`)
+//! a `HELLO` (re-bind) on a stream cancels that stream's subscription,
+//! and a subscribed stream that says `GOODBYE` — or whose connection is
+//! torn down for overshooting the outbound-buffer cap, or disconnects
+//! abruptly — is removed from the subscriber set before the next
+//! broadcast, so a push can never write into a reclaimed slot. Trainers that only ever poll (`NEXT_SUBSET`)
 //! need none of this: polling sessions follow the head epoch implicitly.
 //!
 //! Followers that pin instead of following resolve artifacts through the
@@ -98,12 +144,14 @@
 //!   fd exhaustion), `wbuf_teardowns` (connections killed for
 //!   overshooting the outbound-buffer cap), `push_frames` (push frames
 //!   broadcast to subscribers across all epoch publishes), and
-//!   `subscribers` (connections currently subscribed — a gauge, like
+//!   `subscribers` (streams currently subscribed — a gauge, like
 //!   `open_connections`), so slow-reader kills, accept backoff, and push
 //!   fan-out are diagnosable instead of silent;
 //! * `"metrics"` — the server's full [`crate::obs::MetricsRegistry`]
 //!   rendered to JSON: every counter above under its `serve.*` name, the
-//!   `serve.wbuf_high_water` gauge, and histogram summaries
+//!   `serve.wbuf_high_water` and `serve.buffer_bytes` gauges (historical
+//!   peak vs currently-held buffer capacity — see *Fairness* above), and
+//!   histogram summaries
 //!   (`count`/`p50_us`/`p95_us`/`p99_us`/`max_us`/`mean_us`/`saturated`)
 //!   for per-frame-type request latency
 //!   (`serve.request_latency_ns.<hello|get_meta|next_subset|sample_wre|stats|ping|goodbye|other>`)
@@ -112,7 +160,10 @@
 //!   [`MetaStore`]'s metrics (counters + hit/disk-load/build latency
 //!   histograms), or `null` when serving without a store;
 //! * `"entries"`, `"dataset"`, `"client"` — the served entry list and
-//!   this connection's binding.
+//!   this session's binding;
+//! * `"readiness"` — the event loop's readiness tier (`"epoll"`,
+//!   `"poll"`, or `"fallback"`), so deployments can confirm the epoll
+//!   path is actually in use.
 //!
 //! # Metrics exposition (`--metrics-addr`)
 //!
@@ -167,8 +218,8 @@ pub(crate) mod event;
 pub mod frame;
 
 pub use client::{
-    ClientOptions, EpochUpdate, FollowStream, RetryPolicy, ServeClient,
-    ServedMiloStrategy,
+    ClientOptions, ConnectionPool, EpochUpdate, FollowStream, RetryPolicy,
+    ServeClient, ServedMiloStrategy,
 };
 pub use frame::{Frame, FrameDecoder};
 
@@ -190,8 +241,10 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Wire-protocol version, bumped on incompatible changes. v2 = binary
-/// frame negotiation + multi-entry routing + `GOODBYE`.
-pub const PROTO_VERSION: u32 = 2;
+/// frame negotiation + multi-entry routing + `GOODBYE`; v3 = stream-id
+/// multiplexing (per-stream sessions/subscriptions — stream 0 stays
+/// byte-compatible with v2).
+pub const PROTO_VERSION: u32 = 3;
 
 /// Ceiling on a single buffered request (line or partial frame) — a
 /// misbehaving client must not grow server memory without bound.
@@ -207,6 +260,30 @@ const MAX_WBUF_BYTES: usize = 64 << 20;
 /// Poll timeout: bounds shutdown latency, not request latency (readiness
 /// wakes the loop immediately).
 const POLL_TIMEOUT_MS: i32 = 50;
+
+/// Per-connection, per-tick bound on outbound flush bytes. Large
+/// responses (a multi-MB `GET_META`, an epoch push burst) drain in
+/// quanta, round-robin with every other ready connection, so one bulk
+/// transfer cannot monopolize the loop and inflate small-request latency.
+const WRITE_QUANTUM: usize = 256 << 10;
+
+/// Per-connection, per-tick bound on inbound read bytes — a pipeliner
+/// blasting requests is serviced fairly, not exhaustively. Level-
+/// triggered readiness re-reports the socket next tick, so nothing is
+/// lost by stopping early.
+const READ_QUANTUM: usize = 256 << 10;
+
+/// Buffer capacity a connection may keep between bursts. After a flush
+/// (or a drained request), rbuf/wbuf/decoder capacity above this is
+/// returned to the allocator — one multi-MB burst must not pin its
+/// high-water allocation per connection forever (fatal at fleet scale).
+const BUF_KEEP_BYTES: usize = 64 << 10;
+
+/// How long accepts stay paused after a persistent `accept` failure
+/// (e.g. EMFILE): the listener's readiness interest is dropped for this
+/// window — established connections keep being served at full speed —
+/// then accepting resumes.
+const ACCEPT_PAUSE_MS: u64 = 50;
 
 /// Hard ceiling on the `resume.wre_ks` fast-forward list a single `HELLO`
 /// may carry. The effective per-entry cap is work-based — each replayed
@@ -313,8 +390,13 @@ pub struct ServeStats {
     /// Push frames (`EPOCH_ADVANCE` + `SUBSET_DELTA`) broadcast to
     /// subscribers across all epoch publishes.
     pub push_frames: u64,
-    /// Connections currently subscribed to push frames (a gauge).
+    /// Streams currently subscribed to push frames (a gauge; one
+    /// multiplexed connection can hold several).
     pub subscribers: u64,
+    /// Total rbuf+wbuf+decoder capacity currently held across live
+    /// connections (a gauge — goes back down when post-flush shrinking
+    /// releases a burst's allocation).
+    pub buffer_bytes: u64,
 }
 
 /// Request commands instrumented with a per-frame-type latency histogram
@@ -360,6 +442,10 @@ struct ServeMetrics {
     metrics_scrapes: Counter,
     /// Largest unflushed outbound buffer observed on any connection.
     wbuf_high_water: Gauge,
+    /// Total rbuf+wbuf+decoder capacity currently held across live
+    /// connections — unlike the high-water mark this goes back *down*
+    /// when post-flush shrinking releases a burst's allocation.
+    buffer_bytes: Gauge,
     /// Time spent blocked in `poll(2)` per event-loop tick.
     tick_poll: Arc<Histogram>,
     /// Time spent accepting/reading/dispatching/writing per tick.
@@ -386,6 +472,7 @@ impl ServeMetrics {
             subscribers: registry.gauge("serve.subscribers"),
             metrics_scrapes: registry.counter("serve.metrics_scrapes"),
             wbuf_high_water: registry.gauge("serve.wbuf_high_water"),
+            buffer_bytes: registry.gauge("serve.buffer_bytes"),
             tick_poll: registry.histogram("serve.tick_poll_ns"),
             tick_dispatch: registry.histogram("serve.tick_dispatch_ns"),
             req_latency: std::array::from_fn(|i| {
@@ -467,6 +554,9 @@ struct Shared {
     store: Option<MetaStore>,
     shutdown: AtomicBool,
     metrics: ServeMetrics,
+    /// Readiness tier the event loop landed on (`"epoll"` / `"poll"` /
+    /// `"fallback"`), set once by the loop thread; reported by `STATS`.
+    backend: std::sync::OnceLock<&'static str>,
 }
 
 impl Shared {
@@ -485,6 +575,7 @@ impl Shared {
             wbuf_teardowns: m.wbuf_teardowns.get(),
             push_frames: m.push_frames.get(),
             subscribers: m.subscribers.get(),
+            buffer_bytes: m.buffer_bytes.get(),
         }
     }
 }
@@ -585,6 +676,7 @@ impl SubsetServer {
             store,
             shutdown: AtomicBool::new(false),
             metrics: ServeMetrics::new(),
+            backend: std::sync::OnceLock::new(),
         });
         let loop_shared = shared.clone();
         let event_loop = std::thread::spawn(move || {
@@ -696,14 +788,18 @@ impl SubsetServer {
         }
     }
 
-    /// Stop the event loop and join it. Open connections are closed.
-    pub fn shutdown(mut self) {
+    /// Stop the event loop and join it. Open connections are closed and
+    /// every gauge contribution they held (slots, stream subscriptions,
+    /// buffer capacity) is drained; the returned post-shutdown counters
+    /// let callers assert nothing leaked.
+    pub fn shutdown(mut self) -> ServeStats {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         // Unblock the poll with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.event_loop.take() {
             let _ = h.join();
         }
+        self.shared.stats()
     }
 }
 
@@ -720,40 +816,75 @@ fn event_loop(
         eprintln!("[serve] listener set_nonblocking failed; server exiting");
         return;
     }
-    let mut listener_ids = vec![event::listener_id(&listener)];
-    if let Some(ml) = &metrics_listener {
-        if ml.set_nonblocking(true).is_err() {
-            eprintln!("[serve] metrics listener set_nonblocking failed; server exiting");
-            return;
+    let proto_lid = event::listener_id(&listener);
+    let mut poller = event::Poller::new();
+    let _ = shared.backend.set(poller.backend());
+    poller.add(proto_lid, event::Interest { read: true, write: false });
+    let metrics_lid = match &metrics_listener {
+        Some(ml) => {
+            if ml.set_nonblocking(true).is_err() {
+                eprintln!(
+                    "[serve] metrics listener set_nonblocking failed; server exiting"
+                );
+                return;
+            }
+            let lid = event::listener_id(ml);
+            poller.add(lid, event::Interest { read: true, write: false });
+            Some(lid)
         }
-        listener_ids.push(event::listener_id(ml));
-    }
+        None => None,
+    };
     let mut conns: HashMap<usize, Conn> = HashMap::new();
+    // socket → token: the poller reports readiness by socket id
+    let mut by_fd: HashMap<event::SockId, usize> = HashMap::new();
     let mut next_token: usize = 0;
+    let mut events: Vec<(event::SockId, event::Ready)> = Vec::new();
+    // while Some, listeners have their read interest dropped and no
+    // accepts happen — the non-blocking EMFILE backoff (established
+    // connections keep being served; nothing sleeps on this thread)
+    let mut accept_paused_until: Option<Instant> = None;
+    // round-robin offset so ready connections take turns going first
+    let mut rr: usize = 0;
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // apply queued epoch publishes before building the poll set, so
+        // apply queued epoch publishes before refreshing interest, so
         // broadcast bytes get their write interest registered this tick
         apply_pending(&shared, &mut conns);
-        let tokens: Vec<usize> = conns.keys().copied().collect();
-        let poll_set: Vec<(event::SockId, event::Interest)> = tokens
-            .iter()
-            .map(|t| {
-                let c = &conns[t];
-                let interest = event::Interest {
-                    // stop reading a client whose responses are backed up
-                    // (outbound cap) — TCP backpressure does the rest
-                    read: !c.closing && c.wbuf.len() - c.wpos < MAX_WBUF_BYTES,
-                    write: c.wpos < c.wbuf.len(),
-                };
-                (c.id, interest)
-            })
-            .collect();
+        // re-target only the connections whose interest actually changed
+        // (the poller registration is stateful — this is what keeps a
+        // tick O(activity) instead of O(connections) on the epoll tier)
+        for c in conns.values_mut() {
+            let interest = event::Interest {
+                // stop reading a client whose responses are backed up
+                // (outbound cap) — TCP backpressure does the rest
+                read: !c.closing && c.wbuf.len() - c.wpos < MAX_WBUF_BYTES,
+                write: c.wpos < c.wbuf.len(),
+            };
+            if (interest.read, interest.write) != c.last_interest {
+                poller.modify(c.id, interest);
+                c.last_interest = (interest.read, interest.write);
+            }
+        }
+        // resume accepting once the pause window has elapsed
+        let mut timeout_ms = POLL_TIMEOUT_MS;
+        if let Some(deadline) = accept_paused_until {
+            let now = Instant::now();
+            if now >= deadline {
+                accept_paused_until = None;
+                poller.modify(proto_lid, event::Interest { read: true, write: false });
+                if let Some(lid) = metrics_lid {
+                    poller.modify(lid, event::Interest { read: true, write: false });
+                }
+            } else {
+                // wake no later than the pause deadline
+                let left = deadline.duration_since(now).as_millis() as i32;
+                timeout_ms = timeout_ms.min(left.max(1));
+            }
+        }
         let t_poll = crate::obs::enabled().then(Instant::now);
-        let (listeners_ready, ready) =
-            event::wait(&listener_ids, &poll_set, POLL_TIMEOUT_MS);
+        poller.wait(timeout_ms, &mut events);
         if let Some(t) = t_poll {
             shared.metrics.tick_poll.record_duration(t.elapsed());
         }
@@ -761,16 +892,57 @@ fn event_loop(
             break; // don't accept the shutdown wake-up connection
         }
         let t_dispatch = crate::obs::enabled().then(Instant::now);
-        if listeners_ready[0] {
-            accept_new(&listener, &mut conns, &mut next_token, &shared, ConnKind::Proto);
+        // fairness: rotate which ready socket is serviced first, so a
+        // connection with a large quantum-bounded flush cannot sit at a
+        // fixed position ahead of everyone else tick after tick
+        if events.len() > 1 {
+            let n = events.len();
+            events.rotate_left(rr % n);
+            rr = rr.wrapping_add(1);
         }
-        if let Some(ml) = &metrics_listener {
-            if listeners_ready[1] {
-                accept_new(ml, &mut conns, &mut next_token, &shared, ConnKind::Metrics);
+        for i in 0..events.len() {
+            let (fd, r) = events[i];
+            if fd == proto_lid || Some(fd) == metrics_lid {
+                if accept_paused_until.is_none() {
+                    let (l, kind) = if fd == proto_lid {
+                        (&listener, ConnKind::Proto)
+                    } else {
+                        (
+                            metrics_listener
+                                .as_ref()
+                                .expect("metrics lid implies listener"),
+                            ConnKind::Metrics,
+                        )
+                    };
+                    accept_paused_until = accept_new(
+                        l,
+                        &mut conns,
+                        &mut by_fd,
+                        &mut next_token,
+                        &shared,
+                        &mut poller,
+                        kind,
+                    );
+                    if accept_paused_until.is_some() {
+                        // a fresh pause: drop listener interest so the
+                        // ready backlog stops waking the loop for the
+                        // pause window (resumed above after the deadline)
+                        poller.modify(
+                            proto_lid,
+                            event::Interest { read: false, write: false },
+                        );
+                        if let Some(lid) = metrics_lid {
+                            poller.modify(
+                                lid,
+                                event::Interest { read: false, write: false },
+                            );
+                        }
+                    }
+                }
+                continue;
             }
-        }
-        for (t, r) in tokens.iter().zip(ready) {
-            let Some(conn) = conns.get_mut(t) else { continue };
+            let Some(&t) = by_fd.get(&fd) else { continue };
+            let Some(conn) = conns.get_mut(&t) else { continue };
             // read before honouring an error condition: a peer that sent
             // GOODBYE and hung up still gets its goodbye processed (the
             // read itself surfaces the reset if the data is gone)
@@ -786,34 +958,43 @@ fn event_loop(
             if conn.closing && conn.wpos >= conn.wbuf.len() {
                 conn.dead = true;
             }
-        }
-        conns.retain(|_, c| {
-            if c.dead {
-                shared.metrics.open_connections.dec(1);
-                // a dead subscriber (abrupt disconnect, wbuf teardown)
-                // leaves the subscriber set with its slot — the next
-                // broadcast must never write into reclaimed state
-                if c.subscribed {
-                    shared.metrics.subscribers.dec(1);
-                }
+            if !conn.dead {
+                conn.account_buffers(&shared);
             }
-            !c.dead
-        });
+        }
+        // sweep dead connections: deregister from the poller *before*
+        // the fd closes (a recycled fd must not inherit stale events),
+        // and return every gauge contribution — slot, per-stream
+        // subscriptions, buffer capacity
+        let dead: Vec<usize> =
+            conns.iter().filter(|(_, c)| c.dead).map(|(t, _)| *t).collect();
+        for t in dead {
+            let mut conn = conns.remove(&t).expect("dead token present");
+            poller.remove(conn.id);
+            by_fd.remove(&conn.id);
+            conn.release_gauges(&shared);
+        }
         if let Some(t) = t_dispatch {
             shared.metrics.tick_dispatch.record_duration(t.elapsed());
         }
     }
-    let remaining = conns.len() as u64;
-    if remaining > 0 {
-        shared.metrics.open_connections.dec(remaining);
+    // shutdown: drain *all* gauges for the connections still open — the
+    // slot gauge and every remaining stream subscription (leaking
+    // `serve.subscribers` here would poison restarts that reuse the
+    // registry snapshot for monitoring)
+    for (_, mut conn) in conns.drain() {
+        poller.remove(conn.id);
+        conn.release_gauges(&shared);
     }
 }
 
 /// Swap in queued epoch publishes and broadcast each one's push burst to
-/// the subscribed connections bound to the entry. Runs on the event-loop
+/// every subscribed stream bound to the entry. Runs on the event-loop
 /// thread between ticks, so requests never observe a half-applied
 /// publish; skips `closing`/`dead` connections (a `GOODBYE` already
-/// cleared their subscription — pushes never target a reclaimed slot).
+/// cleared their subscriptions — pushes never target a reclaimed slot).
+/// The burst is encoded once per publish; per-stream delivery rewrites
+/// only the frame headers' stream bits.
 fn apply_pending(shared: &Arc<Shared>, conns: &mut HashMap<usize, Conn>) {
     let pending: Vec<PendingPublish> =
         std::mem::take(&mut *shared.pending.lock().expect("pending lock"));
@@ -826,19 +1007,29 @@ fn apply_pending(shared: &Arc<Shared>, conns: &mut HashMap<usize, Conn>) {
             *st = p.state;
         }
         for conn in conns.values_mut() {
-            if conn.kind != ConnKind::Proto
-                || !conn.subscribed
-                || conn.dead
-                || conn.closing
-                || conn.session.entry != p.entry
-            {
+            if conn.kind != ConnKind::Proto || conn.dead || conn.closing {
                 continue;
             }
-            conn.wbuf.extend_from_slice(&p.burst);
-            shared.metrics.push_frames.add(p.n_frames);
+            for si in 0..conn.sessions.len() {
+                let (stream, ref session) = conn.sessions[si];
+                if !session.subscribed || session.entry != p.entry {
+                    continue;
+                }
+                if stream == 0 {
+                    conn.wbuf.extend_from_slice(&p.burst);
+                } else if frame::restream_frames(&p.burst, &mut conn.wbuf, stream)
+                    .is_err()
+                {
+                    // the burst was validated at publish; an error here
+                    // means corruption — kill the conn, never the loop
+                    conn.dead = true;
+                    break;
+                }
+                shared.metrics.push_frames.add(p.n_frames);
+            }
             if conn.wbuf.len() - conn.wpos > MAX_WBUF_BYTES {
                 // a subscriber that stopped reading: tear it down (the
-                // sweep below reclaims its subscription) rather than let
+                // sweep reclaims its subscriptions) rather than let
                 // epoch bursts grow server memory without bound
                 shared.metrics.wbuf_teardowns.inc();
                 conn.dead = true;
@@ -847,13 +1038,20 @@ fn apply_pending(shared: &Arc<Shared>, conns: &mut HashMap<usize, Conn>) {
     }
 }
 
+/// Accept every pending connection. Returns `Some(deadline)` when a
+/// persistent error (e.g. EMFILE under fd exhaustion) should pause
+/// accepting until then — the caller drops listener interest for the
+/// window instead of sleeping, so established connections keep being
+/// served while the storm lasts.
 fn accept_new(
     listener: &TcpListener,
     conns: &mut HashMap<usize, Conn>,
+    by_fd: &mut HashMap<event::SockId, usize>,
     next_token: &mut usize,
     shared: &Arc<Shared>,
+    poller: &mut event::Poller,
     kind: ConnKind,
-) {
+) -> Option<Instant> {
     loop {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -865,19 +1063,29 @@ fn accept_new(
                 shared.metrics.open_connections.inc();
                 let token = *next_token;
                 *next_token += 1;
-                conns.insert(token, Conn::new(stream, shared, kind));
+                let conn = Conn::new(stream, shared, kind);
+                poller.add(
+                    conn.id,
+                    event::Interest {
+                        read: conn.last_interest.0,
+                        write: conn.last_interest.1,
+                    },
+                );
+                by_fd.insert(conn.id, token);
+                conns.insert(token, conn);
             }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return None,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => {
-                // a persistent error (e.g. EMFILE under fd exhaustion)
-                // leaves the backlog poll-ready forever — back off briefly
-                // so the loop doesn't hot-spin and flood stderr, and count
+                // a persistent error leaves the backlog poll-ready
+                // forever — pause accepts (non-blocking: the event loop
+                // drops listener interest until the deadline) and count
                 // it so the backoff is visible in STATS instead of silent
                 shared.metrics.accept_errors.inc();
-                eprintln!("[serve] accept error: {e}");
-                std::thread::sleep(std::time::Duration::from_millis(50));
-                break;
+                eprintln!("[serve] accept error: {e}; pausing accepts {ACCEPT_PAUSE_MS}ms");
+                return Some(
+                    Instant::now() + std::time::Duration::from_millis(ACCEPT_PAUSE_MS),
+                );
             }
         }
     }
@@ -892,7 +1100,7 @@ enum ConnKind {
 }
 
 /// One registered connection: nonblocking stream + read/write buffers +
-/// negotiated wire format + deterministic stream state.
+/// negotiated wire format + per-stream deterministic session state.
 struct Conn {
     stream: TcpStream,
     id: event::SockId,
@@ -905,15 +1113,21 @@ struct Conn {
     wbuf: Vec<u8>,
     wpos: usize,
     wire: WireMode,
-    session: Session,
-    /// Receives push frames on epoch publishes (set by `SUBSCRIBE`,
-    /// cleared by `HELLO`/`GOODBYE` and on teardown).
-    subscribed: bool,
-    /// Flush the write buffer, then close (set by `GOODBYE` / protocol
-    /// errors).
+    /// Logical sessions keyed by stream id (stream 0 always present —
+    /// the connection's default session; streams `N > 0` open on their
+    /// first `HELLO`). Linear search: real fleets run a handful of
+    /// streams per socket, far below [`frame::MAX_STREAMS`].
+    sessions: Vec<(u8, Session)>,
+    /// Flush the write buffer, then close (set by a stream-0 `GOODBYE` /
+    /// protocol errors).
     closing: bool,
     /// Tear down on the next sweep.
     dead: bool,
+    /// `(read, write)` interest last registered with the poller — the
+    /// loop calls `modify` only when this changes.
+    last_interest: (bool, bool),
+    /// Buffer capacity last reported into the `serve.buffer_bytes` gauge.
+    reported_cap: usize,
 }
 
 impl Conn {
@@ -928,22 +1142,53 @@ impl Conn {
             wbuf: Vec::new(),
             wpos: 0,
             wire: WireMode::Json,
-            session: Session::new("anon", 0, shared),
-            subscribed: false,
+            sessions: vec![(0, Session::new("anon", 0, shared))],
             closing: false,
             dead: false,
+            last_interest: (true, false),
+            reported_cap: 0,
         }
+    }
+
+    fn session_mut(&mut self, stream: u8) -> Option<&mut Session> {
+        self.sessions.iter_mut().find(|(s, _)| *s == stream).map(|(_, s)| s)
+    }
+
+    /// Resolve the session for `stream`, opening it if this is its
+    /// `HELLO`. A request on an unopened nonzero stream is an error —
+    /// multiplexed sessions are HELLO-negotiated.
+    fn session_index(
+        &mut self,
+        stream: u8,
+        is_hello: bool,
+        shared: &Shared,
+    ) -> Result<usize, String> {
+        if let Some(i) = self.sessions.iter().position(|(s, _)| *s == stream) {
+            return Ok(i);
+        }
+        if is_hello {
+            self.sessions.push((stream, Session::new("anon", 0, shared)));
+            return Ok(self.sessions.len() - 1);
+        }
+        Err(format!("stream {stream} has no session — open it with HELLO first"))
     }
 
     fn read_ready(&mut self, shared: &Shared) {
         let mut chunk = [0u8; 8192];
+        let mut taken = 0usize;
         loop {
+            if taken >= READ_QUANTUM {
+                // fairness: a pipeliner blasting requests yields the loop;
+                // level-triggered readiness re-reports the socket next tick
+                break;
+            }
             match self.stream.read(&mut chunk) {
                 Ok(0) => {
                     self.dead = true;
                     break;
                 }
                 Ok(n) => {
+                    taken += n;
                     shared.metrics.bytes_rx.add(n as u64);
                     match self.wire {
                         WireMode::Json => self.rbuf.extend_from_slice(&chunk[..n]),
@@ -965,8 +1210,13 @@ impl Conn {
     }
 
     fn write_ready(&mut self, shared: &Shared) {
-        while self.wpos < self.wbuf.len() {
-            match self.stream.write(&self.wbuf[self.wpos..]) {
+        // fairness: flush at most one quantum per tick, so a multi-MB
+        // response (META, push burst) drains round-robin with everyone
+        // else's traffic instead of monopolizing the loop
+        let mut budget = WRITE_QUANTUM;
+        while self.wpos < self.wbuf.len() && budget > 0 {
+            let end = self.wbuf.len().min(self.wpos + budget);
+            match self.stream.write(&self.wbuf[self.wpos..end]) {
                 Ok(0) => {
                     self.dead = true;
                     break;
@@ -974,6 +1224,7 @@ impl Conn {
                 Ok(n) => {
                     shared.metrics.bytes_tx.add(n as u64);
                     self.wpos += n;
+                    budget -= n;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
@@ -986,6 +1237,56 @@ impl Conn {
         if self.wpos >= self.wbuf.len() {
             self.wbuf.clear();
             self.wpos = 0;
+            // release the burst's capacity: clear() keeps the high-water
+            // allocation pinned per connection forever otherwise
+            if self.wbuf.capacity() > BUF_KEEP_BYTES {
+                self.wbuf.shrink_to(BUF_KEEP_BYTES);
+            }
+        } else if self.wpos >= WRITE_QUANTUM {
+            // quantum-bounded flushing leaves a growing flushed prefix;
+            // compact it so partial flushes don't grow the buffer without
+            // bound across ticks
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+
+    /// Shrink drained buffers back under [`BUF_KEEP_BYTES`] and reconcile
+    /// this connection's contribution to the `serve.buffer_bytes` gauge.
+    /// Called after each serviced tick and balanced by
+    /// [`Conn::release_gauges`] at teardown.
+    fn account_buffers(&mut self, shared: &Shared) {
+        if self.rbuf.capacity() > BUF_KEEP_BYTES && self.rbuf.len() <= BUF_KEEP_BYTES {
+            self.rbuf.shrink_to(BUF_KEEP_BYTES);
+        }
+        self.decoder.shrink(BUF_KEEP_BYTES);
+        let cap = self.rbuf.capacity() + self.wbuf.capacity() + self.decoder.capacity();
+        match cap.cmp(&self.reported_cap) {
+            std::cmp::Ordering::Greater => {
+                shared.metrics.buffer_bytes.add((cap - self.reported_cap) as u64)
+            }
+            std::cmp::Ordering::Less => {
+                shared.metrics.buffer_bytes.dec((self.reported_cap - cap) as u64)
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        self.reported_cap = cap;
+    }
+
+    /// Return every gauge contribution this connection holds: its open
+    /// slot, each subscribed stream, and its reported buffer capacity.
+    /// The one place teardown accounting lives — called from the dead
+    /// sweep and the shutdown drain, so neither path can leak a gauge.
+    fn release_gauges(&mut self, shared: &Shared) {
+        shared.metrics.open_connections.dec(1);
+        let subs =
+            self.sessions.iter().filter(|(_, s)| s.subscribed).count() as u64;
+        if subs > 0 {
+            shared.metrics.subscribers.dec(subs);
+        }
+        if self.reported_cap > 0 {
+            shared.metrics.buffer_bytes.dec(self.reported_cap as u64);
+            self.reported_cap = 0;
         }
     }
 
@@ -1013,6 +1314,7 @@ impl Conn {
                         if self.rbuf.len() > MAX_REQUEST_BYTES {
                             self.push_reply(
                                 Err("request line exceeds the size cap".to_string()),
+                                0,
                                 shared,
                             );
                             self.closing = true;
@@ -1024,23 +1326,25 @@ impl Conn {
                     if text.trim().is_empty() {
                         continue;
                     }
-                    self.dispatch(&text, shared);
+                    // the JSON wire has no stream field: always stream 0
+                    self.dispatch(&text, 0, shared);
                 }
-                WireMode::Frame => match self.decoder.next() {
+                WireMode::Frame => match self.decoder.next_with_stream() {
                     Ok(None) => {
                         if self.decoder.pending_bytes() > MAX_REQUEST_BYTES {
                             self.push_reply(
                                 Err("frame exceeds the size cap".to_string()),
+                                0,
                                 shared,
                             );
                             self.closing = true;
                         }
                         return;
                     }
-                    Ok(Some(Frame::Json(text))) => {
-                        self.dispatch(&text, shared);
+                    Ok(Some((stream, Frame::Json(text)))) => {
+                        self.dispatch(&text, stream, shared);
                     }
-                    Ok(Some(other)) => {
+                    Ok(Some((stream, other))) => {
                         // requests must be JSON frames; anything else is a
                         // protocol violation we cannot resynchronize from
                         self.push_reply(
@@ -1048,12 +1352,13 @@ impl Conn {
                                 "requests must be JSON frames, got {}",
                                 other.kind_name()
                             )),
+                            stream,
                             shared,
                         );
                         self.closing = true;
                     }
                     Err(e) => {
-                        self.push_reply(Err(format!("bad frame: {e:#}")), shared);
+                        self.push_reply(Err(format!("bad frame: {e:#}")), 0, shared);
                         self.closing = true;
                     }
                 },
@@ -1061,24 +1366,35 @@ impl Conn {
         }
     }
 
-    /// Handle one complete request (either wire): parse, dispatch, encode
-    /// the reply — recording the end-to-end latency into the per-frame-
-    /// type histogram and the outbound high-water mark.
-    fn dispatch(&mut self, text: &str, shared: &Shared) {
+    /// Handle one complete request on `stream` (either wire): parse,
+    /// dispatch against the stream's session, encode the reply —
+    /// recording the end-to-end latency into the per-frame-type histogram
+    /// and the outbound high-water mark.
+    fn dispatch(&mut self, text: &str, stream: u8, shared: &Shared) {
         shared.metrics.requests.inc();
         let t0 = crate::obs::enabled().then(Instant::now);
         let (slot, reply) = match Json::parse(text) {
             Ok(req) => {
-                let slot = req
-                    .opt("cmd")
-                    .and_then(|c| c.as_str().ok())
-                    .map(cmd_slot)
-                    .unwrap_or(CMD_OTHER);
-                (slot, handle_request(&req, &mut self.session, self.wire, shared))
+                let cmd = req.opt("cmd").and_then(|c| c.as_str().ok());
+                let slot = cmd.map(cmd_slot).unwrap_or(CMD_OTHER);
+                let is_hello = cmd == Some("HELLO");
+                match self.session_index(stream, is_hello, shared) {
+                    Ok(si) => (
+                        slot,
+                        handle_request(
+                            &req,
+                            &mut self.sessions[si].1,
+                            stream,
+                            self.wire,
+                            shared,
+                        ),
+                    ),
+                    Err(msg) => (slot, Err(msg)),
+                }
             }
             Err(e) => (CMD_OTHER, Err(format!("bad request json: {e:#}"))),
         };
-        self.push_reply(reply, shared);
+        self.push_reply(reply, stream, shared);
         if let Some(t0) = t0 {
             shared.metrics.req_latency[slot].record_duration(t0.elapsed());
         }
@@ -1117,28 +1433,36 @@ impl Conn {
         self.closing = true;
     }
 
-    fn push_reply(&mut self, reply: Result<Reply, String>, shared: &Shared) {
+    fn push_reply(&mut self, reply: Result<Reply, String>, stream: u8, shared: &Shared) {
         match reply {
-            Ok(Reply::Fields(fields)) => self.push_ok(fields),
+            Ok(Reply::Fields(fields)) => self.push_ok(stream, fields),
             Ok(Reply::Hello { fields, switch }) => {
-                // a re-bind cancels any subscription: the new entry (or
-                // identity) must opt in again explicitly
-                self.unsubscribe(shared);
                 // the HELLO response travels in the *old* wire format;
-                // everything after it speaks the negotiated one
-                self.push_ok(fields);
-                self.switch_wire(switch);
+                // everything after it speaks the negotiated one. (The
+                // re-bind already cancelled this stream's subscription in
+                // handle_request, where the old session was replaced; a
+                // nonzero-stream HELLO asking for a wire switch was
+                // rejected there before touching the session.)
+                self.push_ok(stream, fields);
+                if stream == 0 {
+                    self.switch_wire(switch);
+                }
             }
             Ok(Reply::Subscribed { epoch, n_subsets }) => {
-                if !self.subscribed {
-                    self.subscribed = true;
-                    shared.metrics.subscribers.inc();
+                if let Some(sess) = self.session_mut(stream) {
+                    if !sess.subscribed {
+                        sess.subscribed = true;
+                        shared.metrics.subscribers.inc();
+                    }
                 }
-                self.push_ok(vec![
-                    ("subscribed", Json::Bool(true)),
-                    ("epoch", Json::num(epoch as f64)),
-                    ("n_subsets", Json::num(n_subsets as f64)),
-                ]);
+                self.push_ok(
+                    stream,
+                    vec![
+                        ("subscribed", Json::Bool(true)),
+                        ("epoch", Json::num(epoch as f64)),
+                        ("n_subsets", Json::num(n_subsets as f64)),
+                    ],
+                );
             }
             Ok(Reply::Subset { index, subset }) => {
                 let subset = subset.as_slice();
@@ -1149,7 +1473,7 @@ impl Conn {
                             fields.push(("index", Json::num(index as f64)));
                         }
                         fields.push(("subset", indices_json(subset)));
-                        self.push_ok(fields);
+                        self.push_ok(stream, fields);
                     }
                     WireMode::Frame => {
                         // pre-validate so a pathological artifact degrades to a
@@ -1161,12 +1485,21 @@ impl Conn {
                             // encode straight from the (shared or freshly
                             // drawn) subset slice into the write buffer —
                             // no intermediate Frame/Vec<u8> per request
-                            frame::write_subset_frame_into(&mut self.wbuf, index, subset);
+                            frame::write_subset_frame_on(
+                                &mut self.wbuf,
+                                stream,
+                                index,
+                                subset,
+                            );
                         } else {
-                            self.push_frame(&Frame::Error(
-                                "subset does not fit a binary frame — use the JSON wire"
-                                    .to_string(),
-                            ));
+                            self.push_frame(
+                                stream,
+                                &Frame::Error(
+                                    "subset does not fit a binary frame — use the \
+                                     JSON wire"
+                                        .to_string(),
+                                ),
+                            );
                         }
                     }
                 }
@@ -1183,46 +1516,72 @@ impl Conn {
                 // path
                 WireMode::Frame => match &bin {
                     Some(bytes) => {
-                        frame::write_frame_into(&mut self.wbuf, frame::KIND_META, bytes);
+                        frame::write_frame_on(
+                            &mut self.wbuf,
+                            stream,
+                            frame::KIND_META,
+                            bytes,
+                        );
                     }
                     None => {
-                        self.push_frame(&Frame::Error(
-                            "metadata cannot travel as a META frame (not \
-                             binfmt-encodable or above the frame cap) — use \
-                             the JSON wire"
-                                .to_string(),
-                        ));
+                        self.push_frame(
+                            stream,
+                            &Frame::Error(
+                                "metadata cannot travel as a META frame (not \
+                                 binfmt-encodable or above the frame cap) — use \
+                                 the JSON wire"
+                                    .to_string(),
+                            ),
+                        );
                     }
                 },
             },
             Ok(Reply::Goodbye) => {
                 shared.metrics.goodbyes.inc();
-                // leave the subscriber set *now*: broadcasts between this
-                // goodbye and the flush-then-close sweep must not append
-                // push frames to a connection that said goodbye
-                self.unsubscribe(shared);
-                self.push_ok(vec![("goodbye", Json::Bool(true))]);
-                self.closing = true;
+                if stream == 0 {
+                    // whole-connection goodbye: leave the subscriber set
+                    // *now* — broadcasts between this goodbye and the
+                    // flush-then-close sweep must not append push frames
+                    // to a connection that said goodbye
+                    self.unsubscribe_all(shared);
+                    self.push_ok(stream, vec![("goodbye", Json::Bool(true))]);
+                    self.closing = true;
+                } else {
+                    // per-stream goodbye: tear down this session only
+                    // (subscription included); the connection and its
+                    // other streams live on
+                    if let Some(i) =
+                        self.sessions.iter().position(|(s, _)| *s == stream)
+                    {
+                        if self.sessions[i].1.subscribed {
+                            shared.metrics.subscribers.dec(1);
+                        }
+                        self.sessions.swap_remove(i);
+                    }
+                    self.push_ok(stream, vec![("goodbye", Json::Bool(true))]);
+                }
             }
             Err(msg) => match self.wire {
                 WireMode::Json => self.push_line(&err_response(&msg).to_string()),
-                WireMode::Frame => self.push_frame(&Frame::Error(msg)),
+                WireMode::Frame => self.push_frame(stream, &Frame::Error(msg)),
             },
         }
     }
 
-    fn unsubscribe(&mut self, shared: &Shared) {
-        if self.subscribed {
-            self.subscribed = false;
-            shared.metrics.subscribers.dec(1);
+    fn unsubscribe_all(&mut self, shared: &Shared) {
+        for (_, sess) in &mut self.sessions {
+            if sess.subscribed {
+                sess.subscribed = false;
+                shared.metrics.subscribers.dec(1);
+            }
         }
     }
 
-    fn push_ok(&mut self, fields: Vec<(&str, Json)>) {
+    fn push_ok(&mut self, stream: u8, fields: Vec<(&str, Json)>) {
         let doc = ok_response(fields).to_string();
         match self.wire {
             WireMode::Json => self.push_line(&doc),
-            WireMode::Frame => self.push_frame(&Frame::Json(doc)),
+            WireMode::Frame => self.push_frame(stream, &Frame::Json(doc)),
         }
     }
 
@@ -1231,8 +1590,8 @@ impl Conn {
         self.wbuf.push(b'\n');
     }
 
-    fn push_frame(&mut self, f: &Frame) {
-        self.wbuf.extend_from_slice(&f.encode());
+    fn push_frame(&mut self, stream: u8, f: &Frame) {
+        self.wbuf.extend_from_slice(&f.encode_on(stream));
     }
 
     fn switch_wire(&mut self, to: WireMode) {
@@ -1276,6 +1635,10 @@ struct Session {
     /// distribution copy.
     wre: Option<WreStrategy>,
     rng: Rng,
+    /// Whether this session's stream receives epoch push frames.
+    /// Per-stream, not per-socket: one multiplexed connection can carry
+    /// both subscribed and unsubscribed sessions.
+    subscribed: bool,
 }
 
 impl Session {
@@ -1299,6 +1662,7 @@ impl Session {
             wre: None,
             rng: client_stream_rng_at(seed, &meta, client, epoch),
             meta,
+            subscribed: false,
         }
     }
 
@@ -1311,7 +1675,11 @@ impl Session {
         let (epoch, meta) = shared.entries[self.entry].snapshot();
         if epoch != self.epoch {
             let client = std::mem::take(&mut self.client);
+            // crossing an epoch re-derives the streams, not the
+            // subscription — a subscribed stream stays subscribed
+            let subscribed = self.subscribed;
             *self = Session::at_epoch(&client, self.entry, epoch, meta, shared.seed);
+            self.subscribed = subscribed;
         }
     }
 }
@@ -1395,6 +1763,7 @@ fn find_entry(
 fn handle_request(
     request: &Json,
     session: &mut Session,
+    stream: u8,
     wire: WireMode,
     shared: &Shared,
 ) -> Result<Reply, String> {
@@ -1415,9 +1784,22 @@ fn handle_request(
                 None => wire,
                 Some(name) => WireMode::parse(name).map_err(|e| format!("{e:#}"))?,
             };
+            if stream != 0 && switch != wire {
+                // reject before touching the session: the wire format is a
+                // connection property negotiated on the default stream —
+                // multiplexed streams share the connection's framing layer
+                return Err("the wire format is negotiated on stream 0 only — \
+                            multiplexed streams speak the connection's wire"
+                    .to_string());
+            }
             let dataset = request.opt("dataset").and_then(|d| d.as_str().ok());
             let fraction = request.opt("fraction").and_then(|f| f.as_f64().ok());
             let entry = find_entry(shared, dataset, fraction)?;
+            // a re-bind cancels any subscription: the new entry (or
+            // identity) must opt in again explicitly
+            if session.subscribed {
+                shared.metrics.subscribers.dec(1);
+            }
             *session = Session::new(client, entry, shared);
             let meta = session.meta.clone();
             let meta = &*meta;
@@ -1596,6 +1978,10 @@ fn handle_request(
                     ("wbuf_teardowns", Json::num(s.wbuf_teardowns as f64)),
                     ("push_frames", Json::num(s.push_frames as f64)),
                     ("subscribers", Json::num(s.subscribers as f64)),
+                    (
+                        "readiness",
+                        Json::str(shared.backend.get().copied().unwrap_or("unknown")),
+                    ),
                     (
                         "dataset",
                         Json::str(shared.entries[session.entry].dataset.clone()),

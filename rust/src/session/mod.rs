@@ -15,7 +15,7 @@
 //!   |---|---|
 //!   | [`MetaSource::Inline`]  | run the configured preprocessing pipeline (kernel or feature-based) in-process — always a fresh pass |
 //!   | [`MetaSource::Store`]   | in-process LRU → on-disk binary artifact → build via the pipeline (once per fingerprint, across threads) |
-//!   | [`MetaSource::Remote`]  | `GET_META` from a running `milo serve` instance (binary frame wire by default — the exact binfmt artifact bytes — with reconnect/retry); never builds locally |
+//!   | [`MetaSource::Remote`]  | `GET_META` from a running `milo serve` instance (binary frame wire by default — the exact binfmt artifact bytes — with reconnect/retry); never builds locally. With [`MetaSource::remote_pooled`] every client the source creates is a multiplexed stream on a shared [`ConnectionPool`] connection instead of its own socket |
 //!
 //! * [`MiloSession`] — *who consumes it*. A typed builder binding a
 //!   runtime (optional — store/remote sources work without one), a
@@ -73,7 +73,10 @@ use crate::hpo::{HpoConfig, Tuner};
 use crate::kernel::SimilarityBackend;
 use crate::runtime::Runtime;
 use crate::selection::Strategy;
-use crate::serve::{ClientOptions, RetryPolicy, ServeClient, ServedMiloStrategy, WireMode};
+use crate::serve::{
+    ClientOptions, ConnectionPool, RetryPolicy, ServeClient, ServedMiloStrategy,
+    WireMode,
+};
 use crate::store::{MetaKey, MetaStore};
 use crate::train::{TrainConfig, TrainOutcome, Trainer};
 
@@ -105,6 +108,11 @@ pub enum MetaSource {
         /// Reconnect/retry policy for transport failures mid-resolution
         /// and mid-stream.
         retry: RetryPolicy,
+        /// When set (and the wire is [`WireMode::Frame`]), every client
+        /// this source creates is a multiplexed stream leased from this
+        /// shared [`ConnectionPool`] instead of its own socket — a
+        /// session fleet on one host then shares connections.
+        pool: Option<ConnectionPool>,
     },
 }
 
@@ -124,6 +132,7 @@ impl std::fmt::Debug for MetaSource {
                 expect_fraction,
                 wire,
                 retry,
+                pool,
             } => f
                 .debug_struct("Remote")
                 .field("addr", addr)
@@ -132,6 +141,7 @@ impl std::fmt::Debug for MetaSource {
                 .field("expect_fraction", expect_fraction)
                 .field("wire", wire)
                 .field("retry", retry)
+                .field("pooled", &pool.is_some())
                 .finish(),
         }
     }
@@ -166,6 +176,7 @@ impl MetaSource {
             expect_fraction: None,
             wire: WireMode::Frame,
             retry: RetryPolicy::default(),
+            pool: None,
         }
     }
 
@@ -185,7 +196,34 @@ impl MetaSource {
             expect_fraction: Some(fraction),
             wire: WireMode::Frame,
             retry: RetryPolicy::default(),
+            pool: None,
         }
+    }
+
+    /// A served source whose clients are multiplexed streams leased from
+    /// `pool`'s shared framed connections — N sessions (strategies,
+    /// followers, resolves) share sockets instead of dialing one each.
+    /// Same validation and retry semantics as [`MetaSource::remote`].
+    pub fn remote_pooled(pool: &ConnectionPool) -> MetaSource {
+        MetaSource::Remote {
+            addr: pool.addr().to_string(),
+            client_id: "milo_session".to_string(),
+            expect_seed: None,
+            expect_fraction: None,
+            wire: WireMode::Frame,
+            retry: RetryPolicy::default(),
+            pool: Some(pool.clone()),
+        }
+    }
+
+    /// Return this source with its clients routed through a shared
+    /// connection pool (no-op on local sources; pooling requires the
+    /// frame wire, so pair with the default [`WireMode::Frame`]).
+    pub fn with_pool(mut self, shared: &ConnectionPool) -> MetaSource {
+        if let MetaSource::Remote { pool, .. } = &mut self {
+            *pool = Some(shared.clone());
+        }
+        self
     }
 
     /// Return this source with the wire format swapped (no-op on local
@@ -318,6 +356,7 @@ impl MetaSource {
                 expect_fraction,
                 wire,
                 retry,
+                pool,
             } => {
                 // route to the right entry on a multi-dataset server: the
                 // HELLO names the dataset (and fraction, when expected), so
@@ -328,7 +367,7 @@ impl MetaSource {
                     fraction: *expect_fraction,
                     retry: *retry,
                 };
-                let mut client = ServeClient::connect_with(addr, client_id, opts)?;
+                let mut client = connect_remote(addr, pool, client_id, opts)?;
                 if let Some(seed) = expect_seed {
                     ensure!(
                         client.server_seed() == *seed,
@@ -357,6 +396,23 @@ impl MetaSource {
                 Ok(Arc::new(meta))
             }
         }
+    }
+}
+
+/// Dial a served source's client: a multiplexed stream leased from the
+/// shared pool when one is configured (frame wire only — the stream id
+/// lives in the frame header), else a dedicated socket.
+fn connect_remote(
+    addr: &str,
+    pool: &Option<ConnectionPool>,
+    client_id: &str,
+    opts: ClientOptions,
+) -> Result<ServeClient> {
+    match pool {
+        Some(pool) if opts.wire == WireMode::Frame => {
+            ServeClient::connect_pooled(pool, client_id, opts)
+        }
+        _ => ServeClient::connect_with(addr, client_id, opts),
     }
 }
 
@@ -566,14 +622,19 @@ impl<'a> MiloSession<'a> {
         kappa: f64,
     ) -> Result<ServedMiloStrategy> {
         match &self.source {
-            MetaSource::Remote { addr, wire, retry, .. } => {
+            MetaSource::Remote { addr, wire, retry, pool, .. } => {
                 let opts = ClientOptions {
                     wire: *wire,
                     dataset: Some(self.ds.name().to_string()),
                     fraction: Some(self.fraction),
                     retry: *retry,
                 };
-                ServedMiloStrategy::connect_with(addr, client_id, kappa, opts)
+                match pool {
+                    Some(pool) if *wire == WireMode::Frame => {
+                        ServedMiloStrategy::connect_pooled(pool, client_id, kappa, opts)
+                    }
+                    _ => ServedMiloStrategy::connect_with(addr, client_id, kappa, opts),
+                }
             }
             other => bail!(
                 "served_strategy needs a MetaSource::Remote source, this session \
@@ -591,14 +652,14 @@ impl<'a> MiloSession<'a> {
     /// [`ServeClient::follow`] / [`ServeClient::poll_push`].
     pub fn follow_client(&self, client_id: &str) -> Result<ServeClient> {
         match &self.source {
-            MetaSource::Remote { addr, retry, .. } => {
+            MetaSource::Remote { addr, retry, pool, .. } => {
                 let opts = ClientOptions {
                     wire: WireMode::Frame,
                     dataset: Some(self.ds.name().to_string()),
                     fraction: None,
                     retry: *retry,
                 };
-                let mut client = ServeClient::connect_with(addr, client_id, opts)?;
+                let mut client = connect_remote(addr, pool, client_id, opts)?;
                 client.subscribe()?;
                 Ok(client)
             }

@@ -1,0 +1,165 @@
+//! Accept-error regression test (the event-loop stall bugfix): when
+//! `accept(2)` fails — EMFILE under fd exhaustion is the classic — the
+//! server must **pause accepting** (drop the listener's readiness
+//! interest until a deadline) instead of sleeping on the event-loop
+//! thread. Established connections keep being served at full speed
+//! through the storm; the old behaviour (a blocking 50 ms sleep per
+//! accept error, retried every tick while the condition persists) froze
+//! every live session for the duration.
+//!
+//! The storm is real: the test lowers `RLIMIT_NOFILE` to exactly one fd
+//! of headroom, dials that fd away, and leaves the resulting connection
+//! in the listener's accept queue — every accept attempt then fails
+//! with EMFILE until the limit is restored. Linux-only (raw
+//! `setrlimit`, keeping the zero-dependency FFI discipline of
+//! `serve::event`); the pause logic itself is portable.
+
+#![cfg(target_os = "linux")]
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use milo::continual::{ContinualOptions, ContinualSelector};
+use milo::coordinator::Metadata;
+use milo::serve::{ClientOptions, ServeClient, SubsetServer, WireMode};
+use milo::testkit::random_embeddings;
+
+const SEED: u64 = 31;
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+const RLIMIT_NOFILE: i32 = 7;
+
+extern "C" {
+    fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+}
+
+/// Restores the saved fd limit on drop, so a failing assertion cannot
+/// leave the whole test process starved.
+struct FdLimitGuard {
+    saved: Rlimit,
+}
+
+impl FdLimitGuard {
+    fn lower_to(cur: u64) -> FdLimitGuard {
+        let mut saved = Rlimit { cur: 0, max: 0 };
+        assert_eq!(unsafe { getrlimit(RLIMIT_NOFILE, &mut saved) }, 0);
+        let lowered = Rlimit { cur, max: saved.max };
+        assert_eq!(unsafe { setrlimit(RLIMIT_NOFILE, &lowered) }, 0);
+        FdLimitGuard { saved }
+    }
+}
+
+impl Drop for FdLimitGuard {
+    fn drop(&mut self) {
+        let _ = unsafe { setrlimit(RLIMIT_NOFILE, &self.saved) };
+    }
+}
+
+/// Highest fd number currently open. `RLIMIT_NOFILE` bounds fd
+/// *numbers*, not counts — holes in the table would break count-based
+/// headroom arithmetic, so the storm instead caps just above this and
+/// then hogs every remaining slot explicitly.
+fn max_fd() -> u64 {
+    std::fs::read_dir("/proc/self/fd")
+        .unwrap()
+        .filter_map(|e| e.ok()?.file_name().into_string().ok()?.parse::<u64>().ok())
+        .max()
+        .expect("a process always has open fds")
+}
+
+fn tiny_meta() -> Arc<Metadata> {
+    let mut opts = ContinualOptions::new("storm");
+    opts.seed = SEED;
+    opts.knn = Some(4);
+    let mut sel = ContinualSelector::new(opts);
+    let z = random_embeddings(30, 6, 19);
+    for i in 0..30 {
+        sel.arrive(i % 3, z.row(i)).unwrap();
+    }
+    let (meta, _) = sel.advance_epoch().unwrap();
+    Arc::new(meta)
+}
+
+fn wait_until(cond: impl Fn() -> bool, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn established_clients_stay_served_through_an_emfile_accept_storm() {
+    let server = SubsetServer::bind("127.0.0.1:0", tiny_meta(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // established before the storm; its pings never allocate an fd
+    let mut live = ServeClient::connect_with(
+        &addr,
+        "survivor",
+        ClientOptions { wire: WireMode::Frame, ..Default::default() },
+    )
+    .unwrap();
+    live.ping().unwrap();
+
+    // cap the table just above its current extent, hog every remaining
+    // slot, then free exactly one: the dial below consumes it, so the
+    // server's accept of that very connection fails with EMFILE — and
+    // keeps failing on every paused-and-resumed retry while the limit
+    // holds
+    let guard = FdLimitGuard::lower_to(max_fd() + 3);
+    let mut hogs = Vec::new();
+    while let Ok(f) = std::fs::File::open("/dev/null") {
+        hogs.push(f);
+    }
+    hogs.pop();
+    let queued = TcpStream::connect(&addr).expect("SYN queue accepts without a server fd");
+    wait_until(|| server.stats().accept_errors >= 1, "EMFILE reaches the accept path");
+
+    // the regression: with a blocking 50 ms sleep per accept error these
+    // pings stall storm-long; with a non-blocking pause they stay fast
+    let mut worst = Duration::ZERO;
+    for _ in 0..50 {
+        let t0 = Instant::now();
+        live.ping().unwrap();
+        worst = worst.max(t0.elapsed());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(
+        worst < Duration::from_millis(200),
+        "established ping took {worst:?} during the accept storm",
+    );
+    let mid = server.stats();
+    assert!(mid.accept_errors >= 1, "storm produced {} accept errors", mid.accept_errors);
+
+    // storm over: free the slots and restore the limit; the queued
+    // connection is still in the accept queue and must be admitted once
+    // the pause deadline passes — accepting resumes by itself, no new
+    // trigger needed
+    drop(hogs);
+    drop(guard);
+    let before = server.stats().connections;
+    wait_until(|| server.stats().connections > before, "queued connection admitted");
+    drop(queued);
+
+    // fresh dials work end-to-end again
+    let mut after = ServeClient::connect_with(
+        &addr,
+        "after-storm",
+        ClientOptions { wire: WireMode::Frame, ..Default::default() },
+    )
+    .unwrap();
+    after.ping().unwrap();
+
+    drop(live);
+    drop(after);
+    server.shutdown();
+}

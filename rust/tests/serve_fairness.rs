@@ -1,0 +1,149 @@
+//! Fair-flush regression test (the event-loop stall bugfix): one client
+//! pipelining bulk `GET_META` responses through the server must not
+//! inflate other clients' small-request latency. The loop writes in
+//! bounded per-connection quanta, round-robin across ready connections,
+//! so a multi-hundred-KB outbound backlog drains *alongside* `PING`
+//! traffic instead of monopolizing the thread until it is flushed.
+//!
+//! The bulk load is a raw framed socket that writes a batch of
+//! `GET_META` requests before reading any response — building a real
+//! outbound backlog well past one write quantum — while measured `PING`
+//! clients run concurrently. Asserts the pings' p99 stays bounded and
+//! that the bulk connection survives (backpressure + quanta, not the
+//! wbuf-cap teardown).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use milo::continual::{ContinualOptions, ContinualSelector};
+use milo::coordinator::Metadata;
+use milo::serve::{frame, ClientOptions, ServeClient, SubsetServer, WireMode};
+use milo::testkit::random_embeddings;
+
+const SEED: u64 = 29;
+const DATASET: &str = "fairness";
+const CLASSES: usize = 3;
+const DIM: usize = 6;
+
+/// A meta instance big enough that pipelined `GET_META` responses build
+/// a serious outbound backlog.
+fn produce_meta(points: usize) -> Arc<Metadata> {
+    let mut opts = ContinualOptions::new(DATASET);
+    opts.seed = SEED;
+    opts.knn = Some(4);
+    let mut sel = ContinualSelector::new(opts);
+    let z = random_embeddings(points, DIM, 17);
+    for i in 0..points {
+        sel.arrive(i % CLASSES, z.row(i)).unwrap();
+    }
+    let (meta, _) = sel.advance_epoch().unwrap();
+    Arc::new(meta)
+}
+
+/// Read one frame off a raw framed socket; returns its total wire size.
+fn read_frame(reader: &mut BufReader<TcpStream>) -> usize {
+    let mut header = [0u8; frame::HEADER_LEN];
+    reader.read_exact(&mut header).unwrap();
+    let (len, _, _) = frame::parse_header(&header).unwrap();
+    let mut payload = vec![0u8; len];
+    reader.read_exact(&mut payload).unwrap();
+    frame::HEADER_LEN + len
+}
+
+/// Dial a raw socket and negotiate the frame wire by hand (so the test
+/// controls exactly when responses are read — `ServeClient` reads each
+/// response before sending the next request, which can never backlog).
+fn raw_framed(addr: &str, client: &str) -> (TcpStream, BufReader<TcpStream>) {
+    let sock = TcpStream::connect(addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut w = sock.try_clone().unwrap();
+    writeln!(w, "{{\"cmd\":\"HELLO\",\"client\":\"{client}\",\"wire\":\"frame\"}}")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "HELLO failed: {line}");
+    assert!(line.contains("\"wire\":\"frame\""), "frame mode not confirmed: {line}");
+    (sock, reader)
+}
+
+#[test]
+fn bulk_get_meta_does_not_inflate_ping_latency() {
+    let server =
+        SubsetServer::bind("127.0.0.1:0", produce_meta(400), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // measured clients, connected and warmed before the bulk load starts
+    let mut pingers: Vec<ServeClient> = (0..3)
+        .map(|i| {
+            ServeClient::connect_with(
+                &addr,
+                &format!("ping-{i}"),
+                ClientOptions { wire: WireMode::Frame, ..Default::default() },
+            )
+            .unwrap()
+        })
+        .collect();
+    for p in &mut pingers {
+        p.ping().unwrap();
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let bulk = {
+        let addr = addr.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || -> u64 {
+            let (mut w, mut reader) = raw_framed(&addr, "bulk");
+            let req = frame::Frame::Json("{\"cmd\":\"GET_META\"}".to_string()).encode();
+            // size one response, then pipeline enough per batch that the
+            // server's outbound backlog clearly exceeds one write quantum
+            w.write_all(&req).unwrap();
+            let one = read_frame(&mut reader);
+            let batch = (600 * 1024 / one).clamp(8, 512);
+            let mut moved = one as u64;
+            while !stop.load(Ordering::Relaxed) {
+                for _ in 0..batch {
+                    w.write_all(&req).unwrap();
+                }
+                for _ in 0..batch {
+                    moved += read_frame(&mut reader) as u64;
+                }
+            }
+            moved
+        })
+    };
+
+    // let the first backlog build, then measure pings against it
+    std::thread::sleep(Duration::from_millis(100));
+    let mut lat: Vec<Duration> = Vec::with_capacity(300);
+    for round in 0..100 {
+        for p in pingers.iter_mut() {
+            let t0 = Instant::now();
+            p.ping().unwrap();
+            lat.push(t0.elapsed());
+        }
+        if round % 10 == 9 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    let moved = bulk.join().unwrap();
+
+    lat.sort();
+    let p99 = lat[lat.len() * 99 / 100];
+    // generous for CI noise; an unfair loop that flushes a full backlog
+    // before touching the next connection blows far past this
+    assert!(
+        p99 < Duration::from_millis(250),
+        "PING p99 {p99:?} under bulk GET_META load (moved {moved} bytes)",
+    );
+    // the backlog was real: several write quanta crossed the wire
+    assert!(moved > 2 * 1024 * 1024, "bulk load too small to exercise fairness: {moved}");
+
+    let stats = server.shutdown();
+    // fairness + backpressure carried the load — the wbuf cap never fired
+    assert_eq!(stats.wbuf_teardowns, 0);
+}

@@ -183,11 +183,105 @@ fn corruption_is_a_clean_error_not_a_panic() {
 #[test]
 fn a_corrupt_length_prefix_cannot_drive_allocation() {
     // a frame claiming a multi-GB payload must fail fast at the header,
-    // not wait for (or allocate) the bogus payload
+    // not wait for (or allocate) the bogus payload. `u32::MAX` also sets
+    // every stream bit — the stream id must not mask a bogus length
     let mut d = FrameDecoder::new();
     let mut bytes = vec![];
     bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
     bytes.push(frame::KIND_SUBSET);
     d.push(&bytes);
     assert!(d.next().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Stream-id properties (the multiplexed header)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_tagged_frames_roundtrip_through_arbitrary_splits() {
+    check_cases(0x5741, 60, |seed| {
+        let mut rng = Rng::new(seed);
+        let tagged: Vec<(u8, Frame)> = (0..1 + rng.below(8))
+            .map(|_| (rng.below(frame::MAX_STREAMS) as u8, random_frame(&mut rng)))
+            .collect();
+        let stream: Vec<u8> =
+            tagged.iter().flat_map(|(s, f)| f.encode_on(*s)).collect();
+
+        let mut decoder = FrameDecoder::new();
+        let mut decoded = Vec::new();
+        let mut pos = 0;
+        while pos < stream.len() {
+            let chunk = 1 + rng.below((stream.len() - pos).min(97));
+            decoder.push(&stream[pos..pos + chunk]);
+            pos += chunk;
+            while let Some(sf) =
+                decoder.next_with_stream().expect("valid stream must decode")
+            {
+                decoded.push(sf);
+            }
+        }
+        assert_eq!(decoded, tagged, "stream tags must survive split delivery");
+
+        // byte-identical re-encode, tags included
+        let re: Vec<u8> = decoded.iter().flat_map(|(s, f)| f.encode_on(*s)).collect();
+        assert_eq!(re, stream, "stream-tagged re-encode must be byte-identical");
+    });
+}
+
+#[test]
+fn stream_zero_encoding_is_byte_identical_to_the_legacy_wire() {
+    // the multiplexed header is backward compatible: stream 0 leaves all
+    // five spare bits clear, so pre-multiplexing peers see the exact
+    // bytes they always did
+    check_cases(0x1E6A, 40, |seed| {
+        let mut rng = Rng::new(seed);
+        let f = random_frame(&mut rng);
+        assert_eq!(f.encode(), f.encode_on(0), "encode() must be the stream-0 wire");
+    });
+}
+
+#[test]
+fn restreaming_a_burst_equals_encoding_it_on_that_stream() {
+    // the server's push fan-out replays one pre-encoded stream-0 burst
+    // per subscriber, rewriting only header stream bits — the result
+    // must be byte-identical to encoding each frame on the target stream
+    check_cases(0xBEE5, 40, |seed| {
+        let mut rng = Rng::new(seed);
+        let burst: Vec<Frame> =
+            (0..1 + rng.below(6)).map(|_| random_frame(&mut rng)).collect();
+        let base: Vec<u8> = burst.iter().flat_map(|f| f.encode()).collect();
+        for _ in 0..3 {
+            let s = rng.below(frame::MAX_STREAMS) as u8;
+            let mut restreamed = Vec::new();
+            frame::restream_frames(&base, &mut restreamed, s).unwrap();
+            let direct: Vec<u8> = burst.iter().flat_map(|f| f.encode_on(s)).collect();
+            assert_eq!(restreamed, direct, "restream to {s} diverged from direct encode");
+        }
+    });
+}
+
+#[test]
+fn flipping_stream_bits_moves_a_frame_without_corrupting_it() {
+    // the stream id occupies the header's top 5 bits: any flip there
+    // re-routes the frame but must never change its length, kind, or
+    // payload — the codec treats routing and content independently
+    check_cases(0x0F11, 30, |seed| {
+        let mut rng = Rng::new(seed);
+        let f = random_frame(&mut rng);
+        let mut bytes = f.encode_on(rng.below(frame::MAX_STREAMS) as u8);
+        let bit = 32 - 5 + rng.below(5); // one of the header word's stream bits
+        bytes[bit / 8] ^= 1 << (bit % 8);
+        let word = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        let want_stream = (word >> 27) as u8;
+
+        let mut d = FrameDecoder::new();
+        d.push(&bytes);
+        let (s, got) = d
+            .next_with_stream()
+            .expect("stream bits are routing, not structure")
+            .expect("complete frame");
+        assert_eq!(s, want_stream);
+        assert_eq!(got, f, "payload must be untouched by stream-bit flips");
+        assert_eq!(d.pending_bytes(), 0);
+    });
 }

@@ -1,0 +1,237 @@
+//! Stream-multiplexing acceptance tests: a fleet of logical sessions
+//! pooled onto shared framed connections must be **indistinguishable on
+//! the wire** from the same fleet holding one dedicated connection each.
+//! Asserts the ISSUE's byte-identity criterion across all three traffic
+//! classes:
+//!
+//!   (a) metadata — `GET_META` over a pooled stream returns the exact
+//!       binfmt artifact bytes a dedicated connection returns;
+//!   (b) deterministic subset streams — `NEXT_SUBSET` / `SAMPLE_WRE`
+//!       draws on a pooled stream replay the dedicated connection's
+//!       streams draw-for-draw (they are functions of `(seed, entry,
+//!       client id)`, never of the transport);
+//!   (c) push delivery — a publish reaches every subscribed stream on a
+//!       shared connection with the same reassembled `EpochUpdate` a
+//!       dedicated subscriber gets, even when sibling pushes interleave.
+//!
+//! Plus the multiplexing win itself: N sessions ride `⌈N/31⌉` sockets
+//! (stream 0 is the pool's control session), per-stream `GOODBYE` frees
+//! the stream id without closing the shared socket, and entry routing
+//! binds different streams of one socket to different datasets.
+
+use std::sync::Arc;
+
+use milo::continual::{ContinualOptions, ContinualSelector};
+use milo::coordinator::Metadata;
+use milo::serve::{
+    frame, ClientOptions, ConnectionPool, ServeClient, SubsetServer, WireMode,
+};
+use milo::store::binfmt;
+use milo::testkit::random_embeddings;
+
+const SEED: u64 = 23;
+const CLASSES: usize = 3;
+const DIM: usize = 6;
+
+/// One continual-epoch metadata instance for `dataset` (distinct
+/// embedding seeds so distinct datasets carry distinct subsets).
+fn meta_for(dataset: &str, embed_seed: u64) -> Arc<Metadata> {
+    let mut opts = ContinualOptions::new(dataset);
+    opts.seed = SEED;
+    opts.knn = Some(4);
+    let mut sel = ContinualSelector::new(opts);
+    let z = random_embeddings(30, DIM, embed_seed);
+    for i in 0..30 {
+        sel.arrive(i % CLASSES, z.row(i)).unwrap();
+    }
+    let (meta, _) = sel.advance_epoch().unwrap();
+    Arc::new(meta)
+}
+
+fn frame_opts(dataset: &str) -> ClientOptions {
+    ClientOptions {
+        wire: WireMode::Frame,
+        dataset: Some(dataset.to_string()),
+        ..Default::default()
+    }
+}
+
+/// Everything a session observes: the metadata artifact bytes plus a
+/// fixed schedule of SGE and WRE draws.
+fn observe(c: &mut ServeClient) -> (Vec<u8>, Vec<(usize, Vec<usize>)>, Vec<Vec<usize>>) {
+    let meta_bytes = binfmt::encode(&c.get_meta().unwrap());
+    let sge = (0..4).map(|_| c.next_subset().unwrap()).collect();
+    let wre = (0..3).map(|_| c.sample_wre(5).unwrap()).collect();
+    (meta_bytes, sge, wre)
+}
+
+#[test]
+fn pooled_streams_match_dedicated_connections_byte_for_byte() {
+    let entries = vec![meta_for("mux-a", 31), meta_for("mux-b", 37)];
+    let server = SubsetServer::bind_multi("127.0.0.1:0", entries, None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // fleet of six sessions, alternating between the two served entries
+    let fleet: Vec<(String, &str)> = (0..6)
+        .map(|i| (format!("trainer-{i}"), if i % 2 == 0 { "mux-a" } else { "mux-b" }))
+        .collect();
+
+    // dedicated pass: one socket per session
+    let dedicated: Vec<_> = fleet
+        .iter()
+        .map(|(id, ds)| {
+            let mut c = ServeClient::connect_with(&addr, id, frame_opts(ds)).unwrap();
+            let seen = observe(&mut c);
+            c.goodbye().unwrap();
+            seen
+        })
+        .collect();
+
+    // pooled pass: the same fleet multiplexed — all six fit one socket
+    let pool = ConnectionPool::new(&addr);
+    let mut pooled_clients: Vec<_> = fleet
+        .iter()
+        .map(|(id, ds)| ServeClient::connect_pooled(&pool, id, frame_opts(ds)).unwrap())
+        .collect();
+    assert_eq!(pool.connections(), 1, "six sessions share one pooled socket");
+
+    for (c, (id, ds)) in pooled_clients.iter_mut().zip(&fleet) {
+        assert_eq!(c.server_dataset(), *ds, "stream {id} routed to its entry");
+    }
+    let pooled: Vec<_> = pooled_clients.iter_mut().map(observe).collect();
+    assert_eq!(
+        pooled, dedicated,
+        "pooled streams must replay the dedicated connections exactly",
+    );
+    // distinct entries really served distinct universes over one socket
+    assert_ne!(pooled[0].0, pooled[1].0, "mux-a and mux-b metadata differ");
+
+    for mut c in pooled_clients {
+        c.goodbye().unwrap();
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.subscribers, 0);
+}
+
+#[test]
+fn a_full_connection_spills_to_a_second_socket() {
+    let server =
+        SubsetServer::bind("127.0.0.1:0", meta_for("spill", 41), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let pool = ConnectionPool::new(&addr);
+
+    // 31 leases fill the first socket (streams 1..=31; 0 is control) —
+    // the 32nd must dial a second one
+    let full = frame::MAX_STREAMS - 1;
+    let mut sessions: Vec<ServeClient> = (0..full)
+        .map(|i| {
+            ServeClient::connect_pooled(&pool, &format!("s{i}"), frame_opts("spill"))
+                .unwrap()
+        })
+        .collect();
+    assert_eq!(pool.connections(), 1);
+    sessions.push(
+        ServeClient::connect_pooled(&pool, "one-more", frame_opts("spill")).unwrap(),
+    );
+    assert_eq!(pool.connections(), 2, "lease {} spills to a new socket", full + 1);
+
+    // every session is live end-to-end across both sockets
+    for s in &mut sessions {
+        s.ping().unwrap();
+    }
+
+    // freeing a stream on the first socket lets the next lease reuse it
+    sessions.remove(3).goodbye().unwrap();
+    let mut replacement =
+        ServeClient::connect_pooled(&pool, "reuse", frame_opts("spill")).unwrap();
+    assert_eq!(pool.connections(), 2, "freed stream id is reused, no third socket");
+    replacement.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn pushes_fan_out_per_stream_identically_to_a_dedicated_subscriber() {
+    let meta0 = meta_for("mux-push", 43);
+    let server = SubsetServer::bind("127.0.0.1:0", meta0.clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut dedicated =
+        ServeClient::connect_with(&addr, "solo", frame_opts("mux-push")).unwrap();
+    dedicated.subscribe().unwrap();
+
+    let pool = ConnectionPool::new(&addr);
+    let mut pooled: Vec<ServeClient> = (0..3)
+        .map(|i| {
+            let mut c =
+                ServeClient::connect_pooled(&pool, &format!("p{i}"), frame_opts("mux-push"))
+                    .unwrap();
+            c.subscribe().unwrap();
+            c
+        })
+        .collect();
+    assert_eq!(pool.connections(), 1, "all three subscribers share one socket");
+    assert_eq!(server.stats().subscribers, 4, "subscribers gauge counts streams");
+
+    let meta1 = meta_for("mux-push", 47);
+    server.publish("mux-push", 2, meta1.clone()).unwrap();
+
+    let want = dedicated
+        .poll_push(5_000)
+        .unwrap()
+        .expect("dedicated subscriber sees the publish");
+    assert_eq!(want.epoch, 2);
+    assert_eq!(want.sge_subsets, meta1.sge_subsets);
+    assert_eq!(want.fixed_dm, meta1.fixed_dm);
+
+    // drain the pooled subscribers in reverse order: p2's poll reads p0's
+    // and p1's interleaved burst frames first, which must be stashed for
+    // their owners — not dropped, not misdelivered
+    for c in pooled.iter_mut().rev() {
+        let got = c
+            .poll_push(5_000)
+            .unwrap()
+            .expect("every pooled stream sees the publish");
+        assert_eq!(got, want, "pooled delivery is identical to dedicated");
+    }
+    // exactly once each, even after the cross-stream stashing
+    for c in pooled.iter_mut() {
+        assert!(c.poll_push(100).unwrap().is_none());
+    }
+
+    // per-stream GOODBYE: one session leaves, the shared socket and the
+    // sibling subscriptions stay
+    pooled.remove(0).goodbye().unwrap();
+    assert_eq!(pool.connections(), 1);
+    let meta2 = meta_for("mux-push", 53);
+    server.publish("mux-push", 3, meta2.clone()).unwrap();
+    for c in pooled.iter_mut() {
+        let got = c.poll_push(5_000).unwrap().expect("survivors still follow");
+        assert_eq!(got.epoch, 3);
+        assert_eq!(got.sge_subsets, meta2.sge_subsets);
+    }
+    drop(pooled);
+    drop(dedicated);
+    server.shutdown();
+}
+
+#[test]
+fn stats_names_the_readiness_backend() {
+    let server =
+        SubsetServer::bind("127.0.0.1:0", meta_for("backend", 59), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let mut c = ServeClient::connect(&addr, "probe").unwrap();
+    let stats = c.stats().unwrap();
+    let backend = stats.get("readiness").unwrap().as_str().unwrap().to_string();
+    // Linux runs the epoll tier; anywhere else the poll/fallback tiers
+    let expected: &[&str] = if cfg!(target_os = "linux") {
+        &["epoll"]
+    } else {
+        &["poll", "fallback"]
+    };
+    assert!(
+        expected.contains(&backend.as_str()),
+        "unexpected readiness backend {backend:?}",
+    );
+    drop(c);
+    server.shutdown();
+}

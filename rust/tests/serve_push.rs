@@ -218,6 +218,33 @@ fn subscriber_slots_are_reclaimed_on_goodbye_and_abrupt_disconnect() {
     server.shutdown();
 }
 
+#[test]
+fn shutdown_drains_every_gauge_for_still_open_subscribers() {
+    let (_, metas) = produce(1);
+    let server =
+        SubsetServer::bind("127.0.0.1:0", metas[0].clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // three live subscribers (plus their open slots and buffer capacity)
+    // at the moment the loop exits — none say GOODBYE first
+    let mut followers: Vec<ServeClient> =
+        (0..3).map(|i| subscriber(&addr, &format!("open-{i}"))).collect();
+    for f in &mut followers {
+        f.subscribe().unwrap();
+    }
+    wait_until(|| server.stats().subscribers == 3, "all three subscribed");
+    assert!(server.stats().open_connections >= 3);
+
+    // the exit path must return every gauge contribution the survivors
+    // hold — slots, per-stream subscriptions, and buffer capacity — not
+    // just the slot count
+    let after = server.shutdown();
+    assert_eq!(after.open_connections, 0, "open_connections drained at shutdown");
+    assert_eq!(after.subscribers, 0, "subscribers gauge drained at shutdown");
+    assert_eq!(after.buffer_bytes, 0, "buffer capacity gauge drained at shutdown");
+    drop(followers);
+}
+
 fn wait_until(cond: impl Fn() -> bool, what: &str) {
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
     while !cond() {

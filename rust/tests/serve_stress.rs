@@ -23,8 +23,12 @@
 //!       healthy run), and every monotone counter is non-decreasing
 //!       across successive snapshots.
 //!
-//! The `#[ignore]`d soak variant runs the same topology much harder and is
-//! exercised in release mode by CI (`cargo test --release -- --ignored`).
+//! The `#[ignore]`d soak variants run the same topology much harder —
+//! including the fleet-scale bar of **thousands of concurrent framed
+//! connections** (fd-budget-aware: each in-process connection costs two
+//! fds, so the target clamps to the soft `RLIMIT_NOFILE`; CI raises
+//! `ulimit -n` and runs them in release mode via
+//! `cargo test --release -- --ignored`).
 
 use std::sync::Arc;
 
@@ -340,4 +344,181 @@ fn wait_until(cond: impl Fn() -> bool, what: &str) {
         assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
         std::thread::sleep(std::time::Duration::from_millis(10));
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-scale connection soak + buffer high-water reclamation
+// ---------------------------------------------------------------------------
+
+/// Soft `RLIMIT_NOFILE` from `/proc/self/limits` (None off Linux).
+fn fd_soft_limit() -> Option<u64> {
+    let text = std::fs::read_to_string("/proc/self/limits").ok()?;
+    let line = text.lines().find(|l| l.starts_with("Max open files"))?;
+    line.split_whitespace().nth(3)?.parse().ok()
+}
+
+/// Hold `target` concurrent JSON-line connections open at once (clamped
+/// to the fd budget: two fds per in-process connection, 100 reserved for
+/// the rest of the test binary), ping a sample mid-soak, then close all
+/// and assert every gauge returns to zero. Returns the connection count
+/// actually soaked.
+fn run_connection_soak(target: usize) -> usize {
+    use std::io::{BufRead, BufReader, Write};
+
+    let entries = entries();
+    let dataset = entries[0].dataset.clone();
+    let server = SubsetServer::bind_multi("127.0.0.1:0", entries, None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    let budget = fd_soft_limit().map_or(target, |soft| {
+        (soft.saturating_sub(100) / 2) as usize
+    });
+    let n = target.min(budget).max(1);
+
+    let mut conns: Vec<(std::net::TcpStream, BufReader<std::net::TcpStream>)> =
+        Vec::with_capacity(n);
+    let mut line = String::new();
+    for c in 0..n {
+        let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let hello =
+            format!("{{\"cmd\":\"HELLO\",\"client\":\"soak-{c}\",\"dataset\":{dataset:?}}}\n");
+        sock.write_all(hello.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "soak-{c} HELLO: {line:?}");
+        conns.push((sock, reader));
+    }
+    assert_eq!(server.stats().open_connections, n as u64, "all {n} conns held open");
+
+    // a synchronized ping wave across the whole fleet: every connection
+    // writes before any reads, so one tick sees thousands of ready
+    // sockets at once — readiness, read quanta, and the write round-robin
+    // all under fire
+    for (sock, _) in conns.iter_mut() {
+        sock.write_all(b"{\"cmd\":\"PING\"}\n").unwrap();
+    }
+    for (c, (_, reader)) in conns.iter_mut().enumerate() {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "soak-{c} ping: {line:?}");
+    }
+
+    // subset service still exact at full occupancy (sampled)
+    for c in (0..n).step_by((n / 16).max(1)) {
+        let (sock, reader) = &mut conns[c];
+        sock.write_all(b"{\"cmd\":\"NEXT_SUBSET\"}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"subset\""), "soak-{c} subset: {line:?}");
+    }
+
+    drop(conns); // bare FINs, fleet-wide at once
+    wait_until(
+        || server.stats().open_connections == 0,
+        "fleet-wide FIN sweep back to zero open connections",
+    );
+    let end = server.shutdown();
+    assert_eq!(end.open_connections, 0);
+    assert_eq!(end.subscribers, 0);
+    assert_eq!(end.buffer_bytes, 0, "no buffer capacity outlives the fleet");
+    assert!(end.connections >= n as u64);
+    n
+}
+
+/// Smoke tier: hundreds of concurrent connections inside the default
+/// 1024-fd budget, every run.
+#[test]
+fn smoke_hundreds_of_concurrent_connections() {
+    let n = run_connection_soak(300);
+    assert!(n >= 64, "fd budget too tight to smoke the soak path ({n})");
+}
+
+/// Full tier, CI-only: the fleet-scale bar from the ROADMAP — thousands
+/// of concurrent framed connections on one event-loop thread. CI raises
+/// `ulimit -n` first; on a default 1024-fd shell this clamps itself.
+#[test]
+#[ignore = "fleet-scale soak — CI raises ulimit -n and runs it in release mode"]
+fn soak_thousands_of_concurrent_connections() {
+    let n = run_connection_soak(2_000);
+    // on a raised-ulimit runner (CI does `ulimit -n 16384`) the full bar
+    // must actually be met — the clamp is for default shells, not CI
+    if fd_soft_limit().map_or(false, |soft| soft >= 4_200) {
+        assert_eq!(n, 2_000, "fd budget allowed the full bar but only {n} soaked");
+    }
+}
+
+/// Buffer high-water bugfix (satellite): a burst that balloons a
+/// connection's outbound buffer must not pin that allocation for the
+/// connection's lifetime. After the backlog flushes, capacity above the
+/// keep threshold is returned, observable on the `serve.buffer_bytes`
+/// gauge.
+#[test]
+fn burst_buffer_capacity_is_returned_after_flush() {
+    use std::io::{BufRead, BufReader, Write};
+
+    const BUF_KEEP_BYTES: u64 = 64 << 10; // mirrors serve::BUF_KEEP_BYTES
+
+    let entries = entries();
+    let dataset = entries[0].dataset.clone();
+    let server = SubsetServer::bind_multi("127.0.0.1:0", entries, None, SEED).unwrap();
+    let addr = server.addr().to_string();
+
+    // a raw framed socket so responses can pile up server-side: HELLO,
+    // confirm frame mode, then pipeline GET_METAs without reading
+    let mut sock = std::net::TcpStream::connect(&addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let hello = format!(
+        "{{\"cmd\":\"HELLO\",\"client\":\"burst\",\"wire\":\"frame\",\"dataset\":{dataset:?}}}\n",
+    );
+    sock.write_all(hello.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"wire\":\"frame\""), "{line:?}");
+
+    fn read_frame(reader: &mut std::io::BufReader<std::net::TcpStream>) -> usize {
+        use std::io::Read;
+        let mut header = [0u8; milo::serve::frame::HEADER_LEN];
+        reader.read_exact(&mut header).unwrap();
+        let (len, _, _) = milo::serve::frame::parse_header(&header).unwrap();
+        let mut payload = vec![0u8; len];
+        reader.read_exact(&mut payload).unwrap();
+        milo::serve::frame::HEADER_LEN + len
+    }
+
+    // size one response, then pipeline enough that the backlog dwarfs
+    // whatever the kernel's socket buffers can absorb — the excess must
+    // land in the server's wbuf
+    let req = milo::serve::Frame::Json("{\"cmd\":\"GET_META\"}".to_string()).encode();
+    sock.write_all(&req).unwrap();
+    let one = read_frame(&mut reader);
+    let pipeline = (24 * 1024 * 1024 / one).clamp(64, 4096);
+    for _ in 0..pipeline {
+        sock.write_all(&req).unwrap();
+    }
+    // the backlog builds real capacity: well past the keep threshold
+    wait_until(
+        || server.stats().buffer_bytes > 4 * BUF_KEEP_BYTES,
+        "pipelined GET_META backlog to balloon the connection buffers",
+    );
+
+    // drain everything client-side so the server finishes its flush
+    for _ in 0..pipeline {
+        read_frame(&mut reader);
+    }
+
+    // the fix: post-flush, capacity above the keep threshold is released
+    // (rbuf + wbuf + decoder each keep at most BUF_KEEP_BYTES)
+    wait_until(
+        || server.stats().buffer_bytes <= 4 * BUF_KEEP_BYTES,
+        "burst capacity to be returned after the flush",
+    );
+    assert!(server.stats().buffer_bytes > 0, "a live connection holds some buffer");
+
+    drop(sock);
+    drop(reader);
+    wait_until(|| server.stats().open_connections == 0, "burst conn swept");
+    let end = server.shutdown();
+    assert_eq!(end.buffer_bytes, 0, "gauge drains with the connection");
 }
