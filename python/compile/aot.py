@@ -34,6 +34,7 @@ from jax._src.lib import xla_client as xc
 from compile import model as M
 from compile.kernels import gains as G
 from compile.kernels import similarity as S
+from compile.kernels import topk as TK
 
 # ---------------------------------------------------------------------------
 # Global shape configuration (mirrored into manifest.json for Rust)
@@ -176,6 +177,25 @@ def emit_kernels(b: Builder, embed_dims):
         "colmax",
         {"tile": t},
     )
+    # fused similarity + on-device top-K candidate cut (see kernels/topk.py);
+    # `k` in the meta gates the Rust side's device path (`knn <= k`).
+    e, k = EMBED_DIM, TK.DEFAULT_K
+    for base in ("cosine", "dot"):
+        sim_topk = TK.cosine_topk if base == "cosine" else TK.dot_topk
+        b.emit(
+            f"topk_{base}_e{e}",
+            lambda a, bb, v, f=sim_topk: f(a, bb, v, tile=t, k=k),
+            [f32((t, e)), f32((t, e)), f32((1,))],
+            "topk",
+            {"metric": base, "embed_dim": e, "tile": t, "k": k},
+        )
+    b.emit(
+        f"topk_rbf_e{e}",
+        lambda a, bb, v, g: TK.rbf_topk(a, bb, v, g, tile=t, k=k),
+        [f32((t, e)), f32((t, e)), f32((1,)), f32((1,))],
+        "topk",
+        {"metric": "rbf", "embed_dim": e, "tile": t, "k": k},
+    )
 
 
 def emit_dataset(b: Builder, ds: str, cfg: dict):
@@ -187,6 +207,22 @@ def emit_dataset(b: Builder, ds: str, cfg: dict):
         [f32((BATCH, d))],
         "encoder",
         {"dataset": ds, "embed_dim": EMBED_DIM},
+    )
+    # whole-chain fusion: raw feature tiles -> encoder -> cosine -> top-K
+    # in one execution (the Rust cosine/Pjrt fast path when knn <= k)
+    t = SIM_TILE
+    b.emit(
+        f"embed_sim_topk_{ds}",
+        TK.make_embed_cosine_topk(M.make_encoder(d, EMBED_DIM), tile=t, k=TK.DEFAULT_K),
+        [f32((t, d)), f32((t, d)), f32((1,))],
+        "fused_topk",
+        {
+            "dataset": ds,
+            "metric": "cosine",
+            "embed_dim": EMBED_DIM,
+            "tile": t,
+            "k": TK.DEFAULT_K,
+        },
     )
     if ds in ENCODER_ABLATION_DATASETS:
         for variant, (e, _, _, _) in M.ENCODER_VARIANTS.items():

@@ -1,0 +1,94 @@
+"""L1 fused kernels: tiled similarity + on-device top-``K`` candidate cut.
+
+The host-side sparse kernel build transfers a full ``(T, n)`` similarity
+strip back per tile pair and reduces it to top-``knn`` on the CPU. These
+graphs move the cut on-device: one execution per ``(T, T)`` tile pair
+returns only the per-row top-``K`` candidate ``(vals, cols)`` — roughly
+``2K/T`` of the strip bytes — plus the two auxiliaries the host merge
+needs (the tile diagonal and the per-row minimum for the dot-metric
+non-negativity shift).
+
+Contract with ``rust/src/kernel/sparse.rs::device_topk_build``:
+
+* inputs are ``a (T, e)``, ``b (T, e)``, ``valid (1,)`` (and ``gamma
+  (1,)`` for RBF). ``valid`` is the number of real columns in the ``b``
+  tile; columns ``>= valid`` are padding and masked to ``-inf`` before
+  the cut (their returned column indices decode to global ids ``>= n``,
+  which the host filters) and to ``+inf`` for the row minimum;
+* outputs, in tuple order: ``vals (T, K)``, ``cols (T, K)`` (tile-local
+  column indices as exact f32 — ``T <= 2^24``), ``diag (T,)`` (the tile
+  diagonal, read from the ``bi == bj`` execution), ``rowmin (T,)``;
+* ``jax.lax.top_k`` breaks score ties lowest-index-first — the same
+  total order (score descending, column ascending) as the host
+  ``row_topk``, which is what makes the device cut change transfer
+  volume but never values: the host re-selects top-``knn`` from the
+  merged candidates with the exact host comparator, and any true
+  top-``knn`` member has fewer than ``knn <= K`` predecessors in that
+  order globally, hence also within its own tile.
+
+Like ``similarity.py``, the Pallas similarity tiles run under
+``interpret=True`` (plain HLO; bit-exact vs the oracle) and the top-k
+epilogue is ordinary jax around them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import similarity as S
+
+# Per-tile candidate width. 64 bounds the transfer to 2*T*K floats per
+# tile pair while admitting every `--knn <= 64` build; larger knn falls
+# back to the host-side cut transparently.
+DEFAULT_K = 64
+
+
+def _cut(sim, valid, k):
+    """Top-``k`` cut of one ``(T, T)`` similarity tile with padding-column
+    masking; returns the artifact's 4-tuple (see module docs)."""
+    col = jax.lax.broadcasted_iota(jnp.int32, sim.shape, 1)
+    mask = col < valid[0].astype(jnp.int32)
+    vals, cols = jax.lax.top_k(jnp.where(mask, sim, -jnp.inf), k)
+    rowmin = jnp.min(jnp.where(mask, sim, jnp.inf), axis=1)
+    diag = jnp.diagonal(sim)
+    return vals, cols.astype(jnp.float32), diag, rowmin
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "k"))
+def cosine_topk(a, b, valid, *, tile: int = S.DEFAULT_TILE, k: int = DEFAULT_K):
+    """Rescaled-cosine tile + top-``k`` cut (``topk_cosine_e*``)."""
+    return _cut(S.cosine_similarity(a, b, tile=tile), valid, k)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "k"))
+def dot_topk(a, b, valid, *, tile: int = S.DEFAULT_TILE, k: int = DEFAULT_K):
+    """Raw dot-product tile + top-``k`` cut (``topk_dot_e*``); ``rowmin``
+    feeds the host's global non-negativity shift."""
+    return _cut(S.dot_similarity(a, b, tile=tile), valid, k)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "k"))
+def rbf_topk(
+    a, b, valid, gamma, *, tile: int = S.DEFAULT_TILE, k: int = DEFAULT_K
+):
+    """RBF tile + top-``k`` cut (``topk_rbf_e*``); ``gamma`` stays a
+    runtime scalar exactly as in ``sim_rbf_e*``."""
+    return _cut(S.rbf_similarity(a, b, gamma, tile=tile), valid, k)
+
+
+def make_embed_cosine_topk(encode, *, tile: int = S.DEFAULT_TILE, k: int = DEFAULT_K):
+    """Fuse encoder -> cosine -> top-``k`` into one graph over *raw*
+    feature tiles (``embed_sim_topk_{ds}``): the whole class-block chain
+    collapses to one execution per tile pair, skipping the separate
+    encode pass entirely. ``encode`` is a ``f(x) -> (z,)`` closure from
+    ``compile.model`` (frozen weights lower to HLO constants)."""
+
+    def fused(a, b, valid):
+        (za,) = encode(a)
+        (zb,) = encode(b)
+        return _cut(S.cosine_similarity(za, zb, tile=tile), valid, k)
+
+    return fused

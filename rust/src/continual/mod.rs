@@ -75,8 +75,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::coordinator::Metadata;
-use crate::kernel::sparse::{kernel_from_topk, row_topk, sparse_native};
-use crate::kernel::{native_similarity, ClassKernel, ClassKernels, ClassSim, SimMetric};
+use crate::kernel::pipeline::run_pipeline;
+use crate::kernel::sparse::{
+    block_rows, kernel_from_topk, row_topk_into, sparse_native, TopkScratch, STRIP_ROWS,
+};
+use crate::kernel::{
+    native_similarity, ClassKernel, ClassKernels, ClassSim, KernelSchedule, SimMetric,
+};
 use crate::selection::milo::ClassProbs;
 use crate::selection::proportional_allocation;
 use crate::submod::{greedy_maximize, sample_importance, GreedyMode, SetFunctionKind};
@@ -209,12 +214,19 @@ impl ClassState {
     }
 
     /// Fold un-integrated arrivals into the kernel state and republish
-    /// the class kernel. Returns true when the kernel changed.
-    fn integrate(&mut self, metric: SimMetric, knn: Option<usize>, dim: usize) -> bool {
+    /// the class kernel. Returns true when the kernel changed. `Err`
+    /// means a kernel-build stage panicked (the overlap pipeline
+    /// contains it; see [`crate::kernel::pipeline`]).
+    fn integrate(
+        &mut self,
+        metric: SimMetric,
+        knn: Option<usize>,
+        dim: usize,
+    ) -> Result<bool> {
         let mut changed = false;
         if self.integrated < self.n() {
             if incremental(metric, knn) {
-                self.integrate_sparse(metric, knn.unwrap(), dim);
+                self.integrate_sparse(metric, knn.unwrap(), dim)?;
             }
             self.integrated = self.n();
             self.rev += 1;
@@ -224,13 +236,19 @@ impl ClassState {
             self.kernel = Some(self.build_sim(metric, knn, dim));
             self.kernel_rev = self.rev;
         }
-        changed
+        Ok(changed)
     }
 
     /// One incremental union update (sparse cosine/dot): block-multiply
     /// the new rows against all rows, top-`knn` the new rows directly,
-    /// and re-top-`knn` each old row over (stored ∪ new columns).
-    fn integrate_sparse(&mut self, metric: SimMetric, knn: usize, dim: usize) {
+    /// and re-top-`knn` each old row over (stored ∪ new columns). The
+    /// new-row block rides the same overlapped strip pipeline as the
+    /// batch builders: sub-strip matmuls (produce) overlap the metric
+    /// transform + new-row top-`knn` (consume). Chunking changes no
+    /// bits — matmul elements are independent of strip grouping and the
+    /// dot `f32::min` fold is order-insensitive — and the chunks are
+    /// retained for the old-row union pass below.
+    fn integrate_sparse(&mut self, metric: SimMetric, knn: usize, dim: usize) -> Result<()> {
         let n_old = self.integrated;
         let n = self.n();
         let mut block =
@@ -247,32 +265,75 @@ impl ClassState {
             _ => Matrix::from_vec(n, dim, self.raw.clone()),
         }
         .expect("normalized rows track raw rows");
-        let mut strip = block.matmul_nt(&all);
-        match metric {
-            SimMetric::Dot => {
-                // every pair (i, j) appears in some new block as (new,
-                // any) with s[i,j] == s[j,i] bitwise, so folding new
-                // blocks reproduces the full-matrix min exactly
-                self.dot_min =
-                    strip.data().iter().cloned().fold(self.dot_min, f32::min);
-            }
-            SimMetric::Cosine => {
-                for v in strip.data_mut().iter_mut() {
-                    *v = 0.5 + 0.5 * *v;
-                }
-            }
-            SimMetric::Rbf { .. } => unreachable!("rbf classes rebuild"),
-        }
+        let b = n - n_old;
+        let strip_h = STRIP_ROWS.max(1);
+        let strips = b.div_ceil(strip_h);
         let keff = knn.clamp(1, n);
+        struct IntState {
+            rows: Vec<Vec<(u32, f32)>>,
+            /// Transformed chunk strips, kept for the old-row pass.
+            chunks: Vec<Matrix>,
+            min: f32,
+            scratch: TopkScratch,
+        }
+        let (block, all) = (&block, &all);
+        let (st, _stats) = run_pipeline(
+            strips,
+            KernelSchedule::default().depth,
+            IntState {
+                rows: Vec::with_capacity(b),
+                chunks: Vec::with_capacity(strips),
+                min: self.dot_min,
+                scratch: TopkScratch::new(),
+            },
+            |t| {
+                let lo = t * strip_h;
+                let hi = (lo + strip_h).min(b);
+                Ok(block_rows(block, lo, hi).matmul_nt(all))
+            },
+            |st: &mut IntState, t, mut strip| {
+                match metric {
+                    SimMetric::Dot => {
+                        // every pair (i, j) appears in some new block as
+                        // (new, any) with s[i,j] == s[j,i] bitwise, so
+                        // folding new blocks reproduces the full-matrix
+                        // min exactly
+                        st.min = strip.data().iter().cloned().fold(st.min, f32::min);
+                    }
+                    SimMetric::Cosine => {
+                        for v in strip.data_mut().iter_mut() {
+                            *v = 0.5 + 0.5 * *v;
+                        }
+                    }
+                    SimMetric::Rbf { .. } => unreachable!("rbf classes rebuild"),
+                }
+                let lo = t * strip_h;
+                for r in 0..strip.rows {
+                    st.rows.push(row_topk_into(
+                        strip.row(r),
+                        n_old + lo + r,
+                        keff,
+                        &mut st.scratch,
+                    ));
+                }
+                st.chunks.push(strip);
+            },
+        )?;
+        self.dot_min = st.min;
         for (j, stored) in self.rows.iter_mut().enumerate() {
-            let news: Vec<(u32, f32)> = (0..n - n_old)
-                .map(|r| ((n_old + r) as u32, strip.at(r, j)))
+            let news: Vec<(u32, f32)> = st
+                .chunks
+                .iter()
+                .enumerate()
+                .flat_map(|(t, chunk)| {
+                    (0..chunk.rows)
+                        .map(move |r| ((n_old + t * strip_h + r) as u32, chunk.at(r, j)))
+                })
                 .collect();
             *stored = retopk(stored, &news, j, keff, n);
         }
-        for r in 0..n - n_old {
-            self.rows.push(row_topk(strip.row(r), n_old + r, keff));
-        }
+        self.rows.extend(st.rows);
+        Ok(())
     }
 
     fn build_sim(&self, metric: SimMetric, knn: Option<usize>, dim: usize) -> ClassSim {
@@ -452,11 +513,20 @@ impl ContinualSelector {
             .map(|&ci| (ci, std::mem::take(&mut self.classes[ci])))
             .collect();
         let updated = par_map(taken, |(ci, mut st)| {
-            st.integrate(metric, knn, dim);
-            (ci, st)
+            let r = st.integrate(metric, knn, dim);
+            (ci, st, r)
         });
-        for (ci, st) in updated {
+        // restore every taken state before surfacing a failure, so an
+        // errored advance leaves the selector intact
+        let mut integrate_err: Option<anyhow::Error> = None;
+        for (ci, st, r) in updated {
             self.classes[ci] = st;
+            if let Err(e) = r {
+                integrate_err.get_or_insert(e);
+            }
+        }
+        if let Some(e) = integrate_err {
+            return Err(e);
         }
         let integrate_secs = t0.elapsed().as_secs_f64();
 
@@ -629,7 +699,7 @@ impl ContinualSelector {
         let dim = self.dim.unwrap_or(0);
         let (metric, knn) = (self.opts.metric, self.opts.knn);
         for st in &mut self.classes {
-            st.integrate(metric, knn, dim);
+            st.integrate(metric, knn, dim).expect("kernel integration failed");
         }
         ClassKernels {
             per_class: self

@@ -31,7 +31,8 @@ pub use experiment::{ExperimentRunner, StrategyKind, TrialRecord};
 
 use crate::data::{Dataset, Split};
 use crate::kernel::{
-    build_class_kernels, ClassKernels, SimMetric, SimilarityBackend,
+    build_class_kernels_scheduled, sparse, ClassKernel, ClassKernels, ClassSim,
+    KernelSchedule, SimMetric, SimilarityBackend,
 };
 use crate::runtime::{Arg, Runtime};
 use crate::selection::milo::ClassProbs;
@@ -98,6 +99,22 @@ pub struct PreprocessOptions {
     /// ([`crate::store::MetaKey`]); `knn ≥ n_c` reproduces dense
     /// selections bit-for-bit. `None` = dense (the paper's recipe).
     pub knn: Option<usize>,
+    /// Rows per native kernel-construction strip (`--sim-tile`); `None` =
+    /// the built-in default. **Schedule-only**: changes when work happens,
+    /// never any kernel value, so it is excluded from
+    /// [`crate::store::MetaKey`].
+    pub sim_tile: Option<usize>,
+    /// Overlap depth of the kernel-build pipeline (`--pipeline-depth`):
+    /// `1` = serial reference, `2` = double buffering (default). Also
+    /// schedule-only and excluded from [`crate::store::MetaKey`].
+    pub pipeline_depth: usize,
+}
+
+impl PreprocessOptions {
+    /// The kernel-construction schedule these options imply.
+    pub fn schedule(&self) -> KernelSchedule {
+        KernelSchedule { strip_rows: self.sim_tile, depth: self.pipeline_depth }
+    }
 }
 
 impl Default for PreprocessOptions {
@@ -114,6 +131,8 @@ impl Default for PreprocessOptions {
             encoder_variant: None,
             pipeline: PreprocessPipeline::Kernel,
             knn: None,
+            sim_tile: None,
+            pipeline_depth: 2,
         }
     }
 }
@@ -191,14 +210,53 @@ impl<'a> Preprocessor<'a> {
     /// sparse top-`knn`, per `opts.knn`).
     pub fn kernels(&self, ds: &Dataset, embeddings: &Matrix) -> Result<ClassKernels> {
         let _span = crate::obs::Span::enter("preprocess.kernels");
-        build_class_kernels(
+        build_class_kernels_scheduled(
             Some(self.rt),
             embeddings,
             &ds.class_partition(),
             self.opts.metric,
             self.opts.backend,
             self.opts.knn,
+            &self.opts.schedule(),
         )
+    }
+
+    /// Fused fast path: when the manifest carries an
+    /// `embed_sim_topk_{ds}` artifact, the whole embedding → cosine →
+    /// top-`K` chain collapses into **one execution per class tile pair**
+    /// straight from raw features — no separate encode pass, no full
+    /// similarity strips back to the host. Only valid for the exact
+    /// pipeline the artifact bakes in (Pjrt backend, cosine metric, the
+    /// default zero-shot encoder, sparse `knn ≤ K`); returns `Ok(None)`
+    /// whenever any of that differs so [`Preprocessor::run`] falls back
+    /// to the generic encode + kernels path.
+    fn fused_kernels(&self, ds: &Dataset) -> Result<Option<ClassKernels>> {
+        if self.opts.backend != SimilarityBackend::Pjrt
+            || self.opts.metric != SimMetric::Cosine
+            || self.opts.encoder_variant.is_some()
+        {
+            return Ok(None);
+        }
+        let Some(knn) = self.opts.knn else { return Ok(None) };
+        let artifact = format!("embed_sim_topk_{}", ds.name());
+        let Some(entry) = self.rt.manifest().artifacts.get(&artifact) else {
+            return Ok(None);
+        };
+        match entry.k {
+            Some(k) if knn <= k => {}
+            _ => return Ok(None),
+        }
+        let _span = crate::obs::Span::enter("preprocess.kernels");
+        let x = ds.x(Split::Train);
+        let sched = self.opts.schedule();
+        let mut per_class = Vec::new();
+        for idx in &ds.class_partition() {
+            let z = x.gather_rows(idx);
+            let (sk, _stats) = sparse::sparse_fused_pjrt(self.rt, &z, &artifact, knn, &sched)?;
+            per_class
+                .push(ClassKernel { indices: idx.clone(), sim: ClassSim::Sparse(sk) });
+        }
+        Ok(Some(ClassKernels { per_class, metric: self.opts.metric }))
     }
 
     /// SGE: `n_subsets` stochastic-greedy subsets of size `k`, assembled
@@ -368,9 +426,17 @@ impl<'a> Preprocessor<'a> {
         let t0 = Instant::now();
         let mut rng = Rng::new(self.opts.seed ^ 0x9E1E_C7).derive_str(ds.name());
         let k = ((self.opts.fraction * ds.n_train() as f64).round() as usize).max(1);
-        let embeddings =
-            crate::obs::time("preprocess.encode", || self.encode(ds, Split::Train))?;
-        let kernels = self.kernels(ds, &embeddings)?;
+        // embeddings only feed the kernels here, so the fused artifact
+        // (when present and applicable) skips the encode pass entirely
+        let kernels = match self.fused_kernels(ds)? {
+            Some(kernels) => kernels,
+            None => {
+                let embeddings = crate::obs::time("preprocess.encode", || {
+                    self.encode(ds, Split::Train)
+                })?;
+                self.kernels(ds, &embeddings)?
+            }
+        };
         let sge_subsets = self.sge_subsets(
             ds,
             &kernels,

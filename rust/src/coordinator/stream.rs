@@ -37,7 +37,7 @@ use std::sync::mpsc::sync_channel;
 use anyhow::Result;
 
 use crate::data::Dataset;
-use crate::kernel::native_similarity;
+use crate::kernel::{native_similarity, KernelSchedule};
 use crate::runtime::Arg;
 use crate::selection::milo::ClassProbs;
 use crate::selection::proportional_allocation;
@@ -94,6 +94,11 @@ struct ClassPayload {
     /// path honors the same option as the batch path, and the two
     /// memory levers compound.
     knn: Option<usize>,
+    /// Strip schedule for sparse blocks: each worker runs its class
+    /// through the same overlapped build pipeline as the batch path
+    /// ([`crate::kernel::pipeline`]), so `--sim-tile`/`--pipeline-depth`
+    /// steer streaming too.
+    sched: KernelSchedule,
 }
 
 /// Per-class results folded back into [`Metadata`].
@@ -105,7 +110,11 @@ struct ClassResult {
     fixed_picks: Vec<usize>,
 }
 
-fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> ClassResult {
+fn process_class(
+    p: ClassPayload,
+    live: &AtomicUsize,
+    peak: &AtomicUsize,
+) -> Result<ClassResult> {
     // dense or sparse top-knn per the preprocessing option — the
     // bounded-memory pipeline and kernel sparsification compound
     let sim = match p.knn {
@@ -113,11 +122,15 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
             &p.emb,
             crate::kernel::SimMetric::Cosine,
         )),
-        Some(k) => crate::kernel::ClassSim::Sparse(crate::kernel::sparse::sparse_native(
-            &p.emb,
-            crate::kernel::SimMetric::Cosine,
-            k,
-        )),
+        Some(k) => crate::kernel::ClassSim::Sparse(
+            crate::kernel::sparse::sparse_native_scheduled(
+                &p.emb,
+                crate::kernel::SimMetric::Cosine,
+                k,
+                &p.sched,
+            )?
+            .0,
+        ),
     };
     // account this class's working set against the peak for its whole
     // processing lifetime — embeddings + kernel stay alive through the
@@ -158,13 +171,13 @@ fn process_class(p: ClassPayload, live: &AtomicUsize, peak: &AtomicUsize) -> Cla
             .selected
     };
     live.fetch_sub(bytes, Ordering::SeqCst);
-    ClassResult {
+    Ok(ClassResult {
         class: p.class,
         indices: p.indices,
         sge_picks,
         probs,
         fixed_picks,
-    }
+    })
 }
 
 impl<'a> Preprocessor<'a> {
@@ -206,6 +219,7 @@ impl<'a> Preprocessor<'a> {
         let (tx, rx) = sync_channel::<ClassPayload>(stream.max_inflight.max(1));
         let rx = std::sync::Mutex::new(rx);
         let results = std::sync::Mutex::new(Vec::<ClassResult>::with_capacity(c));
+        let worker_err = std::sync::Mutex::new(None::<anyhow::Error>);
 
         let mut encode_err: Option<anyhow::Error> = None;
         std::thread::scope(|scope| {
@@ -215,9 +229,20 @@ impl<'a> Preprocessor<'a> {
                     let payload = { rx.lock().unwrap().recv() };
                     match payload {
                         Ok(p) => {
-                            let r = process_class(p, &live_bytes, &peak_bytes);
+                            // after a failure, keep draining (dropping
+                            // payloads) so the producer never deadlocks
+                            // on a full channel
+                            let failed = worker_err.lock().unwrap().is_some();
+                            let r = (!failed)
+                                .then(|| process_class(p, &live_bytes, &peak_bytes));
                             inflight.fetch_sub(1, Ordering::SeqCst);
-                            results.lock().unwrap().push(r);
+                            match r {
+                                Some(Ok(res)) => results.lock().unwrap().push(res),
+                                Some(Err(e)) => {
+                                    worker_err.lock().unwrap().get_or_insert(e);
+                                }
+                                None => {}
+                            }
                         }
                         Err(_) => break, // channel closed: done
                     }
@@ -226,6 +251,9 @@ impl<'a> Preprocessor<'a> {
             // producer (this thread): PJRT-encode one class at a time
             let mut xbuf = vec![0.0f32; b * d];
             'outer: for (class, idx) in parts.iter().enumerate() {
+                if worker_err.lock().unwrap().is_some() {
+                    break; // a kernel build failed: stop encoding
+                }
                 let x = ds.x(crate::data::Split::Train);
                 let mut emb = Matrix::zeros(idx.len(), e);
                 let mut at = 0usize;
@@ -265,6 +293,7 @@ impl<'a> Preprocessor<'a> {
                     wre_fn: self.opts.wre_function,
                     epsilon: self.opts.epsilon,
                     knn: self.opts.knn,
+                    sched: self.opts.schedule(),
                 };
                 if tx.send(payload).is_err() {
                     break;
@@ -273,6 +302,9 @@ impl<'a> Preprocessor<'a> {
             drop(tx); // close the channel so workers drain and exit
         });
         if let Some(err) = encode_err {
+            return Err(err);
+        }
+        if let Some(err) = worker_err.into_inner().unwrap() {
             return Err(err);
         }
 

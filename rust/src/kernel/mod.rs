@@ -39,10 +39,55 @@
 //!
 //! Metrics: rescaled cosine (default), dot-product, and RBF with the
 //! paper's `kw` parameterization (ablation I.2, Tables 11–12).
+//!
+//! # The overlap pipeline
+//!
+//! Sparse (top-`knn`) builds stream row strips through a bounded
+//! two-slot producer/consumer ([`pipeline::run_pipeline`]): the
+//! similarity execution of strip `t + 1` overlaps the host-side
+//! top-`knn` reduction of strip `t`.
+//!
+//! ```text
+//!   producer (calling thread)          consumer (one scoped thread)
+//!   ┌───────────────┐   sync_channel   ┌───────────────┐
+//!   │ execute strip │ ──(depth − 1)──▶ │ row_topk strip│
+//!   │     t + 1     │    slots         │       t       │
+//!   └───────────────┘                  └───────────────┘
+//! ```
+//!
+//! Two knobs steer it, both surfaced on the CLI and on
+//! [`crate::coordinator::PreprocessOptions`]:
+//!
+//! * **`--sim-tile N`** ([`KernelSchedule::strip_rows`]) — rows per
+//!   native construction strip. PJRT strips are always the artifact's
+//!   baked `sim_tile`.
+//! * **`--pipeline-depth N`** ([`KernelSchedule::depth`]) — `1` is the
+//!   serial reference loop; `2` (default) is classic double buffering.
+//!
+//! Both are **schedule-only**: the single in-order consumer preserves
+//! every accumulation order of the serial build, so output is
+//! bit-identical for any knob setting — which is why neither enters
+//! [`crate::store::MetaKey`]. A panic on either side of the hand-off is
+//! contained and surfaced as an `Err`, never a poisoned build.
+//!
+//! When the manifest provides a fused `topk_{metric}_e{E}` artifact, the
+//! PJRT path performs the top-`K` cut **on-device** and transfers only
+//! `(cols, vals)` candidates per tile (`≈ 2K/tile` of the full strip
+//! bytes); where it provides `embed_sim_topk_{ds}`, the preprocessor
+//! collapses embedding → similarity → top-k into one execution per class
+//! block. Candidate unions are re-reduced on the host with the exact
+//! serial comparator, so on-device selection changes transfer volume,
+//! **never values** — and both fusions fall back transparently when the
+//! artifacts are absent or `knn > K`.
+//!
+//! Dense (`knn = None`) blocks have no host-side reduction stage to
+//! overlap, so they always run the serial loop regardless of `depth`.
 
+pub mod pipeline;
 pub mod sparse;
 pub mod view;
 
+pub use pipeline::{KernelSchedule, PipelineStats};
 pub use sparse::{build_sparse_kernel, SparseKernel};
 pub use view::{KernelRef, KernelRow, KernelView};
 
@@ -172,6 +217,30 @@ pub fn build_class_kernels(
     backend: SimilarityBackend,
     knn: Option<usize>,
 ) -> Result<ClassKernels> {
+    build_class_kernels_scheduled(
+        runtime,
+        embeddings,
+        partition,
+        metric,
+        backend,
+        knn,
+        &KernelSchedule::default(),
+    )
+}
+
+/// [`build_class_kernels`] under an explicit [`KernelSchedule`]. The
+/// schedule steers sparse strip builds only (dense blocks have no
+/// host-side reduction stage to overlap); output is bit-identical for
+/// any schedule.
+pub fn build_class_kernels_scheduled(
+    runtime: Option<&Runtime>,
+    embeddings: &Matrix,
+    partition: &[Vec<usize>],
+    metric: SimMetric,
+    backend: SimilarityBackend,
+    knn: Option<usize>,
+    sched: &KernelSchedule,
+) -> Result<ClassKernels> {
     let per_class = match backend {
         SimilarityBackend::Native => {
             // pure Rust: gather + similarity fan out over classes
@@ -181,10 +250,14 @@ pub fn build_class_kernels(
                 let z = embeddings.gather_rows(idx);
                 let sim = match knn {
                     None => ClassSim::Dense(native_similarity(&z, metric)),
-                    Some(k) => ClassSim::Sparse(sparse::sparse_native(&z, metric, k)),
+                    Some(k) => ClassSim::Sparse(
+                        sparse::sparse_native_scheduled(&z, metric, k, sched)?.0,
+                    ),
                 };
-                ClassKernel { indices: idx.clone(), sim }
+                Ok(ClassKernel { indices: idx.clone(), sim })
             })
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?
         }
         SimilarityBackend::Pjrt => {
             let rt = runtime.ok_or_else(|| {
@@ -204,9 +277,9 @@ pub fn build_class_kernels(
                 for (idx, z) in chunk.iter().zip(gathered) {
                     let sim = match knn {
                         None => ClassSim::Dense(pjrt_similarity(rt, &z, metric)?),
-                        Some(k) => {
-                            ClassSim::Sparse(sparse::sparse_pjrt(rt, &z, metric, k)?)
-                        }
+                        Some(k) => ClassSim::Sparse(
+                            sparse::sparse_pjrt_scheduled(rt, &z, metric, k, sched)?.0,
+                        ),
                     };
                     out.push(ClassKernel { indices: idx.clone(), sim });
                 }

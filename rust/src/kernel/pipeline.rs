@@ -1,0 +1,349 @@
+//! Overlapped strip pipeline for kernel construction.
+//!
+//! Blockwise kernel builds have two alternating stages per row strip:
+//! **produce** (the similarity execution — a PJRT artifact call or the
+//! native cache-blocked matmul) and **consume** (the host-side top-`knn`
+//! reduction). Run serially, the device/matmul side sits idle while the
+//! host selects, and vice versa. [`run_pipeline`] overlaps them with a
+//! bounded two-slot hand-off:
+//!
+//! ```text
+//!   producer (calling thread)          consumer (one scoped thread)
+//!   ┌───────────────┐   sync_channel   ┌───────────────┐
+//!   │ execute strip │ ──(depth − 1)──▶ │ row_topk strip│
+//!   │     t + 1     │    slots         │       t       │
+//!   └───────────────┘                  └───────────────┘
+//! ```
+//!
+//! The producer stays on the calling thread (a [`crate::runtime::Runtime`]
+//! is `!Send`); the consumer is a single in-order scoped thread, so
+//! reductions happen in exactly the serial strip order — which is what
+//! keeps pipelined output *bit-identical* to the serial build (see the
+//! [`super::sparse`] docs for the per-metric argument; the RBF f64 mean
+//! accumulation in particular requires in-order consumption).
+//!
+//! Failure containment: a panic in either stage is caught and surfaced as
+//! an `Err` from [`run_pipeline`] instead of poisoning the build or
+//! deadlocking the peer stage. `depth <= 1` (or a single strip) degrades
+//! to a fully inline serial loop with the same containment.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::Span;
+
+/// Scheduling knobs for blockwise kernel construction. Both knobs are
+/// **schedule-only**: they change when work happens, never any per-entry
+/// value, so they are deliberately excluded from
+/// [`crate::store::MetaKey`] fingerprints (the bit-identity property
+/// tests in `rust/tests/kernel_pipeline.rs` prove the exclusion sound).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSchedule {
+    /// Rows per native construction strip (`None` = the built-in
+    /// default). PJRT strips are always `sim_tile` rows — the artifact's
+    /// tile shape is baked at lowering time — so this knob only affects
+    /// the native backend.
+    pub strip_rows: Option<usize>,
+    /// Pipeline depth: `1` runs strips fully serially on the calling
+    /// thread; `d >= 2` lets the producer run up to `d − 1` strips ahead
+    /// of the consumer (`2` is classic double buffering, the default).
+    pub depth: usize,
+}
+
+impl Default for KernelSchedule {
+    fn default() -> KernelSchedule {
+        KernelSchedule { strip_rows: None, depth: 2 }
+    }
+}
+
+impl KernelSchedule {
+    /// The degenerate serial schedule (`depth = 1`): reference behavior
+    /// for the bit-identity sweep and the bench baseline.
+    pub fn serial() -> KernelSchedule {
+        KernelSchedule { strip_rows: None, depth: 1 }
+    }
+}
+
+/// Timing breakdown of one (possibly pipelined) blockwise build.
+///
+/// `produce_secs`/`consume_secs` are per-stage busy times summed over
+/// strips; under overlap their sum exceeds `wall_secs`. `stall_secs` is
+/// the time the producer spent blocked on a full hand-off channel — the
+/// device-idle component the overlap bench (`BENCH_select.json`
+/// `"overlap"` section) reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    /// Number of row strips processed.
+    pub strips: usize,
+    /// Total time in the produce stage (similarity execution).
+    pub produce_secs: f64,
+    /// Total time in the consume stage (host top-`knn` reduction).
+    pub consume_secs: f64,
+    /// Producer time blocked waiting for a free hand-off slot.
+    pub stall_secs: f64,
+    /// End-to-end wall time of the build.
+    pub wall_secs: f64,
+}
+
+impl PipelineStats {
+    /// Fold another build's timings into this one (used to aggregate
+    /// across class blocks).
+    pub fn merge(&mut self, other: &PipelineStats) {
+        self.strips += other.strips;
+        self.produce_secs += other.produce_secs;
+        self.consume_secs += other.consume_secs;
+        self.stall_secs += other.stall_secs;
+        self.wall_secs += other.wall_secs;
+    }
+
+    /// Fraction of wall time the producer (the device side) spent
+    /// stalled on the hand-off — `0.0` means the device never waited for
+    /// the host reduction.
+    pub fn device_idle_fraction(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            (self.stall_secs / self.wall_secs).clamp(0.0, 1.0)
+        }
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+// A panicked produce closure may leave its captures half-mutated, but on
+// `Err` the whole build is discarded — nothing observes the torn state —
+// so `AssertUnwindSafe` is sound here.
+fn contained<S>(produce: &mut impl FnMut(usize) -> Result<S>, t: usize) -> Result<S> {
+    match catch_unwind(AssertUnwindSafe(|| produce(t))) {
+        Ok(r) => r,
+        Err(p) => Err(anyhow!(
+            "kernel pipeline producer panicked on strip {t}: {}",
+            panic_text(p.as_ref())
+        )),
+    }
+}
+
+/// Run `strips` produce→consume pairs with up to `depth − 1` strips in
+/// flight between the stages.
+///
+/// `produce(t)` runs on the calling thread (it may borrow `!Send` state
+/// such as a [`crate::runtime::Runtime`]); `consume(&mut state, t, strip)`
+/// runs on one scoped consumer thread, strictly in strip order. The
+/// final `state` is returned with the stage timings. Panics in either
+/// stage surface as `Err`; `depth <= 1` or `strips <= 1` runs inline
+/// with no thread.
+pub fn run_pipeline<S, T, P, C>(
+    strips: usize,
+    depth: usize,
+    mut state: T,
+    mut produce: P,
+    mut consume: C,
+) -> Result<(T, PipelineStats)>
+where
+    S: Send,
+    T: Send,
+    P: FnMut(usize) -> Result<S>,
+    C: FnMut(&mut T, usize, S) + Send,
+{
+    let mut stats = PipelineStats { strips, ..Default::default() };
+    let wall0 = Instant::now();
+
+    if depth <= 1 || strips <= 1 {
+        for t in 0..strips {
+            let t0 = Instant::now();
+            let strip = {
+                let _sp = Span::enter("kernel.execute");
+                contained(&mut produce, t)?
+            };
+            stats.produce_secs += t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            {
+                let _sp = Span::enter("kernel.topk");
+                consume(&mut state, t, strip);
+            }
+            stats.consume_secs += t1.elapsed().as_secs_f64();
+        }
+        stats.wall_secs = wall0.elapsed().as_secs_f64();
+        return Ok((state, stats));
+    }
+
+    let (tx, rx) = mpsc::sync_channel::<(usize, S)>(depth - 1);
+    let (joined, consume_secs, produced) = std::thread::scope(|scope| {
+        let handle = scope.spawn(move || {
+            let mut secs = 0.0f64;
+            while let Ok((t, strip)) = rx.recv() {
+                let t0 = Instant::now();
+                {
+                    let _sp = Span::enter("kernel.topk");
+                    consume(&mut state, t, strip);
+                }
+                secs += t0.elapsed().as_secs_f64();
+            }
+            (state, secs)
+        });
+
+        let mut produced: Result<()> = Ok(());
+        for t in 0..strips {
+            let t0 = Instant::now();
+            let r = {
+                let _sp = Span::enter("kernel.execute");
+                contained(&mut produce, t)
+            };
+            stats.produce_secs += t0.elapsed().as_secs_f64();
+            let strip = match r {
+                Ok(s) => s,
+                Err(e) => {
+                    produced = Err(e);
+                    break;
+                }
+            };
+            // Hand off. A full channel means the producer is `depth − 1`
+            // strips ahead — that wait is the stall the stats report.
+            match tx.try_send((t, strip)) {
+                Ok(()) => {}
+                Err(mpsc::TrySendError::Full(v)) => {
+                    let t1 = Instant::now();
+                    let sent = {
+                        let _sp = Span::enter("kernel.pipeline_stall");
+                        tx.send(v)
+                    };
+                    stats.stall_secs += t1.elapsed().as_secs_f64();
+                    if sent.is_err() {
+                        // receiver gone: the consumer panicked; the join
+                        // below reports it
+                        break;
+                    }
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => break,
+            }
+        }
+        drop(tx); // closes the channel so the consumer drains and exits
+
+        match handle.join() {
+            Ok((state, secs)) => (Ok(state), secs, produced),
+            Err(p) => (
+                Err(anyhow!(
+                    "kernel pipeline consumer panicked: {}",
+                    panic_text(p.as_ref())
+                )),
+                0.0,
+                produced,
+            ),
+        }
+    });
+
+    let state = joined?;
+    produced?;
+    stats.consume_secs = consume_secs;
+    stats.wall_secs = wall0.elapsed().as_secs_f64();
+    Ok((state, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sum strips through the pipeline and check ordering + totals.
+    fn sum_build(strips: usize, depth: usize) -> (Vec<usize>, PipelineStats) {
+        let (state, stats) = run_pipeline(
+            strips,
+            depth,
+            Vec::new(),
+            |t| Ok(t * 10),
+            |order: &mut Vec<usize>, t, v| {
+                assert_eq!(v, t * 10);
+                order.push(t);
+            },
+        )
+        .unwrap();
+        (state, stats)
+    }
+
+    #[test]
+    fn consumes_in_order_at_every_depth() {
+        for depth in [1, 2, 3, 8] {
+            for strips in [0, 1, 2, 7] {
+                let (order, stats) = sum_build(strips, depth);
+                assert_eq!(order, (0..strips).collect::<Vec<_>>(), "depth {depth}");
+                assert_eq!(stats.strips, strips);
+                assert!(stats.wall_secs >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn producer_error_surfaces() {
+        let r = run_pipeline(
+            4,
+            2,
+            (),
+            |t| if t == 2 { Err(anyhow!("boom")) } else { Ok(t) },
+            |_: &mut (), _, _| {},
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn producer_panic_is_contained() {
+        for depth in [1, 2] {
+            let r = run_pipeline(
+                4,
+                depth,
+                (),
+                |t| {
+                    if t == 1 {
+                        panic!("producer exploded");
+                    }
+                    Ok(t)
+                },
+                |_: &mut (), _, _| {},
+            );
+            let err = format!("{:#}", r.unwrap_err());
+            assert!(err.contains("producer"), "depth {depth}: {err}");
+            assert!(err.contains("producer exploded"), "depth {depth}: {err}");
+        }
+    }
+
+    #[test]
+    fn consumer_panic_is_contained() {
+        let r = run_pipeline(
+            64,
+            2,
+            (),
+            |t| Ok(t),
+            |_: &mut (), t, _| {
+                if t == 1 {
+                    panic!("consumer exploded");
+                }
+            },
+        );
+        let err = format!("{:#}", r.unwrap_err());
+        assert!(err.contains("consumer"), "{err}");
+    }
+
+    #[test]
+    fn stall_is_bounded_by_wall() {
+        let (_, stats) = run_pipeline(
+            8,
+            2,
+            (),
+            |t| Ok(t),
+            |_: &mut (), _, _| std::thread::sleep(std::time::Duration::from_millis(1)),
+        )
+        .unwrap();
+        assert!(stats.stall_secs <= stats.wall_secs + 1e-3);
+        let f = stats.device_idle_fraction();
+        assert!((0.0..=1.0).contains(&f));
+    }
+}

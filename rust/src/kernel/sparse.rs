@@ -26,6 +26,22 @@
 //! Peak construction memory is one strip plus the kept entries — the
 //! dense block never exists, for either backend.
 //!
+//! Both backends run their strips through the overlapped
+//! [`super::pipeline`]: strip `t + 1`'s similarity execution (PJRT
+//! artifact call or native block matmul) overlaps strip `t`'s host-side
+//! top-`knn` reduction, controlled by a [`KernelSchedule`]. The single
+//! in-order consumer preserves every accumulation order the serial build
+//! uses (the dot-metric min fold, the RBF f64 mean), so pipelined output
+//! is **bit-identical** to `depth = 1` — `rust/tests/kernel_pipeline.rs`
+//! sweeps the property. When the manifest carries a fused
+//! `topk_{metric}_e{E}` artifact (similarity + per-tile top-`K` in one
+//! execution), the PJRT path additionally moves the cut on-device and
+//! transfers only `(cols, vals)` candidates — `≈ 2K/tile` of the strip
+//! bytes — falling back to host top-k when the artifact is absent or
+//! `knn > K`. Candidate unions are re-reduced on the host with the exact
+//! `row_topk` comparator, so the device cut changes transfer volume,
+//! never values.
+//!
 //! # Semantics: when sparse changes selections
 //!
 //! An unstored pair has similarity exactly `0.0` (distance `1.0`), so
@@ -42,18 +58,19 @@
 
 use std::cmp::Ordering;
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{Arg, Runtime};
 use crate::tensor::Matrix;
 use crate::util::math::round_up;
 
+use super::pipeline::{run_pipeline, KernelSchedule, PipelineStats};
 use super::{SimMetric, SimilarityBackend};
 
 /// Rows per native construction strip: large enough to amortize the
 /// block matmul, small enough that a strip (`STRIP_ROWS × n_c` floats)
 /// stays cache-resident for class-partition sizes.
-const STRIP_ROWS: usize = 128;
+pub(crate) const STRIP_ROWS: usize = 128;
 
 /// CSR top-`knn` similarity kernel. See the [module docs](self) for the
 /// layout and construction contract.
@@ -118,17 +135,40 @@ impl SparseKernel {
     }
 }
 
+/// Reusable workspace for [`row_topk_into`]: the candidate-column index
+/// buffer, grown once and reused across every row of a build instead of
+/// allocating a fresh `Vec` per call.
+#[derive(Default)]
+pub(crate) struct TopkScratch {
+    idx: Vec<u32>,
+}
+
+impl TopkScratch {
+    pub(crate) fn new() -> TopkScratch {
+        TopkScratch::default()
+    }
+}
+
 /// Keep row `i`'s `knn` largest scores. The self-loop (`diag == i`) is
 /// always kept; among the rest, ties break toward the smaller column so
 /// the result is a deterministic function of the scores. Returned
-/// entries are sorted by column.
-pub(crate) fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
+/// entries are sorted by column. Selection is a `select_nth_unstable_by`
+/// partial partition over `scratch`'s reused index buffer — the only
+/// allocation is the returned row itself.
+pub(crate) fn row_topk_into(
+    scores: &[f32],
+    diag: usize,
+    knn: usize,
+    scratch: &mut TopkScratch,
+) -> Vec<(u32, f32)> {
     let n = scores.len();
     debug_assert!(diag < n && knn >= 1);
     if knn >= n {
         return scores.iter().enumerate().map(|(c, &v)| (c as u32, v)).collect();
     }
-    let mut idx: Vec<u32> = (0..n as u32).filter(|&c| c as usize != diag).collect();
+    let idx = &mut scratch.idx;
+    idx.clear();
+    idx.extend((0..n as u32).filter(|&c| c as usize != diag));
     let keep = knn - 1; // the diagonal occupies one of the knn slots
     let by_score_then_col = |a: &u32, b: &u32| {
         let (sa, sb) = (scores[*a as usize], scores[*b as usize]);
@@ -143,7 +183,13 @@ pub(crate) fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32
     }
     idx.push(diag as u32);
     idx.sort_unstable();
-    idx.into_iter().map(|c| (c, scores[c as usize])).collect()
+    idx.iter().map(|&c| (c, scores[c as usize])).collect()
+}
+
+/// [`row_topk_into`] with a one-shot scratch, for callers outside the
+/// strip loops (dense sparsification, incremental re-top-k).
+pub(crate) fn row_topk(scores: &[f32], diag: usize, knn: usize) -> Vec<(u32, f32)> {
+    row_topk_into(scores, diag, knn, &mut TopkScratch::new())
 }
 
 /// Union-symmetrize per-row kept lists (each sorted by column) and pack
@@ -227,103 +273,158 @@ pub fn build_sparse_kernel(
 
 /// `r1 − r0` contiguous rows of `src` as their own matrix (the strip
 /// operand for the blockwise matmul).
-fn block_rows(src: &Matrix, r0: usize, r1: usize) -> Matrix {
+pub(crate) fn block_rows(src: &Matrix, r0: usize, r1: usize) -> Matrix {
     Matrix::from_vec(r1 - r0, src.cols, src.data()[r0 * src.cols..r1 * src.cols].to_vec())
         .expect("block rows dims are consistent by construction")
 }
 
-/// Native blockwise construction. Per-entry f32 values are computed by
-/// the exact operations [`super::native_similarity`] performs (same
-/// normalized operands, same strip matmul loop, same per-entry
-/// transform), so a complete (`knn ≥ n`) sparse kernel holds the exact
-/// dense values.
+/// Native blockwise construction under the default (double-buffered)
+/// schedule. Per-entry f32 values are computed by the exact operations
+/// [`super::native_similarity`] performs (same normalized operands, same
+/// strip matmul, same per-entry transform), so a complete (`knn ≥ n`)
+/// sparse kernel holds the exact dense values.
 pub fn sparse_native(z: &Matrix, metric: SimMetric, knn: usize) -> SparseKernel {
+    sparse_native_scheduled(z, metric, knn, &KernelSchedule::default())
+        .expect("native kernel build failed")
+        .0
+}
+
+/// [`sparse_native`] under an explicit [`KernelSchedule`]: the strip
+/// matmul (produce) overlaps the previous strip's top-`knn` reduction
+/// (consume) through [`run_pipeline`]. Every per-entry value and every
+/// accumulation order (the dot min fold over whole strips in strip
+/// order, the RBF f64 mean in dense row-major order) matches the serial
+/// build exactly — output is bit-identical for any `strip_rows`/`depth`.
+pub fn sparse_native_scheduled(
+    z: &Matrix,
+    metric: SimMetric,
+    knn: usize,
+    sched: &KernelSchedule,
+) -> Result<(SparseKernel, PipelineStats)> {
     let n = z.rows;
     if n == 0 {
-        return SparseKernel { n: 0, row_ptr: vec![0], cols: Vec::new(), vals: Vec::new() };
+        let empty = SparseKernel { n: 0, row_ptr: vec![0], cols: Vec::new(), vals: Vec::new() };
+        return Ok((empty, PipelineStats::default()));
     }
     let knn = knn.clamp(1, n);
+    let strip_h = sched.strip_rows.unwrap_or(STRIP_ROWS).max(1);
+    let strips = n.div_ceil(strip_h);
+    let bounds = |t: usize| (t * strip_h, (t * strip_h + strip_h).min(n));
     match metric {
         SimMetric::Cosine => {
             let mut zn = z.clone();
             zn.l2_normalize_rows();
-            let mut rows = Vec::with_capacity(n);
-            let mut at = 0;
-            while at < n {
-                let hi = (at + STRIP_ROWS).min(n);
-                let block = block_rows(&zn, at, hi);
-                let mut strip = block.matmul_nt(&zn);
-                for v in strip.data_mut().iter_mut() {
-                    *v = 0.5 + 0.5 * *v;
-                }
-                for r in 0..(hi - at) {
-                    rows.push(row_topk(strip.row(r), at + r, knn));
-                }
-                at = hi;
-            }
-            kernel_from_topk(n, rows, 0.0)
+            let zn = &zn;
+            let ((rows, _), stats) = run_pipeline(
+                strips,
+                sched.depth,
+                (Vec::with_capacity(n), TopkScratch::new()),
+                |t| {
+                    let (at, hi) = bounds(t);
+                    let mut strip = block_rows(zn, at, hi).matmul_nt(zn);
+                    for v in strip.data_mut().iter_mut() {
+                        *v = 0.5 + 0.5 * *v;
+                    }
+                    Ok(strip)
+                },
+                |(rows, scratch): &mut (Vec<Vec<(u32, f32)>>, TopkScratch), t, strip| {
+                    let (at, hi) = bounds(t);
+                    for r in 0..(hi - at) {
+                        rows.push(row_topk_into(strip.row(r), at + r, knn, scratch));
+                    }
+                },
+            )?;
+            Ok((kernel_from_topk(n, rows, 0.0), stats))
         }
         SimMetric::Dot => {
-            let mut rows = Vec::with_capacity(n);
-            let mut min = f32::MAX;
-            let mut at = 0;
-            while at < n {
-                let hi = (at + STRIP_ROWS).min(n);
-                let block = block_rows(z, at, hi);
-                let strip = block.matmul_nt(z);
-                min = strip.data().iter().cloned().fold(min, f32::min);
-                for r in 0..(hi - at) {
-                    rows.push(row_topk(strip.row(r), at + r, knn));
-                }
-                at = hi;
+            struct DotState {
+                rows: Vec<Vec<(u32, f32)>>,
+                min: f32,
+                scratch: TopkScratch,
             }
+            let (st, stats) = run_pipeline(
+                strips,
+                sched.depth,
+                DotState {
+                    rows: Vec::with_capacity(n),
+                    min: f32::MAX,
+                    scratch: TopkScratch::new(),
+                },
+                |t| {
+                    let (at, hi) = bounds(t);
+                    Ok(block_rows(z, at, hi).matmul_nt(z))
+                },
+                |st: &mut DotState, t, strip| {
+                    let (at, hi) = bounds(t);
+                    st.min = strip.data().iter().cloned().fold(st.min, f32::min);
+                    for r in 0..(hi - at) {
+                        st.rows.push(row_topk_into(strip.row(r), at + r, knn, &mut st.scratch));
+                    }
+                },
+            )?;
             // additive shift to non-negativity (paper I.2). The shift is
             // monotone, so applying it after top-k selection keeps the
             // kept set identical to selecting on shifted values.
-            kernel_from_topk(n, rows, min)
+            Ok((kernel_from_topk(n, st.rows, st.min), stats))
         }
         SimMetric::Rbf { kw } => {
             // One pass over squared-distance strips: keep each row's knn
             // *smallest* d² (similarity is monotone-decreasing in d²)
-            // while accumulating the matrix mean — in dense row-major
-            // order, so gamma matches the dense parameterization exactly.
+            // while accumulating the matrix mean. The single in-order
+            // consumer folds rows in dense row-major order, so the f64
+            // mean — and hence gamma — matches the dense
+            // parameterization exactly.
             let mut sq = vec![0.0f32; n];
             for (i, s) in sq.iter_mut().enumerate() {
                 *s = z.row(i).iter().map(|v| v * v).sum();
             }
-            let mut rows = Vec::with_capacity(n);
-            let mut sum = 0.0f64;
-            let mut at = 0;
-            // one reused buffer of negated d² scores (smallest d² =
-            // largest similarity) — no per-row allocation
-            let mut neg = vec![0.0f32; n];
-            while at < n {
-                let hi = (at + STRIP_ROWS).min(n);
-                let block = block_rows(z, at, hi);
-                let strip = block.matmul_nt(z);
-                for r in 0..(hi - at) {
-                    let i = at + r;
-                    let dots = strip.row(r);
-                    for j in 0..n {
-                        let v = (sq[i] + sq[j] - 2.0 * dots[j]).max(0.0);
-                        neg[j] = -v;
-                        sum += v as f64;
-                    }
-                    let mut kept = row_topk(&neg, i, knn);
-                    for e in kept.iter_mut() {
-                        e.1 = -e.1;
-                    }
-                    rows.push(kept);
-                }
-                at = hi;
+            let sq = &sq;
+            struct RbfState {
+                rows: Vec<Vec<(u32, f32)>>,
+                sum: f64,
+                // one reused buffer of negated d² scores (smallest d² =
+                // largest similarity) — no per-row allocation
+                neg: Vec<f32>,
+                scratch: TopkScratch,
             }
-            let mean = (sum / (n * n) as f64).max(1e-12);
+            let (st, stats) = run_pipeline(
+                strips,
+                sched.depth,
+                RbfState {
+                    rows: Vec::with_capacity(n),
+                    sum: 0.0,
+                    neg: vec![0.0f32; n],
+                    scratch: TopkScratch::new(),
+                },
+                |t| {
+                    let (at, hi) = bounds(t);
+                    Ok(block_rows(z, at, hi).matmul_nt(z))
+                },
+                |st: &mut RbfState, t, strip| {
+                    let (at, hi) = bounds(t);
+                    for r in 0..(hi - at) {
+                        let i = at + r;
+                        let dots = strip.row(r);
+                        for j in 0..n {
+                            let v = (sq[i] + sq[j] - 2.0 * dots[j]).max(0.0);
+                            st.neg[j] = -v;
+                            st.sum += v as f64;
+                        }
+                        let mut kept = row_topk_into(&st.neg, i, knn, &mut st.scratch);
+                        for e in kept.iter_mut() {
+                            e.1 = -e.1;
+                        }
+                        st.rows.push(kept);
+                    }
+                },
+            )?;
+            let mean = (st.sum / (n * n) as f64).max(1e-12);
             let gamma = (1.0 / (kw * mean)) as f32;
-            let mut kernel = symmetrize(n, rows);
+            let mut kernel = symmetrize(n, st.rows);
             for v in kernel.vals.iter_mut() {
                 *v = (-gamma * *v).exp();
             }
-            kernel
+            Ok((kernel, stats))
         }
     }
 }
@@ -359,96 +460,342 @@ fn mean_sq_dist_blockwise(z: &Matrix) -> f64 {
     sum / (n * n) as f64
 }
 
-/// PJRT blockwise construction: one `sim_tile × n` strip at a time
-/// through the Pallas similarity artifact (the same tile calls
-/// [`super::pjrt_similarity`] makes, minus the `n × n` assembly). RBF
-/// gamma is derived blockwise natively so it matches the dense PJRT
-/// path's parameterization exactly.
+/// PJRT blockwise construction under the default (double-buffered)
+/// schedule: one `sim_tile × n` strip at a time through the Pallas
+/// similarity artifact (the same tile calls [`super::pjrt_similarity`]
+/// makes, minus the `n × n` assembly). RBF gamma is derived blockwise
+/// natively so it matches the dense PJRT path's parameterization
+/// exactly.
 pub fn sparse_pjrt(
     rt: &Runtime,
     z: &Matrix,
     metric: SimMetric,
     knn: usize,
 ) -> Result<SparseKernel> {
+    Ok(sparse_pjrt_scheduled(rt, z, metric, knn, &KernelSchedule::default())?.0)
+}
+
+/// [`sparse_pjrt`] under an explicit [`KernelSchedule`]: artifact
+/// execution for strip `t + 1` overlaps strip `t`'s host-side reduction.
+/// When the manifest carries a `topk_{metric}_e{E}` artifact wide enough
+/// for `knn`, the top-`K` cut runs on-device and only candidate
+/// `(cols, vals)` rows come back; otherwise full similarity strips are
+/// reduced on the host. Both paths produce the same kernel.
+pub fn sparse_pjrt_scheduled(
+    rt: &Runtime,
+    z: &Matrix,
+    metric: SimMetric,
+    knn: usize,
+    sched: &KernelSchedule,
+) -> Result<(SparseKernel, PipelineStats)> {
     let n = z.rows;
     if n == 0 {
-        return Ok(SparseKernel {
-            n: 0,
-            row_ptr: vec![0],
-            cols: Vec::new(),
-            vals: Vec::new(),
-        });
+        let empty = SparseKernel { n: 0, row_ptr: vec![0], cols: Vec::new(), vals: Vec::new() };
+        return Ok((empty, PipelineStats::default()));
     }
     let knn = knn.clamp(1, n);
-    let tile = rt.manifest().sim_tile;
     let e = z.cols;
+    let base = match metric {
+        SimMetric::Cosine => "cosine",
+        SimMetric::Dot => "dot",
+        SimMetric::Rbf { .. } => "rbf",
+    };
+    let gamma = match metric {
+        SimMetric::Rbf { kw } => {
+            Some((1.0 / (kw * mean_sq_dist_blockwise(z).max(1e-12))) as f32)
+        }
+        _ => None,
+    };
+    let dot = matches!(metric, SimMetric::Dot);
+
+    // On-device top-k when the fused artifact exists and is wide enough:
+    // `knn ≤ K` guarantees each tile's top-K contains every member of
+    // the row's global top-knn that lives in that tile (fewer than knn
+    // entries precede it in the strict score-then-column order, so fewer
+    // than knn ≤ K precede it within its own tile). Absent or too
+    // narrow, fall back to host top-k transparently.
+    let topk_name = format!("topk_{base}_e{e}");
+    if let Some(k) = rt.manifest().artifacts.get(&topk_name).and_then(|a| a.k) {
+        if knn <= k {
+            let tile = rt
+                .manifest()
+                .artifacts
+                .get(&topk_name)
+                .and_then(|a| a.tile)
+                .unwrap_or(rt.manifest().sim_tile);
+            let spec = DeviceTopkSpec { artifact: &topk_name, k, tile, gamma, dot_shift: dot };
+            return device_topk_build(rt, z, knn, &spec, sched.depth);
+        }
+    }
+
+    // host top-k over full similarity strips
+    let tile = rt.manifest().sim_tile;
     let np = round_up(n, tile);
     let mut zp = Matrix::zeros(np, e);
     zp.write_rows(0, z);
-
-    let artifact;
-    let mut gamma = 0.0f32;
-    match metric {
-        SimMetric::Cosine => artifact = format!("sim_cosine_e{e}"),
-        SimMetric::Dot => artifact = format!("sim_dot_e{e}"),
-        SimMetric::Rbf { kw } => {
-            artifact = format!("sim_rbf_e{e}");
-            gamma = (1.0 / (kw * mean_sq_dist_blockwise(z).max(1e-12))) as f32;
-        }
-    }
-
+    let zp = &zp;
     let tiles = np / tile;
-    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
-    let mut min = f32::MAX;
-    let mut strip = vec![0.0f32; tile * np];
-    for bi in 0..tiles {
-        let a = Matrix::from_vec(
-            tile,
-            e,
-            zp.data()[bi * tile * e..(bi + 1) * tile * e].to_vec(),
-        )?;
-        for bj in 0..tiles {
-            let b = Matrix::from_vec(
+    let artifact = format!("sim_{base}_e{e}");
+    let artifact = &artifact;
+
+    struct HostState {
+        rows: Vec<Vec<(u32, f32)>>,
+        min: f32,
+        scratch: TopkScratch,
+    }
+    let (st, stats) = run_pipeline(
+        tiles,
+        sched.depth,
+        HostState { rows: Vec::with_capacity(n), min: f32::MAX, scratch: TopkScratch::new() },
+        |bi| {
+            let a = Matrix::from_vec(
                 tile,
                 e,
-                zp.data()[bj * tile * e..(bj + 1) * tile * e].to_vec(),
+                zp.data()[bi * tile * e..(bi + 1) * tile * e].to_vec(),
             )?;
-            let res = match metric {
-                SimMetric::Rbf { .. } => rt.execute(
-                    &artifact,
-                    &[Arg::F32(a.data()), Arg::F32(b.data()), Arg::F32(&[gamma])],
-                )?,
-                _ => rt.execute(&artifact, &[Arg::F32(a.data()), Arg::F32(b.data())])?,
-            };
-            let block = &res[0];
+            let mut strip = vec![0.0f32; tile * np];
+            for bj in 0..tiles {
+                let b = Matrix::from_vec(
+                    tile,
+                    e,
+                    zp.data()[bj * tile * e..(bj + 1) * tile * e].to_vec(),
+                )?;
+                let res = match gamma {
+                    Some(g) => rt.execute(
+                        artifact,
+                        &[Arg::F32(a.data()), Arg::F32(b.data()), Arg::F32(&[g])],
+                    )?,
+                    None => {
+                        rt.execute(artifact, &[Arg::F32(a.data()), Arg::F32(b.data())])?
+                    }
+                };
+                let block = &res[0];
+                for r in 0..tile {
+                    strip[r * np + bj * tile..r * np + (bj + 1) * tile]
+                        .copy_from_slice(&block[r * tile..(r + 1) * tile]);
+                }
+            }
+            Ok(strip)
+        },
+        |st: &mut HostState, bi, strip: Vec<f32>| {
             for r in 0..tile {
-                strip[r * np + bj * tile..r * np + (bj + 1) * tile]
-                    .copy_from_slice(&block[r * tile..(r + 1) * tile]);
+                let i = bi * tile + r;
+                if i >= n {
+                    break;
+                }
+                // crop padded columns before selection — padded
+                // rows/cols must never become edges
+                let srow = &strip[r * np..r * np + n];
+                if dot {
+                    st.min = srow.iter().cloned().fold(st.min, f32::min);
+                }
+                st.rows.push(row_topk_into(srow, i, knn, &mut st.scratch));
             }
-        }
-        for r in 0..tile {
-            let i = bi * tile + r;
-            if i >= n {
-                break;
-            }
-            // crop padded columns before selection — padded rows/cols
-            // must never become edges
-            let srow = &strip[r * np..r * np + n];
-            if matches!(metric, SimMetric::Dot) {
-                min = srow.iter().cloned().fold(min, f32::min);
-            }
-            rows.push(row_topk(srow, i, knn));
-        }
-    }
-    let mut kernel = symmetrize(n, rows);
+        },
+    )?;
+    let mut kernel = symmetrize(n, st.rows);
     // dot metric: shift after selection (monotone) over the cropped
     // min, matching the dense PJRT path
-    if matches!(metric, SimMetric::Dot) && min < 0.0 {
+    if dot && st.min < 0.0 {
         for v in kernel.vals.iter_mut() {
-            *v -= min;
+            *v -= st.min;
         }
     }
-    Ok(kernel)
+    Ok((kernel, stats))
+}
+
+/// Parameters of one fused similarity → per-tile top-`K` artifact
+/// execution (`topk_{metric}_e{E}` over embeddings, or
+/// `embed_sim_topk_{ds}` over raw feature rows).
+struct DeviceTopkSpec<'a> {
+    artifact: &'a str,
+    /// Per-tile candidate width `K` baked into the artifact.
+    k: usize,
+    /// Tile rows baked into the artifact.
+    tile: usize,
+    /// RBF gamma (passed as the artifact's fourth input when set).
+    gamma: Option<f32>,
+    /// Apply the dot-metric non-negativity shift from the device row
+    /// minima.
+    dot_shift: bool,
+}
+
+/// One produced strip of the on-device top-k path: per-`bj` candidate
+/// `(vals, cols)` pairs instead of the full `tile × n` similarity strip
+/// (`≈ 2K/tile` of the bytes).
+struct TopkStrip {
+    /// Per `bj` tile: parallel `(vals, cols)` buffers, each `tile · K`
+    /// long, row-major; `cols` holds tile-local indices as exact f32s.
+    tiles: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Tile diagonal from the `bi == bj` execution — the self-loop
+    /// values, which a dot-metric top-K may otherwise drop.
+    diag: Vec<f32>,
+    /// Per `bj` row minima over valid columns (`[bj · tile + r]`), used
+    /// only for the dot shift.
+    rowmin: Vec<f32>,
+}
+
+/// Run the pipelined on-device top-k build: produce executes the fused
+/// artifact per `(bi, bj)` tile pair; consume merges each row's per-tile
+/// candidates (plus the diagonal) with the exact [`row_topk`] comparator
+/// — so device selection changes transfer volume, never values.
+fn device_topk_build(
+    rt: &Runtime,
+    src: &Matrix,
+    knn: usize,
+    spec: &DeviceTopkSpec<'_>,
+    depth: usize,
+) -> Result<(SparseKernel, PipelineStats)> {
+    let n = src.rows;
+    let d = src.cols;
+    let (tile, k) = (spec.tile, spec.k);
+    let np = round_up(n, tile);
+    let mut zp = Matrix::zeros(np, d);
+    zp.write_rows(0, src);
+    let zp = &zp;
+    let tiles = np / tile;
+
+    struct MergeState {
+        rows: Vec<Vec<(u32, f32)>>,
+        min: f32,
+        cand: Vec<(u32, f32)>,
+    }
+    let (st, stats) = run_pipeline(
+        tiles,
+        depth,
+        MergeState { rows: Vec::with_capacity(n), min: f32::MAX, cand: Vec::new() },
+        |bi| {
+            let a = Matrix::from_vec(
+                tile,
+                d,
+                zp.data()[bi * tile * d..(bi + 1) * tile * d].to_vec(),
+            )?;
+            let mut out = TopkStrip {
+                tiles: Vec::with_capacity(tiles),
+                diag: Vec::new(),
+                rowmin: Vec::with_capacity(tiles * tile),
+            };
+            for bj in 0..tiles {
+                let b = Matrix::from_vec(
+                    tile,
+                    d,
+                    zp.data()[bj * tile * d..(bj + 1) * tile * d].to_vec(),
+                )?;
+                // columns ≥ valid are padding: masked to −inf before the
+                // device cut so they can never be candidates
+                let valid = [(n - bj * tile).min(tile) as f32];
+                let gamma_buf = [spec.gamma.unwrap_or(0.0)];
+                let mut args = vec![Arg::F32(a.data()), Arg::F32(b.data()), Arg::F32(&valid)];
+                if spec.gamma.is_some() {
+                    args.push(Arg::F32(&gamma_buf));
+                }
+                let mut res = rt.execute(spec.artifact, &args)?;
+                if res.len() != 4 {
+                    bail!(
+                        "artifact {} returned {} outputs, expected (vals, cols, diag, rowmin)",
+                        spec.artifact,
+                        res.len()
+                    );
+                }
+                let rowmin = res.pop().unwrap();
+                let dg = res.pop().unwrap();
+                let cols = res.pop().unwrap();
+                let vals = res.pop().unwrap();
+                if vals.len() != tile * k
+                    || cols.len() != tile * k
+                    || dg.len() != tile
+                    || rowmin.len() != tile
+                {
+                    bail!("artifact {} output shapes unexpected", spec.artifact);
+                }
+                if bj == bi {
+                    out.diag = dg;
+                }
+                out.rowmin.extend_from_slice(&rowmin);
+                out.tiles.push((vals, cols));
+            }
+            Ok(out)
+        },
+        |st: &mut MergeState, bi, strip: TopkStrip| {
+            for r in 0..tile {
+                let i = bi * tile + r;
+                if i >= n {
+                    break;
+                }
+                if spec.dot_shift {
+                    // per-row device minima over valid columns reproduce
+                    // the serial full-strip fold (f32 min is
+                    // order-insensitive)
+                    for bj in 0..tiles {
+                        st.min = st.min.min(strip.rowmin[bj * tile + r]);
+                    }
+                }
+                st.cand.clear();
+                for (bj, (vals, cols)) in strip.tiles.iter().enumerate() {
+                    let at = r * k;
+                    for s in 0..k {
+                        // masked candidates decode to columns ≥ n and
+                        // drop here, as does the diagonal (re-added from
+                        // the device diag output below)
+                        let c = bj * tile + cols[at + s] as usize;
+                        if c >= n || c == i {
+                            continue;
+                        }
+                        st.cand.push((c as u32, vals[at + s]));
+                    }
+                }
+                let keep = knn - 1;
+                if keep == 0 {
+                    st.cand.clear();
+                } else if st.cand.len() > keep {
+                    st.cand.select_nth_unstable_by(keep - 1, |a, b| {
+                        b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0))
+                    });
+                    st.cand.truncate(keep);
+                }
+                st.cand.push((i as u32, strip.diag[r]));
+                st.cand.sort_unstable_by_key(|e| e.0);
+                st.rows.push(st.cand.clone());
+            }
+        },
+    )?;
+    let mut kernel = symmetrize(n, st.rows);
+    if spec.dot_shift && st.min < 0.0 {
+        for v in kernel.vals.iter_mut() {
+            *v -= st.min;
+        }
+    }
+    Ok((kernel, stats))
+}
+
+/// Build a class block's sparse kernel straight from **raw feature
+/// rows** through a fused `embed_sim_topk_{ds}` artifact — embedding →
+/// cosine similarity → per-tile top-`K` collapsed into one execution per
+/// tile pair. Requires `knn ≤ K`; callers gate on the artifact's `k`
+/// meta and fall back to the encode-then-kernel path otherwise.
+pub fn sparse_fused_pjrt(
+    rt: &Runtime,
+    features: &Matrix,
+    artifact: &str,
+    knn: usize,
+    sched: &KernelSchedule,
+) -> Result<(SparseKernel, PipelineStats)> {
+    let n = features.rows;
+    if n == 0 {
+        let empty = SparseKernel { n: 0, row_ptr: vec![0], cols: Vec::new(), vals: Vec::new() };
+        return Ok((empty, PipelineStats::default()));
+    }
+    let entry = rt.manifest().artifact(artifact)?;
+    let k = entry
+        .k
+        .ok_or_else(|| anyhow!("artifact {artifact} lacks a top-k width (`k`) meta"))?;
+    let knn = knn.clamp(1, n);
+    if knn > k {
+        bail!("fused artifact {artifact} is top-{k}: too narrow for knn={knn}");
+    }
+    let tile = entry.tile.unwrap_or(rt.manifest().sim_tile);
+    let spec = DeviceTopkSpec { artifact, k, tile, gamma: None, dot_shift: false };
+    device_topk_build(rt, features, knn, &spec, sched.depth)
 }
 
 #[cfg(test)]
@@ -494,6 +841,68 @@ mod tests {
         let full = SparseKernel::from_dense(&m, 20);
         assert!(full.is_complete());
         assert_eq!(full.nnz(), 400);
+    }
+
+    /// Regression pin for the scratch-buffer partial selection: ties
+    /// must break toward the smaller column (`select_nth_unstable_by`
+    /// is *unstable*, so only the explicit `.then(a.cmp(b))` arm keeps
+    /// the result deterministic), the self-loop always survives, and a
+    /// reused scratch is indistinguishable from a fresh one.
+    #[test]
+    fn row_topk_breaks_ties_toward_smaller_columns() {
+        // all-equal scores: top-knn must be exactly the first columns
+        // (plus the self-loop), for every diagonal position
+        let scores = [0.5f32; 9];
+        for diag in [0, 4, 8] {
+            let row = row_topk(&scores, diag, 4);
+            let mut expect: Vec<u32> = (0..9u32).filter(|&c| c as usize != diag).take(3).collect();
+            expect.push(diag as u32);
+            expect.sort_unstable();
+            let got: Vec<u32> = row.iter().map(|e| e.0).collect();
+            assert_eq!(got, expect, "diag {diag}");
+        }
+        // duplicated score groups: the kept member of each tied group is
+        // the smallest column, byte-for-byte stable across a reused
+        // scratch and many repetitions
+        let scores = [0.9, 0.1, 0.9, 0.7, 0.1, 0.7, 0.9, 0.3];
+        let reference = row_topk(&scores, 7, 3);
+        assert_eq!(reference, vec![(0, 0.9), (2, 0.9), (7, 0.3)]);
+        let mut scratch = TopkScratch::new();
+        for _ in 0..5 {
+            assert_eq!(row_topk_into(&scores, 7, 3, &mut scratch), reference);
+        }
+        // and through the full build: a kernel over rank-1 embeddings
+        // (every off-diagonal similarity identical per row) is a pure
+        // tie-break exercise — byte-identical across repeated builds
+        let mut z = Matrix::zeros(12, 3);
+        for i in 0..12 {
+            z.set(i, 0, 1.0);
+        }
+        let a = sparse_native(&z, SimMetric::Cosine, 4);
+        let b = sparse_native(&z, SimMetric::Cosine, 4);
+        assert_eq!(a, b);
+        for i in 0..12 {
+            assert!(a.row(i).0.contains(&(i as u32)));
+        }
+    }
+
+    /// Quick in-module cousin of `tests/kernel_pipeline.rs`: the
+    /// pipelined build is the serial build, byte for byte.
+    #[test]
+    fn scheduled_build_matches_serial_exactly() {
+        let z = random_embeddings(50, 5, 11);
+        for metric in [SimMetric::Cosine, SimMetric::Dot, SimMetric::Rbf { kw: 0.4 }] {
+            let (serial, _) =
+                sparse_native_scheduled(&z, metric, 6, &KernelSchedule::serial()).unwrap();
+            for sched in [
+                KernelSchedule::default(),
+                KernelSchedule { strip_rows: Some(9), depth: 4 },
+            ] {
+                let (piped, stats) = sparse_native_scheduled(&z, metric, 6, &sched).unwrap();
+                assert_eq!(piped, serial, "{metric:?} {sched:?}");
+                assert!(stats.strips > 0);
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,16 @@
 //!   [`store::MetaStore::publish_epoch`] chains under an epoch head and
 //!   [`serve::SubsetServer::publish`] pushes to subscribed trainers as
 //!   `EPOCH_ADVANCE` / `SUBSET_DELTA` frames.
+//! * **Overlapped kernel construction** — [`kernel::pipeline`] is the
+//!   double-buffered strip pipeline under every blockwise kernel build:
+//!   strip `t + 1`'s similarity execution (PJRT artifact call or native
+//!   cache-blocked matmul) overlaps strip `t`'s host-side top-`knn`
+//!   reduction through a bounded two-slot hand-off, with producer/consumer
+//!   panics contained as `Err`. The batch, streaming, and continual paths
+//!   all ride it ([`kernel::KernelSchedule`] — `--sim-tile` /
+//!   `--pipeline-depth`, schedule-only and bit-identical to serial); where
+//!   the manifest carries `topk_*` / `embed_sim_topk_*` artifacts, the
+//!   top-`k` cut happens on-device and only candidate rows come back.
 //! * **Metadata store & selection service** — [`store`] is a versioned,
 //!   content-addressed registry of pre-processed selection metadata
 //!   (binary artifacts + a shared in-process LRU), and [`serve`] exposes
@@ -120,8 +130,8 @@ pub mod prelude {
     pub use crate::data::{Dataset, DatasetId, Split};
     pub use crate::hpo::{HpoConfig, SearchAlgo, Tuner};
     pub use crate::kernel::{
-        ClassKernels, ClassSim, KernelRef, KernelView, SimMetric,
-        SimilarityBackend, SparseKernel,
+        ClassKernels, ClassSim, KernelRef, KernelSchedule, KernelView,
+        PipelineStats, SimMetric, SimilarityBackend, SparseKernel,
     };
     pub use crate::obs::{Histogram, MetricsRegistry, Span};
     pub use crate::report::Table;

@@ -41,11 +41,15 @@ USAGE:
   milo preprocess --dataset <name> [--fraction 0.1] [--backend pjrt|native]
                   [--knn 32|full]  (sparse top-knn kernels vs dense blocks)
                   [--streaming]    (bounded-memory pipeline w/ backpressure)
+                  [--sim-tile N] [--pipeline-depth 2]  (kernel-build schedule;
+                  overlap depth 1 = serial — changes wall time, never values)
   milo precompute --dataset <name> [--fraction 0.1] [--seed 1] [--knn 32|full]
                   [--store results/store]   (content-addressed binary store)
+                  [--sim-tile N] [--pipeline-depth 2]
   milo serve --dataset <name> | --datasets a,b [--fractions 0.1,0.3]
              [--addr 127.0.0.1:4077] [--fraction 0.1] [--seed 1] [--knn 32|full]
              [--store results/store] [--featurebased]
+             [--sim-tile N] [--pipeline-depth 2]
              [--metrics-addr 127.0.0.1:9464]  (plain-text metrics exposition)
              (one event-loop process serves every dataset×fraction entry)
   milo stream [--dataset stream] [--classes 4] [--dim 16] [--batch 64]
@@ -154,6 +158,19 @@ fn knn_of(args: &Args) -> Result<Option<usize>> {
     }
 }
 
+/// `--sim-tile N` / `--pipeline-depth N`: the kernel-build schedule.
+/// Schedule-only — both change wall time, never kernel values, so they
+/// are deliberately *not* part of the store fingerprint
+/// (see `milo::kernel::pipeline`).
+fn schedule_of(args: &Args) -> Result<(Option<usize>, usize)> {
+    let sim_tile = match args.get("sim-tile") {
+        None => None,
+        Some(_) => Some(args.get_usize("sim-tile", 0)?.max(1)),
+    };
+    let depth = args.get_usize("pipeline-depth", 2)?.max(1);
+    Ok((sim_tile, depth))
+}
+
 fn dataset_of(args: &Args) -> Result<(DatasetId, u64)> {
     let name = args
         .get("dataset")
@@ -191,6 +208,7 @@ fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
     let (id, seed) = dataset_of(args)?;
     let ds = id.generate(seed);
     let fraction = args.get_f64("fraction", 0.1)?;
+    let (sim_tile, pipeline_depth) = schedule_of(args)?;
     let pre = Preprocessor::with_options(
         &rt,
         PreprocessOptions {
@@ -198,6 +216,8 @@ fn cmd_preprocess(args: &Args, artifacts: &str) -> Result<()> {
             backend: backend_of(args)?,
             seed,
             knn: knn_of(args)?,
+            sim_tile,
+            pipeline_depth,
             ..Default::default()
         },
     );
@@ -252,11 +272,14 @@ fn store_metadata(
     let rt = Runtime::open(artifacts)?;
     let (id, seed) = dataset_of(args)?;
     let ds = id.generate(seed);
+    let (sim_tile, pipeline_depth) = schedule_of(args)?;
     let opts = PreprocessOptions {
         fraction: args.get_f64("fraction", 0.1)?,
         backend: backend_of(args)?,
         seed,
         knn: knn_of(args)?,
+        sim_tile,
+        pipeline_depth,
         ..Default::default()
     };
     let store = milo::store::MetaStore::shared(args.get_or("store", "results/store"))?;
@@ -318,12 +341,15 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         let id = DatasetId::from_name(name)?;
         let ds = id.generate(seed);
         for &fraction in &fractions {
+            let (sim_tile, pipeline_depth) = schedule_of(args)?;
             let opts = PreprocessOptions {
                 fraction,
                 backend: backend_of(args)?,
                 seed,
                 pipeline,
                 knn: knn_of(args)?,
+                sim_tile,
+                pipeline_depth,
                 ..Default::default()
             };
             let key = milo::store::MetaKey::from_options(ds.name(), &opts);

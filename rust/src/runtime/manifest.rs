@@ -43,6 +43,9 @@ pub struct ArtifactEntry {
     pub metric: Option<String>,
     pub embed_dim: Option<usize>,
     pub tile: Option<usize>,
+    /// Per-tile candidate width of a fused top-k artifact
+    /// (`topk_*` / `embed_sim_topk_*`); `None` for everything else.
+    pub k: Option<usize>,
 }
 
 /// Per-dataset shape configuration (must match rust/src/data generators).
@@ -134,6 +137,7 @@ impl Manifest {
                     metric: get_str("metric"),
                     embed_dim: get_usize("embed_dim"),
                     tile: get_usize("tile"),
+                    k: get_usize("k"),
                 },
             );
         }

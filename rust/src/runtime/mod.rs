@@ -16,9 +16,13 @@ pub mod manifest;
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::obs::{Histogram, MetricsRegistry};
 
 pub use manifest::{ArtifactEntry, DType, DatasetCfg, InputSpec, Manifest};
 
@@ -41,12 +45,27 @@ pub struct RuntimeStats {
     pub execute_secs: f64,
 }
 
+/// Compile-path statistics (cold path, guarded by the executable cache's
+/// `RefCell` discipline).
+#[derive(Default)]
+struct CompileStats {
+    compilations: usize,
+    compile_secs: f64,
+}
+
 /// PJRT client + compiled-executable cache over an artifact directory.
 pub struct Runtime {
     client: xla::PjRtClient,
     manifest: Manifest,
     cache: RefCell<BTreeMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<RuntimeStats>,
+    compile_stats: RefCell<CompileStats>,
+    // The execute path is hot (every similarity strip) and may be timed
+    // from pipeline threads observing `stats()` concurrently, so it
+    // avoids `RefCell` borrows: two relaxed atomics plus a histogram
+    // handle resolved once at `open`.
+    executions: AtomicU64,
+    execute_ns: AtomicU64,
+    execute_hist: Arc<Histogram>,
 }
 
 impl Runtime {
@@ -60,7 +79,10 @@ impl Runtime {
             client,
             manifest,
             cache: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            compile_stats: RefCell::new(CompileStats::default()),
+            executions: AtomicU64::new(0),
+            execute_ns: AtomicU64::new(0),
+            execute_hist: MetricsRegistry::global().histogram("runtime.execute_latency_ns"),
         })
     }
 
@@ -69,7 +91,13 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        *self.stats.borrow()
+        let c = self.compile_stats.borrow();
+        RuntimeStats {
+            compilations: c.compilations,
+            executions: self.executions.load(Ordering::Relaxed) as usize,
+            compile_secs: c.compile_secs,
+            execute_secs: self.execute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
     }
 
     /// Ensure an artifact is compiled (warm the cache).
@@ -89,7 +117,7 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.compile_stats.borrow_mut();
             st.compilations += 1;
             st.compile_secs += t0.elapsed().as_secs_f64();
         }
@@ -125,10 +153,13 @@ impl Runtime {
         let lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
+        let elapsed = t0.elapsed();
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.execute_ns
+            .fetch_add(elapsed.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        // per-execution latency distribution, honoring the obs kill switch
+        if crate::obs::enabled() {
+            self.execute_hist.record_duration(elapsed);
         }
         let parts = lit
             .to_tuple()

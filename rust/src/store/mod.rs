@@ -87,7 +87,11 @@ pub fn backend_descriptor(backend: crate::kernel::SimilarityBackend) -> &'static
 
 /// Canonical fingerprint key of one preprocessing configuration. Everything
 /// that changes the selection output is part of the address; nothing else
-/// is.
+/// is. In particular the kernel-build *schedule*
+/// ([`PreprocessOptions::sim_tile`] / `pipeline_depth`, see
+/// [`crate::kernel::pipeline`]) is deliberately absent: it changes wall
+/// time, never kernel values — the bit-identity property tests in
+/// `rust/tests/kernel_pipeline.rs` prove the exclusion sound.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetaKey {
     pub dataset: String,
@@ -683,6 +687,24 @@ mod tests {
         wider.knn = Some(64);
         assert_ne!(sparse.fingerprint(), wider.fingerprint());
         assert_eq!(a.fingerprint().len(), 16);
+    }
+
+    #[test]
+    fn schedule_knobs_do_not_change_the_address() {
+        // sim_tile / pipeline_depth are schedule-only: every variant
+        // must alias to the same store artifact
+        let base = crate::coordinator::PreprocessOptions::default();
+        let a = MetaKey::from_options("synthetic", &base);
+        for (tile, depth) in [(None, 1), (Some(32), 2), (Some(7), 4), (None, 8)] {
+            let opts = crate::coordinator::PreprocessOptions {
+                sim_tile: tile,
+                pipeline_depth: depth,
+                ..base.clone()
+            };
+            let b = MetaKey::from_options("synthetic", &opts);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "tile {tile:?} depth {depth}");
+            assert_eq!(a.canonical(), b.canonical());
+        }
     }
 
     #[test]

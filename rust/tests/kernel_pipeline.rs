@@ -1,0 +1,214 @@
+//! Property suite for the overlapped kernel-construction pipeline.
+//!
+//! The contract under test: a [`KernelSchedule`] is **schedule-only** —
+//! `strip_rows` and `depth` change when work happens, never any stored
+//! value — so every pipelined build must be *bit-identical* to the
+//! serial (`depth = 1`) reference, for every metric, dense and sparse
+//! layouts, and both backends. [`SparseKernel`]'s derived `PartialEq`
+//! compares the exact CSR arrays, so every assertion here is
+//! `assert_eq!`, not approximate.
+//!
+//! Also covered: panic containment (a producer or consumer panic
+//! surfaces as `Err` from [`run_pipeline`], never a deadlock or a
+//! poisoned build) and the degenerate schedules (`depth = 1`, one
+//! strip) matching the threaded ones.
+
+use milo::kernel::pipeline::run_pipeline;
+use milo::kernel::sparse::{sparse_native, sparse_native_scheduled, sparse_pjrt_scheduled};
+use milo::kernel::{
+    build_class_kernels_scheduled, ClassSim, KernelSchedule, SimMetric, SimilarityBackend,
+};
+use milo::testkit::{artifacts_or_skip, check_cases, random_embeddings};
+use milo::util::rng::Rng;
+
+const METRICS: [SimMetric; 3] = [SimMetric::Cosine, SimMetric::Dot, SimMetric::Rbf { kw: 0.5 }];
+
+/// Schedules to sweep against the serial reference: double buffering,
+/// deep pipelines, odd strip heights (non-dividing, strip = 1, strip
+/// larger than n).
+fn schedules() -> Vec<KernelSchedule> {
+    vec![
+        KernelSchedule::default(),
+        KernelSchedule { strip_rows: None, depth: 4 },
+        KernelSchedule { strip_rows: Some(1), depth: 2 },
+        KernelSchedule { strip_rows: Some(7), depth: 3 },
+        KernelSchedule { strip_rows: Some(64), depth: 2 },
+        KernelSchedule { strip_rows: Some(1 << 20), depth: 8 },
+    ]
+}
+
+#[test]
+fn native_sparse_pipelined_is_bit_identical_to_serial() {
+    check_cases(xk_seed(), 6, |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 16 + (rng.next_u64() % 60) as usize;
+        let e = 4 + (rng.next_u64() % 12) as usize;
+        let knn = 1 + (rng.next_u64() % 9) as usize;
+        let z = random_embeddings(n, e, seed);
+        for metric in METRICS {
+            let (reference, _) =
+                sparse_native_scheduled(&z, metric, knn, &KernelSchedule::serial()).unwrap();
+            // the convenience wrapper is the default schedule
+            assert_eq!(sparse_native(&z, metric, knn), reference);
+            for sched in schedules() {
+                let (got, stats) = sparse_native_scheduled(&z, metric, knn, &sched).unwrap();
+                assert_eq!(got, reference, "metric {metric:?} sched {sched:?}");
+                assert!(stats.stall_secs <= stats.wall_secs + 1e-3);
+            }
+        }
+    });
+}
+
+#[test]
+fn class_kernel_builds_match_across_schedules() {
+    check_cases(xk_seed() ^ 1, 4, |seed| {
+        let mut rng = Rng::new(seed);
+        let classes = 2 + (rng.next_u64() % 3) as usize;
+        let n = classes * (10 + (rng.next_u64() % 20) as usize);
+        let z = random_embeddings(n, 6, seed);
+        let partition: Vec<Vec<usize>> = (0..classes)
+            .map(|c| (0..n).filter(|i| i % classes == c).collect())
+            .collect();
+        for metric in METRICS {
+            for knn in [None, Some(5)] {
+                let reference = build_class_kernels_scheduled(
+                    None,
+                    &z,
+                    &partition,
+                    metric,
+                    SimilarityBackend::Native,
+                    knn,
+                    &KernelSchedule::serial(),
+                )
+                .unwrap();
+                for sched in schedules() {
+                    let got = build_class_kernels_scheduled(
+                        None,
+                        &z,
+                        &partition,
+                        metric,
+                        SimilarityBackend::Native,
+                        knn,
+                        &sched,
+                    )
+                    .unwrap();
+                    assert_eq!(got.per_class.len(), reference.per_class.len());
+                    for (g, r) in got.per_class.iter().zip(&reference.per_class) {
+                        assert_eq!(g.indices, r.indices);
+                        match (&g.sim, &r.sim) {
+                            (ClassSim::Dense(a), ClassSim::Dense(b)) => {
+                                assert_eq!(a.data(), b.data(), "dense {metric:?}")
+                            }
+                            (ClassSim::Sparse(a), ClassSim::Sparse(b)) => {
+                                assert_eq!(a, b, "sparse {metric:?} {sched:?}")
+                            }
+                            _ => panic!("layout changed with the schedule"),
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// PJRT path: serial vs pipelined strips, and — when `topk_*` artifacts
+/// are present — the on-device candidate cut vs the host-side reduction
+/// (forced by asking for more neighbours than the artifact's `K`).
+#[test]
+fn pjrt_sparse_pipelined_is_bit_identical_to_serial() {
+    let Some(rt) = artifacts_or_skip() else { return };
+    check_cases(xk_seed() ^ 2, 3, |seed| {
+        let mut rng = Rng::new(seed);
+        let n = 40 + (rng.next_u64() % 80) as usize;
+        let z = random_embeddings(n, 32, seed);
+        let serial = KernelSchedule::serial();
+        let deep = KernelSchedule { strip_rows: None, depth: 3 };
+        for metric in METRICS {
+            for knn in [3, 9] {
+                let (reference, _) = sparse_pjrt_scheduled(&rt, &z, metric, knn, &serial).unwrap();
+                let (got, _) =
+                    sparse_pjrt_scheduled(&rt, &z, metric, knn, &KernelSchedule::default())
+                        .unwrap();
+                assert_eq!(got, reference, "metric {metric:?} knn {knn}");
+                // host fallback (knn > K disables the device cut) must
+                // agree wherever both paths can run
+                let base = match metric {
+                    SimMetric::Cosine => "cosine",
+                    SimMetric::Dot => "dot",
+                    SimMetric::Rbf { .. } => "rbf",
+                };
+                let device_k = rt
+                    .manifest()
+                    .artifacts
+                    .get(&format!("topk_{base}_e32"))
+                    .and_then(|a| a.k);
+                if let Some(k) = device_k {
+                    let hk = (k + 1).min(n);
+                    let (host, _) = sparse_pjrt_scheduled(&rt, &z, metric, hk, &serial).unwrap();
+                    let (piped, _) = sparse_pjrt_scheduled(&rt, &z, metric, hk, &deep).unwrap();
+                    assert_eq!(piped, host, "host-path metric {metric:?}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn producer_panic_surfaces_as_err_not_deadlock() {
+    for depth in [1, 2, 4] {
+        let r = run_pipeline(
+            16,
+            depth,
+            Vec::new(),
+            |t| {
+                if t == 5 {
+                    panic!("injected producer failure");
+                }
+                Ok(vec![t as f32; 8])
+            },
+            |acc: &mut Vec<f32>, _, strip: Vec<f32>| acc.extend(strip),
+        );
+        let err = format!("{:#}", r.unwrap_err());
+        assert!(err.contains("producer"), "depth {depth}: {err}");
+        assert!(err.contains("injected producer failure"), "depth {depth}: {err}");
+    }
+}
+
+#[test]
+fn consumer_panic_surfaces_as_err_not_deadlock() {
+    let r = run_pipeline(
+        128,
+        2,
+        (),
+        |t| Ok(t),
+        |_: &mut (), t, _| {
+            if t == 3 {
+                panic!("injected consumer failure");
+            }
+        },
+    );
+    let err = format!("{:#}", r.unwrap_err());
+    assert!(err.contains("consumer"), "{err}");
+}
+
+#[test]
+fn depth_one_consumes_inline_in_order() {
+    let (order, stats) = run_pipeline(
+        9,
+        1,
+        Vec::new(),
+        |t| Ok(t),
+        |order: &mut Vec<usize>, t, v| {
+            assert_eq!(t, v);
+            order.push(t);
+        },
+    )
+    .unwrap();
+    assert_eq!(order, (0..9).collect::<Vec<_>>());
+    assert_eq!(stats.strips, 9);
+    assert_eq!(stats.stall_secs, 0.0);
+}
+
+fn xk_seed() -> u64 {
+    0x6b65726e // "kern"
+}
