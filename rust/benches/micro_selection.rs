@@ -17,7 +17,9 @@
 //!     against the server's own `STATS` summaries), plus the overhead of
 //!     the telemetry layer itself — `NEXT_SUBSET` timed with
 //!     observability on vs `milo::obs::set_enabled(false)`, asserted
-//!     within 5% in full mode — emitted as `BENCH_serve.json`,
+//!     within 5% in full mode, and likewise the always-on flight
+//!     recorder against its own kill switch (with a live tail-sampling
+//!     check and a `trace.jsonl` dump) — emitted as `BENCH_serve.json`,
 //!   * preprocessing end-to-end over the synthetic 10-class bench
 //!     dataset: dense vs sparse top-knn kernels at knn ∈ {32, 128, full}
 //!     (wall-time per stage + stored kernel floats), emitted as
@@ -289,7 +291,13 @@ fn bench_stream() {
 /// draws are timed with observability enabled vs
 /// `milo::obs::set_enabled(false)`, and full mode asserts the
 /// instrumented path stays within 5% of the uninstrumented baseline.
-/// A scale sweep then holds tiers of idle connections open (64 →
+/// The always-on flight recorder gets the same treatment with its own
+/// kill switch (`milo::obs::flight::set_enabled`) and the same 5% bar,
+/// and tail-sampling is demonstrated live: with `MILO_TRACE` unset, one
+/// draw past a lowered slow threshold must land its trace in the sample
+/// buffer, and the recorder's dump is written to `trace.jsonl` for the
+/// `milo trace` renderer. A scale sweep then holds tiers of idle
+/// connections open (64 →
 /// thousands, fd-budget-clamped) and records PING p50/p99 at each
 /// occupancy. Results land in `BENCH_serve.json`.
 fn bench_serve() {
@@ -405,6 +413,71 @@ fn bench_serve() {
         );
     }
 
+    // the always-on flight recorder's marginal cost, same kill-switch
+    // methodology: obs stays at its default (on), only the flight ring
+    // toggles — so this isolates the recorder, not the whole layer
+    let with_flight = measure(draws);
+    milo::obs::flight::set_enabled(false);
+    let without_flight = measure(draws);
+    milo::obs::flight::set_enabled(true);
+    let flight_ratio = with_flight / without_flight.max(1e-12);
+    println!(
+        "bench serve: NEXT_SUBSET {:.2}us/draw with flight recorder vs \
+         {:.2}us/draw with it disabled ({flight_ratio:.3}x)",
+        with_flight * 1e6,
+        without_flight * 1e6,
+    );
+    if !smoke {
+        assert!(
+            with_flight <= without_flight * 1.05 + 5e-6,
+            "flight recorder exceeds the 5% overhead budget on NEXT_SUBSET: \
+             {with_flight}s vs {without_flight}s per draw"
+        );
+    }
+
+    // tail-sampling, demonstrated: with MILO_TRACE unset (the normal
+    // case — skip the demo rather than fight a configured sink), drop
+    // the slow threshold to 1us so the next draw counts as slow, and
+    // assert its trace shows up in the flight recorder's sample buffer
+    let mut flight_sampled = false;
+    if std::env::var("MILO_TRACE").is_err() {
+        let sampled_before = milo::obs::flight::stats().sampled;
+        let old_thresh = milo::obs::flight::slow_threshold_us();
+        milo::obs::flight::set_slow_threshold_us(1);
+        std::hint::black_box(probe.next_subset().unwrap());
+        milo::obs::flight::set_slow_threshold_us(old_thresh);
+        let (trace, echoed) = probe
+            .last_trace()
+            .expect("trace-capable server: requests are stamped");
+        assert!(echoed, "JSON-wire control reply must echo the trace id");
+        let stats = milo::obs::flight::stats();
+        assert!(
+            stats.sampled > sampled_before,
+            "a request past the slow threshold must tail-sample \
+             ({} before, {} after)",
+            sampled_before,
+            stats.sampled,
+        );
+        flight_sampled = milo::obs::flight::samples()
+            .iter()
+            .any(|s| s.trace == trace);
+        assert!(
+            flight_sampled,
+            "the slow request's trace {} is missing from the sample buffer",
+            milo::obs::id_hex(trace),
+        );
+        println!(
+            "bench serve: slow-request trace {} tail-sampled with MILO_TRACE \
+             unset ({} sample(s) buffered)",
+            milo::obs::id_hex(trace),
+            milo::obs::flight::samples().len(),
+        );
+    }
+
+    // persist the recorder's view of this run for the CI artifact: ring
+    // contents + tail-samples, schema-v2 JSON lines (`milo trace` input)
+    std::fs::write("trace.jsonl", milo::obs::flight::dump_jsonl()).unwrap();
+
     // scale sweep: small-request latency as a function of *held-open*
     // connections — the fleet-scale serving curve (the soak tests prove
     // correctness at this occupancy; this records what it costs). Each
@@ -506,6 +579,11 @@ fn bench_serve() {
         ("next_subset_us_with_obs", Json::num(with_obs * 1e6)),
         ("next_subset_us_without_obs", Json::num(without_obs * 1e6)),
         ("obs_overhead_ratio", Json::num(ratio)),
+        ("next_subset_us_with_flight", Json::num(with_flight * 1e6)),
+        ("next_subset_us_without_flight", Json::num(without_flight * 1e6)),
+        ("flight_overhead_ratio", Json::num(flight_ratio)),
+        ("flight_tail_sampled", Json::Bool(flight_sampled)),
+        ("flight", milo::obs::flight::stats_json()),
         ("scale", Json::arr(scale_rows)),
         ("server_metrics", server_metrics),
     ]);

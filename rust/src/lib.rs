@@ -57,13 +57,20 @@
 //! * **Observability** — [`obs`] is a zero-dependency telemetry layer:
 //!   per-component [`obs::MetricsRegistry`]s of atomic counters/gauges,
 //!   mergeable log-bucketed latency [`obs::Histogram`]s with exact-bounds
-//!   p50/p95/p99 extraction, and scoped [`obs::Span`] timers with an
-//!   optional `MILO_TRACE=path` JSON-lines event log. The serve event
-//!   loop, store, preprocessing stages, and session resolution all record
-//!   into it; it surfaces through the extended `STATS` reply, the
-//!   `milo serve --metrics-addr` Prometheus-style text endpoint, and
-//!   `BENCH_serve.json` (see the [`obs`] module docs for the metric
-//!   naming scheme and histogram bucket math).
+//!   p50/p95/p99 extraction, and scoped [`obs::Span`] timers carrying
+//!   causal `trace`/`span`/`parent` ids. A client request stamps its
+//!   trace id onto the wire (negotiated at `HELLO`), the serve dispatch
+//!   and everything it calls (`store.resolve`, `kernel.execute`, …) join
+//!   that tree, and the optional `MILO_TRACE=path` JSON-lines sink
+//!   (schema v2, `MILO_TRACE_MAX_MB` rotation) records it for the
+//!   `milo trace` renderer. Independently, [`obs::flight`] is an
+//!   always-on in-memory flight recorder of recent spans/requests with
+//!   tail-sampling of slow or failed requests. Everything surfaces
+//!   through the extended `STATS` reply, the `FLIGHT` command, the
+//!   `milo serve --metrics-addr` Prometheus-style text endpoint (plus
+//!   its `/flight` dump), per-`(dataset, fraction)` request attribution,
+//!   and `BENCH_serve.json` (see the [`obs`] module docs for the metric
+//!   naming scheme, trace schema, and histogram bucket math).
 //! * **L2 (python/compile, build-time only)** — JAX graphs: frozen feature
 //!   encoders, downstream-MLP train/eval/meta steps — AOT-lowered to HLO
 //!   text artifacts executed here via PJRT.

@@ -56,6 +56,10 @@ USAGE:
               [--batches 8] [--buffer 128] [--knn 16|full] [--seed 1]
               [--store results/store]      (publish each epoch's artifact + head)
               [--serve 127.0.0.1:4077]     (push EPOCH_ADVANCE/SUBSET_DELTA live)
+              [--metrics-addr 127.0.0.1:9464]  (exposition + /flight dump)
+  milo trace <trace.jsonl> [--traces 10]
+             (render per-trace span trees, the critical path, and a top-spans
+              summary from a MILO_TRACE sink or a /flight dump)
   milo train --dataset <name> --strategy <name> [--fraction 0.1]
              [--epochs 40] [--seed 1] [--r 1] [--kappa 0.1667]
   milo tune --dataset <name> --strategy <name> [--algo random|tpe]
@@ -123,6 +127,7 @@ fn run() -> Result<()> {
         "precompute" => cmd_precompute(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
         "stream" => cmd_stream(&args),
+        "trace" => cmd_trace(&args),
         "train" => cmd_train(&args, &artifacts),
         "tune" => cmd_tune(&args, &artifacts),
         "repro" => cmd_repro(&args, &artifacts),
@@ -373,7 +378,10 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         server.addr(),
     );
     if let Some(m) = server.metrics_addr() {
-        println!("  metrics exposition on http://{m}/metrics (plain text)");
+        println!(
+            "  metrics exposition on http://{m}/metrics, flight recorder \
+             dump on http://{m}/flight"
+        );
     }
     for d in &described {
         println!("  {d}");
@@ -409,6 +417,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
     let mut sel = ContinualSelector::new(copts.clone());
     let mut sched = milo::util::rng::Rng::new(seed).derive_str("arrivals");
+    let serve_opts = milo::serve::ServeOptions {
+        metrics_addr: args.get("metrics-addr").map(|s| s.to_string()),
+    };
     let mut server: Option<milo::serve::SubsetServer> = None;
     let mut chain_key: Option<milo::store::MetaKey> = None;
     for b in 0..batches as u64 {
@@ -459,17 +470,24 @@ fn cmd_stream(args: &Args) -> Result<()> {
         }
         match (&server, args.get("serve")) {
             (None, Some(addr)) => {
-                let s = milo::serve::SubsetServer::bind(
+                let s = milo::serve::SubsetServer::bind_with(
                     addr,
-                    meta.clone(),
+                    vec![meta.clone()],
                     store.clone(),
                     seed,
+                    serve_opts.clone(),
                 )?;
                 println!(
                     "serving {dataset} on {} — SUBSCRIBE (frame wire) for live \
                      epoch pushes",
                     s.addr()
                 );
+                if let Some(m) = s.metrics_addr() {
+                    println!(
+                        "  metrics exposition on http://{m}/metrics, flight \
+                         recorder dump on http://{m}/flight"
+                    );
+                }
                 server = Some(s);
             }
             (Some(s), _) => s.publish(&dataset, stats.epoch, meta.clone())?,
@@ -490,6 +508,24 @@ fn cmd_stream(args: &Args) -> Result<()> {
         println!("stream complete — serving the head epoch until killed");
         s.run_forever();
     }
+    Ok(())
+}
+
+/// `milo trace`: offline rendering of a `MILO_TRACE` sink (or a `GET
+/// /flight` dump — same JSON-lines schema). All the reconstruction logic
+/// lives in `milo::obs::traceview`, where it is unit-tested.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let path = match args.positional.get(1) {
+        Some(p) => p.as_str(),
+        None => bail!(
+            "milo trace needs a file: `milo trace trace.jsonl` (a MILO_TRACE \
+             sink or a /flight dump)\n{USAGE}"
+        ),
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read trace file {path}: {e}"))?;
+    let max_traces = args.get_usize("traces", 10)?.max(1);
+    print!("{}", milo::obs::traceview::report(&text, max_traces));
     Ok(())
 }
 

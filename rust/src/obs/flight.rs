@@ -1,0 +1,501 @@
+//! The flight recorder: an always-on, fixed-size, lock-free ring of
+//! recent span and request events, with tail-sampling.
+//!
+//! `MILO_TRACE` answers "what happened?" only when someone turned it on
+//! *before* the incident. The flight recorder is the black box for
+//! everything else: it is on by default, bounded (a power-of-two ring of
+//! [`RING_SLOTS`] fixed-size slots — no allocation, no unbounded growth),
+//! and cheap enough to leave on in production (`bench_serve` measures and
+//! asserts its marginal cost on the `NEXT_SUBSET` hot path).
+//!
+//! # Recording
+//!
+//! Every finished [`Span`](super::Span) lands one `span` event in the
+//! ring; the serve dispatch path lands one `request` event per request
+//! (command name, trace id, latency, error flag, stream id). Writers
+//! claim a slot with one relaxed `fetch_add` and publish through a
+//! per-slot sequence word (seqlock): readers that race a writer see a
+//! torn sequence and skip the slot instead of blocking it. The ring is
+//! best-effort by design — if it wraps mid-read the reader drops that
+//! slot, never the process.
+//!
+//! # Tail-sampling
+//!
+//! A request slower than the slow threshold (`MILO_FLIGHT_SLOW_US`,
+//! default 100 ms, adjustable at runtime via [`set_slow_threshold_us`])
+//! or ending in error triggers a sample: every ring event sharing the
+//! request's trace id is copied out into a bounded in-memory buffer
+//! ([`samples`], newest [`MAX_SAMPLES`]) and — when `MILO_TRACE` is
+//! configured — flushed to the trace sink as schema-v2 lines. The whole
+//! span tree of a slow request is therefore available *after the fact*
+//! even though nobody was tracing when it happened.
+//!
+//! # Surfaces
+//!
+//! * `GET /flight` on the serve metrics listener → [`dump_jsonl`] (the
+//!   ring, oldest first, plus sampled traces, as JSON lines);
+//! * the `FLIGHT` serve command → [`stats_json`] + per-sample summaries;
+//! * [`set_enabled(false)`](set_enabled) — the recorder's own kill
+//!   switch, independent of [`super::set_enabled`], so the bench can
+//!   measure the recorder's marginal cost with spans still on.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::trace;
+
+/// Ring capacity (slots); a power of two so slot = ticket & (N-1).
+pub const RING_SLOTS: usize = 4096;
+
+/// Sampled traces kept in memory (older samples are dropped first).
+pub const MAX_SAMPLES: usize = 32;
+
+/// Span/command names are truncated to this many bytes in ring slots.
+pub const MAX_NAME: usize = 40;
+
+const DEFAULT_SLOW_US: u64 = 100_000;
+
+static FLIGHT_ENABLED: AtomicBool = AtomicBool::new(true);
+// 0 = unresolved: first read resolves MILO_FLIGHT_SLOW_US (or the
+// default); set_slow_threshold_us stores max(1, v) so 0 stays reserved.
+static SLOW_US: AtomicU64 = AtomicU64::new(0);
+static HEAD: AtomicU64 = AtomicU64::new(0);
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+static SAMPLED: AtomicU64 = AtomicU64::new(0);
+
+/// Enable/disable the flight recorder (default: enabled). Independent of
+/// the span kill switch so each layer's overhead is measurable alone.
+pub fn set_enabled(on: bool) {
+    FLIGHT_ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether the flight recorder is recording.
+pub fn enabled() -> bool {
+    FLIGHT_ENABLED.load(Ordering::Relaxed)
+}
+
+/// The tail-sampling latency threshold in microseconds. First call
+/// resolves `MILO_FLIGHT_SLOW_US` (default 100 000 µs = 100 ms).
+pub fn slow_threshold_us() -> u64 {
+    let v = SLOW_US.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let resolved = std::env::var("MILO_FLIGHT_SLOW_US")
+        .ok()
+        .and_then(|s| s.trim().parse::<u64>().ok())
+        .filter(|&us| us > 0)
+        .unwrap_or(DEFAULT_SLOW_US);
+    // racing first-readers may both store; they store the same value
+    let _ = SLOW_US.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
+    SLOW_US.load(Ordering::Relaxed)
+}
+
+/// Override the tail-sampling threshold at runtime (clamped to ≥ 1 µs —
+/// 1 effectively samples every request; benches use that to demonstrate
+/// capture without a genuinely slow request).
+pub fn set_slow_threshold_us(us: u64) {
+    SLOW_US.store(us.max(1), Ordering::Relaxed);
+}
+
+#[derive(Clone, Copy)]
+struct SlotData {
+    kind: u8, // 0 = empty, 1 = span, 2 = request
+    err: bool,
+    stream: u8,
+    name_len: u8,
+    name: [u8; MAX_NAME],
+    trace: u64,
+    span: u64,
+    parent: u64,
+    t_us: u64,
+    us: u64,
+}
+
+const EMPTY_SLOT: SlotData = SlotData {
+    kind: 0,
+    err: false,
+    stream: 0,
+    name_len: 0,
+    name: [0; MAX_NAME],
+    trace: 0,
+    span: 0,
+    parent: 0,
+    t_us: 0,
+    us: 0,
+};
+
+struct Slot {
+    // 0 = never written; writer stores 2·ticket+1 (in progress) then
+    // 2·ticket+2 (published); readers require an even, matching pair
+    seq: AtomicU64,
+    data: UnsafeCell<SlotData>,
+}
+
+struct Ring {
+    slots: Box<[Slot]>,
+}
+
+// Safety: slot payloads are only accessed under the per-slot seqlock
+// protocol — writers publish through `seq` with Release, readers
+// validate with Acquire and discard torn reads. A reader never
+// dereferences a slot mid-write without detecting it via `seq`.
+unsafe impl Sync for Ring {}
+
+static RING: OnceLock<Ring> = OnceLock::new();
+
+fn ring() -> &'static Ring {
+    RING.get_or_init(|| {
+        let slots = (0..RING_SLOTS)
+            .map(|_| Slot { seq: AtomicU64::new(0), data: UnsafeCell::new(EMPTY_SLOT) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring { slots }
+    })
+}
+
+fn named_slot(kind: u8, name: &str) -> SlotData {
+    let mut data = EMPTY_SLOT;
+    data.kind = kind;
+    let n = name.len().min(MAX_NAME);
+    data.name[..n].copy_from_slice(&name.as_bytes()[..n]);
+    data.name_len = n as u8;
+    data
+}
+
+fn write_event(mut data: SlotData) {
+    data.t_us = trace::now_us() as u64;
+    let ring = ring();
+    let ticket = HEAD.fetch_add(1, Ordering::Relaxed);
+    let slot = &ring.slots[(ticket as usize) & (RING_SLOTS - 1)];
+    slot.seq.store(ticket * 2 + 1, Ordering::Release);
+    // Safety: see the `Sync` impl — publication is ordered by `seq`.
+    unsafe { *slot.data.get() = data };
+    slot.seq.store(ticket * 2 + 2, Ordering::Release);
+    RECORDED.fetch_add(1, Ordering::Relaxed);
+}
+
+fn read_slot(slot: &Slot) -> Option<SlotData> {
+    let before = slot.seq.load(Ordering::Acquire);
+    if before == 0 || before % 2 == 1 {
+        return None; // never written, or a write is in flight
+    }
+    // Safety: the copy is validated below — a concurrent overwrite flips
+    // `seq`, and we discard the (possibly torn) copy.
+    let data = unsafe { *slot.data.get() };
+    let after = slot.seq.load(Ordering::Acquire);
+    (before == after).then_some(data)
+}
+
+/// One event copied out of the ring (owned, safe to hold).
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    /// `"span"` or `"request"`.
+    pub ev: &'static str,
+    pub name: String,
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    /// Microseconds since the process trace epoch (when recorded).
+    pub t_us: u64,
+    /// Elapsed microseconds.
+    pub us: u64,
+    pub err: bool,
+    pub stream: u8,
+}
+
+impl FlightEvent {
+    fn from_slot(d: &SlotData) -> Option<FlightEvent> {
+        let ev = match d.kind {
+            1 => "span",
+            2 => "request",
+            _ => return None,
+        };
+        let name = std::str::from_utf8(&d.name[..d.name_len as usize])
+            .unwrap_or("")
+            .to_string();
+        Some(FlightEvent {
+            ev,
+            name,
+            trace: d.trace,
+            span: d.span,
+            parent: d.parent,
+            t_us: d.t_us,
+            us: d.us,
+            err: d.err,
+            stream: d.stream,
+        })
+    }
+
+    /// The schema-v2 JSON object for this event (what `MILO_TRACE` lines
+    /// and the `/flight` dump contain).
+    pub fn to_json(&self) -> Json {
+        let mut j = trace::event_json(
+            self.ev,
+            &self.name,
+            self.t_us as f64,
+            self.us as f64,
+            self.trace,
+            self.span,
+            self.parent,
+        );
+        if self.ev == "request" {
+            if let Json::Obj(m) = &mut j {
+                m.insert("stream".to_string(), Json::num(self.stream as f64));
+                if self.err {
+                    m.insert("err".to_string(), Json::Bool(true));
+                }
+            }
+        }
+        j
+    }
+}
+
+/// A tail-sampled request: the triggering request plus every ring event
+/// that shared its trace id at sampling time, oldest first.
+#[derive(Clone, Debug)]
+pub struct SampledTrace {
+    pub trace: u64,
+    /// The triggering request's command name.
+    pub cmd: String,
+    /// The triggering request's latency in microseconds.
+    pub us: u64,
+    pub err: bool,
+    /// Sample time (process trace-epoch microseconds).
+    pub t_us: u64,
+    pub events: Vec<FlightEvent>,
+}
+
+static SAMPLES: Mutex<VecDeque<SampledTrace>> = Mutex::new(VecDeque::new());
+
+/// Record a finished span. Called from [`Span`](super::Span) teardown; a
+/// no-op when the recorder is disabled.
+pub fn record_span(name: &str, elapsed: Duration, trace: u64, span: u64, parent: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut data = named_slot(1, name);
+    data.us = elapsed.as_micros() as u64;
+    data.trace = trace;
+    data.span = span;
+    data.parent = parent;
+    write_event(data);
+}
+
+/// Record a finished request (the serve dispatch path) and apply the
+/// tail-sampling decision: slower than [`slow_threshold_us`] or `err`
+/// samples the whole trace. A no-op when the recorder is disabled.
+pub fn record_request(cmd: &str, trace: u64, span: u64, us: u64, err: bool, stream: u8) {
+    if !enabled() {
+        return;
+    }
+    let mut data = named_slot(2, cmd);
+    data.us = us;
+    data.trace = trace;
+    data.span = span;
+    data.err = err;
+    data.stream = stream;
+    write_event(data);
+    if trace != 0 && (err || us >= slow_threshold_us()) {
+        sample_trace(trace, cmd, us, err);
+    }
+}
+
+fn sample_trace(trace_id: u64, cmd: &str, us: u64, err: bool) {
+    let mut events: Vec<FlightEvent> = snapshot_events()
+        .into_iter()
+        .filter(|e| e.trace == trace_id)
+        .collect();
+    events.sort_by_key(|e| e.t_us);
+    let sample = SampledTrace {
+        trace: trace_id,
+        cmd: cmd.to_string(),
+        us,
+        err,
+        t_us: trace::now_us() as u64,
+        events,
+    };
+    // flush to the MILO_TRACE sink (no-op when unset): request events
+    // are not emitted by Span teardown, so the sampled tree's request
+    // line only exists in the sink via this path
+    if trace::enabled() {
+        for e in &sample.events {
+            if e.ev == "request" {
+                trace::emit_line(&e.to_json().to_string());
+            }
+        }
+    }
+    let mut samples = SAMPLES.lock().unwrap();
+    while samples.len() >= MAX_SAMPLES {
+        samples.pop_front();
+    }
+    samples.push_back(sample);
+    SAMPLED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Copy the current ring contents, oldest first (best effort — slots
+/// being overwritten while reading are skipped).
+pub fn snapshot_events() -> Vec<FlightEvent> {
+    let ring = ring();
+    let head = HEAD.load(Ordering::Acquire);
+    let span = (head as usize).min(RING_SLOTS);
+    let mut out = Vec::with_capacity(span);
+    // walk tickets oldest → newest so the copy is chronologically ordered
+    let start = head.saturating_sub(RING_SLOTS as u64);
+    for ticket in start..head {
+        let slot = &ring.slots[(ticket as usize) & (RING_SLOTS - 1)];
+        if let Some(d) = read_slot(slot) {
+            if let Some(e) = FlightEvent::from_slot(&d) {
+                out.push(e);
+            }
+        }
+    }
+    out
+}
+
+/// The tail-sampled traces currently buffered, oldest first.
+pub fn samples() -> Vec<SampledTrace> {
+    SAMPLES.lock().unwrap().iter().cloned().collect()
+}
+
+/// Recorder counters for `FLIGHT` / `STATS` surfaces.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightStats {
+    pub enabled: bool,
+    /// Events ever recorded (monotone).
+    pub recorded: u64,
+    /// Events already overwritten by ring wrap-around.
+    pub overwritten: u64,
+    /// Tail-samples taken (monotone).
+    pub sampled: u64,
+    pub slow_threshold_us: u64,
+    pub slots: usize,
+}
+
+pub fn stats() -> FlightStats {
+    let recorded = RECORDED.load(Ordering::Relaxed);
+    FlightStats {
+        enabled: enabled(),
+        recorded,
+        overwritten: recorded.saturating_sub(RING_SLOTS as u64),
+        sampled: SAMPLED.load(Ordering::Relaxed),
+        slow_threshold_us: slow_threshold_us(),
+        slots: RING_SLOTS,
+    }
+}
+
+/// [`stats`] as JSON (the `FLIGHT` serve reply and `/flight` header).
+pub fn stats_json() -> Json {
+    let s = stats();
+    Json::obj(vec![
+        ("enabled", Json::Bool(s.enabled)),
+        ("recorded", Json::num(s.recorded as f64)),
+        ("overwritten", Json::num(s.overwritten as f64)),
+        ("sampled", Json::num(s.sampled as f64)),
+        ("slow_threshold_us", Json::num(s.slow_threshold_us as f64)),
+        ("slots", Json::num(s.slots as f64)),
+    ])
+}
+
+/// The `/flight` dump: one `flight` header line (the stats), then the
+/// ring contents oldest-first, then each buffered tail-sample as a
+/// `sample` line followed by its events — all schema-v2 JSON lines, so
+/// `milo trace` can read the dump directly.
+pub fn dump_jsonl() -> String {
+    let mut out = String::new();
+    let mut header = stats_json();
+    if let Json::Obj(m) = &mut header {
+        m.insert("ev".to_string(), Json::str("flight"));
+    }
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for e in snapshot_events() {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    for s in samples() {
+        let marker = Json::obj(vec![
+            ("ev", Json::str("sample")),
+            ("cmd", Json::str(s.cmd.as_str())),
+            ("err", Json::Bool(s.err)),
+            ("t_us", Json::num(s.t_us as f64)),
+            ("trace", Json::Str(super::id_hex(s.trace))),
+            ("us", Json::num(s.us as f64)),
+        ]);
+        out.push_str(&marker.to_string());
+        out.push('\n');
+        for e in &s.events {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // one test: the ring, counters, and samples are process-global, and
+    // the harness runs tests concurrently — a single linear scenario
+    // avoids cross-test interference on the shared state
+    #[test]
+    fn records_samples_and_dumps() {
+        assert!(enabled());
+        let trace_id = crate::obs::next_id();
+        let span_a = crate::obs::next_id();
+        let span_b = crate::obs::next_id();
+        record_span("flight_test.child", Duration::from_micros(5), trace_id, span_b, span_a);
+        let before = stats().sampled;
+        // a fast, error-free request: recorded but not sampled
+        record_request("ping", trace_id, span_a, 1, false, 0);
+        assert_eq!(stats().sampled, before);
+        // an erroring request tail-samples regardless of latency
+        record_request("get_meta", trace_id, span_a, 2, true, 3);
+        let stats_now = stats();
+        assert_eq!(stats_now.sampled, before + 1);
+        assert!(stats_now.recorded >= 3);
+        let all = samples();
+        let s = all.iter().rfind(|s| s.trace == trace_id).expect("sample captured");
+        assert_eq!(s.cmd, "get_meta");
+        assert!(s.err);
+        // the sample holds the whole trace: the child span and both requests
+        assert!(s.events.iter().any(|e| e.ev == "span" && e.name == "flight_test.child"));
+        assert!(s
+            .events
+            .iter()
+            .any(|e| e.ev == "request" && e.name == "get_meta" && e.err && e.stream == 3));
+        // events are chronological and share the trace id
+        assert!(s.events.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert!(s.events.iter().all(|e| e.trace == trace_id));
+
+        let dump = dump_jsonl();
+        let hex = crate::obs::id_hex(trace_id);
+        assert!(dump.lines().next().unwrap().contains("\"ev\":\"flight\""));
+        assert!(dump.contains(&hex));
+        assert!(dump.contains("\"ev\":\"sample\""));
+        // every line is valid JSON (the dump feeds `milo trace`)
+        for line in dump.lines() {
+            crate::util::json::Json::parse(line).expect("dump line parses");
+        }
+
+        // disabled: nothing lands
+        set_enabled(false);
+        let recorded = stats().recorded;
+        record_span("flight_test.off", Duration::from_micros(1), trace_id, span_b, 0);
+        record_request("ping", trace_id, span_a, u64::MAX, true, 0);
+        set_enabled(true);
+        assert_eq!(stats().recorded, recorded);
+
+        // names longer than MAX_NAME truncate, never panic
+        let long = "x".repeat(MAX_NAME * 2);
+        record_span(&long, Duration::from_micros(1), trace_id, span_b, 0);
+        let snap = snapshot_events();
+        assert!(snap.iter().any(|e| e.name.len() == MAX_NAME && e.name.starts_with('x')));
+    }
+}

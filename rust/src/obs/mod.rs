@@ -21,12 +21,31 @@
 //!   ≤ 12.5% relative error, exact below 16 ns, saturating at ~18 min).
 //!   Mergeable across threads; percentile queries return exact bucket
 //!   upper bounds.
-//! * [`Span`] — a scoped timer. On drop it records its elapsed time into
-//!   the global registry under `span.<name>` and, when `MILO_TRACE=path`
-//!   is set, appends a JSON-lines event (see [`trace`] for the schema).
+//! * [`Span`] — a scoped timer with causal identity. Each span carries a
+//!   `(trace, span, parent)` id triple: ids come from [`next_id`], the
+//!   parent is the enclosing span on a thread-local stack, and the trace
+//!   id is inherited from the ambient context (or freshly rooted). On
+//!   drop it records its elapsed time into the global registry under
+//!   `span.<name>`, appends a schema-v2 JSON-lines event when
+//!   `MILO_TRACE=path` is set (see [`trace`]), and records into the
+//!   always-on [`flight`] ring.
 //!   [`Stopwatch`](crate::util::timer::Stopwatch) sections ride on spans,
 //!   so legacy `sw.time("selection", ..)` call sites feed the same
 //!   telemetry.
+//! * [`TraceScope`] — installs a wire-received `(trace, parent)` context
+//!   on the current thread, so a server dispatch span becomes a child of
+//!   the client's request span. `ServeClient` stamps outgoing requests
+//!   with `trace`/`span` fields (hex via [`id_hex`]); the server enters a
+//!   `TraceScope` around dispatch. See the [serve module
+//!   docs](crate::serve) for the wire negotiation.
+//! * [`flight`] — the flight recorder: a fixed-size lock-free ring of
+//!   recent span/request events that is always on, with tail-sampling —
+//!   requests slower than `MILO_FLIGHT_SLOW_US` (default 100 ms) or
+//!   ending in error get their whole span tree captured (and flushed to
+//!   the `MILO_TRACE` sink when one is configured).
+//! * [`traceview`] — the `milo trace` renderer: reads a sink (or
+//!   `/flight` dump), reconstructs per-trace span trees, walks the
+//!   critical path, and aggregates top spans.
 //!
 //! # Metric naming scheme
 //!
@@ -43,19 +62,24 @@
 //! by `_`, rendering histograms as Prometheus summaries (quantile series
 //! plus `_sum`/`_count`).
 //!
-//! # Kill switch
+//! # Kill switches
 //!
 //! [`set_enabled(false)`](set_enabled) turns all span/latency recording
 //! into no-ops (counters still tick — they predate this layer and cost a
-//! single relaxed add). `bench_serve` uses it to *measure* the telemetry
-//! overhead on the `NEXT_SUBSET` path instead of assuming it.
+//! single relaxed add). The flight recorder has its own, independent
+//! switch ([`flight::set_enabled`]) because it is *default-on*:
+//! `bench_serve` toggles each to *measure* the telemetry and flight
+//! overheads on the `NEXT_SUBSET` path instead of assuming them.
 
+pub mod flight;
 pub mod hist;
 pub mod trace;
+pub mod traceview;
 
 pub use hist::{Histogram, HistogramSnapshot};
 
 use std::borrow::Cow;
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -111,15 +135,25 @@ impl Gauge {
     }
 
     pub fn inc(&self) {
-        self.0.fetch_add(1, Ordering::Relaxed);
+        self.add(1);
     }
 
+    /// Add `n`, saturating at `u64::MAX` (a gauge that pegged stays
+    /// pegged rather than wrapping to a tiny value).
     pub fn add(&self, n: u64) {
-        self.0.fetch_add(n, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_add(n))
+        });
     }
 
+    /// Subtract `n`, saturating at zero. Gauges track non-negative
+    /// quantities (open connections, buffered bytes); a decrement racing
+    /// a restart or an accounting bug must floor at 0, not wrap to
+    /// ~2^64 and poison every scrape until the next `set`.
     pub fn dec(&self, n: u64) {
-        self.0.fetch_sub(n, Ordering::Relaxed);
+        let _ = self.0.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(n))
+        });
     }
 
     pub fn get(&self) -> u64 {
@@ -260,19 +294,154 @@ impl MetricsRegistry {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Trace context: process-unique ids and the thread-local span stack
+// ---------------------------------------------------------------------------
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+static ID_BASE: OnceLock<u64> = OnceLock::new();
+static ID_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh nonzero trace/span id. Ids are a per-process random base
+/// (pid ⊕ wall-clock nanoseconds) plus an atomic counter, mixed through
+/// splitmix64 — so a client and a server in different processes never
+/// collide on span ids within one trace, without any coordination.
+pub fn next_id() -> u64 {
+    let base = *ID_BASE.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5eed);
+        nanos ^ ((std::process::id() as u64) << 32)
+    });
+    loop {
+        let n = ID_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let id = splitmix64(base.wrapping_add(n));
+        if id != 0 {
+            return id;
+        }
+    }
+}
+
+/// Render an id the way it travels on the wire and in trace files:
+/// 16 lowercase hex characters. (u64 ids do not survive a JSON number
+/// round-trip — same reason `HELLO` carries `seed_hex`.)
+pub fn id_hex(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse an [`id_hex`]-formatted id; `None` on malformed input.
+pub fn parse_id(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+thread_local! {
+    // (trace id, span id) frames; `.last()` is the current span context.
+    static CURRENT: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+fn ctx_push(frame: (u64, u64)) {
+    CURRENT.with(|s| s.borrow_mut().push(frame));
+}
+
+fn ctx_pop(frame: (u64, u64)) {
+    CURRENT.with(|s| {
+        let mut s = s.borrow_mut();
+        // exact-match removal from the tail: a span finished out of order
+        // (or moved across threads) must never pop someone else's frame
+        if let Some(pos) = s.iter().rposition(|f| *f == frame) {
+            s.remove(pos);
+        }
+    });
+}
+
+/// The calling thread's current `(trace, span)` context — `(0, 0)` when
+/// no span or [`TraceScope`] is active.
+pub fn current_context() -> (u64, u64) {
+    CURRENT.with(|s| s.borrow().last().copied().unwrap_or((0, 0)))
+}
+
+/// A guard that installs an externally-supplied trace context — e.g. one
+/// that arrived over the serve wire — as the calling thread's current
+/// context, so spans entered inside it become children of `parent`
+/// within `trace`. Dropping the guard restores the previous context.
+///
+/// `TraceScope::enter(0, _)` is a no-op guard: a request with no wire
+/// context leaves the ambient context untouched.
+pub struct TraceScope {
+    frame: Option<(u64, u64)>,
+}
+
+impl TraceScope {
+    pub fn enter(trace: u64, parent: u64) -> TraceScope {
+        if trace == 0 {
+            return TraceScope { frame: None };
+        }
+        let frame = (trace, parent);
+        ctx_push(frame);
+        TraceScope { frame: Some(frame) }
+    }
+}
+
+impl Drop for TraceScope {
+    fn drop(&mut self) {
+        if let Some(frame) = self.frame.take() {
+            ctx_pop(frame);
+        }
+    }
+}
+
 /// A scoped timer. Created with [`Span::enter`]; on drop (or explicit
 /// [`finish`](Span::finish)) it records its elapsed time into the global
-/// registry's `span.<name>` histogram and emits a `MILO_TRACE` event when
-/// tracing is configured. When telemetry is disabled ([`set_enabled`]),
-/// entering a span is a single relaxed load.
+/// registry's `span.<name>` histogram, emits a `MILO_TRACE` event when
+/// tracing is configured, and records into the always-on [`flight`]
+/// ring. When telemetry is disabled ([`set_enabled`]), entering a span
+/// is a single relaxed load.
+///
+/// Spans carry causal identity: each gets a fresh [`next_id`], adopts
+/// the thread's current trace (or starts a new one when none is active),
+/// and parents itself under the enclosing span — so nested spans form a
+/// tree that `milo trace` can reconstruct from the sink.
 pub struct Span {
     name: Cow<'static, str>,
     start: Option<Instant>,
+    trace: u64,
+    id: u64,
+    parent: u64,
 }
 
 impl Span {
     pub fn enter(name: impl Into<Cow<'static, str>>) -> Span {
-        Span { name: name.into(), start: enabled().then(Instant::now) }
+        let name = name.into();
+        if !enabled() {
+            return Span { name, start: None, trace: 0, id: 0, parent: 0 };
+        }
+        let id = next_id();
+        let (ambient_trace, parent) = current_context();
+        // a span with no enclosing context roots its own trace, so every
+        // recorded span belongs to exactly one trace
+        let trace = if ambient_trace == 0 { id } else { ambient_trace };
+        ctx_push((trace, id));
+        Span { name, start: Some(Instant::now()), trace, id, parent }
+    }
+
+    /// The trace this span belongs to (0 when telemetry was disabled).
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
+    /// This span's own id (0 when telemetry was disabled).
+    pub fn span_id(&self) -> u64 {
+        self.id
     }
 
     /// End the span now, returning its measured duration (zero when
@@ -284,10 +453,12 @@ impl Span {
     fn finish_inner(&mut self) -> Duration {
         let Some(start) = self.start.take() else { return Duration::ZERO };
         let d = start.elapsed();
+        ctx_pop((self.trace, self.id));
         MetricsRegistry::global()
             .histogram(format!("span.{}", self.name))
             .record_duration(d);
-        trace::emit_span(&self.name, d);
+        trace::emit_span(&self.name, d, self.trace, self.id, self.parent);
+        flight::record_span(&self.name, d, self.trace, self.id, self.parent);
         d
     }
 }
@@ -353,8 +524,57 @@ mod tests {
         assert!(hist.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
     }
 
-    // one test (not two) because `set_enabled` is process-global and the
-    // test harness runs tests concurrently
+    #[test]
+    fn gauge_add_and_dec_saturate() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("t.sat");
+        // the serve.buffer_bytes shrink path decrements — below zero must
+        // floor at 0, never wrap to ~2^64
+        g.dec(5);
+        assert_eq!(g.get(), 0);
+        g.set(3);
+        g.dec(10);
+        assert_eq!(g.get(), 0);
+        g.set(u64::MAX - 1);
+        g.add(10);
+        assert_eq!(g.get(), u64::MAX);
+        g.dec(u64::MAX);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn ids_are_nonzero_unique_and_hex_roundtrip() {
+        let a = next_id();
+        let b = next_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+        let hex = id_hex(a);
+        assert_eq!(hex.len(), 16);
+        assert_eq!(parse_id(&hex), Some(a));
+        assert_eq!(parse_id(""), None);
+        assert_eq!(parse_id("xyz"), None);
+        assert_eq!(parse_id("00000000000000000"), None); // 17 chars
+    }
+
+    #[test]
+    fn trace_scope_installs_and_restores_context() {
+        assert_eq!(current_context(), (0, 0));
+        {
+            let _scope = TraceScope::enter(0xabc, 0xdef);
+            assert_eq!(current_context(), (0xabc, 0xdef));
+            {
+                // a zero trace is a no-op guard — ambient context holds
+                let _noop = TraceScope::enter(0, 7);
+                assert_eq!(current_context(), (0xabc, 0xdef));
+            }
+            assert_eq!(current_context(), (0xabc, 0xdef));
+        }
+        assert_eq!(current_context(), (0, 0));
+    }
+
+    // one test (not several) because `set_enabled` is process-global and
+    // the test harness runs tests concurrently
     #[test]
     fn span_records_into_global_registry_unless_disabled() {
         let count = |name: &str| {
@@ -364,9 +584,26 @@ mod tests {
         time("obs_test_span", || std::hint::black_box(1 + 1));
         assert_eq!(count("span.obs_test_span"), before + 1);
 
+        // nested spans share one trace and parent correctly (checked here
+        // so no concurrent test can flip the kill switch mid-assertion)
+        let outer = Span::enter("obs_test_outer");
+        assert_ne!(outer.span_id(), 0);
+        assert_eq!(outer.trace_id(), outer.span_id()); // rooted its own trace
+        let inner = Span::enter("obs_test_inner");
+        assert_eq!(inner.trace_id(), outer.trace_id());
+        assert_ne!(inner.span_id(), outer.span_id());
+        assert_eq!(current_context(), (inner.trace_id(), inner.span_id()));
+        drop(inner);
+        assert_eq!(current_context(), (outer.trace_id(), outer.span_id()));
+        drop(outer);
+        assert_eq!(current_context(), (0, 0));
+
         set_enabled(false);
         let disabled_before = count("span.obs_test_disabled");
-        let d = Span::enter("obs_test_disabled").finish();
+        let disabled = Span::enter("obs_test_disabled");
+        assert_eq!(disabled.trace_id(), 0);
+        assert_eq!(disabled.span_id(), 0);
+        let d = disabled.finish();
         set_enabled(true);
         assert_eq!(d, Duration::ZERO);
         assert_eq!(count("span.obs_test_disabled"), disabled_before);

@@ -6,14 +6,33 @@
 //! that file:
 //!
 //! ```text
-//! {"ev":"span","name":"preprocess.sge","t_us":812.0,"us":15301.2}
+//! {"ev":"span","name":"preprocess.sge","parent":"9f0c…","span":"41d2…",
+//!  "t_us":812.0,"trace":"9f0c…","us":15301.2}
 //! ```
 //!
-//! Fields: `ev` — event kind (currently always `"span"`); `name` — the
-//! span name; `t_us` — microseconds since the process's first trace
-//! event; `us` — the span's elapsed microseconds. The file is opened in
-//! append mode once per process; unset (the default) costs one relaxed
-//! load per span.
+//! # Schema (v2)
+//!
+//! Fields: `ev` — event kind (`"span"`, or `"request"` for flight-sampled
+//! request events); `name` — the span name; `t_us` — microseconds since
+//! the process's first trace event; `us` — the span's elapsed
+//! microseconds; `trace`/`span`/`parent` — causal ids as 16-hex-char
+//! strings ([`id_hex`](super::id_hex)), with `parent` omitted for root
+//! spans. v1 readers that ignore unknown fields keep working — the v1
+//! fields are unchanged — and `milo trace` reads both (v1 lines simply
+//! carry no causal structure).
+//!
+//! # Rotation
+//!
+//! `MILO_TRACE_MAX_MB=N` caps the file at `N` MiB: when a write would
+//! cross the cap, the file is renamed to `<path>.1` (replacing any
+//! previous `.1`, log-rotate convention) and a fresh file is started — a
+//! soak can run for days without filling the disk, keeping the newest
+//! full cap plus the live tail. Unset means unbounded (the v1 behavior).
+//!
+//! The file is opened in append mode once per process; unset (the
+//! default) costs one relaxed load per span. Lines are formatted *before*
+//! taking the sink lock, so concurrent spans contend only on the
+//! `writeln!`, never on JSON encoding.
 
 use std::io::Write;
 use std::sync::{Mutex, OnceLock};
@@ -21,10 +40,17 @@ use std::time::Instant;
 
 use crate::util::json::Json;
 
-static SINK: OnceLock<Option<Mutex<std::fs::File>>> = OnceLock::new();
+struct SinkState {
+    file: std::fs::File,
+    path: String,
+    written: u64,
+    cap_bytes: Option<u64>,
+}
+
+static SINK: OnceLock<Option<Mutex<SinkState>>> = OnceLock::new();
 static EPOCH: OnceLock<Instant> = OnceLock::new();
 
-fn sink() -> Option<&'static Mutex<std::fs::File>> {
+fn sink() -> Option<&'static Mutex<SinkState>> {
     SINK.get_or_init(|| {
         let path = std::env::var("MILO_TRACE").ok()?;
         if path.is_empty() {
@@ -36,7 +62,13 @@ fn sink() -> Option<&'static Mutex<std::fs::File>> {
             .open(&path)
             .map_err(|e| eprintln!("[obs] cannot open MILO_TRACE={path}: {e}"))
             .ok()?;
-        Some(Mutex::new(file))
+        let written = file.metadata().map(|m| m.len()).unwrap_or(0);
+        let cap_bytes = std::env::var("MILO_TRACE_MAX_MB")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&mb| mb > 0)
+            .map(|mb| mb * 1024 * 1024);
+        Some(Mutex::new(SinkState { file, path, written, cap_bytes }))
     })
     .as_ref()
 }
@@ -46,17 +78,92 @@ pub fn enabled() -> bool {
     sink().is_some()
 }
 
-/// Append one span event; a no-op unless `MILO_TRACE` is set.
-pub fn emit_span(name: &str, elapsed: std::time::Duration) {
+/// Microseconds since the process's first trace event (the `t_us` clock,
+/// shared with the flight recorder so timestamps line up across both).
+pub fn now_us() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6
+}
+
+fn write_line(st: &mut SinkState, line: &str) {
+    let len = line.len() as u64 + 1;
+    if let Some(cap) = st.cap_bytes {
+        if st.written > 0 && st.written + len > cap {
+            // rotate once to `<path>.1` (replacing the previous `.1`) and
+            // start fresh — never more than cap + one rotated file on disk
+            let rotated = format!("{}.1", st.path);
+            let _ = std::fs::rename(&st.path, &rotated);
+            match std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&st.path)
+            {
+                Ok(f) => {
+                    st.file = f;
+                    st.written = 0;
+                }
+                Err(e) => {
+                    eprintln!("[obs] MILO_TRACE rotation reopen failed: {e}");
+                }
+            }
+        }
+    }
+    if writeln!(st.file, "{line}").is_ok() {
+        st.written += len;
+    }
+}
+
+/// Append one pre-formatted JSON line (no trailing newline) to the trace
+/// sink; a no-op unless `MILO_TRACE` is set. The flight recorder uses
+/// this to flush tail-sampled traces.
+pub fn emit_line(line: &str) {
     let Some(sink) = sink() else { return };
-    let t_us = EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1e6;
-    let line = Json::obj(vec![
-        ("ev", Json::str("span")),
+    let mut st = sink.lock().unwrap();
+    write_line(&mut st, line);
+}
+
+/// Build the schema-v2 JSON object for one span/request event. `ev` is
+/// `"span"` or `"request"`; zero ids are omitted.
+pub(crate) fn event_json(
+    ev: &str,
+    name: &str,
+    t_us: f64,
+    us: f64,
+    trace: u64,
+    span: u64,
+    parent: u64,
+) -> Json {
+    let mut fields = vec![
+        ("ev", Json::str(ev)),
         ("name", Json::str(name)),
         ("t_us", Json::num(t_us)),
-        ("us", Json::num(elapsed.as_secs_f64() * 1e6)),
-    ])
+        ("us", Json::num(us)),
+    ];
+    if trace != 0 {
+        fields.push(("trace", Json::Str(super::id_hex(trace))));
+    }
+    if span != 0 {
+        fields.push(("span", Json::Str(super::id_hex(span))));
+    }
+    if parent != 0 {
+        fields.push(("parent", Json::Str(super::id_hex(parent))));
+    }
+    Json::obj(fields)
+}
+
+/// Append one span event; a no-op unless `MILO_TRACE` is set. The line
+/// is formatted before the sink lock is taken.
+pub fn emit_span(name: &str, elapsed: std::time::Duration, trace: u64, span: u64, parent: u64) {
+    let Some(sink) = sink() else { return };
+    let line = event_json(
+        "span",
+        name,
+        now_us(),
+        elapsed.as_secs_f64() * 1e6,
+        trace,
+        span,
+        parent,
+    )
     .to_string();
-    let mut f = sink.lock().unwrap();
-    let _ = writeln!(f, "{line}");
+    let mut st = sink.lock().unwrap();
+    write_line(&mut st, &line);
 }

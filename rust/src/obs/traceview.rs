@@ -1,0 +1,296 @@
+//! `milo trace` — render a trace sink (or `/flight` dump) as causal
+//! trees.
+//!
+//! Input is schema-v2 JSON lines (see [`super::trace`]): `span` and
+//! `request` events carrying `trace`/`span`/`parent` ids. The report
+//! groups events by trace, renders each trace's span tree slowest-first
+//! (children indented under their parent, chronological within a level),
+//! walks the slowest trace's **critical path** — the chain of heaviest
+//! children from the root — and ends with a top-spans aggregate. v1
+//! lines (no ids) and `flight`/`sample` marker lines are tolerated: they
+//! feed the aggregate but carry no tree structure.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+
+/// One parsed span/request event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// `"span"` or `"request"`.
+    pub ev: String,
+    pub name: String,
+    /// Microseconds since the emitting process's trace epoch.
+    pub t_us: f64,
+    /// Elapsed microseconds.
+    pub us: f64,
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub err: bool,
+}
+
+fn id_of(v: &Json, key: &str) -> u64 {
+    v.opt(key)
+        .and_then(|s| s.as_str().ok())
+        .and_then(super::parse_id)
+        .unwrap_or(0)
+}
+
+/// Parse JSON lines, keeping `span`/`request` events and skipping
+/// everything else (flight headers, sample markers, malformed lines —
+/// a dump is never "invalid", it just contributes fewer events).
+pub fn parse_lines(text: &str) -> Vec<TraceEvent> {
+    let mut events = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(v) = Json::parse(line) else { continue };
+        // v1 span lines predate the `ev` discriminator
+        let ev = v.opt("ev").and_then(|e| e.as_str().ok()).unwrap_or("span");
+        if ev != "span" && ev != "request" {
+            continue;
+        }
+        let Some(name) = v.opt("name").and_then(|n| n.as_str().ok()) else {
+            continue;
+        };
+        events.push(TraceEvent {
+            ev: ev.to_string(),
+            name: name.to_string(),
+            t_us: v.opt("t_us").and_then(|t| t.as_f64().ok()).unwrap_or(0.0),
+            us: v.opt("us").and_then(|u| u.as_f64().ok()).unwrap_or(0.0),
+            trace: id_of(&v, "trace"),
+            span: id_of(&v, "span"),
+            parent: id_of(&v, "parent"),
+            err: v.opt("err").and_then(|e| e.as_bool().ok()).unwrap_or(false),
+        });
+    }
+    events
+}
+
+fn by_time(events: &[TraceEvent]) -> impl Fn(&usize, &usize) -> Ordering + '_ {
+    move |&a, &b| {
+        events[a].t_us.partial_cmp(&events[b].t_us).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Link one trace's events into `(roots, children-by-parent-span)`. An
+/// event whose parent isn't among the trace's span ids (including parent
+/// 0) roots a subtree — a partial capture (ring wrap, v1 mix) degrades
+/// to a forest instead of disappearing.
+fn link(
+    events: &[TraceEvent],
+    idx: &[usize],
+) -> (Vec<usize>, BTreeMap<u64, Vec<usize>>) {
+    let spans: BTreeSet<u64> =
+        idx.iter().map(|&i| events[i].span).filter(|&s| s != 0).collect();
+    let mut roots = Vec::new();
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for &i in idx {
+        let e = &events[i];
+        if e.parent != 0 && e.parent != e.span && spans.contains(&e.parent) {
+            children.entry(e.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    roots.sort_by(by_time(events));
+    for v in children.values_mut() {
+        v.sort_by(by_time(events));
+    }
+    (roots, children)
+}
+
+fn render_tree(events: &[TraceEvent], idx: &[usize], out: &mut String) {
+    let (roots, children) = link(events, idx);
+    // iterative DFS with a visited guard: a malformed file (duplicated
+    // ids, cycles) renders each event once instead of looping
+    let mut visited: BTreeSet<usize> = BTreeSet::new();
+    let mut stack: Vec<(usize, usize)> = roots.iter().rev().map(|&i| (i, 0)).collect();
+    while let Some((i, depth)) = stack.pop() {
+        if !visited.insert(i) {
+            continue;
+        }
+        let e = &events[i];
+        out.push_str(&format!(
+            "  {:indent$}{} {:.1} µs{}\n",
+            "",
+            e.name,
+            e.us,
+            if e.err { "  [ERROR]" } else { "" },
+            indent = depth * 2,
+        ));
+        if e.span != 0 {
+            if let Some(kids) = children.get(&e.span) {
+                for &k in kids.iter().rev() {
+                    stack.push((k, depth + 1));
+                }
+            }
+        }
+    }
+}
+
+/// The heaviest root, then repeatedly the heaviest child — the chain a
+/// latency fix has to shorten.
+fn critical_path(events: &[TraceEvent], idx: &[usize]) -> Vec<usize> {
+    let (roots, children) = link(events, idx);
+    let heaviest = |candidates: &[usize]| {
+        candidates.iter().copied().max_by(|&a, &b| {
+            events[a].us.partial_cmp(&events[b].us).unwrap_or(Ordering::Equal)
+        })
+    };
+    let Some(mut cur) = heaviest(&roots) else { return Vec::new() };
+    let mut path = vec![cur];
+    // bounded walk: a pathological parent graph terminates anyway
+    for _ in 0..64 {
+        let e = &events[cur];
+        if e.span == 0 {
+            break;
+        }
+        let Some(next) = children.get(&e.span).and_then(|k| heaviest(k)) else {
+            break;
+        };
+        path.push(next);
+        cur = next;
+    }
+    path
+}
+
+/// Render the full report for a trace file's contents: per-trace trees
+/// (slowest `max_traces` traces), the slowest trace's critical path, and
+/// the top-spans aggregate.
+pub fn report(text: &str, max_traces: usize) -> String {
+    let events = parse_lines(text);
+    let mut out = String::new();
+    if events.is_empty() {
+        out.push_str("no span/request events found\n");
+        return out;
+    }
+    let mut traces: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        if e.trace != 0 {
+            traces.entry(e.trace).or_default().push(i);
+        }
+    }
+    // a trace's weight is its longest single event: the root request
+    // span covers its children, so this is the end-to-end latency
+    let mut order: Vec<(u64, f64)> = traces
+        .iter()
+        .map(|(&t, idx)| {
+            (t, idx.iter().map(|&i| events[i].us).fold(0.0, f64::max))
+        })
+        .collect();
+    order.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal));
+    out.push_str(&format!(
+        "{} event(s), {} trace(s)\n",
+        events.len(),
+        traces.len(),
+    ));
+    for (t, weight) in order.iter().take(max_traces) {
+        out.push_str(&format!(
+            "\ntrace {} — {} event(s), {weight:.1} µs\n",
+            super::id_hex(*t),
+            traces[t].len(),
+        ));
+        render_tree(&events, &traces[t], &mut out);
+    }
+    if let Some((t, _)) = order.first() {
+        let path = critical_path(&events, &traces[t]);
+        if path.len() > 1 {
+            out.push_str(&format!(
+                "\ncritical path (trace {}):\n",
+                super::id_hex(*t),
+            ));
+            for &i in &path {
+                out.push_str(&format!(
+                    "  {} {:.1} µs\n",
+                    events[i].name, events[i].us,
+                ));
+            }
+        }
+    }
+    let mut agg: BTreeMap<&str, (u64, f64, f64)> = BTreeMap::new();
+    for e in &events {
+        let a = agg.entry(e.name.as_str()).or_insert((0, 0.0, 0.0));
+        a.0 += 1;
+        a.1 += e.us;
+        a.2 = a.2.max(e.us);
+    }
+    let mut rows: Vec<(&str, (u64, f64, f64))> = agg.into_iter().collect();
+    rows.sort_by(|a, b| (b.1).1.partial_cmp(&(a.1).1).unwrap_or(Ordering::Equal));
+    out.push_str("\ntop spans (by total time):\n");
+    out.push_str(&format!(
+        "  {:<36} {:>7} {:>12} {:>12}\n",
+        "name", "count", "total µs", "max µs",
+    ));
+    for (name, (count, total, max)) in rows.iter().take(15) {
+        out.push_str(&format!(
+            "  {name:<36} {count:>7} {total:>12.1} {max:>12.1}\n",
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_line(name: &str, t_us: f64, us: f64, trace: u64, span: u64, parent: u64) -> String {
+        crate::obs::trace::event_json("span", name, t_us, us, trace, span, parent)
+            .to_string()
+    }
+
+    #[test]
+    fn reconstructs_nested_tree_and_critical_path() {
+        let text = [
+            span_line("serve.client.get_meta", 1.0, 950.0, 0xaa, 0xb0, 0),
+            span_line("serve.get_meta", 2.0, 900.0, 0xaa, 0xb1, 0xb0),
+            span_line("store.resolve", 3.0, 700.0, 0xaa, 0xb2, 0xb1),
+            span_line("kernel.execute", 4.0, 500.0, 0xaa, 0xb3, 0xb2),
+            // a second, faster trace
+            span_line("serve.ping", 9.0, 5.0, 0xcc, 0xd0, 0),
+        ]
+        .join("\n");
+        let r = report(&text, 10);
+        assert!(r.contains("5 event(s), 2 trace(s)"), "{r}");
+        // slowest trace first, with each level indented two more spaces
+        assert!(r.contains("  serve.client.get_meta 950.0 µs"), "{r}");
+        assert!(r.contains("    serve.get_meta 900.0 µs"), "{r}");
+        assert!(r.contains("      store.resolve 700.0 µs"), "{r}");
+        assert!(r.contains("        kernel.execute 500.0 µs"), "{r}");
+        let tree_pos = r.find("serve.client.get_meta").unwrap();
+        let ping_pos = r.find("serve.ping").unwrap();
+        assert!(tree_pos < ping_pos, "slowest trace must render first: {r}");
+        // the critical path walks the heaviest chain end to end
+        let cp = r.find("critical path").expect("critical path section");
+        let tail = &r[cp..];
+        assert!(tail.contains("kernel.execute"), "{r}");
+        assert!(r.contains("top spans"), "{r}");
+    }
+
+    #[test]
+    fn tolerates_v1_flight_and_garbage_lines() {
+        let text = "\
+{\"name\":\"preprocess.sge\",\"t_us\":1.0,\"us\":10.0}\n\
+{\"ev\":\"flight\",\"recorded\":3}\n\
+{\"ev\":\"sample\",\"trace\":\"00000000000000aa\"}\n\
+not json at all\n\
+{\"ev\":\"request\",\"name\":\"next_subset\",\"t_us\":2.0,\"us\":220.0,\
+\"trace\":\"00000000000000aa\",\"span\":\"00000000000000ab\",\"err\":true}\n";
+        let events = parse_lines(text);
+        assert_eq!(events.len(), 2, "v1 span + request survive, rest skipped");
+        let r = report(text, 10);
+        // the v1 line has no trace id: aggregate-only, one rendered trace
+        assert!(r.contains("2 event(s), 1 trace(s)"), "{r}");
+        assert!(r.contains("[ERROR]"), "{r}");
+        assert!(r.contains("preprocess.sge"), "{r}");
+    }
+
+    #[test]
+    fn empty_input_reports_cleanly() {
+        assert!(report("", 10).contains("no span/request events"));
+    }
+}

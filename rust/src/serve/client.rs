@@ -46,6 +46,13 @@
 //!   poisons the shared socket so every session on it reconnects onto a
 //!   fresh one — replaying its deterministic streams exactly as a
 //!   dedicated connection would.
+//! * **Causal tracing**: when the server acks the trace capability at
+//!   `HELLO` (`"trace":true` — see the [`crate::serve`] *Causal tracing*
+//!   docs), every request is stamped with a fresh trace id and the
+//!   client's request-span id, so the server's dispatch — and its
+//!   downstream store/kernel spans — join the client's trace tree; the
+//!   server echoes the id on control replies
+//!   ([`ServeClient::last_trace`]). Older servers never see the fields.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -103,6 +110,10 @@ struct HelloInfo {
     seed: u64,
     /// The entry's continual-arrival epoch (0 = batch / pre-epoch server).
     epoch: u64,
+    /// Whether the server acked the trace capability (`"trace":true` in
+    /// its `HELLO` reply) — only then does the client stamp requests with
+    /// `trace`/`span` fields. Absent on older servers.
+    trace: bool,
 }
 
 /// One complete epoch advance, reassembled from a push burst (or
@@ -324,6 +335,7 @@ fn parse_hello(v: &Json) -> Result<HelloInfo> {
         seed,
         // absent on pre-epoch servers: those serve the batch state (0)
         epoch: v.opt("epoch").and_then(|e| e.as_f64().ok()).unwrap_or(0.0) as u64,
+        trace: v.opt("trace").and_then(|t| t.as_bool().ok()).unwrap_or(false),
     })
 }
 
@@ -525,6 +537,12 @@ pub struct ServeClient {
     bytes_tx: u64,
     bytes_rx: u64,
     goodbye_sent: bool,
+    /// Server acked the trace capability at `HELLO` — requests are
+    /// stamped with `trace`/`span` fields (see [`crate::serve`] docs).
+    server_trace: bool,
+    /// `(trace id, server echoed it)` for the most recent stamped
+    /// request — see [`ServeClient::last_trace`].
+    last_trace: Option<(u64, bool)>,
 }
 
 /// An [`EpochUpdate`] mid-reassembly: the announced delta count and the
@@ -617,6 +635,8 @@ impl ServeClient {
             bytes_tx: 0,
             bytes_rx: 0,
             goodbye_sent: false,
+            server_trace: info.trace,
+            last_trace: None,
         }
     }
 
@@ -643,6 +663,19 @@ impl ServeClient {
     /// Negotiated wire format.
     pub fn wire_mode(&self) -> WireMode {
         self.opts.wire
+    }
+
+    /// Whether the server acked the trace capability at `HELLO`.
+    pub fn trace_capable(&self) -> bool {
+        self.server_trace
+    }
+
+    /// The most recent stamped request's `(trace id, server echoed it)` —
+    /// `None` until the first request after a trace-capable `HELLO`. The
+    /// id keys this request's span tree in the server's `MILO_TRACE` sink
+    /// / flight recorder ([`crate::obs::id_hex`] is its wire form).
+    pub fn last_trace(&self) -> Option<(u64, bool)> {
+        self.last_trace
     }
 
     /// Bytes written to the server so far (all connections). On a pooled
@@ -826,6 +859,8 @@ impl ServeClient {
         let missed_epoch = info.epoch > self.last_epoch;
         self.server_fraction = info.fraction;
         self.server_epoch = info.epoch;
+        // a restarted server may have gained or lost the capability
+        self.server_trace = info.trace;
         if self.subscribed {
             // the subscription died with the old connection — re-arm it,
             // and surface the advance(s) we slept through as one
@@ -852,10 +887,49 @@ impl ServeClient {
         Ok(())
     }
 
-    /// One protocol round-trip with the retry policy applied: transport
-    /// failures trigger reconnect + deterministic replay; server-side
-    /// errors come back as frames and are never retried.
+    /// One protocol round-trip with the retry policy applied. When the
+    /// server acked the trace capability at `HELLO`, the request is
+    /// stamped with a fresh trace id and this client's request-span id —
+    /// the server joins its dispatch (and everything downstream of it) to
+    /// that trace and echoes the id on control replies — and the
+    /// round-trip runs under a `serve.client.<cmd>` span, so client-side
+    /// wait time and server-side handling land in one causal tree.
     fn call(&mut self, request: &Json) -> Result<Frame> {
+        if !self.server_trace {
+            return self.call_raw(request);
+        }
+        let trace = crate::obs::next_id();
+        let hex = crate::obs::id_hex(trace);
+        let _scope = crate::obs::TraceScope::enter(trace, 0);
+        let cmd = request
+            .opt("cmd")
+            .and_then(|c| c.as_str().ok())
+            .unwrap_or("other")
+            .to_ascii_lowercase();
+        let span = crate::obs::Span::enter(format!("serve.client.{cmd}"));
+        // with telemetry disabled the span carries no id — the trace id
+        // itself then parents the server's dispatch span
+        let span_id = if span.span_id() != 0 { span.span_id() } else { trace };
+        let mut stamped = request.clone();
+        if let Json::Obj(m) = &mut stamped {
+            m.insert("trace".to_string(), Json::Str(hex.clone()));
+            m.insert("span".to_string(), Json::Str(crate::obs::id_hex(span_id)));
+        }
+        let result = self.call_raw(&stamped);
+        // a control reply echoes the id verbatim; binary subset/meta
+        // frames can't (and a pre-trace server after reconnect won't)
+        let echoed = match &result {
+            Ok(Frame::Json(text)) => text.contains(&hex),
+            _ => false,
+        };
+        self.last_trace = Some((trace, echoed));
+        result
+    }
+
+    /// `call` without trace stamping: transport failures trigger
+    /// reconnect + deterministic replay; server-side errors come back as
+    /// frames and are never retried.
+    fn call_raw(&mut self, request: &Json) -> Result<Frame> {
         let mut first_err: Option<anyhow::Error> = None;
         if self.transport_live() {
             match self.roundtrip_live(request) {

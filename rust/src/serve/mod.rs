@@ -94,8 +94,34 @@
 //! | `{"cmd":"SAMPLE_WRE","k":K}` | a fresh size-K WRE draw from this client's seeded stream |
 //! | `{"cmd":"SUBSCRIBE"}` | `{"ok":true,"subscribed":true,"epoch":…,"n_subsets":…}` — frame wire only; the requesting **stream** now receives push frames on every epoch publish (see *Epoch versioning* below) |
 //! | `{"cmd":"STATS"}` | serving + store telemetry (see *STATS reply* below) |
+//! | `{"cmd":"FLIGHT"}` | flight-recorder counters plus a summary of buffered tail-samples (see *Causal tracing* below; full event dumps live on the HTTP `/flight` surface) |
 //! | `{"cmd":"GOODBYE"}` | `{"ok":true,"goodbye":true}`; on stream 0 the server then closes the connection and reclaims its slot, on stream `N > 0` only that stream's session is torn down |
 //! | `{"cmd":"PING"}` | `{"ok":true}` |
+//!
+//! # Causal tracing
+//!
+//! Any request may carry `"trace"` and `"span"` fields — 16-hex-char ids
+//! ([`crate::obs::id_hex`]) naming the client-side trace and the client's
+//! request span. The server runs the whole dispatch under that context:
+//! the per-command span (`serve.hello`, `serve.next_subset`, …) parents
+//! under the client's span, and every span opened downstream — a deferred
+//! entry's `store.resolve`, a kernel build — joins the same tree, so one
+//! `MILO_TRACE` sink (or a flight tail-sample) reconstructs client
+//! request → dispatch → store → kernel as one causal tree (`milo trace`
+//! renders it). The trace id is echoed back as `"trace"` on control
+//! replies. The fields are additive JSON — proto-3 peers that never send
+//! them are untouched — and the server advertises the capability with
+//! `"trace":true` in its `HELLO` reply; [`ServeClient`] stamps requests
+//! only after seeing that ack.
+//!
+//! The **flight recorder** ([`crate::obs::flight`]) is always on: every
+//! finished dispatch lands in a fixed-size lock-free ring, and a request
+//! that errors or exceeds the tail-sampling threshold
+//! (`MILO_FLIGHT_SLOW_US`, default 100 ms) gets its whole trace buffered
+//! — and flushed to the `MILO_TRACE` sink when one is configured — even
+//! though nothing was being traced when the request started. `FLIGHT`
+//! (above) returns the counters; `GET /flight` on the metrics listener
+//! dumps ring + samples as JSON lines.
 //!
 //! # Epoch versioning and push frames
 //!
@@ -154,8 +180,14 @@
 //!   histogram summaries
 //!   (`count`/`p50_us`/`p95_us`/`p99_us`/`max_us`/`mean_us`/`saturated`)
 //!   for per-frame-type request latency
-//!   (`serve.request_latency_ns.<hello|get_meta|next_subset|sample_wre|stats|ping|goodbye|other>`)
-//!   and per-tick poll/dispatch time (`serve.tick_{poll,dispatch}_ns`);
+//!   (`serve.request_latency_ns.<hello|get_meta|next_subset|sample_wre|stats|flight|ping|goodbye|other>`),
+//!   **per-entry attribution** (`serve.requests.entry.<dataset>@<fraction>`
+//!   counters and `serve.request_latency_ns.entry.<dataset>@<fraction>`
+//!   histograms — which served entry is hot, and how it's behaving),
+//!   per-stream request counters (`serve.requests.stream.<id>`), and
+//!   per-tick poll/dispatch time (`serve.tick_{poll,dispatch}_ns`);
+//! * `"flight"` — the flight-recorder counters
+//!   ([`crate::obs::flight::stats_json`]);
 //! * `"store"` — the same registry rendering of the backing
 //!   [`MetaStore`]'s metrics (counters + hit/disk-load/build latency
 //!   histograms), or `null` when serving without a store;
@@ -173,8 +205,11 @@
 //! request with a plain-text Prometheus-style exposition of the server
 //! registry, the store registry, and the process-global registry (span
 //! timings) — `curl http://host:port/metrics` and point a scraper at it.
-//! Responses are one-shot (`Connection: close`); the endpoint shares the
-//! serve thread, so a scrape costs one registry render, no extra thread.
+//! `GET /flight` on the same listener instead returns the flight
+//! recorder's JSON-lines dump (ring contents plus tail-samples — feed it
+//! to `milo trace`); any other path serves the exposition. Responses are
+//! one-shot (`Connection: close`); the endpoint shares the serve thread,
+//! so a scrape costs one registry render, no extra thread.
 //!
 //! A malformed request (bad JSON, bad frame, unknown command) gets an
 //! `"ok":false` line / `ERROR` frame; only an unrecoverable framing error
@@ -234,7 +269,7 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::coordinator::{metadata_to_json, Metadata};
-use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
+use crate::obs::{flight, Counter, Gauge, Histogram, MetricsRegistry};
 use crate::selection::WreStrategy;
 use crate::store::{binfmt, fnv1a64, MetaStore};
 use crate::util::json::Json;
@@ -243,7 +278,9 @@ use crate::util::rng::Rng;
 /// Wire-protocol version, bumped on incompatible changes. v2 = binary
 /// frame negotiation + multi-entry routing + `GOODBYE`; v3 = stream-id
 /// multiplexing (per-stream sessions/subscriptions — stream 0 stays
-/// byte-compatible with v2).
+/// byte-compatible with v2). Trace context (`trace`/`span` request
+/// fields, the `trace` reply echo, `FLIGHT`) is an additive v3 extension
+/// negotiated via the `HELLO` capability ack — no bump.
 pub const PROTO_VERSION: u32 = 3;
 
 /// Ceiling on a single buffered request (line or partial frame) — a
@@ -402,11 +439,26 @@ pub struct ServeStats {
 /// Request commands instrumented with a per-frame-type latency histogram
 /// (`serve.request_latency_ns.<name>`); the last slot collects unknown /
 /// malformed requests.
-const CMD_NAMES: [&str; 9] = [
-    "hello", "get_meta", "next_subset", "sample_wre", "subscribe", "stats", "ping",
-    "goodbye", "other",
+const CMD_NAMES: [&str; 10] = [
+    "hello", "get_meta", "next_subset", "sample_wre", "subscribe", "stats", "flight",
+    "ping", "goodbye", "other",
 ];
 const CMD_OTHER: usize = CMD_NAMES.len() - 1;
+
+/// Dispatch span name per command slot — static so the per-request span
+/// costs no allocation for its name.
+const CMD_SPANS: [&str; CMD_NAMES.len()] = [
+    "serve.hello",
+    "serve.get_meta",
+    "serve.next_subset",
+    "serve.sample_wre",
+    "serve.subscribe",
+    "serve.stats",
+    "serve.flight",
+    "serve.ping",
+    "serve.goodbye",
+    "serve.other",
+];
 
 fn cmd_slot(cmd: &str) -> usize {
     match cmd {
@@ -416,8 +468,9 @@ fn cmd_slot(cmd: &str) -> usize {
         "SAMPLE_WRE" => 3,
         "SUBSCRIBE" => 4,
         "STATS" => 5,
-        "PING" => 6,
-        "GOODBYE" => 7,
+        "FLIGHT" => 6,
+        "PING" => 7,
+        "GOODBYE" => 8,
         _ => CMD_OTHER,
     }
 }
@@ -452,12 +505,34 @@ struct ServeMetrics {
     tick_dispatch: Arc<Histogram>,
     /// Request handling + response encode latency, per frame type.
     req_latency: [Arc<Histogram>; CMD_NAMES.len()],
+    /// Per-entry attribution: request count and latency labeled by the
+    /// served `(dataset, fraction)` entry
+    /// (`serve.requests.entry.<dataset>@<fraction>` /
+    /// `serve.request_latency_ns.entry.<…>`) — one hot entry in a
+    /// multi-entry fleet is visible per scrape, not just in aggregate.
+    entry_requests: Vec<Counter>,
+    entry_latency: Vec<Arc<Histogram>>,
+    /// Requests per multiplexed stream id (`serve.requests.stream.<id>`).
+    stream_requests: Vec<Counter>,
 }
 
 impl ServeMetrics {
-    fn new() -> ServeMetrics {
+    fn new(entries: &[(String, f64)]) -> ServeMetrics {
         let registry = MetricsRegistry::new();
         ServeMetrics {
+            entry_requests: entries
+                .iter()
+                .map(|(d, f)| registry.counter(format!("serve.requests.entry.{d}@{f}")))
+                .collect(),
+            entry_latency: entries
+                .iter()
+                .map(|(d, f)| {
+                    registry.histogram(format!("serve.request_latency_ns.entry.{d}@{f}"))
+                })
+                .collect(),
+            stream_requests: (0..frame::MAX_STREAMS)
+                .map(|i| registry.counter(format!("serve.requests.stream.{i}")))
+                .collect(),
             connections: registry.counter("serve.connections"),
             open_connections: registry.gauge("serve.open_connections"),
             requests: registry.counter("serve.requests"),
@@ -514,6 +589,24 @@ fn entry_state(meta: Arc<Metadata>, epoch: u64) -> EntryState {
     EntryState { meta, encoded, meta_json: Arc::new(line), epoch }
 }
 
+/// A lazily-resolved entry's builder (see
+/// [`SubsetServer::bind_deferred`]): called at most once, on the first
+/// request that touches the entry, on the event-loop thread — under the
+/// request's dispatch span, so the serve → `store.resolve` →
+/// kernel-build chain of a cold entry is one causal trace.
+pub type EntryResolver = Box<dyn FnMut() -> Result<Metadata> + Send>;
+
+/// One lazily-resolved entry for [`SubsetServer::bind_deferred`]: the
+/// `(dataset, fraction)` routing key plus the builder that produces its
+/// metadata on first touch — typically a closure around
+/// [`MetaStore::get_or_build`](crate::store::MetaStore::get_or_build),
+/// so a cold entry resolves through the shared artifact store.
+pub struct DeferredEntry {
+    pub dataset: String,
+    pub fraction: f64,
+    pub resolve: EntryResolver,
+}
+
 /// A served `(dataset, fraction)` slot. The routing key is fixed at bind
 /// (a re-published entry keeps its `HELLO` address even when the replayed
 /// fraction drifts, e.g. a fixed-size buffer over a growing stream); the
@@ -522,14 +615,68 @@ struct EntryCell {
     dataset: String,
     fraction: f64,
     state: Mutex<EntryState>,
+    /// `Some` until a deferred entry resolves (kept on failure so the
+    /// next request retries); eagerly-bound entries are born `None`.
+    resolver: Mutex<Option<EntryResolver>>,
+    /// Fast path for [`ensure_resolved`] — true once real state landed
+    /// (resolution or a publish).
+    resolved: AtomicBool,
 }
 
 impl EntryCell {
+    fn eager(meta: Arc<Metadata>) -> EntryCell {
+        EntryCell {
+            dataset: meta.dataset.clone(),
+            fraction: meta.fraction,
+            state: Mutex::new(entry_state(meta, 0)),
+            resolver: Mutex::new(None),
+            resolved: AtomicBool::new(true),
+        }
+    }
+
     /// The entry's current `(epoch, metadata)` — one short lock, no
     /// allocation beyond the `Arc` bump.
     fn snapshot(&self) -> (u64, Arc<Metadata>) {
         let st = self.state.lock().expect("entry lock poisoned");
         (st.epoch, st.meta.clone())
+    }
+}
+
+/// Resolve a deferred entry if it hasn't been yet: run its builder and
+/// swap the real state in (unless a concurrent publish already supplied
+/// newer state). A failed build keeps the resolver for the next request
+/// to retry and surfaces the error to this one.
+fn ensure_resolved(shared: &Shared, entry: usize) -> Result<(), String> {
+    let cell = &shared.entries[entry];
+    if cell.resolved.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let mut resolver = cell.resolver.lock().expect("resolver lock poisoned");
+    if cell.resolved.load(Ordering::Acquire) {
+        return Ok(()); // raced another resolution (or a publish)
+    }
+    let Some(build) = resolver.as_mut() else {
+        cell.resolved.store(true, Ordering::Release);
+        return Ok(());
+    };
+    match build() {
+        Ok(meta) => {
+            {
+                let mut st = cell.state.lock().expect("entry lock poisoned");
+                // a publish that raced in carries epoch ≥ 1 and is newer
+                // than the bind-time build — never clobber it
+                if st.epoch == 0 {
+                    *st = entry_state(Arc::new(meta), 0);
+                }
+            }
+            *resolver = None;
+            cell.resolved.store(true, Ordering::Release);
+            Ok(())
+        }
+        Err(e) => Err(format!(
+            "deferred entry {}@{} failed to resolve: {e:#}",
+            cell.dataset, cell.fraction
+        )),
     }
 }
 
@@ -638,9 +785,66 @@ impl SubsetServer {
         seed: u64,
         opts: ServeOptions,
     ) -> Result<SubsetServer> {
-        ensure!(!entries.is_empty(), "a subset server needs at least one entry");
-        for (i, a) in entries.iter().enumerate() {
-            for b in entries.iter().skip(i + 1) {
+        // pay each entry's artifact encoding once, up front (and once per
+        // publish thereafter) — never per GET_META on the event-loop thread
+        let cells = entries.into_iter().map(EntryCell::eager).collect();
+        SubsetServer::bind_cells(addr, cells, store, seed, opts)
+    }
+
+    /// Bind without resolving: each [`DeferredEntry`] is routable
+    /// immediately but pays its metadata build on the **first request
+    /// that touches it** (a `HELLO` naming it, or any request on the
+    /// default stream-0 session for entry 0) — on the event-loop thread,
+    /// under that request's dispatch span, so the
+    /// `serve.hello` → `store.resolve` → kernel-build chain of a cold
+    /// entry shows up as one causal trace (and a slow resolve
+    /// tail-samples into the flight recorder). A failed build is
+    /// reported to the requesting client and retried on the next touch;
+    /// a [`publish`](SubsetServer::publish) also resolves the entry (its
+    /// state is newer than the bind-time build).
+    pub fn bind_deferred(
+        addr: &str,
+        entries: Vec<DeferredEntry>,
+        store: Option<MetaStore>,
+        seed: u64,
+        opts: ServeOptions,
+    ) -> Result<SubsetServer> {
+        let cells = entries
+            .into_iter()
+            .map(|d| {
+                // a structurally-empty placeholder keeps HELLO routing and
+                // sessions well-defined before resolution; every draw path
+                // checks for empty subsets already
+                let placeholder = Arc::new(Metadata {
+                    dataset: d.dataset.clone(),
+                    fraction: d.fraction,
+                    sge_subsets: Vec::new(),
+                    wre_classes: Vec::new(),
+                    fixed_dm: Vec::new(),
+                    preprocess_secs: 0.0,
+                });
+                EntryCell {
+                    dataset: d.dataset,
+                    fraction: d.fraction,
+                    state: Mutex::new(entry_state(placeholder, 0)),
+                    resolver: Mutex::new(Some(d.resolve)),
+                    resolved: AtomicBool::new(false),
+                }
+            })
+            .collect();
+        SubsetServer::bind_cells(addr, cells, store, seed, opts)
+    }
+
+    fn bind_cells(
+        addr: &str,
+        cells: Vec<EntryCell>,
+        store: Option<MetaStore>,
+        seed: u64,
+        opts: ServeOptions,
+    ) -> Result<SubsetServer> {
+        ensure!(!cells.is_empty(), "a subset server needs at least one entry");
+        for (i, a) in cells.iter().enumerate() {
+            for b in cells.iter().skip(i + 1) {
                 ensure!(
                     a.dataset != b.dataset || (a.fraction - b.fraction).abs() > 1e-9,
                     "duplicate served entry {}@{} — routing would be ambiguous",
@@ -659,23 +863,15 @@ impl SubsetServer {
             Some(l) => Some(l.local_addr()?),
             None => None,
         };
-        // pay each entry's artifact encoding once, up front (and once per
-        // publish thereafter) — never per GET_META on the event-loop thread
-        let cells = entries
-            .into_iter()
-            .map(|m| EntryCell {
-                dataset: m.dataset.clone(),
-                fraction: m.fraction,
-                state: Mutex::new(entry_state(m, 0)),
-            })
-            .collect();
+        let labels: Vec<(String, f64)> =
+            cells.iter().map(|c| (c.dataset.clone(), c.fraction)).collect();
         let shared = Arc::new(Shared {
             entries: cells,
             pending: Mutex::new(Vec::new()),
             seed,
             store,
             shutdown: AtomicBool::new(false),
-            metrics: ServeMetrics::new(),
+            metrics: ServeMetrics::new(&labels),
             backend: std::sync::OnceLock::new(),
         });
         let loop_shared = shared.clone();
@@ -1006,6 +1202,12 @@ fn apply_pending(shared: &Arc<Shared>, conns: &mut HashMap<usize, Conn>) {
             }
             *st = p.state;
         }
+        // a publish supplies real state: a deferred entry it lands on is
+        // resolved (its bind-time builder would only be stale now)
+        let cell = &shared.entries[p.entry];
+        if !cell.resolved.swap(true, Ordering::AcqRel) {
+            *cell.resolver.lock().expect("resolver lock poisoned") = None;
+        }
         for conn in conns.values_mut() {
             if conn.kind != ConnKind::Proto || conn.dead || conn.closing {
                 continue;
@@ -1063,7 +1265,7 @@ fn accept_new(
                 shared.metrics.open_connections.inc();
                 let token = *next_token;
                 *next_token += 1;
-                let conn = Conn::new(stream, shared, kind);
+                let conn = Conn::new(stream, kind);
                 poller.add(
                     conn.id,
                     event::Interest {
@@ -1113,11 +1315,16 @@ struct Conn {
     wbuf: Vec<u8>,
     wpos: usize,
     wire: WireMode,
-    /// Logical sessions keyed by stream id (stream 0 always present —
-    /// the connection's default session; streams `N > 0` open on their
-    /// first `HELLO`). Linear search: real fleets run a handful of
-    /// streams per socket, far below [`frame::MAX_STREAMS`].
+    /// Logical sessions keyed by stream id. Stream 0 — the connection's
+    /// default session — opens lazily on its first request (so accepting
+    /// a connection never snapshots, or forces resolution of, entry 0);
+    /// streams `N > 0` open on their first `HELLO`. Linear search: real
+    /// fleets run a handful of streams per socket, far below
+    /// [`frame::MAX_STREAMS`].
     sessions: Vec<(u8, Session)>,
+    /// Trace id (hex) to echo on the next control reply — set per
+    /// request by `dispatch` when the request carried a `trace` field.
+    trace_echo: Option<String>,
     /// Flush the write buffer, then close (set by a stream-0 `GOODBYE` /
     /// protocol errors).
     closing: bool,
@@ -1131,7 +1338,7 @@ struct Conn {
 }
 
 impl Conn {
-    fn new(stream: TcpStream, shared: &Shared, kind: ConnKind) -> Conn {
+    fn new(stream: TcpStream, kind: ConnKind) -> Conn {
         let id = event::stream_id(&stream);
         Conn {
             stream,
@@ -1142,7 +1349,8 @@ impl Conn {
             wbuf: Vec::new(),
             wpos: 0,
             wire: WireMode::Json,
-            sessions: vec![(0, Session::new("anon", 0, shared))],
+            sessions: Vec::new(),
+            trace_echo: None,
             closing: false,
             dead: false,
             last_interest: (true, false),
@@ -1155,8 +1363,11 @@ impl Conn {
     }
 
     /// Resolve the session for `stream`, opening it if this is its
-    /// `HELLO`. A request on an unopened nonzero stream is an error —
-    /// multiplexed sessions are HELLO-negotiated.
+    /// `HELLO`. Stream 0 — the connection's default session — also opens
+    /// lazily on its first non-`HELLO` request (anonymous, bound to entry
+    /// 0, which must resolve first if it was deferred). A request on an
+    /// unopened nonzero stream is an error — multiplexed sessions are
+    /// HELLO-negotiated.
     fn session_index(
         &mut self,
         stream: u8,
@@ -1166,7 +1377,10 @@ impl Conn {
         if let Some(i) = self.sessions.iter().position(|(s, _)| *s == stream) {
             return Ok(i);
         }
-        if is_hello {
+        if is_hello || stream == 0 {
+            if !is_hello {
+                ensure_resolved(shared, 0)?;
+            }
             self.sessions.push((stream, Session::new("anon", 0, shared)));
             return Ok(self.sessions.len() - 1);
         }
@@ -1368,35 +1582,86 @@ impl Conn {
 
     /// Handle one complete request on `stream` (either wire): parse,
     /// dispatch against the stream's session, encode the reply —
-    /// recording the end-to-end latency into the per-frame-type histogram
-    /// and the outbound high-water mark.
+    /// recording the end-to-end latency into the per-frame-type,
+    /// per-entry, and per-stream surfaces, the flight ring, and the
+    /// outbound high-water mark.
+    ///
+    /// A request carrying `trace`/`span` fields (hex ids, negotiated at
+    /// `HELLO`) runs under that context: the per-command dispatch span —
+    /// and every span opened downstream of it (`store.resolve`,
+    /// `kernel.execute`, …) — joins the client's trace tree, and the
+    /// trace id is echoed back on the control reply.
     fn dispatch(&mut self, text: &str, stream: u8, shared: &Shared) {
         shared.metrics.requests.inc();
-        let t0 = crate::obs::enabled().then(Instant::now);
-        let (slot, reply) = match Json::parse(text) {
+        if let Some(c) = shared.metrics.stream_requests.get(stream as usize) {
+            c.inc();
+        }
+        let t0 = (crate::obs::enabled() || flight::enabled()).then(Instant::now);
+        let mut wire_trace = 0u64;
+        let mut wire_span = 0u64;
+        let (slot, trace, entry, reply) = match Json::parse(text) {
             Ok(req) => {
                 let cmd = req.opt("cmd").and_then(|c| c.as_str().ok());
                 let slot = cmd.map(cmd_slot).unwrap_or(CMD_OTHER);
                 let is_hello = cmd == Some("HELLO");
+                if let Some(id) =
+                    req.opt("trace").and_then(|t| t.as_str().ok()).and_then(crate::obs::parse_id)
+                {
+                    wire_trace = id;
+                }
+                if let Some(id) =
+                    req.opt("span").and_then(|s| s.as_str().ok()).and_then(crate::obs::parse_id)
+                {
+                    wire_span = id;
+                }
                 match self.session_index(stream, is_hello, shared) {
-                    Ok(si) => (
-                        slot,
-                        handle_request(
+                    Ok(si) => {
+                        let _scope = crate::obs::TraceScope::enter(wire_trace, wire_span);
+                        let span = crate::obs::Span::enter(CMD_SPANS[slot]);
+                        let reply = handle_request(
                             &req,
                             &mut self.sessions[si].1,
                             stream,
                             self.wire,
                             shared,
-                        ),
-                    ),
-                    Err(msg) => (slot, Err(msg)),
+                        );
+                        // the span roots its own trace when the wire gave
+                        // none, so the flight recorder can always
+                        // tail-sample by trace id
+                        let trace = if wire_trace != 0 { wire_trace } else { span.trace_id() };
+                        (slot, trace, self.sessions[si].1.entry, reply)
+                    }
+                    Err(msg) => (slot, wire_trace, usize::MAX, Err(msg)),
                 }
             }
-            Err(e) => (CMD_OTHER, Err(format!("bad request json: {e:#}"))),
+            Err(e) => (CMD_OTHER, 0, usize::MAX, Err(format!("bad request json: {e:#}"))),
         };
+        if let Some(c) = shared.metrics.entry_requests.get(entry) {
+            c.inc();
+        }
+        // never echo on HELLO: its reply carries the `"trace":true`
+        // capability ack, which an echo field would shadow
+        self.trace_echo =
+            (wire_trace != 0 && slot != 0).then(|| crate::obs::id_hex(wire_trace));
+        let is_err = reply.is_err();
         self.push_reply(reply, stream, shared);
+        self.trace_echo = None;
         if let Some(t0) = t0 {
-            shared.metrics.req_latency[slot].record_duration(t0.elapsed());
+            let elapsed = t0.elapsed();
+            if crate::obs::enabled() {
+                shared.metrics.req_latency[slot].record_duration(elapsed);
+                if let Some(h) = shared.metrics.entry_latency.get(entry) {
+                    h.record_duration(elapsed);
+                }
+            }
+            flight::record_request(
+                CMD_NAMES[slot],
+                trace,
+                wire_span,
+                elapsed.as_micros() as u64,
+                is_err,
+                stream,
+            );
         }
         shared
             .metrics
@@ -1405,8 +1670,10 @@ impl Conn {
     }
 
     /// The metrics-exposition protocol: wait for a complete HTTP request
-    /// head (blank line), answer with one plain-text exposition document,
-    /// flush, close. Everything else about HTTP is deliberately ignored.
+    /// head (blank line), answer with one document — the plain-text
+    /// exposition, or the flight-recorder dump when the request line asks
+    /// for `/flight` — flush, close. Everything else about HTTP is
+    /// deliberately ignored.
     fn process_metrics(&mut self, shared: &Shared) {
         if self.closing || self.dead {
             return;
@@ -1420,11 +1687,21 @@ impl Conn {
         if !head_done {
             return;
         }
+        // "GET /flight HTTP/1.1" → the flight dump; anything else → the
+        // exposition (the v1 behavior, whatever the path)
+        let line_end = self.rbuf.iter().position(|&b| b == b'\n').unwrap_or(0);
+        let request_line = String::from_utf8_lossy(&self.rbuf[..line_end]).into_owned();
         self.rbuf.clear();
         shared.metrics.metrics_scrapes.inc();
-        let body = render_exposition(shared);
+        let path = request_line.split_whitespace().nth(1).unwrap_or("");
+        let flight = path == "/flight" || path.starts_with("/flight?");
+        let (body, content_type) = if flight {
+            (flight::dump_jsonl(), "application/json")
+        } else {
+            (render_exposition(shared), "text/plain; version=0.0.4")
+        };
         let head = format!(
-            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+            "HTTP/1.0 200 OK\r\nContent-Type: {content_type}\r\n\
              Content-Length: {}\r\nConnection: close\r\n\r\n",
             body.len(),
         );
@@ -1577,7 +1854,14 @@ impl Conn {
         }
     }
 
-    fn push_ok(&mut self, stream: u8, fields: Vec<(&str, Json)>) {
+    fn push_ok(&mut self, stream: u8, mut fields: Vec<(&str, Json)>) {
+        // echo the request's trace id so the client can pair reply and
+        // trace without inspecting the server's sink (HELLO replies never
+        // carry an echo — clients don't stamp trace fields on HELLO, the
+        // capability is negotiated there)
+        if let Some(hex) = self.trace_echo.take() {
+            fields.push(("trace", Json::Str(hex)));
+        }
         let doc = ok_response(fields).to_string();
         match self.wire {
             WireMode::Json => self.push_line(&doc),
@@ -1795,6 +2079,10 @@ fn handle_request(
             let dataset = request.opt("dataset").and_then(|d| d.as_str().ok());
             let fraction = request.opt("fraction").and_then(|f| f.as_f64().ok());
             let entry = find_entry(shared, dataset, fraction)?;
+            // a deferred entry materializes on its first HELLO — inside
+            // this dispatch's span, so the resolution cost (store load or
+            // preprocess) shows up on the requesting trace
+            ensure_resolved(shared, entry)?;
             // a re-bind cancels any subscription: the new entry (or
             // identity) must opt in again explicitly
             if session.subscribed {
@@ -1875,6 +2163,11 @@ fn handle_request(
                     // follow-mode clients use it to detect missed advances
                     ("epoch", Json::num(session.epoch as f64)),
                     ("wire", Json::str(switch.name())),
+                    // capability ack: this server understands request
+                    // `trace`/`span` fields and echoes the trace id on
+                    // control replies (proto-3 compatible — older servers
+                    // simply omit this field and clients fall back)
+                    ("trace", Json::Bool(true)),
                 ],
                 switch,
             })
@@ -1991,8 +2284,33 @@ fn handle_request(
                     ("client", Json::str(session.client.clone())),
                     ("store", store),
                     ("metrics", shared.metrics.registry.to_json()),
+                    ("flight", flight::stats_json()),
                 ]),
             )]))
+        }
+        "FLIGHT" => {
+            // recorder counters plus the buffered tail-samples (summary
+            // form: full event dumps stay on the `/flight` HTTP surface,
+            // which isn't bounded by a control-reply budget)
+            let samples = Json::arr(
+                flight::samples()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("trace", Json::Str(crate::obs::id_hex(s.trace))),
+                            ("cmd", Json::str(s.cmd.clone())),
+                            ("us", Json::num(s.us as f64)),
+                            ("err", Json::Bool(s.err)),
+                            ("t_us", Json::num(s.t_us as f64)),
+                            ("events", Json::num(s.events.len() as f64)),
+                        ])
+                    })
+                    .collect(),
+            );
+            Ok(Reply::Fields(vec![
+                ("flight", flight::stats_json()),
+                ("samples", samples),
+            ]))
         }
         "GOODBYE" => Ok(Reply::Goodbye),
         "PING" => Ok(Reply::Fields(vec![])),

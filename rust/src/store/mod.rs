@@ -431,6 +431,11 @@ impl MetaStore {
         key: &MetaKey,
         build: impl FnOnce() -> Result<Metadata>,
     ) -> Result<Arc<Metadata>> {
+        // the causal-tracing hop between a serve dispatch span and the
+        // kernel-build spans the builder emits: a slow resolve shows up
+        // in the request's span tree as `store.resolve` with the build
+        // underneath it
+        let _span = crate::obs::Span::enter("store.resolve");
         let m = &self.inner.metrics;
         let fp = key.fingerprint();
         let t0 = crate::obs::enabled().then(Instant::now);

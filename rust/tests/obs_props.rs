@@ -107,6 +107,34 @@ fn values_above_the_cap_saturate_and_are_counted() {
 }
 
 #[test]
+fn empty_histogram_percentiles_are_zero() {
+    // pinned: a histogram nobody recorded into answers 0 for every
+    // quantile (not a bucket bound, not NaN) — scrapes and STATS render
+    // a quiet server as zeros, never garbage
+    let s = Histogram::new().snapshot();
+    assert_eq!(s.count(), 0);
+    for q in [0.0, 0.5, 0.99, 1.0, -3.0, 7.0] {
+        assert_eq!(s.percentile(q), 0, "empty histogram, q={q}");
+    }
+    assert_eq!(s.max(), 0);
+    assert_eq!(s.sum(), 0);
+}
+
+#[test]
+fn gauge_never_wraps_at_either_end() {
+    // pinned: gauges saturate — a decrement below zero floors at 0 and
+    // an increment at the cap pegs at u64::MAX (see the unit tests in
+    // milo::obs for the full matrix; this pins the public behaviour)
+    let reg = MetricsRegistry::new();
+    let g = reg.gauge("props.sat");
+    g.dec(1);
+    assert_eq!(g.get(), 0, "underflow floors at zero");
+    g.set(u64::MAX);
+    g.add(u64::MAX);
+    assert_eq!(g.get(), u64::MAX, "overflow pegs at the cap");
+}
+
+#[test]
 fn exposition_text_is_stable() {
     let reg = MetricsRegistry::new();
     let hits = reg.counter("store.hits");

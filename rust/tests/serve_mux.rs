@@ -215,6 +215,41 @@ fn pushes_fan_out_per_stream_identically_to_a_dedicated_subscriber() {
 }
 
 #[test]
+fn pooled_sibling_streams_keep_trace_ids_isolated() {
+    // causal tracing over a shared socket: each pooled stream's control
+    // reply must echo that stream's own trace id — interleaved siblings
+    // never observe (or get handed) each other's ids
+    let server =
+        SubsetServer::bind("127.0.0.1:0", meta_for("mux-trace", 61), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let pool = ConnectionPool::new(&addr);
+    let mut a =
+        ServeClient::connect_pooled(&pool, "trace-a", frame_opts("mux-trace")).unwrap();
+    let mut b =
+        ServeClient::connect_pooled(&pool, "trace-b", frame_opts("mux-trace")).unwrap();
+    assert_eq!(pool.connections(), 1, "both sessions share one socket");
+    assert!(a.trace_capable() && b.trace_capable(), "pooled HELLOs ack tracing");
+
+    let (mut a_ids, mut b_ids) = (Vec::new(), Vec::new());
+    for _ in 0..3 {
+        a.ping().unwrap();
+        let (ta, ea) = a.last_trace().unwrap();
+        assert!(ea, "stream a's reply echoes stream a's id");
+        b.ping().unwrap();
+        let (tb, eb) = b.last_trace().unwrap();
+        assert!(eb, "stream b's reply echoes stream b's id");
+        a_ids.push(ta);
+        b_ids.push(tb);
+    }
+    for t in &a_ids {
+        assert!(!b_ids.contains(t), "sibling streams never share a trace id");
+    }
+    a.goodbye().unwrap();
+    b.goodbye().unwrap();
+    server.shutdown();
+}
+
+#[test]
 fn stats_names_the_readiness_backend() {
     let server =
         SubsetServer::bind("127.0.0.1:0", meta_for("backend", 59), None, SEED).unwrap();

@@ -157,6 +157,47 @@ fn a_restarted_server_with_a_different_seed_is_refused() {
 }
 
 #[test]
+fn trace_ids_stay_fresh_and_echoed_across_a_restart() {
+    // the causal-tracing contract under reconnect: every logical request
+    // gets its own wire trace id, the server echoes it on the control
+    // reply, and a transparent reconnect-and-replay neither reuses an old
+    // id nor loses the capability (it is re-learned from the new HELLO)
+    let meta = meta();
+    let server = SubsetServer::bind("127.0.0.1:0", meta.clone(), None, SEED).unwrap();
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect_with(
+        &addr,
+        "trainer-traced",
+        retrying_options(WireMode::Json),
+    )
+    .unwrap();
+    assert!(client.trace_capable(), "HELLO must ack the trace capability");
+    assert!(client.last_trace().is_none(), "no stamped request yet");
+
+    let mut seen = Vec::new();
+    client.next_subset().unwrap();
+    let (first, echoed) = client.last_trace().unwrap();
+    assert!(first != 0 && echoed, "JSON control replies echo the trace id");
+    seen.push(first);
+
+    server.shutdown();
+    let server2 = SubsetServer::bind(&addr, meta, None, SEED).unwrap();
+
+    for _ in 0..2 {
+        client.next_subset().unwrap();
+        let (trace, echoed) = client.last_trace().unwrap();
+        assert!(echoed, "echo must survive the reconnect-and-replay");
+        assert!(
+            !seen.contains(&trace),
+            "trace ids are per logical request, never replayed: {trace:#x}"
+        );
+        seen.push(trace);
+    }
+    assert!(client.trace_capable(), "capability re-learned after restart");
+    server2.shutdown();
+}
+
+#[test]
 fn reconnect_replays_wre_draw_sizes_exactly() {
     // a client whose pre-kill history mixes WRE draw sizes: the replay
     // must re-issue the same k sequence or the post-restart stream drifts

@@ -1,0 +1,204 @@
+//! Causal-tracing acceptance: a frame-wire request carrying wire trace
+//! context must come back out of the trace sink as ONE multi-level span
+//! tree — client request span → server dispatch span → `store.resolve` →
+//! the kernel-build span underneath it — reconstructable by the same
+//! parser `milo trace` uses.
+//!
+//! The sink under test is the always-on flight recorder's dump
+//! ([`milo::obs::flight::dump_jsonl`]), which emits the identical
+//! schema-v2 JSON lines a `MILO_TRACE` file holds — so the assertions
+//! run without mutating process environment. The server's deferred-entry
+//! path supplies the depth: the first `HELLO` against a cold entry runs
+//! its resolver (a [`MetaStore::get_or_build`] around a real native
+//! kernel build) inside the dispatch span, so the whole chain shares the
+//! client's trace id.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use milo::data::DatasetId;
+use milo::kernel::sparse::sparse_native_scheduled;
+use milo::kernel::{KernelSchedule, SimMetric};
+use milo::serve::{frame, DeferredEntry, Frame, FrameDecoder, ServeOptions, SubsetServer};
+use milo::store::{MetaKey, MetaStore};
+use milo::testkit::{random_embeddings, synthetic_metadata};
+
+/// A deferred single-entry server whose resolver goes through the store
+/// and a real (serial-scheduled, so same-thread) native kernel build.
+fn deferred_server(tag: &str) -> SubsetServer {
+    let dir = std::env::temp_dir()
+        .join(format!("milo_trace_tree_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = MetaStore::open(&dir).unwrap();
+    let ds = DatasetId::Trec6Like.generate(5);
+    let meta = synthetic_metadata(&ds, 0.1);
+    let key = MetaKey::from_options(
+        &meta.dataset,
+        &milo::coordinator::PreprocessOptions::default(),
+    );
+    let entries = vec![DeferredEntry {
+        dataset: meta.dataset.clone(),
+        fraction: meta.fraction,
+        resolve: Box::new(move || {
+            let built = store.get_or_build(&key, || {
+                // a real kernel build under `store.resolve`: the serial
+                // schedule keeps `kernel.execute` on this thread, so the
+                // span lands inside the ambient dispatch context
+                let z = random_embeddings(24, 6, 11);
+                sparse_native_scheduled(
+                    &z,
+                    SimMetric::Cosine,
+                    4,
+                    &KernelSchedule::serial(),
+                )?;
+                Ok(meta.clone())
+            })?;
+            Ok((*built).clone())
+        }),
+    }];
+    SubsetServer::bind_deferred("127.0.0.1:0", entries, None, 7, ServeOptions::default())
+        .unwrap()
+}
+
+#[test]
+fn frame_wire_request_reconstructs_a_multi_level_span_tree() {
+    let server = deferred_server("tree");
+    let addr = server.addr().to_string();
+
+    // --- request 1: a stamped frame-negotiating HELLO. Its dispatch
+    // resolves the cold entry, so the whole build chain joins this trace.
+    let hello_span = milo::obs::Span::enter("serve.client.hello");
+    let trace = hello_span.trace_id();
+    assert_ne!(trace, 0, "observability is on by default");
+    let trace_hex = milo::obs::id_hex(trace);
+    let span_hex = milo::obs::id_hex(hello_span.span_id());
+
+    let sock = TcpStream::connect(&addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut writer = sock;
+    writer
+        .write_all(
+            format!(
+                "{{\"cmd\":\"HELLO\",\"client\":\"tracer\",\"wire\":\"frame\",\
+                 \"trace\":\"{trace_hex}\",\"span\":\"{span_hex}\"}}\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "HELLO failed: {line:?}");
+    assert!(
+        line.contains("\"trace\":true"),
+        "HELLO reply must ack the trace capability: {line:?}"
+    );
+    drop(hello_span); // finish after the round trip, like a real client
+
+    // --- request 2: a stamped frame-wire NEXT_SUBSET (binary reply),
+    // with a bare wire id as both trace and request span
+    let draw_trace = milo::obs::next_id();
+    let draw_hex = milo::obs::id_hex(draw_trace);
+    let mut buf = Vec::new();
+    frame::write_frame_on(
+        &mut buf,
+        0,
+        frame::KIND_JSON,
+        format!(
+            "{{\"cmd\":\"NEXT_SUBSET\",\"trace\":\"{draw_hex}\",\
+             \"span\":\"{draw_hex}\"}}"
+        )
+        .as_bytes(),
+    );
+    writer.write_all(&buf).unwrap();
+    let mut decoder = FrameDecoder::new();
+    let reply = loop {
+        if let Some(f) = decoder.next().unwrap() {
+            break f;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = std::io::Read::read(&mut reader, &mut chunk).unwrap();
+        assert!(n > 0, "server closed before replying");
+        decoder.push(&chunk[..n]);
+    };
+    assert!(
+        matches!(reply, Frame::Subset { .. }),
+        "frame-wire NEXT_SUBSET reply must be a SUBSET frame, got {}",
+        reply.kind_name()
+    );
+    drop(writer);
+
+    // --- reconstruct the HELLO's tree from the sink text
+    let dump = milo::obs::flight::dump_jsonl();
+    let events = milo::obs::traceview::parse_lines(&dump);
+    let find = |name: &str| {
+        events
+            .iter()
+            .find(|e| e.trace == trace && e.name == name)
+            .unwrap_or_else(|| panic!("span {name} missing for trace {trace_hex}"))
+    };
+    let client = find("serve.client.hello");
+    let dispatch = find("serve.hello");
+    let resolve = find("store.resolve");
+    let kernel = find("kernel.execute");
+    assert_eq!(client.parent, 0, "the client request span roots the trace");
+    assert_eq!(dispatch.parent, client.span, "dispatch hangs off the request");
+    assert_eq!(resolve.parent, dispatch.span, "resolution inside dispatch");
+    assert_eq!(kernel.parent, resolve.span, "kernel build inside the resolve");
+
+    // the second request's dispatch span carries the wire ids too
+    let draw = events
+        .iter()
+        .find(|e| e.trace == draw_trace && e.name == "serve.next_subset")
+        .expect("framed NEXT_SUBSET dispatch span joins the wire trace");
+    assert_eq!(draw.parent, draw_trace, "parented on the stamped wire span");
+
+    // and the renderer `milo trace` uses shows the chain nested in order
+    let report = milo::obs::traceview::report(&dump, usize::MAX);
+    let pos = |name: &str| {
+        let tree = &report[report.find(&format!("trace {trace_hex}")).unwrap()..];
+        tree.find(name).unwrap_or_else(|| panic!("{name} not rendered"))
+    };
+    assert!(pos("serve.client.hello") < pos("serve.hello"));
+    assert!(pos("serve.hello") < pos("store.resolve"));
+    assert!(pos("store.resolve") < pos("kernel.execute"));
+
+    server.shutdown();
+}
+
+/// The `FLIGHT` control command: any session can pull the recorder's
+/// counters and tail-samples over the serve protocol itself.
+#[test]
+fn flight_command_reports_recorder_stats_over_the_wire() {
+    let server = deferred_server("flight");
+    let addr = server.addr().to_string();
+
+    let sock = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut writer = sock;
+    writer
+        .write_all(b"{\"cmd\":\"HELLO\",\"client\":\"flight-probe\"}\n")
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "HELLO failed: {line:?}");
+
+    writer.write_all(b"{\"cmd\":\"FLIGHT\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let v = milo::util::json::Json::parse(line.trim()).unwrap();
+    assert_eq!(v.opt("ok").and_then(|o| o.as_bool().ok()), Some(true));
+    let flight = v.opt("flight").expect("FLIGHT reply carries recorder stats");
+    assert_eq!(
+        flight.opt("enabled").and_then(|e| e.as_bool().ok()),
+        Some(true),
+        "the recorder is always on by default"
+    );
+    assert!(
+        flight.opt("recorded").and_then(|r| r.as_f64().ok()).unwrap_or(0.0)
+            >= 1.0,
+        "the HELLO itself must already be in the ring: {line:?}"
+    );
+    assert!(v.opt("samples").is_some(), "FLIGHT reply lists tail-samples");
+    server.shutdown();
+}
